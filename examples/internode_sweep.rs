@@ -1,0 +1,79 @@
+//! Figure 2 reproduction: internode broadcast latency, NCCL-integrated
+//! MVAPICH2 (NCCL-MV2-GDR) vs MV2-GDR-Opt, across KESCH nodes
+//! (16 GPUs/node × 2/4/8 nodes = 32/64/128 GPUs).
+//!
+//! ```sh
+//! cargo run --release --example internode_sweep [-- --nodes 2,4,8 --max 128M]
+//! ```
+
+use gdrbcast::bench::osu::osu_bcast;
+use gdrbcast::bench::report::Figure;
+use gdrbcast::collectives::BcastSpec;
+use gdrbcast::comm::Comm;
+use gdrbcast::nccl::{hierarchical, NcclParams};
+use gdrbcast::netsim::Engine;
+use gdrbcast::topology::presets;
+use gdrbcast::tuning::Selector;
+use gdrbcast::util::bytes::{parse_size, pow2_sweep};
+use gdrbcast::util::cli::Args;
+
+fn main() {
+    let mut args = Args::from_env();
+    let node_counts: Vec<usize> = args
+        .opt_list("--nodes")
+        .unwrap()
+        .unwrap_or_else(|| vec![2, 4, 8]);
+    let max = parse_size(&args.opt("--max").unwrap_or_else(|| "128M".into())).unwrap();
+    let iters = args.opt_or("--iters", 3usize).unwrap();
+    args.finish().unwrap();
+
+    let sizes = pow2_sweep(4, max);
+    let nccl_params = NcclParams::default();
+
+    for &nodes in &node_counts {
+        let cluster = presets::kesch(nodes, 16);
+        let gpus = cluster.n_gpus();
+        let selector = Selector::tuned(&cluster);
+        let mut comm = Comm::new(&cluster);
+        let mut engine = Engine::new(&cluster);
+
+        let nccl_res = osu_bcast(&mut engine, &sizes, iters, 1, |bytes, _| {
+            hierarchical::plan(
+                &mut comm,
+                &nccl_params,
+                &BcastSpec::new(0, gpus, bytes),
+                hierarchical::DEFAULT_CHUNK,
+            )
+        });
+        let mv2_res = osu_bcast(&mut engine, &sizes, iters, 1, |bytes, _| {
+            selector.plan(&mut comm, &BcastSpec::new(0, gpus, bytes))
+        });
+
+        let mut fig = Figure::new(
+            format!("Fig. 2 — internode bcast latency, {gpus} GPUs ({nodes} KESCH nodes)"),
+            sizes.clone(),
+        );
+        fig.push_series(
+            "NCCL-MV2-GDR",
+            nccl_res.iter().map(|r| r.latency_us).collect(),
+        );
+        fig.push_series(
+            "MV2-GDR-Opt",
+            mv2_res.iter().map(|r| r.latency_us).collect(),
+        );
+        print!("{}", fig.render());
+        if let Some((at, ratio)) = fig.max_ratio_below(8 << 10) {
+            println!(
+                "  small/medium-message improvement: up to {ratio:.1}x (at {at} bytes; paper: 16.4X @64 GPUs, 16.6X @128 GPUs)"
+            );
+        }
+        if let Some(r) = fig.ratio_at_max() {
+            println!("  at largest size: NCCL-MV2/MV2 ratio {r:.2} (paper: comparable)\n");
+        }
+        let _ = std::fs::create_dir_all("target/reports");
+        let _ = std::fs::write(
+            format!("target/reports/fig2_internode_{gpus}gpus.json"),
+            fig.to_json().to_string_pretty(),
+        );
+    }
+}

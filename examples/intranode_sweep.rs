@@ -1,0 +1,72 @@
+//! Figure 1 reproduction: intranode broadcast latency, NCCL vs
+//! MV2-GDR-Opt, on one KESCH node with 2/4/8/16 GPUs across the full
+//! message range (the osu_bcast methodology).
+//!
+//! ```sh
+//! cargo run --release --example intranode_sweep [-- --gpus 2,4,8,16 --max 128M]
+//! ```
+
+use gdrbcast::bench::osu::osu_bcast;
+use gdrbcast::bench::report::Figure;
+use gdrbcast::collectives::BcastSpec;
+use gdrbcast::comm::Comm;
+use gdrbcast::nccl::{bcast as nccl_bcast, NcclParams};
+use gdrbcast::netsim::Engine;
+use gdrbcast::topology::presets;
+use gdrbcast::tuning::Selector;
+use gdrbcast::util::bytes::{parse_size, pow2_sweep};
+use gdrbcast::util::cli::Args;
+
+fn main() {
+    let mut args = Args::from_env();
+    let gpu_counts: Vec<usize> = args
+        .opt_list("--gpus")
+        .unwrap()
+        .unwrap_or_else(|| vec![2, 4, 8, 16]);
+    let max = parse_size(&args.opt("--max").unwrap_or_else(|| "128M".into())).unwrap();
+    let iters = args.opt_or("--iters", 5usize).unwrap();
+    args.finish().unwrap();
+
+    let sizes = pow2_sweep(4, max);
+    let nccl_params = NcclParams::default();
+
+    for &gpus in &gpu_counts {
+        let cluster = presets::kesch(1, gpus);
+        let selector = Selector::tuned(&cluster);
+        let mut comm = Comm::new(&cluster);
+        let mut engine = Engine::new(&cluster);
+
+        let nccl_res = osu_bcast(&mut engine, &sizes, iters, 1, |bytes, _| {
+            nccl_bcast::plan_intranode(&cluster, &nccl_params, &BcastSpec::new(0, gpus, bytes))
+        });
+        let mv2_res = osu_bcast(&mut engine, &sizes, iters, 1, |bytes, _| {
+            selector.plan(&mut comm, &BcastSpec::new(0, gpus, bytes))
+        });
+
+        let mut fig = Figure::new(
+            format!("Fig. 1 — intranode bcast latency, {gpus} GPUs (KESCH node)"),
+            sizes.clone(),
+        );
+        fig.push_series("NCCL", nccl_res.iter().map(|r| r.latency_us).collect());
+        fig.push_series(
+            "MV2-GDR-Opt",
+            mv2_res.iter().map(|r| r.latency_us).collect(),
+        );
+        print!("{}", fig.render());
+        if let Some((at, ratio)) = fig.max_ratio_below(8 << 10) {
+            println!(
+                "  small/medium-message improvement: up to {ratio:.1}x (at {} bytes; paper: 14X/10.6X/9.4X/13X for 2/4/8/16 GPUs)",
+                at
+            );
+        }
+        if let Some(r) = fig.ratio_at_max() {
+            println!("  at {}: NCCL/MV2 ratio {r:.2} (paper: comparable)\n", sizes.last().map(|s| gdrbcast::util::bytes::format_size(*s)).unwrap_or_default());
+        }
+        // machine-readable dump
+        let _ = std::fs::create_dir_all("target/reports");
+        let _ = std::fs::write(
+            format!("target/reports/fig1_intranode_{gpus}gpus.json"),
+            fig.to_json().to_string_pretty(),
+        );
+    }
+}

@@ -1,0 +1,68 @@
+//! Quickstart: build a cluster, tune it, broadcast, compare with NCCL.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use gdrbcast::collectives::{self, Algorithm, BcastSpec};
+use gdrbcast::comm::Comm;
+use gdrbcast::nccl::{bcast as nccl_bcast, NcclParams};
+use gdrbcast::netsim::Engine;
+use gdrbcast::topology::presets;
+use gdrbcast::tuning::Selector;
+use gdrbcast::util::bytes::{format_size, format_us};
+
+fn main() {
+    // 1. A single KESCH node with 8 GPUs (the paper's testbed, Fig. 1c).
+    let cluster = presets::kesch(1, 8);
+    println!("{}", cluster.describe());
+
+    // 2. The tuned runtime — MV2-GDR-Opt — picks per message size.
+    let selector = Selector::tuned(&cluster);
+    println!("{}", selector.table().render());
+
+    // 3. Compare one broadcast across designs.
+    let mut comm = Comm::new(&cluster);
+    let mut engine = Engine::new(&cluster);
+    let nccl = NcclParams::default();
+    println!("broadcast of GPU buffers across 8 GPUs:");
+    for bytes in [4u64, 8 << 10, 1 << 20, 64 << 20] {
+        let spec = BcastSpec::new(0, 8, bytes);
+        let tuned = selector.latency_ns(&mut comm, &mut engine, &spec);
+        let binomial = collectives::latency_ns(
+            &Algorithm::Knomial { k: 2 },
+            &mut comm,
+            &mut engine,
+            &spec,
+        );
+        let pipelined = collectives::latency_ns(
+            &Algorithm::PipelinedChain { chunk: 1 << 20 },
+            &mut comm,
+            &mut engine,
+            &spec,
+        );
+        let nccl_bp = nccl_bcast::plan_intranode(&cluster, &nccl, &spec);
+        let nccl_t = engine.execute(&nccl_bp.plan).makespan;
+        println!(
+            "  {:>6}:  MV2-GDR-Opt {:>10} us [{}]  binomial {:>10} us  pipelined-chain {:>10} us  NCCL {:>10} us",
+            format_size(bytes),
+            format_us(tuned as f64),
+            selector.algorithm(bytes).name(),
+            format_us(binomial as f64),
+            format_us(pipelined as f64),
+            format_us(nccl_t as f64),
+        );
+    }
+
+    // 4. The paper's headline: how much faster than NCCL at small sizes?
+    let spec = BcastSpec::new(0, 8, 4);
+    let tuned = selector.latency_ns(&mut comm, &mut engine, &spec);
+    let nccl_bp = nccl_bcast::plan_intranode(&cluster, &nccl, &spec);
+    let nccl_t = engine.execute(&nccl_bp.plan).makespan;
+    println!(
+        "\n4-byte broadcast: MV2-GDR-Opt is {:.1}x faster than NCCL ({} vs {} us)",
+        nccl_t as f64 / tuned as f64,
+        format_us(tuned as f64),
+        format_us(nccl_t as f64)
+    );
+}

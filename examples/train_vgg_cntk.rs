@@ -1,0 +1,67 @@
+//! Figure 3 reproduction: data-parallel VGG training time under the
+//! CNTK-style coordinator — NCCL-MV2-GDR vs MV2-GDR-Opt at 8–128 GPUs.
+//!
+//! ```sh
+//! cargo run --release --example train_vgg_cntk [-- --model vgg16 --batch 256]
+//! ```
+
+use gdrbcast::coordinator::train::estimate_iteration;
+use gdrbcast::coordinator::BcastBackend;
+use gdrbcast::models;
+use gdrbcast::nccl::NcclParams;
+use gdrbcast::topology::presets;
+use gdrbcast::tuning::Selector;
+use gdrbcast::util::cli::Args;
+use gdrbcast::util::tablefmt::Table;
+
+fn main() {
+    let mut args = Args::from_env();
+    let model_name = args.opt("--model").unwrap_or_else(|| "vgg16".into());
+    let batch_per_gpu = args.opt_or("--batch-per-gpu", 16usize).unwrap();
+    args.finish().unwrap();
+    let model = models::by_name(&model_name).expect("known model");
+
+    let mut t = Table::new(&[
+        "GPUs",
+        "NCCL-MV2-GDR (s/100 iter)",
+        "MV2-GDR-Opt (s/100 iter)",
+        "improvement",
+    ])
+    .with_title(format!(
+        "Fig. 3 — {} data-parallel training time (CNTK role), {batch_per_gpu} samples/GPU",
+        model.name
+    ));
+    let nccl = NcclParams::default();
+    let mut best_gain = (0usize, 0.0f64);
+    // 8 GPUs = half a node; then 1..8 full nodes
+    let scales: Vec<(usize, usize)> =
+        vec![(1, 8), (1, 16), (2, 16), (4, 16), (8, 16)];
+    for (nodes, gpn) in scales {
+        let cluster = presets::kesch(nodes, gpn);
+        let batch = batch_per_gpu * cluster.n_gpus();
+        let sel = Selector::tuned(&cluster);
+        let a = estimate_iteration(&cluster, &model, &BcastBackend::Mv2Opt(&sel), batch, 0.0);
+        let b = estimate_iteration(
+            &cluster,
+            &model,
+            &BcastBackend::NcclMv2(&nccl),
+            batch,
+            0.0,
+        );
+        let gain = (b.iter_us - a.iter_us) / b.iter_us * 100.0;
+        if gain > best_gain.1 {
+            best_gain = (cluster.n_gpus(), gain);
+        }
+        t.row(vec![
+            cluster.n_gpus().to_string(),
+            format!("{:.2}", b.iter_us * 100.0 / 1e6),
+            format!("{:.2}", a.iter_us * 100.0 / 1e6),
+            format!("{gain:.1}%"),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "peak improvement: {:.1}% at {} GPUs (paper: up to 7% at 32 GPUs, matching or beating elsewhere)",
+        best_gain.1, best_gain.0
+    );
+}

@@ -1,0 +1,53 @@
+//! The enhanced tuning framework in action: sweep every candidate
+//! algorithm across the message range on a chosen cluster, print the
+//! per-size leaderboard and the resulting dispatch table, and persist it
+//! as a JSON artifact the runtime can load back.
+//!
+//! ```sh
+//! cargo run --release --example tuning_table [-- --nodes 1 --gpus-per-node 16]
+//! ```
+
+use gdrbcast::topology::presets;
+use gdrbcast::tuning::{persist, sweep};
+use gdrbcast::util::bytes::{format_size, format_us};
+use gdrbcast::util::cli::Args;
+
+fn main() {
+    let mut args = Args::from_env();
+    let nodes = args.opt_or("--nodes", 1usize).unwrap();
+    let gpn = args.opt_or("--gpus-per-node", 16usize).unwrap();
+    let out = args
+        .opt("--out")
+        .unwrap_or_else(|| "target/reports/tuning_table.json".into());
+    args.finish().unwrap();
+
+    let cluster = presets::kesch(nodes, gpn);
+    println!("{}", cluster.describe());
+
+    // per-size leaderboards at a few representative sizes
+    for bytes in [4u64, 8 << 10, 1 << 20, 64 << 20] {
+        let point = sweep::sweep_size(&cluster, bytes, 0);
+        println!("candidates at {}:", format_size(bytes));
+        for (algo, t) in point.all.iter().take(5) {
+            let marker = if *algo == point.winner { " <= tuned pick" } else { "" };
+            println!(
+                "  {:<28} {:>12} us{}",
+                algo.name(),
+                format_us(*t as f64),
+                marker
+            );
+        }
+    }
+
+    // the full dispatch table
+    let table = sweep::tune(&cluster, &sweep::default_sizes());
+    println!();
+    print!("{}", table.render());
+
+    let path = std::path::PathBuf::from(&out);
+    persist::save(&table, &path).expect("persist table");
+    println!("persisted to {out}");
+    let back = persist::load(&path).expect("load back");
+    assert_eq!(back.entries.len(), table.entries.len());
+    println!("round-trip verified ({} entries)", back.entries.len());
+}

@@ -1,0 +1,2 @@
+"""Build-time Python: Layer-2 JAX model + Layer-1 Pallas kernels + AOT
+lowering. Never imported on the rust request path."""

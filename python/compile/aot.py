@@ -1,0 +1,82 @@
+"""AOT lowering: JAX/Pallas -> HLO text artifacts for the rust runtime.
+
+HLO *text* is the interchange format, not ``HloModuleProto.serialize()``:
+jax >= 0.5 emits protos with 64-bit instruction ids that the published
+``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Usage: ``python -m compile.aot --out ../artifacts`` (from python/).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_train_step() -> str:
+    spec_p = jax.ShapeDtypeStruct((model.N_PARAMS,), jnp.float32)
+    spec_x = jax.ShapeDtypeStruct((model.BATCH, model.INPUT_DIM), jnp.float32)
+    spec_y = jax.ShapeDtypeStruct((model.BATCH, model.CLASSES), jnp.float32)
+    spec_lr = jax.ShapeDtypeStruct((1,), jnp.float32)
+    lowered = jax.jit(model.train_step).lower(spec_p, spec_x, spec_y, spec_lr)
+    return to_hlo_text(lowered)
+
+
+def lower_predict() -> str:
+    spec_p = jax.ShapeDtypeStruct((model.N_PARAMS,), jnp.float32)
+    spec_x = jax.ShapeDtypeStruct((model.BATCH, model.INPUT_DIM), jnp.float32)
+    lowered = jax.jit(model.predict).lower(spec_p, spec_x)
+    return to_hlo_text(lowered)
+
+
+def meta() -> dict:
+    return {
+        "n_params": model.N_PARAMS,
+        "batch": model.BATCH,
+        "input_dim": model.INPUT_DIM,
+        "classes": model.CLASSES,
+        "layout": [
+            {"name": name, "offset": off, "len": length}
+            for name, off, length in model.layout()
+        ],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    ts = lower_train_step()
+    with open(os.path.join(args.out, "train_step.hlo.txt"), "w") as f:
+        f.write(ts)
+    print(f"train_step.hlo.txt: {len(ts)} chars")
+
+    pr = lower_predict()
+    with open(os.path.join(args.out, "predict.hlo.txt"), "w") as f:
+        f.write(pr)
+    print(f"predict.hlo.txt: {len(pr)} chars")
+
+    with open(os.path.join(args.out, "meta.json"), "w") as f:
+        json.dump(meta(), f, indent=2)
+    print(f"meta.json: n_params={model.N_PARAMS}")
+
+
+if __name__ == "__main__":
+    main()

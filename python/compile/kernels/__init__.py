@@ -1,0 +1,6 @@
+"""Layer-1 Pallas kernels (interpret=True on CPU; see DESIGN.md
+§Hardware-Adaptation for the CUDA→TPU mapping)."""
+
+from . import linear, matmul, ref, sgd  # noqa: F401
+
+__all__ = ["linear", "matmul", "ref", "sgd"]

@@ -1,0 +1,60 @@
+"""Layer-1 Pallas kernel: fused linear layer — relu(x @ w + b).
+
+Fusing the bias add + ReLU into the matmul epilogue saves one HBM
+round-trip of the activation tensor per layer (the standard epilogue
+fusion that CUDA kernels get from cuBLASLt; here it is the flush step of
+the K-accumulation loop).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import _pick_block, DEFAULT_BLOCK
+
+
+def _fused_linear_kernel(x_ref, w_ref, b_ref, o_ref, *, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+    # epilogue on the last K block: bias + ReLU in VMEM, single flush
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        o_ref[...] = jnp.maximum(
+            o_ref[...] + b_ref[...].astype(o_ref.dtype), 0.0
+        )
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def fused_linear(x, w, b, block=DEFAULT_BLOCK):
+    """relu(x[M,K] @ w[K,N] + b[N]) -> [M,N]."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2 and b.shape == (n,)
+    bm = _pick_block(m, block[0])
+    bk = _pick_block(k, block[1])
+    bn = _pick_block(n, block[2])
+    n_k = k // bk
+    grid = (m // bm, n // bn, n_k)
+    return pl.pallas_call(
+        functools.partial(_fused_linear_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            # bias: the j-th column block, broadcast over rows
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, w, b)

@@ -1,0 +1,97 @@
+"""Layer-1 Pallas kernel: blocked matmul.
+
+TPU-flavoured tiling (see DESIGN.md §Hardware-Adaptation): the grid walks
+(M/bm, N/bn, K/bk); for each output tile the innermost grid dimension
+accumulates (bm, bk) x (bk, bn) MXU contractions into the VMEM-resident
+output tile. The paper's CUDA-side compute (CNTK's GEMMs) maps onto
+thread-block tiles + shared memory; here the same HBM→VMEM schedule is
+expressed with BlockSpec ``index_map``s.
+
+Lowered with ``interpret=True`` — the CPU PJRT client cannot execute
+Mosaic custom-calls; real-TPU performance is *estimated* from the VMEM
+footprint / MXU utilisation analysis in DESIGN.md §Perf and
+EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = (128, 128, 128)  # (bm, bk, bn) — MXU-native 128x128 tiles
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, *, n_k: int):
+    """One (bm, bn) output tile; grid dim 2 walks the K blocks
+    sequentially, accumulating into the VMEM-resident output tile."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # MXU contraction of one (bm, bk) x (bk, bn) block pair
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+    del n_k  # shape bookkeeping only; flush happens via out_specs
+
+
+def _pick_block(dim: int, want: int) -> int:
+    """Largest divisor of `dim` that is ≤ want (keeps the grid exact)."""
+    b = min(dim, want)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def matmul(x, y, block=DEFAULT_BLOCK):
+    """Blocked Pallas matmul: x[M,K] @ y[K,N] -> [M,N]."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    bm = _pick_block(m, block[0])
+    bk = _pick_block(k, block[1])
+    bn = _pick_block(n, block[2])
+    n_k = k // bk
+    grid = (m // bm, n // bn, n_k)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            # x tile: row block i, K block kk
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            # y tile: K block kk, col block j
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, y)
+
+
+def vmem_footprint_bytes(block=DEFAULT_BLOCK, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM residency per grid step: x-tile + y-tile + output
+    tile (doubling for pipelining buffers is the caller's concern). Used
+    by the §Perf analysis in EXPERIMENTS.md."""
+    bm, bk, bn = block
+    return dtype_bytes * (bm * bk + bk * bn + bm * bn)
+
+
+def mxu_utilization_estimate(m: int, k: int, n: int, block=DEFAULT_BLOCK) -> float:
+    """Fraction of MXU-issue slots doing useful work for this problem:
+    ratio of real contraction volume to the padded tile volume the grid
+    executes. 1.0 when every dimension divides its block."""
+    bm = _pick_block(m, block[0])
+    bk = _pick_block(k, block[1])
+    bn = _pick_block(n, block[2])
+    useful = m * k * n
+    # tiles are exact divisors by construction, but small dims shrink the
+    # tile below the 128x128 MXU native shape -> underutilisation
+    eff_m = min(bm, 128) / 128.0
+    eff_k = min(bk, 128) / 128.0
+    eff_n = min(bn, 128) / 128.0
+    del useful
+    return eff_m * eff_k * eff_n

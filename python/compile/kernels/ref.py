@@ -1,0 +1,36 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every kernel in this package must match its oracle here (pytest sweeps
+shapes/dtypes with hypothesis and asserts allclose). The oracles are the
+semantic ground truth; the kernels are the performance implementations.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul(x, y):
+    """Plain matmul with f32 accumulation."""
+    return jnp.matmul(x, y, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def fused_linear(x, w, b):
+    """relu(x @ w + b)."""
+    out = jnp.matmul(x, w, preferred_element_type=jnp.float32)
+    out = out + b.astype(jnp.float32)
+    return jnp.maximum(out, 0.0).astype(x.dtype)
+
+
+def sgd_update(param, grad, lr):
+    """param - lr * grad (lr a scalar)."""
+    return (param.astype(jnp.float32) - lr * grad.astype(jnp.float32)).astype(
+        param.dtype
+    )
+
+
+def softmax_xent(logits, y_onehot):
+    """Mean softmax cross-entropy over the batch (stable log-softmax)."""
+    logits = logits.astype(jnp.float32)
+    logits = logits - jnp.max(logits, axis=-1, keepdims=True)
+    log_z = jnp.log(jnp.sum(jnp.exp(logits), axis=-1, keepdims=True))
+    log_probs = logits - log_z
+    return -jnp.mean(jnp.sum(y_onehot * log_probs, axis=-1))

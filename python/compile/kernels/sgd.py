@@ -1,0 +1,51 @@
+"""Layer-1 Pallas kernel: fused SGD parameter update.
+
+The optimizer step is bandwidth-bound: param and grad stream HBM→VMEM
+once, the update is a fused multiply-add on the VPU, and the new param
+streams back. Blocked 1-D over the flattened parameter vector.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 65_536  # 256 KB f32 per tile — comfortably VMEM-resident
+
+
+def _sgd_kernel(p_ref, g_ref, lr_ref, o_ref):
+    lr = lr_ref[0]
+    o_ref[...] = (
+        p_ref[...].astype(jnp.float32) - lr * g_ref[...].astype(jnp.float32)
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def sgd_update(param, grad, lr, block=BLOCK):
+    """param - lr * grad over flat f32 vectors; lr is shape (1,).
+
+    Arbitrary lengths are zero-padded up to a block multiple (elementwise
+    op — padding is free) so the grid stays O(n/block) even for prime n.
+    """
+    (n,) = param.shape
+    assert grad.shape == (n,)
+    b = min(block, n)
+    pad = (-n) % b
+    p = jnp.pad(param, (0, pad)) if pad else param
+    g = jnp.pad(grad, (0, pad)) if pad else grad
+    grid = ((n + pad) // b,)
+    out = pl.pallas_call(
+        _sgd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b,), lambda i: (i,)),
+            pl.BlockSpec((b,), lambda i: (i,)),
+            # lr: the same single-element block for every grid step
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n + pad,), param.dtype),
+        interpret=True,
+    )(p, g, lr)
+    return out[:n] if pad else out

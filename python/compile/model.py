@@ -1,0 +1,157 @@
+"""Layer-2 JAX model: the VGG-mini training step.
+
+A VGG-spirit MLP classifier over 32×32×3 inputs (3072 → 512 → 256 → 10)
+— the same "few large FC tensors + tiny biases" parameter signature that
+makes VGG the paper's application workload, at a size the CPU PJRT
+client trains comfortably in the e2e_train example.
+
+Layer forward/backward both run the Layer-1 Pallas kernels: the fused
+linear kernel carries the forward, and a `jax.custom_vjp` expresses the
+backward as Pallas matmuls, so the entire hot path lowers through the
+kernels. Parameters are a single flat f32 vector (what the rust runtime
+holds, and exactly what CNTK-style partitioned broadcast wants), and the
+public entry points take/return flat arrays only:
+
+    train_step(flat_params[P], x[B,D], y[B,C], lr[1])
+        -> (concat(new_flat_params, [loss]),)
+    predict(flat_params[P], x[B,D]) -> (logits[B,C],)
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.linear import fused_linear
+from .kernels.matmul import matmul
+from .kernels.ref import softmax_xent
+from .kernels.sgd import sgd_update
+
+# architecture (must stay in sync with meta.json via LAYOUT)
+DIMS = (3072, 512, 256, 10)
+BATCH = 64
+INPUT_DIM = DIMS[0]
+CLASSES = DIMS[-1]
+
+
+def layout():
+    """(name, offset, length) slices of the flat parameter vector."""
+    out = []
+    off = 0
+    for i in range(len(DIMS) - 1):
+        cin, cout = DIMS[i], DIMS[i + 1]
+        out.append((f"fc{i + 1}.w", off, cin * cout))
+        off += cin * cout
+        out.append((f"fc{i + 1}.b", off, cout))
+        off += cout
+    return out
+
+
+N_PARAMS = sum(length for _, _, length in layout())
+
+
+def unflatten(flat):
+    """Flat vector -> [(w, b), ...] pytree."""
+    params = []
+    off = 0
+    for i in range(len(DIMS) - 1):
+        cin, cout = DIMS[i], DIMS[i + 1]
+        w = flat[off : off + cin * cout].reshape(cin, cout)
+        off += cin * cout
+        b = flat[off : off + cout]
+        off += cout
+        params.append((w, b))
+    return params
+
+
+def flatten(params):
+    """[(w, b), ...] -> flat vector."""
+    return jnp.concatenate(
+        [t.reshape(-1) for wb in params for t in wb]
+    )
+
+
+def init_params(seed: int = 0):
+    """He-initialised flat parameter vector (host-side, for tests)."""
+    key = jax.random.PRNGKey(seed)
+    chunks = []
+    for i in range(len(DIMS) - 1):
+        cin, cout = DIMS[i], DIMS[i + 1]
+        key, wk = jax.random.split(key)
+        w = jax.random.normal(wk, (cin, cout), jnp.float32) * jnp.sqrt(2.0 / cin)
+        chunks.append(w.reshape(-1))
+        chunks.append(jnp.zeros((cout,), jnp.float32))
+    return jnp.concatenate(chunks)
+
+
+# ---- kernel-backed layers with custom VJPs --------------------------------
+
+
+@jax.custom_vjp
+def linear_relu(x, w, b):
+    return fused_linear(x, w, b)
+
+
+def _linear_relu_fwd(x, w, b):
+    out = fused_linear(x, w, b)
+    return out, (x, w, out)
+
+
+def _linear_relu_bwd(res, dy):
+    x, w, out = res
+    dz = dy * (out > 0).astype(dy.dtype)
+    dx = matmul(dz, w.T)
+    dw = matmul(x.T, dz)
+    db = jnp.sum(dz, axis=0)
+    return dx, dw, db
+
+
+linear_relu.defvjp(_linear_relu_fwd, _linear_relu_bwd)
+
+
+@jax.custom_vjp
+def dense(x, w, b):
+    return matmul(x, w) + b
+
+
+def _dense_fwd(x, w, b):
+    return matmul(x, w) + b, (x, w)
+
+
+def _dense_bwd(res, dy):
+    x, w = res
+    dx = matmul(dy, w.T)
+    dw = matmul(x.T, dy)
+    db = jnp.sum(dy, axis=0)
+    return dx, dw, db
+
+
+dense.defvjp(_dense_fwd, _dense_bwd)
+
+
+# ---- forward / loss / step -------------------------------------------------
+
+
+def forward(params, x):
+    """Logits for a batch."""
+    h = x
+    for w, b in params[:-1]:
+        h = linear_relu(h, w, b)
+    w, b = params[-1]
+    return dense(h, w, b)
+
+
+def loss_fn(flat_params, x, y_onehot):
+    params = unflatten(flat_params)
+    logits = forward(params, x)
+    return softmax_xent(logits, y_onehot)
+
+
+def train_step(flat_params, x, y_onehot, lr):
+    """One SGD step; returns a 1-tuple of concat(new_params, [loss])."""
+    loss, grad = jax.value_and_grad(loss_fn)(flat_params, x, y_onehot)
+    new_flat = sgd_update(flat_params, grad, lr)
+    return (jnp.concatenate([new_flat, loss[None]]),)
+
+
+def predict(flat_params, x):
+    """Logits only (serving path)."""
+    return (forward(unflatten(flat_params), x),)

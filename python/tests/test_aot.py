@@ -1,0 +1,50 @@
+"""AOT path: HLO-text emission sanity."""
+
+import json
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def train_hlo():
+    return aot.lower_train_step()
+
+
+def test_train_step_lowers_to_hlo_text(train_hlo):
+    assert "HloModule" in train_hlo
+    # jax wraps in an entry computation with our tuple convention
+    assert "ROOT" in train_hlo
+
+
+def test_hlo_has_expected_parameter_shapes(train_hlo):
+    # flat params f32[P], x f32[B,D], y f32[B,C], lr f32[1]
+    assert f"f32[{model.N_PARAMS}]" in train_hlo
+    assert f"f32[{model.BATCH},{model.INPUT_DIM}]" in train_hlo
+    assert f"f32[{model.BATCH},{model.CLASSES}]" in train_hlo
+
+
+def test_hlo_output_is_tuple_of_flat_array(train_hlo):
+    assert f"f32[{model.N_PARAMS + 1}]" in train_hlo
+
+
+def test_no_custom_calls_surviving(train_hlo):
+    """interpret=True must lower Pallas to plain HLO — a Mosaic
+    custom-call would be unloadable by the CPU PJRT client."""
+    assert "mosaic" not in train_hlo.lower()
+
+
+def test_meta_is_consistent():
+    m = aot.meta()
+    assert m["n_params"] == model.N_PARAMS
+    assert sum(e["len"] for e in m["layout"]) == model.N_PARAMS
+    # json-serialisable
+    text = json.dumps(m)
+    assert json.loads(text)["batch"] == model.BATCH
+
+
+def test_predict_lowers():
+    hlo = aot.lower_predict()
+    assert "HloModule" in hlo
+    assert f"f32[{model.BATCH},{model.CLASSES}]" in hlo

@@ -1,0 +1,140 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and dtypes; assert_allclose against ref.py is
+THE core correctness signal for the compute layer.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import linear, matmul, ref, sgd
+
+DIMS = st.integers(min_value=1, max_value=96)
+
+
+def rand(rng, *shape, dtype=np.float32):
+    return jnp.asarray(rng.standard_normal(shape).astype(dtype))
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=DIMS, k=DIMS, n=DIMS, seed=st.integers(0, 2**31 - 1))
+def test_matmul_matches_ref_f32(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, y = rand(rng, m, k), rand(rng, k, n)
+    out = matmul.matmul(x, y)
+    np.testing.assert_allclose(out, ref.matmul(x, y), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.sampled_from([8, 32, 64]),
+    k=st.sampled_from([16, 64, 128]),
+    n=st.sampled_from([8, 32, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref_bf16(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, m, k).astype(jnp.bfloat16)
+    y = rand(rng, k, n).astype(jnp.bfloat16)
+    out = matmul.matmul(x, y)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32),
+        np.asarray(ref.matmul(x, y), np.float32),
+        rtol=0.08,
+        atol=0.25,
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=DIMS, k=DIMS, n=DIMS, seed=st.integers(0, 2**31 - 1))
+def test_fused_linear_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = rand(rng, m, k), rand(rng, k, n), rand(rng, n)
+    out = linear.fused_linear(x, w, b)
+    np.testing.assert_allclose(
+        out, ref.fused_linear(x, w, b), rtol=1e-4, atol=1e-4
+    )
+    # ReLU: no negatives survive
+    assert float(np.min(np.asarray(out))) >= 0.0
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 200_000),
+    lr=st.floats(1e-5, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sgd_update_matches_ref(n, lr, seed):
+    rng = np.random.default_rng(seed)
+    p, g = rand(rng, n), rand(rng, n)
+    out = sgd.sgd_update(p, g, jnp.asarray([lr], jnp.float32))
+    np.testing.assert_allclose(
+        out, ref.sgd_update(p, g, lr), rtol=1e-5, atol=1e-6
+    )
+
+
+@pytest.mark.parametrize(
+    "block", [(32, 32, 32), (64, 128, 64), (128, 128, 128), (16, 8, 128)]
+)
+def test_matmul_block_shapes_agree(block):
+    """Block-shape sweep (the §Perf-L1 tuning axis) never changes values."""
+    rng = np.random.default_rng(0)
+    x, y = rand(rng, 64, 96), rand(rng, 96, 40)
+    out = matmul.matmul(x, y, block=block)
+    np.testing.assert_allclose(out, ref.matmul(x, y), rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_rejects_mismatched_contraction():
+    rng = np.random.default_rng(0)
+    with pytest.raises(AssertionError):
+        matmul.matmul(rand(rng, 4, 5), rand(rng, 6, 7))
+
+
+def test_vmem_footprint_within_budget():
+    """Default tiles must fit VMEM (16 MB/core) with double buffering."""
+    fp = matmul.vmem_footprint_bytes()
+    assert 2 * fp <= 16 << 20, f"footprint {fp}"
+
+
+def test_mxu_utilization_full_at_native_tiles():
+    assert matmul.mxu_utilization_estimate(512, 512, 512) == 1.0
+    assert matmul.mxu_utilization_estimate(512, 512, 10) < 0.2
+
+
+def test_softmax_xent_ref_sane():
+    logits = jnp.asarray([[10.0, 0.0], [0.0, 10.0]], jnp.float32)
+    y = jnp.asarray([[1.0, 0.0], [0.0, 1.0]], jnp.float32)
+    assert float(ref.softmax_xent(logits, y)) < 1e-3
+    y_wrong = jnp.asarray([[0.0, 1.0], [1.0, 0.0]], jnp.float32)
+    assert float(ref.softmax_xent(logits, y_wrong)) > 5.0
+
+
+def test_softmax_xent_stable_for_huge_logits():
+    logits = jnp.asarray([[1e4, -1e4]], jnp.float32)
+    y = jnp.asarray([[1.0, 0.0]], jnp.float32)
+    assert np.isfinite(float(ref.softmax_xent(logits, y)))
+
+
+def test_kernels_differentiable_via_custom_vjp():
+    """The model's custom VJPs route gradients through Pallas matmuls."""
+    from compile import model
+
+    rng = np.random.default_rng(1)
+    x = rand(rng, 8, 16)
+    w = rand(rng, 16, 4)
+    b = rand(rng, 4)
+
+    def f(w, b):
+        return jnp.sum(model.linear_relu(x, w, b))
+
+    gw, gb = jax.grad(f, argnums=(0, 1))(w, b)
+
+    def f_ref(w, b):
+        return jnp.sum(ref.fused_linear(x, w, b))
+
+    gw_ref, gb_ref = jax.grad(f_ref, argnums=(0, 1))(w, b)
+    np.testing.assert_allclose(gw, gw_ref, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(gb, gb_ref, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,85 @@
+"""L2 correctness: the VGG-mini training step."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels import ref
+
+
+def batch(seed=0, batch=model.BATCH):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((batch, model.INPUT_DIM)), jnp.float32)
+    labels = rng.integers(0, model.CLASSES, batch)
+    y = jnp.zeros((batch, model.CLASSES), jnp.float32).at[
+        jnp.arange(batch), labels
+    ].set(1.0)
+    return x, y
+
+
+def test_layout_covers_params_exactly():
+    lay = model.layout()
+    assert lay[0][1] == 0
+    for (_, off, ln), (_, noff, _) in zip(lay, lay[1:]):
+        assert off + ln == noff
+    assert sum(ln for _, _, ln in lay) == model.N_PARAMS
+    assert model.N_PARAMS == 3072 * 512 + 512 + 512 * 256 + 256 + 256 * 10 + 10
+
+
+def test_flatten_unflatten_roundtrip():
+    flat = model.init_params(3)
+    back = model.flatten(model.unflatten(flat))
+    np.testing.assert_array_equal(np.asarray(flat), np.asarray(back))
+
+
+def test_forward_shapes():
+    flat = model.init_params(0)
+    x, _ = batch()
+    (logits,) = model.predict(flat, x)
+    assert logits.shape == (model.BATCH, model.CLASSES)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_gradient_matches_pure_jnp_model():
+    """The Pallas-kernel model must differentiate identically to a pure
+    jnp implementation of the same network."""
+    flat = model.init_params(1)
+    x, y = batch(1)
+
+    def loss_pure(flat_params):
+        params = model.unflatten(flat_params)
+        h = x
+        for w, b in params[:-1]:
+            h = jnp.maximum(jnp.matmul(h, w) + b, 0.0)
+        w, b = params[-1]
+        return ref.softmax_xent(jnp.matmul(h, w) + b, y)
+
+    g_kernel = jax.grad(model.loss_fn)(flat, x, y)
+    g_pure = jax.grad(loss_pure)(flat)
+    np.testing.assert_allclose(
+        np.asarray(g_kernel), np.asarray(g_pure), rtol=5e-3, atol=1e-5
+    )
+
+
+def test_train_step_reduces_loss():
+    flat = model.init_params(5)
+    x, y = batch(7)
+    lr = jnp.asarray([0.05], jnp.float32)
+    losses = []
+    step = jax.jit(model.train_step)
+    for _ in range(15):
+        (out,) = step(flat, x, y, lr)
+        flat = out[:-1]
+        losses.append(float(out[-1]))
+    assert losses[-1] < losses[0] * 0.7, losses
+
+
+def test_train_step_output_layout():
+    flat = model.init_params(2)
+    x, y = batch(2)
+    (out,) = model.train_step(flat, x, y, jnp.asarray([0.01], jnp.float32))
+    assert out.shape == (model.N_PARAMS + 1,)
+    # zero lr -> params unchanged
+    (out0,) = model.train_step(flat, x, y, jnp.asarray([0.0], jnp.float32))
+    np.testing.assert_allclose(np.asarray(out0[:-1]), np.asarray(flat), atol=0)

@@ -1,0 +1,77 @@
+//! Per-algorithm ablation bench: simulated latency of every broadcast
+//! design across the message range, plus chunk-size sensitivity for the
+//! pipelined chain (the §IV-B tuning question), plus the wall-clock cost
+//! of planning+simulating each algorithm (L3 hot-path budget).
+//!
+//! `cargo bench --bench algorithms`
+
+use gdrbcast::analytic::{self, ModelParams};
+use gdrbcast::bench::harness::Bencher;
+use gdrbcast::collectives::{self, Algorithm, BcastSpec};
+use gdrbcast::comm::{Comm, CommParams};
+use gdrbcast::netsim::Engine;
+use gdrbcast::topology::presets;
+use gdrbcast::util::bytes::{format_size, format_us};
+use gdrbcast::util::tablefmt::Table;
+
+fn main() {
+    let cluster = presets::kesch(2, 16);
+    let n = cluster.n_gpus();
+    let mut comm = Comm::new(&cluster);
+    let mut engine = Engine::new(&cluster);
+
+    let algos = [
+        Algorithm::Direct,
+        Algorithm::Chain,
+        Algorithm::Knomial { k: 2 },
+        Algorithm::Knomial { k: 4 },
+        Algorithm::Knomial { k: 8 },
+        Algorithm::ScatterRingAllgather,
+        Algorithm::HostStagedKnomial { k: 2 },
+        Algorithm::PipelinedChain { chunk: 1 << 20 },
+    ];
+    let sizes: [u64; 5] = [4, 8 << 10, 512 << 10, 8 << 20, 128 << 20];
+
+    let mut t = Table::new(&[
+        "algorithm", "4", "8K", "512K", "8M", "128M",
+    ])
+    .with_title(format!("simulated bcast latency (us), {n} GPUs over 2 KESCH nodes"));
+    for algo in &algos {
+        let mut row = vec![algo.name()];
+        for &bytes in &sizes {
+            let t_ns =
+                collectives::latency_ns(algo, &mut comm, &mut engine, &BcastSpec::new(0, n, bytes));
+            row.push(format_us(t_ns as f64));
+        }
+        t.row(row);
+    }
+    print!("{}", t.render());
+
+    // chunk-size sensitivity (Eq. 5's C) + the analytic optimum
+    println!("\npipelined-chain chunk-size sweep, 64 MB over {n} GPUs:");
+    let m = 64 << 20;
+    for chunk in [64 << 10, 256 << 10, 1 << 20, 4 << 20, 16 << 20u64] {
+        let t_ns = collectives::latency_ns(
+            &Algorithm::PipelinedChain { chunk },
+            &mut comm,
+            &mut engine,
+            &BcastSpec::new(0, n, m),
+        );
+        println!("  C={:>5}: {:>10} us", format_size(chunk), format_us(t_ns as f64));
+    }
+    let p = ModelParams::flat_rndv(&CommParams::default());
+    println!(
+        "  analytic C* (flat-fabric Eq. 5 optimum): {}",
+        format_size(analytic::bcast::optimal_chunk(&p, n, m))
+    );
+
+    // wall-clock planning+simulation cost per algorithm
+    println!();
+    let mut bencher = Bencher::new();
+    for algo in &algos {
+        bencher.bench(&format!("plan+sim/{}/8M", algo.family()), || {
+            collectives::latency_ns(algo, &mut comm, &mut engine, &BcastSpec::new(0, n, 8 << 20))
+        });
+    }
+    bencher.write_report("algorithms").expect("report");
+}

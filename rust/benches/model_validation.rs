@@ -1,0 +1,80 @@
+//! Bench E1 — simulator vs the paper's analytic cost models
+//! (Eqs. 1–5) on the idealised flat fabric, across the (n, M) grid.
+//! This is the "Table" of §III made executable.
+//!
+//! `cargo bench --bench model_validation`
+
+use gdrbcast::analytic::validate::run_grid;
+use gdrbcast::collectives::Algorithm;
+use gdrbcast::util::bytes::{format_size, format_us};
+use gdrbcast::util::tablefmt::Table;
+
+fn main() {
+    let algos = [
+        Algorithm::Direct,
+        Algorithm::Chain,
+        Algorithm::PipelinedChain { chunk: 256 << 10 },
+        Algorithm::Knomial { k: 2 },
+        Algorithm::Knomial { k: 4 },
+        Algorithm::ScatterRingAllgather,
+    ];
+    let ns = [2usize, 4, 8, 16, 32, 64, 128];
+    let sizes = [4u64, 8 << 10, 1 << 20, 16 << 20, 128 << 20];
+    let rows = run_grid(&algos, &ns, &sizes);
+
+    let mut t = Table::new(&["algorithm", "n", "M", "sim (us)", "model (us)", "rel err"])
+        .with_title("E1 — simulator vs Eqs. (1)-(5), flat fabric");
+    let mut worst = (0.0f64, String::new());
+    let mut sum_err = 0.0;
+    for r in &rows {
+        if r.rel_err > worst.0 {
+            worst = (
+                r.rel_err,
+                format!("{} n={} M={}", r.algorithm, r.n, format_size(r.bytes)),
+            );
+        }
+        sum_err += r.rel_err;
+        // print a representative subset (full grid goes to the JSON)
+        if r.n >= 16 {
+            t.row(vec![
+                r.algorithm.clone(),
+                r.n.to_string(),
+                format_size(r.bytes),
+                format_us(r.sim_ns),
+                format_us(r.model_ns),
+                format!("{:.4}", r.rel_err),
+            ]);
+        }
+    }
+    print!("{}", t.render());
+    println!(
+        "grid: {} points; mean rel err {:.4}; worst {:.4} ({})",
+        rows.len(),
+        sum_err / rows.len() as f64,
+        worst.0,
+        worst.1
+    );
+
+    // JSON dump
+    use gdrbcast::util::json::Json;
+    let arr: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            let mut j = Json::obj();
+            j.set("algorithm", r.algorithm.as_str())
+                .set("n", r.n)
+                .set("bytes", r.bytes)
+                .set("sim_ns", r.sim_ns)
+                .set("model_ns", r.model_ns)
+                .set("rel_err", r.rel_err);
+            j
+        })
+        .collect();
+    std::fs::create_dir_all("target/reports").expect("reports dir");
+    std::fs::write(
+        "target/reports/model_validation.json",
+        Json::Arr(arr).to_string_pretty(),
+    )
+    .expect("write");
+    println!("full grid written to target/reports/model_validation.json");
+}

@@ -1,0 +1,70 @@
+//! Engine micro-bench: raw discrete-event throughput (ops/second) — the
+//! L3 hot path that every figure sweep multiplies. §Perf tracks this
+//! number before/after optimisation.
+//!
+//! `cargo bench --bench netsim_engine`
+
+use gdrbcast::bench::harness::Bencher;
+use gdrbcast::collectives::{self, Algorithm, BcastSpec};
+use gdrbcast::comm::Comm;
+use gdrbcast::netsim::Engine;
+use gdrbcast::topology::presets;
+
+fn main() {
+    let mut bencher = Bencher::new();
+
+    // plan construction vs execution, separated
+    let cluster = presets::kesch(8, 16);
+    let n = cluster.n_gpus();
+    let mut comm = Comm::new(&cluster);
+    let spec = BcastSpec::new(0, n, 128 << 20);
+    let algo = Algorithm::PipelinedChain { chunk: 512 << 10 };
+
+    let plan = collectives::plan(&algo, &mut comm, &spec);
+    println!(
+        "pipelined-chain 128M / 512K chunks / {n} GPUs -> {} ops",
+        plan.plan.len()
+    );
+
+    bencher.bench("plan/pipelined-chain/128gpus/128M", || {
+        collectives::plan(&algo, &mut comm, &spec).plan.len()
+    });
+
+    let mut engine = Engine::new(&cluster);
+    let r = bencher.bench("execute/pipelined-chain/128gpus/128M", || {
+        engine.execute(&plan.plan).makespan
+    });
+    let ops_per_sec = plan.plan.len() as f64 / (r.per_iter.mean / 1e9);
+    println!("engine throughput: {:.1}M ops/s", ops_per_sec / 1e6);
+
+    // scaling with op count
+    for chunk in [4u64 << 20, 1 << 20, 256 << 10, 64 << 10] {
+        let a = Algorithm::PipelinedChain { chunk };
+        let p = collectives::plan(&a, &mut comm, &spec);
+        let label = format!(
+            "execute/{}ops",
+            p.plan.len()
+        );
+        bencher.bench(&label, || engine.execute(&p.plan).makespan);
+    }
+
+    // full figure-sweep budget check (DESIGN.md: F1+F2 sweep < 10 s)
+    let t0 = std::time::Instant::now();
+    let sizes = gdrbcast::util::bytes::pow2_sweep(4, 128 << 20);
+    for gpus in [2usize, 4, 8, 16] {
+        let c = presets::kesch(1, gpus);
+        let sel = gdrbcast::tuning::Selector::tuned(&c);
+        let mut cm = Comm::new(&c);
+        let mut en = Engine::new(&c);
+        for &bytes in &sizes {
+            let _ = sel.latency_ns(&mut cm, &mut en, &BcastSpec::new(0, gpus, bytes));
+        }
+    }
+    println!(
+        "fig1-shaped tuned sweep (4 GPU counts x {} sizes incl. tuning): {:.2}s",
+        sizes.len(),
+        t0.elapsed().as_secs_f64()
+    );
+
+    bencher.write_report("netsim_engine").expect("report");
+}

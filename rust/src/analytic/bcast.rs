@@ -1,0 +1,201 @@
+//! The closed-form broadcast cost models, Eqs. (1)–(6).
+//!
+//! Two variants are provided for the O(n) algorithms:
+//!
+//! * `*_paper` — exactly as printed in the paper (Eq. 1 charges `n`
+//!   sends; a root sending to `n-1` peers is approximated as `n`);
+//! * the default — the exact count the simulator realises (`n-1`).
+//!
+//! Validation (experiment E1) uses the exact forms; reports print both.
+
+use super::params::ModelParams;
+
+/// Eq. (1) as printed: `T = n × (t_s + M/B)`.
+pub fn direct_paper(p: &ModelParams, n: usize, m: u64) -> f64 {
+    n as f64 * p.hop_ns(m)
+}
+
+/// Exact direct cost: the root performs `n-1` serialized sends.
+pub fn direct(p: &ModelParams, n: usize, m: u64) -> f64 {
+    (n as f64 - 1.0) * p.hop_ns(m)
+}
+
+/// Eq. (2): `T = (n-1) × (t_s + M/B)`.
+pub fn chain(p: &ModelParams, n: usize, m: u64) -> f64 {
+    (n as f64 - 1.0) * p.hop_ns(m)
+}
+
+/// Eq. (3): `T = ⌈log_k n⌉ × (t_s + M/B)`.
+///
+/// The paper's idealisation assumes the k-1 sends of a round overlap
+/// perfectly; [`knomial_serialized`] charges them serially (what a real
+/// blocking-send implementation — and the simulator — does).
+pub fn knomial_paper(p: &ModelParams, n: usize, k: usize, m: u64) -> f64 {
+    ceil_log(n, k) as f64 * p.hop_ns(m)
+}
+
+/// K-nomial with serialized per-round child sends: the critical path of
+/// the recursive-splitting tree realised by the simulator.
+pub fn knomial_serialized(p: &ModelParams, n: usize, k: usize, m: u64) -> f64 {
+    // critical path: at each level the head sends to (k-1) children
+    // serially, and the *last* child's subtree starts after all of them.
+    // Depth of the recursive ceil-split tree with serialized sends:
+    serialized_depth(n, k) as f64 * p.hop_ns(m)
+}
+
+/// Longest issue-to-arrival path (in hops) of the recursive ceil-split
+/// k-nomial tree with serialized sends, matching
+/// `collectives::knomial::plan`.
+pub fn serialized_depth(n: usize, k: usize) -> usize {
+    if n <= 1 {
+        return 0;
+    }
+    let sub = n.div_ceil(k);
+    let mut ranges = Vec::new();
+    let mut cursor = 0;
+    while cursor < n {
+        let len = sub.min(n - cursor);
+        ranges.push(len);
+        cursor += len;
+    }
+    // the head's own deeper sends queue behind its (ranges-1) sends at
+    // this level (shared egress link)
+    let sends = ranges.len() - 1;
+    let mut worst = sends + serialized_depth(ranges[0], k);
+    for (i, &len) in ranges.iter().enumerate().skip(1) {
+        // i-th child receives after i serialized sends
+        worst = worst.max(i + serialized_depth(len, k));
+    }
+    worst
+}
+
+/// Eq. (4): `T = (⌈log₂ n⌉ + n − 1) × t_s + 2 (n−1)/n × M/B`.
+pub fn scatter_allgather(p: &ModelParams, n: usize, m: u64) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    let nf = n as f64;
+    (ceil_log(n, 2) as f64 + nf - 1.0) * p.t_s_ns + 2.0 * (nf - 1.0) / nf * p.tx_ns(m)
+}
+
+/// Eq. (5): `T = (M/C + n − 2) × (t_s + C/B)` — the pipelined chain.
+pub fn pipelined_chain(p: &ModelParams, n: usize, m: u64, c: u64) -> f64 {
+    let n_chunks = (m as f64 / c as f64).ceil().max(1.0);
+    (n_chunks + n as f64 - 2.0) * p.hop_ns(c.min(m))
+}
+
+/// Eq. (6): `T = M/B_PCIe + ⌈log_k n⌉ × (t_s + M/B)` — host-staged
+/// k-nomial.
+pub fn host_staged_knomial(p: &ModelParams, n: usize, k: usize, m: u64) -> f64 {
+    m as f64 / p.b_pcie * 1e9 + knomial_paper(p, n, k, m)
+}
+
+/// The optimal chunk size for Eq. (5): minimising
+/// `(M/C + n-2)(t_s + C/B)` over C gives `C* = sqrt(M·t_s·B / (n-2))`.
+pub fn optimal_chunk(p: &ModelParams, n: usize, m: u64) -> u64 {
+    if n <= 2 {
+        return m.max(1);
+    }
+    let c = ((m as f64) * (p.t_s_ns / 1e9) * p.b / (n as f64 - 2.0)).sqrt();
+    (c.round() as u64).clamp(1, m.max(1))
+}
+
+/// ⌈log_k n⌉ for n ≥ 1.
+pub fn ceil_log(n: usize, k: usize) -> usize {
+    assert!(k >= 2);
+    let mut rounds = 0;
+    let mut reach = 1usize;
+    while reach < n {
+        reach = reach.saturating_mul(k);
+        rounds += 1;
+    }
+    rounds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p() -> ModelParams {
+        ModelParams {
+            t_s_ns: 2_000.0,
+            b: 10.0e9,
+            b_pcie: 12.0e9,
+        }
+    }
+
+    #[test]
+    fn ceil_log_values() {
+        assert_eq!(ceil_log(1, 2), 0);
+        assert_eq!(ceil_log(2, 2), 1);
+        assert_eq!(ceil_log(8, 2), 3);
+        assert_eq!(ceil_log(9, 2), 4);
+        assert_eq!(ceil_log(16, 4), 2);
+        assert_eq!(ceil_log(17, 4), 3);
+    }
+
+    #[test]
+    fn eq1_vs_exact() {
+        let m = 1 << 20;
+        assert!(direct_paper(&p(), 8, m) > direct(&p(), 8, m));
+        assert_eq!(direct(&p(), 8, m), chain(&p(), 8, m));
+    }
+
+    #[test]
+    fn eq5_beats_eq2_for_large_m() {
+        let m = 64 << 20;
+        let c = 2 << 20;
+        assert!(pipelined_chain(&p(), 8, m, c) < chain(&p(), 8, m) / 3.0);
+    }
+
+    #[test]
+    fn eq5_degenerates_to_chain_at_c_eq_m() {
+        let m = 4 << 20;
+        let diff =
+            (pipelined_chain(&p(), 8, m, m) - chain(&p(), 8, m)).abs();
+        assert!(diff < 1.0);
+    }
+
+    #[test]
+    fn eq4_bandwidth_term_is_2m_over_b() {
+        let m: u64 = 1 << 30;
+        let n = 64;
+        let t = scatter_allgather(&p(), n, m);
+        let bw_term = 2.0 * (n as f64 - 1.0) / n as f64 * p().tx_ns(m);
+        assert!((t - bw_term) / t < 0.01, "t_s terms negligible at 1 GB");
+    }
+
+    #[test]
+    fn eq6_small_m_close_to_eq3() {
+        let m = 4;
+        let a = host_staged_knomial(&p(), 16, 2, m);
+        let b = knomial_paper(&p(), 16, 2, m);
+        assert!((a - b) < 10.0, "PCIe term vanishes for 4 bytes");
+    }
+
+    #[test]
+    fn optimal_chunk_interior_minimum() {
+        let params = p();
+        let m: u64 = 64 << 20;
+        let n = 16;
+        let c_star = optimal_chunk(&params, n, m);
+        let t_star = pipelined_chain(&params, n, m, c_star);
+        for c in [c_star / 4, c_star / 2, c_star * 2, c_star * 4] {
+            if c >= 1 && c <= m {
+                assert!(
+                    t_star <= pipelined_chain(&params, n, m, c) + 1.0,
+                    "C*={c_star} must beat C={c}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn serialized_depth_examples() {
+        assert_eq!(serialized_depth(2, 2), 1);
+        assert_eq!(serialized_depth(8, 2), 3);
+        // k=4, n=16: root sends 3 serial sends; worst child (3rd) then
+        // does its own 3 -> 6
+        assert_eq!(serialized_depth(16, 4), 6);
+    }
+}

@@ -1,0 +1,16 @@
+//! Analytic cost models (§III and §IV of the paper, Table I notation).
+//!
+//! * [`bcast`] — the closed forms: Eq. (1) direct, Eq. (2) chain,
+//!   Eq. (3) k-nomial, Eq. (4) scatter-ring-allgather, Eq. (5) pipelined
+//!   chain, Eq. (6) host-staged k-nomial.
+//! * [`params`] — the (t_s, B, B_PCIe, n, M, C) parameter block of
+//!   Table I.
+//! * [`validate`] — checks the simulator against the closed forms on the
+//!   idealised `flat` fabric they assume (experiment E1 in DESIGN.md).
+
+pub mod bcast;
+pub mod params;
+pub mod validate;
+
+pub use bcast::*;
+pub use params::ModelParams;

@@ -1,0 +1,79 @@
+//! Table I — notations for the analytical model.
+//!
+//! | name   | description                                            |
+//! |--------|--------------------------------------------------------|
+//! | M      | size of a message                                      |
+//! | C      | size of a chunk                                        |
+//! | B      | bandwidth of the link                                  |
+//! | B_PCIe | PCIe bandwidth available for CPU↔GPU transfers         |
+//! | n      | number of nodes (or GPUs)                              |
+//! | t_s    | startup time for initiating a single transfer          |
+
+/// The model parameter block. Times in ns, bandwidths in bytes/s.
+#[derive(Debug, Clone, Copy)]
+pub struct ModelParams {
+    /// Startup time t_s per transfer, ns.
+    pub t_s_ns: f64,
+    /// Link bandwidth B, bytes/s.
+    pub b: f64,
+    /// CPU↔GPU PCIe bandwidth B_PCIe, bytes/s.
+    pub b_pcie: f64,
+}
+
+impl ModelParams {
+    /// Parameters matching the `flat` validation preset with the comm
+    /// layer's eager path (small messages).
+    pub fn flat_eager(params: &crate::comm::CommParams) -> ModelParams {
+        ModelParams {
+            t_s_ns: params.eager_overhead_ns as f64,
+            b: crate::topology::LinkKind::Ideal.default_bandwidth(),
+            b_pcie: crate::topology::LinkKind::PcieG3x16.default_bandwidth(),
+        }
+    }
+
+    /// Parameters matching the `flat` preset with the rendezvous path
+    /// (large messages).
+    pub fn flat_rndv(params: &crate::comm::CommParams) -> ModelParams {
+        ModelParams {
+            t_s_ns: params.rndv_overhead_ns as f64,
+            ..ModelParams::flat_eager(params)
+        }
+    }
+
+    /// Transmission time M/B in ns.
+    #[inline]
+    pub fn tx_ns(&self, bytes: u64) -> f64 {
+        bytes as f64 / self.b * 1e9
+    }
+
+    /// One hop: t_s + M/B, ns.
+    #[inline]
+    pub fn hop_ns(&self, bytes: u64) -> f64 {
+        self.t_s_ns + self.tx_ns(bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::CommParams;
+
+    #[test]
+    fn hop_combines_terms() {
+        let p = ModelParams {
+            t_s_ns: 1000.0,
+            b: 1.0e9,
+            b_pcie: 12.0e9,
+        };
+        assert!((p.hop_ns(1_000_000) - 1_001_000.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn flat_presets_differ_in_ts_only() {
+        let cp = CommParams::default();
+        let e = ModelParams::flat_eager(&cp);
+        let r = ModelParams::flat_rndv(&cp);
+        assert!(r.t_s_ns > e.t_s_ns);
+        assert_eq!(e.b, r.b);
+    }
+}

@@ -1,0 +1,158 @@
+//! A criterion-style wall-clock benchmark harness.
+//!
+//! Measures closures by adaptively choosing an iteration count to hit a
+//! target measurement time, then reports summary statistics across
+//! samples. Used by every `[[bench]]` target (with `harness = false`).
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::Summary;
+
+/// One benchmark's outcome.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// Per-iteration wall time statistics, ns.
+    pub per_iter: Summary,
+    /// Iterations per sample used.
+    pub iters_per_sample: u64,
+    pub samples: usize,
+}
+
+impl BenchResult {
+    pub fn line(&self) -> String {
+        format!(
+            "{:<48} {:>12.2} ns/iter (±{:>8.2}, p99 {:>12.2}, {} samples × {} iters)",
+            self.name,
+            self.per_iter.mean,
+            self.per_iter.std_dev,
+            self.per_iter.p99,
+            self.samples,
+            self.iters_per_sample
+        )
+    }
+}
+
+/// Harness configuration.
+#[derive(Debug, Clone)]
+pub struct Bencher {
+    pub warmup: Duration,
+    pub target_sample_time: Duration,
+    pub samples: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(200),
+            target_sample_time: Duration::from_millis(60),
+            samples: 12,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Bencher {
+        Bencher::default()
+    }
+
+    /// Quick mode for CI / tests.
+    pub fn quick() -> Bencher {
+        Bencher {
+            warmup: Duration::from_millis(10),
+            target_sample_time: Duration::from_millis(5),
+            samples: 4,
+            results: Vec::new(),
+        }
+    }
+
+    /// Benchmark a closure. The closure's return value is black-boxed to
+    /// keep the optimiser honest.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchResult {
+        // warmup + calibration
+        let warm_start = Instant::now();
+        let mut calib_iters = 0u64;
+        while warm_start.elapsed() < self.warmup {
+            std::hint::black_box(f());
+            calib_iters += 1;
+        }
+        let per_iter_est = self.warmup.as_nanos() as f64 / calib_iters.max(1) as f64;
+        let iters = ((self.target_sample_time.as_nanos() as f64 / per_iter_est).ceil()
+            as u64)
+            .max(1);
+
+        let mut samples: Vec<f64> = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                std::hint::black_box(f());
+            }
+            samples.push(t0.elapsed().as_nanos() as f64 / iters as f64);
+        }
+        let result = BenchResult {
+            name: name.to_string(),
+            per_iter: Summary::of(&samples),
+            iters_per_sample: iters,
+            samples: self.samples,
+        };
+        println!("{}", result.line());
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Dump all results as JSON into `target/reports/<name>.json`.
+    pub fn write_report(&self, report_name: &str) -> std::io::Result<std::path::PathBuf> {
+        use crate::util::json::Json;
+        let mut arr = Vec::new();
+        for r in &self.results {
+            let mut j = Json::obj();
+            j.set("name", r.name.as_str())
+                .set("mean_ns", r.per_iter.mean)
+                .set("std_dev_ns", r.per_iter.std_dev)
+                .set("p50_ns", r.per_iter.p50)
+                .set("p99_ns", r.per_iter.p99)
+                .set("iters", r.iters_per_sample)
+                .set("samples", r.samples);
+            arr.push(j);
+        }
+        let dir = std::path::Path::new("target/reports");
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{report_name}.json"));
+        std::fs::write(&path, Json::Arr(arr).to_string_pretty())?;
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let mut b = Bencher::quick();
+        let r = b.bench("spin", || {
+            let mut x = 0u64;
+            for i in 0..100 {
+                x = x.wrapping_add(i * i);
+            }
+            x
+        });
+        assert!(r.per_iter.mean > 0.0);
+        assert_eq!(r.samples, 4);
+    }
+
+    #[test]
+    fn results_accumulate() {
+        let mut b = Bencher::quick();
+        b.bench("a", || 1 + 1);
+        b.bench("b", || 2 + 2);
+        assert_eq!(b.results().len(), 2);
+        assert!(b.results()[0].line().contains("ns/iter"));
+    }
+}

@@ -1,0 +1,18 @@
+//! Benchmarking substrates.
+//!
+//! * [`harness`] — a criterion-style statistical runner (criterion is not
+//!   in the offline crate universe): warmup, adaptive iteration counts,
+//!   mean/σ/percentiles, throughput, and plain-text + JSON reports. All
+//!   `cargo bench` targets in `rust/benches/` use it with
+//!   `harness = false`.
+//! * [`osu`] — the osu_bcast-equivalent micro-benchmark driving the
+//!   simulator with the same loop structure the paper's Figs. 1–2 use.
+//! * [`report`] — figure/series renderers and the headline-ratio
+//!   extractor (the 14×/16.6×/7 % numbers).
+
+pub mod harness;
+pub mod osu;
+pub mod report;
+
+pub use harness::{Bencher, BenchResult};
+pub use osu::{osu_bcast, OsuResult};

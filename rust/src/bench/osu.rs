@@ -1,0 +1,92 @@
+//! The osu_bcast-equivalent micro-benchmark.
+//!
+//! Mirrors the OSU micro-benchmark methodology the paper uses for
+//! Figs. 1–2: for each message size, run warmup + timed iterations of the
+//! broadcast and report the latency as the *maximum across ranks*
+//! (averaged over iterations). Our clock is the simulator's virtual
+//! clock; the simulator is deterministic, so "iterations" matter only
+//! when the caller injects variation (e.g. rotating roots).
+
+use crate::collectives::BcastSpec;
+use crate::netsim::Engine;
+
+/// Per-size result.
+#[derive(Debug, Clone)]
+pub struct OsuResult {
+    pub bytes: u64,
+    /// Mean over iterations of the max-across-ranks latency, µs.
+    pub latency_us: f64,
+    /// Min/max over iterations, µs.
+    pub min_us: f64,
+    pub max_us: f64,
+}
+
+/// Run the osu_bcast loop for one size with a caller-supplied plan
+/// builder (called once per iteration — roots may rotate).
+pub fn osu_bcast(
+    engine: &mut Engine,
+    sizes: &[u64],
+    iterations: usize,
+    warmup: usize,
+    mut build: impl FnMut(u64, usize) -> crate::collectives::BcastPlan,
+) -> Vec<OsuResult> {
+    let mut out = Vec::with_capacity(sizes.len());
+    for &bytes in sizes {
+        for i in 0..warmup {
+            let bp = build(bytes, i);
+            let _ = engine.execute(&bp.plan);
+        }
+        let mut lat_sum = 0.0f64;
+        let mut lat_min = f64::INFINITY;
+        let mut lat_max = 0.0f64;
+        for i in 0..iterations {
+            let bp = build(bytes, warmup + i);
+            let result = engine.execute(&bp.plan);
+            let us = result.makespan as f64 / 1000.0;
+            lat_sum += us;
+            lat_min = lat_min.min(us);
+            lat_max = lat_max.max(us);
+        }
+        out.push(OsuResult {
+            bytes,
+            latency_us: lat_sum / iterations as f64,
+            min_us: lat_min,
+            max_us: lat_max,
+        });
+    }
+    out
+}
+
+/// Convenience: default root-0 spec builder.
+pub fn spec_for(n_ranks: usize, bytes: u64) -> BcastSpec {
+    BcastSpec::new(0, n_ranks, bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::{self, Algorithm};
+    use crate::comm::Comm;
+    use crate::topology::presets::kesch;
+
+    #[test]
+    fn sweep_produces_monotone_latencies() {
+        let c = kesch(1, 4);
+        let mut comm = Comm::new(&c);
+        let mut engine = Engine::new(&c);
+        let sizes = [4u64, 4 << 10, 4 << 20];
+        let results = osu_bcast(&mut engine, &sizes, 3, 1, |bytes, _| {
+            collectives::plan(
+                &Algorithm::Knomial { k: 2 },
+                &mut comm,
+                &spec_for(4, bytes),
+            )
+        });
+        assert_eq!(results.len(), 3);
+        assert!(results[0].latency_us < results[2].latency_us);
+        // deterministic: min == max == mean
+        for r in &results {
+            assert_eq!(r.min_us, r.max_us);
+        }
+    }
+}

@@ -1,0 +1,169 @@
+//! Figure renderers and headline-ratio extraction.
+//!
+//! Each paper figure is a set of series over a size axis; these helpers
+//! print the same rows the paper plots and compute the "up to N×"
+//! improvement numbers the abstract quotes.
+
+use crate::util::bytes::{format_size, format_us};
+use crate::util::tablefmt::Table;
+
+/// One plotted series: (label, per-size latencies µs).
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub label: String,
+    pub latencies_us: Vec<f64>,
+}
+
+/// A rendered figure: shared size axis + series.
+#[derive(Debug, Clone)]
+pub struct Figure {
+    pub title: String,
+    pub sizes: Vec<u64>,
+    pub series: Vec<Series>,
+}
+
+impl Figure {
+    pub fn new(title: impl Into<String>, sizes: Vec<u64>) -> Figure {
+        Figure {
+            title: title.into(),
+            sizes,
+            series: Vec::new(),
+        }
+    }
+
+    pub fn push_series(&mut self, label: impl Into<String>, latencies_us: Vec<f64>) {
+        assert_eq!(latencies_us.len(), self.sizes.len(), "axis mismatch");
+        self.series.push(Series {
+            label: label.into(),
+            latencies_us,
+        });
+    }
+
+    /// Render as a table (size column + one column per series + ratio of
+    /// first/last series when there are exactly two).
+    pub fn render(&self) -> String {
+        let mut header: Vec<String> = vec!["size".into()];
+        for s in &self.series {
+            header.push(format!("{} (us)", s.label));
+        }
+        let two = self.series.len() == 2;
+        if two {
+            header.push("ratio".into());
+        }
+        let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+        let mut t = Table::new(&header_refs).with_title(self.title.clone());
+        for (i, &size) in self.sizes.iter().enumerate() {
+            let mut row = vec![format_size(size)];
+            for s in &self.series {
+                row.push(format_us(s.latencies_us[i] * 1000.0));
+            }
+            if two {
+                let a = self.series[0].latencies_us[i];
+                let b = self.series[1].latencies_us[i];
+                row.push(if b > 0.0 {
+                    format!("{:.1}x", a / b)
+                } else {
+                    "-".into()
+                });
+            }
+            t.row(row);
+        }
+        t.render()
+    }
+
+    /// Max ratio series[0]/series[1] over sizes ≤ `limit` — the paper's
+    /// "up to N× improvement for small/medium messages" extraction.
+    pub fn max_ratio_below(&self, limit: u64) -> Option<(u64, f64)> {
+        if self.series.len() != 2 {
+            return None;
+        }
+        let mut best: Option<(u64, f64)> = None;
+        for (i, &size) in self.sizes.iter().enumerate() {
+            if size > limit {
+                continue;
+            }
+            let a = self.series[0].latencies_us[i];
+            let b = self.series[1].latencies_us[i];
+            if b <= 0.0 {
+                continue;
+            }
+            let r = a / b;
+            if best.map(|(_, br)| r > br).unwrap_or(true) {
+                best = Some((size, r));
+            }
+        }
+        best
+    }
+
+    /// Ratio at the largest size — the "comparable at large messages"
+    /// check.
+    pub fn ratio_at_max(&self) -> Option<f64> {
+        if self.series.len() != 2 {
+            return None;
+        }
+        let i = self.sizes.len() - 1;
+        let b = self.series[1].latencies_us[i];
+        (b > 0.0).then(|| self.series[0].latencies_us[i] / b)
+    }
+
+    /// Serialise for target/reports/.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut j = Json::obj();
+        j.set("title", self.title.as_str());
+        j.set("sizes", self.sizes.clone());
+        let series: Vec<Json> = self
+            .series
+            .iter()
+            .map(|s| {
+                let mut sj = Json::obj();
+                sj.set("label", s.label.as_str());
+                sj.set("latencies_us", s.latencies_us.clone());
+                sj
+            })
+            .collect();
+        j.set("series", Json::Arr(series));
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fig() -> Figure {
+        let mut f = Figure::new("test", vec![4, 8192, 1 << 20]);
+        f.push_series("NCCL", vec![28.0, 30.0, 150.0]);
+        f.push_series("MV2-GDR-Opt", vec![2.0, 3.0, 140.0]);
+        f
+    }
+
+    #[test]
+    fn ratio_extraction() {
+        let f = fig();
+        let (size, ratio) = f.max_ratio_below(8192).unwrap();
+        assert_eq!(size, 4);
+        assert!((ratio - 14.0).abs() < 0.01);
+        assert!((f.ratio_at_max().unwrap() - 150.0 / 140.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn render_includes_ratio_column() {
+        let s = fig().render();
+        assert!(s.contains("ratio"));
+        assert!(s.contains("14.0x"));
+    }
+
+    #[test]
+    #[should_panic(expected = "axis mismatch")]
+    fn series_length_checked() {
+        let mut f = Figure::new("x", vec![4, 8]);
+        f.push_series("bad", vec![1.0]);
+    }
+
+    #[test]
+    fn json_has_series() {
+        let j = fig().to_json();
+        assert!(j.get("series").is_some());
+    }
+}

@@ -1,0 +1,64 @@
+//! Chain algorithm (§III-A, Eq. 2): each recipient forwards the whole
+//! message to the next rank. `T = (n-1) × (t_s + M/B)`. For rooted
+//! collectives the chain is a logical ring *without* the wrap-around
+//! (paper, §III-A).
+
+use crate::comm::Comm;
+
+use super::traits::{BcastPlan, BcastSpec, FlowEdge};
+
+pub fn plan(comm: &mut Comm, spec: &BcastSpec) -> BcastPlan {
+    let mut plan = crate::netsim::Plan::new();
+    let mut edges = Vec::new();
+    let mut prev: Option<crate::netsim::OpId> = None;
+    for v in 1..spec.n_ranks {
+        let src = spec.unlabel(v - 1);
+        let dst = spec.unlabel(v);
+        // store-and-forward: must hold the whole message before sending on
+        let deps = prev.map(|p| vec![p]).unwrap_or_default();
+        let op = comm.send(&mut plan, src, dst, spec.bytes, deps, Some((dst, 0)));
+        edges.push(FlowEdge {
+            src,
+            dst,
+            chunk: 0,
+            op,
+        });
+        prev = Some(op);
+    }
+    BcastPlan {
+        plan,
+        edges,
+        n_chunks: 1,
+        spec: spec.clone(),
+        algorithm: "chain".into(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::Engine;
+    use crate::topology::presets::flat;
+
+    #[test]
+    fn cost_matches_eq2_on_flat() {
+        let c = flat(6);
+        let mut comm = Comm::new(&c);
+        let mut engine = Engine::new(&c);
+        let spec = BcastSpec::new(0, 6, 4 << 20);
+        let hop = comm.estimate_ns(0, 1, 4 << 20);
+        let bp = plan(&mut comm, &spec);
+        let r = engine.execute(&bp.plan);
+        assert_eq!(r.makespan, 5 * hop); // (n-1) × (t_s + M/B)
+    }
+
+    #[test]
+    fn chain_passes_through_neighbours() {
+        let c = flat(4);
+        let mut comm = Comm::new(&c);
+        let spec = BcastSpec::new(1, 4, 64);
+        let bp = plan(&mut comm, &spec);
+        let pairs: Vec<(usize, usize)> = bp.edges.iter().map(|e| (e.src, e.dst)).collect();
+        assert_eq!(pairs, vec![(1, 2), (2, 3), (3, 0)]);
+    }
+}

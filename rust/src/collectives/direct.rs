@@ -1,0 +1,73 @@
+//! Direct algorithm (§III-A, Eq. 1): a serialized loop of sends from the
+//! root. `T = n × (t_s + M/B)`. Never competitive — kept as the baseline
+//! the paper models first.
+
+use crate::comm::Comm;
+
+use super::traits::{BcastPlan, BcastSpec, FlowEdge};
+
+pub fn plan(comm: &mut Comm, spec: &BcastSpec) -> BcastPlan {
+    let mut plan = crate::netsim::Plan::new();
+    let mut edges = Vec::new();
+    let mut prev: Option<crate::netsim::OpId> = None;
+    for v in 1..spec.n_ranks {
+        let dst = spec.unlabel(v);
+        // blocking MPI_Send loop: each send departs after the previous
+        // completes
+        let deps = prev.map(|p| vec![p]).unwrap_or_default();
+        let op = comm.send(&mut plan, spec.root, dst, spec.bytes, deps, Some((dst, 0)));
+        edges.push(FlowEdge {
+            src: spec.root,
+            dst,
+            chunk: 0,
+            op,
+        });
+        prev = Some(op);
+    }
+    BcastPlan {
+        plan,
+        edges,
+        n_chunks: 1,
+        spec: spec.clone(),
+        algorithm: "direct".into(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::Engine;
+    use crate::topology::presets::flat;
+
+    #[test]
+    fn cost_is_n_minus_one_serial_sends() {
+        let c = flat(5);
+        let mut comm = Comm::new(&c);
+        let mut engine = Engine::new(&c);
+        let spec = BcastSpec::new(0, 5, 1 << 20);
+        let one = comm.estimate_ns(0, 1, 1 << 20);
+        let bp = plan(&mut comm, &spec);
+        let r = engine.execute(&bp.plan);
+        assert_eq!(r.makespan, 4 * one);
+    }
+
+    #[test]
+    fn single_rank_empty_plan() {
+        let c = flat(1);
+        let mut comm = Comm::new(&c);
+        let spec = BcastSpec::new(0, 1, 1024);
+        let bp = plan(&mut comm, &spec);
+        assert!(bp.plan.is_empty());
+    }
+
+    #[test]
+    fn nonzero_root_covers_all() {
+        let c = flat(4);
+        let mut comm = Comm::new(&c);
+        let spec = BcastSpec::new(2, 4, 64);
+        let bp = plan(&mut comm, &spec);
+        let mut dsts: Vec<usize> = bp.edges.iter().map(|e| e.dst).collect();
+        dsts.sort_unstable();
+        assert_eq!(dsts, vec![0, 1, 3]);
+    }
+}

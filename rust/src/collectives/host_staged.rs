@@ -1,0 +1,251 @@
+//! Host-staged k-nomial broadcast (§IV-C, Eq. 6):
+//!
+//! `T = M/B_PCIe + ⌈log_k n⌉ × (t_s + M/B)`
+//!
+//! The root copies GPU→host once, the broadcast runs between *hosts*
+//! (cheap CPU-side sends: shared memory over QPI intranode, host-based IB
+//! internode), and each host fans out to its local GPUs with GDR writes.
+//! This sidesteps the GDR-read bottleneck entirely and — because the
+//! up-front `M/B_PCIe` term is negligible for small `M` — it is the
+//! small/medium-message winner the paper's tuned MV2-GDR-Opt selects.
+
+use std::collections::HashMap;
+
+use crate::comm::Comm;
+use crate::netsim::OpId;
+use crate::topology::DeviceId;
+
+use super::traits::{BcastPlan, BcastSpec, FlowEdge};
+
+/// Host-to-host send startup costs (CPU-initiated, cheaper than
+/// GPU-involved paths).
+const HOST_INTRA_TS_NS: u64 = 600;
+const HOST_INTER_EAGER_TS_NS: u64 = 1_600;
+const HOST_INTER_RNDV_TS_NS: u64 = 4_200;
+/// GDR H2D fan-out write: end-to-end latency vs back-to-back issue rate.
+const GDR_WRITE_TS_NS: u64 = 1_300;
+const GDR_WRITE_ISSUE_NS: u64 = 250;
+
+pub fn plan(comm: &mut Comm, spec: &BcastSpec, k: usize) -> BcastPlan {
+    assert!(k >= 2);
+    let cluster = comm.cluster();
+    let mut plan = crate::netsim::Plan::new();
+    let mut edges = Vec::new();
+    if spec.n_ranks == 1 {
+        return BcastPlan {
+            plan,
+            edges,
+            n_chunks: 1,
+            spec: spec.clone(),
+            algorithm: format!("host-staged-knomial(k={k})"),
+        };
+    }
+
+    // group ranks by staging host, in rank order; root's host first
+    let mut host_of_rank: Vec<DeviceId> = Vec::with_capacity(spec.n_ranks);
+    for r in 0..spec.n_ranks {
+        host_of_rank.push(
+            cluster
+                .staging_host(cluster.rank_device(r))
+                .expect("staging host"),
+        );
+    }
+    let root_host = host_of_rank[spec.root];
+    let mut hosts: Vec<DeviceId> = Vec::new();
+    let mut ranks_of_host: HashMap<DeviceId, Vec<usize>> = HashMap::new();
+    for r in 0..spec.n_ranks {
+        let h = host_of_rank[(r + spec.root) % spec.n_ranks];
+        if !hosts.contains(&h) {
+            hosts.push(h);
+        }
+    }
+    for r in 0..spec.n_ranks {
+        ranks_of_host.entry(host_of_rank[r]).or_default().push(r);
+    }
+    debug_assert_eq!(hosts[0], root_host);
+
+    // ---- stage 1: root GPU -> its host (the M/B_PCIe term) ---------------
+    let root_dev = cluster.rank_device(spec.root);
+    let d2h = comm.raw_transfer(
+        &mut plan,
+        root_dev,
+        root_host,
+        spec.bytes,
+        comm.params().staging_copy_overhead_ns,
+        vec![],
+        None,
+    );
+
+    // ---- stage 2: k-nomial over hosts -------------------------------------
+    // have[i] = op after which hosts[i] holds the data
+    let mut have: Vec<Option<OpId>> = vec![None; hosts.len()];
+    have[0] = Some(d2h);
+    knomial_hosts(comm, &mut plan, &hosts, &mut have, k, 0, hosts.len(), spec.bytes);
+
+    // ---- stage 3: each host fans out to its GPUs (GDR write) -------------
+    for (i, &host) in hosts.iter().enumerate() {
+        let have_op = have[i].expect("host missed data");
+        for &r in &ranks_of_host[&host] {
+            if r == spec.root {
+                continue;
+            }
+            let gpu = cluster.rank_device(r);
+            let op = comm.raw_transfer_issue(
+                &mut plan,
+                host,
+                gpu,
+                spec.bytes,
+                GDR_WRITE_TS_NS,
+                GDR_WRITE_ISSUE_NS,
+                vec![have_op],
+                Some((r, 0)),
+            );
+            // attribute the rank-level edge to the nearest rank upstream:
+            // the root (data origin) — host hops are transport detail
+            edges.push(FlowEdge {
+                src: spec.root,
+                dst: r,
+                chunk: 0,
+                op,
+            });
+        }
+    }
+
+    BcastPlan {
+        plan,
+        edges,
+        n_chunks: 1,
+        spec: spec.clone(),
+        algorithm: format!("host-staged-knomial(k={k})"),
+    }
+}
+
+/// K-nomial expansion over the host list (indices into `hosts`).
+#[allow(clippy::too_many_arguments)]
+fn knomial_hosts(
+    comm: &mut Comm,
+    plan: &mut crate::netsim::Plan,
+    hosts: &[DeviceId],
+    have: &mut [Option<OpId>],
+    k: usize,
+    lo: usize,
+    size: usize,
+    bytes: u64,
+) {
+    if size <= 1 {
+        return;
+    }
+    let sub = size.div_ceil(k);
+    let mut cursor = lo;
+    let mut ranges: Vec<(usize, usize)> = Vec::new();
+    while cursor < lo + size {
+        let len = sub.min(lo + size - cursor);
+        ranges.push((cursor, len));
+        cursor += len;
+    }
+    let cluster = comm.cluster();
+    for &(start, _len) in ranges.iter().skip(1) {
+        let src = hosts[lo];
+        let dst = hosts[start];
+        let ts = if cluster.same_node(src, dst) {
+            HOST_INTRA_TS_NS
+        } else if bytes <= comm.params().eager_threshold {
+            HOST_INTER_EAGER_TS_NS
+        } else {
+            HOST_INTER_RNDV_TS_NS
+        };
+        // serialization across the head's sends comes from its shared
+        // egress link + creation order (see collectives::knomial)
+        let deps = have[lo].map(|p| vec![p]).unwrap_or_default();
+        let op = comm.raw_transfer(plan, src, dst, bytes, ts, deps, None);
+        have[start] = Some(op);
+    }
+    let (_, head_len) = ranges[0];
+    knomial_hosts(comm, plan, hosts, have, k, lo, head_len, bytes);
+    for &(start, len) in ranges.iter().skip(1) {
+        knomial_hosts(comm, plan, hosts, have, k, start, len, bytes);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::Engine;
+    use crate::topology::presets::kesch;
+
+    #[test]
+    fn covers_all_ranks_intranode() {
+        let c = kesch(1, 16);
+        let mut comm = Comm::new(&c);
+        let mut engine = Engine::new(&c);
+        let spec = BcastSpec::new(0, 16, 4);
+        let bp = plan(&mut comm, &spec, 2);
+        let result = engine.execute(&bp.plan);
+        for r in 1..16 {
+            assert!(result.delivery_time(&bp.plan, r, 0).is_some(), "rank {r}");
+        }
+    }
+
+    #[test]
+    fn small_message_beats_ipc_binomial_at_16_gpus() {
+        // the §IV-C claim: for small M the staged design's M/B_PCIe cost
+        // vanishes and host-side fan-out wins over GPU-to-GPU trees
+        let c = kesch(1, 16);
+        let mut comm = Comm::new(&c);
+        let mut engine = Engine::new(&c);
+        let spec = BcastSpec::new(0, 16, 4);
+        let t_staged = engine.execute(&plan(&mut comm, &spec, 2).plan).makespan;
+        let t_knomial = engine
+            .execute(&super::super::knomial::plan(&mut comm, &spec, 2).plan)
+            .makespan;
+        assert!(
+            t_staged < t_knomial,
+            "staged {t_staged} vs knomial {t_knomial}"
+        );
+    }
+
+    #[test]
+    fn large_message_pays_pcie_staging() {
+        // for very large M the M/B_PCIe term dominates and direct designs
+        // win — exactly why the tuner switches algorithms
+        let c = kesch(1, 4);
+        let mut comm = Comm::new(&c);
+        let mut engine = Engine::new(&c);
+        let spec = BcastSpec::new(0, 4, 128 << 20);
+        let t_staged = engine.execute(&plan(&mut comm, &spec, 2).plan).makespan;
+        let t_pipe = engine
+            .execute(
+                &super::super::pipelined_chain::plan(&mut comm, &spec, 4 << 20).plan,
+            )
+            .makespan;
+        assert!(t_pipe < t_staged, "pipe {t_pipe} vs staged {t_staged}");
+    }
+
+    #[test]
+    fn internode_hosts_participate() {
+        let c = kesch(2, 8);
+        let mut comm = Comm::new(&c);
+        let mut engine = Engine::new(&c);
+        let spec = BcastSpec::new(0, 16, 8192);
+        let bp = plan(&mut comm, &spec, 4);
+        let result = engine.execute(&bp.plan);
+        for r in 1..16 {
+            assert!(result.delivery_time(&bp.plan, r, 0).is_some(), "rank {r}");
+        }
+    }
+
+    #[test]
+    fn nonzero_root_works() {
+        let c = kesch(2, 4);
+        let mut comm = Comm::new(&c);
+        let mut engine = Engine::new(&c);
+        let spec = BcastSpec::new(5, 8, 1024);
+        let bp = plan(&mut comm, &spec, 2);
+        let result = engine.execute(&bp.plan);
+        for r in 0..8 {
+            if r != 5 {
+                assert!(result.delivery_time(&bp.plan, r, 0).is_some());
+            }
+        }
+    }
+}

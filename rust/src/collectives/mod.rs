@@ -1,0 +1,49 @@
+//! Broadcast algorithms (§III and §IV of the paper).
+//!
+//! Every algorithm builds a [`BcastPlan`] — a netsim op DAG plus rank-level
+//! data-flow edges — from a [`Comm`] point-to-point engine. The paper's
+//! contribution, the **pipelined chain** (§IV-B, Eq. 5), lives in
+//! [`pipelined_chain`]; the classical baselines of §III-A are
+//! [`direct`] (Eq. 1), [`chain`] (Eq. 2), [`knomial`] (Eq. 3, binomial at
+//! k=2) and [`scatter_allgather`] (Eq. 4); the GPU-specific host-staged
+//! k-nomial of §IV-C is [`host_staged`] (Eq. 6).
+//!
+//! [`validate`] checks the causality and delivery invariants every plan
+//! must satisfy; the property tests in `rust/tests/` lean on it.
+
+pub mod chain;
+pub mod direct;
+pub mod host_staged;
+pub mod knomial;
+pub mod pipelined_chain;
+pub mod scatter_allgather;
+pub mod traits;
+pub mod validate;
+
+pub use traits::{Algorithm, BcastPlan, BcastSpec, FlowEdge};
+
+use crate::comm::Comm;
+
+/// Build the plan for `algo` over all cluster ranks.
+pub fn plan(algo: &Algorithm, comm: &mut Comm, spec: &BcastSpec) -> BcastPlan {
+    match algo {
+        Algorithm::Direct => direct::plan(comm, spec),
+        Algorithm::Chain => chain::plan(comm, spec),
+        Algorithm::PipelinedChain { chunk } => pipelined_chain::plan(comm, spec, *chunk),
+        Algorithm::Knomial { k } => knomial::plan(comm, spec, *k),
+        Algorithm::ScatterRingAllgather => scatter_allgather::plan(comm, spec),
+        Algorithm::HostStagedKnomial { k } => host_staged::plan(comm, spec, *k),
+    }
+}
+
+/// Simulated broadcast latency (max over rank completions), ns.
+pub fn latency_ns(
+    algo: &Algorithm,
+    comm: &mut Comm,
+    engine: &mut crate::netsim::Engine,
+    spec: &BcastSpec,
+) -> u64 {
+    let bp = plan(algo, comm, spec);
+    let result = engine.execute(&bp.plan);
+    result.makespan
+}

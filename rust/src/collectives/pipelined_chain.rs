@@ -1,0 +1,137 @@
+//! **The paper's contribution** (§IV-B, Eq. 5): the CUDA-aware pipelined
+//! chain design for `MPI_Bcast`.
+//!
+//! The root chunks the message and pushes chunks to its right neighbour;
+//! every non-root, non-tail process forwards each chunk onward as soon as
+//! it arrives. With chunk size `C`:
+//!
+//! `T = (M/C + n - 2) × (t_s + C/B)`
+//!
+//! Chunk-size selection is non-trivial (paper §IV-B) and is owned by the
+//! tuning framework ([`crate::tuning`]); this module takes `C` as input.
+//! Per §IV-C the pipelined chain does *not* host-stage: it rides CUDA IPC
+//! intranode and GDR internode — which is exactly what [`Comm::send`]
+//! resolves per hop.
+
+use crate::comm::{chunk_sizes, Comm};
+use crate::netsim::OpId;
+
+use super::traits::{BcastPlan, BcastSpec, FlowEdge};
+
+pub fn plan(comm: &mut Comm, spec: &BcastSpec, chunk: u64) -> BcastPlan {
+    let mut plan = crate::netsim::Plan::new();
+    let mut edges = Vec::new();
+    let chunks = chunk_sizes(spec.bytes, chunk);
+    // recv_op[v][c] = op that delivered chunk c to relabeled rank v
+    let n = spec.n_ranks;
+    let mut recv_op: Vec<Vec<Option<OpId>>> = vec![vec![None; chunks.len()]; n];
+    for (c, &cbytes) in chunks.iter().enumerate() {
+        for v in 1..n {
+            let src = spec.unlabel(v - 1);
+            let dst = spec.unlabel(v);
+            // forward chunk c as soon as it arrived at v-1 (root always
+            // has it); link FIFO order serialises chunks on the wire
+            let deps = match recv_op[v - 1][c] {
+                Some(op) => vec![op],
+                None => Vec::new(),
+            };
+            let op = comm.send(&mut plan, src, dst, cbytes, deps, Some((dst, c)));
+            recv_op[v][c] = Some(op);
+            edges.push(FlowEdge {
+                src,
+                dst,
+                chunk: c,
+                op,
+            });
+        }
+    }
+    BcastPlan {
+        plan,
+        edges,
+        n_chunks: chunks.len(),
+        spec: spec.clone(),
+        algorithm: format!(
+            "pipelined-chain(C={})",
+            crate::util::bytes::format_size(chunk)
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::Engine;
+    use crate::topology::presets::flat;
+
+    #[test]
+    fn matches_eq5_on_flat() {
+        // T = (M/C + n - 2) × (t_s + C/B) on the idealised fabric
+        let c = flat(8);
+        let mut comm = Comm::new(&c);
+        let mut engine = Engine::new(&c);
+        let m: u64 = 32 << 20;
+        let chunk: u64 = 4 << 20;
+        let spec = BcastSpec::new(0, 8, m);
+        let per_chunk = comm.estimate_ns(0, 1, chunk);
+        let bp = plan(&mut comm, &spec, chunk);
+        let r = engine.execute(&bp.plan);
+        let steps = (m / chunk) + 8 - 2;
+        assert_eq!(r.makespan, steps * per_chunk);
+    }
+
+    #[test]
+    fn beats_plain_chain_for_large_messages() {
+        let c = flat(8);
+        let mut comm = Comm::new(&c);
+        let mut engine = Engine::new(&c);
+        let spec = BcastSpec::new(0, 8, 64 << 20);
+        let plain = super::super::chain::plan(&mut comm, &spec);
+        let t_plain = engine.execute(&plain.plan).makespan;
+        let piped = plan(&mut comm, &spec, 2 << 20);
+        let t_piped = engine.execute(&piped.plan).makespan;
+        assert!(
+            t_piped < t_plain / 3,
+            "pipelining must win big: {t_piped} vs {t_plain}"
+        );
+    }
+
+    #[test]
+    fn chunk_count_accounting() {
+        let c = flat(3);
+        let mut comm = Comm::new(&c);
+        let spec = BcastSpec::new(0, 3, 10 << 20);
+        let bp = plan(&mut comm, &spec, 4 << 20);
+        assert_eq!(bp.n_chunks, 3); // 4M + 4M + 2M
+        assert_eq!(bp.edges.len(), 3 * 2);
+    }
+
+    #[test]
+    fn degenerate_chunk_equals_chain() {
+        let c = flat(5);
+        let mut comm = Comm::new(&c);
+        let mut engine = Engine::new(&c);
+        let spec = BcastSpec::new(0, 5, 1 << 20);
+        let chain = super::super::chain::plan(&mut comm, &spec);
+        let t_chain = engine.execute(&chain.plan).makespan;
+        let piped = plan(&mut comm, &spec, 1 << 20); // C = M
+        let t_piped = engine.execute(&piped.plan).makespan;
+        assert_eq!(t_chain, t_piped);
+    }
+
+    #[test]
+    fn two_ranks_pipelines_root_link() {
+        // with n=2 the chain is a single hop; pipelining only adds
+        // overhead per chunk — time = (M/C) × (t_s + C/B)
+        let c = flat(2);
+        let mut comm = Comm::new(&c);
+        let mut engine = Engine::new(&c);
+        let m = 8 << 20;
+        let chunk = 1 << 20;
+        let spec = BcastSpec::new(0, 2, m);
+        let per_chunk = comm.estimate_ns(0, 1, chunk);
+        let bp = plan(&mut comm, &spec, chunk);
+        let r = engine.execute(&bp.plan);
+        // chunks serialise on the single link; each adds t_s + C/B
+        assert_eq!(r.makespan, (m / chunk) * per_chunk);
+    }
+}

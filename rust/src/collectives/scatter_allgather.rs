@@ -1,0 +1,214 @@
+//! Scatter-Allgather algorithm (§III-A, Eq. 4): binomial-tree scatter of
+//! `n` message parts followed by a ring allgather — the bandwidth-optimal
+//! broadcast for large `M` (van de Geijn / MPICH large-message scheme):
+//!
+//! `T = (⌈log₂ n⌉ + n − 1) × t_s + 2 × (n−1)/n × M/B`
+
+use crate::comm::{chunk::equal_parts, Comm};
+use crate::netsim::OpId;
+
+use super::traits::{BcastPlan, BcastSpec, FlowEdge};
+
+pub fn plan(comm: &mut Comm, spec: &BcastSpec) -> BcastPlan {
+    let n = spec.n_ranks;
+    let mut plan = crate::netsim::Plan::new();
+    let mut edges = Vec::new();
+    if n == 1 {
+        return BcastPlan {
+            plan,
+            edges,
+            n_chunks: 1,
+            spec: spec.clone(),
+            algorithm: "scatter-ring-allgather".into(),
+        };
+    }
+    let parts = equal_parts(spec.bytes, n);
+    // part_at[v][p] = op after which relabeled rank v holds part p
+    let mut part_at: Vec<Vec<Option<OpId>>> = vec![vec![None; n]; n];
+
+    // ---- phase 1: binomial scatter (recursive halving) -------------------
+    // holder v owns parts [v, v+size); sends the upper half to v+half
+    fn scatter(
+        comm: &mut Comm,
+        plan: &mut crate::netsim::Plan,
+        edges: &mut Vec<FlowEdge>,
+        spec: &BcastSpec,
+        parts: &[u64],
+        part_at: &mut [Vec<Option<OpId>>],
+        lo: usize,
+        size: usize,
+        have: Option<OpId>,
+    ) {
+        if size <= 1 {
+            return;
+        }
+        let half = size / 2;
+        let upper_lo = lo + size - half; // upper `half` parts move
+        let bytes: u64 = parts[upper_lo..lo + size].iter().sum();
+        let src = spec.unlabel(lo);
+        let dst = spec.unlabel(upper_lo);
+        let deps = have.map(|p| vec![p]).unwrap_or_default();
+        // the head of the upper range keeps part `upper_lo` permanently —
+        // that is its *delivery*; the rest of the range is custody it
+        // forwards deeper into the scatter tree
+        let op = comm.send(plan, src, dst, bytes, deps, Some((dst, upper_lo)));
+        // one flow edge per part carried (custody included) so the
+        // validator can track possession precisely
+        for p in upper_lo..lo + size {
+            part_at[upper_lo][p] = Some(op);
+            edges.push(FlowEdge {
+                src,
+                dst,
+                chunk: p,
+                op,
+            });
+        }
+        scatter(comm, plan, edges, spec, parts, part_at, lo, size - half, have);
+        scatter(
+            comm,
+            plan,
+            edges,
+            spec,
+            parts,
+            part_at,
+            upper_lo,
+            half,
+            Some(op),
+        );
+    }
+    scatter(
+        comm, &mut plan, &mut edges, spec, &parts, &mut part_at, 0, n, None,
+    );
+
+    // ---- phase 2: ring allgather -----------------------------------------
+    // After scatter, rank v's working buffer holds exactly part v (root
+    // holds everything); intermediate scatter custody is not reused.
+    let mut owned: Vec<Vec<Option<OpId>>> = vec![vec![None; n]; n];
+    for v in 1..n {
+        owned[v][v] = part_at[v][v];
+        debug_assert!(owned[v][v].is_some(), "scatter left rank {v} empty");
+    }
+    // step t: rank v sends part (v - t) mod n to (v+1) mod n
+    for t in 0..n - 1 {
+        let mut new_ops: Vec<(usize, usize, OpId)> = Vec::new();
+        for v in 0..n {
+            let part = (v + n - t) % n;
+            let dst_v = (v + 1) % n;
+            let src = spec.unlabel(v);
+            let dst = spec.unlabel(dst_v);
+            // root (v = 0) owns every part from the start: no dependency
+            let deps = match owned[v][part] {
+                Some(op) => vec![op],
+                None => {
+                    assert!(v == 0, "ring allgather: rank {v} missing part {part}");
+                    Vec::new()
+                }
+            };
+            let op = comm.send(&mut plan, src, dst, parts[part], deps, Some((dst, part)));
+            edges.push(FlowEdge {
+                src,
+                dst,
+                chunk: part,
+                op,
+            });
+            new_ops.push((dst_v, part, op));
+        }
+        for (dst_v, part, op) in new_ops {
+            // root never *needs* arrivals; keep its sends dependency-free
+            if dst_v != 0 {
+                owned[dst_v][part] = Some(op);
+            }
+        }
+    }
+
+    BcastPlan {
+        plan,
+        edges,
+        n_chunks: n,
+        spec: spec.clone(),
+        algorithm: "scatter-ring-allgather".into(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::Engine;
+    use crate::topology::presets::flat;
+
+    #[test]
+    fn bandwidth_optimal_for_large_messages() {
+        let c = flat(8);
+        let mut comm = Comm::new(&c);
+        let mut engine = Engine::new(&c);
+        let m: u64 = 64 << 20;
+        let spec = BcastSpec::new(0, 8, m);
+        let t_sag = engine.execute(&plan(&mut comm, &spec).plan).makespan;
+        let t_chain = engine
+            .execute(&super::super::chain::plan(&mut comm, &spec).plan)
+            .makespan;
+        // Eq.4 moves ~2M/B vs chain's (n-1)M/B — must be much faster
+        assert!(t_sag < t_chain / 2, "{t_sag} vs {t_chain}");
+    }
+
+    #[test]
+    fn every_rank_gets_every_part() {
+        let c = flat(6);
+        let mut comm = Comm::new(&c);
+        let mut engine = Engine::new(&c);
+        let spec = BcastSpec::new(2, 6, 6000);
+        let bp = plan(&mut comm, &spec);
+        let result = engine.execute(&bp.plan);
+        for rank in 0..6 {
+            if rank == 2 {
+                continue;
+            }
+            for part in 0..6 {
+                assert!(
+                    result.delivery_time(&bp.plan, rank, part).is_some(),
+                    "rank {rank} missing part {part}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn total_traffic_matches_binomial_scatter_plus_ring() {
+        let c = flat(8);
+        let mut comm = Comm::new(&c);
+        let m: u64 = 8 << 20;
+        let spec = BcastSpec::new(0, 8, m);
+        let bp = plan(&mut comm, &spec);
+        // binomial scatter *traffic* is (M/2)·log₂n byte-hops (each level
+        // forwards half the range); the ring allgather has every rank
+        // sending M/n at each of the n-1 steps: (n-1)·M total
+        let total = bp.plan.total_bytes();
+        let scatter = m / 2 * 3;
+        let ring = (8 - 1) * m;
+        assert_eq!(total, scatter + ring);
+    }
+
+    #[test]
+    fn single_rank_noop() {
+        let c = flat(1);
+        let mut comm = Comm::new(&c);
+        let spec = BcastSpec::new(0, 1, 100);
+        let bp = plan(&mut comm, &spec);
+        assert!(bp.plan.is_empty());
+    }
+
+    #[test]
+    fn odd_rank_count_works() {
+        let c = flat(7);
+        let mut comm = Comm::new(&c);
+        let mut engine = Engine::new(&c);
+        let spec = BcastSpec::new(0, 7, 7013); // deliberately non-divisible
+        let bp = plan(&mut comm, &spec);
+        let result = engine.execute(&bp.plan);
+        for rank in 1..7 {
+            for part in 0..7 {
+                assert!(result.delivery_time(&bp.plan, rank, part).is_some());
+            }
+        }
+    }
+}

@@ -1,0 +1,135 @@
+//! Common types for broadcast algorithms.
+
+use crate::netsim::{OpId, Plan};
+
+/// What to broadcast.
+#[derive(Debug, Clone)]
+pub struct BcastSpec {
+    /// Root rank.
+    pub root: usize,
+    /// Number of participating ranks (0..n, must match cluster GPUs).
+    pub n_ranks: usize,
+    /// Message size in bytes.
+    pub bytes: u64,
+}
+
+impl BcastSpec {
+    pub fn new(root: usize, n_ranks: usize, bytes: u64) -> BcastSpec {
+        assert!(n_ranks >= 1, "need at least one rank");
+        assert!(root < n_ranks, "root out of range");
+        BcastSpec {
+            root,
+            n_ranks,
+            bytes,
+        }
+    }
+
+    /// Relabel rank `r` so the root is 0 (the usual trick for rooted
+    /// collectives).
+    #[inline]
+    pub fn relabel(&self, r: usize) -> usize {
+        (r + self.n_ranks - self.root) % self.n_ranks
+    }
+
+    /// Inverse of [`Self::relabel`].
+    #[inline]
+    pub fn unlabel(&self, v: usize) -> usize {
+        (v + self.root) % self.n_ranks
+    }
+}
+
+/// A rank-level data-flow edge: "src sent chunk to dst; the final netsim
+/// op of that send is `op`". Used by [`super::validate`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FlowEdge {
+    pub src: usize,
+    pub dst: usize,
+    pub chunk: usize,
+    pub op: OpId,
+}
+
+/// A built broadcast: ops + flow edges + chunk accounting.
+#[derive(Debug, Clone)]
+pub struct BcastPlan {
+    pub plan: Plan,
+    pub edges: Vec<FlowEdge>,
+    pub n_chunks: usize,
+    pub spec: BcastSpec,
+    pub algorithm: String,
+}
+
+/// The algorithm menu (what the tuning framework selects over).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Algorithm {
+    /// Serialized root-sends-to-all loop (Eq. 1). Never wins; baseline.
+    Direct,
+    /// Store-and-forward chain (Eq. 2).
+    Chain,
+    /// The paper's contribution: chunked, pipelined chain (Eq. 5).
+    PipelinedChain { chunk: u64 },
+    /// K-nomial tree (Eq. 3); binomial at k = 2.
+    Knomial { k: usize },
+    /// Binomial scatter + ring allgather (Eq. 4) — bandwidth-optimal for
+    /// large M.
+    ScatterRingAllgather,
+    /// Host-staged k-nomial (Eq. 6) — the GPU-specific small-message
+    /// optimisation of §IV-C.
+    HostStagedKnomial { k: usize },
+}
+
+impl Algorithm {
+    pub fn name(&self) -> String {
+        match self {
+            Algorithm::Direct => "direct".into(),
+            Algorithm::Chain => "chain".into(),
+            Algorithm::PipelinedChain { chunk } => {
+                format!("pipelined-chain(C={})", crate::util::bytes::format_size(*chunk))
+            }
+            Algorithm::Knomial { k } => format!("knomial(k={k})"),
+            Algorithm::ScatterRingAllgather => "scatter-ring-allgather".into(),
+            Algorithm::HostStagedKnomial { k } => format!("host-staged-knomial(k={k})"),
+        }
+    }
+
+    /// Stable identifier without parameters (tuning-table keys).
+    pub fn family(&self) -> &'static str {
+        match self {
+            Algorithm::Direct => "direct",
+            Algorithm::Chain => "chain",
+            Algorithm::PipelinedChain { .. } => "pipelined-chain",
+            Algorithm::Knomial { .. } => "knomial",
+            Algorithm::ScatterRingAllgather => "scatter-ring-allgather",
+            Algorithm::HostStagedKnomial { .. } => "host-staged-knomial",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relabel_roundtrip() {
+        let spec = BcastSpec::new(3, 8, 100);
+        for r in 0..8 {
+            assert_eq!(spec.unlabel(spec.relabel(r)), r);
+        }
+        assert_eq!(spec.relabel(3), 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn root_out_of_range_panics() {
+        BcastSpec::new(8, 8, 1);
+    }
+
+    #[test]
+    fn algorithm_names() {
+        assert_eq!(Algorithm::Knomial { k: 2 }.name(), "knomial(k=2)");
+        assert_eq!(
+            Algorithm::PipelinedChain { chunk: 1 << 20 }.name(),
+            "pipelined-chain(C=1M)"
+        );
+        assert_eq!(Algorithm::PipelinedChain { chunk: 4 }.family(), "pipelined-chain");
+    }
+}

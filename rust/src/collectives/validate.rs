@@ -1,0 +1,178 @@
+//! Broadcast-plan invariants.
+//!
+//! Every algorithm must produce a plan where (1) each non-root rank is
+//! *delivered* every chunk exactly once, and (2) data flows causally: no
+//! rank forwards a chunk before the simulator says it arrived. These are
+//! the invariants the property tests in `rust/tests/` sweep across random
+//! topologies, roots, sizes and algorithms.
+
+use std::collections::HashMap;
+
+use crate::netsim::{Engine, ExecResult};
+
+use super::traits::BcastPlan;
+
+/// Validate a plan against an execution of it.
+///
+/// Checks:
+/// * coverage — every (non-root rank, chunk) has a labelled delivery;
+/// * causality — each flow edge's op *starts* no earlier than the
+///   delivery of that chunk at the edge's source rank (the root owns all
+///   chunks at t=0);
+/// * uniqueness — no two labelled ops deliver the same (rank, chunk).
+pub fn validate(bp: &BcastPlan, result: &ExecResult) -> Result<(), String> {
+    let spec = &bp.spec;
+
+    // uniqueness + coverage from labels
+    let mut seen: HashMap<(usize, usize), usize> = HashMap::new();
+    for (id, op) in bp.plan.ops.iter().enumerate() {
+        if let Some((rank, chunk)) = op.label {
+            if rank >= spec.n_ranks {
+                return Err(format!("delivery to out-of-range rank {rank}"));
+            }
+            if chunk >= bp.n_chunks {
+                return Err(format!("delivery of out-of-range chunk {chunk}"));
+            }
+            if let Some(prev) = seen.insert((rank, chunk), id) {
+                return Err(format!(
+                    "duplicate delivery of chunk {chunk} to rank {rank} (ops {prev} and {id})"
+                ));
+            }
+        }
+    }
+    for rank in 0..spec.n_ranks {
+        if rank == spec.root {
+            continue;
+        }
+        for chunk in 0..bp.n_chunks {
+            if !seen.contains_key(&(rank, chunk)) {
+                return Err(format!("rank {rank} never receives chunk {chunk}"));
+            }
+        }
+    }
+
+    // possession: when each rank first holds each chunk (via *any* flow
+    // edge, including scatter custody that labels don't record)
+    let mut possession: HashMap<(usize, usize), u64> = HashMap::new();
+    for edge in &bp.edges {
+        let t = result.done[edge.op];
+        possession
+            .entry((edge.dst, edge.chunk))
+            .and_modify(|v| *v = (*v).min(t))
+            .or_insert(t);
+    }
+
+    // causality over flow edges
+    for edge in &bp.edges {
+        if edge.src == spec.root {
+            continue; // root owns everything at t=0
+        }
+        let have_at = match possession.get(&(edge.src, edge.chunk)) {
+            Some(&t) => t,
+            None => {
+                return Err(format!(
+                    "edge {} -> {} forwards chunk {} the source never received",
+                    edge.src, edge.dst, edge.chunk
+                ))
+            }
+        };
+        let starts = result.start[edge.op];
+        if starts < have_at {
+            return Err(format!(
+                "causality violation: rank {} forwards chunk {} at {}ns but receives it at {}ns",
+                edge.src, edge.chunk, starts, have_at
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Convenience: plan + execute + validate in one call.
+pub fn check_algorithm(
+    algo: &super::Algorithm,
+    comm: &mut crate::comm::Comm,
+    engine: &mut Engine,
+    spec: &super::BcastSpec,
+) -> Result<u64, String> {
+    let bp = super::plan(algo, comm, spec);
+    let result = engine.execute(&bp.plan);
+    validate(&bp, &result)?;
+    Ok(result.makespan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::{Algorithm, BcastSpec};
+    use crate::comm::Comm;
+    use crate::topology::presets::{flat, kesch};
+
+    fn all_algorithms() -> Vec<Algorithm> {
+        vec![
+            Algorithm::Direct,
+            Algorithm::Chain,
+            Algorithm::PipelinedChain { chunk: 64 << 10 },
+            Algorithm::Knomial { k: 2 },
+            Algorithm::Knomial { k: 4 },
+            Algorithm::ScatterRingAllgather,
+            Algorithm::HostStagedKnomial { k: 2 },
+        ]
+    }
+
+    #[test]
+    fn all_algorithms_valid_on_flat() {
+        let c = flat(8);
+        let mut comm = Comm::new(&c);
+        let mut engine = Engine::new(&c);
+        for algo in all_algorithms() {
+            for root in [0, 3] {
+                for bytes in [4u64, 8192, 1 << 20] {
+                    let spec = BcastSpec::new(root, 8, bytes);
+                    check_algorithm(&algo, &mut comm, &mut engine, &spec)
+                        .unwrap_or_else(|e| panic!("{}: {e}", algo.name()));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn all_algorithms_valid_on_kesch_multinode() {
+        let c = kesch(2, 8);
+        let mut comm = Comm::new(&c);
+        let mut engine = Engine::new(&c);
+        for algo in all_algorithms() {
+            let spec = BcastSpec::new(0, 16, 256 << 10);
+            check_algorithm(&algo, &mut comm, &mut engine, &spec)
+                .unwrap_or_else(|e| panic!("{}: {e}", algo.name()));
+        }
+    }
+
+    #[test]
+    fn missing_delivery_detected() {
+        let c = flat(4);
+        let mut comm = Comm::new(&c);
+        let mut engine = Engine::new(&c);
+        let spec = BcastSpec::new(0, 4, 1024);
+        let mut bp = crate::collectives::chain::plan(&mut comm, &spec);
+        // sabotage: drop the final edge's label
+        let last = bp.plan.ops.len() - 1;
+        bp.plan.ops[last].label = None;
+        let result = engine.execute(&bp.plan);
+        assert!(validate(&bp, &result).is_err());
+    }
+
+    #[test]
+    fn causality_violation_detected() {
+        let c = flat(4);
+        let mut comm = Comm::new(&c);
+        let mut engine = Engine::new(&c);
+        let spec = BcastSpec::new(0, 4, 1 << 20);
+        let mut bp = crate::collectives::chain::plan(&mut comm, &spec);
+        // sabotage: remove the dependency of the second hop so rank 1
+        // "forwards" before receiving
+        bp.plan.ops[1].deps.clear();
+        let result = engine.execute(&bp.plan);
+        let err = validate(&bp, &result).unwrap_err();
+        assert!(err.contains("causality"), "{err}");
+    }
+}

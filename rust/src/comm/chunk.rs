@@ -1,0 +1,67 @@
+//! Message chunking for pipelined transfers.
+
+/// Split `total` bytes into chunks of at most `chunk` bytes (last chunk
+/// carries the remainder). `chunk == 0` or `chunk >= total` yields one
+/// chunk.
+pub fn chunk_sizes(total: u64, chunk: u64) -> Vec<u64> {
+    if total == 0 {
+        return vec![0];
+    }
+    if chunk == 0 || chunk >= total {
+        return vec![total];
+    }
+    let full = (total / chunk) as usize;
+    let rem = total % chunk;
+    let mut out = vec![chunk; full];
+    if rem > 0 {
+        out.push(rem);
+    }
+    out
+}
+
+/// Split `total` into exactly `parts` near-equal pieces (scatter-allgather
+/// partitioning). Earlier parts get the extra bytes.
+pub fn equal_parts(total: u64, parts: usize) -> Vec<u64> {
+    assert!(parts > 0);
+    let base = total / parts as u64;
+    let extra = (total % parts as u64) as usize;
+    (0..parts)
+        .map(|i| base + if i < extra { 1 } else { 0 })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_cover_total() {
+        for (total, chunk) in [(100u64, 30u64), (1 << 20, 64 << 10), (7, 7), (7, 100), (5, 0)] {
+            let cs = chunk_sizes(total, chunk);
+            assert_eq!(cs.iter().sum::<u64>(), total);
+            if chunk > 0 {
+                assert!(cs.iter().all(|&c| c <= chunk.max(total)));
+            }
+        }
+    }
+
+    #[test]
+    fn zero_total_one_empty_chunk() {
+        assert_eq!(chunk_sizes(0, 64), vec![0]);
+    }
+
+    #[test]
+    fn equal_parts_cover_and_balance() {
+        let ps = equal_parts(10, 3);
+        assert_eq!(ps, vec![4, 3, 3]);
+        assert_eq!(ps.iter().sum::<u64>(), 10);
+        let ps = equal_parts(0, 4);
+        assert_eq!(ps.iter().sum::<u64>(), 0);
+    }
+
+    #[test]
+    fn exact_division() {
+        assert_eq!(chunk_sizes(1 << 20, 256 << 10).len(), 4);
+        assert_eq!(equal_parts(1 << 20, 4), vec![256 << 10; 4]);
+    }
+}

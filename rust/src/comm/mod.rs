@@ -1,0 +1,20 @@
+//! The CUDA-aware point-to-point engine.
+//!
+//! A CUDA-aware MPI runtime's collective performance is dominated by
+//! *which mechanism* each point-to-point transfer uses (§II-C of the
+//! paper): CUDA IPC under a PLX switch, GDR writes over IB, SGL-based
+//! eager sends for small internode messages, host staging where direct
+//! paths hit hardware bottlenecks (the GDR-read-across-QPI problem of
+//! ref. [26]). This module reproduces that mechanism menu and the
+//! selection logic, emitting [`crate::netsim`] ops.
+//!
+//! [`Comm::send`] is the rank-to-rank primitive used by every collective
+//! algorithm in [`crate::collectives`].
+
+pub mod chunk;
+pub mod p2p;
+pub mod protocol;
+
+pub use chunk::chunk_sizes;
+pub use p2p::Comm;
+pub use protocol::{CommParams, Mechanism, PathPlan};

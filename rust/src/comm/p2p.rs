@@ -1,0 +1,260 @@
+//! Rank-to-rank sends: emit netsim ops for a selected mechanism.
+
+use std::collections::HashMap;
+
+use crate::netsim::{OpId, Plan, SimOp};
+use crate::topology::{Cluster, DeviceId};
+
+use super::protocol::{select, CommParams, PathPlan};
+
+/// The point-to-point engine bound to one cluster. Caches path plans per
+/// (src, dst, size-class) — mechanism choice depends only on the class.
+pub struct Comm<'c> {
+    cluster: &'c Cluster,
+    params: CommParams,
+    cache: HashMap<(DeviceId, DeviceId, u8), PathPlan>,
+}
+
+impl<'c> Comm<'c> {
+    pub fn new(cluster: &'c Cluster) -> Comm<'c> {
+        Comm::with_params(cluster, CommParams::default())
+    }
+
+    pub fn with_params(cluster: &'c Cluster, params: CommParams) -> Comm<'c> {
+        Comm {
+            cluster,
+            params,
+            cache: HashMap::new(),
+        }
+    }
+
+    /// The bound cluster (returned with the cluster's own lifetime so
+    /// callers can hold it across later `&mut self` calls).
+    pub fn cluster(&self) -> &'c Cluster {
+        self.cluster
+    }
+
+    pub fn params(&self) -> &CommParams {
+        &self.params
+    }
+
+    /// Size class for plan caching: eager vs rendezvous vs staging
+    /// decisions switch at parameter thresholds; within a class the plan
+    /// is size-independent.
+    fn size_class(&self, bytes: u64) -> u8 {
+        let mut class = 0u8;
+        if bytes > self.params.eager_threshold {
+            class |= 1;
+        }
+        if bytes > self.params.staging_preferred_below {
+            class |= 2;
+        }
+        class
+    }
+
+    /// Resolve (and cache) a path plan.
+    pub fn path_plan(&mut self, src: DeviceId, dst: DeviceId, bytes: u64) -> &PathPlan {
+        let key = (src, dst, self.size_class(bytes));
+        let cluster = self.cluster;
+        let params = &self.params;
+        self.cache
+            .entry(key)
+            .or_insert_with(|| select(cluster, params, src, dst, bytes))
+    }
+
+    /// Uncontended estimate for one rank-to-rank transfer, ns.
+    pub fn estimate_ns(&mut self, src_rank: usize, dst_rank: usize, bytes: u64) -> u64 {
+        let (s, d) = (
+            self.cluster.rank_device(src_rank),
+            self.cluster.rank_device(dst_rank),
+        );
+        self.path_plan(s, d, bytes).estimate_ns(bytes)
+    }
+
+    /// Emit the ops for one rank→rank send of `bytes` into `plan`,
+    /// depending on `deps`; the final op carries `label`. Returns the op
+    /// id whose completion means "dst received the data".
+    pub fn send(
+        &mut self,
+        plan: &mut Plan,
+        src_rank: usize,
+        dst_rank: usize,
+        bytes: u64,
+        deps: Vec<OpId>,
+        label: Option<(usize, usize)>,
+    ) -> OpId {
+        let src = self.cluster.rank_device(src_rank);
+        let dst = self.cluster.rank_device(dst_rank);
+        self.send_dev(plan, src, dst, bytes, deps, label)
+    }
+
+    /// Device-level send with mechanism selection (used by collectives
+    /// that manipulate hosts/HCAs directly).
+    pub fn send_dev(
+        &mut self,
+        plan: &mut Plan,
+        src: DeviceId,
+        dst: DeviceId,
+        bytes: u64,
+        deps: Vec<OpId>,
+        label: Option<(usize, usize)>,
+    ) -> OpId {
+        let path = self.path_plan(src, dst, bytes).clone();
+        match path {
+            PathPlan::Direct {
+                route,
+                overhead_ns,
+                bw_cap,
+                ..
+            } => plan.push(
+                SimOp::Transfer {
+                    route,
+                    bytes,
+                    overhead_ns,
+                    // MPI send semantics: the whole t_s serialises the
+                    // channel (Eq. 5)
+                    issue_ns: overhead_ns,
+                    bw_cap,
+                },
+                deps,
+                label,
+            ),
+            PathPlan::Staged {
+                first,
+                second,
+                overhead_each_ns,
+                ..
+            } => {
+                let mid = plan.push(
+                    SimOp::Transfer {
+                        route: first,
+                        bytes,
+                        overhead_ns: overhead_each_ns,
+                        issue_ns: overhead_each_ns,
+                        bw_cap: None,
+                    },
+                    deps,
+                    None,
+                );
+                plan.push(
+                    SimOp::Transfer {
+                        route: second,
+                        bytes,
+                        overhead_ns: overhead_each_ns,
+                        issue_ns: overhead_each_ns,
+                        bw_cap: None,
+                    },
+                    vec![mid],
+                    label,
+                )
+            }
+        }
+    }
+
+    /// Raw transfer along the shortest route with explicit overhead — for
+    /// algorithm-internal copies (e.g. host-staged collective D2H).
+    pub fn raw_transfer(
+        &mut self,
+        plan: &mut Plan,
+        src: DeviceId,
+        dst: DeviceId,
+        bytes: u64,
+        overhead_ns: u64,
+        deps: Vec<OpId>,
+        label: Option<(usize, usize)>,
+    ) -> OpId {
+        self.raw_transfer_issue(plan, src, dst, bytes, overhead_ns, overhead_ns, deps, label)
+    }
+
+    /// Raw transfer with a distinct issue cost: posted writes (GDR H2D
+    /// fan-out) are issued back-to-back (`issue_ns` apart) even though
+    /// each completes only after the full `overhead_ns` latency.
+    #[allow(clippy::too_many_arguments)]
+    pub fn raw_transfer_issue(
+        &mut self,
+        plan: &mut Plan,
+        src: DeviceId,
+        dst: DeviceId,
+        bytes: u64,
+        overhead_ns: u64,
+        issue_ns: u64,
+        deps: Vec<OpId>,
+        label: Option<(usize, usize)>,
+    ) -> OpId {
+        let route = self
+            .cluster
+            .route(src, dst)
+            .expect("raw_transfer: no route");
+        plan.push(
+            SimOp::Transfer {
+                route,
+                bytes,
+                overhead_ns,
+                issue_ns,
+                bw_cap: None,
+            },
+            deps,
+            label,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::Engine;
+    use crate::topology::presets::{flat, kesch};
+
+    #[test]
+    fn send_emits_single_op_for_ipc() {
+        let c = kesch(1, 2);
+        let mut comm = Comm::new(&c);
+        let mut plan = Plan::new();
+        let id = comm.send(&mut plan, 0, 1, 4096, vec![], Some((1, 0)));
+        assert_eq!(plan.len(), 1);
+        assert_eq!(id, 0);
+    }
+
+    #[test]
+    fn send_emits_two_ops_for_staged() {
+        let c = kesch(1, 16);
+        let mut comm = Comm::new(&c);
+        let mut plan = Plan::new();
+        // rank 0 (socket 0) -> rank 8 (socket 1): staged
+        let id = comm.send(&mut plan, 0, 8, 4096, vec![], Some((8, 0)));
+        assert_eq!(plan.len(), 2);
+        assert_eq!(id, 1);
+        // delivery label on the second op only
+        assert_eq!(plan.deliveries().get(&(8, 0)), Some(&1));
+    }
+
+    #[test]
+    fn estimate_matches_execution_uncontended() {
+        let c = flat(2);
+        let mut comm = Comm::new(&c);
+        let est = comm.estimate_ns(0, 1, 1 << 20);
+        let mut plan = Plan::new();
+        comm.send(&mut plan, 0, 1, 1 << 20, vec![], Some((1, 0)));
+        let mut engine = Engine::new(&c);
+        let r = engine.execute(&plan);
+        assert_eq!(r.makespan, est);
+    }
+
+    #[test]
+    fn cache_hits_are_consistent() {
+        let c = kesch(2, 8);
+        let mut comm = Comm::new(&c);
+        let a = comm.estimate_ns(0, 9, 1024);
+        let b = comm.estimate_ns(0, 9, 1024);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn small_intranode_faster_than_internode() {
+        let c = kesch(2, 8);
+        let mut comm = Comm::new(&c);
+        let intra = comm.estimate_ns(0, 1, 4);
+        let inter = comm.estimate_ns(0, 8, 4);
+        assert!(intra < inter);
+    }
+}

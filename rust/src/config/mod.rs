@@ -1,0 +1,13 @@
+//! Configuration system.
+//!
+//! Experiments, topologies and training runs are configurable through a
+//! TOML-subset file format (the `toml` crate is not available offline).
+//! [`toml::TomlDoc`] parses the subset we need — `[section]` headers,
+//! `key = value` with strings/ints/floats/bools/arrays, comments — and
+//! [`schema`] maps documents onto typed config structs with validation.
+
+pub mod schema;
+pub mod toml;
+
+pub use schema::{BenchConfig, ClusterConfig, TrainConfig};
+pub use toml::TomlDoc;

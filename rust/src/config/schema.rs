@@ -1,0 +1,270 @@
+//! Typed configuration schemas with validation.
+//!
+//! These structs are the bridge between config files / CLI options and the
+//! library APIs. Every experiment binary builds one of these (from
+//! defaults, a TOML document, or flags) and hands it to the relevant
+//! subsystem.
+
+use crate::error::{Error, Result};
+use crate::util::bytes;
+
+use super::toml::TomlDoc;
+
+/// Which machine model to instantiate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ClusterPreset {
+    /// KESCH (Cray CS-Storm): 2 sockets × (2 PLX × 2 K80 boards) = 16 CUDA
+    /// devices/node, dual-rail IB FDR — the paper's testbed.
+    Kesch,
+    /// NVIDIA DGX-1: 8× P100, NVLink cube mesh, 4× IB EDR.
+    Dgx1,
+    /// NVIDIA DGX-1V: 8× V100, NVLink2.
+    Dgx1V,
+    /// A flat homogeneous fabric (every pair one hop, uniform B) — used to
+    /// validate the simulator against the paper's analytic models, which
+    /// assume exactly this.
+    Flat,
+}
+
+impl ClusterPreset {
+    pub fn parse(s: &str) -> Result<ClusterPreset> {
+        match s.to_ascii_lowercase().as_str() {
+            "kesch" | "cs-storm" => Ok(ClusterPreset::Kesch),
+            "dgx1" | "dgx-1" => Ok(ClusterPreset::Dgx1),
+            "dgx1v" | "dgx-1v" => Ok(ClusterPreset::Dgx1V),
+            "flat" | "uniform" => Ok(ClusterPreset::Flat),
+            other => Err(Error::Config(format!("unknown cluster preset '{other}'"))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ClusterPreset::Kesch => "kesch",
+            ClusterPreset::Dgx1 => "dgx1",
+            ClusterPreset::Dgx1V => "dgx1v",
+            ClusterPreset::Flat => "flat",
+        }
+    }
+}
+
+/// Cluster instantiation parameters.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    pub preset: ClusterPreset,
+    pub nodes: usize,
+    /// GPUs used per node (≤ the preset's physical count).
+    pub gpus_per_node: usize,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            preset: ClusterPreset::Kesch,
+            nodes: 1,
+            gpus_per_node: 16,
+        }
+    }
+}
+
+impl ClusterConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.nodes == 0 {
+            return Err(Error::Config("nodes must be >= 1".into()));
+        }
+        if self.gpus_per_node == 0 {
+            return Err(Error::Config("gpus_per_node must be >= 1".into()));
+        }
+        let max = match self.preset {
+            ClusterPreset::Kesch => 16,
+            ClusterPreset::Dgx1 | ClusterPreset::Dgx1V => 8,
+            ClusterPreset::Flat => 4096,
+        };
+        if self.gpus_per_node > max {
+            return Err(Error::Config(format!(
+                "preset {} has at most {max} GPUs per node (asked for {})",
+                self.preset.name(),
+                self.gpus_per_node
+            )));
+        }
+        Ok(())
+    }
+
+    pub fn total_gpus(&self) -> usize {
+        self.nodes * self.gpus_per_node
+    }
+
+    pub fn from_toml(doc: &TomlDoc) -> Result<ClusterConfig> {
+        let cfg = ClusterConfig {
+            preset: ClusterPreset::parse(&doc.str_or("cluster", "preset", "kesch"))?,
+            nodes: doc.i64_or("cluster", "nodes", 1) as usize,
+            gpus_per_node: doc.i64_or("cluster", "gpus_per_node", 16) as usize,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+/// Micro-benchmark sweep parameters (osu_bcast methodology).
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    /// Message sizes to sweep (bytes).
+    pub sizes: Vec<u64>,
+    /// Timed iterations per size.
+    pub iters: usize,
+    /// Warmup iterations per size (excluded from stats).
+    pub warmup: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            sizes: bytes::pow2_sweep(4, 128 << 20),
+            iters: 100,
+            warmup: 10,
+        }
+    }
+}
+
+impl BenchConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.sizes.is_empty() {
+            return Err(Error::Config("bench sizes empty".into()));
+        }
+        if self.iters == 0 {
+            return Err(Error::Config("bench iters must be >= 1".into()));
+        }
+        Ok(())
+    }
+
+    pub fn from_toml(doc: &TomlDoc) -> Result<BenchConfig> {
+        let mut cfg = BenchConfig::default();
+        if let Some(arr) = doc.get("bench", "sizes").and_then(|v| v.as_arr()) {
+            cfg.sizes = arr
+                .iter()
+                .map(|v| match v {
+                    super::toml::TomlValue::Str(s) => bytes::parse_size(s),
+                    super::toml::TomlValue::Int(i) => Ok(*i as u64),
+                    _ => Err(Error::Config("bad size entry".into())),
+                })
+                .collect::<Result<Vec<u64>>>()?;
+        }
+        cfg.iters = doc.i64_or("bench", "iters", cfg.iters as i64) as usize;
+        cfg.warmup = doc.i64_or("bench", "warmup", cfg.warmup as i64) as usize;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+/// Data-parallel training run parameters (the CNTK role).
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Model descriptor name: lenet | alexnet | googlenet | resnet50 | vgg16 | vgg-mini.
+    pub model: String,
+    /// Total data-parallel ranks (GPUs).
+    pub gpus: usize,
+    /// Minibatches (iterations) to run/simulate.
+    pub iterations: usize,
+    /// Global minibatch size (split across ranks).
+    pub batch_size: usize,
+    /// Per-GPU compute time for one fwd+bwd on its shard, in µs. When the
+    /// E2E driver runs, this is *measured* via PJRT instead.
+    pub compute_us: f64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            model: "vgg16".into(),
+            gpus: 32,
+            iterations: 100,
+            batch_size: 256,
+            compute_us: 0.0,
+        }
+    }
+}
+
+impl TrainConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.gpus == 0 {
+            return Err(Error::Config("gpus must be >= 1".into()));
+        }
+        if self.iterations == 0 {
+            return Err(Error::Config("iterations must be >= 1".into()));
+        }
+        if self.batch_size == 0 {
+            return Err(Error::Config("batch_size must be >= 1".into()));
+        }
+        Ok(())
+    }
+
+    pub fn from_toml(doc: &TomlDoc) -> Result<TrainConfig> {
+        let cfg = TrainConfig {
+            model: doc.str_or("train", "model", "vgg16"),
+            gpus: doc.i64_or("train", "gpus", 32) as usize,
+            iterations: doc.i64_or("train", "iterations", 100) as usize,
+            batch_size: doc.i64_or("train", "batch_size", 256) as usize,
+            compute_us: doc.f64_or("train", "compute_us", 0.0),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preset_parse() {
+        assert_eq!(ClusterPreset::parse("KESCH").unwrap(), ClusterPreset::Kesch);
+        assert_eq!(ClusterPreset::parse("dgx-1v").unwrap(), ClusterPreset::Dgx1V);
+        assert!(ClusterPreset::parse("hal9000").is_err());
+    }
+
+    #[test]
+    fn cluster_validation() {
+        let mut c = ClusterConfig::default();
+        c.validate().unwrap();
+        c.gpus_per_node = 17;
+        assert!(c.validate().is_err());
+        c.gpus_per_node = 16;
+        c.nodes = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn full_doc_roundtrip() {
+        let doc = TomlDoc::parse(
+            r#"
+            [cluster]
+            preset = "kesch"
+            nodes = 4
+            gpus_per_node = 16
+            [bench]
+            sizes = ["4", "8K", 64]
+            iters = 50
+            warmup = 5
+            [train]
+            model = "vgg16"
+            gpus = 64
+            iterations = 20
+            batch_size = 512
+            "#,
+        )
+        .unwrap();
+        let cluster = ClusterConfig::from_toml(&doc).unwrap();
+        assert_eq!(cluster.total_gpus(), 64);
+        let bench = BenchConfig::from_toml(&doc).unwrap();
+        assert_eq!(bench.sizes, vec![4, 8192, 64]);
+        assert_eq!(bench.iters, 50);
+        let train = TrainConfig::from_toml(&doc).unwrap();
+        assert_eq!(train.gpus, 64);
+    }
+
+    #[test]
+    fn defaults_are_valid() {
+        ClusterConfig::default().validate().unwrap();
+        BenchConfig::default().validate().unwrap();
+        TrainConfig::default().validate().unwrap();
+    }
+}

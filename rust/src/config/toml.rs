@@ -1,0 +1,282 @@
+//! TOML-subset parser.
+//!
+//! Supported grammar (sufficient for our config files):
+//!
+//! ```toml
+//! # comment
+//! top_level_key = 3
+//! [section]
+//! name = "kesch"          # strings
+//! gpus_per_node = 16      # integers
+//! bandwidth_gbps = 6.8    # floats
+//! multirail = true        # booleans
+//! sizes = ["4", "8K"]     # homogeneous arrays of the above
+//! ```
+//!
+//! Not supported (and not needed): nested tables, inline tables, dates,
+//! multi-line strings, array-of-tables.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// A TOML scalar or array value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(x) => Some(*x),
+            TomlValue::Int(x) => Some(*x as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Arr(xs) => Some(xs),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: `section -> key -> value`. Top-level keys live in
+/// the section named `""`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TomlDoc {
+    pub sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest.strip_suffix(']').ok_or_else(|| {
+                    Error::Config(format!("line {}: unterminated section", lineno + 1))
+                })?;
+                section = name.trim().to_string();
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let eq = line.find('=').ok_or_else(|| {
+                Error::Config(format!("line {}: expected key = value", lineno + 1))
+            })?;
+            let key = line[..eq].trim().to_string();
+            if key.is_empty() {
+                return Err(Error::Config(format!("line {}: empty key", lineno + 1)));
+            }
+            let value = parse_value(line[eq + 1..].trim())
+                .map_err(|e| Error::Config(format!("line {}: {e}", lineno + 1)))?;
+            doc.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(key, value);
+        }
+        Ok(doc)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<TomlDoc> {
+        let text = std::fs::read_to_string(path)?;
+        TomlDoc::parse(&text)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.sections.get(section).and_then(|s| s.get(key))
+    }
+
+    pub fn str_or(&self, section: &str, key: &str, default: &str) -> String {
+        self.get(section, key)
+            .and_then(|v| v.as_str())
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn i64_or(&self, section: &str, key: &str, default: i64) -> i64 {
+        self.get(section, key)
+            .and_then(|v| v.as_i64())
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key)
+            .and_then(|v| v.as_f64())
+            .unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key)
+            .and_then(|v| v.as_bool())
+            .unwrap_or(default)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // a '#' outside a string starts a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> std::result::Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        if inner.contains('"') {
+            return Err("embedded quote in string".into());
+        }
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| "unterminated array".to_string())?
+            .trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Arr(Vec::new()));
+        }
+        let items = split_top_level(inner)
+            .into_iter()
+            .map(|item| parse_value(item.trim()))
+            .collect::<std::result::Result<Vec<_>, _>>()?;
+        return Ok(TomlValue::Arr(items));
+    }
+    match s {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    let cleaned = s.replace('_', "");
+    if let Ok(i) = cleaned.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value '{s}'"))
+}
+
+/// Split on commas that are not inside strings or nested brackets.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_document() {
+        let doc = TomlDoc::parse(
+            r#"
+            # experiment config
+            seed = 42
+            [cluster]
+            preset = "kesch"     # Cray CS-Storm
+            nodes = 8
+            link_gbps = 6.8
+            multirail = true
+            sizes = ["4", "8K", "128M"]
+            counts = [2, 4, 8]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.i64_or("", "seed", 0), 42);
+        assert_eq!(doc.str_or("cluster", "preset", "?"), "kesch");
+        assert_eq!(doc.i64_or("cluster", "nodes", 0), 8);
+        assert!((doc.f64_or("cluster", "link_gbps", 0.0) - 6.8).abs() < 1e-12);
+        assert!(doc.bool_or("cluster", "multirail", false));
+        let sizes = doc.get("cluster", "sizes").unwrap().as_arr().unwrap();
+        assert_eq!(sizes.len(), 3);
+        assert_eq!(sizes[1].as_str(), Some("8K"));
+        let counts = doc.get("cluster", "counts").unwrap().as_arr().unwrap();
+        assert_eq!(counts[2].as_i64(), Some(8));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let doc = TomlDoc::parse("").unwrap();
+        assert_eq!(doc.i64_or("x", "y", 7), 7);
+        assert_eq!(doc.str_or("x", "y", "dflt"), "dflt");
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(TomlDoc::parse("[unterminated").is_err());
+        assert!(TomlDoc::parse("novalue").is_err());
+        assert!(TomlDoc::parse("k = ").is_err());
+        assert!(TomlDoc::parse("k = \"open").is_err());
+    }
+
+    #[test]
+    fn underscored_ints() {
+        let doc = TomlDoc::parse("n = 1_000_000").unwrap();
+        assert_eq!(doc.i64_or("", "n", 0), 1_000_000);
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let doc = TomlDoc::parse("k = \"a#b\"").unwrap();
+        assert_eq!(doc.str_or("", "k", ""), "a#b");
+    }
+}

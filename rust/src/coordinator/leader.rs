@@ -1,0 +1,213 @@
+//! Leader side of the data-parallel engine.
+//!
+//! The leader owns the parameter vector. Each iteration it (conceptually)
+//! broadcasts parameters to all workers — the traffic the paper's
+//! `MPI_Bcast` designs carry — collects gradient shards, averages them
+//! and applies SGD. Two execution modes:
+//!
+//! * [`run_threaded`] — workers on real threads behind channels (used
+//!   when the backend is `Send`);
+//! * [`run_serial`] — workers driven in-place (used for PJRT-backed
+//!   workers; the `xla` handles are not `Send`). Identical arithmetic.
+//!
+//! The *timing* of the parameter exchange comes from the simulator via a
+//! caller-provided costing closure, so training metrics combine real
+//! compute/loss with simulated communication — see DESIGN.md §0.
+
+use std::sync::mpsc;
+use std::thread;
+
+use super::metrics::{IterationMetrics, TrainingMetrics};
+use super::worker::ComputeBackend;
+
+/// SGD hyper-parameters.
+#[derive(Debug, Clone)]
+pub struct SgdConfig {
+    pub lr: f32,
+    pub iterations: usize,
+}
+
+fn apply_update(params: &mut [f32], grads: &[Vec<f32>], lr: f32) -> f32 {
+    let k = grads.len() as f32;
+    for (i, p) in params.iter_mut().enumerate() {
+        let avg: f32 = grads.iter().map(|g| g[i]).sum::<f32>() / k;
+        *p -= lr * avg;
+    }
+    k
+}
+
+/// Serial data-parallel SGD (for non-Send backends).
+pub fn run_serial<B: ComputeBackend + ?Sized>(
+    params: &mut Vec<f32>,
+    workers: &mut [Box<B>],
+    cfg: &SgdConfig,
+    mut comm_cost_ns: impl FnMut(usize) -> u64,
+) -> TrainingMetrics {
+    assert!(!workers.is_empty());
+    let mut metrics = TrainingMetrics::default();
+    for iter in 0..cfg.iterations {
+        let t0 = std::time::Instant::now();
+        let mut grads = Vec::with_capacity(workers.len());
+        let mut loss_sum = 0.0f32;
+        for w in workers.iter_mut() {
+            let (g, loss) = w.grad(params, iter as u64);
+            assert_eq!(g.len(), params.len());
+            grads.push(g);
+            loss_sum += loss;
+        }
+        apply_update(params, &grads, cfg.lr);
+        let compute_ns = t0.elapsed().as_nanos() as u64;
+        metrics.push(IterationMetrics {
+            iter,
+            loss: loss_sum / workers.len() as f32,
+            compute_ns,
+            comm_ns: comm_cost_ns(iter),
+        });
+    }
+    metrics
+}
+
+/// Threaded data-parallel SGD: one OS thread per worker, parameters fan
+/// out and gradients fan in over channels each iteration.
+pub fn run_threaded<B>(
+    params: &mut Vec<f32>,
+    workers: Vec<B>,
+    cfg: &SgdConfig,
+    mut comm_cost_ns: impl FnMut(usize) -> u64,
+) -> TrainingMetrics
+where
+    B: ComputeBackend + Send + 'static,
+{
+    assert!(!workers.is_empty());
+    let n = workers.len();
+    let mut to_workers = Vec::with_capacity(n);
+    let (grad_tx, grad_rx) = mpsc::channel::<(usize, Vec<f32>, f32)>();
+    let mut handles = Vec::with_capacity(n);
+    for (wid, mut backend) in workers.into_iter().enumerate() {
+        let (ptx, prx) = mpsc::channel::<Option<Vec<f32>>>();
+        to_workers.push(ptx);
+        let gtx = grad_tx.clone();
+        handles.push(thread::spawn(move || {
+            let mut iter = 0u64;
+            // the worker loop: receive params (None = shutdown), compute,
+            // send gradient shard back
+            while let Ok(Some(params)) = prx.recv() {
+                let (g, loss) = backend.grad(&params, iter);
+                iter += 1;
+                if gtx.send((wid, g, loss)).is_err() {
+                    break;
+                }
+            }
+        }));
+    }
+    drop(grad_tx);
+
+    let mut metrics = TrainingMetrics::default();
+    for iter in 0..cfg.iterations {
+        let t0 = std::time::Instant::now();
+        // parameter broadcast (the MPI_Bcast the paper optimises)
+        for tx in &to_workers {
+            tx.send(Some(params.clone())).expect("worker alive");
+        }
+        let mut grads: Vec<Option<Vec<f32>>> = vec![None; n];
+        let mut loss_sum = 0.0f32;
+        for _ in 0..n {
+            let (wid, g, loss) = grad_rx.recv().expect("worker alive");
+            assert_eq!(g.len(), params.len());
+            grads[wid] = Some(g);
+            loss_sum += loss;
+        }
+        let grads: Vec<Vec<f32>> = grads.into_iter().map(|g| g.unwrap()).collect();
+        apply_update(params, &grads, cfg.lr);
+        let compute_ns = t0.elapsed().as_nanos() as u64;
+        metrics.push(IterationMetrics {
+            iter,
+            loss: loss_sum / n as f32,
+            compute_ns,
+            comm_ns: comm_cost_ns(iter),
+        });
+    }
+    for tx in &to_workers {
+        let _ = tx.send(None);
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    metrics
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::worker::QuadBackend;
+
+    fn target() -> Vec<f32> {
+        (0..32).map(|i| (i as f32 * 0.37).sin() * 3.0).collect()
+    }
+
+    #[test]
+    fn serial_converges_to_target() {
+        let t = target();
+        let mut params = vec![0.0f32; t.len()];
+        let mut workers: Vec<Box<QuadBackend>> = (0..4)
+            .map(|_| Box::new(QuadBackend::new(t.clone())))
+            .collect();
+        let metrics = run_serial(
+            &mut params,
+            &mut workers,
+            &SgdConfig {
+                lr: 0.2,
+                iterations: 60,
+            },
+            |_| 1000,
+        );
+        assert!(metrics.final_loss() < 1e-6, "loss {}", metrics.final_loss());
+        assert!(metrics.loss_decreased());
+        for (p, t) in params.iter().zip(&t) {
+            assert!((p - t).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn threaded_matches_serial_arithmetic() {
+        let t = target();
+        let cfg = SgdConfig {
+            lr: 0.1,
+            iterations: 25,
+        };
+        let mut p_serial = vec![0.5f32; t.len()];
+        let mut ws: Vec<Box<QuadBackend>> = (0..3)
+            .map(|_| Box::new(QuadBackend::new(t.clone())))
+            .collect();
+        run_serial(&mut p_serial, &mut ws, &cfg, |_| 0);
+
+        let mut p_thread = vec![0.5f32; t.len()];
+        let workers: Vec<QuadBackend> =
+            (0..3).map(|_| QuadBackend::new(t.clone())).collect();
+        run_threaded(&mut p_thread, workers, &cfg, |_| 0);
+
+        for (a, b) in p_serial.iter().zip(&p_thread) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn comm_cost_recorded() {
+        let t = target();
+        let mut params = vec![0.0f32; t.len()];
+        let mut workers: Vec<Box<QuadBackend>> =
+            vec![Box::new(QuadBackend::new(t.clone()))];
+        let metrics = run_serial(
+            &mut params,
+            &mut workers,
+            &SgdConfig {
+                lr: 0.1,
+                iterations: 5,
+            },
+            |i| (i as u64 + 1) * 100,
+        );
+        assert_eq!(metrics.iterations.len(), 5);
+        assert_eq!(metrics.iterations[4].comm_ns, 500);
+        assert_eq!(metrics.total_comm_ns(), 100 + 200 + 300 + 400 + 500);
+    }
+}

@@ -1,0 +1,129 @@
+//! Training-run accounting.
+
+/// One iteration's record.
+#[derive(Debug, Clone)]
+pub struct IterationMetrics {
+    pub iter: usize,
+    /// Mean loss across workers.
+    pub loss: f32,
+    /// Wall-clock compute time for the gradient phase, ns.
+    pub compute_ns: u64,
+    /// *Simulated* parameter-broadcast time, ns.
+    pub comm_ns: u64,
+}
+
+/// A full run.
+#[derive(Debug, Clone, Default)]
+pub struct TrainingMetrics {
+    pub iterations: Vec<IterationMetrics>,
+}
+
+impl TrainingMetrics {
+    pub fn push(&mut self, m: IterationMetrics) {
+        self.iterations.push(m);
+    }
+
+    pub fn final_loss(&self) -> f32 {
+        self.iterations.last().map(|m| m.loss).unwrap_or(f32::NAN)
+    }
+
+    pub fn first_loss(&self) -> f32 {
+        self.iterations.first().map(|m| m.loss).unwrap_or(f32::NAN)
+    }
+
+    /// Did the loss go down meaningfully over the run?
+    pub fn loss_decreased(&self) -> bool {
+        !self.iterations.is_empty() && self.final_loss() < self.first_loss() * 0.9
+    }
+
+    pub fn total_comm_ns(&self) -> u64 {
+        self.iterations.iter().map(|m| m.comm_ns).sum()
+    }
+
+    pub fn total_compute_ns(&self) -> u64 {
+        self.iterations.iter().map(|m| m.compute_ns).sum()
+    }
+
+    /// Render the loss curve as `iter,loss,compute_us,comm_us` CSV.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("iter,loss,compute_us,comm_us\n");
+        for m in &self.iterations {
+            out.push_str(&format!(
+                "{},{:.6},{:.1},{:.1}\n",
+                m.iter,
+                m.loss,
+                m.compute_ns as f64 / 1000.0,
+                m.comm_ns as f64 / 1000.0
+            ));
+        }
+        out
+    }
+
+    /// A coarse text plot of the loss curve (for terminal logs).
+    pub fn loss_sparkline(&self, width: usize) -> String {
+        if self.iterations.is_empty() {
+            return String::new();
+        }
+        let glyphs = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+        let step = (self.iterations.len() as f64 / width as f64).max(1.0);
+        let points: Vec<f32> = (0..width.min(self.iterations.len()))
+            .map(|i| self.iterations[(i as f64 * step) as usize].loss)
+            .collect();
+        let max = points.iter().cloned().fold(f32::MIN, f32::max);
+        let min = points.iter().cloned().fold(f32::MAX, f32::min);
+        let range = (max - min).max(1e-12);
+        points
+            .iter()
+            .map(|&x| glyphs[(((x - min) / range) * 7.0).round() as usize])
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run() -> TrainingMetrics {
+        let mut m = TrainingMetrics::default();
+        for i in 0..10 {
+            m.push(IterationMetrics {
+                iter: i,
+                loss: 10.0 / (i as f32 + 1.0),
+                compute_ns: 1000,
+                comm_ns: 500,
+            });
+        }
+        m
+    }
+
+    #[test]
+    fn totals_and_convergence() {
+        let m = run();
+        assert!(m.loss_decreased());
+        assert_eq!(m.total_comm_ns(), 5000);
+        assert_eq!(m.total_compute_ns(), 10_000);
+        assert_eq!(m.final_loss(), 1.0);
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let csv = run().to_csv();
+        assert!(csv.starts_with("iter,loss"));
+        assert_eq!(csv.lines().count(), 11);
+    }
+
+    #[test]
+    fn sparkline_renders() {
+        let s = run().loss_sparkline(10);
+        assert_eq!(s.chars().count(), 10);
+        assert!(s.starts_with('█'));
+    }
+
+    #[test]
+    fn empty_run_safe() {
+        let m = TrainingMetrics::default();
+        assert!(!m.loss_decreased());
+        assert!(m.final_loss().is_nan());
+        assert_eq!(m.loss_sparkline(5), "");
+    }
+}

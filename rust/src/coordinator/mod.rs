@@ -1,0 +1,25 @@
+//! The data-parallel training coordinator — the role CA-CNTK plays in the
+//! paper's application study (§V-D, Fig. 3).
+//!
+//! Responsibilities:
+//!
+//! * [`schedule`] — turn a model + scale into the per-iteration broadcast
+//!   schedule and cost it on the simulator under either comm backend
+//!   (MV2-GDR-Opt or NCCL-MV2-GDR);
+//! * [`train`] — the Fig. 3 estimator: compute-time model × simulated
+//!   communication, per GPU count;
+//! * [`leader`] / [`worker`] — the actual data-parallel execution engine
+//!   (leader owns parameters, workers compute gradient shards; threaded
+//!   over channels, or serial for non-`Send` backends like PJRT);
+//! * [`metrics`] — per-iteration accounting.
+
+pub mod leader;
+pub mod metrics;
+pub mod schedule;
+pub mod train;
+pub mod worker;
+
+pub use leader::{run_serial, run_threaded, SgdConfig};
+pub use metrics::{IterationMetrics, TrainingMetrics};
+pub use schedule::{comm_time_ns, BcastBackend};
+pub use worker::ComputeBackend;

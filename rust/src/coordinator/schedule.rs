@@ -1,0 +1,147 @@
+//! Per-iteration broadcast schedule costing.
+
+use crate::collectives::BcastSpec;
+use crate::comm::Comm;
+use crate::models::messages::BcastMsg;
+use crate::nccl::{hierarchical, NcclParams};
+use crate::netsim::Engine;
+use crate::tuning::Selector;
+
+/// Which runtime carries the parameter broadcasts.
+pub enum BcastBackend<'a> {
+    /// The paper's proposed tuned MPI runtime.
+    Mv2Opt(&'a Selector),
+    /// The NCCL-integrated MPI_Bcast baseline [4].
+    NcclMv2(&'a NcclParams),
+}
+
+impl<'a> BcastBackend<'a> {
+    pub fn label(&self) -> &'static str {
+        match self {
+            BcastBackend::Mv2Opt(_) => "MV2-GDR-Opt",
+            BcastBackend::NcclMv2(_) => "NCCL-MV2-GDR",
+        }
+    }
+}
+
+/// Simulated time for one iteration's broadcast calls.
+///
+/// CA-CNTK issues the per-block `MPI_Bcast`s back-to-back; blocks rooted
+/// at different ranks overlap on the fabric wherever their paths don't
+/// contend. We model that by merging every block's plan into a single
+/// op DAG and letting the engine resolve the shared-link contention —
+/// the makespan is the iteration's parameter-exchange time.
+///
+/// For the MV2-GDR-Opt backend the *enhanced tuning framework* is
+/// workload-aware (§IV): besides the per-message isolated-latency picks,
+/// it evaluates uniform algorithm choices against the whole concurrent
+/// schedule and dispatches the fastest. Under concurrency the
+/// topology-ordered pipelined chain — which crosses each node boundary
+/// exactly once — typically beats latency-optimal trees that flood the
+/// IB rails; this is precisely the paper's "conventional intuition needs
+/// to be revisited" point.
+pub fn comm_time_ns(
+    comm: &mut Comm,
+    engine: &mut Engine,
+    backend: &BcastBackend,
+    messages: &[BcastMsg],
+) -> u64 {
+    match backend {
+        BcastBackend::NcclMv2(params) => {
+            let merged = merge_schedule(comm, messages, |comm, spec| {
+                hierarchical::plan(comm, params, spec, hierarchical::DEFAULT_CHUNK).plan
+            });
+            execute(engine, merged)
+        }
+        BcastBackend::Mv2Opt(sel) => {
+            // candidate 1: per-message isolated-latency tuned picks
+            let mut best = execute(
+                engine,
+                merge_schedule(comm, messages, |comm, spec| sel.plan(comm, spec).plan),
+            );
+            // candidates 2..: uniform algorithms judged on the schedule
+            use crate::collectives::Algorithm;
+            let uniform = [
+                Algorithm::Knomial { k: 2 },
+                Algorithm::PipelinedChain { chunk: 256 << 10 },
+                Algorithm::PipelinedChain { chunk: 1 << 20 },
+                Algorithm::PipelinedChain { chunk: 4 << 20 },
+                Algorithm::HostStagedKnomial { k: 4 },
+            ];
+            for algo in uniform {
+                let merged = merge_schedule(comm, messages, |comm, spec| {
+                    crate::collectives::plan(&algo, comm, spec).plan
+                });
+                best = best.min(execute(engine, merged));
+            }
+            best
+        }
+    }
+}
+
+fn merge_schedule(
+    comm: &mut Comm,
+    messages: &[BcastMsg],
+    mut build: impl FnMut(&mut Comm, &BcastSpec) -> crate::netsim::Plan,
+) -> crate::netsim::Plan {
+    let n = comm.cluster().n_gpus();
+    let mut merged = crate::netsim::Plan::new();
+    for msg in messages {
+        if msg.bytes == 0 {
+            continue;
+        }
+        let spec = BcastSpec::new(msg.root % n, n, msg.bytes);
+        let plan = build(comm, &spec);
+        merged.merge(&plan);
+    }
+    merged
+}
+
+fn execute(engine: &mut Engine, merged: crate::netsim::Plan) -> u64 {
+    if merged.is_empty() {
+        0
+    } else {
+        engine.execute(&merged).makespan
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{bcast_messages, zoo::vgg16, MessageSchedule};
+    use crate::topology::presets::kesch;
+
+    #[test]
+    fn both_backends_cost_vgg_schedule() {
+        let cluster = kesch(2, 8);
+        let sel = Selector::tuned(&cluster);
+        let nccl = NcclParams::default();
+        let mut comm = Comm::new(&cluster);
+        let mut engine = Engine::new(&cluster);
+        let msgs = bcast_messages(&vgg16(), 16, MessageSchedule::Partitioned);
+        let t_mv2 = comm_time_ns(&mut comm, &mut engine, &BcastBackend::Mv2Opt(&sel), &msgs);
+        let t_nccl = comm_time_ns(
+            &mut comm,
+            &mut engine,
+            &BcastBackend::NcclMv2(&nccl),
+            &msgs,
+        );
+        assert!(t_mv2 > 0 && t_nccl > 0);
+        // the paper's application-level claim: MV2-GDR-Opt matches or
+        // beats NCCL-MV2-GDR
+        assert!(t_mv2 <= t_nccl, "mv2 {t_mv2} vs nccl {t_nccl}");
+    }
+
+    #[test]
+    fn zero_byte_messages_skipped() {
+        let cluster = kesch(1, 2);
+        let sel = Selector::tuned(&cluster);
+        let mut comm = Comm::new(&cluster);
+        let mut engine = Engine::new(&cluster);
+        let msgs = [BcastMsg { root: 0, bytes: 0 }];
+        assert_eq!(
+            comm_time_ns(&mut comm, &mut engine, &BcastBackend::Mv2Opt(&sel), &msgs),
+            0
+        );
+    }
+}

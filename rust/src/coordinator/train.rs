@@ -1,0 +1,122 @@
+//! The Fig. 3 estimator: data-parallel training time per iteration =
+//! compute (parallel across ranks) + parameter broadcast (simulated).
+
+use crate::comm::Comm;
+use crate::models::{bcast_messages, DnnModel, MessageSchedule};
+use crate::netsim::Engine;
+use crate::topology::Cluster;
+
+use super::schedule::{comm_time_ns, BcastBackend};
+
+/// K80 effective fp32 throughput used by the compute model: 4.37 TFLOP/s
+/// peak, ~32% achieved on CNTK conv/FC kernels of the era.
+pub const K80_EFF_FLOPS: f64 = 1.4e12;
+
+/// One scale point of the Fig. 3 estimate.
+#[derive(Debug, Clone)]
+pub struct TrainingEstimate {
+    pub gpus: usize,
+    pub compute_us: f64,
+    pub comm_us: f64,
+    pub iter_us: f64,
+    /// Samples/second at the given global batch.
+    pub throughput: f64,
+}
+
+/// Estimate one iteration at a given scale.
+///
+/// `compute_us_override > 0` substitutes a *measured* per-iteration
+/// compute time (the e2e_train example feeds real PJRT timings here).
+pub fn estimate_iteration(
+    cluster: &Cluster,
+    model: &DnnModel,
+    backend: &BcastBackend,
+    global_batch: usize,
+    compute_us_override: f64,
+) -> TrainingEstimate {
+    let gpus = cluster.n_gpus();
+    let per_gpu_batch = (global_batch as f64 / gpus as f64).ceil().max(1.0);
+    let compute_us = if compute_us_override > 0.0 {
+        compute_us_override
+    } else {
+        // fwd + bwd ≈ 3× fwd FLOPs
+        3.0 * model.fwd_flops as f64 * per_gpu_batch / K80_EFF_FLOPS * 1e6
+    };
+    let msgs = bcast_messages(model, gpus, MessageSchedule::Partitioned);
+    let mut comm = Comm::new(cluster);
+    let mut engine = Engine::new(cluster);
+    let comm_ns = comm_time_ns(&mut comm, &mut engine, backend, &msgs);
+    let comm_us = comm_ns as f64 / 1000.0;
+    let iter_us = compute_us + comm_us;
+    TrainingEstimate {
+        gpus,
+        compute_us,
+        comm_us,
+        iter_us,
+        throughput: global_batch as f64 / (iter_us / 1e6),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo::vgg16;
+    use crate::nccl::NcclParams;
+    use crate::topology::presets::kesch;
+    use crate::tuning::Selector;
+
+    #[test]
+    fn mv2_opt_beats_or_matches_nccl_for_vgg() {
+        // the paper's 7%-at-32-GPUs claim, shape-checked at one scale
+        let cluster = kesch(2, 16); // 32 GPUs
+        let model = vgg16();
+        let sel = Selector::tuned(&cluster);
+        let nccl = NcclParams::default();
+        let a = estimate_iteration(
+            &cluster,
+            &model,
+            &BcastBackend::Mv2Opt(&sel),
+            256,
+            0.0,
+        );
+        let b = estimate_iteration(
+            &cluster,
+            &model,
+            &BcastBackend::NcclMv2(&nccl),
+            256,
+            0.0,
+        );
+        assert!(a.iter_us <= b.iter_us, "{} vs {}", a.iter_us, b.iter_us);
+        // improvement should be single-digit-to-low-teens percent, not 10x
+        // (compute dominates; the paper reports 7%)
+        let gain = (b.iter_us - a.iter_us) / b.iter_us;
+        assert!(gain < 0.5, "gain {gain} suspiciously large");
+    }
+
+    #[test]
+    fn compute_override_is_respected() {
+        let cluster = kesch(1, 4);
+        let model = vgg16();
+        let sel = Selector::tuned(&cluster);
+        let est = estimate_iteration(
+            &cluster,
+            &model,
+            &BcastBackend::Mv2Opt(&sel),
+            64,
+            123_456.0,
+        );
+        assert_eq!(est.compute_us, 123_456.0);
+        assert!(est.iter_us > est.compute_us);
+    }
+
+    #[test]
+    fn throughput_consistent() {
+        let cluster = kesch(1, 2);
+        let model = vgg16();
+        let sel = Selector::tuned(&cluster);
+        let est =
+            estimate_iteration(&cluster, &model, &BcastBackend::Mv2Opt(&sel), 128, 0.0);
+        let recomputed = 128.0 / (est.iter_us / 1e6);
+        assert!((est.throughput - recomputed).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,60 @@
+//! Worker side of the data-parallel engine.
+
+/// A gradient computer for one data-parallel rank. The e2e_train example
+//  backs this with the AOT-compiled PJRT training step; unit tests use
+//  analytic toy problems.
+pub trait ComputeBackend {
+    /// Compute `(gradient, loss)` for the current parameters on this
+    /// worker's shard for iteration `iter`.
+    fn grad(&mut self, params: &[f32], iter: u64) -> (Vec<f32>, f32);
+
+    /// Parameter count (must match across workers).
+    fn n_params(&self) -> usize;
+}
+
+/// A quadratic-bowl toy problem: `loss = Σ (p - target)²`, exact gradient.
+/// Converges under SGD from any start — the coordinator's test fixture.
+#[derive(Debug, Clone)]
+pub struct QuadBackend {
+    pub target: Vec<f32>,
+}
+
+impl QuadBackend {
+    pub fn new(target: Vec<f32>) -> QuadBackend {
+        QuadBackend { target }
+    }
+}
+
+impl ComputeBackend for QuadBackend {
+    fn grad(&mut self, params: &[f32], _iter: u64) -> (Vec<f32>, f32) {
+        assert_eq!(params.len(), self.target.len());
+        let mut g = Vec::with_capacity(params.len());
+        let mut loss = 0.0f32;
+        for (p, t) in params.iter().zip(&self.target) {
+            let d = p - t;
+            loss += d * d;
+            g.push(2.0 * d);
+        }
+        (g, loss)
+    }
+
+    fn n_params(&self) -> usize {
+        self.target.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quad_gradient_points_at_target() {
+        let mut b = QuadBackend::new(vec![1.0, -2.0]);
+        let (g, loss) = b.grad(&[0.0, 0.0], 0);
+        assert_eq!(g, vec![-2.0, 4.0]);
+        assert_eq!(loss, 5.0);
+        let (g2, l2) = b.grad(&[1.0, -2.0], 1);
+        assert_eq!(g2, vec![0.0, 0.0]);
+        assert_eq!(l2, 0.0);
+    }
+}

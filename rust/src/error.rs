@@ -1,0 +1,50 @@
+//! Crate-wide error type.
+
+/// Errors produced by the gdrbcast library.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// A topology query referenced a device that does not exist.
+    #[error("unknown device id {0}")]
+    UnknownDevice(usize),
+
+    /// No route exists between two devices.
+    #[error("no route between device {src} and device {dst}")]
+    NoRoute { src: usize, dst: usize },
+
+    /// A collective was asked to run over an invalid rank set.
+    #[error("invalid rank set: {0}")]
+    InvalidRanks(String),
+
+    /// A broadcast plan failed validation (a rank did not receive data).
+    #[error("broadcast plan invalid: {0}")]
+    InvalidPlan(String),
+
+    /// Configuration file / value errors.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// CLI usage errors.
+    #[error("usage error: {0}")]
+    Usage(String),
+
+    /// Artifact discovery / runtime errors.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// PJRT / XLA errors surfaced from the `xla` crate.
+    #[error("xla error: {0}")]
+    Xla(String),
+
+    /// IO errors.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

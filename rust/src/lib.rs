@@ -1,0 +1,63 @@
+//! # gdrbcast
+//!
+//! A reproduction of *"Optimized Broadcast for Deep Learning Workloads on
+//! Dense-GPU InfiniBand Clusters: MPI or NCCL?"* (Awan, Chu, Subramoni,
+//! Panda — OSU, 2017) as a three-layer Rust + JAX + Pallas system.
+//!
+//! The paper proposes a **pipelined chain design for `MPI_Bcast`** and an
+//! enhanced collective tuning framework inside the CUDA-aware MPI runtime
+//! MVAPICH2-GDR, and evaluates it against NVIDIA NCCL broadcast and a
+//! NCCL-integrated `MPI_Bcast` hybrid — with analytic models,
+//! micro-benchmarks on a dense multi-GPU InfiniBand cluster (KESCH), and
+//! data-parallel VGG training under Microsoft CNTK.
+//!
+//! This crate contains the Layer-3 system:
+//!
+//! * [`topology`] — explicit device/link graphs for dense multi-GPU nodes
+//!   (KESCH Cray CS-Storm, DGX-1, DGX-1V presets) with PCIe/PLX/QPI/NVLink/
+//!   InfiniBand link models and routing.
+//! * [`netsim`] — a deterministic discrete-event fabric simulator with
+//!   cut-through transfers and per-link contention.
+//! * [`comm`] — the CUDA-aware point-to-point engine: GDR read/write, CUDA
+//!   IPC, host staging, SGL eager — with the mechanism-selection logic that
+//!   MVAPICH2-GDR's wins come from.
+//! * [`collectives`] — broadcast algorithms: direct, chain, **pipelined
+//!   chain (the paper's contribution)**, k-nomial, binomial,
+//!   scatter-ring-allgather, host-staged k-nomial, ring.
+//! * [`nccl`] — an NCCL 1.3 behavioural model (ring broadcast, kernel
+//!   launch overheads) and the NCCL-integrated `MPI_Bcast` hybrid of [4].
+//! * [`analytic`] — the closed-form cost models of the paper's §III/§IV
+//!   (Eqs. 1–6) and a simulator-vs-model validation harness.
+//! * [`tuning`] — the enhanced collective tuning framework: sweep,
+//!   dispatch-table generation, runtime selection ("MV2-GDR-Opt").
+//! * [`models`] — DNN parameter-shape descriptors (LeNet/AlexNet/VGG/
+//!   GoogLeNet/ResNet) and CNTK-style broadcast message partitioning.
+//! * [`coordinator`] — the data-parallel training coordinator that plays
+//!   the role of CA-CNTK: per-iteration parameter broadcast + measured
+//!   compute.
+//! * [`runtime`] — PJRT loader/executor for the AOT-compiled JAX/Pallas
+//!   training step (`artifacts/*.hlo.txt`).
+//! * [`bench`] — the statistical benchmark harness (criterion replacement)
+//!   and the osu_bcast-equivalent micro-benchmark.
+//! * [`util`] — zero-dependency substrates: RNG, stats, CLI parsing, JSON,
+//!   property testing.
+//!
+//! See `DESIGN.md` for the full system inventory and the per-experiment
+//! index, and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod analytic;
+pub mod bench;
+pub mod collectives;
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod error;
+pub mod models;
+pub mod nccl;
+pub mod netsim;
+pub mod runtime;
+pub mod topology;
+pub mod tuning;
+pub mod util;
+
+pub use error::{Error, Result};

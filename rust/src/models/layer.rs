@@ -1,0 +1,122 @@
+//! Model/layer descriptors.
+
+/// One parameter tensor (weights of a conv/FC layer, or its bias).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Layer {
+    pub name: String,
+    /// Number of scalar parameters.
+    pub params: u64,
+}
+
+impl Layer {
+    pub fn new(name: impl Into<String>, params: u64) -> Layer {
+        Layer {
+            name: name.into(),
+            params,
+        }
+    }
+
+    /// Bytes at fp32.
+    pub fn bytes(&self) -> u64 {
+        self.params * 4
+    }
+}
+
+/// A DNN as its broadcastable parameter inventory.
+#[derive(Debug, Clone)]
+pub struct DnnModel {
+    pub name: String,
+    pub layers: Vec<Layer>,
+    /// Forward-pass FLOPs per sample (for the compute-time model in
+    /// `coordinator::train`; backward ≈ 2× forward).
+    pub fwd_flops: u64,
+}
+
+impl DnnModel {
+    pub fn total_params(&self) -> u64 {
+        self.layers.iter().map(|l| l.params).sum()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.layers.iter().map(|l| l.bytes()).sum()
+    }
+
+    /// Layer-size histogram against the paper's message classes:
+    /// small (≤8 KB), medium (≤512 KB), large (≤8 MB), very large (>8 MB).
+    pub fn size_class_histogram(&self) -> [usize; 4] {
+        let mut h = [0usize; 4];
+        for l in &self.layers {
+            let b = l.bytes();
+            let idx = if b <= 8 << 10 {
+                0
+            } else if b <= 512 << 10 {
+                1
+            } else if b <= 8 << 20 {
+                2
+            } else {
+                3
+            };
+            h[idx] += 1;
+        }
+        h
+    }
+
+    /// Helper: add a conv layer (kh × kw × cin × cout weights + bias).
+    pub fn conv(
+        mut self,
+        name: &str,
+        kh: u64,
+        kw: u64,
+        cin: u64,
+        cout: u64,
+    ) -> DnnModel {
+        self.layers
+            .push(Layer::new(format!("{name}.w"), kh * kw * cin * cout));
+        self.layers.push(Layer::new(format!("{name}.b"), cout));
+        self
+    }
+
+    /// Helper: add a fully-connected layer (in × out weights + bias).
+    pub fn fc(mut self, name: &str, cin: u64, cout: u64) -> DnnModel {
+        self.layers.push(Layer::new(format!("{name}.w"), cin * cout));
+        self.layers.push(Layer::new(format!("{name}.b"), cout));
+        self
+    }
+
+    pub fn new(name: impl Into<String>) -> DnnModel {
+        DnnModel {
+            name: name.into(),
+            layers: Vec::new(),
+            fwd_flops: 0,
+        }
+    }
+
+    /// Set the forward FLOPs-per-sample estimate.
+    pub fn with_flops(mut self, fwd_flops: u64) -> DnnModel {
+        self.fwd_flops = fwd_flops;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_counts() {
+        let m = DnnModel::new("toy").conv("c1", 3, 3, 3, 64).fc("f1", 100, 10);
+        assert_eq!(m.layers.len(), 4);
+        assert_eq!(m.total_params(), 3 * 3 * 3 * 64 + 64 + 1000 + 10);
+        assert_eq!(m.total_bytes(), m.total_params() * 4);
+    }
+
+    #[test]
+    fn histogram_buckets() {
+        let mut m = DnnModel::new("h");
+        m.layers.push(Layer::new("tiny", 10)); // 40 B -> small
+        m.layers.push(Layer::new("mid", 20_000)); // 80 KB -> medium
+        m.layers.push(Layer::new("big", 1 << 20)); // 4 MB -> large
+        m.layers.push(Layer::new("huge", 30 << 20)); // 120 MB -> very large
+        assert_eq!(m.size_class_histogram(), [1, 1, 1, 1]);
+    }
+}

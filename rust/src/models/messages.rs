@@ -1,0 +1,102 @@
+//! CNTK-style broadcast message schedules (§V-D).
+//!
+//! CA-CNTK exchanges training parameters with `MPI_Bcast` every
+//! iteration. The paper notes that "CNTK divides the communication based
+//! on the process count so the message-sizes can vary considerably":
+//! the flattened parameter vector is partitioned across ranks, each rank
+//! broadcasting its block after aggregation. We model both that
+//! partitioned schedule and the simpler per-layer one.
+
+use super::layer::DnnModel;
+
+/// How parameters map onto broadcast calls.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MessageSchedule {
+    /// One `MPI_Bcast` per parameter tensor, rooted at rank 0 (parameter-
+    /// server style). Message sizes = layer sizes.
+    PerLayer,
+    /// The flattened parameter vector is split into `n_ranks` near-equal
+    /// blocks; block `i` is broadcast from rank `i` (CNTK data-parallel
+    /// aggregation). Message sizes ≈ total/n — they shrink as the job
+    /// scales, which is exactly the §V-D observation.
+    Partitioned,
+}
+
+/// A broadcast call in the per-iteration schedule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BcastMsg {
+    pub root: usize,
+    pub bytes: u64,
+}
+
+/// The per-iteration broadcast calls for a model at a given scale.
+pub fn bcast_messages(model: &DnnModel, n_ranks: usize, schedule: MessageSchedule) -> Vec<BcastMsg> {
+    assert!(n_ranks >= 1);
+    match schedule {
+        MessageSchedule::PerLayer => model
+            .layers
+            .iter()
+            .map(|l| BcastMsg {
+                root: 0,
+                bytes: l.bytes(),
+            })
+            .collect(),
+        MessageSchedule::Partitioned => {
+            let total = model.total_bytes();
+            crate::comm::chunk::equal_parts(total, n_ranks)
+                .into_iter()
+                .enumerate()
+                .map(|(i, bytes)| BcastMsg { root: i, bytes })
+                .collect()
+        }
+    }
+}
+
+/// Total bytes a schedule moves per iteration (must equal the model size).
+pub fn schedule_bytes(msgs: &[BcastMsg]) -> u64 {
+    msgs.iter().map(|m| m.bytes).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo::{googlenet, vgg16};
+
+    #[test]
+    fn per_layer_matches_layer_sizes() {
+        let m = vgg16();
+        let msgs = bcast_messages(&m, 32, MessageSchedule::PerLayer);
+        assert_eq!(msgs.len(), m.layers.len());
+        assert_eq!(schedule_bytes(&msgs), m.total_bytes());
+        assert!(msgs.iter().all(|msg| msg.root == 0));
+    }
+
+    #[test]
+    fn partitioned_shrinks_with_scale() {
+        let m = vgg16();
+        let at8 = bcast_messages(&m, 8, MessageSchedule::Partitioned);
+        let at128 = bcast_messages(&m, 128, MessageSchedule::Partitioned);
+        assert_eq!(at8.len(), 8);
+        assert_eq!(at128.len(), 128);
+        assert!(at8[0].bytes > at128[0].bytes * 10);
+        assert_eq!(schedule_bytes(&at8), m.total_bytes());
+        assert_eq!(schedule_bytes(&at128), m.total_bytes());
+    }
+
+    #[test]
+    fn partitioned_roots_rotate() {
+        let m = googlenet();
+        let msgs = bcast_messages(&m, 4, MessageSchedule::Partitioned);
+        let roots: Vec<usize> = msgs.iter().map(|m| m.root).collect();
+        assert_eq!(roots, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn googlenet_partitioned_is_small_medium_at_scale() {
+        // §V-D: GoogLeNet at 128 ranks -> ~220 KB messages (medium)
+        let m = googlenet();
+        let msgs = bcast_messages(&m, 128, MessageSchedule::Partitioned);
+        assert!(msgs[0].bytes < 512 << 10);
+        assert!(msgs[0].bytes > 8 << 10);
+    }
+}

@@ -1,0 +1,17 @@
+//! DNN model descriptors and CNTK-style broadcast message schedules.
+//!
+//! The paper motivates its designs with the parameter-exchange traffic of
+//! real networks — LeNet, AlexNet, GoogLeNet, ResNet-50 and (for the
+//! application study, Fig. 3) VGG-16. What the broadcast layer sees is
+//! the *layer-size distribution*: VGG's 500+ MB of mostly-FC parameters
+//! force large messages, GoogLeNet's 7 M parameters mean small/medium
+//! traffic (§V-D). These descriptors carry exact layer shapes so the
+//! benchmark harness replays realistic message mixes.
+
+pub mod layer;
+pub mod messages;
+pub mod zoo;
+
+pub use layer::{DnnModel, Layer};
+pub use messages::{bcast_messages, MessageSchedule};
+pub use zoo::{alexnet, by_name, googlenet, lenet5, resnet50, vgg16, vgg_mini};

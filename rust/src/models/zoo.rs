@@ -1,0 +1,188 @@
+//! The model zoo: exact layer parameter inventories.
+//!
+//! Counts follow the original architecture papers. AlexNet is encoded
+//! ungrouped (the two-GPU grouping of the 2012 paper halves some conv
+//! params; broadcast traffic shape is unaffected). GoogLeNet's inception
+//! modules are encoded per-branch.
+
+use super::layer::DnnModel;
+
+/// LeNet-5 (61,706 params / ~241 KB) — the small end of the spectrum.
+pub fn lenet5() -> DnnModel {
+    DnnModel::new("lenet5")
+        .conv("conv1", 5, 5, 1, 6)
+        .conv("conv2", 5, 5, 6, 16)
+        .fc("fc1", 400, 120)
+        .fc("fc2", 120, 84)
+        .fc("fc3", 84, 10)
+        .with_flops(4_200_000) // ~4.2 MFLOP fwd
+}
+
+/// AlexNet (~62.4 M params / ~250 MB), ungrouped.
+pub fn alexnet() -> DnnModel {
+    DnnModel::new("alexnet")
+        .conv("conv1", 11, 11, 3, 96)
+        .conv("conv2", 5, 5, 96, 256)
+        .conv("conv3", 3, 3, 256, 384)
+        .conv("conv4", 3, 3, 384, 384)
+        .conv("conv5", 3, 3, 384, 256)
+        .fc("fc6", 9216, 4096)
+        .fc("fc7", 4096, 4096)
+        .fc("fc8", 4096, 1000)
+        .with_flops(720_000_000) // ~0.72 GFLOP fwd (227x227)
+}
+
+/// VGG-16 (~138.4 M params / ~553 MB) — the Fig. 3 workload. Its three
+/// FC layers carry ~124 M of the parameters: mostly-large messages.
+pub fn vgg16() -> DnnModel {
+    DnnModel::new("vgg16")
+        .conv("conv1_1", 3, 3, 3, 64)
+        .conv("conv1_2", 3, 3, 64, 64)
+        .conv("conv2_1", 3, 3, 64, 128)
+        .conv("conv2_2", 3, 3, 128, 128)
+        .conv("conv3_1", 3, 3, 128, 256)
+        .conv("conv3_2", 3, 3, 256, 256)
+        .conv("conv3_3", 3, 3, 256, 256)
+        .conv("conv4_1", 3, 3, 256, 512)
+        .conv("conv4_2", 3, 3, 512, 512)
+        .conv("conv4_3", 3, 3, 512, 512)
+        .conv("conv5_1", 3, 3, 512, 512)
+        .conv("conv5_2", 3, 3, 512, 512)
+        .conv("conv5_3", 3, 3, 512, 512)
+        .fc("fc6", 25088, 4096)
+        .fc("fc7", 4096, 4096)
+        .fc("fc8", 4096, 1000)
+        .with_flops(15_500_000_000) // ~15.5 GFLOP fwd (224x224)
+}
+
+/// GoogLeNet (~7.0 M params / ~28 MB) — "lesser number of parameters and
+/// thus a small/medium message communication requirement" (§V-D).
+pub fn googlenet() -> DnnModel {
+    let mut m = DnnModel::new("googlenet")
+        .conv("conv1", 7, 7, 3, 64)
+        .conv("conv2_reduce", 1, 1, 64, 64)
+        .conv("conv2", 3, 3, 64, 192);
+    // (name, cin, 1x1, 3x3red, 3x3, 5x5red, 5x5, pool_proj)
+    let inceptions: [(&str, u64, u64, u64, u64, u64, u64, u64); 9] = [
+        ("3a", 192, 64, 96, 128, 16, 32, 32),
+        ("3b", 256, 128, 128, 192, 32, 96, 64),
+        ("4a", 480, 192, 96, 208, 16, 48, 64),
+        ("4b", 512, 160, 112, 224, 24, 64, 64),
+        ("4c", 512, 128, 128, 256, 24, 64, 64),
+        ("4d", 512, 112, 144, 288, 32, 64, 64),
+        ("4e", 528, 256, 160, 320, 32, 128, 128),
+        ("5a", 832, 256, 160, 320, 32, 128, 128),
+        ("5b", 832, 384, 192, 384, 48, 128, 128),
+    ];
+    for (name, cin, c1, c3r, c3, c5r, c5, pp) in inceptions {
+        m = m
+            .conv(&format!("i{name}.1x1"), 1, 1, cin, c1)
+            .conv(&format!("i{name}.3x3r"), 1, 1, cin, c3r)
+            .conv(&format!("i{name}.3x3"), 3, 3, c3r, c3)
+            .conv(&format!("i{name}.5x5r"), 1, 1, cin, c5r)
+            .conv(&format!("i{name}.5x5"), 5, 5, c5r, c5)
+            .conv(&format!("i{name}.pool"), 1, 1, cin, pp);
+    }
+    m.fc("fc", 1024, 1000).with_flops(1_600_000_000) // ~1.6 GFLOP fwd
+}
+
+/// ResNet-50 (~25.6 M params / ~102 MB), encoded per bottleneck block.
+pub fn resnet50() -> DnnModel {
+    let mut m = DnnModel::new("resnet50").conv("conv1", 7, 7, 3, 64);
+    // (stage, blocks, cin_first, mid, cout)
+    let stages: [(&str, u64, u64, u64, u64); 4] = [
+        ("conv2", 3, 64, 64, 256),
+        ("conv3", 4, 256, 128, 512),
+        ("conv4", 6, 512, 256, 1024),
+        ("conv5", 3, 1024, 512, 2048),
+    ];
+    for (stage, blocks, cin_first, mid, cout) in stages {
+        for b in 0..blocks {
+            let cin = if b == 0 { cin_first } else { cout };
+            m = m
+                .conv(&format!("{stage}_{b}.a"), 1, 1, cin, mid)
+                .conv(&format!("{stage}_{b}.b"), 3, 3, mid, mid)
+                .conv(&format!("{stage}_{b}.c"), 1, 1, mid, cout);
+            if b == 0 {
+                m = m.conv(&format!("{stage}_{b}.down"), 1, 1, cin, cout);
+            }
+        }
+    }
+    m.fc("fc", 2048, 1000).with_flops(3_900_000_000) // ~3.9 GFLOP fwd
+}
+
+/// VGG-mini: the E2E training workload (the AOT-compiled JAX model in
+/// `python/compile/model.py`). A VGG-spirit MLP over 32×32×3 inputs —
+/// small enough to train on CPU PJRT in the e2e_train example, with the
+/// same "few huge FC layers + small biases" message-size signature.
+pub fn vgg_mini() -> DnnModel {
+    DnnModel::new("vgg-mini")
+        .fc("fc1", 3072, 512)
+        .fc("fc2", 512, 256)
+        .fc("fc3", 256, 10)
+        .with_flops(3_500_000) // ~2 x 1.74M params
+}
+
+/// Look up a model by CLI name.
+pub fn by_name(name: &str) -> Option<DnnModel> {
+    match name.to_ascii_lowercase().as_str() {
+        "lenet" | "lenet5" => Some(lenet5()),
+        "alexnet" => Some(alexnet()),
+        "vgg" | "vgg16" => Some(vgg16()),
+        "googlenet" => Some(googlenet()),
+        "resnet" | "resnet50" => Some(resnet50()),
+        "vgg-mini" | "vggmini" => Some(vgg_mini()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lenet_exact() {
+        assert_eq!(lenet5().total_params(), 61_706);
+    }
+
+    #[test]
+    fn vgg16_close_to_138m() {
+        let p = vgg16().total_params();
+        assert!((p as i64 - 138_357_544).abs() < 10, "got {p}");
+    }
+
+    #[test]
+    fn alexnet_around_62m() {
+        let p = alexnet().total_params();
+        assert!((60_000_000..66_000_000).contains(&p), "got {p}");
+    }
+
+    #[test]
+    fn googlenet_around_7m() {
+        let p = googlenet().total_params();
+        assert!((5_500_000..7_500_000).contains(&p), "got {p}");
+    }
+
+    #[test]
+    fn resnet50_around_25m() {
+        let p = resnet50().total_params();
+        assert!((23_000_000..27_000_000).contains(&p), "got {p}");
+    }
+
+    #[test]
+    fn vgg_has_mostly_large_bytes() {
+        let m = vgg16();
+        let h = m.size_class_histogram();
+        // FC weights are "very large"; biases are small — the §V-D mix
+        assert!(h[3] >= 3);
+        assert!(h[0] >= 10);
+    }
+
+    #[test]
+    fn zoo_lookup() {
+        for name in ["lenet", "alexnet", "vgg16", "googlenet", "resnet50", "vgg-mini"] {
+            assert!(by_name(name).is_some(), "{name}");
+        }
+        assert!(by_name("skynet").is_none());
+    }
+}

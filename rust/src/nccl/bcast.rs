@@ -1,0 +1,242 @@
+//! `ncclBcast` model: persistent-kernel ring pipeline.
+
+use crate::collectives::{BcastPlan, BcastSpec, FlowEdge};
+use crate::netsim::{OpId, Plan, SimOp};
+use crate::topology::Cluster;
+
+use super::cost::NcclParams;
+use super::ring::ring_from;
+
+/// Build the intranode `ncclBcast` plan over ranks `ranks` (global rank
+/// ids on ONE node) rooted at `root`, moving `bytes`.
+///
+/// Structure: one kernel-launch `Delay` per GPU, then the message moves
+/// around the topology ring in `slice_bytes` slices; each hop of each
+/// slice costs `hop_ns` (flag sync + copy start) and rides the PCIe
+/// fabric at `copy_bw`. Pairs without peer access bounce through the
+/// source's host (pinned staging), as NCCL 1.x's via-host transport does.
+pub fn plan_ring(
+    cluster: &Cluster,
+    params: &NcclParams,
+    ranks: &[usize],
+    root: usize,
+    bytes: u64,
+    // chunk labels get offset by this (hierarchical pipelining reuses us
+    // per chunk)
+    chunk_base: usize,
+    plan: &mut Plan,
+    edges: &mut Vec<FlowEdge>,
+    launch: &[Option<OpId>],
+    // per-rank op that must precede the root's first send (e.g. the
+    // internode delivery of this chunk in hierarchical mode)
+    root_ready: Option<OpId>,
+) -> Vec<Option<OpId>> {
+    let ring = ring_from(ranks, root);
+    let slices = crate::comm::chunk_sizes(bytes, params.slice_bytes);
+    // last delivery op per ring position
+    let mut last_recv: Vec<Option<OpId>> = vec![None; ring.len()];
+    // recv op of each slice at the previous ring position
+    let mut prev_recv: Vec<Option<OpId>> = vec![None; slices.len()];
+    for (pos, pair) in ring.windows(2).enumerate() {
+        let (src, dst) = (pair[0], pair[1]);
+        let src_dev = cluster.rank_device(src);
+        let dst_dev = cluster.rank_device(dst);
+        let peer = cluster.peer_access(src_dev, dst_dev);
+        for (s, &sbytes) in slices.iter().enumerate() {
+            let mut deps: Vec<OpId> = Vec::new();
+            if let Some(op) = prev_recv[s] {
+                deps.push(op); // slice must have arrived at src
+            } else if let Some(op) = root_ready {
+                deps.push(op); // root's data availability (hierarchical)
+            }
+            if let Some(op) = launch[src] {
+                deps.push(op);
+            }
+            if let Some(op) = launch[dst] {
+                deps.push(op);
+            }
+            let label = Some((dst, chunk_base + s));
+            let op = if peer {
+                let route = cluster.route(src_dev, dst_dev).expect("ring route");
+                plan.push(
+                    SimOp::Transfer {
+                        route,
+                        bytes: sbytes,
+                        overhead_ns: params.hop_ns,
+                        issue_ns: params.hop_ns,
+                        bw_cap: Some(params.copy_bw),
+                    },
+                    deps,
+                    label,
+                )
+            } else {
+                // via-host transport: bounce through the source's socket
+                // host (pinned buffer), two capped copies
+                let host = cluster.staging_host(src_dev).expect("host");
+                let first = cluster.route(src_dev, host).expect("d2h");
+                let second = cluster.route(host, dst_dev).expect("h2d");
+                let mid = plan.push(
+                    SimOp::Transfer {
+                        route: first,
+                        bytes: sbytes,
+                        overhead_ns: params.hop_ns,
+                        issue_ns: params.hop_ns,
+                        bw_cap: Some(params.copy_bw),
+                    },
+                    deps,
+                    None,
+                );
+                plan.push(
+                    SimOp::Transfer {
+                        route: second,
+                        bytes: sbytes,
+                        overhead_ns: params.hop_ns,
+                        issue_ns: params.hop_ns,
+                        bw_cap: Some(params.copy_bw),
+                    },
+                    vec![mid],
+                    label,
+                )
+            };
+            edges.push(FlowEdge {
+                src,
+                dst,
+                chunk: chunk_base + s,
+                op,
+            });
+            prev_recv[s] = Some(op);
+            last_recv[pos + 1] = Some(op);
+        }
+    }
+    // map back to per-global-rank last recv
+    let mut out: Vec<Option<OpId>> = vec![None; cluster.n_gpus()];
+    for (pos, &r) in ring.iter().enumerate() {
+        out[r] = last_recv[pos];
+    }
+    out
+}
+
+/// The standalone `ncclBcast` over one node's ranks.
+pub fn plan_intranode(
+    cluster: &Cluster,
+    params: &NcclParams,
+    spec: &BcastSpec,
+) -> BcastPlan {
+    assert!(
+        spec.n_ranks <= cluster.n_gpus(),
+        "more ranks than cluster GPUs"
+    );
+    let ranks: Vec<usize> = (0..spec.n_ranks).collect();
+    // all participating GPUs must be on one node (NCCL 1.x limitation)
+    let n0 = cluster.device(cluster.rank_device(0)).node;
+    assert!(
+        ranks
+            .iter()
+            .all(|&r| cluster.device(cluster.rank_device(r)).node == n0),
+        "NCCL 1.x is single-node only (§II-B)"
+    );
+    let mut plan = Plan::new();
+    let mut edges = Vec::new();
+    // parallel kernel launches
+    let mut launch: Vec<Option<OpId>> = vec![None; cluster.n_gpus()];
+    for &r in &ranks {
+        let dev = cluster.rank_device(r);
+        launch[r] = Some(plan.push(
+            SimOp::Delay {
+                dev,
+                dur_ns: params.launch_ns,
+            },
+            vec![],
+            None,
+        ));
+    }
+    plan_ring(
+        cluster,
+        params,
+        &ranks,
+        spec.root,
+        spec.bytes,
+        0,
+        &mut plan,
+        &mut edges,
+        &launch,
+        None,
+    );
+    let n_chunks = params.n_slices(spec.bytes);
+    BcastPlan {
+        plan,
+        edges,
+        n_chunks,
+        spec: spec.clone(),
+        algorithm: "nccl-bcast".into(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::Engine;
+    use crate::topology::presets::kesch;
+
+    #[test]
+    fn small_message_dominated_by_launch() {
+        let c = kesch(1, 2);
+        let params = NcclParams::default();
+        let spec = BcastSpec::new(0, 2, 4);
+        let bp = plan_intranode(&c, &params, &spec);
+        let mut e = Engine::new(&c);
+        let t = e.execute(&bp.plan).makespan;
+        assert!(t >= params.launch_ns);
+        assert!(t < params.launch_ns + 10_000);
+    }
+
+    #[test]
+    fn large_message_approaches_copy_bw() {
+        let c = kesch(1, 4);
+        let params = NcclParams::default();
+        let m = 128 << 20;
+        let spec = BcastSpec::new(0, 4, m);
+        let bp = plan_intranode(&c, &params, &spec);
+        let mut e = Engine::new(&c);
+        let t = e.execute(&bp.plan).makespan;
+        let ideal_ns = (m as f64 / params.copy_bw * 1e9) as u64;
+        assert!(t > ideal_ns, "can't beat the copy ceiling");
+        assert!(
+            t < 2 * ideal_ns,
+            "ring pipeline should be near bandwidth-optimal: {t} vs {ideal_ns}"
+        );
+    }
+
+    #[test]
+    fn validates_as_broadcast() {
+        let c = kesch(1, 8);
+        let params = NcclParams::default();
+        let spec = BcastSpec::new(0, 8, 3 << 20);
+        let bp = plan_intranode(&c, &params, &spec);
+        let mut e = Engine::new(&c);
+        let result = e.execute(&bp.plan);
+        crate::collectives::validate::validate(&bp, &result).unwrap();
+    }
+
+    #[test]
+    fn sixteen_gpu_ring_bounces_once() {
+        let c = kesch(1, 16);
+        let params = NcclParams::default();
+        let spec = BcastSpec::new(0, 16, 4);
+        let bp = plan_intranode(&c, &params, &spec);
+        let mut e = Engine::new(&c);
+        let result = e.execute(&bp.plan);
+        crate::collectives::validate::validate(&bp, &result).unwrap();
+        // 15 forwarding hops, one staged (2 ops) + 16 launches
+        assert_eq!(bp.plan.len(), 16 + 15 + 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "single-node")]
+    fn multinode_rejected() {
+        let c = kesch(2, 8);
+        let params = NcclParams::default();
+        let spec = BcastSpec::new(0, 16, 4);
+        let _ = plan_intranode(&c, &params, &spec);
+    }
+}

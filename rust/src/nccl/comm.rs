@@ -1,0 +1,104 @@
+//! NCCL communicator lifecycle (§II-D).
+//!
+//! Integrating NCCL into an MPI runtime means managing NCCL communicators
+//! and CUDA streams *in addition to* MPI communicators. On systems where
+//! some GPU pairs lack peer access, a single communicator clique may not
+//! be optimal and multiple communicators must be created and stitched —
+//! the design complexity the paper cites as a reason to avoid NCCL
+//! integration altogether.
+
+use crate::topology::Cluster;
+
+/// One NCCL communicator: a clique of ranks that can ring amongst
+/// themselves with peer access (plus at most the unavoidable boundary
+/// crossings).
+#[derive(Debug, Clone)]
+pub struct NcclComm {
+    /// Global ranks in the communicator, ring order.
+    pub ranks: Vec<usize>,
+    /// One-time creation cost (ncclCommInitAll + stream setup), ns. Paid
+    /// at communicator creation, not per collective — but it is why
+    /// communicator churn is expensive.
+    pub setup_ns: u64,
+}
+
+/// Communicator plan for one node: either a single ring communicator or
+/// one per peer-access clique.
+#[derive(Debug, Clone)]
+pub struct CommPlan {
+    pub comms: Vec<NcclComm>,
+    /// True when the node needed more than one clique (no peer access
+    /// across some boundary).
+    pub fragmented: bool,
+}
+
+/// ncclCommInitAll is of order tens of ms; we charge a per-rank cost.
+pub const SETUP_PER_RANK_NS: u64 = 9_000_000;
+
+/// Build the communicator plan for the node-local ranks `ranks`.
+pub fn plan_comms(cluster: &Cluster, ranks: &[usize]) -> CommPlan {
+    assert!(!ranks.is_empty());
+    // greedy clique split: walk ranks in topology order, cut where peer
+    // access breaks
+    let mut cliques: Vec<Vec<usize>> = vec![vec![ranks[0]]];
+    for w in ranks.windows(2) {
+        let (a, b) = (w[0], w[1]);
+        let peer = cluster.peer_access(cluster.rank_device(a), cluster.rank_device(b));
+        if peer {
+            cliques.last_mut().unwrap().push(b);
+        } else {
+            cliques.push(vec![b]);
+        }
+    }
+    let fragmented = cliques.len() > 1;
+    let comms = cliques
+        .into_iter()
+        .map(|ranks| {
+            let setup_ns = SETUP_PER_RANK_NS * ranks.len() as u64;
+            NcclComm { ranks, setup_ns }
+        })
+        .collect();
+    CommPlan { comms, fragmented }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::presets::{dgx1, kesch};
+
+    #[test]
+    fn kesch_16_fragments_at_socket() {
+        let c = kesch(1, 16);
+        let ranks: Vec<usize> = (0..16).collect();
+        let plan = plan_comms(&c, &ranks);
+        assert!(plan.fragmented);
+        assert_eq!(plan.comms.len(), 2);
+        assert_eq!(plan.comms[0].ranks.len(), 8);
+    }
+
+    #[test]
+    fn kesch_4_single_comm() {
+        let c = kesch(1, 4);
+        let ranks: Vec<usize> = (0..4).collect();
+        let plan = plan_comms(&c, &ranks);
+        assert!(!plan.fragmented);
+        assert_eq!(plan.comms.len(), 1);
+    }
+
+    #[test]
+    fn dgx1_nvlink_keeps_one_comm() {
+        let c = dgx1(1, 8, true);
+        let ranks: Vec<usize> = (0..8).collect();
+        let plan = plan_comms(&c, &ranks);
+        assert!(!plan.fragmented, "NVLink mesh gives full peer access");
+    }
+
+    #[test]
+    fn setup_cost_scales_with_ranks() {
+        let c = kesch(1, 8);
+        let ranks: Vec<usize> = (0..8).collect();
+        let plan = plan_comms(&c, &ranks);
+        let total: u64 = plan.comms.iter().map(|c| c.setup_ns).sum();
+        assert_eq!(total, 8 * SETUP_PER_RANK_NS);
+    }
+}

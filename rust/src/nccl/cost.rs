@@ -1,0 +1,59 @@
+//! NCCL cost constants.
+//!
+//! Calibrated against published NCCL 1.x microbenchmarks (see DESIGN.md
+//! §4): small-message `ncclBcast` latency on 2–8 GPU PCIe boxes sits in
+//! the 25–50 µs range regardless of size (kernel launch + ring setup),
+//! while large-message bandwidth approaches the PCIe copy ceiling.
+
+/// Behavioural constants for the NCCL model.
+#[derive(Debug, Clone)]
+pub struct NcclParams {
+    /// CUDA kernel launch + argument setup per collective call, per GPU
+    /// (they launch in parallel streams), ns.
+    pub launch_ns: u64,
+    /// Per-hop per-slice synchronisation/copy initiation inside the
+    /// persistent kernel (flag spin + warp copy start), ns.
+    pub hop_ns: u64,
+    /// Ring slice granularity, bytes (NCCL_BUFFSIZE-style slicing).
+    pub slice_bytes: u64,
+    /// Effective CUDA-kernel copy bandwidth through the PCIe fabric
+    /// (peer-access path), bytes/s.
+    pub copy_bw: f64,
+    /// Stream-synchronisation cost the host pays to observe completion —
+    /// charged by the MPI integration (§II-D), not by pure-NCCL callers
+    /// who keep work on-stream.
+    pub sync_ns: u64,
+}
+
+impl Default for NcclParams {
+    fn default() -> Self {
+        NcclParams {
+            launch_ns: 27_000,
+            hop_ns: 1_300,
+            slice_bytes: 256 << 10,
+            copy_bw: 9.5e9,
+            sync_ns: 24_000,
+        }
+    }
+}
+
+impl NcclParams {
+    /// Slice count for a message (at least 1).
+    pub fn n_slices(&self, bytes: u64) -> usize {
+        crate::comm::chunk_sizes(bytes, self.slice_bytes).len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_sane() {
+        let p = NcclParams::default();
+        assert!(p.launch_ns > 10_000, "NCCL launch cost is tens of µs");
+        assert!(p.copy_bw < 12.0e9, "CUDA copy can't beat PCIe");
+        assert_eq!(p.n_slices(4), 1);
+        assert_eq!(p.n_slices(1 << 20), 4);
+    }
+}

@@ -1,0 +1,28 @@
+//! NVIDIA NCCL 1.3 behavioural model (§II-B of the paper) and the
+//! NCCL-integrated `MPI_Bcast` hybrid of the authors' earlier work [4]
+//! (§II-D).
+//!
+//! NCCL 1.x is a single-node, ring-based collective library: every
+//! collective is one persistent CUDA kernel per GPU that moves data
+//! around a topology-ordered ring in fine-grained slices, synchronising
+//! hop-by-hop with flags. That design has two consequences the paper
+//! exploits:
+//!
+//! * **great large-message bandwidth** — the ring pipeline saturates the
+//!   PCIe fabric;
+//! * **poor small/medium-message latency** — every call pays CUDA kernel
+//!   launch + ring traversal costs (tens of µs) that a CPU-driven MPI
+//!   runtime simply does not have.
+//!
+//! [`bcast::plan_intranode`] models `ncclBcast`; [`hierarchical`] models
+//! the NCCL-integrated `MPI_Bcast` (NCCL ring inside each node + tuned
+//! MPI internode), including the stream-synchronisation cost the MPI
+//! integration must pay on every call (§II-D).
+
+pub mod bcast;
+pub mod comm;
+pub mod cost;
+pub mod hierarchical;
+pub mod ring;
+
+pub use cost::NcclParams;

@@ -1,0 +1,69 @@
+//! Ring construction.
+//!
+//! NCCL orders the ring by PCIe topology so adjacent ring positions are
+//! cheap hops (same PLX where possible) and the expensive boundary (QPI)
+//! is crossed exactly once. Our cluster presets enumerate GPUs in
+//! exactly that order, so the ring is rank order rotated to the root.
+
+use crate::topology::Cluster;
+
+/// The ring (as rank indices) for a broadcast rooted at `root` over the
+/// node-local ranks `ranks` (global rank numbers, topology-ordered).
+/// The root leads; the ring follows topology order from it, wrapping.
+pub fn ring_from(ranks: &[usize], root: usize) -> Vec<usize> {
+    let pos = ranks
+        .iter()
+        .position(|&r| r == root)
+        .expect("root must be a member of the ring");
+    let mut out = Vec::with_capacity(ranks.len());
+    for i in 0..ranks.len() {
+        out.push(ranks[(pos + i) % ranks.len()]);
+    }
+    out
+}
+
+/// Count how many adjacent ring pairs lack peer access (each such pair
+/// forces a host bounce — and, per §II-D, potentially a separate NCCL
+/// communicator clique on older systems).
+pub fn bounce_count(cluster: &Cluster, ring: &[usize]) -> usize {
+    ring.windows(2)
+        .filter(|w| {
+            !cluster.peer_access(cluster.rank_device(w[0]), cluster.rank_device(w[1]))
+        })
+        .count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::presets::kesch;
+
+    #[test]
+    fn ring_rotation() {
+        let ranks = vec![0, 1, 2, 3];
+        assert_eq!(ring_from(&ranks, 2), vec![2, 3, 0, 1]);
+        assert_eq!(ring_from(&ranks, 0), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn kesch_ring_crosses_qpi_once_for_16() {
+        let c = kesch(1, 16);
+        let ranks: Vec<usize> = (0..16).collect();
+        let ring = ring_from(&ranks, 0);
+        // rank 7 -> 8 crosses sockets; everything else stays on PCIe
+        assert_eq!(bounce_count(&c, &ring), 1);
+    }
+
+    #[test]
+    fn kesch_ring_4_has_no_bounce() {
+        let c = kesch(1, 4);
+        let ranks: Vec<usize> = (0..4).collect();
+        assert_eq!(bounce_count(&c, &ring_from(&ranks, 0)), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "member")]
+    fn root_must_be_member() {
+        ring_from(&[1, 2, 3], 0);
+    }
+}

@@ -1,0 +1,374 @@
+//! The discrete-event executor.
+//!
+//! Greedy list scheduling over the op DAG: ops become *ready* when all
+//! dependencies complete; ready ops are processed in (ready-time, op-id)
+//! order; each transfer's actual start is pushed past the free time of
+//! every link on its route (cut-through occupancy), giving FIFO link
+//! contention. Deterministic by construction.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::topology::Cluster;
+
+use super::time::{tx_ns, SimTime};
+use super::transfer::{OpId, Plan, SimOp};
+
+/// Execution outcome: per-op timestamps plus the makespan.
+#[derive(Debug, Clone)]
+pub struct ExecResult {
+    pub start: Vec<SimTime>,
+    pub done: Vec<SimTime>,
+    pub makespan: SimTime,
+}
+
+impl ExecResult {
+    /// Completion time of the transfer that delivered `(rank, chunk)`,
+    /// given the plan the result came from.
+    pub fn delivery_time(&self, plan: &Plan, rank: usize, chunk: usize) -> Option<SimTime> {
+        plan.deliveries().get(&(rank, chunk)).map(|&id| self.done[id])
+    }
+
+    /// Per-rank completion: max completion over all labelled deliveries to
+    /// that rank. Ranks with no deliveries (the root) report 0.
+    pub fn rank_completion(&self, plan: &Plan, n_ranks: usize) -> Vec<SimTime> {
+        let mut out = vec![0; n_ranks];
+        for (id, op) in plan.ops.iter().enumerate() {
+            if let Some((rank, _chunk)) = op.label {
+                if rank < n_ranks {
+                    out[rank] = out[rank].max(self.done[id]);
+                }
+            }
+        }
+        out
+    }
+}
+
+/// The simulator engine. Holds reusable scratch state so sweeps don't
+/// re-allocate per broadcast (hot path — see DESIGN.md §Perf).
+pub struct Engine<'c> {
+    cluster: &'c Cluster,
+    link_free: Vec<SimTime>,
+    dev_free: Vec<SimTime>,
+    // reusable scratch (per-plan O(n) state) — avoids reallocating on
+    // every broadcast of a sweep. CSR layout for the dependents graph
+    // instead of a Vec<Vec<_>> (§Perf: the per-op Vec allocations made
+    // large plans superlinear).
+    indegree: Vec<u32>,
+    ready_time: Vec<SimTime>,
+    dep_offsets: Vec<u32>,
+    dep_targets: Vec<OpId>,
+    heap: BinaryHeap<Reverse<(SimTime, OpId)>>,
+}
+
+impl<'c> Engine<'c> {
+    pub fn new(cluster: &'c Cluster) -> Engine<'c> {
+        Engine {
+            cluster,
+            link_free: vec![0; cluster.n_links()],
+            dev_free: vec![0; cluster.n_devices()],
+            indegree: Vec::new(),
+            ready_time: Vec::new(),
+            dep_offsets: Vec::new(),
+            dep_targets: Vec::new(),
+            heap: BinaryHeap::new(),
+        }
+    }
+
+    pub fn cluster(&self) -> &Cluster {
+        self.cluster
+    }
+
+    /// Execute a plan starting at virtual time 0.
+    pub fn execute(&mut self, plan: &Plan) -> ExecResult {
+        self.link_free.iter_mut().for_each(|t| *t = 0);
+        self.dev_free.iter_mut().for_each(|t| *t = 0);
+
+        let n = plan.ops.len();
+        // CSR reverse-dependency graph: dep_offsets[d]..dep_offsets[d+1]
+        // indexes dep_targets with the ops depending on d
+        self.indegree.clear();
+        self.indegree.resize(n, 0);
+        self.dep_offsets.clear();
+        self.dep_offsets.resize(n + 1, 0);
+        for op in plan.ops.iter() {
+            for &d in &op.deps {
+                self.dep_offsets[d + 1] += 1;
+            }
+        }
+        for i in 0..n {
+            self.dep_offsets[i + 1] += self.dep_offsets[i];
+        }
+        let total_deps = self.dep_offsets[n] as usize;
+        self.dep_targets.clear();
+        self.dep_targets.resize(total_deps, 0);
+        {
+            let mut cursor: Vec<u32> = self.dep_offsets[..n].to_vec();
+            for (id, op) in plan.ops.iter().enumerate() {
+                self.indegree[id] = op.deps.len() as u32;
+                for &d in &op.deps {
+                    self.dep_targets[cursor[d] as usize] = id;
+                    cursor[d] += 1;
+                }
+            }
+        }
+
+        self.ready_time.clear();
+        self.ready_time.resize(n, 0);
+        let mut start = vec![0; n];
+        let mut done = vec![0; n];
+        // (ready, id) min-heap
+        self.heap.clear();
+        for id in 0..n {
+            if self.indegree[id] == 0 {
+                self.heap.push(Reverse((0, id)));
+            }
+        }
+
+        let mut processed = 0usize;
+        let mut makespan: SimTime = 0;
+        while let Some(Reverse((ready, id))) = self.heap.pop() {
+            processed += 1;
+            let (s, d) = self.run_op(&plan.ops[id].op, ready);
+            start[id] = s;
+            done[id] = d;
+            makespan = makespan.max(d);
+            let lo = self.dep_offsets[id] as usize;
+            let hi = self.dep_offsets[id + 1] as usize;
+            for i in lo..hi {
+                let dep = self.dep_targets[i];
+                self.ready_time[dep] = self.ready_time[dep].max(d);
+                self.indegree[dep] -= 1;
+                if self.indegree[dep] == 0 {
+                    self.heap.push(Reverse((self.ready_time[dep], dep)));
+                }
+            }
+        }
+        assert_eq!(
+            processed, n,
+            "plan has a dependency cycle ({processed}/{n} ops ran)"
+        );
+
+        ExecResult {
+            start,
+            done,
+            makespan,
+        }
+    }
+
+    /// Run one op at its ready time; returns (actual start, completion).
+    fn run_op(&mut self, op: &SimOp, ready: SimTime) -> (SimTime, SimTime) {
+        match op {
+            SimOp::Delay { dev, dur_ns } => {
+                let s = ready.max(self.dev_free[dev.0]);
+                let d = s + dur_ns;
+                self.dev_free[dev.0] = d;
+                (s, d)
+            }
+            SimOp::Transfer {
+                route,
+                bytes,
+                overhead_ns,
+                issue_ns,
+                bw_cap,
+            } => {
+                if route.hops.is_empty() {
+                    // local (same-device) op: pure overhead
+                    return (ready, ready + overhead_ns);
+                }
+                // start after every link on the path is free (cut-through:
+                // the message occupies the whole path simultaneously)
+                let mut s = ready;
+                for &h in &route.hops {
+                    s = s.max(self.link_free[h.0]);
+                }
+                let eff_bw = match bw_cap {
+                    Some(cap) => route.bottleneck_bw.min(*cap),
+                    None => route.bottleneck_bw,
+                };
+                let tx = tx_ns(*bytes, eff_bw);
+                // Each link is busy for the transfer's *issue* cost plus
+                // its own transmission time. MPI sends set issue == t_s,
+                // which makes back-to-back chunks on one link cost
+                // (t_s + C/B) each — the pipelining model of the paper's
+                // Eq. (5).
+                for &h in &route.hops {
+                    let link_bw = match bw_cap {
+                        Some(cap) => self.cluster.link(h).bandwidth.min(*cap),
+                        None => self.cluster.link(h).bandwidth,
+                    };
+                    self.link_free[h.0] = s + issue_ns + tx_ns(*bytes, link_bw);
+                }
+                let d = s + overhead_ns + route.latency_ns + tx;
+                (s, d)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::transfer::Plan;
+    use crate::topology::presets::flat;
+
+    fn transfer_plan(cluster: &Cluster, pairs: &[(usize, usize, u64)]) -> Plan {
+        let mut plan = Plan::new();
+        for &(src, dst, bytes) in pairs {
+            let route = cluster
+                .route(cluster.rank_device(src), cluster.rank_device(dst))
+                .unwrap();
+            plan.push(
+                SimOp::Transfer {
+                    route,
+                    bytes,
+                    overhead_ns: 1000,
+                    issue_ns: 1000,
+                    bw_cap: None,
+                },
+                vec![],
+                Some((dst, 0)),
+            );
+        }
+        plan
+    }
+
+    #[test]
+    fn single_transfer_cost() {
+        let c = flat(2);
+        let mut e = Engine::new(&c);
+        let plan = transfer_plan(&c, &[(0, 1, 10_000_000)]);
+        let r = e.execute(&plan);
+        // 10 MB over 10 GB/s = 1 ms, + 1 µs overhead, 0 latency
+        assert_eq!(r.makespan, 1_000_000 + 1000);
+    }
+
+    #[test]
+    fn independent_transfers_overlap() {
+        let c = flat(4);
+        let mut e = Engine::new(&c);
+        // 0->1 and 2->3 share no links
+        let plan = transfer_plan(&c, &[(0, 1, 10_000_000), (2, 3, 10_000_000)]);
+        let r = e.execute(&plan);
+        assert_eq!(r.makespan, 1_001_000);
+    }
+
+    #[test]
+    fn shared_source_link_serialises() {
+        let c = flat(3);
+        let mut e = Engine::new(&c);
+        // 0->1 and 0->2 share the 0->xbar uplink
+        let plan = transfer_plan(&c, &[(0, 1, 10_000_000), (0, 2, 10_000_000)]);
+        let r = e.execute(&plan);
+        // second transfer waits for the first's t_s + transmission
+        // (1µs + 1ms), then pays its own t_s + 1ms
+        assert_eq!(r.makespan, 2 * (1_000_000 + 1000));
+    }
+
+    #[test]
+    fn deps_respected() {
+        let c = flat(3);
+        let mut e = Engine::new(&c);
+        let mut plan = Plan::new();
+        let r01 = c.route(c.rank_device(0), c.rank_device(1)).unwrap();
+        let r12 = c.route(c.rank_device(1), c.rank_device(2)).unwrap();
+        let a = plan.push(
+            SimOp::Transfer {
+                route: r01,
+                bytes: 10_000_000,
+                overhead_ns: 0,
+                issue_ns: 0,
+                bw_cap: None,
+            },
+            vec![],
+            Some((1, 0)),
+        );
+        plan.push(
+            SimOp::Transfer {
+                route: r12,
+                bytes: 10_000_000,
+                overhead_ns: 0,
+                issue_ns: 0,
+                bw_cap: None,
+            },
+            vec![a],
+            Some((2, 0)),
+        );
+        let r = e.execute(&plan);
+        assert_eq!(r.makespan, 2_000_000); // strictly sequential
+        assert_eq!(r.start[1], 1_000_000);
+    }
+
+    #[test]
+    fn bw_cap_applies() {
+        let c = flat(2);
+        let mut e = Engine::new(&c);
+        let route = c.route(c.rank_device(0), c.rank_device(1)).unwrap();
+        let mut plan = Plan::new();
+        plan.push(
+            SimOp::Transfer {
+                route,
+                bytes: 10_000_000,
+                overhead_ns: 0,
+                issue_ns: 0,
+                bw_cap: Some(2.0e9),
+            },
+            vec![],
+            None,
+        );
+        let r = e.execute(&plan);
+        assert_eq!(r.makespan, 5_000_000); // 10MB at 2GB/s
+    }
+
+    #[test]
+    fn delay_serialises_on_device() {
+        let c = flat(1);
+        let mut e = Engine::new(&c);
+        let mut plan = Plan::new();
+        let dev = c.rank_device(0);
+        plan.push(SimOp::Delay { dev, dur_ns: 500 }, vec![], None);
+        plan.push(SimOp::Delay { dev, dur_ns: 300 }, vec![], None);
+        let r = e.execute(&plan);
+        assert_eq!(r.makespan, 800);
+    }
+
+    #[test]
+    fn rank_completion_maps_labels() {
+        let c = flat(3);
+        let mut e = Engine::new(&c);
+        let plan = transfer_plan(&c, &[(0, 1, 1000), (0, 2, 1000)]);
+        let r = e.execute(&plan);
+        let rc = r.rank_completion(&plan, 3);
+        assert_eq!(rc[0], 0);
+        assert!(rc[1] > 0 && rc[2] > 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "cycle")]
+    fn cycle_detected() {
+        // construct a cyclic plan by hand (bypassing push's debug_assert)
+        let c = flat(2);
+        let mut plan = Plan::new();
+        plan.push(
+            SimOp::Delay {
+                dev: c.rank_device(0),
+                dur_ns: 1,
+            },
+            vec![],
+            None,
+        );
+        plan.ops[0].deps = vec![0];
+        let mut e = Engine::new(&c);
+        e.execute(&plan);
+    }
+
+    #[test]
+    fn engine_reuse_resets_state() {
+        let c = flat(2);
+        let mut e = Engine::new(&c);
+        let plan = transfer_plan(&c, &[(0, 1, 10_000_000)]);
+        let first = e.execute(&plan).makespan;
+        let second = e.execute(&plan).makespan;
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,23 @@
+//! Deterministic discrete-event fabric simulator.
+//!
+//! The unit of work is a [`SimOp`]: either a cut-through `Transfer` of
+//! `bytes` along a [`Route`] (occupying every directed link on the path
+//! for the transmission time, so contention falls out naturally), or a
+//! `Delay` on a device (used for CUDA kernel launches, staging copies'
+//! fixed costs, compute phases).
+//!
+//! Ops are arranged into a dependency DAG — a [`Plan`] — by the collective
+//! algorithms in [`crate::collectives`] and executed by the [`engine`],
+//! which resolves link contention FIFO-by-ready-time and returns per-op
+//! start/completion timestamps on a virtual nanosecond clock.
+//!
+//! The simulator is *deterministic*: same plan, same timings, every run.
+
+pub mod engine;
+pub mod time;
+pub mod trace;
+pub mod transfer;
+
+pub use engine::{Engine, ExecResult};
+pub use time::SimTime;
+pub use transfer::{OpId, Plan, PlannedOp, SimOp};

@@ -1,0 +1,40 @@
+//! Virtual time.
+
+/// Virtual simulation time in nanoseconds.
+pub type SimTime = u64;
+
+/// Convert a SimTime (ns) to microseconds as `f64` (the unit the paper's
+/// figures report).
+#[inline]
+pub fn ns_to_us(t: SimTime) -> f64 {
+    t as f64 / 1000.0
+}
+
+/// Convert microseconds to SimTime (ns).
+#[inline]
+pub fn us_to_ns(us: f64) -> SimTime {
+    (us * 1000.0).round() as SimTime
+}
+
+/// Convert a bytes/bandwidth pair to transmission nanoseconds.
+#[inline]
+pub fn tx_ns(bytes: u64, bandwidth_bytes_per_sec: f64) -> SimTime {
+    if bytes == 0 || !bandwidth_bytes_per_sec.is_finite() {
+        return 0;
+    }
+    (bytes as f64 / bandwidth_bytes_per_sec * 1.0e9).round() as SimTime
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conversions() {
+        assert_eq!(ns_to_us(1500), 1.5);
+        assert_eq!(us_to_ns(2.5), 2500);
+        assert_eq!(tx_ns(1_000_000_000, 1.0e9), 1_000_000_000);
+        assert_eq!(tx_ns(0, 1.0e9), 0);
+        assert_eq!(tx_ns(100, f64::INFINITY), 0);
+    }
+}

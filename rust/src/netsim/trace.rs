@@ -1,0 +1,109 @@
+//! Timeline capture for debugging and the paper-style timeline dumps.
+
+use crate::topology::Cluster;
+use crate::util::bytes::format_us;
+
+use super::engine::ExecResult;
+use super::transfer::{Plan, SimOp};
+
+/// One rendered timeline row.
+#[derive(Debug, Clone)]
+pub struct TraceRow {
+    pub op_id: usize,
+    pub start_ns: u64,
+    pub done_ns: u64,
+    pub what: String,
+}
+
+/// Produce a chronological human-readable trace of a plan execution.
+pub fn trace(plan: &Plan, result: &ExecResult, cluster: &Cluster) -> Vec<TraceRow> {
+    let mut rows: Vec<TraceRow> = plan
+        .ops
+        .iter()
+        .enumerate()
+        .map(|(id, op)| {
+            let what = match &op.op {
+                SimOp::Transfer { route, bytes, .. } => {
+                    let src = &cluster.device(route.src).name;
+                    let dst = &cluster.device(route.dst).name;
+                    let label = op
+                        .label
+                        .map(|(r, ch)| format!(" [rank {r} chunk {ch}]"))
+                        .unwrap_or_default();
+                    format!("xfer {src} -> {dst} {bytes}B{label}")
+                }
+                SimOp::Delay { dev, dur_ns } => {
+                    format!("delay {} {}us", cluster.device(*dev).name, dur_ns / 1000)
+                }
+            };
+            TraceRow {
+                op_id: id,
+                start_ns: result.start[id],
+                done_ns: result.done[id],
+                what,
+            }
+        })
+        .collect();
+    rows.sort_by_key(|r| (r.start_ns, r.op_id));
+    rows
+}
+
+/// Render a trace to text.
+pub fn render(rows: &[TraceRow]) -> String {
+    let mut out = String::new();
+    for r in rows {
+        out.push_str(&format!(
+            "{:>12}us  {:>12}us  #{:<5} {}\n",
+            format_us(r.start_ns as f64),
+            format_us(r.done_ns as f64),
+            r.op_id,
+            r.what
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::engine::Engine;
+    use crate::netsim::transfer::Plan;
+    use crate::topology::presets::flat;
+
+    #[test]
+    fn trace_is_chronological() {
+        let c = flat(3);
+        let mut plan = Plan::new();
+        let r01 = c.route(c.rank_device(0), c.rank_device(1)).unwrap();
+        let r02 = c.route(c.rank_device(0), c.rank_device(2)).unwrap();
+        let a = plan.push(
+            SimOp::Transfer {
+                route: r01,
+                bytes: 1000,
+                overhead_ns: 10,
+                issue_ns: 10,
+                bw_cap: None,
+            },
+            vec![],
+            Some((1, 0)),
+        );
+        plan.push(
+            SimOp::Transfer {
+                route: r02,
+                bytes: 1000,
+                overhead_ns: 10,
+                issue_ns: 10,
+                bw_cap: None,
+            },
+            vec![a],
+            Some((2, 0)),
+        );
+        let mut e = Engine::new(&c);
+        let result = e.execute(&plan);
+        let rows = trace(&plan, &result, &c);
+        assert_eq!(rows.len(), 2);
+        assert!(rows[0].start_ns <= rows[1].start_ns);
+        let text = render(&rows);
+        assert!(text.contains("rank 2"));
+    }
+}

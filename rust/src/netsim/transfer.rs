@@ -1,0 +1,147 @@
+//! Plan representation: ops, dependencies, labels.
+
+use crate::topology::{DeviceId, Route};
+
+use super::time::SimTime;
+
+/// Index of an op within a [`Plan`].
+pub type OpId = usize;
+
+/// One schedulable unit.
+#[derive(Debug, Clone)]
+pub enum SimOp {
+    /// Move `bytes` from `route.src` to `route.dst`, cut-through,
+    /// occupying every link on the path. `overhead_ns` is the protocol
+    /// startup cost (the t_s of the paper's models) and contributes to the
+    /// completion time; `issue_ns` is the portion of that startup which
+    /// *occupies the channel* — back-to-back transfers on one link are
+    /// spaced by `issue_ns + transmission`. MPI sends use
+    /// `issue == overhead` (Eq. 5 semantics); posted GDR writes issue much
+    /// faster than their end-to-end latency. `bw_cap` optionally caps the
+    /// effective bandwidth below the links' own (e.g. the GDR-read
+    /// ceiling).
+    Transfer {
+        route: Route,
+        bytes: u64,
+        overhead_ns: SimTime,
+        issue_ns: SimTime,
+        bw_cap: Option<f64>,
+    },
+    /// Occupy a device for a fixed duration (kernel launch, compute).
+    Delay { dev: DeviceId, dur_ns: SimTime },
+}
+
+impl SimOp {
+    pub fn bytes(&self) -> u64 {
+        match self {
+            SimOp::Transfer { bytes, .. } => *bytes,
+            SimOp::Delay { .. } => 0,
+        }
+    }
+}
+
+/// An op plus its dependencies and an optional (rank, chunk) label used by
+/// collectives to map completions back to "rank r received chunk c".
+#[derive(Debug, Clone)]
+pub struct PlannedOp {
+    pub op: SimOp,
+    pub deps: Vec<OpId>,
+    /// (destination rank, chunk index) for delivery-tracking transfers.
+    pub label: Option<(usize, usize)>,
+}
+
+/// A dependency DAG of ops.
+#[derive(Debug, Clone, Default)]
+pub struct Plan {
+    pub ops: Vec<PlannedOp>,
+}
+
+impl Plan {
+    pub fn new() -> Plan {
+        Plan::default()
+    }
+
+    /// Append an op; returns its id.
+    pub fn push(&mut self, op: SimOp, deps: Vec<OpId>, label: Option<(usize, usize)>) -> OpId {
+        debug_assert!(deps.iter().all(|&d| d < self.ops.len()), "dep on future op");
+        let id = self.ops.len();
+        self.ops.push(PlannedOp { op, deps, label });
+        id
+    }
+
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// Append another plan's ops (shifting its internal dependencies) so
+    /// independent collectives can execute concurrently on the shared
+    /// fabric — contention on common links resolves in the engine. The
+    /// merged-in labels are dropped (delivery bookkeeping stays with the
+    /// original plans).
+    pub fn merge(&mut self, other: &Plan) {
+        let offset = self.ops.len();
+        for op in &other.ops {
+            let mut shifted = op.clone();
+            shifted.label = None;
+            for d in &mut shifted.deps {
+                *d += offset;
+            }
+            self.ops.push(shifted);
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    /// Total payload bytes moved by the plan (sum over transfers).
+    pub fn total_bytes(&self) -> u64 {
+        self.ops.iter().map(|o| o.op.bytes()).sum()
+    }
+
+    /// All labelled deliveries `(rank, chunk) -> op id`. Later ops
+    /// overwrite earlier ones with the same label (delivery = last write).
+    pub fn deliveries(&self) -> std::collections::HashMap<(usize, usize), OpId> {
+        let mut map = std::collections::HashMap::new();
+        for (id, op) in self.ops.iter().enumerate() {
+            if let Some(label) = op.label {
+                map.insert(label, id);
+            }
+        }
+        map
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::DeviceId;
+
+    #[test]
+    fn plan_builds_and_counts() {
+        let mut p = Plan::new();
+        let a = p.push(
+            SimOp::Delay {
+                dev: DeviceId(0),
+                dur_ns: 10,
+            },
+            vec![],
+            None,
+        );
+        let r = Route::trivial(DeviceId(0));
+        let b = p.push(
+            SimOp::Transfer {
+                route: r,
+                bytes: 128,
+                overhead_ns: 5,
+                issue_ns: 5,
+                bw_cap: None,
+            },
+            vec![a],
+            Some((1, 0)),
+        );
+        assert_eq!(p.len(), 2);
+        assert_eq!(p.total_bytes(), 128);
+        assert_eq!(p.deliveries().get(&(1, 0)), Some(&b));
+    }
+}

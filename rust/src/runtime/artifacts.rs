@@ -1,0 +1,128 @@
+//! Artifact discovery: `artifacts/` layout and `meta.json`.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Metadata emitted by `python/compile/aot.py` alongside the HLO text.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    /// Flattened parameter count P.
+    pub n_params: usize,
+    /// Batch size the step was lowered for.
+    pub batch: usize,
+    /// Input feature dimension.
+    pub input_dim: usize,
+    /// Output classes.
+    pub classes: usize,
+    /// Layer boundary offsets into the flat parameter vector
+    /// (name, offset, len) — the CNTK-style partition points.
+    pub layout: Vec<(String, usize, usize)>,
+}
+
+/// The artifact bundle.
+#[derive(Debug, Clone)]
+pub struct Artifacts {
+    pub dir: PathBuf,
+    pub meta: ArtifactMeta,
+}
+
+impl Artifacts {
+    /// Locate artifacts: `$GDRBCAST_ARTIFACTS` or `./artifacts`.
+    pub fn discover() -> Result<Artifacts> {
+        let dir = std::env::var("GDRBCAST_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"));
+        Artifacts::open(&dir)
+    }
+
+    pub fn open(dir: &Path) -> Result<Artifacts> {
+        let meta_path = dir.join("meta.json");
+        if !meta_path.exists() {
+            return Err(Error::Runtime(format!(
+                "{} not found — run `make artifacts` first",
+                meta_path.display()
+            )));
+        }
+        let text = std::fs::read_to_string(&meta_path)?;
+        let meta = parse_meta(&text)?;
+        Ok(Artifacts {
+            dir: dir.to_path_buf(),
+            meta,
+        })
+    }
+
+    /// Path of the training-step HLO text.
+    pub fn train_step_path(&self) -> PathBuf {
+        self.dir.join("train_step.hlo.txt")
+    }
+
+    /// Path of the forward-only (predict) HLO text.
+    pub fn predict_path(&self) -> PathBuf {
+        self.dir.join("predict.hlo.txt")
+    }
+}
+
+fn parse_meta(text: &str) -> Result<ArtifactMeta> {
+    let j = Json::parse(text)?;
+    let get_usize = |key: &str| -> Result<usize> {
+        j.get(key)
+            .and_then(|v| v.as_u64())
+            .map(|v| v as usize)
+            .ok_or_else(|| Error::Runtime(format!("meta.json missing '{key}'")))
+    };
+    let mut layout = Vec::new();
+    if let Some(arr) = j.get("layout").and_then(|v| v.as_arr()) {
+        for item in arr {
+            let name = item
+                .get("name")
+                .and_then(|v| v.as_str())
+                .unwrap_or("param")
+                .to_string();
+            let offset = item.get("offset").and_then(|v| v.as_u64()).unwrap_or(0) as usize;
+            let len = item.get("len").and_then(|v| v.as_u64()).unwrap_or(0) as usize;
+            layout.push((name, offset, len));
+        }
+    }
+    Ok(ArtifactMeta {
+        n_params: get_usize("n_params")?,
+        batch: get_usize("batch")?,
+        input_dim: get_usize("input_dim")?,
+        classes: get_usize("classes")?,
+        layout,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_meta() {
+        let text = r#"{
+            "n_params": 1707274, "batch": 64, "input_dim": 3072,
+            "classes": 10,
+            "layout": [
+                {"name": "fc1.w", "offset": 0, "len": 1572864},
+                {"name": "fc1.b", "offset": 1572864, "len": 512}
+            ]
+        }"#;
+        let meta = parse_meta(text).unwrap();
+        assert_eq!(meta.n_params, 1_707_274);
+        assert_eq!(meta.batch, 64);
+        assert_eq!(meta.layout.len(), 2);
+        assert_eq!(meta.layout[1].1, 1_572_864);
+    }
+
+    #[test]
+    fn missing_field_errors() {
+        assert!(parse_meta(r#"{"batch": 4}"#).is_err());
+    }
+
+    #[test]
+    fn missing_dir_is_friendly() {
+        let err = Artifacts::open(Path::new("/definitely/not/here")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

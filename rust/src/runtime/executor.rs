@@ -1,0 +1,142 @@
+//! Typed training-step execution + the PJRT-backed compute worker.
+
+use crate::coordinator::worker::ComputeBackend;
+use crate::error::Result;
+use crate::util::rng::Rng;
+
+use super::artifacts::Artifacts;
+use super::pjrt::{Executable, Runtime};
+
+/// The AOT-compiled training step:
+///
+/// `train_step(flat_params[P], x[B,D], y[B,C], lr[]) ->
+///      (concat(new_flat_params, [loss]),)`
+///
+/// (single flat f32 output so the rust side needs no pytree machinery —
+/// and flat parameters are exactly what the CNTK-style broadcast
+/// partitioning wants).
+pub struct TrainStep {
+    exe: Executable,
+    pub n_params: usize,
+    pub batch: usize,
+    pub input_dim: usize,
+    pub classes: usize,
+}
+
+impl TrainStep {
+    /// Load from the artifact bundle.
+    pub fn load(rt: &Runtime, artifacts: &Artifacts) -> Result<TrainStep> {
+        let exe = rt.load_hlo_text(&artifacts.train_step_path())?;
+        Ok(TrainStep {
+            exe,
+            n_params: artifacts.meta.n_params,
+            batch: artifacts.meta.batch,
+            input_dim: artifacts.meta.input_dim,
+            classes: artifacts.meta.classes,
+        })
+    }
+
+    /// Run one SGD step; returns (new_params, loss).
+    pub fn step(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        y_onehot: &[f32],
+        lr: f32,
+    ) -> Result<(Vec<f32>, f32)> {
+        assert_eq!(params.len(), self.n_params, "param length mismatch");
+        assert_eq!(x.len(), self.batch * self.input_dim, "x shape mismatch");
+        assert_eq!(y_onehot.len(), self.batch * self.classes, "y shape mismatch");
+        let lr_arr = [lr];
+        let out = self.exe.run_f32(&[
+            (params, &[self.n_params as i64]),
+            (x, &[self.batch as i64, self.input_dim as i64]),
+            (y_onehot, &[self.batch as i64, self.classes as i64]),
+            (&lr_arr, &[1]),
+        ])?;
+        debug_assert_eq!(out.len(), self.n_params + 1);
+        let loss = out[self.n_params];
+        let mut new_params = out;
+        new_params.truncate(self.n_params);
+        Ok((new_params, loss))
+    }
+}
+
+/// A data-parallel worker backed by the PJRT training step, holding a
+/// fixed synthetic shard (random inputs labelled by a shared random
+/// linear teacher — a learnable classification task). Each iteration is
+/// one full pass over the worker's shard, i.e. classic epoch-style
+/// data-parallel SGD.
+pub struct PjrtWorker<'a> {
+    step: &'a TrainStep,
+    x: Vec<f32>,
+    y: Vec<f32>,
+}
+
+impl<'a> PjrtWorker<'a> {
+    pub fn new(step: &'a TrainStep, shard_seed: u64, teacher_seed: u64) -> PjrtWorker<'a> {
+        let mut trng = Rng::new(teacher_seed);
+        let teacher: Vec<f32> = (0..step.input_dim * step.classes)
+            .map(|_| (trng.next_f64() as f32 - 0.5) * 2.0)
+            .collect();
+        let (b, d, c) = (step.batch, step.input_dim, step.classes);
+        let mut rng = Rng::new(shard_seed);
+        let mut x = Vec::with_capacity(b * d);
+        for _ in 0..b * d {
+            x.push((rng.next_f64() as f32 - 0.5) * 2.0);
+        }
+        let mut y = vec![0.0f32; b * c];
+        for i in 0..b {
+            // teacher logits -> argmax label
+            let mut best = 0usize;
+            let mut best_v = f32::MIN;
+            for j in 0..c {
+                let mut v = 0.0f32;
+                for k in 0..d {
+                    v += x[i * d + k] * teacher[k * c + j];
+                }
+                if v > best_v {
+                    best_v = v;
+                    best = j;
+                }
+            }
+            y[i * c + best] = 1.0;
+        }
+        PjrtWorker { step, x, y }
+    }
+
+    /// This worker's shard.
+    pub fn batch(&self) -> (&[f32], &[f32]) {
+        (&self.x, &self.y)
+    }
+}
+
+impl<'a> ComputeBackend for PjrtWorker<'a> {
+    fn grad(&mut self, params: &[f32], _iter: u64) -> (Vec<f32>, f32) {
+        // The AOT step applies the update itself (donated-style); recover
+        // the gradient as (old - new)/lr so the leader can average shards.
+        const LR: f32 = 0.05;
+        let (new_params, loss) = self
+            .step
+            .step(params, &self.x, &self.y, LR)
+            .expect("train step execution");
+        let grad: Vec<f32> = params
+            .iter()
+            .zip(&new_params)
+            .map(|(o, n)| (o - n) / LR)
+            .collect();
+        (grad, loss)
+    }
+
+    fn n_params(&self) -> usize {
+        self.step.n_params
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // PJRT-dependent integration tests live in rust/tests/e2e_runtime.rs
+    // (they need `make artifacts`); here we only test the synthetic batch
+    // generator's label validity via a stub-shaped worker… which itself
+    // needs a TrainStep. Covered end-to-end instead.
+}

@@ -1,0 +1,16 @@
+//! The PJRT runtime: load and execute the AOT-compiled JAX/Pallas
+//! training step from `artifacts/`.
+//!
+//! Python runs only at `make artifacts` time (`python/compile/aot.py`
+//! lowers the L2 model — which calls the L1 Pallas kernels — to HLO
+//! *text*; see /opt/xla-example's gotcha list for why text, not proto).
+//! This module is the request-path side: a thin, typed wrapper over the
+//! `xla` crate's PJRT CPU client.
+
+pub mod artifacts;
+pub mod executor;
+pub mod pjrt;
+
+pub use artifacts::{ArtifactMeta, Artifacts};
+pub use executor::{PjrtWorker, TrainStep};
+pub use pjrt::Runtime;

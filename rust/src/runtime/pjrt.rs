@@ -1,0 +1,95 @@
+//! PJRT client wrapper.
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+/// A PJRT CPU runtime bound to one process.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create the CPU client.
+    pub fn cpu() -> Result<Runtime> {
+        Ok(Runtime {
+            client: xla::PjRtClient::cpu()?,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<Executable> {
+        if !path.exists() {
+            return Err(Error::Runtime(format!(
+                "artifact {} not found — run `make artifacts` first",
+                path.display()
+            )));
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::Runtime("non-utf8 artifact path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(Executable { exe })
+    }
+}
+
+/// A compiled computation.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with f32 tensor inputs `(data, dims)`; expects the program
+    /// to return a 1-tuple of a single f32 array (the aot.py convention)
+    /// and returns it flattened.
+    pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<f32>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, dims)| {
+                let lit = xla::Literal::vec1(data);
+                if dims.is_empty() {
+                    // scalar
+                    lit.reshape(&[]).map_err(Error::from)
+                } else {
+                    lit.reshape(dims).map_err(Error::from)
+                }
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let literal = result[0][0].to_literal_sync()?;
+        let out = literal.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_client_comes_up() {
+        let rt = Runtime::cpu().unwrap();
+        assert!(rt.device_count() >= 1);
+        assert!(rt.platform().to_lowercase().contains("cpu") || !rt.platform().is_empty());
+    }
+
+    #[test]
+    fn missing_artifact_is_friendly_error() {
+        let rt = Runtime::cpu().unwrap();
+        let err = match rt.load_hlo_text(Path::new("/nonexistent/nope.hlo.txt")) {
+            Err(e) => e,
+            Ok(_) => panic!("expected error"),
+        };
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

@@ -1,0 +1,399 @@
+//! The cluster graph: devices + directed links + queries.
+
+use std::collections::HashMap;
+
+use super::device::{Device, DeviceId, DeviceKind, NodeId};
+use super::link::{Link, LinkId, LinkKind};
+use super::path::Route;
+use crate::error::{Error, Result};
+
+/// Per-chassis metadata.
+#[derive(Debug, Clone)]
+pub struct NodeMeta {
+    pub id: NodeId,
+    /// GPUs in this node, in local-rank order.
+    pub gpus: Vec<DeviceId>,
+    /// Host (socket) devices in this node.
+    pub hosts: Vec<DeviceId>,
+    /// HCAs in this node (one per rail).
+    pub hcas: Vec<DeviceId>,
+}
+
+/// A fabric graph for one cluster instantiation.
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    pub name: String,
+    devices: Vec<Device>,
+    links: Vec<Link>,
+    /// Outgoing link ids per device.
+    adjacency: Vec<Vec<LinkId>>,
+    nodes: Vec<NodeMeta>,
+    /// GPUs in global rank order (node-major).
+    gpu_ranks: Vec<DeviceId>,
+}
+
+impl Cluster {
+    pub fn new(name: impl Into<String>) -> Cluster {
+        Cluster {
+            name: name.into(),
+            devices: Vec::new(),
+            links: Vec::new(),
+            adjacency: Vec::new(),
+            nodes: Vec::new(),
+            gpu_ranks: Vec::new(),
+        }
+    }
+
+    // ---- construction ---------------------------------------------------
+
+    pub fn add_device(&mut self, kind: DeviceKind, node: NodeId, socket: u8, name: String) -> DeviceId {
+        let id = DeviceId(self.devices.len());
+        self.devices.push(Device {
+            id,
+            kind,
+            node,
+            socket,
+            name,
+        });
+        self.adjacency.push(Vec::new());
+        id
+    }
+
+    /// Add a full-duplex link (two directed edges) with the kind's default
+    /// bandwidth and latency.
+    pub fn connect(&mut self, a: DeviceId, b: DeviceId, kind: LinkKind) -> (LinkId, LinkId) {
+        self.connect_custom(a, b, kind, kind.default_bandwidth(), kind.default_latency_ns())
+    }
+
+    /// Add a full-duplex link with explicit bandwidth/latency.
+    pub fn connect_custom(
+        &mut self,
+        a: DeviceId,
+        b: DeviceId,
+        kind: LinkKind,
+        bandwidth: f64,
+        latency_ns: u64,
+    ) -> (LinkId, LinkId) {
+        let fwd = self.push_link(a, b, kind, bandwidth, latency_ns);
+        let rev = self.push_link(b, a, kind, bandwidth, latency_ns);
+        (fwd, rev)
+    }
+
+    fn push_link(
+        &mut self,
+        src: DeviceId,
+        dst: DeviceId,
+        kind: LinkKind,
+        bandwidth: f64,
+        latency_ns: u64,
+    ) -> LinkId {
+        let id = LinkId(self.links.len());
+        self.links.push(Link {
+            id,
+            src,
+            dst,
+            kind,
+            bandwidth,
+            latency_ns,
+        });
+        self.adjacency[src.0].push(id);
+        id
+    }
+
+    pub fn push_node_meta(&mut self, meta: NodeMeta) {
+        for &g in &meta.gpus {
+            self.gpu_ranks.push(g);
+        }
+        self.nodes.push(meta);
+    }
+
+    // ---- queries ---------------------------------------------------------
+
+    pub fn device(&self, id: DeviceId) -> &Device {
+        &self.devices[id.0]
+    }
+
+    pub fn link(&self, id: LinkId) -> &Link {
+        &self.links[id.0]
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn n_links(&self) -> usize {
+        self.links.len()
+    }
+
+    pub fn devices(&self) -> &[Device] {
+        &self.devices
+    }
+
+    pub fn links(&self) -> &[Link] {
+        &self.links
+    }
+
+    pub fn nodes(&self) -> &[NodeMeta] {
+        &self.nodes
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// GPUs in global MPI-rank order (node-major, then socket/PLX order).
+    pub fn gpu_ranks(&self) -> &[DeviceId] {
+        &self.gpu_ranks
+    }
+
+    pub fn n_gpus(&self) -> usize {
+        self.gpu_ranks.len()
+    }
+
+    /// The GPU device backing MPI rank `r`.
+    pub fn rank_device(&self, rank: usize) -> DeviceId {
+        self.gpu_ranks[rank]
+    }
+
+    /// The host (socket) device a given device should stage through: the
+    /// host on the same socket of the same node.
+    pub fn staging_host(&self, dev: DeviceId) -> Result<DeviceId> {
+        let d = self.device(dev);
+        let node = self
+            .nodes
+            .get(d.node.0)
+            .ok_or(Error::UnknownDevice(dev.0))?;
+        node.hosts
+            .iter()
+            .copied()
+            .find(|&h| self.device(h).socket == d.socket)
+            .or_else(|| node.hosts.first().copied())
+            .ok_or(Error::NoRoute { src: dev.0, dst: dev.0 })
+    }
+
+    /// The HCA a GPU uses for internode traffic: same-socket rail first
+    /// (multi-rail policy), falling back to any rail in the node.
+    pub fn hca_for(&self, dev: DeviceId) -> Result<DeviceId> {
+        let d = self.device(dev);
+        let node = self
+            .nodes
+            .get(d.node.0)
+            .ok_or(Error::UnknownDevice(dev.0))?;
+        node.hcas
+            .iter()
+            .copied()
+            .find(|&h| self.device(h).socket == d.socket)
+            .or_else(|| node.hcas.first().copied())
+            .ok_or(Error::NoRoute { src: dev.0, dst: dev.0 })
+    }
+
+    pub fn same_node(&self, a: DeviceId, b: DeviceId) -> bool {
+        self.device(a).node == self.device(b).node
+    }
+
+    pub fn same_socket(&self, a: DeviceId, b: DeviceId) -> bool {
+        self.same_node(a, b) && self.device(a).socket == self.device(b).socket
+    }
+
+    /// CUDA peer access: two GPUs can do P2P DMA iff a route exists that
+    /// stays inside the PCIe/NVLink fabric of one PCIe domain — i.e. the
+    /// shortest route crosses neither a Host device nor a QPI link.
+    /// (Crossing QPI is exactly the GDR-read bottleneck case of the
+    /// paper's ref. [26].)
+    pub fn peer_access(&self, a: DeviceId, b: DeviceId) -> bool {
+        if !self.same_node(a, b) || a == b {
+            return false;
+        }
+        match self.route(a, b) {
+            Ok(route) => !route.hops.iter().any(|&l| {
+                self.link(l).kind == LinkKind::Qpi
+                    || self.device(self.link(l).dst).kind == DeviceKind::Host
+                    || self.device(self.link(l).src).kind == DeviceKind::Host
+            }),
+            Err(_) => false,
+        }
+    }
+
+    /// Shortest route (min hops, tie-broken by max bottleneck bandwidth)
+    /// from `src` to `dst` via BFS over directed links.
+    pub fn route(&self, src: DeviceId, dst: DeviceId) -> Result<Route> {
+        if src.0 >= self.devices.len() {
+            return Err(Error::UnknownDevice(src.0));
+        }
+        if dst.0 >= self.devices.len() {
+            return Err(Error::UnknownDevice(dst.0));
+        }
+        if src == dst {
+            return Ok(Route::trivial(src));
+        }
+        // BFS layers; among equal-hop predecessors keep the one maximising
+        // the bottleneck bandwidth so routes prefer fat paths.
+        let n = self.devices.len();
+        let mut dist: Vec<u32> = vec![u32::MAX; n];
+        let mut best_bw: Vec<f64> = vec![0.0; n];
+        let mut pred: Vec<Option<LinkId>> = vec![None; n];
+        dist[src.0] = 0;
+        best_bw[src.0] = f64::INFINITY;
+        let mut frontier = vec![src];
+        while !frontier.is_empty() && dist[dst.0] == u32::MAX {
+            let mut next: Vec<DeviceId> = Vec::new();
+            for &u in &frontier {
+                let du = dist[u.0];
+                for &lid in &self.adjacency[u.0] {
+                    let link = &self.links[lid.0];
+                    let v = link.dst;
+                    let bw = best_bw[u.0].min(link.bandwidth);
+                    if dist[v.0] == u32::MAX {
+                        dist[v.0] = du + 1;
+                        best_bw[v.0] = bw;
+                        pred[v.0] = Some(lid);
+                        next.push(v);
+                    } else if dist[v.0] == du + 1 && bw > best_bw[v.0] {
+                        best_bw[v.0] = bw;
+                        pred[v.0] = Some(lid);
+                    }
+                }
+            }
+            frontier = next;
+        }
+        if dist[dst.0] == u32::MAX {
+            return Err(Error::NoRoute {
+                src: src.0,
+                dst: dst.0,
+            });
+        }
+        let mut hops = Vec::new();
+        let mut cur = dst;
+        while cur != src {
+            let lid = pred[cur.0].expect("pred chain broken");
+            hops.push(lid);
+            cur = self.links[lid.0].src;
+        }
+        hops.reverse();
+        Ok(Route::from_hops(src, dst, hops, self))
+    }
+
+    /// Route that explicitly passes through `via` (e.g. staging host).
+    pub fn route_via(&self, src: DeviceId, via: DeviceId, dst: DeviceId) -> Result<Route> {
+        let a = self.route(src, via)?;
+        let b = self.route(via, dst)?;
+        Ok(a.concat(&b, self))
+    }
+
+    /// Total directed-link count between every adjacent device pair —
+    /// sanity metric used by tests.
+    pub fn degree(&self, dev: DeviceId) -> usize {
+        self.adjacency[dev.0].len()
+    }
+
+    /// Dump a human-readable topology description.
+    pub fn describe(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "cluster '{}': {} nodes, {} gpus, {} devices, {} directed links",
+            self.name,
+            self.nodes.len(),
+            self.gpu_ranks.len(),
+            self.devices.len(),
+            self.links.len()
+        );
+        let mut kind_counts: HashMap<&'static str, usize> = HashMap::new();
+        for d in &self.devices {
+            *kind_counts.entry(d.kind.short()).or_insert(0) += 1;
+        }
+        let mut kinds: Vec<_> = kind_counts.into_iter().collect();
+        kinds.sort();
+        for (k, c) in kinds {
+            let _ = writeln!(out, "  {k:>6} x{c}");
+        }
+        let mut link_counts: HashMap<&'static str, usize> = HashMap::new();
+        for l in &self.links {
+            *link_counts.entry(l.kind.short()).or_insert(0) += 1;
+        }
+        let mut lks: Vec<_> = link_counts.into_iter().collect();
+        lks.sort();
+        for (k, c) in lks {
+            let _ = writeln!(out, "  link {k:>9} x{c}");
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Cluster {
+        // gpu0 -- plx -- gpu1, plx -- root -- host
+        let mut c = Cluster::new("tiny");
+        let g0 = c.add_device(DeviceKind::Gpu, NodeId(0), 0, "g0".into());
+        let g1 = c.add_device(DeviceKind::Gpu, NodeId(0), 0, "g1".into());
+        let plx = c.add_device(DeviceKind::PlxSwitch, NodeId(0), 0, "plx".into());
+        let root = c.add_device(DeviceKind::PcieRoot, NodeId(0), 0, "root".into());
+        let host = c.add_device(DeviceKind::Host, NodeId(0), 0, "host".into());
+        c.connect(g0, plx, LinkKind::PcieG3x16);
+        c.connect(g1, plx, LinkKind::PcieG3x16);
+        c.connect(plx, root, LinkKind::PcieG3x16);
+        c.connect(root, host, LinkKind::HostBus);
+        c.push_node_meta(NodeMeta {
+            id: NodeId(0),
+            gpus: vec![g0, g1],
+            hosts: vec![host],
+            hcas: vec![],
+        });
+        c
+    }
+
+    #[test]
+    fn route_gpu_to_gpu() {
+        let c = tiny();
+        let r = c.route(DeviceId(0), DeviceId(1)).unwrap();
+        assert_eq!(r.hops.len(), 2); // g0->plx->g1
+        assert_eq!(r.src, DeviceId(0));
+        assert_eq!(r.dst, DeviceId(1));
+    }
+
+    #[test]
+    fn trivial_route() {
+        let c = tiny();
+        let r = c.route(DeviceId(0), DeviceId(0)).unwrap();
+        assert!(r.hops.is_empty());
+    }
+
+    #[test]
+    fn peer_access_under_plx() {
+        let c = tiny();
+        assert!(c.peer_access(DeviceId(0), DeviceId(1)));
+        assert!(!c.peer_access(DeviceId(0), DeviceId(0)));
+    }
+
+    #[test]
+    fn staging_host_found() {
+        let c = tiny();
+        let h = c.staging_host(DeviceId(0)).unwrap();
+        assert_eq!(c.device(h).kind, DeviceKind::Host);
+    }
+
+    #[test]
+    fn route_via_concatenates() {
+        let c = tiny();
+        let host = c.staging_host(DeviceId(0)).unwrap();
+        let r = c.route_via(DeviceId(0), host, DeviceId(1)).unwrap();
+        // g0->plx->root->host->root->plx->g1
+        assert_eq!(r.hops.len(), 6);
+    }
+
+    #[test]
+    fn unknown_device_errors() {
+        let c = tiny();
+        assert!(c.route(DeviceId(0), DeviceId(99)).is_err());
+    }
+
+    #[test]
+    fn describe_mentions_counts() {
+        let d = tiny().describe();
+        assert!(d.contains("2 gpus"));
+    }
+}

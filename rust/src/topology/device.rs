@@ -1,0 +1,76 @@
+//! Devices: the vertices of the topology graph.
+
+/// Index of a device within a [`super::Cluster`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct DeviceId(pub usize);
+
+/// Index of a physical node (chassis) within a cluster.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub usize);
+
+/// What a vertex in the fabric graph is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DeviceKind {
+    /// A CUDA device (one GK210 die of a K80 board, a P100, …).
+    Gpu,
+    /// A CPU socket with its attached host memory. Host-staging copies
+    /// bounce through one of these.
+    Host,
+    /// The PCIe root complex hanging off one socket.
+    PcieRoot,
+    /// A PLX PCIe switch (GPUs under the same PLX have peer access).
+    PlxSwitch,
+    /// An InfiniBand host channel adapter.
+    IbHca,
+    /// The InfiniBand fabric switch (one per cluster; full bisection).
+    IbSwitch,
+}
+
+impl DeviceKind {
+    pub fn short(&self) -> &'static str {
+        match self {
+            DeviceKind::Gpu => "gpu",
+            DeviceKind::Host => "host",
+            DeviceKind::PcieRoot => "root",
+            DeviceKind::PlxSwitch => "plx",
+            DeviceKind::IbHca => "hca",
+            DeviceKind::IbSwitch => "ibsw",
+        }
+    }
+}
+
+/// A vertex of the fabric graph.
+#[derive(Debug, Clone)]
+pub struct Device {
+    pub id: DeviceId,
+    pub kind: DeviceKind,
+    /// Which physical node (chassis) this device lives in. The IB switch
+    /// belongs to a pseudo-node with index `usize::MAX`.
+    pub node: NodeId,
+    /// Which CPU socket's PCIe domain this device hangs off (0/1); the IB
+    /// switch uses 0.
+    pub socket: u8,
+    /// Human-readable name, e.g. `n0.s1.plx0.gpu2`.
+    pub name: String,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_short_names_unique() {
+        let kinds = [
+            DeviceKind::Gpu,
+            DeviceKind::Host,
+            DeviceKind::PcieRoot,
+            DeviceKind::PlxSwitch,
+            DeviceKind::IbHca,
+            DeviceKind::IbSwitch,
+        ];
+        let mut names: Vec<&str> = kinds.iter().map(|k| k.short()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), kinds.len());
+    }
+}

@@ -1,0 +1,144 @@
+//! Links: the edges of the topology graph.
+//!
+//! All links are stored as *directed* edges (a physical full-duplex cable
+//! becomes two directed links), so per-direction occupancy falls out of
+//! the simulator naturally.
+//!
+//! Bandwidth constants are *effective* (post-protocol-overhead) figures
+//! for the hardware generations in the paper's testbed; sources noted per
+//! constant. Shapes, not absolute numbers, are what the reproduction is
+//! judged on — see DESIGN.md §4 Calibration.
+
+use super::device::DeviceId;
+
+/// Index of a directed link within a [`super::Cluster`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct LinkId(pub usize);
+
+/// Physical technology of a link. Determines default bandwidth/latency.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LinkKind {
+    /// PCIe gen3 ×16: ~15.75 GB/s raw, ~12 GB/s effective for DMA.
+    PcieG3x16,
+    /// Intel QPI between sockets: crossing it costs bandwidth and breaks
+    /// GPU peer access (the GDR-read bottleneck of [26] in the paper).
+    Qpi,
+    /// Host memory bus (socket ↔ its PCIe root): generous, rarely the
+    /// bottleneck.
+    HostBus,
+    /// NVLink 1.0 (P100): 20 GB/s per direction per brick.
+    NvLink1,
+    /// NVLink 2.0 (V100): 25 GB/s per direction per brick.
+    NvLink2,
+    /// InfiniBand FDR (56 Gb/s): ~6.8 GB/s effective — KESCH's rails.
+    IbFdr,
+    /// InfiniBand EDR (100 Gb/s): ~12 GB/s effective.
+    IbEdr,
+    /// Idealised uniform link for the `flat` validation preset.
+    Ideal,
+}
+
+impl LinkKind {
+    /// Effective bandwidth in bytes/second.
+    pub fn default_bandwidth(&self) -> f64 {
+        const GB: f64 = 1.0e9;
+        match self {
+            LinkKind::PcieG3x16 => 12.0 * GB,
+            LinkKind::Qpi => 8.0 * GB,
+            LinkKind::HostBus => 25.0 * GB,
+            LinkKind::NvLink1 => 18.0 * GB,
+            LinkKind::NvLink2 => 22.0 * GB,
+            LinkKind::IbFdr => 6.8 * GB,
+            LinkKind::IbEdr => 12.0 * GB,
+            LinkKind::Ideal => 10.0 * GB,
+        }
+    }
+
+    /// Per-hop propagation/forwarding latency in nanoseconds.
+    pub fn default_latency_ns(&self) -> u64 {
+        match self {
+            LinkKind::PcieG3x16 => 300,
+            LinkKind::Qpi => 200,
+            LinkKind::HostBus => 100,
+            LinkKind::NvLink1 | LinkKind::NvLink2 => 150,
+            LinkKind::IbFdr => 700,
+            LinkKind::IbEdr => 600,
+            LinkKind::Ideal => 0,
+        }
+    }
+
+    pub fn short(&self) -> &'static str {
+        match self {
+            LinkKind::PcieG3x16 => "pcie3x16",
+            LinkKind::Qpi => "qpi",
+            LinkKind::HostBus => "hostbus",
+            LinkKind::NvLink1 => "nvlink1",
+            LinkKind::NvLink2 => "nvlink2",
+            LinkKind::IbFdr => "ib-fdr",
+            LinkKind::IbEdr => "ib-edr",
+            LinkKind::Ideal => "ideal",
+        }
+    }
+}
+
+/// A directed edge of the fabric graph.
+#[derive(Debug, Clone)]
+pub struct Link {
+    pub id: LinkId,
+    pub src: DeviceId,
+    pub dst: DeviceId,
+    pub kind: LinkKind,
+    /// Effective bandwidth, bytes/second.
+    pub bandwidth: f64,
+    /// Propagation/forwarding latency, nanoseconds.
+    pub latency_ns: u64,
+}
+
+impl Link {
+    /// Time to push `bytes` through this link (transmission only), ns.
+    #[inline]
+    pub fn transmission_ns(&self, bytes: u64) -> u64 {
+        (bytes as f64 / self.bandwidth * 1.0e9).round() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::device::DeviceId;
+
+    #[test]
+    fn fdr_slower_than_pcie() {
+        assert!(LinkKind::IbFdr.default_bandwidth() < LinkKind::PcieG3x16.default_bandwidth());
+    }
+
+    #[test]
+    fn transmission_time_scales_linearly() {
+        let l = Link {
+            id: LinkId(0),
+            src: DeviceId(0),
+            dst: DeviceId(1),
+            kind: LinkKind::PcieG3x16,
+            bandwidth: 12.0e9,
+            latency_ns: 300,
+        };
+        let t1 = l.transmission_ns(1 << 20);
+        let t2 = l.transmission_ns(2 << 20);
+        assert!((t2 as f64 / t1 as f64 - 2.0).abs() < 0.01);
+        // 1 MiB over 12 GB/s ≈ 87.4 µs
+        assert!((t1 as f64 - 87_381.0).abs() < 200.0);
+    }
+
+    #[test]
+    fn zero_bytes_zero_time() {
+        let l = Link {
+            id: LinkId(0),
+            src: DeviceId(0),
+            dst: DeviceId(1),
+            kind: LinkKind::Ideal,
+            bandwidth: 1.0e9,
+            latency_ns: 0,
+        };
+        assert_eq!(l.transmission_ns(0), 0);
+    }
+}

@@ -1,0 +1,39 @@
+//! Cluster topology model.
+//!
+//! Dense multi-GPU nodes are modelled as an explicit graph of devices
+//! (GPUs, CPU sockets/host memory, PCIe root complexes, PLX switches,
+//! InfiniBand HCAs and switches) connected by typed links (PCIe gen3,
+//! PLX fan-out, QPI, NVLink, IB FDR/EDR). Broadcast performance on this
+//! class of machine is dominated by *which* path a transfer takes — the
+//! paper's wins come from avoiding bad paths (GDR reads across QPI) and
+//! exploiting good ones (CUDA IPC under a PLX switch, dual-rail IB) — so
+//! the topology layer exposes exactly those predicates.
+//!
+//! Presets: [`presets::kesch`] (the paper's Cray CS-Storm testbed),
+//! [`presets::dgx1`], [`presets::dgx1v`], and [`presets::flat`] (the
+//! idealised uniform fabric the paper's analytic models assume).
+
+pub mod cluster;
+pub mod device;
+pub mod link;
+pub mod path;
+pub mod presets;
+
+pub use cluster::{Cluster, NodeMeta};
+pub use device::{Device, DeviceId, DeviceKind, NodeId};
+pub use link::{Link, LinkId, LinkKind};
+pub use path::Route;
+
+use crate::config::schema::{ClusterConfig, ClusterPreset};
+use crate::error::Result;
+
+/// Instantiate a cluster from a config.
+pub fn build(config: &ClusterConfig) -> Result<Cluster> {
+    config.validate()?;
+    Ok(match config.preset {
+        ClusterPreset::Kesch => presets::kesch(config.nodes, config.gpus_per_node),
+        ClusterPreset::Dgx1 => presets::dgx1(config.nodes, config.gpus_per_node, false),
+        ClusterPreset::Dgx1V => presets::dgx1(config.nodes, config.gpus_per_node, true),
+        ClusterPreset::Flat => presets::flat(config.total_gpus()),
+    })
+}

@@ -1,0 +1,99 @@
+//! Routes: ordered hop lists with cached aggregates.
+
+use super::cluster::Cluster;
+use super::device::DeviceId;
+use super::link::LinkId;
+
+/// A directed path through the fabric.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Route {
+    pub src: DeviceId,
+    pub dst: DeviceId,
+    pub hops: Vec<LinkId>,
+    /// min over hop bandwidths (bytes/s); `f64::INFINITY` for the trivial
+    /// route.
+    pub bottleneck_bw: f64,
+    /// sum of hop latencies (ns).
+    pub latency_ns: u64,
+}
+
+impl Route {
+    pub fn trivial(dev: DeviceId) -> Route {
+        Route {
+            src: dev,
+            dst: dev,
+            hops: Vec::new(),
+            bottleneck_bw: f64::INFINITY,
+            latency_ns: 0,
+        }
+    }
+
+    pub fn from_hops(src: DeviceId, dst: DeviceId, hops: Vec<LinkId>, cluster: &Cluster) -> Route {
+        let mut bw = f64::INFINITY;
+        let mut lat = 0u64;
+        for &h in &hops {
+            let link = cluster.link(h);
+            bw = bw.min(link.bandwidth);
+            lat += link.latency_ns;
+        }
+        Route {
+            src,
+            dst,
+            hops,
+            bottleneck_bw: bw,
+            latency_ns: lat,
+        }
+    }
+
+    /// Concatenate two routes sharing an endpoint.
+    pub fn concat(&self, other: &Route, cluster: &Cluster) -> Route {
+        assert_eq!(self.dst, other.src, "routes must share endpoint");
+        let mut hops = self.hops.clone();
+        hops.extend_from_slice(&other.hops);
+        Route::from_hops(self.src, other.dst, hops, cluster)
+    }
+
+    pub fn n_hops(&self) -> usize {
+        self.hops.len()
+    }
+
+    /// Pure (uncontended) time to move `bytes` along this route with
+    /// cut-through forwarding: propagation + bytes / bottleneck-bandwidth.
+    pub fn uncontended_ns(&self, bytes: u64) -> u64 {
+        let bw = if self.bottleneck_bw.is_finite() {
+            self.bottleneck_bw
+        } else {
+            return self.latency_ns;
+        };
+        self.latency_ns + (bytes as f64 / bw * 1.0e9).round() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::device::{DeviceKind, NodeId};
+    use crate::topology::link::LinkKind;
+
+    #[test]
+    fn aggregates_computed() {
+        let mut c = Cluster::new("t");
+        let a = c.add_device(DeviceKind::Gpu, NodeId(0), 0, "a".into());
+        let b = c.add_device(DeviceKind::PlxSwitch, NodeId(0), 0, "b".into());
+        let d = c.add_device(DeviceKind::Gpu, NodeId(0), 0, "d".into());
+        c.connect_custom(a, b, LinkKind::PcieG3x16, 10.0e9, 100);
+        c.connect_custom(b, d, LinkKind::PcieG3x16, 5.0e9, 200);
+        let r = c.route(a, d).unwrap();
+        assert_eq!(r.latency_ns, 300);
+        assert_eq!(r.bottleneck_bw, 5.0e9);
+        // 5 GB/s for 5 MB = 1 ms + 300ns
+        let t = r.uncontended_ns(5_000_000);
+        assert_eq!(t, 1_000_300);
+    }
+
+    #[test]
+    fn trivial_route_is_free() {
+        let r = Route::trivial(DeviceId(3));
+        assert_eq!(r.uncontended_ns(1 << 30), 0);
+    }
+}

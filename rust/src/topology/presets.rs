@@ -1,0 +1,294 @@
+//! Cluster presets.
+//!
+//! * [`kesch`] — the paper's testbed: Cray CS-Storm, 12 nodes, 8× K80
+//!   boards (16 CUDA devices) per node, dual-rail IB FDR.
+//! * [`dgx1`] — NVIDIA DGX-1(V): 8 GPUs, NVLink cube mesh, IB EDR.
+//! * [`flat`] — the idealised uniform fabric assumed by the paper's
+//!   analytic models (§III): every rank pair communicates at the same
+//!   (t_s, B); used to validate simulator vs closed forms.
+
+use super::cluster::{Cluster, NodeMeta};
+use super::device::{DeviceId, DeviceKind, NodeId};
+use super::link::LinkKind;
+
+/// Build a KESCH-like cluster.
+///
+/// Per node: 2 sockets; per socket: host + PCIe root + 1 IB FDR HCA +
+/// 2 PLX switches; per PLX: 4 CUDA devices (2 K80 boards). 16 CUDA
+/// devices/node total, enumerated socket-major then PLX-major, which is
+/// also the MPI rank order used in the paper's runs.
+///
+/// `gpus_per_node` ≤ 16 selects a prefix of that enumeration (the paper's
+/// 2/4/8-GPU intranode configurations).
+pub fn kesch(nodes: usize, gpus_per_node: usize) -> Cluster {
+    assert!(gpus_per_node >= 1 && gpus_per_node <= 16);
+    let mut c = Cluster::new(format!("kesch-{nodes}x{gpus_per_node}"));
+    let ib_switch = c.add_device(
+        DeviceKind::IbSwitch,
+        NodeId(usize::MAX),
+        0,
+        "ibsw".into(),
+    );
+    for n in 0..nodes {
+        let node = NodeId(n);
+        let mut gpus: Vec<DeviceId> = Vec::new();
+        let mut hosts = Vec::new();
+        let mut hcas = Vec::new();
+        for s in 0..2u8 {
+            let host = c.add_device(DeviceKind::Host, node, s, format!("n{n}.s{s}.host"));
+            let root = c.add_device(DeviceKind::PcieRoot, node, s, format!("n{n}.s{s}.root"));
+            c.connect(host, root, LinkKind::HostBus);
+            hosts.push(host);
+            // one FDR rail per socket (dual-rail node)
+            let hca = c.add_device(DeviceKind::IbHca, node, s, format!("n{n}.s{s}.hca"));
+            c.connect(root, hca, LinkKind::PcieG3x16);
+            c.connect(hca, ib_switch, LinkKind::IbFdr);
+            hcas.push(hca);
+            for p in 0..2usize {
+                let plx = c.add_device(
+                    DeviceKind::PlxSwitch,
+                    node,
+                    s,
+                    format!("n{n}.s{s}.plx{p}"),
+                );
+                c.connect(plx, root, LinkKind::PcieG3x16);
+                for g in 0..4usize {
+                    let gpu = c.add_device(
+                        DeviceKind::Gpu,
+                        node,
+                        s,
+                        format!("n{n}.s{s}.plx{p}.gpu{g}"),
+                    );
+                    c.connect(gpu, plx, LinkKind::PcieG3x16);
+                    gpus.push(gpu);
+                }
+            }
+        }
+        // QPI between the two sockets' hosts
+        c.connect(hosts[0], hosts[1], LinkKind::Qpi);
+        gpus.truncate(gpus_per_node);
+        c.push_node_meta(NodeMeta {
+            id: node,
+            gpus,
+            hosts,
+            hcas,
+        });
+    }
+    c
+}
+
+/// Build a DGX-1 (`v100 = false`) or DGX-1V (`v100 = true`) cluster.
+///
+/// 8 GPUs per node in an NVLink hybrid cube-mesh (each GPU has 4 NVLink
+/// bricks; the mesh connects GPU i to i^1, i^2, i^4 and the ring partner),
+/// plus the PCIe tree (2 sockets × 2 PLX × 2 GPUs) and 4 IB EDR rails.
+pub fn dgx1(nodes: usize, gpus_per_node: usize, v100: bool) -> Cluster {
+    assert!(gpus_per_node >= 1 && gpus_per_node <= 8);
+    let nv = if v100 {
+        LinkKind::NvLink2
+    } else {
+        LinkKind::NvLink1
+    };
+    let mut c = Cluster::new(format!(
+        "dgx1{}-{nodes}x{gpus_per_node}",
+        if v100 { "v" } else { "" }
+    ));
+    let ib_switch = c.add_device(
+        DeviceKind::IbSwitch,
+        NodeId(usize::MAX),
+        0,
+        "ibsw".into(),
+    );
+    for n in 0..nodes {
+        let node = NodeId(n);
+        let mut gpus = Vec::new();
+        let mut hosts = Vec::new();
+        let mut hcas = Vec::new();
+        for s in 0..2u8 {
+            let host = c.add_device(DeviceKind::Host, node, s, format!("n{n}.s{s}.host"));
+            let root = c.add_device(DeviceKind::PcieRoot, node, s, format!("n{n}.s{s}.root"));
+            c.connect(host, root, LinkKind::HostBus);
+            hosts.push(host);
+            for p in 0..2usize {
+                let plx = c.add_device(
+                    DeviceKind::PlxSwitch,
+                    node,
+                    s,
+                    format!("n{n}.s{s}.plx{p}"),
+                );
+                c.connect(plx, root, LinkKind::PcieG3x16);
+                // one EDR HCA per PLX (4 rails/node, as in DGX-1)
+                let hca = c.add_device(DeviceKind::IbHca, node, s, format!("n{n}.s{s}.hca{p}"));
+                c.connect(plx, hca, LinkKind::PcieG3x16);
+                c.connect(hca, ib_switch, LinkKind::IbEdr);
+                hcas.push(hca);
+                for g in 0..2usize {
+                    let gpu = c.add_device(
+                        DeviceKind::Gpu,
+                        node,
+                        s,
+                        format!("n{n}.s{s}.plx{p}.gpu{g}"),
+                    );
+                    c.connect(gpu, plx, LinkKind::PcieG3x16);
+                    gpus.push(gpu);
+                }
+            }
+        }
+        c.connect(hosts[0], hosts[1], LinkKind::Qpi);
+        // NVLink hybrid cube-mesh over the 8 GPUs
+        let mesh: &[(usize, usize)] = &[
+            (0, 1),
+            (0, 2),
+            (0, 3),
+            (1, 2),
+            (1, 3),
+            (2, 3),
+            (4, 5),
+            (4, 6),
+            (4, 7),
+            (5, 6),
+            (5, 7),
+            (6, 7),
+            (0, 4),
+            (1, 5),
+            (2, 6),
+            (3, 7),
+        ];
+        for &(a, b) in mesh {
+            if a < gpus.len() && b < gpus.len() {
+                c.connect(gpus[a], gpus[b], nv);
+            }
+        }
+        gpus.truncate(gpus_per_node);
+        c.push_node_meta(NodeMeta {
+            id: node,
+            gpus,
+            hosts,
+            hcas,
+        });
+    }
+    c
+}
+
+/// Build the idealised flat fabric: `n` GPUs, each with a dedicated
+/// full-duplex `Ideal` link into a single crossbar, zero propagation
+/// latency. A transfer between any pair costs exactly `bytes / B` plus
+/// whatever protocol overhead the comm layer adds — i.e. the `t_s + M/B`
+/// of the paper's Eqs. (1)–(5).
+pub fn flat(n: usize) -> Cluster {
+    assert!(n >= 1);
+    let mut c = Cluster::new(format!("flat-{n}"));
+    let xbar = c.add_device(DeviceKind::IbSwitch, NodeId(usize::MAX), 0, "xbar".into());
+    // one pseudo-node per GPU so every pair is "internode"
+    for i in 0..n {
+        let node = NodeId(i);
+        let gpu = c.add_device(DeviceKind::Gpu, node, 0, format!("g{i}"));
+        let host = c.add_device(DeviceKind::Host, node, 0, format!("h{i}"));
+        c.connect(gpu, xbar, LinkKind::Ideal);
+        c.connect(gpu, host, LinkKind::HostBus);
+        c.push_node_meta(NodeMeta {
+            id: node,
+            gpus: vec![gpu],
+            hosts: vec![host],
+            hcas: vec![],
+        });
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kesch_shape() {
+        let c = kesch(12, 16);
+        assert_eq!(c.n_nodes(), 12);
+        assert_eq!(c.n_gpus(), 192);
+        // per node: 2 hosts + 2 roots + 2 hcas + 4 plx + 16 gpus = 26
+        assert_eq!(c.n_devices(), 12 * 26 + 1);
+    }
+
+    #[test]
+    fn kesch_gpu_prefix() {
+        let c = kesch(1, 2);
+        assert_eq!(c.n_gpus(), 2);
+        // first two GPUs share a PLX -> peer access
+        let (a, b) = (c.rank_device(0), c.rank_device(1));
+        assert!(c.peer_access(a, b));
+    }
+
+    #[test]
+    fn kesch_cross_socket_no_peer_access() {
+        let c = kesch(1, 16);
+        let a = c.rank_device(0); // socket 0
+        let b = c.rank_device(8); // socket 1
+        assert!(!c.same_socket(a, b));
+        assert!(!c.peer_access(a, b));
+        // same socket, different PLX: route crosses the PCIe root but not
+        // the host, so peer access holds
+        let d = c.rank_device(4);
+        assert!(c.peer_access(a, d));
+    }
+
+    #[test]
+    fn kesch_internode_route_uses_ib() {
+        let c = kesch(2, 16);
+        let a = c.rank_device(0);
+        let b = c.rank_device(16);
+        assert!(!c.same_node(a, b));
+        let r = c.route(a, b).unwrap();
+        let has_ib = r
+            .hops
+            .iter()
+            .any(|&l| c.link(l).kind == LinkKind::IbFdr);
+        assert!(has_ib);
+        // bottleneck is the FDR rail
+        assert_eq!(r.bottleneck_bw, LinkKind::IbFdr.default_bandwidth());
+    }
+
+    #[test]
+    fn kesch_multirail_hca_per_socket() {
+        let c = kesch(1, 16);
+        let g0 = c.rank_device(0);
+        let g8 = c.rank_device(8);
+        let h0 = c.hca_for(g0).unwrap();
+        let h8 = c.hca_for(g8).unwrap();
+        assert_ne!(h0, h8, "sockets use distinct rails");
+    }
+
+    #[test]
+    fn dgx1_nvlink_peer() {
+        let c = dgx1(1, 8, false);
+        assert_eq!(c.n_gpus(), 8);
+        let r = c.route(c.rank_device(0), c.rank_device(1)).unwrap();
+        assert_eq!(r.n_hops(), 1, "NVLink direct");
+        assert_eq!(r.bottleneck_bw, LinkKind::NvLink1.default_bandwidth());
+    }
+
+    #[test]
+    fn dgx1v_uses_nvlink2() {
+        let c = dgx1(1, 8, true);
+        let r = c.route(c.rank_device(0), c.rank_device(4)).unwrap();
+        assert_eq!(r.bottleneck_bw, LinkKind::NvLink2.default_bandwidth());
+    }
+
+    #[test]
+    fn flat_uniform() {
+        let c = flat(8);
+        assert_eq!(c.n_gpus(), 8);
+        for i in 1..8 {
+            let r = c.route(c.rank_device(0), c.rank_device(i)).unwrap();
+            assert_eq!(r.n_hops(), 2);
+            assert_eq!(r.latency_ns, 0);
+            assert_eq!(r.bottleneck_bw, LinkKind::Ideal.default_bandwidth());
+        }
+    }
+
+    #[test]
+    fn rank_order_is_node_major() {
+        let c = kesch(2, 4);
+        assert_eq!(c.device(c.rank_device(0)).node, NodeId(0));
+        assert_eq!(c.device(c.rank_device(4)).node, NodeId(1));
+    }
+}

@@ -1,0 +1,21 @@
+//! The enhanced collective tuning framework (§IV of the paper).
+//!
+//! MVAPICH2-GDR's "MV2-GDR-Opt" is not one algorithm — it is a dispatch
+//! table: for each (message-size bucket, GPU count, topology), the tuned
+//! runtime picks the algorithm + chunk size that won an offline sweep.
+//! This module is that framework:
+//!
+//! * [`space`] — the candidate grid (algorithms × chunk sizes);
+//! * [`sweep`] — run the candidates on the simulator for a cluster;
+//! * [`table`] — the message-size-bucketed dispatch table;
+//! * [`selector`] — runtime lookup: `MV2-GDR-Opt` = tuned selection;
+//! * [`persist`] — save/load tables as JSON artifacts.
+
+pub mod persist;
+pub mod selector;
+pub mod space;
+pub mod sweep;
+pub mod table;
+
+pub use selector::Selector;
+pub use table::TuningTable;

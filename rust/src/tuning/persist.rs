@@ -1,0 +1,176 @@
+//! Save/load tuning tables as JSON artifacts.
+
+use std::path::Path;
+
+use crate::collectives::Algorithm;
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+use super::table::{TableEntry, TuningTable};
+
+fn algo_to_json(a: &Algorithm) -> Json {
+    let mut j = Json::obj();
+    j.set("family", a.family());
+    match a {
+        Algorithm::PipelinedChain { chunk } => {
+            j.set("chunk", *chunk);
+        }
+        Algorithm::Knomial { k } | Algorithm::HostStagedKnomial { k } => {
+            j.set("k", *k as u64);
+        }
+        _ => {}
+    }
+    j
+}
+
+fn algo_from_json(j: &Json) -> Result<Algorithm> {
+    let family = j
+        .get("family")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| Error::Config("algorithm missing family".into()))?;
+    Ok(match family {
+        "direct" => Algorithm::Direct,
+        "chain" => Algorithm::Chain,
+        "pipelined-chain" => Algorithm::PipelinedChain {
+            chunk: j
+                .get("chunk")
+                .and_then(|v| v.as_u64())
+                .ok_or_else(|| Error::Config("pipelined-chain missing chunk".into()))?,
+        },
+        "knomial" => Algorithm::Knomial {
+            k: j.get("k").and_then(|v| v.as_u64()).unwrap_or(2) as usize,
+        },
+        "scatter-ring-allgather" => Algorithm::ScatterRingAllgather,
+        "host-staged-knomial" => Algorithm::HostStagedKnomial {
+            k: j.get("k").and_then(|v| v.as_u64()).unwrap_or(2) as usize,
+        },
+        other => return Err(Error::Config(format!("unknown algorithm '{other}'"))),
+    })
+}
+
+/// Serialise a table to JSON text.
+pub fn to_json(table: &TuningTable) -> String {
+    let mut j = Json::obj();
+    j.set("cluster", table.cluster.as_str());
+    j.set("n_ranks", table.n_ranks);
+    let entries: Vec<Json> = table
+        .entries
+        .iter()
+        .map(|e| {
+            let mut ej = Json::obj();
+            ej.set("max_bytes", e.max_bytes).set("won_at_ns", e.won_at_ns);
+            ej.set("algorithm", algo_to_json(&e.algorithm));
+            ej
+        })
+        .collect();
+    j.set("entries", Json::Arr(entries));
+    j.to_string_pretty()
+}
+
+/// Parse a table from JSON text.
+pub fn from_json(text: &str) -> Result<TuningTable> {
+    let j = Json::parse(text)?;
+    let cluster = j
+        .get("cluster")
+        .and_then(|v| v.as_str())
+        .unwrap_or("")
+        .to_string();
+    let n_ranks = j.get("n_ranks").and_then(|v| v.as_u64()).unwrap_or(0) as usize;
+    let mut entries = Vec::new();
+    for ej in j
+        .get("entries")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| Error::Config("tuning table missing entries".into()))?
+    {
+        entries.push(TableEntry {
+            max_bytes: ej
+                .get("max_bytes")
+                .and_then(|v| v.as_u64())
+                .ok_or_else(|| Error::Config("entry missing max_bytes".into()))?,
+            won_at_ns: ej.get("won_at_ns").and_then(|v| v.as_u64()).unwrap_or(0),
+            algorithm: algo_from_json(
+                ej.get("algorithm")
+                    .ok_or_else(|| Error::Config("entry missing algorithm".into()))?,
+            )?,
+        });
+    }
+    Ok(TuningTable {
+        cluster,
+        n_ranks,
+        entries,
+    })
+}
+
+/// Save to a file.
+pub fn save(table: &TuningTable, path: &Path) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, to_json(table))?;
+    Ok(())
+}
+
+/// Load from a file.
+pub fn load(path: &Path) -> Result<TuningTable> {
+    from_json(&std::fs::read_to_string(path)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> TuningTable {
+        TuningTable {
+            cluster: "kesch-1x16".into(),
+            n_ranks: 16,
+            entries: vec![
+                TableEntry {
+                    max_bytes: 8 << 10,
+                    algorithm: Algorithm::HostStagedKnomial { k: 4 },
+                    won_at_ns: 3_500,
+                },
+                TableEntry {
+                    max_bytes: u64::MAX,
+                    algorithm: Algorithm::PipelinedChain { chunk: 2 << 20 },
+                    won_at_ns: 14_000_000,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let t = sample();
+        let back = from_json(&to_json(&t)).unwrap();
+        assert_eq!(back.cluster, t.cluster);
+        assert_eq!(back.n_ranks, t.n_ranks);
+        assert_eq!(back.entries, t.entries);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let t = sample();
+        let dir = std::env::temp_dir().join("gdrbcast-test-persist");
+        let path = dir.join("table.json");
+        save(&t, &path).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.entries, t.entries);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn max_bytes_u64max_survives() {
+        // u64::MAX can't round-trip exactly through f64; the paper's
+        // tables cap at 1 GB anyway — verify we keep ordering + coverage
+        let t = sample();
+        let back = from_json(&to_json(&t)).unwrap();
+        assert!(back.entries[1].max_bytes > 1 << 62);
+    }
+
+    #[test]
+    fn rejects_bad_family() {
+        let text = r#"{"cluster":"x","n_ranks":2,"entries":[
+            {"max_bytes":4,"won_at_ns":1,"algorithm":{"family":"bogus"}}]}"#;
+        assert!(from_json(text).is_err());
+    }
+}

@@ -1,0 +1,90 @@
+//! Runtime selection: "MV2-GDR-Opt".
+//!
+//! A [`Selector`] owns a tuned table (built offline by [`super::sweep`]
+//! or loaded from an artifact) and answers "which algorithm for this
+//! message?" on the hot path — the role MVAPICH2-GDR's enhanced tuning
+//! framework plays at `MPI_Bcast` call time.
+
+use crate::collectives::{self, Algorithm, BcastPlan, BcastSpec};
+use crate::comm::Comm;
+use crate::netsim::Engine;
+use crate::topology::Cluster;
+
+use super::sweep;
+use super::table::TuningTable;
+
+/// The tuned broadcast dispatcher.
+#[derive(Debug, Clone)]
+pub struct Selector {
+    table: TuningTable,
+}
+
+impl Selector {
+    /// Tune for a cluster on the default size grid.
+    pub fn tuned(cluster: &Cluster) -> Selector {
+        Selector {
+            table: sweep::tune(cluster, &sweep::default_sizes()),
+        }
+    }
+
+    /// Wrap an existing (e.g. persisted) table.
+    pub fn from_table(table: TuningTable) -> Selector {
+        Selector { table }
+    }
+
+    pub fn table(&self) -> &TuningTable {
+        &self.table
+    }
+
+    /// The algorithm MV2-GDR-Opt uses for this message size.
+    pub fn algorithm(&self, bytes: u64) -> Algorithm {
+        self.table.select(bytes)
+    }
+
+    /// Build the tuned broadcast plan.
+    pub fn plan(&self, comm: &mut Comm, spec: &BcastSpec) -> BcastPlan {
+        collectives::plan(&self.algorithm(spec.bytes), comm, spec)
+    }
+
+    /// Simulated tuned-broadcast latency, ns.
+    pub fn latency_ns(&self, comm: &mut Comm, engine: &mut Engine, spec: &BcastSpec) -> u64 {
+        collectives::latency_ns(&self.algorithm(spec.bytes), comm, engine, spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::presets::kesch;
+
+    #[test]
+    fn tuned_selector_is_consistent_with_table() {
+        let cluster = kesch(1, 4);
+        let sel = Selector::tuned(&cluster);
+        for bytes in [4u64, 8 << 10, 2 << 20, 128 << 20] {
+            assert_eq!(sel.algorithm(bytes), sel.table().select(bytes));
+        }
+    }
+
+    #[test]
+    fn tuned_never_loses_to_binomial() {
+        let cluster = kesch(1, 8);
+        let sel = Selector::tuned(&cluster);
+        let mut comm = Comm::new(&cluster);
+        let mut engine = Engine::new(&cluster);
+        for bytes in [4u64, 64 << 10, 8 << 20, 64 << 20] {
+            let spec = BcastSpec::new(0, 8, bytes);
+            let tuned = sel.latency_ns(&mut comm, &mut engine, &spec);
+            let binomial = collectives::latency_ns(
+                &Algorithm::Knomial { k: 2 },
+                &mut comm,
+                &mut engine,
+                &spec,
+            );
+            assert!(
+                tuned <= binomial,
+                "tuned {tuned} vs binomial {binomial} at {bytes}B"
+            );
+        }
+    }
+}

@@ -1,0 +1,80 @@
+//! The candidate space the tuner sweeps.
+
+use crate::collectives::Algorithm;
+
+/// Chunk sizes tried for the pipelined chain (powers of two, 64 KB–8 MB —
+//  the range MVAPICH2's tuning infrastructure explores).
+pub fn chunk_candidates() -> Vec<u64> {
+    vec![
+        64 << 10,
+        128 << 10,
+        256 << 10,
+        512 << 10,
+        1 << 20,
+        2 << 20,
+        4 << 20,
+        8 << 20,
+    ]
+}
+
+/// Host staging replicates the payload across every host→GPU fan-out
+/// write; beyond this size the PCIe-volume cost outweighs the latency
+/// win (Eq. 6's M/B_PCIe term, felt sharply under the concurrent-bcast
+/// load of training schedules), so MV2 only stages small messages.
+pub const STAGING_MAX_BYTES: u64 = 32 << 10;
+
+/// All candidate algorithms for a given message size (pruning obviously
+/// hopeless candidates keeps sweeps fast without changing winners).
+pub fn candidates(bytes: u64) -> Vec<Algorithm> {
+    let mut out = vec![
+        Algorithm::Knomial { k: 2 },
+        Algorithm::Knomial { k: 4 },
+        Algorithm::Knomial { k: 8 },
+    ];
+    if bytes <= STAGING_MAX_BYTES {
+        out.push(Algorithm::HostStagedKnomial { k: 2 });
+        out.push(Algorithm::HostStagedKnomial { k: 4 });
+    }
+    if bytes >= 4 << 10 {
+        out.push(Algorithm::ScatterRingAllgather);
+        out.push(Algorithm::Chain);
+        for chunk in chunk_candidates() {
+            if chunk <= bytes {
+                out.push(Algorithm::PipelinedChain { chunk });
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_messages_skip_pipelining() {
+        let c = candidates(4);
+        assert!(c
+            .iter()
+            .all(|a| !matches!(a, Algorithm::PipelinedChain { .. })));
+        assert!(c.iter().any(|a| matches!(a, Algorithm::HostStagedKnomial { .. })));
+    }
+
+    #[test]
+    fn large_messages_include_pipelined_chain() {
+        let c = candidates(64 << 20);
+        let n_pipe = c
+            .iter()
+            .filter(|a| matches!(a, Algorithm::PipelinedChain { .. }))
+            .count();
+        assert_eq!(n_pipe, chunk_candidates().len());
+    }
+
+    #[test]
+    fn chunk_candidates_sorted_pow2() {
+        let cs = chunk_candidates();
+        for w in cs.windows(2) {
+            assert_eq!(w[1], w[0] * 2);
+        }
+    }
+}

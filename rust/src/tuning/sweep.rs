@@ -1,0 +1,128 @@
+//! Offline tuning sweeps: run every candidate on the simulator.
+
+use crate::collectives::{self, Algorithm, BcastSpec};
+use crate::comm::Comm;
+use crate::netsim::Engine;
+use crate::topology::Cluster;
+
+use super::space;
+use super::table::{TableEntry, TuningTable};
+
+/// Result of sweeping one message size.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub bytes: u64,
+    pub winner: Algorithm,
+    pub winner_ns: u64,
+    /// (algorithm, latency ns) for every candidate, sorted fastest first.
+    pub all: Vec<(Algorithm, u64)>,
+}
+
+/// Sweep all candidates at one size.
+pub fn sweep_size(cluster: &Cluster, bytes: u64, root: usize) -> SweepPoint {
+    let n = cluster.n_gpus();
+    let spec = BcastSpec::new(root, n, bytes);
+    let mut comm = Comm::new(cluster);
+    let mut engine = Engine::new(cluster);
+    let mut all: Vec<(Algorithm, u64)> = space::candidates(bytes)
+        .into_iter()
+        .map(|algo| {
+            let t = collectives::latency_ns(&algo, &mut comm, &mut engine, &spec);
+            (algo, t)
+        })
+        .collect();
+    all.sort_by_key(|&(_, t)| t);
+    let (winner, winner_ns) = all[0];
+    SweepPoint {
+        bytes,
+        winner,
+        winner_ns,
+        all,
+    }
+}
+
+/// Build a tuned table by sweeping a size grid.
+pub fn tune(cluster: &Cluster, sizes: &[u64]) -> TuningTable {
+    let mut table = TuningTable {
+        cluster: cluster.name.clone(),
+        n_ranks: cluster.n_gpus(),
+        entries: Vec::new(),
+    };
+    for (i, &bytes) in sizes.iter().enumerate() {
+        let point = sweep_size(cluster, bytes, 0);
+        let max_bytes = if i + 1 == sizes.len() {
+            u64::MAX
+        } else {
+            bytes
+        };
+        // merge adjacent buckets won by the same algorithm
+        if let Some(last) = table.entries.last_mut() {
+            if last.algorithm == point.winner {
+                last.max_bytes = max_bytes;
+                last.won_at_ns = point.winner_ns;
+                continue;
+            }
+        }
+        table.entries.push(TableEntry {
+            max_bytes,
+            algorithm: point.winner,
+            won_at_ns: point.winner_ns,
+        });
+    }
+    table
+}
+
+/// The default tuning size grid (powers of two, 4 B – 128 MB).
+pub fn default_sizes() -> Vec<u64> {
+    crate::util::bytes::pow2_sweep(4, 128 << 20)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::presets::kesch;
+
+    #[test]
+    fn tuner_picks_staged_small_and_pipelined_large() {
+        let cluster = kesch(1, 16);
+        let table = tune(&cluster, &[4, 8 << 10, 1 << 20, 32 << 20, 128 << 20]);
+        let small = table.select(4);
+        assert!(
+            matches!(small, Algorithm::HostStagedKnomial { .. })
+                || matches!(small, Algorithm::Knomial { .. }),
+            "small-message winner: {}",
+            small.name()
+        );
+        let large = table.select(128 << 20);
+        assert!(
+            matches!(large, Algorithm::PipelinedChain { .. })
+                || matches!(large, Algorithm::ScatterRingAllgather),
+            "large-message winner: {}",
+            large.name()
+        );
+    }
+
+    #[test]
+    fn tuned_beats_or_ties_every_fixed_algorithm() {
+        let cluster = kesch(1, 8);
+        for bytes in [4u64, 64 << 10, 16 << 20] {
+            let point = sweep_size(&cluster, bytes, 0);
+            for &(_, t) in &point.all {
+                assert!(point.winner_ns <= t);
+            }
+        }
+    }
+
+    #[test]
+    fn adjacent_same_winner_buckets_merge() {
+        let cluster = kesch(1, 4);
+        let table = tune(&cluster, &default_sizes());
+        for w in table.entries.windows(2) {
+            assert_ne!(
+                w[0].algorithm, w[1].algorithm,
+                "adjacent entries must differ after merging"
+            );
+        }
+        assert_eq!(table.entries.last().unwrap().max_bytes, u64::MAX);
+    }
+}

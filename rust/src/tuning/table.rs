@@ -1,0 +1,125 @@
+//! The dispatch table: message-size buckets → winning algorithm.
+
+use crate::collectives::Algorithm;
+
+/// One tuned entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TableEntry {
+    /// Messages of size ≤ this (bytes) use this entry.
+    pub max_bytes: u64,
+    pub algorithm: Algorithm,
+    /// The simulated latency that won the sweep (ns) at `max_bytes`.
+    pub won_at_ns: u64,
+}
+
+/// A tuned dispatch table for one (cluster shape, rank count).
+#[derive(Debug, Clone, Default)]
+pub struct TuningTable {
+    /// Identifies the topology the table was tuned for.
+    pub cluster: String,
+    pub n_ranks: usize,
+    /// Entries sorted by `max_bytes` ascending; the last entry also
+    /// covers everything above it.
+    pub entries: Vec<TableEntry>,
+}
+
+impl TuningTable {
+    /// Look up the algorithm for a message size.
+    pub fn select(&self, bytes: u64) -> Algorithm {
+        for e in &self.entries {
+            if bytes <= e.max_bytes {
+                return e.algorithm;
+            }
+        }
+        self.entries
+            .last()
+            .map(|e| e.algorithm)
+            .unwrap_or(Algorithm::Knomial { k: 2 })
+    }
+
+    /// Insert an entry keeping the size order.
+    pub fn insert(&mut self, entry: TableEntry) {
+        let pos = self
+            .entries
+            .binary_search_by_key(&entry.max_bytes, |e| e.max_bytes)
+            .unwrap_or_else(|p| p);
+        self.entries.insert(pos, entry);
+    }
+
+    /// Human-readable rendering (the paper's "tuned version" story).
+    pub fn render(&self) -> String {
+        use crate::util::tablefmt::Table;
+        let mut t = Table::new(&["<= size", "algorithm", "latency (us)"])
+            .with_title(format!(
+                "tuning table: {} ({} ranks)",
+                self.cluster, self.n_ranks
+            ));
+        for e in &self.entries {
+            let size = if e.max_bytes == u64::MAX {
+                "max".to_string()
+            } else {
+                crate::util::bytes::format_size(e.max_bytes)
+            };
+            t.row(vec![
+                size,
+                e.algorithm.name(),
+                crate::util::bytes::format_us(e.won_at_ns as f64),
+            ]);
+        }
+        t.render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> TuningTable {
+        let mut t = TuningTable {
+            cluster: "test".into(),
+            n_ranks: 8,
+            entries: Vec::new(),
+        };
+        t.insert(TableEntry {
+            max_bytes: 8 << 10,
+            algorithm: Algorithm::HostStagedKnomial { k: 2 },
+            won_at_ns: 3000,
+        });
+        t.insert(TableEntry {
+            max_bytes: 1 << 20,
+            algorithm: Algorithm::Knomial { k: 2 },
+            won_at_ns: 90_000,
+        });
+        t.insert(TableEntry {
+            max_bytes: u64::MAX,
+            algorithm: Algorithm::PipelinedChain { chunk: 1 << 20 },
+            won_at_ns: 10_000_000,
+        });
+        t
+    }
+
+    #[test]
+    fn bucket_lookup() {
+        let t = table();
+        assert_eq!(t.select(4), Algorithm::HostStagedKnomial { k: 2 });
+        assert_eq!(t.select(8 << 10), Algorithm::HostStagedKnomial { k: 2 });
+        assert_eq!(t.select(64 << 10), Algorithm::Knomial { k: 2 });
+        assert_eq!(
+            t.select(128 << 20),
+            Algorithm::PipelinedChain { chunk: 1 << 20 }
+        );
+    }
+
+    #[test]
+    fn empty_table_falls_back() {
+        let t = TuningTable::default();
+        assert_eq!(t.select(4), Algorithm::Knomial { k: 2 });
+    }
+
+    #[test]
+    fn render_lists_entries() {
+        let s = table().render();
+        assert!(s.contains("host-staged-knomial"));
+        assert!(s.contains("pipelined-chain"));
+    }
+}

@@ -1,0 +1,132 @@
+//! Human-readable byte-size parsing and formatting.
+//!
+//! Micro-benchmark sweeps and the CLI use sizes like `4`, `8K`, `2M`,
+//! `128M`; figures label axes the same way the paper does (powers of two,
+//! IEC units).
+
+use crate::error::{Error, Result};
+
+/// Parse `"8K"`, `"2M"`, `"1G"`, `"512"` into bytes. Accepts an optional
+/// `B`/`iB` suffix and lower/upper case.
+pub fn parse_size(s: &str) -> Result<u64> {
+    let t = s.trim();
+    if t.is_empty() {
+        return Err(Error::Usage("empty size".into()));
+    }
+    let up = t.to_ascii_uppercase();
+    let up = up
+        .strip_suffix("IB")
+        .or_else(|| up.strip_suffix('B'))
+        .unwrap_or(&up);
+    let (num, mult) = match up.chars().last() {
+        Some('K') => (&up[..up.len() - 1], 1u64 << 10),
+        Some('M') => (&up[..up.len() - 1], 1u64 << 20),
+        Some('G') => (&up[..up.len() - 1], 1u64 << 30),
+        Some('T') => (&up[..up.len() - 1], 1u64 << 40),
+        _ => (&up[..], 1u64),
+    };
+    let num = num.trim();
+    let value: f64 = num
+        .parse()
+        .map_err(|_| Error::Usage(format!("cannot parse size '{s}'")))?;
+    if value < 0.0 {
+        return Err(Error::Usage(format!("negative size '{s}'")));
+    }
+    Ok((value * mult as f64).round() as u64)
+}
+
+/// Format bytes the way the paper's figures label them: `4`, `8K`, `2M`…
+pub fn format_size(bytes: u64) -> String {
+    const UNITS: [(u64, &str); 4] = [
+        (1 << 40, "T"),
+        (1 << 30, "G"),
+        (1 << 20, "M"),
+        (1 << 10, "K"),
+    ];
+    for (scale, suffix) in UNITS {
+        if bytes >= scale && bytes % scale == 0 {
+            return format!("{}{}", bytes / scale, suffix);
+        }
+    }
+    for (scale, suffix) in UNITS {
+        if bytes >= scale {
+            return format!("{:.1}{}", bytes as f64 / scale as f64, suffix);
+        }
+    }
+    format!("{bytes}")
+}
+
+/// The classic osu-benchmark sweep: powers of two from `lo` to `hi`
+/// inclusive.
+pub fn pow2_sweep(lo: u64, hi: u64) -> Vec<u64> {
+    assert!(lo > 0 && lo <= hi);
+    let mut out = Vec::new();
+    let mut m = lo;
+    while m <= hi {
+        out.push(m);
+        if m > hi / 2 {
+            break;
+        }
+        m *= 2;
+    }
+    out
+}
+
+/// Format a nanosecond quantity as the paper reports latencies (µs).
+pub fn format_us(ns: f64) -> String {
+    let us = ns / 1000.0;
+    if us >= 100_000.0 {
+        format!("{:.0}", us)
+    } else if us >= 100.0 {
+        format!("{:.1}", us)
+    } else {
+        format!("{:.2}", us)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_plain() {
+        assert_eq!(parse_size("512").unwrap(), 512);
+        assert_eq!(parse_size(" 4 ").unwrap(), 4);
+    }
+
+    #[test]
+    fn parse_units() {
+        assert_eq!(parse_size("8K").unwrap(), 8192);
+        assert_eq!(parse_size("8k").unwrap(), 8192);
+        assert_eq!(parse_size("2M").unwrap(), 2 << 20);
+        assert_eq!(parse_size("1G").unwrap(), 1 << 30);
+        assert_eq!(parse_size("8KB").unwrap(), 8192);
+        assert_eq!(parse_size("8KiB").unwrap(), 8192);
+        assert_eq!(parse_size("1.5K").unwrap(), 1536);
+    }
+
+    #[test]
+    fn parse_errors() {
+        assert!(parse_size("").is_err());
+        assert!(parse_size("abc").is_err());
+        assert!(parse_size("-4K").is_err());
+    }
+
+    #[test]
+    fn format_roundtrip() {
+        for s in ["4", "64", "8K", "256K", "2M", "128M", "1G"] {
+            assert_eq!(format_size(parse_size(s).unwrap()), s);
+        }
+    }
+
+    #[test]
+    fn sweep_covers_range() {
+        let s = pow2_sweep(4, 128 << 20);
+        assert_eq!(s[0], 4);
+        assert_eq!(*s.last().unwrap(), 128 << 20);
+        assert_eq!(s.len(), 26);
+        for w in s.windows(2) {
+            assert_eq!(w[1], w[0] * 2);
+        }
+    }
+}

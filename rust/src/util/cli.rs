@@ -1,0 +1,203 @@
+//! A tiny argument parser (flags, `--key value` options, subcommands,
+//! positional arguments) — the offline crate universe has no `clap`.
+//!
+//! Usage pattern:
+//!
+//! ```
+//! use gdrbcast::util::cli::Args;
+//! let argv = vec!["bcast".to_string(), "--gpus".to_string(), "16".to_string()];
+//! let mut args = Args::new(argv);
+//! let gpus: usize = args.opt_parse("--gpus").unwrap().unwrap_or(8);
+//! assert_eq!(gpus, 16);
+//! ```
+
+use std::collections::HashMap;
+use std::str::FromStr;
+
+use crate::error::{Error, Result};
+
+/// Parsed command line: a subcommand word, `--key value` options, `--flag`
+/// booleans and positionals, in that grammar. Values may also be attached
+/// with `--key=value`.
+#[derive(Debug, Clone)]
+pub struct Args {
+    opts: HashMap<String, String>,
+    flags: Vec<String>,
+    positionals: Vec<String>,
+    consumed: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an argv-style vector (program name NOT included).
+    pub fn new(argv: Vec<String>) -> Args {
+        let mut opts = HashMap::new();
+        let mut flags = Vec::new();
+        let mut positionals = Vec::new();
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(rest) = arg.strip_prefix("--") {
+                if let Some(eq) = rest.find('=') {
+                    opts.insert(format!("--{}", &rest[..eq]), rest[eq + 1..].to_string());
+                } else if it
+                    .peek()
+                    .map(|next| !next.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let val = it.next().unwrap();
+                    opts.insert(format!("--{rest}"), val);
+                } else {
+                    flags.push(format!("--{rest}"));
+                }
+            } else {
+                positionals.push(arg);
+            }
+        }
+        Args {
+            opts,
+            flags,
+            positionals,
+            consumed: Vec::new(),
+        }
+    }
+
+    /// From the process environment (skips argv[0]).
+    pub fn from_env() -> Args {
+        Args::new(std::env::args().skip(1).collect())
+    }
+
+    /// Take the next positional (typically the subcommand).
+    pub fn positional(&mut self) -> Option<String> {
+        if self.positionals.is_empty() {
+            None
+        } else {
+            Some(self.positionals.remove(0))
+        }
+    }
+
+    /// Whether a boolean flag is present.
+    pub fn flag(&mut self, name: &str) -> bool {
+        self.consumed.push(name.to_string());
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Raw string option.
+    pub fn opt(&mut self, name: &str) -> Option<String> {
+        self.consumed.push(name.to_string());
+        self.opts.get(name).cloned()
+    }
+
+    /// Parse an option into any `FromStr` type.
+    pub fn opt_parse<T: FromStr>(&mut self, name: &str) -> Result<Option<T>> {
+        match self.opt(name) {
+            None => Ok(None),
+            Some(raw) => raw.parse::<T>().map(Some).map_err(|_| {
+                Error::Usage(format!("cannot parse {name} value '{raw}'"))
+            }),
+        }
+    }
+
+    /// Parse an option with a default.
+    pub fn opt_or<T: FromStr>(&mut self, name: &str, default: T) -> Result<T> {
+        Ok(self.opt_parse(name)?.unwrap_or(default))
+    }
+
+    /// Comma-separated list option, e.g. `--gpus 2,4,8,16`.
+    pub fn opt_list<T: FromStr>(&mut self, name: &str) -> Result<Option<Vec<T>>> {
+        match self.opt(name) {
+            None => Ok(None),
+            Some(raw) => raw
+                .split(',')
+                .map(|s| {
+                    s.trim().parse::<T>().map_err(|_| {
+                        Error::Usage(format!("cannot parse {name} element '{s}'"))
+                    })
+                })
+                .collect::<Result<Vec<T>>>()
+                .map(Some),
+        }
+    }
+
+    /// Error if any `--options` remain that were never consumed.
+    pub fn finish(self) -> Result<()> {
+        for k in self.opts.keys() {
+            if !self.consumed.contains(k) {
+                return Err(Error::Usage(format!("unknown option {k}")));
+            }
+        }
+        for f in &self.flags {
+            if !self.consumed.contains(f) {
+                return Err(Error::Usage(format!("unknown flag {f}")));
+            }
+        }
+        if !self.positionals.is_empty() {
+            return Err(Error::Usage(format!(
+                "unexpected argument '{}'",
+                self.positionals[0]
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_opts_flags() {
+        // NB a bare flag followed by a non-flag token would consume it as
+        // a value (grammar ambiguity) — flags go last or before options
+        let mut a = Args::new(argv("bcast pos2 --gpus 16 --algo chain --verbose"));
+        assert_eq!(a.positional().as_deref(), Some("bcast"));
+        assert_eq!(a.opt_parse::<usize>("--gpus").unwrap(), Some(16));
+        assert_eq!(a.opt("--algo").as_deref(), Some("chain"));
+        assert!(a.flag("--verbose"));
+        assert_eq!(a.positional().as_deref(), Some("pos2"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn equals_form() {
+        let mut a = Args::new(argv("--size=8K"));
+        assert_eq!(a.opt("--size").as_deref(), Some("8K"));
+    }
+
+    #[test]
+    fn default_values() {
+        let mut a = Args::new(argv(""));
+        assert_eq!(a.opt_or("--iters", 100usize).unwrap(), 100);
+    }
+
+    #[test]
+    fn list_option() {
+        let mut a = Args::new(argv("--gpus 2,4,8,16"));
+        assert_eq!(
+            a.opt_list::<usize>("--gpus").unwrap().unwrap(),
+            vec![2, 4, 8, 16]
+        );
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let mut a = Args::new(argv("--bogus 3"));
+        let _ = a.opt("--real");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn bad_parse_is_error() {
+        let mut a = Args::new(argv("--gpus banana"));
+        assert!(a.opt_parse::<usize>("--gpus").is_err());
+    }
+
+    #[test]
+    fn trailing_flag_not_eating_next_flag() {
+        let mut a = Args::new(argv("--verbose --gpus 4"));
+        assert!(a.flag("--verbose"));
+        assert_eq!(a.opt_parse::<usize>("--gpus").unwrap(), Some(4));
+    }
+}

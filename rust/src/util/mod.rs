@@ -1,0 +1,22 @@
+//! Zero-dependency substrates.
+//!
+//! The build environment is fully offline and its crate universe does not
+//! include `rand`, `serde`, `clap`, `criterion` or `proptest`, so this
+//! module provides the minimal from-scratch equivalents the rest of the
+//! crate needs:
+//!
+//! * [`rng`] — deterministic SplitMix64 / xoshiro256** PRNGs,
+//! * [`stats`] — summary statistics (mean/σ/percentiles) for benches,
+//! * [`bytes`] — human size parsing/formatting (`"8K"`, `"128M"`),
+//! * [`json`] — a small JSON writer for machine-readable reports,
+//! * [`tablefmt`] — aligned plain-text tables for figure/table output,
+//! * [`cli`] — a tiny argument parser (flags, options, subcommands),
+//! * [`prop`] — a property-testing harness with shrinking.
+
+pub mod bytes;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod tablefmt;

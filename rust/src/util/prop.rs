@@ -1,0 +1,172 @@
+//! A small property-testing harness with shrinking.
+//!
+//! `proptest` is not in the offline crate universe; this provides the
+//! subset we use for simulator/collective invariants: seeded random case
+//! generation, a fixed case budget, and greedy shrinking of failing cases
+//! through a user-provided shrink function.
+//!
+//! ```
+//! use gdrbcast::util::prop::{Config, check};
+//! use gdrbcast::util::rng::Rng;
+//! check(Config::default().cases(64), "sum-commutes",
+//!     |rng: &mut Rng| (rng.range_u64(0, 100), rng.range_u64(0, 100)),
+//!     |&(a, b)| if a + b == b + a { Ok(()) } else { Err("!".into()) },
+//!     |_case| Vec::new());
+//! ```
+
+use super::rng::Rng;
+
+/// Property-check configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_steps: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            cases: 128,
+            // override with GDRBCAST_PROP_SEED for exploration
+            seed: std::env::var("GDRBCAST_PROP_SEED")
+                .ok()
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(0xB0CA57),
+            max_shrink_steps: 400,
+        }
+    }
+}
+
+impl Config {
+    pub fn cases(mut self, n: usize) -> Self {
+        self.cases = n;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+}
+
+/// Run a property: generate `cases` random inputs, check each, and on
+/// failure greedily shrink via `shrink` (which returns candidate smaller
+/// cases) before panicking with the minimal counterexample.
+pub fn check<T, G, P, S>(config: Config, name: &str, mut gen: G, prop: P, shrink: S)
+where
+    T: std::fmt::Debug + Clone,
+    G: FnMut(&mut Rng) -> T,
+    P: Fn(&T) -> Result<(), String>,
+    S: Fn(&T) -> Vec<T>,
+{
+    let mut rng = Rng::new(config.seed);
+    for case_no in 0..config.cases {
+        let case = gen(&mut rng);
+        if let Err(msg) = prop(&case) {
+            // shrink
+            let mut best = case.clone();
+            let mut best_msg = msg;
+            let mut steps = 0;
+            'outer: loop {
+                if steps >= config.max_shrink_steps {
+                    break;
+                }
+                for candidate in shrink(&best) {
+                    steps += 1;
+                    if steps >= config.max_shrink_steps {
+                        break 'outer;
+                    }
+                    if let Err(m) = prop(&candidate) {
+                        best = candidate;
+                        best_msg = m;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property '{name}' failed (case #{case_no}, seed {seed}):\n  \
+                 counterexample: {best:?}\n  error: {best_msg}",
+                seed = config.seed,
+            );
+        }
+    }
+}
+
+/// Common shrink helper: all "halve it" and "decrement it" candidates for
+/// an integer, largest reduction first.
+pub fn shrink_u64(x: u64, lo: u64) -> Vec<u64> {
+    let mut out = Vec::new();
+    if x > lo {
+        out.push(lo);
+        if x / 2 > lo {
+            out.push(x / 2);
+        }
+        out.push(x - 1);
+    }
+    out
+}
+
+/// Shrink helper for usize.
+pub fn shrink_usize(x: usize, lo: usize) -> Vec<usize> {
+    shrink_u64(x as u64, lo as u64)
+        .into_iter()
+        .map(|v| v as usize)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(
+            Config::default().cases(50),
+            "add-commutes",
+            |rng| (rng.range_u64(0, 1000), rng.range_u64(0, 1000)),
+            |&(a, b)| {
+                if a + b == b + a {
+                    Ok(())
+                } else {
+                    Err("math broke".into())
+                }
+            },
+            |_| Vec::new(),
+        );
+    }
+
+    #[test]
+    fn failing_property_shrinks_to_minimum() {
+        let result = std::panic::catch_unwind(|| {
+            check(
+                Config::default().cases(200).seed(3),
+                "all-below-50",
+                |rng| rng.range_u64(0, 1000),
+                |&x| {
+                    if x < 50 {
+                        Ok(())
+                    } else {
+                        Err(format!("{x} >= 50"))
+                    }
+                },
+                |&x| shrink_u64(x, 0),
+            );
+        });
+        let err = result.unwrap_err();
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        // minimal counterexample is 50 exactly
+        assert!(msg.contains("counterexample: 50"), "msg: {msg}");
+    }
+
+    #[test]
+    fn shrink_helpers_reduce() {
+        assert!(shrink_u64(100, 0).iter().all(|&v| v < 100));
+        assert!(shrink_u64(0, 0).is_empty());
+        assert_eq!(shrink_usize(1, 0), vec![0, 0]);
+    }
+}

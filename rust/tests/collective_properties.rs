@@ -1,0 +1,231 @@
+//! Property tests: broadcast invariants over random topologies, roots,
+//! sizes, chunk sizes and algorithms (the prop harness shrinks failures).
+
+use gdrbcast::collectives::{self, validate::check_algorithm, Algorithm, BcastSpec};
+use gdrbcast::comm::Comm;
+use gdrbcast::netsim::Engine;
+use gdrbcast::topology::{presets, Cluster};
+use gdrbcast::util::prop::{check, shrink_u64, shrink_usize, Config};
+use gdrbcast::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+struct Case {
+    preset: u8,
+    nodes: usize,
+    gpn: usize,
+    root: usize,
+    bytes: u64,
+    algo_idx: usize,
+    chunk: u64,
+    k: usize,
+}
+
+fn cluster_of(case: &Case) -> Cluster {
+    match case.preset {
+        0 => presets::kesch(case.nodes, case.gpn.clamp(1, 16)),
+        1 => presets::dgx1(case.nodes, case.gpn.clamp(1, 8), false),
+        2 => presets::dgx1(case.nodes, case.gpn.clamp(1, 8), true),
+        _ => presets::flat(case.nodes * case.gpn),
+    }
+}
+
+fn algo_of(case: &Case) -> Algorithm {
+    match case.algo_idx % 6 {
+        0 => Algorithm::Direct,
+        1 => Algorithm::Chain,
+        2 => Algorithm::PipelinedChain {
+            chunk: case.chunk.max(1),
+        },
+        3 => Algorithm::Knomial {
+            k: case.k.clamp(2, 8),
+        },
+        4 => Algorithm::ScatterRingAllgather,
+        _ => Algorithm::HostStagedKnomial {
+            k: case.k.clamp(2, 8),
+        },
+    }
+}
+
+fn gen_case(rng: &mut Rng) -> Case {
+    Case {
+        preset: rng.range_u64(0, 3) as u8,
+        nodes: rng.range_usize(1, 3),
+        gpn: rng.range_usize(1, 16),
+        root: rng.range_usize(0, 63),
+        bytes: rng.range_u64(0, 4 << 20),
+        algo_idx: rng.range_usize(0, 5),
+        chunk: rng.range_u64(1, 1 << 20),
+        k: rng.range_usize(2, 8),
+    }
+}
+
+fn shrink_case(c: &Case) -> Vec<Case> {
+    let mut out = Vec::new();
+    for nodes in shrink_usize(c.nodes, 1) {
+        out.push(Case { nodes, ..c.clone() });
+    }
+    for gpn in shrink_usize(c.gpn, 1) {
+        out.push(Case { gpn, ..c.clone() });
+    }
+    for bytes in shrink_u64(c.bytes, 0) {
+        out.push(Case { bytes, ..c.clone() });
+    }
+    for chunk in shrink_u64(c.chunk, 1) {
+        out.push(Case { chunk, ..c.clone() });
+    }
+    if c.root > 0 {
+        out.push(Case {
+            root: 0,
+            ..c.clone()
+        });
+    }
+    out
+}
+
+/// Every algorithm on every topology delivers every chunk to every rank,
+/// causally, exactly once.
+#[test]
+fn prop_delivery_and_causality() {
+    check(
+        Config::default().cases(120),
+        "bcast-delivery-causality",
+        gen_case,
+        |case| {
+            let cluster = cluster_of(case);
+            let n = cluster.n_gpus();
+            let spec = BcastSpec::new(case.root % n, n, case.bytes);
+            let algo = algo_of(case);
+            let mut comm = Comm::new(&cluster);
+            let mut engine = Engine::new(&cluster);
+            check_algorithm(&algo, &mut comm, &mut engine, &spec).map(|_| ())
+        },
+        shrink_case,
+    );
+}
+
+/// Latency is non-decreasing in message size (same topology/algorithm).
+#[test]
+fn prop_latency_monotone_in_size() {
+    check(
+        Config::default().cases(60),
+        "latency-monotone",
+        gen_case,
+        |case| {
+            let cluster = cluster_of(case);
+            let n = cluster.n_gpus();
+            let algo = algo_of(case);
+            let mut comm = Comm::new(&cluster);
+            let mut engine = Engine::new(&cluster);
+            let small = collectives::latency_ns(
+                &algo,
+                &mut comm,
+                &mut engine,
+                &BcastSpec::new(case.root % n, n, case.bytes / 2),
+            );
+            let large = collectives::latency_ns(
+                &algo,
+                &mut comm,
+                &mut engine,
+                &BcastSpec::new(case.root % n, n, case.bytes),
+            );
+            if small <= large {
+                Ok(())
+            } else {
+                Err(format!("{small} > {large} for {}", algo_of(case).name()))
+            }
+        },
+        shrink_case,
+    );
+}
+
+/// Pipelined chain with C >= M equals the plain chain exactly.
+#[test]
+fn prop_pipelined_chain_degenerates_to_chain() {
+    check(
+        Config::default().cases(60),
+        "pipelined-chain-degenerate",
+        gen_case,
+        |case| {
+            let cluster = cluster_of(case);
+            let n = cluster.n_gpus();
+            let bytes = case.bytes.max(1);
+            let spec = BcastSpec::new(case.root % n, n, bytes);
+            let mut comm = Comm::new(&cluster);
+            let mut engine = Engine::new(&cluster);
+            let chain =
+                collectives::latency_ns(&Algorithm::Chain, &mut comm, &mut engine, &spec);
+            let piped = collectives::latency_ns(
+                &Algorithm::PipelinedChain { chunk: bytes },
+                &mut comm,
+                &mut engine,
+                &spec,
+            );
+            if chain == piped {
+                Ok(())
+            } else {
+                Err(format!("chain {chain} != pipelined(C=M) {piped}"))
+            }
+        },
+        shrink_case,
+    );
+}
+
+/// The simulator is deterministic: same case, same answer.
+#[test]
+fn prop_deterministic() {
+    check(
+        Config::default().cases(40),
+        "deterministic",
+        gen_case,
+        |case| {
+            let cluster = cluster_of(case);
+            let n = cluster.n_gpus();
+            let spec = BcastSpec::new(case.root % n, n, case.bytes);
+            let algo = algo_of(case);
+            let mut comm = Comm::new(&cluster);
+            let mut engine = Engine::new(&cluster);
+            let a = collectives::latency_ns(&algo, &mut comm, &mut engine, &spec);
+            let b = collectives::latency_ns(&algo, &mut comm, &mut engine, &spec);
+            if a == b {
+                Ok(())
+            } else {
+                Err(format!("{a} != {b}"))
+            }
+        },
+        shrink_case,
+    );
+}
+
+/// Total transfer volume is at least ~M×(n-1): every non-root rank must
+/// receive the full message at least once.
+#[test]
+fn prop_traffic_lower_bound() {
+    check(
+        Config::default().cases(60),
+        "traffic-lower-bound",
+        gen_case,
+        |case| {
+            let cluster = cluster_of(case);
+            let n = cluster.n_gpus();
+            if n < 2 {
+                return Ok(());
+            }
+            let bytes = case.bytes.max(n as u64); // avoid rounding noise
+            let spec = BcastSpec::new(case.root % n, n, bytes);
+            let algo = algo_of(case);
+            let mut comm = Comm::new(&cluster);
+            let bp = collectives::plan(&algo, &mut comm, &spec);
+            let total = bp.plan.total_bytes();
+            let min = bytes * (n as u64 - 1) - n as u64; // slack for part rounding
+            if total >= min {
+                Ok(())
+            } else {
+                Err(format!(
+                    "{} moved only {total} bytes (< {min}) for M={bytes} n={n}",
+                    algo.name()
+                ))
+            }
+        },
+        shrink_case,
+    );
+}

@@ -1,0 +1,110 @@
+//! Integration: the data-parallel coordinator — threaded leader/worker
+//! protocol, simulated comm accounting, and the Fig. 3 estimator's
+//! qualitative claims.
+
+use gdrbcast::coordinator::train::estimate_iteration;
+use gdrbcast::coordinator::worker::QuadBackend;
+use gdrbcast::coordinator::{
+    comm_time_ns, run_threaded, BcastBackend, SgdConfig,
+};
+use gdrbcast::models::{bcast_messages, zoo, MessageSchedule};
+use gdrbcast::nccl::NcclParams;
+use gdrbcast::netsim::Engine;
+use gdrbcast::comm::Comm;
+use gdrbcast::topology::presets;
+use gdrbcast::tuning::Selector;
+
+#[test]
+fn threaded_training_with_simulated_comm() {
+    // 8 worker threads against the leader, with per-iteration comm cost
+    // coming from the simulator — the full L3 composition minus PJRT
+    let cluster = presets::kesch(1, 8);
+    let sel = Selector::tuned(&cluster);
+    let model = zoo::vgg_mini();
+    let msgs = bcast_messages(&model, 8, MessageSchedule::Partitioned);
+    let mut comm = Comm::new(&cluster);
+    let mut engine = Engine::new(&cluster);
+    let comm_ns = comm_time_ns(&mut comm, &mut engine, &BcastBackend::Mv2Opt(&sel), &msgs);
+    assert!(comm_ns > 0);
+
+    let target: Vec<f32> = (0..64).map(|i| ((i * 37) % 19) as f32 / 10.0).collect();
+    let workers: Vec<QuadBackend> = (0..8).map(|_| QuadBackend::new(target.clone())).collect();
+    let mut params = vec![0.0f32; target.len()];
+    let metrics = run_threaded(
+        &mut params,
+        workers,
+        &SgdConfig {
+            lr: 0.2,
+            iterations: 50,
+        },
+        |_| comm_ns,
+    );
+    assert!(metrics.loss_decreased());
+    assert!(metrics.final_loss() < 1e-4);
+    assert_eq!(metrics.total_comm_ns(), comm_ns * 50);
+}
+
+#[test]
+fn mv2_opt_never_slower_than_nccl_mv2_for_vgg() {
+    // the Fig. 3 "matches or beats at every scale" claim
+    let nccl = NcclParams::default();
+    let model = zoo::vgg16();
+    for (nodes, gpn) in [(1usize, 8usize), (2, 16)] {
+        let cluster = presets::kesch(nodes, gpn);
+        let sel = Selector::tuned(&cluster);
+        let batch = 16 * cluster.n_gpus();
+        let a = estimate_iteration(&cluster, &model, &BcastBackend::Mv2Opt(&sel), batch, 0.0);
+        let b = estimate_iteration(&cluster, &model, &BcastBackend::NcclMv2(&nccl), batch, 0.0);
+        assert!(
+            a.iter_us <= b.iter_us * 1.001,
+            "{} GPUs: MV2 {} vs NCCL {}",
+            cluster.n_gpus(),
+            a.iter_us,
+            b.iter_us
+        );
+    }
+}
+
+#[test]
+fn comm_shrinks_relative_to_compute_with_fewer_ranks() {
+    // partitioned messages grow as ranks shrink, but total comm volume is
+    // constant; compute per GPU grows with weak scaling — sanity-check
+    // the estimator's proportions
+    let model = zoo::vgg16();
+    let cluster = presets::kesch(1, 8);
+    let sel = Selector::tuned(&cluster);
+    let est = estimate_iteration(&cluster, &model, &BcastBackend::Mv2Opt(&sel), 128, 0.0);
+    assert!(est.compute_us > 0.0);
+    assert!(est.comm_us > 0.0);
+    assert!(est.throughput > 0.0);
+    // VGG at 8 GPUs: compute must dominate (the paper's premise that the
+    // 7% win comes from the comm slice)
+    assert!(est.compute_us > est.comm_us);
+}
+
+#[test]
+fn googlenet_benefits_at_scale() {
+    // §V-D expectation: smaller models (GoogLeNet) shift toward the
+    // small/medium message band where the proposed designs win
+    let nccl = NcclParams::default();
+    let model = zoo::googlenet();
+    let cluster = presets::kesch(4, 16);
+    let sel = Selector::tuned(&cluster);
+    let batch = 16 * cluster.n_gpus();
+    let a = estimate_iteration(&cluster, &model, &BcastBackend::Mv2Opt(&sel), batch, 0.0);
+    let b = estimate_iteration(&cluster, &model, &BcastBackend::NcclMv2(&nccl), batch, 0.0);
+    assert!(a.comm_us < b.comm_us, "mv2 {} nccl {}", a.comm_us, b.comm_us);
+}
+
+#[test]
+fn per_layer_schedule_also_supported() {
+    let cluster = presets::kesch(1, 4);
+    let sel = Selector::tuned(&cluster);
+    let model = zoo::lenet5();
+    let msgs = bcast_messages(&model, 4, MessageSchedule::PerLayer);
+    assert_eq!(msgs.len(), model.layers.len());
+    let mut comm = Comm::new(&cluster);
+    let mut engine = Engine::new(&cluster);
+    let t = comm_time_ns(&mut comm, &mut engine, &BcastBackend::Mv2Opt(&sel), &msgs);
+    assert!(t > 0);
+}

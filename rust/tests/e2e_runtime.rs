@@ -1,0 +1,90 @@
+//! Integration: the rust runtime executes the AOT-compiled JAX/Pallas
+//! training step. Skipped (with a notice) when `make artifacts` has not
+//! run yet.
+
+use gdrbcast::coordinator::worker::ComputeBackend;
+use gdrbcast::runtime::{Artifacts, PjrtWorker, Runtime, TrainStep};
+
+fn artifacts() -> Option<Artifacts> {
+    match Artifacts::discover() {
+        Ok(a) => Some(a),
+        Err(e) => {
+            eprintln!("skipping PJRT e2e test: {e}");
+            None
+        }
+    }
+}
+
+fn init_params(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = gdrbcast::util::rng::Rng::new(seed);
+    (0..n)
+        .map(|_| (rng.next_f64() as f32 - 0.5) * 0.05)
+        .collect()
+}
+
+#[test]
+fn train_step_executes_and_learns() {
+    let Some(arts) = artifacts() else { return };
+    let rt = Runtime::cpu().expect("pjrt cpu client");
+    let step = TrainStep::load(&rt, &arts).expect("compile train_step");
+    assert_eq!(step.n_params, arts.meta.n_params);
+
+    let mut params = init_params(step.n_params, 7);
+    let worker = PjrtWorker::new(&step, 42, 1);
+    let mut losses = Vec::new();
+    for _ in 0..80 {
+        let (x, y) = worker.batch();
+        let (new_params, loss) = step.step(&params, x, y, 0.25).expect("step");
+        assert!(loss.is_finite(), "loss must be finite");
+        params = new_params;
+        losses.push(loss);
+    }
+    let first: f32 = losses[..5].iter().sum::<f32>() / 5.0;
+    let last: f32 = losses[losses.len() - 5..].iter().sum::<f32>() / 5.0;
+    assert!(
+        last < first * 0.9,
+        "loss should decrease: first5 {first} last5 {last} ({losses:?})"
+    );
+}
+
+#[test]
+fn predict_artifact_loads_and_runs() {
+    let Some(arts) = artifacts() else { return };
+    let rt = Runtime::cpu().expect("pjrt cpu client");
+    let exe = rt
+        .load_hlo_text(&arts.predict_path())
+        .expect("compile predict");
+    let params = init_params(arts.meta.n_params, 3);
+    let x = vec![0.1f32; arts.meta.batch * arts.meta.input_dim];
+    let out = exe
+        .run_f32(&[
+            (&params, &[arts.meta.n_params as i64]),
+            (&x, &[arts.meta.batch as i64, arts.meta.input_dim as i64]),
+        ])
+        .expect("run predict");
+    assert_eq!(out.len(), arts.meta.batch * arts.meta.classes);
+    assert!(out.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn pjrt_worker_gradients_average_correctly() {
+    let Some(arts) = artifacts() else { return };
+    let rt = Runtime::cpu().expect("pjrt cpu client");
+    let step = TrainStep::load(&rt, &arts).expect("compile");
+    let params = init_params(step.n_params, 11);
+    let mut w1 = PjrtWorker::new(&step, 1, 5);
+    let mut w2 = PjrtWorker::new(&step, 2, 5);
+    let (g1, l1) = w1.grad(&params, 0);
+    let (g2, l2) = w2.grad(&params, 0);
+    assert_eq!(g1.len(), params.len());
+    assert_eq!(g2.len(), params.len());
+    assert!(l1.is_finite() && l2.is_finite());
+    // different shards -> different gradients
+    let diff = g1
+        .iter()
+        .zip(&g2)
+        .filter(|(a, b)| (**a - **b).abs() > 1e-9)
+        .count();
+    assert!(diff > params.len() / 2, "shards should differ: {diff}");
+    assert_eq!(w1.n_params(), params.len());
+}

@@ -1,0 +1,109 @@
+//! Figure-level smoke tests: small versions of F1/F2 asserting the
+//! paper's qualitative results (who wins, where) without running the
+//! full sweeps.
+
+use gdrbcast::bench::osu::osu_bcast;
+use gdrbcast::bench::report::Figure;
+use gdrbcast::collectives::BcastSpec;
+use gdrbcast::comm::Comm;
+use gdrbcast::nccl::{bcast as nccl_bcast, hierarchical, NcclParams};
+use gdrbcast::netsim::Engine;
+use gdrbcast::topology::presets;
+use gdrbcast::tuning::Selector;
+
+fn fig1(gpus: usize, sizes: &[u64]) -> Figure {
+    let cluster = presets::kesch(1, gpus);
+    let selector = Selector::tuned(&cluster);
+    let nccl = NcclParams::default();
+    let mut comm = Comm::new(&cluster);
+    let mut engine = Engine::new(&cluster);
+    let nccl_res = osu_bcast(&mut engine, sizes, 2, 1, |bytes, _| {
+        nccl_bcast::plan_intranode(&cluster, &nccl, &BcastSpec::new(0, gpus, bytes))
+    });
+    let mv2_res = osu_bcast(&mut engine, sizes, 2, 1, |bytes, _| {
+        selector.plan(&mut comm, &BcastSpec::new(0, gpus, bytes))
+    });
+    let mut fig = Figure::new(format!("{gpus} gpus"), sizes.to_vec());
+    fig.push_series("NCCL", nccl_res.iter().map(|r| r.latency_us).collect());
+    fig.push_series("MV2-GDR-Opt", mv2_res.iter().map(|r| r.latency_us).collect());
+    fig
+}
+
+#[test]
+fn fig1_shape_small_messages_win_big_large_comparable() {
+    let sizes = [4u64, 512, 8 << 10, 1 << 20, 32 << 20, 128 << 20];
+    for gpus in [2usize, 4, 8, 16] {
+        let fig = fig1(gpus, &sizes);
+        let (_, small_ratio) = fig.max_ratio_below(8 << 10).unwrap();
+        assert!(
+            small_ratio > 5.0,
+            "{gpus} GPUs: small-message win only {small_ratio:.1}x (paper: 9.4x-14x)"
+        );
+        let large_ratio = fig.ratio_at_max().unwrap();
+        assert!(
+            (0.7..3.0).contains(&large_ratio),
+            "{gpus} GPUs: large messages must be comparable, got {large_ratio:.2}x"
+        );
+        // and the small-message win must exceed the large-message one —
+        // the size-dependence the whole paper hinges on
+        assert!(small_ratio > large_ratio);
+    }
+}
+
+#[test]
+fn fig2_shape_internode() {
+    let sizes = [4u64, 8 << 10, 1 << 20, 64 << 20];
+    for nodes in [2usize, 4] {
+        let cluster = presets::kesch(nodes, 16);
+        let gpus = cluster.n_gpus();
+        let selector = Selector::tuned(&cluster);
+        let nccl = NcclParams::default();
+        let mut comm = Comm::new(&cluster);
+        let mut engine = Engine::new(&cluster);
+        let nccl_res = osu_bcast(&mut engine, &sizes, 2, 1, |bytes, _| {
+            hierarchical::plan(
+                &mut comm,
+                &nccl,
+                &BcastSpec::new(0, gpus, bytes),
+                hierarchical::DEFAULT_CHUNK,
+            )
+        });
+        let mv2_res = osu_bcast(&mut engine, &sizes, 2, 1, |bytes, _| {
+            selector.plan(&mut comm, &BcastSpec::new(0, gpus, bytes))
+        });
+        let mut fig = Figure::new(format!("{gpus} gpus"), sizes.to_vec());
+        fig.push_series("NCCL-MV2-GDR", nccl_res.iter().map(|r| r.latency_us).collect());
+        fig.push_series("MV2-GDR-Opt", mv2_res.iter().map(|r| r.latency_us).collect());
+        let (_, small_ratio) = fig.max_ratio_below(8 << 10).unwrap();
+        assert!(
+            small_ratio > 4.0,
+            "{gpus} GPUs: internode small win {small_ratio:.1}x (paper: up to 16.6x)"
+        );
+        let large_ratio = fig.ratio_at_max().unwrap();
+        assert!(
+            (0.7..3.0).contains(&large_ratio),
+            "{gpus} GPUs: large internode should be comparable, got {large_ratio:.2}x"
+        );
+    }
+}
+
+#[test]
+fn nccl_latency_flat_in_size_for_small_messages() {
+    // the §II-B observation that motivates everything: NCCL's
+    // small-message latency is launch-dominated — flat from 4B to 8KB
+    let cluster = presets::kesch(1, 8);
+    let nccl = NcclParams::default();
+    let mut engine = Engine::new(&cluster);
+    let t4 = engine
+        .execute(&nccl_bcast::plan_intranode(&cluster, &nccl, &BcastSpec::new(0, 8, 4)).plan)
+        .makespan;
+    let t8k = engine
+        .execute(
+            &nccl_bcast::plan_intranode(&cluster, &nccl, &BcastSpec::new(0, 8, 8 << 10)).plan,
+        )
+        .makespan;
+    assert!(
+        (t8k as f64) < (t4 as f64) * 1.2,
+        "NCCL 8KB {t8k} should be ~= 4B {t4}"
+    );
+}

@@ -1,0 +1,144 @@
+//! Experiment E1 as a test: the simulator must track the paper's closed
+//! forms (Eqs. 1–5) tightly on the idealised fabric — and reproduce the
+//! *qualitative* claims of §III/§IV on the real KESCH topology.
+
+use gdrbcast::analytic::{self, validate::run_grid, ModelParams};
+use gdrbcast::collectives::{self, Algorithm, BcastSpec};
+use gdrbcast::comm::{Comm, CommParams};
+use gdrbcast::netsim::Engine;
+use gdrbcast::topology::presets;
+
+#[test]
+fn full_grid_under_two_percent() {
+    let algos = [
+        Algorithm::Direct,
+        Algorithm::Chain,
+        Algorithm::PipelinedChain { chunk: 256 << 10 },
+        Algorithm::Knomial { k: 2 },
+        Algorithm::Knomial { k: 4 },
+        Algorithm::Knomial { k: 8 },
+    ];
+    let rows = run_grid(
+        &algos,
+        &[2, 3, 4, 8, 16, 32, 64, 128],
+        &[4, 512, 8 << 10, 1 << 20, 16 << 20, 128 << 20],
+    );
+    assert!(rows.len() > 200);
+    for row in &rows {
+        assert!(
+            row.rel_err < 0.02,
+            "{} n={} M={}: sim {} model {} err {:.4}",
+            row.algorithm,
+            row.n,
+            row.bytes,
+            row.sim_ns,
+            row.model_ns,
+            row.rel_err
+        );
+    }
+}
+
+#[test]
+fn eq5_optimal_chunk_is_optimal_in_sim() {
+    // the analytic C* = sqrt(M t_s B / (n-2)) must (approximately)
+    // minimise the simulated pipelined-chain time on the flat fabric
+    let n = 16;
+    let m: u64 = 64 << 20;
+    let cp = CommParams::default();
+    let p = ModelParams::flat_rndv(&cp);
+    let c_star = analytic::bcast::optimal_chunk(&p, n, m);
+    let cluster = presets::flat(n);
+    let mut comm = Comm::new(&cluster);
+    let mut engine = Engine::new(&cluster);
+    let t = |chunk: u64, comm: &mut Comm, engine: &mut Engine| {
+        collectives::latency_ns(
+            &Algorithm::PipelinedChain { chunk },
+            comm,
+            engine,
+            &BcastSpec::new(0, n, m),
+        )
+    };
+    let t_star = t(c_star, &mut comm, &mut engine);
+    for factor in [4u64, 16] {
+        let worse_small = t(c_star / factor, &mut comm, &mut engine);
+        let worse_big = t(c_star.saturating_mul(factor).min(m), &mut comm, &mut engine);
+        assert!(t_star <= worse_small, "C*/{} beat C*", factor);
+        assert!(t_star <= worse_big, "C**{} beat C*", factor);
+    }
+}
+
+#[test]
+fn paper_qualitative_claims_hold_on_kesch() {
+    // §III/§IV qualitative structure on the real testbed model:
+    let cluster = presets::kesch(2, 16);
+    let n = cluster.n_gpus();
+    let mut comm = Comm::new(&cluster);
+    let mut engine = Engine::new(&cluster);
+    let lat = |algo: &Algorithm, bytes: u64, comm: &mut Comm, engine: &mut Engine| {
+        collectives::latency_ns(algo, comm, engine, &BcastSpec::new(0, n, bytes))
+    };
+
+    // 1. direct is worst at scale (its O(n) serialisation)
+    let m = 1 << 20;
+    let direct = lat(&Algorithm::Direct, m, &mut comm, &mut engine);
+    let knomial = lat(&Algorithm::Knomial { k: 2 }, m, &mut comm, &mut engine);
+    assert!(direct > 3 * knomial, "direct {direct} vs knomial {knomial}");
+
+    // 2. knomial beats chain for small messages (latency-bound)
+    let small = 4096;
+    let chain_s = lat(&Algorithm::Chain, small, &mut comm, &mut engine);
+    let knomial_s = lat(&Algorithm::Knomial { k: 2 }, small, &mut comm, &mut engine);
+    assert!(knomial_s < chain_s);
+
+    // 3. pipelined chain beats knomial for very large messages
+    //    (bandwidth-bound; the paper's motivating observation)
+    let big = 128 << 20;
+    let knomial_b = lat(&Algorithm::Knomial { k: 2 }, big, &mut comm, &mut engine);
+    let pipe_b = lat(
+        &Algorithm::PipelinedChain { chunk: 1 << 20 },
+        big,
+        &mut comm,
+        &mut engine,
+    );
+    assert!(
+        pipe_b * 2 < knomial_b,
+        "pipelined {pipe_b} should crush knomial {knomial_b} at 128M"
+    );
+
+    // 4. host staging wins at tiny sizes, loses at huge ones (Eq. 6)
+    let staged_tiny = lat(
+        &Algorithm::HostStagedKnomial { k: 2 },
+        4,
+        &mut comm,
+        &mut engine,
+    );
+    let knomial_tiny = lat(&Algorithm::Knomial { k: 2 }, 4, &mut comm, &mut engine);
+    assert!(staged_tiny < knomial_tiny);
+    let staged_huge = lat(
+        &Algorithm::HostStagedKnomial { k: 2 },
+        big,
+        &mut comm,
+        &mut engine,
+    );
+    assert!(pipe_b < staged_huge);
+}
+
+#[test]
+fn eq1_eq2_exact_on_flat() {
+    // closed-form identities, exact (integer ns) on the flat fabric
+    let cp = CommParams::default();
+    let n = 8;
+    let cluster = presets::flat(n);
+    let mut comm = Comm::with_params(&cluster, cp.clone());
+    let mut engine = Engine::new(&cluster);
+    for bytes in [4u64, 1 << 20] {
+        let spec = BcastSpec::new(0, n, bytes);
+        let direct =
+            collectives::latency_ns(&Algorithm::Direct, &mut comm, &mut engine, &spec);
+        let chain =
+            collectives::latency_ns(&Algorithm::Chain, &mut comm, &mut engine, &spec);
+        // Eq.1 vs Eq.2: identical per-hop cost, identical total on the
+        // uncontended uniform fabric with n-1 transfers each
+        assert_eq!(direct, chain);
+    }
+}
