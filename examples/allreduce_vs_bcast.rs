@@ -1,0 +1,118 @@
+//! Allreduce vs partitioned-bcast training: the first post-paper
+//! workload. The paper's CA-CNTK scheme gathers gradient blocks to
+//! per-block owners and broadcasts the updated blocks (§V-D); modern
+//! frameworks fuse the gradient vector into buckets and allreduce them.
+//! This sweep prices the *full* exchange of both schemes per scale —
+//! tuned allreduce (ring vs tree, picked per bucket size by the
+//! generalized tuning framework) wins from 32 GPUs up.
+//!
+//! ```sh
+//! cargo run --release --example allreduce_vs_bcast [-- --model vgg16 --batch-per-gpu 16]
+//! ```
+
+use gdrbcast::collectives::CollectiveKind;
+use gdrbcast::coordinator::train::estimate_training_iteration;
+use gdrbcast::coordinator::TrainingMode;
+use gdrbcast::models::{self, allreduce_buckets, DEFAULT_BUCKET_BYTES};
+use gdrbcast::topology::presets;
+use gdrbcast::tuning::Selector;
+use gdrbcast::util::bytes::{format_size, format_us};
+use gdrbcast::util::cli::Args;
+use gdrbcast::util::tablefmt::Table;
+
+fn main() {
+    let mut args = Args::from_env();
+    let model_name = args.opt("--model").unwrap_or_else(|| "vgg16".into());
+    let batch_per_gpu = args.opt_or("--batch-per-gpu", 16usize).unwrap();
+    args.finish().unwrap();
+    let model = models::by_name(&model_name).expect("known model");
+    let buckets = allreduce_buckets(&model, DEFAULT_BUCKET_BYTES);
+    println!(
+        "{}: {} of gradients -> {} allreduce buckets of <= {}",
+        model.name,
+        format_size(model.total_bytes()),
+        buckets.len(),
+        format_size(DEFAULT_BUCKET_BYTES)
+    );
+
+    let mut t = Table::new(&[
+        "GPUs",
+        "partitioned-bcast (ms/iter)",
+        "allreduce (ms/iter)",
+        "exchange speedup",
+        "tuned allreduce pick",
+    ])
+    .with_title(format!(
+        "full gradient exchange per training iteration — {} at {batch_per_gpu} samples/GPU",
+        model.name
+    ));
+    let mut first_win: Option<usize> = None;
+    // 8 GPUs = half a node; then 1..8 full KESCH nodes
+    let scales: Vec<(usize, usize)> = vec![(1, 8), (1, 16), (2, 16), (4, 16), (8, 16)];
+    for (nodes, gpn) in scales {
+        let cluster = presets::kesch(nodes, gpn);
+        let gpus = cluster.n_gpus();
+        let batch = batch_per_gpu * gpus;
+        let sel = Selector::tuned(&cluster);
+        let bcast = estimate_training_iteration(
+            &cluster,
+            &model,
+            &sel,
+            TrainingMode::PartitionedBcast,
+            batch,
+            0.0,
+        );
+        let ar = estimate_training_iteration(
+            &cluster,
+            &model,
+            &sel,
+            TrainingMode::AllreduceGradients,
+            batch,
+            0.0,
+        );
+        if ar.iter_us < bcast.iter_us && first_win.is_none() {
+            first_win = Some(gpus);
+        }
+        let pick = sel.algorithm_for(CollectiveKind::Allreduce, buckets[0]);
+        t.row(vec![
+            gpus.to_string(),
+            format!("{:.2}", bcast.iter_us / 1000.0),
+            format!("{:.2}", ar.iter_us / 1000.0),
+            format!("{:.2}x", bcast.comm_us / ar.comm_us.max(1e-9)),
+            pick.name(),
+        ]);
+    }
+    print!("{}", t.render());
+    match first_win {
+        Some(gpus) => println!("allreduce training wins from {gpus} GPUs up"),
+        None => println!("allreduce training never won — check the tuning tables"),
+    }
+
+    // the generalized Selector answers per-(collective, bytes) queries
+    // for every family the framework models
+    let cluster = presets::kesch(2, 16);
+    let sel = Selector::tuned(&cluster);
+    println!("\ntuned picks on {} ({} ranks):", cluster.name, cluster.n_gpus());
+    for kind in CollectiveKind::ALL {
+        for bytes in [4u64, 64 << 10, 32 << 20] {
+            let algo = sel.algorithm_for(kind, bytes);
+            let latency = {
+                use gdrbcast::collectives::CollectiveSpec;
+                use gdrbcast::comm::Comm;
+                use gdrbcast::netsim::Engine;
+                let spec =
+                    CollectiveSpec::collective(kind, 0, cluster.n_gpus(), bytes);
+                let mut comm = Comm::new(&cluster);
+                let mut engine = Engine::new(&cluster);
+                sel.latency_ns(&mut comm, &mut engine, &spec)
+            };
+            println!(
+                "  {:<16} {:>6}: {:<28} {:>10} us",
+                kind.name(),
+                format_size(bytes),
+                algo.name(),
+                format_us(latency as f64)
+            );
+        }
+    }
+}

@@ -1,0 +1,103 @@
+//! Allreduce ablation bench: simulated latency of the ring and tree
+//! allreduce designs across the message range on the KESCH presets, the
+//! ring/tree crossover the tuning framework exploits, plus the
+//! wall-clock cost of planning+simulating each design (L3 hot-path
+//! budget). Emits the same JSON report shape as `benches/algorithms.rs`
+//! (`target/reports/allreduce.json`).
+//!
+//! `cargo bench --bench allreduce`
+
+use gdrbcast::bench::harness::Bencher;
+use gdrbcast::collectives::{self, Algorithm, CollectiveSpec};
+use gdrbcast::comm::Comm;
+use gdrbcast::netsim::Engine;
+use gdrbcast::topology::presets;
+use gdrbcast::util::bytes::{format_size, format_us, pow2_sweep};
+use gdrbcast::util::tablefmt::Table;
+
+fn algos() -> [Algorithm; 4] {
+    [
+        Algorithm::RingAllreduce,
+        Algorithm::TreeAllreduce { k: 2 },
+        Algorithm::TreeAllreduce { k: 4 },
+        Algorithm::TreeAllreduce { k: 8 },
+    ]
+}
+
+fn main() {
+    let sizes: [u64; 6] = [4, 8 << 10, 512 << 10, 8 << 20, 64 << 20, 256 << 20];
+
+    // simulated latency tables over the kesch presets
+    for (nodes, gpn) in [(1usize, 8usize), (1, 16), (2, 16)] {
+        let cluster = presets::kesch(nodes, gpn);
+        let n = cluster.n_gpus();
+        let mut comm = Comm::new(&cluster);
+        let mut engine = Engine::new(&cluster);
+        let mut t = Table::new(&["algorithm", "4", "8K", "512K", "8M", "64M", "256M"])
+            .with_title(format!(
+                "simulated allreduce latency (us), {n} GPUs over {nodes} KESCH node(s)"
+            ));
+        for algo in &algos() {
+            let mut row = vec![algo.name()];
+            for &bytes in &sizes {
+                let t_ns = collectives::latency_ns(
+                    algo,
+                    &mut comm,
+                    &mut engine,
+                    &CollectiveSpec::allreduce(n, bytes),
+                );
+                row.push(format_us(t_ns as f64));
+            }
+            t.row(row);
+        }
+        print!("{}", t.render());
+        println!();
+    }
+
+    // the ring/tree crossover the tuner keys on: full 4 B – 256 MB sweep
+    let cluster = presets::kesch(2, 16);
+    let n = cluster.n_gpus();
+    let mut comm = Comm::new(&cluster);
+    let mut engine = Engine::new(&cluster);
+    let mut crossover: Option<u64> = None;
+    for bytes in pow2_sweep(4, 256 << 20) {
+        let spec = CollectiveSpec::allreduce(n, bytes);
+        let ring = collectives::latency_ns(
+            &Algorithm::RingAllreduce,
+            &mut comm,
+            &mut engine,
+            &spec,
+        );
+        let tree = collectives::latency_ns(
+            &Algorithm::TreeAllreduce { k: 2 },
+            &mut comm,
+            &mut engine,
+            &spec,
+        );
+        if ring <= tree && crossover.is_none() {
+            crossover = Some(bytes);
+        }
+    }
+    match crossover {
+        Some(bytes) => println!(
+            "ring overtakes tree(k=2) at {} over {n} GPUs",
+            format_size(bytes)
+        ),
+        None => println!("tree(k=2) never lost to ring up to 256M over {n} GPUs"),
+    }
+
+    // wall-clock planning+simulation cost per design
+    println!();
+    let mut bencher = Bencher::new();
+    for algo in &algos() {
+        bencher.bench(&format!("plan+sim/{}/8M", algo.name()), || {
+            collectives::latency_ns(
+                algo,
+                &mut comm,
+                &mut engine,
+                &CollectiveSpec::allreduce(n, 8 << 20),
+            )
+        });
+    }
+    bencher.write_report("allreduce").expect("report");
+}

@@ -49,6 +49,15 @@ pub fn model_ns(algo: &Algorithm, cp: &CommParams, n: usize, bytes: u64) -> f64 
             // differs structurally — validated elsewhere
             f64::NAN
         }
+        Algorithm::RingReduceScatter
+        | Algorithm::RingAllgather
+        | Algorithm::RingAllreduce
+        | Algorithm::TreeAllreduce { .. } => {
+            // reduction collectives are checked by the dataflow property
+            // tests and their builders' ring/tree cost tests, not the
+            // broadcast closed forms
+            f64::NAN
+        }
     }
 }
 

@@ -1,0 +1,117 @@
+//! Ring allgather: rank `r` contributes segment `r`; at step `t` every
+//! rank forwards the segment it received at step `t−1` to its right
+//! neighbour. After `n−1` steps every rank holds the full concatenation,
+//! having moved `(n−1)/n × M` bytes per rank — the same ring the
+//! large-message broadcast of Eq. 4 uses for its second phase, exposed
+//! here as a standalone collective.
+//!
+//! `T = (n−1) × (t_s + M/(nB))`
+
+use crate::comm::{chunk::equal_parts, Comm};
+use crate::netsim::OpId;
+
+use super::traits::{CollectiveKind, CollectivePlan, CollectiveSpec, FlowEdge};
+
+pub fn plan(comm: &mut Comm, spec: &CollectiveSpec) -> CollectivePlan {
+    debug_assert_eq!(spec.kind, CollectiveKind::Allgather);
+    let n = spec.n_ranks;
+    let mut plan = crate::netsim::Plan::new();
+    let mut edges = Vec::new();
+    if n == 1 {
+        return CollectivePlan {
+            plan,
+            edges,
+            n_chunks: 1,
+            spec: spec.clone(),
+            algorithm: "ring-allgather".into(),
+        };
+    }
+    let parts = equal_parts(spec.bytes, n);
+    // own[v][c] = op after which rank v holds segment c (None = its own
+    // contribution, c == v)
+    let mut own: Vec<Vec<Option<OpId>>> = vec![vec![None; n]; n];
+    for t in 0..n - 1 {
+        let mut arrivals: Vec<(usize, usize, OpId)> = Vec::new();
+        for v in 0..n {
+            let c = (v + n - t) % n;
+            let dst = (v + 1) % n;
+            debug_assert!(own[v][c].is_some() || c == v, "rank {v} missing segment {c}");
+            let deps = own[v][c].map(|p| vec![p]).unwrap_or_default();
+            let op = comm.send(&mut plan, v, dst, parts[c], deps, Some((dst, c)));
+            edges.push(FlowEdge::copy(v, dst, c, op));
+            arrivals.push((dst, c, op));
+        }
+        for (dst, c, op) in arrivals {
+            own[dst][c] = Some(op);
+        }
+    }
+    CollectivePlan {
+        plan,
+        edges,
+        n_chunks: n,
+        spec: spec.clone(),
+        algorithm: "ring-allgather".into(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::validate::validate;
+    use crate::netsim::Engine;
+    use crate::topology::presets::flat;
+
+    #[test]
+    fn every_rank_gathers_every_segment() {
+        let c = flat(6);
+        let mut comm = Comm::new(&c);
+        let mut engine = Engine::new(&c);
+        let spec = CollectiveSpec::allgather(6, 6000);
+        let cp = plan(&mut comm, &spec);
+        let result = engine.execute(&cp.plan);
+        validate(&cp, &result).unwrap();
+        for r in 0..6 {
+            for c in 0..6 {
+                if c == r {
+                    continue; // own segment: held from the start
+                }
+                assert!(
+                    result.delivery_time(&cp.plan, r, c).is_some(),
+                    "rank {r} missing segment {c}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn traffic_is_n_minus_one_over_n() {
+        let c = flat(8);
+        let mut comm = Comm::new(&c);
+        let m: u64 = 8 << 20;
+        let spec = CollectiveSpec::allgather(8, m);
+        let cp = plan(&mut comm, &spec);
+        assert_eq!(cp.plan.total_bytes(), (8 - 1) * m);
+    }
+
+    #[test]
+    fn single_rank_noop() {
+        let c = flat(1);
+        let mut comm = Comm::new(&c);
+        let spec = CollectiveSpec::allgather(1, 100);
+        let cp = plan(&mut comm, &spec);
+        assert!(cp.plan.is_empty());
+    }
+
+    #[test]
+    fn cost_matches_ring_model_on_flat() {
+        let c = flat(8);
+        let mut comm = Comm::new(&c);
+        let mut engine = Engine::new(&c);
+        let m: u64 = 8 << 20;
+        let hop = comm.estimate_ns(0, 1, m / 8);
+        let spec = CollectiveSpec::allgather(8, m);
+        let cp = plan(&mut comm, &spec);
+        let r = engine.execute(&cp.plan);
+        assert_eq!(r.makespan, 7 * hop);
+    }
+}

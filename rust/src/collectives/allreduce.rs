@@ -1,0 +1,311 @@
+//! Allreduce: every rank contributes a full buffer and every rank ends
+//! with the element-wise reduction — the collective that dominates modern
+//! data-parallel DNN training (gradient averaging), and the first
+//! post-paper workload this framework models.
+//!
+//! Two designs, mirroring the broadcast menu's latency/bandwidth split:
+//!
+//! * [`ring`] — ring reduce-scatter followed by ring allgather. Each rank
+//!   moves `2·(n−1)/n × M` bytes: bandwidth-optimal, the large-message
+//!   winner.  `T = 2 × (n−1) × (t_s + M/(nB))`
+//! * [`tree`] — k-nomial reduce to a root followed by a k-nomial
+//!   broadcast. `2·⌈log_k n⌉` rounds of the full message: latency-optimal
+//!   for small messages where `t_s` dominates.
+//!   `T ≈ 2 × ⌈log_k n⌉ × (t_s + M/B)`
+//!
+//! Reduction arithmetic is modelled as free (see
+//! [`super::reduce_scatter`]).
+
+use crate::comm::{chunk::equal_parts, Comm};
+use crate::netsim::OpId;
+
+use super::traits::{CollectiveKind, CollectivePlan, CollectiveSpec, FlowEdge};
+
+/// Ring allreduce: reduce-scatter phase (reduce edges) then allgather
+/// phase (copy edges) in one plan.
+pub fn ring(comm: &mut Comm, spec: &CollectiveSpec) -> CollectivePlan {
+    debug_assert_eq!(spec.kind, CollectiveKind::Allreduce);
+    let n = spec.n_ranks;
+    let mut plan = crate::netsim::Plan::new();
+    let mut edges = Vec::new();
+    if n == 1 {
+        return CollectivePlan {
+            plan,
+            edges,
+            n_chunks: 1,
+            spec: spec.clone(),
+            algorithm: "ring-allreduce".into(),
+        };
+    }
+    let parts = equal_parts(spec.bytes, n);
+
+    // ---- phase 1: ring reduce-scatter --------------------------------
+    // acc[v][s] = op after which rank v's partial for segment s contains
+    // every upstream contribution (None = own contribution only)
+    let mut acc: Vec<Vec<Option<OpId>>> = vec![vec![None; n]; n];
+    for t in 0..n - 1 {
+        let mut arrivals: Vec<(usize, usize, OpId)> = Vec::new();
+        for v in 0..n {
+            let s = (v + n - t - 1) % n;
+            let dst = (v + 1) % n;
+            let deps = acc[v][s].map(|p| vec![p]).unwrap_or_default();
+            // the last hop delivers rank s its fully reduced segment
+            let label = if t == n - 2 { Some((dst, s)) } else { None };
+            let op = comm.send(&mut plan, v, dst, parts[s], deps, label);
+            edges.push(FlowEdge::reduce(v, dst, s, op));
+            arrivals.push((dst, s, op));
+        }
+        for (dst, s, op) in arrivals {
+            acc[dst][s] = Some(op);
+        }
+    }
+
+    // ---- phase 2: ring allgather of the reduced segments -------------
+    // own[v][c] = op after which rank v holds the *final* segment c
+    let mut own: Vec<Vec<Option<OpId>>> = vec![vec![None; n]; n];
+    for (v, row) in own.iter_mut().enumerate() {
+        row[v] = acc[v][v]; // set by the reduce-scatter's last step (n >= 2)
+        debug_assert!(row[v].is_some(), "reduce-scatter left rank {v} empty");
+    }
+    for t in 0..n - 1 {
+        let mut arrivals: Vec<(usize, usize, OpId)> = Vec::new();
+        for v in 0..n {
+            let c = (v + n - t) % n;
+            let dst = (v + 1) % n;
+            let deps = own[v][c].map(|p| vec![p]).unwrap_or_default();
+            let op = comm.send(&mut plan, v, dst, parts[c], deps, Some((dst, c)));
+            edges.push(FlowEdge::copy(v, dst, c, op));
+            arrivals.push((dst, c, op));
+        }
+        for (dst, c, op) in arrivals {
+            own[dst][c] = Some(op);
+        }
+    }
+
+    CollectivePlan {
+        plan,
+        edges,
+        n_chunks: n,
+        spec: spec.clone(),
+        algorithm: "ring-allreduce".into(),
+    }
+}
+
+/// Tree allreduce: k-nomial reduce to `spec.root`, then k-nomial
+/// broadcast of the reduced buffer.
+pub fn tree(comm: &mut Comm, spec: &CollectiveSpec, k: usize) -> CollectivePlan {
+    debug_assert_eq!(spec.kind, CollectiveKind::Allreduce);
+    assert!(k >= 2, "tree allreduce requires k >= 2");
+    let n = spec.n_ranks;
+    let mut plan = crate::netsim::Plan::new();
+    let mut edges = Vec::new();
+    if n == 1 {
+        return CollectivePlan {
+            plan,
+            edges,
+            n_chunks: 1,
+            spec: spec.clone(),
+            algorithm: format!("tree-allreduce(k={k})"),
+        };
+    }
+
+    // ---- phase 1: k-nomial reduce toward relabeled rank 0 -------------
+    // acc[v] = ops that must complete before relabeled rank v's partial
+    // holds its whole subtree's contributions
+    let mut acc: Vec<Vec<OpId>> = vec![Vec::new(); n];
+    reduce_range(comm, &mut plan, &mut edges, spec, k, 0, n, &mut acc);
+
+    // ---- phase 2: k-nomial broadcast of the reduced buffer ------------
+    let root_ready = acc[0].clone();
+    bcast_range(comm, &mut plan, &mut edges, spec, k, 0, n, &root_ready);
+
+    CollectivePlan {
+        plan,
+        edges,
+        n_chunks: 1,
+        spec: spec.clone(),
+        algorithm: format!("tree-allreduce(k={k})"),
+    }
+}
+
+/// Split `[lo, lo+size)` into k near-equal sub-ranges (the split used by
+/// [`super::knomial`], mirrored here for both tree phases).
+fn knomial_ranges(k: usize, lo: usize, size: usize) -> Vec<(usize, usize)> {
+    let sub = size.div_ceil(k);
+    let mut ranges: Vec<(usize, usize)> = Vec::new();
+    let mut cursor = lo;
+    while cursor < lo + size {
+        let len = sub.min(lo + size - cursor);
+        ranges.push((cursor, len));
+        cursor += len;
+    }
+    ranges
+}
+
+/// Reduce relabeled range `[lo, lo+size)` onto its head `lo`: every
+/// sub-range first reduces onto its own head, then the sub-heads send
+/// their accumulated partials to `lo` (reduce edges).
+#[allow(clippy::too_many_arguments)]
+fn reduce_range(
+    comm: &mut Comm,
+    plan: &mut crate::netsim::Plan,
+    edges: &mut Vec<FlowEdge>,
+    spec: &CollectiveSpec,
+    k: usize,
+    lo: usize,
+    size: usize,
+    acc: &mut Vec<Vec<OpId>>,
+) {
+    if size <= 1 {
+        return;
+    }
+    let ranges = knomial_ranges(k, lo, size);
+    let head_len = ranges[0].1;
+    reduce_range(comm, plan, edges, spec, k, lo, head_len, acc);
+    for &(start, len) in ranges.iter().skip(1) {
+        reduce_range(comm, plan, edges, spec, k, start, len, acc);
+        let src = spec.unlabel(start);
+        let dst = spec.unlabel(lo);
+        // the sub-head's partial is complete only after all its receives
+        let deps = acc[start].clone();
+        let op = comm.send(plan, src, dst, spec.bytes, deps, None);
+        edges.push(FlowEdge::reduce(src, dst, 0, op));
+        acc[lo].push(op);
+    }
+}
+
+/// Broadcast the reduced buffer through relabeled range `[lo, lo+size)`
+/// whose head already holds it once every op in `have` completes.
+#[allow(clippy::too_many_arguments)]
+fn bcast_range(
+    comm: &mut Comm,
+    plan: &mut crate::netsim::Plan,
+    edges: &mut Vec<FlowEdge>,
+    spec: &CollectiveSpec,
+    k: usize,
+    lo: usize,
+    size: usize,
+    have: &[OpId],
+) {
+    if size <= 1 {
+        return;
+    }
+    let ranges = knomial_ranges(k, lo, size);
+    let mut child_ops: Vec<(usize, usize, OpId)> = Vec::new();
+    for &(start, len) in ranges.iter().skip(1) {
+        let src = spec.unlabel(lo);
+        let dst = spec.unlabel(start);
+        let op = comm.send(plan, src, dst, spec.bytes, have.to_vec(), Some((dst, 0)));
+        edges.push(FlowEdge::copy(src, dst, 0, op));
+        child_ops.push((start, len, op));
+    }
+    let head_len = ranges[0].1;
+    bcast_range(comm, plan, edges, spec, k, lo, head_len, have);
+    for (start, len, op) in child_ops {
+        bcast_range(comm, plan, edges, spec, k, start, len, &[op]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::validate::validate;
+    use crate::netsim::Engine;
+    use crate::topology::presets::{flat, kesch};
+
+    #[test]
+    fn ring_all_contributions_exactly_once() {
+        let c = flat(8);
+        let mut comm = Comm::new(&c);
+        let mut engine = Engine::new(&c);
+        for bytes in [0u64, 4, 8192, 1 << 20] {
+            let spec = CollectiveSpec::allreduce(8, bytes);
+            let cp = ring(&mut comm, &spec);
+            let result = engine.execute(&cp.plan);
+            validate(&cp, &result).unwrap_or_else(|e| panic!("{bytes}B: {e}"));
+        }
+    }
+
+    #[test]
+    fn tree_all_contributions_exactly_once() {
+        let c = kesch(2, 8);
+        let mut comm = Comm::new(&c);
+        let mut engine = Engine::new(&c);
+        for k in [2, 3, 4, 8] {
+            for root in [0, 5] {
+                let spec =
+                    CollectiveSpec::collective(CollectiveKind::Allreduce, root, 16, 64 << 10);
+                let cp = tree(&mut comm, &spec, k);
+                let result = engine.execute(&cp.plan);
+                validate(&cp, &result).unwrap_or_else(|e| panic!("k={k} root={root}: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn ring_traffic_is_bandwidth_optimal() {
+        let c = flat(8);
+        let mut comm = Comm::new(&c);
+        let m: u64 = 8 << 20;
+        let spec = CollectiveSpec::allreduce(8, m);
+        let cp = ring(&mut comm, &spec);
+        // 2 phases × (n-1) steps × n concurrent sends of M/n
+        assert_eq!(cp.plan.total_bytes(), 2 * (8 - 1) * m);
+    }
+
+    #[test]
+    fn tree_edge_and_traffic_accounting() {
+        let c = flat(9);
+        let mut comm = Comm::new(&c);
+        let spec = CollectiveSpec::allreduce(9, 4096);
+        let cp = tree(&mut comm, &spec, 3);
+        // n-1 reduce sends + n-1 bcast sends, full message each
+        assert_eq!(cp.edges.len(), 2 * 8);
+        assert_eq!(cp.plan.total_bytes(), 2 * 8 * 4096);
+    }
+
+    #[test]
+    fn ring_beats_tree_for_large_messages() {
+        let c = flat(8);
+        let mut comm = Comm::new(&c);
+        let mut engine = Engine::new(&c);
+        let spec = CollectiveSpec::allreduce(8, 64 << 20);
+        let t_ring = engine.execute(&ring(&mut comm, &spec).plan).makespan;
+        let t_tree = engine.execute(&tree(&mut comm, &spec, 2).plan).makespan;
+        assert!(t_ring < t_tree, "ring {t_ring} vs tree {t_tree}");
+    }
+
+    #[test]
+    fn tree_beats_ring_for_small_messages_at_scale() {
+        let c = kesch(1, 16);
+        let mut comm = Comm::new(&c);
+        let mut engine = Engine::new(&c);
+        let spec = CollectiveSpec::allreduce(16, 4);
+        let t_ring = engine.execute(&ring(&mut comm, &spec).plan).makespan;
+        let t_tree = engine.execute(&tree(&mut comm, &spec, 2).plan).makespan;
+        assert!(t_tree < t_ring, "tree {t_tree} vs ring {t_ring}");
+    }
+
+    #[test]
+    fn ring_cost_matches_model_on_flat() {
+        // 2 × (n-1) pipelined segment hops
+        let c = flat(8);
+        let mut comm = Comm::new(&c);
+        let mut engine = Engine::new(&c);
+        let m: u64 = 8 << 20;
+        let hop = comm.estimate_ns(0, 1, m / 8);
+        let spec = CollectiveSpec::allreduce(8, m);
+        let cp = ring(&mut comm, &spec);
+        let r = engine.execute(&cp.plan);
+        assert_eq!(r.makespan, 2 * 7 * hop);
+    }
+
+    #[test]
+    fn single_rank_noop() {
+        let c = flat(1);
+        let mut comm = Comm::new(&c);
+        let spec = CollectiveSpec::allreduce(1, 100);
+        assert!(ring(&mut comm, &spec).plan.is_empty());
+        assert!(tree(&mut comm, &spec, 2).plan.is_empty());
+    }
+}

@@ -17,12 +17,7 @@ pub fn plan(comm: &mut Comm, spec: &BcastSpec) -> BcastPlan {
         // store-and-forward: must hold the whole message before sending on
         let deps = prev.map(|p| vec![p]).unwrap_or_default();
         let op = comm.send(&mut plan, src, dst, spec.bytes, deps, Some((dst, 0)));
-        edges.push(FlowEdge {
-            src,
-            dst,
-            chunk: 0,
-            op,
-        });
+        edges.push(FlowEdge::copy(src, dst, 0, op));
         prev = Some(op);
     }
     BcastPlan {

@@ -16,12 +16,7 @@ pub fn plan(comm: &mut Comm, spec: &BcastSpec) -> BcastPlan {
         // completes
         let deps = prev.map(|p| vec![p]).unwrap_or_default();
         let op = comm.send(&mut plan, spec.root, dst, spec.bytes, deps, Some((dst, 0)));
-        edges.push(FlowEdge {
-            src: spec.root,
-            dst,
-            chunk: 0,
-            op,
-        });
+        edges.push(FlowEdge::copy(spec.root, dst, 0, op));
         prev = Some(op);
     }
     BcastPlan {

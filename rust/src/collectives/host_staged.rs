@@ -102,12 +102,7 @@ pub fn plan(comm: &mut Comm, spec: &BcastSpec, k: usize) -> BcastPlan {
             );
             // attribute the rank-level edge to the nearest rank upstream:
             // the root (data origin) — host hops are transport detail
-            edges.push(FlowEdge {
-                src: spec.root,
-                dst: r,
-                chunk: 0,
-                op,
-            });
+            edges.push(FlowEdge::copy(spec.root, r, 0, op));
         }
     }
 

@@ -71,12 +71,7 @@ fn expand(
         let dst = spec.unlabel(start);
         let deps = have.map(|p| vec![p]).unwrap_or_default();
         let op = comm.send(plan, src, dst, spec.bytes, deps, Some((dst, 0)));
-        edges.push(FlowEdge {
-            src,
-            dst,
-            chunk: 0,
-            op,
-        });
+        edges.push(FlowEdge::copy(src, dst, 0, op));
         child_ops.push((start, len, op));
     }
     // recurse into sub-ranges

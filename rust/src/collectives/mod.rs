@@ -1,31 +1,60 @@
-//! Broadcast algorithms (§III and §IV of the paper).
+//! Collective algorithms — the paper's broadcast menu (§III and §IV)
+//! generalized into a collective-agnostic layer with reduction
+//! collectives on top.
 //!
-//! Every algorithm builds a [`BcastPlan`] — a netsim op DAG plus rank-level
-//! data-flow edges — from a [`Comm`] point-to-point engine. The paper's
-//! contribution, the **pipelined chain** (§IV-B, Eq. 5), lives in
-//! [`pipelined_chain`]; the classical baselines of §III-A are
-//! [`direct`] (Eq. 1), [`chain`] (Eq. 2), [`knomial`] (Eq. 3, binomial at
-//! k=2) and [`scatter_allgather`] (Eq. 4); the GPU-specific host-staged
-//! k-nomial of §IV-C is [`host_staged`] (Eq. 6).
+//! Every algorithm builds a [`CollectivePlan`] — a netsim op DAG plus
+//! rank-level data-flow edges with copy/reduce semantics — from a
+//! [`Comm`] point-to-point engine, for a [`CollectiveSpec`] naming the
+//! operation ([`CollectiveKind`]), root, rank count and message size.
 //!
-//! [`validate`] checks the causality and delivery invariants every plan
-//! must satisfy; the property tests in `rust/tests/` lean on it.
+//! **Broadcast** (the paper's subject; `BcastSpec`/`BcastPlan` are thin
+//! aliases kept for these builders): the paper's contribution, the
+//! **pipelined chain** (§IV-B, Eq. 5), lives in [`pipelined_chain`]; the
+//! classical baselines of §III-A are [`direct`] (Eq. 1), [`chain`]
+//! (Eq. 2), [`knomial`] (Eq. 3, binomial at k=2) and [`scatter_allgather`]
+//! (Eq. 4); the GPU-specific host-staged k-nomial of §IV-C is
+//! [`host_staged`] (Eq. 6).
+//!
+//! **Reduction collectives** (the post-paper workload — gradient
+//! exchange for data-parallel training): [`reduce_scatter`] and
+//! [`allgather`] are the classic rings; [`allreduce`] composes them into
+//! the bandwidth-optimal ring allreduce and adds a latency-optimal
+//! k-nomial reduce→broadcast tree for small messages.
+//!
+//! [`validate`] checks the invariants every plan must satisfy —
+//! delivery + causality for broadcast, all-contributions-exactly-once
+//! dataflow for reductions; the property tests in `rust/tests/` lean on
+//! it.
 
+pub mod allgather;
+pub mod allreduce;
 pub mod chain;
 pub mod direct;
 pub mod host_staged;
 pub mod knomial;
 pub mod pipelined_chain;
+pub mod reduce_scatter;
 pub mod scatter_allgather;
 pub mod traits;
 pub mod validate;
 
-pub use traits::{Algorithm, BcastPlan, BcastSpec, FlowEdge};
+pub use traits::{
+    Algorithm, BcastPlan, BcastSpec, CollectiveKind, CollectivePlan, CollectiveSpec, EdgeSem,
+    FlowEdge,
+};
 
 use crate::comm::Comm;
 
-/// Build the plan for `algo` over all cluster ranks.
-pub fn plan(algo: &Algorithm, comm: &mut Comm, spec: &BcastSpec) -> BcastPlan {
+/// Build the plan for `algo` over all cluster ranks. The algorithm must
+/// implement the spec's collective kind.
+pub fn plan(algo: &Algorithm, comm: &mut Comm, spec: &CollectiveSpec) -> CollectivePlan {
+    debug_assert_eq!(
+        algo.kind(),
+        spec.kind,
+        "{} cannot build a {} plan",
+        algo.name(),
+        spec.kind.name()
+    );
     match algo {
         Algorithm::Direct => direct::plan(comm, spec),
         Algorithm::Chain => chain::plan(comm, spec),
@@ -33,15 +62,19 @@ pub fn plan(algo: &Algorithm, comm: &mut Comm, spec: &BcastSpec) -> BcastPlan {
         Algorithm::Knomial { k } => knomial::plan(comm, spec, *k),
         Algorithm::ScatterRingAllgather => scatter_allgather::plan(comm, spec),
         Algorithm::HostStagedKnomial { k } => host_staged::plan(comm, spec, *k),
+        Algorithm::RingReduceScatter => reduce_scatter::plan(comm, spec),
+        Algorithm::RingAllgather => allgather::plan(comm, spec),
+        Algorithm::RingAllreduce => allreduce::ring(comm, spec),
+        Algorithm::TreeAllreduce { k } => allreduce::tree(comm, spec, *k),
     }
 }
 
-/// Simulated broadcast latency (max over rank completions), ns.
+/// Simulated collective latency (max over rank completions), ns.
 pub fn latency_ns(
     algo: &Algorithm,
     comm: &mut Comm,
     engine: &mut crate::netsim::Engine,
-    spec: &BcastSpec,
+    spec: &CollectiveSpec,
 ) -> u64 {
     let bp = plan(algo, comm, spec);
     let result = engine.execute(&bp.plan);

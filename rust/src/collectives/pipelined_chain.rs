@@ -37,12 +37,7 @@ pub fn plan(comm: &mut Comm, spec: &BcastSpec, chunk: u64) -> BcastPlan {
             };
             let op = comm.send(&mut plan, src, dst, cbytes, deps, Some((dst, c)));
             recv_op[v][c] = Some(op);
-            edges.push(FlowEdge {
-                src,
-                dst,
-                chunk: c,
-                op,
-            });
+            edges.push(FlowEdge::copy(src, dst, c, op));
         }
     }
     BcastPlan {

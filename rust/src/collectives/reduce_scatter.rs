@@ -1,0 +1,134 @@
+//! Ring reduce-scatter: the buffer is split into `n` near-equal segments;
+//! at step `t` every rank forwards one accumulating segment to its right
+//! neighbour, which reduces it into its own partial. After `n−1` steps
+//! rank `s` holds segment `s` of the full reduction, having moved only
+//! `(n−1)/n × M` bytes per rank — the bandwidth-optimal first half of the
+//! ring allreduce.
+//!
+//! `T = (n−1) × (t_s + M/(nB))`
+//!
+//! Reduction arithmetic is modelled as free: the simulator times
+//! transfers, and on-GPU element-wise adds run orders of magnitude faster
+//! than the fabric moves the operands.
+
+use crate::comm::{chunk::equal_parts, Comm};
+use crate::netsim::OpId;
+
+use super::traits::{CollectiveKind, CollectivePlan, CollectiveSpec, FlowEdge};
+
+pub fn plan(comm: &mut Comm, spec: &CollectiveSpec) -> CollectivePlan {
+    debug_assert_eq!(spec.kind, CollectiveKind::ReduceScatter);
+    let n = spec.n_ranks;
+    let mut plan = crate::netsim::Plan::new();
+    let mut edges = Vec::new();
+    if n == 1 {
+        return CollectivePlan {
+            plan,
+            edges,
+            n_chunks: 1,
+            spec: spec.clone(),
+            algorithm: "ring-reduce-scatter".into(),
+        };
+    }
+    let parts = equal_parts(spec.bytes, n);
+    // acc[v][s] = op after which rank v's partial for segment s contains
+    // every upstream contribution (None = own contribution only)
+    let mut acc: Vec<Vec<Option<OpId>>> = vec![vec![None; n]; n];
+    for t in 0..n - 1 {
+        let mut arrivals: Vec<(usize, usize, OpId)> = Vec::new();
+        for v in 0..n {
+            // the segment that ends at rank s travels s+1 -> s+2 -> … -> s;
+            // at step t rank v carries segment (v - t - 1) mod n
+            let s = (v + n - t - 1) % n;
+            let dst = (v + 1) % n;
+            let deps = acc[v][s].map(|p| vec![p]).unwrap_or_default();
+            // only the last hop delivers the fully reduced segment
+            let label = if t == n - 2 { Some((dst, s)) } else { None };
+            let op = comm.send(&mut plan, v, dst, parts[s], deps, label);
+            edges.push(FlowEdge::reduce(v, dst, s, op));
+            arrivals.push((dst, s, op));
+        }
+        for (dst, s, op) in arrivals {
+            acc[dst][s] = Some(op);
+        }
+    }
+    CollectivePlan {
+        plan,
+        edges,
+        n_chunks: n,
+        spec: spec.clone(),
+        algorithm: "ring-reduce-scatter".into(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::validate::validate;
+    use crate::netsim::Engine;
+    use crate::topology::presets::flat;
+
+    #[test]
+    fn every_segment_fully_reduced_at_its_owner() {
+        let c = flat(6);
+        let mut comm = Comm::new(&c);
+        let mut engine = Engine::new(&c);
+        let spec = CollectiveSpec::reduce_scatter(6, 6000);
+        let cp = plan(&mut comm, &spec);
+        let result = engine.execute(&cp.plan);
+        validate(&cp, &result).unwrap();
+        // delivery labels: rank s receives its segment s exactly once
+        for s in 0..6 {
+            assert!(
+                result.delivery_time(&cp.plan, s, s).is_some(),
+                "segment {s} never delivered to its owner"
+            );
+        }
+    }
+
+    #[test]
+    fn traffic_is_n_minus_one_over_n() {
+        let c = flat(8);
+        let mut comm = Comm::new(&c);
+        let m: u64 = 8 << 20;
+        let spec = CollectiveSpec::reduce_scatter(8, m);
+        let cp = plan(&mut comm, &spec);
+        // each of the 8 ranks moves (n-1) segments of M/n
+        assert_eq!(cp.plan.total_bytes(), (8 - 1) * m);
+    }
+
+    #[test]
+    fn single_rank_noop() {
+        let c = flat(1);
+        let mut comm = Comm::new(&c);
+        let spec = CollectiveSpec::reduce_scatter(1, 100);
+        let cp = plan(&mut comm, &spec);
+        assert!(cp.plan.is_empty());
+        assert_eq!(cp.n_chunks, 1);
+    }
+
+    #[test]
+    fn odd_rank_count_and_indivisible_bytes() {
+        let c = flat(7);
+        let mut comm = Comm::new(&c);
+        let mut engine = Engine::new(&c);
+        let spec = CollectiveSpec::reduce_scatter(7, 7013);
+        let cp = plan(&mut comm, &spec);
+        let result = engine.execute(&cp.plan);
+        validate(&cp, &result).unwrap();
+    }
+
+    #[test]
+    fn cost_matches_ring_model_on_flat() {
+        // (n-1) pipelined steps; each step costs one segment hop
+        let c = flat(8);
+        let mut comm = Comm::new(&c);
+        let mut engine = Engine::new(&c);
+        let m: u64 = 8 << 20;
+        let hop = comm.estimate_ns(0, 1, m / 8);
+        let spec = CollectiveSpec::reduce_scatter(8, m);
+        let cp = plan(&mut comm, &spec);
+        let r = engine.execute(&cp.plan);
+        assert_eq!(r.makespan, 7 * hop);
+    }
+}

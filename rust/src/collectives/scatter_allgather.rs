@@ -56,12 +56,7 @@ pub fn plan(comm: &mut Comm, spec: &BcastSpec) -> BcastPlan {
         // validator can track possession precisely
         for p in upper_lo..lo + size {
             part_at[upper_lo][p] = Some(op);
-            edges.push(FlowEdge {
-                src,
-                dst,
-                chunk: p,
-                op,
-            });
+            edges.push(FlowEdge::copy(src, dst, p, op));
         }
         scatter(comm, plan, edges, spec, parts, part_at, lo, size - half, have);
         scatter(
@@ -105,12 +100,7 @@ pub fn plan(comm: &mut Comm, spec: &BcastSpec) -> BcastPlan {
                 }
             };
             let op = comm.send(&mut plan, src, dst, parts[part], deps, Some((dst, part)));
-            edges.push(FlowEdge {
-                src,
-                dst,
-                chunk: part,
-                op,
-            });
+            edges.push(FlowEdge::copy(src, dst, part, op));
             new_ops.push((dst_v, part, op));
         }
         for (dst_v, part, op) in new_ops {

@@ -1,11 +1,73 @@
-//! Common types for broadcast algorithms.
+//! Common types for collective algorithms.
+//!
+//! The paper's scope is `MPI_Bcast`, but the framework is
+//! collective-agnostic: a [`CollectiveSpec`] names the operation
+//! ([`CollectiveKind`]), a [`CollectivePlan`] carries its netsim op DAG
+//! plus rank-level [`FlowEdge`]s whose [`EdgeSem`] (copy vs reduce) lets
+//! [`super::validate`] check reduction dataflow, not just delivery
+//! causality. `BcastSpec`/`BcastPlan` remain as thin aliases so the
+//! original broadcast builders read unchanged.
 
 use crate::netsim::{OpId, Plan};
 
-/// What to broadcast.
-#[derive(Debug, Clone)]
-pub struct BcastSpec {
-    /// Root rank.
+/// Which collective operation a spec describes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum CollectiveKind {
+    /// Rooted one-to-all copy (the paper's subject).
+    Broadcast,
+    /// Every rank contributes a full buffer; rank `s` ends with segment
+    /// `s` of the element-wise reduction.
+    ReduceScatter,
+    /// Rank `r` contributes segment `r`; every rank ends with the full
+    /// concatenation.
+    Allgather,
+    /// Every rank contributes a full buffer; every rank ends with the
+    /// full element-wise reduction.
+    Allreduce,
+}
+
+impl CollectiveKind {
+    /// Every supported kind (tuning sweeps iterate this).
+    pub const ALL: [CollectiveKind; 4] = [
+        CollectiveKind::Broadcast,
+        CollectiveKind::ReduceScatter,
+        CollectiveKind::Allgather,
+        CollectiveKind::Allreduce,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CollectiveKind::Broadcast => "broadcast",
+            CollectiveKind::ReduceScatter => "reduce-scatter",
+            CollectiveKind::Allgather => "allgather",
+            CollectiveKind::Allreduce => "allreduce",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<CollectiveKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "broadcast" | "bcast" => Some(CollectiveKind::Broadcast),
+            "reduce-scatter" | "reducescatter" => Some(CollectiveKind::ReduceScatter),
+            "allgather" => Some(CollectiveKind::Allgather),
+            "allreduce" => Some(CollectiveKind::Allreduce),
+            _ => None,
+        }
+    }
+
+    /// Whether the operation distinguishes a root rank.
+    pub fn is_rooted(&self) -> bool {
+        matches!(self, CollectiveKind::Broadcast)
+    }
+}
+
+/// What to run: one collective over `n_ranks` ranks moving `bytes` of
+/// payload. `bytes` is the full buffer size for broadcast/reduce-scatter/
+/// allreduce and the gathered total for allgather. `root` matters only
+/// for rooted kinds (and as the internal tree root for tree allreduce).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CollectiveSpec {
+    pub kind: CollectiveKind,
+    /// Root rank (rooted collectives; tree pivot otherwise).
     pub root: usize,
     /// Number of participating ranks (0..n, must match cluster GPUs).
     pub n_ranks: usize,
@@ -13,15 +75,44 @@ pub struct BcastSpec {
     pub bytes: u64,
 }
 
-impl BcastSpec {
-    pub fn new(root: usize, n_ranks: usize, bytes: u64) -> BcastSpec {
+impl CollectiveSpec {
+    /// A broadcast spec — the historical constructor, kept with its
+    /// original three-argument shape so `BcastSpec::new` call sites stay
+    /// unchanged.
+    pub fn new(root: usize, n_ranks: usize, bytes: u64) -> CollectiveSpec {
+        CollectiveSpec::collective(CollectiveKind::Broadcast, root, n_ranks, bytes)
+    }
+
+    /// A spec for any collective kind.
+    pub fn collective(
+        kind: CollectiveKind,
+        root: usize,
+        n_ranks: usize,
+        bytes: u64,
+    ) -> CollectiveSpec {
         assert!(n_ranks >= 1, "need at least one rank");
         assert!(root < n_ranks, "root out of range");
-        BcastSpec {
+        CollectiveSpec {
+            kind,
             root,
             n_ranks,
             bytes,
         }
+    }
+
+    /// An allreduce over all ranks (root 0 by convention).
+    pub fn allreduce(n_ranks: usize, bytes: u64) -> CollectiveSpec {
+        CollectiveSpec::collective(CollectiveKind::Allreduce, 0, n_ranks, bytes)
+    }
+
+    /// A reduce-scatter over all ranks.
+    pub fn reduce_scatter(n_ranks: usize, bytes: u64) -> CollectiveSpec {
+        CollectiveSpec::collective(CollectiveKind::ReduceScatter, 0, n_ranks, bytes)
+    }
+
+    /// An allgather over all ranks.
+    pub fn allgather(n_ranks: usize, bytes: u64) -> CollectiveSpec {
+        CollectiveSpec::collective(CollectiveKind::Allgather, 0, n_ranks, bytes)
     }
 
     /// Relabel rank `r` so the root is 0 (the usual trick for rooted
@@ -38,28 +129,71 @@ impl BcastSpec {
     }
 }
 
+/// Historical alias: the broadcast-only name the original builders used.
+pub type BcastSpec = CollectiveSpec;
+
+/// What an incoming transfer does to the destination's buffer for that
+/// chunk.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EdgeSem {
+    /// Destination replaces its chunk content with the payload.
+    Copy,
+    /// Destination combines the payload into its own partial
+    /// (element-wise reduction).
+    Reduce,
+}
+
 /// A rank-level data-flow edge: "src sent chunk to dst; the final netsim
-/// op of that send is `op`". Used by [`super::validate`].
+/// op of that send is `op`; on arrival dst applies `sem`". Used by
+/// [`super::validate`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct FlowEdge {
     pub src: usize,
     pub dst: usize,
     pub chunk: usize,
     pub op: OpId,
+    pub sem: EdgeSem,
 }
 
-/// A built broadcast: ops + flow edges + chunk accounting.
+impl FlowEdge {
+    /// A copy edge (broadcast/allgather dataflow).
+    pub fn copy(src: usize, dst: usize, chunk: usize, op: OpId) -> FlowEdge {
+        FlowEdge {
+            src,
+            dst,
+            chunk,
+            op,
+            sem: EdgeSem::Copy,
+        }
+    }
+
+    /// A reduce edge (reduce-scatter/allreduce dataflow).
+    pub fn reduce(src: usize, dst: usize, chunk: usize, op: OpId) -> FlowEdge {
+        FlowEdge {
+            src,
+            dst,
+            chunk,
+            op,
+            sem: EdgeSem::Reduce,
+        }
+    }
+}
+
+/// A built collective: ops + flow edges + chunk accounting.
 #[derive(Debug, Clone)]
-pub struct BcastPlan {
+pub struct CollectivePlan {
     pub plan: Plan,
     pub edges: Vec<FlowEdge>,
     pub n_chunks: usize,
-    pub spec: BcastSpec,
+    pub spec: CollectiveSpec,
     pub algorithm: String,
 }
 
+/// Historical alias for the broadcast builders.
+pub type BcastPlan = CollectivePlan;
+
 /// The algorithm menu (what the tuning framework selects over).
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Algorithm {
     /// Serialized root-sends-to-all loop (Eq. 1). Never wins; baseline.
     Direct,
@@ -75,6 +209,16 @@ pub enum Algorithm {
     /// Host-staged k-nomial (Eq. 6) — the GPU-specific small-message
     /// optimisation of §IV-C.
     HostStagedKnomial { k: usize },
+    /// Ring reduce-scatter: the accumulating segment walks the ring.
+    RingReduceScatter,
+    /// Ring allgather: every rank's segment walks the ring.
+    RingAllgather,
+    /// Ring allreduce = ring reduce-scatter + ring allgather —
+    /// bandwidth-optimal gradient reduction (2·(n−1)/n · M per rank).
+    RingAllreduce,
+    /// K-nomial reduce to the root followed by a k-nomial broadcast —
+    /// the latency-optimal allreduce for small messages.
+    TreeAllreduce { k: usize },
 }
 
 impl Algorithm {
@@ -88,6 +232,10 @@ impl Algorithm {
             Algorithm::Knomial { k } => format!("knomial(k={k})"),
             Algorithm::ScatterRingAllgather => "scatter-ring-allgather".into(),
             Algorithm::HostStagedKnomial { k } => format!("host-staged-knomial(k={k})"),
+            Algorithm::RingReduceScatter => "ring-reduce-scatter".into(),
+            Algorithm::RingAllgather => "ring-allgather".into(),
+            Algorithm::RingAllreduce => "ring-allreduce".into(),
+            Algorithm::TreeAllreduce { k } => format!("tree-allreduce(k={k})"),
         }
     }
 
@@ -100,6 +248,27 @@ impl Algorithm {
             Algorithm::Knomial { .. } => "knomial",
             Algorithm::ScatterRingAllgather => "scatter-ring-allgather",
             Algorithm::HostStagedKnomial { .. } => "host-staged-knomial",
+            Algorithm::RingReduceScatter => "ring-reduce-scatter",
+            Algorithm::RingAllgather => "ring-allgather",
+            Algorithm::RingAllreduce => "ring-allreduce",
+            Algorithm::TreeAllreduce { .. } => "tree-allreduce",
+        }
+    }
+
+    /// The collective this algorithm implements.
+    pub fn kind(&self) -> CollectiveKind {
+        match self {
+            Algorithm::Direct
+            | Algorithm::Chain
+            | Algorithm::PipelinedChain { .. }
+            | Algorithm::Knomial { .. }
+            | Algorithm::ScatterRingAllgather
+            | Algorithm::HostStagedKnomial { .. } => CollectiveKind::Broadcast,
+            Algorithm::RingReduceScatter => CollectiveKind::ReduceScatter,
+            Algorithm::RingAllgather => CollectiveKind::Allgather,
+            Algorithm::RingAllreduce | Algorithm::TreeAllreduce { .. } => {
+                CollectiveKind::Allreduce
+            }
         }
     }
 }
@@ -131,5 +300,52 @@ mod tests {
             "pipelined-chain(C=1M)"
         );
         assert_eq!(Algorithm::PipelinedChain { chunk: 4 }.family(), "pipelined-chain");
+        assert_eq!(Algorithm::RingAllreduce.name(), "ring-allreduce");
+        assert_eq!(Algorithm::TreeAllreduce { k: 4 }.name(), "tree-allreduce(k=4)");
+    }
+
+    #[test]
+    fn default_spec_kind_is_broadcast() {
+        let spec = BcastSpec::new(0, 4, 64);
+        assert_eq!(spec.kind, CollectiveKind::Broadcast);
+        let ar = CollectiveSpec::allreduce(4, 64);
+        assert_eq!(ar.kind, CollectiveKind::Allreduce);
+        assert_eq!(ar.root, 0);
+    }
+
+    #[test]
+    fn algorithm_kinds_map() {
+        assert_eq!(Algorithm::Chain.kind(), CollectiveKind::Broadcast);
+        assert_eq!(
+            Algorithm::RingReduceScatter.kind(),
+            CollectiveKind::ReduceScatter
+        );
+        assert_eq!(Algorithm::RingAllgather.kind(), CollectiveKind::Allgather);
+        assert_eq!(
+            Algorithm::TreeAllreduce { k: 2 }.kind(),
+            CollectiveKind::Allreduce
+        );
+    }
+
+    #[test]
+    fn algorithm_is_hashable_map_key() {
+        // Eq + Hash: tuning tables and dedup maps key on Algorithm
+        // directly instead of round-tripping through name() strings.
+        use std::collections::HashMap;
+        let mut wins: HashMap<Algorithm, u64> = HashMap::new();
+        wins.insert(Algorithm::PipelinedChain { chunk: 1 << 20 }, 10);
+        wins.insert(Algorithm::RingAllreduce, 20);
+        wins.insert(Algorithm::PipelinedChain { chunk: 1 << 20 }, 30);
+        assert_eq!(wins.len(), 2);
+        assert_eq!(wins[&Algorithm::PipelinedChain { chunk: 1 << 20 }], 30);
+    }
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for kind in CollectiveKind::ALL {
+            assert_eq!(CollectiveKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(CollectiveKind::parse("bcast"), Some(CollectiveKind::Broadcast));
+        assert_eq!(CollectiveKind::parse("nope"), None);
     }
 }

@@ -1,26 +1,39 @@
-//! Broadcast-plan invariants.
+//! Collective-plan invariants.
 //!
-//! Every algorithm must produce a plan where (1) each non-root rank is
-//! *delivered* every chunk exactly once, and (2) data flows causally: no
-//! rank forwards a chunk before the simulator says it arrived. These are
-//! the invariants the property tests in `rust/tests/` sweep across random
-//! topologies, roots, sizes and algorithms.
+//! Broadcast plans must satisfy delivery + causality: every non-root rank
+//! is delivered every chunk exactly once, and no rank forwards a chunk
+//! before the simulator says it arrived. Reduction collectives
+//! (reduce-scatter / allgather / allreduce) are checked by *dataflow
+//! replay*: every rank starts with its own contribution, each
+//! [`FlowEdge`] moves the source's accumulated contribution-set at the
+//! op's start time (applying [`EdgeSem::Copy`] or [`EdgeSem::Reduce`] at
+//! completion), and the final buffers must reflect **all n contributions
+//! exactly once**. These are the invariants the property tests in
+//! `rust/tests/` sweep across random topologies, roots, sizes and
+//! algorithms.
 
 use std::collections::HashMap;
 
 use crate::netsim::{Engine, ExecResult};
 
-use super::traits::BcastPlan;
+use super::traits::{CollectiveKind, CollectivePlan, EdgeSem, FlowEdge};
 
-/// Validate a plan against an execution of it.
-///
-/// Checks:
+/// Validate a plan against an execution of it, dispatching on the spec's
+/// collective kind.
+pub fn validate(bp: &CollectivePlan, result: &ExecResult) -> Result<(), String> {
+    match bp.spec.kind {
+        CollectiveKind::Broadcast => validate_broadcast(bp, result),
+        _ => validate_dataflow(bp, result),
+    }
+}
+
+/// Broadcast checks:
 /// * coverage — every (non-root rank, chunk) has a labelled delivery;
 /// * causality — each flow edge's op *starts* no earlier than the
 ///   delivery of that chunk at the edge's source rank (the root owns all
 ///   chunks at t=0);
 /// * uniqueness — no two labelled ops deliver the same (rank, chunk).
-pub fn validate(bp: &BcastPlan, result: &ExecResult) -> Result<(), String> {
+fn validate_broadcast(bp: &CollectivePlan, result: &ExecResult) -> Result<(), String> {
     let spec = &bp.spec;
 
     // uniqueness + coverage from labels
@@ -87,12 +100,184 @@ pub fn validate(bp: &BcastPlan, result: &ExecResult) -> Result<(), String> {
     Ok(())
 }
 
+/// Per-(rank, chunk) contribution counters: `counts[i]` is how many times
+/// rank `i`'s contribution has been folded in.
+type Contribs = Vec<u32>;
+
+fn is_zero(c: &Contribs) -> bool {
+    c.iter().all(|&x| x == 0)
+}
+
+/// Reduction-collective checks by dataflow replay: edges capture their
+/// payload (the source's contribution-set) at the op's start time and
+/// apply it at the dst (copy = replace, reduce = fold) at completion;
+/// the final state must match the collective's contract exactly.
+fn validate_dataflow(bp: &CollectivePlan, result: &ExecResult) -> Result<(), String> {
+    let spec = &bp.spec;
+    let n = spec.n_ranks;
+    let k = bp.n_chunks;
+
+    if matches!(
+        spec.kind,
+        CollectiveKind::ReduceScatter | CollectiveKind::Allgather
+    ) && k != n
+    {
+        return Err(format!(
+            "{} plan must carry one chunk per rank (got {k} chunks for {n} ranks)",
+            spec.kind.name()
+        ));
+    }
+
+    let mut seen_edges = std::collections::HashSet::new();
+    for e in &bp.edges {
+        if e.src >= n || e.dst >= n {
+            return Err(format!("edge {} -> {} out of rank range", e.src, e.dst));
+        }
+        if e.chunk >= k {
+            return Err(format!("edge carries out-of-range chunk {}", e.chunk));
+        }
+        if e.op >= result.done.len() {
+            return Err(format!("edge references unknown op {}", e.op));
+        }
+        // copy application is idempotent in the replay, so duplicated
+        // transfers (wasted traffic, double delivery) must be rejected
+        // structurally
+        if !seen_edges.insert((e.src, e.dst, e.chunk, e.sem)) {
+            return Err(format!(
+                "duplicate flow edge {} -> {} for chunk {}",
+                e.src, e.dst, e.chunk
+            ));
+        }
+    }
+
+    // labelled deliveries must be unique, as in the broadcast validator
+    let mut seen_labels: HashMap<(usize, usize), usize> = HashMap::new();
+    for (id, op) in bp.plan.ops.iter().enumerate() {
+        if let Some((rank, chunk)) = op.label {
+            if rank >= n || chunk >= k {
+                return Err(format!("delivery label ({rank}, {chunk}) out of range"));
+            }
+            if let Some(prev) = seen_labels.insert((rank, chunk), id) {
+                return Err(format!(
+                    "duplicate delivery of chunk {chunk} to rank {rank} (ops {prev} and {id})"
+                ));
+            }
+        }
+    }
+
+    // initial contributions
+    let mut state: Vec<Vec<Contribs>> = vec![vec![vec![0u32; n]; k]; n];
+    match spec.kind {
+        // broadcast plans take the label-based path in `validate`
+        CollectiveKind::Broadcast => unreachable!("broadcast uses validate_broadcast"),
+        CollectiveKind::ReduceScatter | CollectiveKind::Allreduce => {
+            for (r, chunks) in state.iter_mut().enumerate() {
+                for counts in chunks.iter_mut() {
+                    counts[r] = 1;
+                }
+            }
+        }
+        CollectiveKind::Allgather => {
+            // segment r originates at rank r
+            for (r, chunks) in state.iter_mut().enumerate() {
+                chunks[r][r] = 1;
+            }
+        }
+    }
+
+    // replay edges in virtual-time order: completions apply before
+    // captures at the same instant (an arrival at t may feed a forward
+    // starting at t, matching the engine's dependency semantics)
+    const APPLY: u8 = 0;
+    const CAPTURE: u8 = 1;
+    let mut events: Vec<(u64, u8, usize)> = Vec::with_capacity(2 * bp.edges.len());
+    for (i, e) in bp.edges.iter().enumerate() {
+        events.push((result.start[e.op], CAPTURE, i));
+        events.push((result.done[e.op], APPLY, i));
+    }
+    events.sort_unstable();
+
+    let capture = |edge: &FlowEdge, state: &[Vec<Contribs>]| -> Result<Contribs, String> {
+        let snap = state[edge.src][edge.chunk].clone();
+        if is_zero(&snap) {
+            return Err(format!(
+                "causality violation: rank {} forwards chunk {} before holding any data for it",
+                edge.src, edge.chunk
+            ));
+        }
+        Ok(snap)
+    };
+
+    let mut payloads: Vec<Option<Contribs>> = vec![None; bp.edges.len()];
+    for (_t, phase, i) in events {
+        let edge = &bp.edges[i];
+        if phase == CAPTURE {
+            if payloads[i].is_none() {
+                payloads[i] = Some(capture(edge, &state)?);
+            }
+        } else {
+            // zero-duration ops may see APPLY sorted before their own
+            // CAPTURE at the same instant: capture on demand
+            let payload = match payloads[i].take() {
+                Some(p) => p,
+                None => capture(edge, &state)?,
+            };
+            match edge.sem {
+                EdgeSem::Reduce => {
+                    for (acc, add) in state[edge.dst][edge.chunk].iter_mut().zip(&payload) {
+                        *acc += add;
+                    }
+                }
+                EdgeSem::Copy => state[edge.dst][edge.chunk] = payload,
+            }
+        }
+    }
+
+    // final contracts
+    let check = |rank: usize, chunk: usize, want: &dyn Fn(usize) -> u32| -> Result<(), String> {
+        for (i, &got) in state[rank][chunk].iter().enumerate() {
+            let want = want(i);
+            if got != want {
+                return Err(format!(
+                    "rank {rank} chunk {chunk}: contribution from rank {i} \
+                     appears {got} times (want {want})"
+                ));
+            }
+        }
+        Ok(())
+    };
+    match spec.kind {
+        CollectiveKind::Broadcast => unreachable!("broadcast uses validate_broadcast"),
+        CollectiveKind::Allreduce => {
+            for r in 0..n {
+                for c in 0..k {
+                    check(r, c, &|_| 1)?;
+                }
+            }
+        }
+        CollectiveKind::ReduceScatter => {
+            // rank s must own the full reduction of segment s
+            for s in 0..n {
+                check(s, s, &|_| 1)?;
+            }
+        }
+        CollectiveKind::Allgather => {
+            for r in 0..n {
+                for c in 0..k {
+                    check(r, c, &|i| u32::from(i == c))?;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
 /// Convenience: plan + execute + validate in one call.
 pub fn check_algorithm(
     algo: &super::Algorithm,
     comm: &mut crate::comm::Comm,
     engine: &mut Engine,
-    spec: &super::BcastSpec,
+    spec: &super::CollectiveSpec,
 ) -> Result<u64, String> {
     let bp = super::plan(algo, comm, spec);
     let result = engine.execute(&bp.plan);
@@ -103,7 +288,7 @@ pub fn check_algorithm(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::collectives::{Algorithm, BcastSpec};
+    use crate::collectives::{Algorithm, BcastSpec, CollectiveSpec};
     use crate::comm::Comm;
     use crate::topology::presets::{flat, kesch};
 
@@ -174,5 +359,85 @@ mod tests {
         let result = engine.execute(&bp.plan);
         let err = validate(&bp, &result).unwrap_err();
         assert!(err.contains("causality"), "{err}");
+    }
+
+    #[test]
+    fn reduction_collectives_valid() {
+        let c = kesch(2, 8);
+        let mut comm = Comm::new(&c);
+        let mut engine = Engine::new(&c);
+        for (algo, spec) in [
+            (Algorithm::RingReduceScatter, CollectiveSpec::reduce_scatter(16, 1 << 20)),
+            (Algorithm::RingAllgather, CollectiveSpec::allgather(16, 1 << 20)),
+            (Algorithm::RingAllreduce, CollectiveSpec::allreduce(16, 1 << 20)),
+            (Algorithm::TreeAllreduce { k: 2 }, CollectiveSpec::allreduce(16, 8 << 10)),
+            (Algorithm::TreeAllreduce { k: 4 }, CollectiveSpec::allreduce(16, 8 << 10)),
+        ] {
+            check_algorithm(&algo, &mut comm, &mut engine, &spec)
+                .unwrap_or_else(|e| panic!("{}: {e}", algo.name()));
+        }
+    }
+
+    #[test]
+    fn dropped_reduction_edge_detected() {
+        // sabotage a ring allreduce: drop one reduce-scatter flow edge so
+        // its contribution never folds in — every final buffer for that
+        // segment must come up short
+        let c = flat(4);
+        let mut comm = Comm::new(&c);
+        let mut engine = Engine::new(&c);
+        let spec = CollectiveSpec::allreduce(4, 4096);
+        let mut bp = crate::collectives::allreduce::ring(&mut comm, &spec);
+        bp.edges.remove(0);
+        let result = engine.execute(&bp.plan);
+        let err = validate(&bp, &result).unwrap_err();
+        assert!(err.contains("appears"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn duplicated_reduce_edge_detected() {
+        // shipping the same contribution twice must be rejected
+        let c = flat(4);
+        let mut comm = Comm::new(&c);
+        let mut engine = Engine::new(&c);
+        let spec = CollectiveSpec::allreduce(4, 4096);
+        let mut bp = crate::collectives::allreduce::ring(&mut comm, &spec);
+        let dup = bp.edges[0];
+        bp.edges.push(dup);
+        let result = engine.execute(&bp.plan);
+        let err = validate(&bp, &result).unwrap_err();
+        assert!(err.contains("duplicate"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn duplicated_copy_edge_detected() {
+        // copy replay is idempotent, so double deliveries must be caught
+        // structurally — duplicate an allgather-phase edge
+        let c = flat(4);
+        let mut comm = Comm::new(&c);
+        let mut engine = Engine::new(&c);
+        let spec = CollectiveSpec::allreduce(4, 4096);
+        let mut bp = crate::collectives::allreduce::ring(&mut comm, &spec);
+        let ag_edge = *bp
+            .edges
+            .iter()
+            .find(|e| e.sem == crate::collectives::EdgeSem::Copy)
+            .expect("ring allreduce has copy edges");
+        bp.edges.push(ag_edge);
+        let result = engine.execute(&bp.plan);
+        let err = validate(&bp, &result).unwrap_err();
+        assert!(err.contains("duplicate"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn wrong_chunk_count_rejected() {
+        let c = flat(4);
+        let mut comm = Comm::new(&c);
+        let mut engine = Engine::new(&c);
+        let spec = CollectiveSpec::reduce_scatter(4, 4096);
+        let mut bp = crate::collectives::reduce_scatter::plan(&mut comm, &spec);
+        bp.n_chunks = 2;
+        let result = engine.execute(&bp.plan);
+        assert!(validate(&bp, &result).is_err());
     }
 }

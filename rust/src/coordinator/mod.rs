@@ -1,13 +1,17 @@
 //! The data-parallel training coordinator — the role CA-CNTK plays in the
-//! paper's application study (§V-D, Fig. 3).
+//! paper's application study (§V-D, Fig. 3), extended with the modern
+//! allreduce-based gradient exchange.
 //!
 //! Responsibilities:
 //!
-//! * [`schedule`] — turn a model + scale into the per-iteration broadcast
-//!   schedule and cost it on the simulator under either comm backend
-//!   (MV2-GDR-Opt or NCCL-MV2-GDR);
+//! * [`schedule`] — turn a model + scale into the per-iteration exchange
+//!   schedule and cost it on the simulator: the partitioned broadcast
+//!   schedule under either comm backend (MV2-GDR-Opt or NCCL-MV2-GDR),
+//!   its gather-based aggregation leg, and the bucketed gradient
+//!   allreduce ([`schedule::TrainingMode`]);
 //! * [`train`] — the Fig. 3 estimator: compute-time model × simulated
-//!   communication, per GPU count;
+//!   communication, per GPU count — plus the mode-aware full-exchange
+//!   estimator ([`train::estimate_training_iteration`]);
 //! * [`leader`] / [`worker`] — the actual data-parallel execution engine
 //!   (leader owns parameters, workers compute gradient shards; threaded
 //!   over channels, or serial for non-`Send` backends like PJRT);
@@ -21,5 +25,8 @@ pub mod worker;
 
 pub use leader::{run_serial, run_threaded, SgdConfig};
 pub use metrics::{IterationMetrics, TrainingMetrics};
-pub use schedule::{comm_time_ns, BcastBackend};
+pub use schedule::{
+    aggregation_time_ns, allreduce_time_ns, comm_time_ns, BcastBackend, TrainingMode,
+};
+pub use train::estimate_training_iteration;
 pub use worker::ComputeBackend;

@@ -1,6 +1,8 @@
-//! Per-iteration broadcast schedule costing.
+//! Per-iteration exchange-schedule costing: the paper's partitioned
+//! broadcast schedule, its gradient-aggregation leg, and the modern
+//! bucketed-allreduce alternative.
 
-use crate::collectives::BcastSpec;
+use crate::collectives::{BcastSpec, CollectiveSpec};
 use crate::comm::Comm;
 use crate::models::messages::BcastMsg;
 use crate::nccl::{hierarchical, NcclParams};
@@ -20,6 +22,38 @@ impl<'a> BcastBackend<'a> {
         match self {
             BcastBackend::Mv2Opt(_) => "MV2-GDR-Opt",
             BcastBackend::NcclMv2(_) => "NCCL-MV2-GDR",
+        }
+    }
+}
+
+/// How the data-parallel training loop exchanges model state each
+/// iteration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TrainingMode {
+    /// The CA-CNTK scheme the paper studies (§V-D): every rank first
+    /// sends its local gradient slice of block `i` to block `i`'s owner
+    /// (gather-based aggregation), then the owners broadcast their
+    /// updated blocks — the partitioned `MPI_Bcast` schedule.
+    PartitionedBcast,
+    /// The modern scheme: the flattened gradient vector is fused into
+    /// buckets and each bucket is allreduced (the workload of
+    /// arXiv:1810.11112 / 1802.06949).
+    AllreduceGradients,
+}
+
+impl TrainingMode {
+    pub fn label(&self) -> &'static str {
+        match self {
+            TrainingMode::PartitionedBcast => "partitioned-bcast",
+            TrainingMode::AllreduceGradients => "allreduce",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<TrainingMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "partitioned-bcast" | "bcast" => Some(TrainingMode::PartitionedBcast),
+            "allreduce" => Some(TrainingMode::AllreduceGradients),
+            _ => None,
         }
     }
 }
@@ -77,6 +111,52 @@ pub fn comm_time_ns(
             best
         }
     }
+}
+
+/// Simulated time for the gradient-aggregation leg of the partitioned
+/// schedule: every rank sends its local slice of block `i` (the full
+/// block size — each rank holds gradients for the whole model) to block
+/// `i`'s owner with plain point-to-point sends, all concurrent on the
+/// fabric. This is the unpipelined gather CNTK performs before its
+/// owners can broadcast; its all-to-all incast is exactly what makes the
+/// partitioned scheme fall behind allreduce at scale.
+pub fn aggregation_time_ns(comm: &mut Comm, engine: &mut Engine, messages: &[BcastMsg]) -> u64 {
+    let n = comm.cluster().n_gpus();
+    let mut plan = crate::netsim::Plan::new();
+    for msg in messages {
+        if msg.bytes == 0 {
+            continue;
+        }
+        let root = msg.root % n;
+        for r in 0..n {
+            if r == root {
+                continue;
+            }
+            comm.send(&mut plan, r, root, msg.bytes, vec![], None);
+        }
+    }
+    execute(engine, plan)
+}
+
+/// Simulated time for one iteration's bucketed gradient allreduce: each
+/// bucket's tuned allreduce plan is merged into one op DAG so buckets
+/// overlap on the fabric, like the broadcast schedule above.
+pub fn allreduce_time_ns(
+    comm: &mut Comm,
+    engine: &mut Engine,
+    sel: &Selector,
+    buckets: &[u64],
+) -> u64 {
+    let n = comm.cluster().n_gpus();
+    let mut merged = crate::netsim::Plan::new();
+    for &bytes in buckets {
+        if bytes == 0 {
+            continue;
+        }
+        let spec = CollectiveSpec::allreduce(n, bytes);
+        merged.merge(&sel.plan(comm, &spec).plan);
+    }
+    execute(engine, merged)
 }
 
 fn merge_schedule(
@@ -143,5 +223,63 @@ mod tests {
             comm_time_ns(&mut comm, &mut engine, &BcastBackend::Mv2Opt(&sel), &msgs),
             0
         );
+        assert_eq!(aggregation_time_ns(&mut comm, &mut engine, &msgs), 0);
+        assert_eq!(allreduce_time_ns(&mut comm, &mut engine, &sel, &[0]), 0);
+    }
+
+    #[test]
+    fn allreduce_schedule_costs_vgg_buckets() {
+        let cluster = kesch(1, 8);
+        let sel = Selector::tuned(&cluster);
+        let mut comm = Comm::new(&cluster);
+        let mut engine = Engine::new(&cluster);
+        let buckets =
+            crate::models::allreduce_buckets(&vgg16(), crate::models::DEFAULT_BUCKET_BYTES);
+        let t = allreduce_time_ns(&mut comm, &mut engine, &sel, &buckets);
+        assert!(t > 0);
+        // merged buckets overlap: no meaningfully slower than running
+        // them back to back (small slack for FIFO interleaving tails)
+        let serial: u64 = buckets
+            .iter()
+            .map(|&b| {
+                let spec = crate::collectives::CollectiveSpec::allreduce(8, b);
+                sel.latency_ns(&mut comm, &mut engine, &spec)
+            })
+            .sum();
+        assert!(
+            t <= serial + serial / 10,
+            "merged {t} vs serial {serial}"
+        );
+    }
+
+    #[test]
+    fn aggregation_grows_with_scale() {
+        // the all-to-all gather's incast hurts more at two nodes than one
+        let small = kesch(1, 8);
+        let large = kesch(2, 16);
+        let mut t = [0u64; 2];
+        for (i, cluster) in [&small, &large].into_iter().enumerate() {
+            let n = cluster.n_gpus();
+            let msgs = bcast_messages(&vgg16(), n, MessageSchedule::Partitioned);
+            let mut comm = Comm::new(cluster);
+            let mut engine = Engine::new(cluster);
+            t[i] = aggregation_time_ns(&mut comm, &mut engine, &msgs);
+        }
+        assert!(t[0] > 0);
+        assert!(t[1] > t[0], "32-GPU aggregation {} vs 8-GPU {}", t[1], t[0]);
+    }
+
+    #[test]
+    fn training_mode_parse() {
+        assert_eq!(
+            TrainingMode::parse("bcast"),
+            Some(TrainingMode::PartitionedBcast)
+        );
+        assert_eq!(
+            TrainingMode::parse("allreduce"),
+            Some(TrainingMode::AllreduceGradients)
+        );
+        assert_eq!(TrainingMode::parse("nope"), None);
+        assert_eq!(TrainingMode::AllreduceGradients.label(), "allreduce");
     }
 }

@@ -1,50 +1,98 @@
 //! Crate-wide error type.
+//!
+//! `Display`/`Error` are hand-implemented: the offline crate universe has
+//! no `thiserror` (the seed's derive could never build without registry
+//! access).
+
+use std::fmt;
 
 /// Errors produced by the gdrbcast library.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
     /// A topology query referenced a device that does not exist.
-    #[error("unknown device id {0}")]
     UnknownDevice(usize),
 
     /// No route exists between two devices.
-    #[error("no route between device {src} and device {dst}")]
     NoRoute { src: usize, dst: usize },
 
     /// A collective was asked to run over an invalid rank set.
-    #[error("invalid rank set: {0}")]
     InvalidRanks(String),
 
-    /// A broadcast plan failed validation (a rank did not receive data).
-    #[error("broadcast plan invalid: {0}")]
+    /// A collective plan failed validation (delivery, causality or
+    /// reduction-dataflow invariant broken).
     InvalidPlan(String),
 
     /// Configuration file / value errors.
-    #[error("config error: {0}")]
     Config(String),
 
     /// CLI usage errors.
-    #[error("usage error: {0}")]
     Usage(String),
 
     /// Artifact discovery / runtime errors.
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// PJRT / XLA errors surfaced from the `xla` crate.
-    #[error("xla error: {0}")]
     Xla(String),
 
     /// IO errors.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 }
 
-impl From<xla::Error> for Error {
-    fn from(e: xla::Error) -> Self {
-        Error::Xla(e.to_string())
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::UnknownDevice(id) => write!(f, "unknown device id {id}"),
+            Error::NoRoute { src, dst } => {
+                write!(f, "no route between device {src} and device {dst}")
+            }
+            Error::InvalidRanks(msg) => write!(f, "invalid rank set: {msg}"),
+            Error::InvalidPlan(msg) => write!(f, "collective plan invalid: {msg}"),
+            Error::Config(msg) => write!(f, "config error: {msg}"),
+            Error::Usage(msg) => write!(f, "usage error: {msg}"),
+            Error::Runtime(msg) => write!(f, "runtime error: {msg}"),
+            Error::Xla(msg) => write!(f, "xla error: {msg}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::Io(e)
     }
 }
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_matches_previous_derive() {
+        assert_eq!(Error::UnknownDevice(3).to_string(), "unknown device id 3");
+        assert_eq!(
+            Error::NoRoute { src: 1, dst: 2 }.to_string(),
+            "no route between device 1 and device 2"
+        );
+        assert_eq!(Error::Usage("x".into()).to_string(), "usage error: x");
+    }
+
+    #[test]
+    fn io_error_converts_and_chains() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert!(e.to_string().contains("gone"));
+        assert!(std::error::Error::source(&e).is_some());
+    }
+}

@@ -57,6 +57,20 @@ pub fn schedule_bytes(msgs: &[BcastMsg]) -> u64 {
     msgs.iter().map(|m| m.bytes).sum()
 }
 
+/// Default gradient-fusion bucket for the allreduce schedule (the
+/// Horovod/DDP-style fusion size; large enough to amortise per-call
+/// startup, small enough to overlap buckets on the fabric).
+pub const DEFAULT_BUCKET_BYTES: u64 = 32 << 20;
+
+/// The per-iteration allreduce calls for gradient-averaging training:
+/// the flattened gradient vector (same length as the parameters) fused
+/// into buckets of at most `bucket_bytes`. Returns the bucket sizes —
+/// allreduce has no root, so unlike [`BcastMsg`] there is nothing else
+/// to carry.
+pub fn allreduce_buckets(model: &DnnModel, bucket_bytes: u64) -> Vec<u64> {
+    crate::comm::chunk::chunk_sizes(model.total_bytes(), bucket_bytes)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -89,6 +103,15 @@ mod tests {
         let msgs = bcast_messages(&m, 4, MessageSchedule::Partitioned);
         let roots: Vec<usize> = msgs.iter().map(|m| m.root).collect();
         assert_eq!(roots, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn allreduce_buckets_cover_model() {
+        let m = vgg16();
+        let buckets = allreduce_buckets(&m, DEFAULT_BUCKET_BYTES);
+        assert_eq!(buckets.iter().sum::<u64>(), m.total_bytes());
+        assert!(buckets.len() > 1, "VGG must span multiple buckets");
+        assert!(buckets.iter().all(|&b| b <= DEFAULT_BUCKET_BYTES));
     }
 
     #[test]

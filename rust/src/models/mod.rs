@@ -13,5 +13,5 @@ pub mod messages;
 pub mod zoo;
 
 pub use layer::{DnnModel, Layer};
-pub use messages::{bcast_messages, MessageSchedule};
+pub use messages::{allreduce_buckets, bcast_messages, MessageSchedule, DEFAULT_BUCKET_BYTES};
 pub use zoo::{alexnet, by_name, googlenet, lenet5, resnet50, vgg16, vgg_mini};

@@ -98,12 +98,7 @@ pub fn plan_ring(
                     label,
                 )
             };
-            edges.push(FlowEdge {
-                src,
-                dst,
-                chunk: chunk_base + s,
-                op,
-            });
+            edges.push(FlowEdge::copy(src, dst, chunk_base + s, op));
             prev_recv[s] = Some(op);
             last_recv[pos + 1] = Some(op);
         }

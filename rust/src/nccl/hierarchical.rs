@@ -100,12 +100,7 @@ pub fn plan(
                 None => Vec::new(), // root leader owns the data
             };
             let op = comm.send(&mut plan, src, dst, cbytes, deps, Some((dst, c)));
-            edges.push(FlowEdge {
-                src,
-                dst,
-                chunk: c,
-                op,
-            });
+            edges.push(FlowEdge::copy(src, dst, c, op));
             leader_recv[dst_node][c] = Some(op);
             last_delivery[dst] = Some(op);
         }

@@ -1,80 +1,152 @@
 //! PJRT client wrapper.
+//!
+//! The real client binds the `xla` crate's PJRT CPU runtime. That crate
+//! is unavailable in the offline build, so it is gated behind the `pjrt`
+//! cargo feature (enable it after vendoring `xla`); the default build
+//! ships a stub with the same surface that returns a friendly error,
+//! keeping the rest of the crate — and the tests that skip when
+//! artifacts are missing — fully buildable.
 
-use std::path::Path;
+#[cfg(feature = "pjrt")]
+mod real {
+    use std::path::Path;
 
-use crate::error::{Error, Result};
+    use crate::error::{Error, Result};
 
-/// A PJRT CPU runtime bound to one process.
-pub struct Runtime {
-    client: xla::PjRtClient,
-}
-
-impl Runtime {
-    /// Create the CPU client.
-    pub fn cpu() -> Result<Runtime> {
-        Ok(Runtime {
-            client: xla::PjRtClient::cpu()?,
-        })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    pub fn device_count(&self) -> usize {
-        self.client.device_count()
-    }
-
-    /// Load an HLO-text artifact and compile it.
-    pub fn load_hlo_text(&self, path: &Path) -> Result<Executable> {
-        if !path.exists() {
-            return Err(Error::Runtime(format!(
-                "artifact {} not found — run `make artifacts` first",
-                path.display()
-            )));
+    impl From<xla::Error> for Error {
+        fn from(e: xla::Error) -> Self {
+            Error::Xla(e.to_string())
         }
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str()
-                .ok_or_else(|| Error::Runtime("non-utf8 artifact path".into()))?,
-        )?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)?;
-        Ok(Executable { exe })
     }
-}
 
-/// A compiled computation.
-pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-}
+    /// A PJRT CPU runtime bound to one process.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+    }
 
-impl Executable {
-    /// Execute with f32 tensor inputs `(data, dims)`; expects the program
-    /// to return a 1-tuple of a single f32 array (the aot.py convention)
-    /// and returns it flattened.
-    pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<f32>> {
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|(data, dims)| {
-                let lit = xla::Literal::vec1(data);
-                if dims.is_empty() {
-                    // scalar
-                    lit.reshape(&[]).map_err(Error::from)
-                } else {
-                    lit.reshape(dims).map_err(Error::from)
-                }
+    impl Runtime {
+        /// Create the CPU client.
+        pub fn cpu() -> Result<Runtime> {
+            Ok(Runtime {
+                client: xla::PjRtClient::cpu()?,
             })
-            .collect::<Result<Vec<_>>>()?;
-        let result = self.exe.execute::<xla::Literal>(&literals)?;
-        let literal = result[0][0].to_literal_sync()?;
-        let out = literal.to_tuple1()?;
-        Ok(out.to_vec::<f32>()?)
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        pub fn device_count(&self) -> usize {
+            self.client.device_count()
+        }
+
+        /// Load an HLO-text artifact and compile it.
+        pub fn load_hlo_text(&self, path: &Path) -> Result<Executable> {
+            if !path.exists() {
+                return Err(Error::Runtime(format!(
+                    "artifact {} not found — run `make artifacts` first",
+                    path.display()
+                )));
+            }
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str()
+                    .ok_or_else(|| Error::Runtime("non-utf8 artifact path".into()))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            Ok(Executable { exe })
+        }
+    }
+
+    /// A compiled computation.
+    pub struct Executable {
+        exe: xla::PjRtLoadedExecutable,
+    }
+
+    impl Executable {
+        /// Execute with f32 tensor inputs `(data, dims)`; expects the
+        /// program to return a 1-tuple of a single f32 array (the aot.py
+        /// convention) and returns it flattened.
+        pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<f32>> {
+            let literals: Vec<xla::Literal> = inputs
+                .iter()
+                .map(|(data, dims)| {
+                    let lit = xla::Literal::vec1(data);
+                    if dims.is_empty() {
+                        // scalar
+                        lit.reshape(&[]).map_err(Error::from)
+                    } else {
+                        lit.reshape(dims).map_err(Error::from)
+                    }
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let result = self.exe.execute::<xla::Literal>(&literals)?;
+            let literal = result[0][0].to_literal_sync()?;
+            let out = literal.to_tuple1()?;
+            Ok(out.to_vec::<f32>()?)
+        }
     }
 }
 
-#[cfg(test)]
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use std::path::Path;
+
+    use crate::error::{Error, Result};
+
+    fn unavailable() -> Error {
+        Error::Runtime(
+            "built without the `pjrt` feature (the offline build has no `xla` \
+             crate); vendor it and rebuild with `--features pjrt`"
+                .into(),
+        )
+    }
+
+    /// Stub runtime: mirrors the real client's API, constructor always
+    /// errors.
+    pub struct Runtime {
+        _private: (),
+    }
+
+    impl Runtime {
+        pub fn cpu() -> Result<Runtime> {
+            Err(unavailable())
+        }
+
+        pub fn platform(&self) -> String {
+            "pjrt-unavailable".into()
+        }
+
+        pub fn device_count(&self) -> usize {
+            0
+        }
+
+        pub fn load_hlo_text(&self, _path: &Path) -> Result<Executable> {
+            Err(unavailable())
+        }
+    }
+
+    /// Stub executable: never constructible via the stub runtime.
+    pub struct Executable {
+        _private: (),
+    }
+
+    impl Executable {
+        pub fn run_f32(&self, _inputs: &[(&[f32], &[i64])]) -> Result<Vec<f32>> {
+            Err(unavailable())
+        }
+    }
+}
+
+#[cfg(feature = "pjrt")]
+pub use real::{Executable, Runtime};
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{Executable, Runtime};
+
+#[cfg(all(test, feature = "pjrt"))]
 mod tests {
     use super::*;
+    use std::path::Path;
 
     #[test]
     fn cpu_client_comes_up() {
@@ -91,5 +163,19 @@ mod tests {
             Ok(_) => panic!("expected error"),
         };
         assert!(err.to_string().contains("make artifacts"));
+    }
+}
+
+#[cfg(all(test, not(feature = "pjrt")))]
+mod stub_tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_missing_feature() {
+        let err = match Runtime::cpu() {
+            Err(e) => e,
+            Ok(_) => panic!("stub must not construct"),
+        };
+        assert!(err.to_string().contains("pjrt"), "{err}");
     }
 }

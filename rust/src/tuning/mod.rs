@@ -1,13 +1,17 @@
-//! The enhanced collective tuning framework (§IV of the paper).
+//! The enhanced collective tuning framework (§IV of the paper),
+//! generalized per collective kind.
 //!
 //! MVAPICH2-GDR's "MV2-GDR-Opt" is not one algorithm — it is a dispatch
-//! table: for each (message-size bucket, GPU count, topology), the tuned
-//! runtime picks the algorithm + chunk size that won an offline sweep.
-//! This module is that framework:
+//! table: for each (collective, message-size bucket, GPU count,
+//! topology), the tuned runtime picks the algorithm + chunk size that
+//! won an offline sweep. This module is that framework, keyed on
+//! `(CollectiveKind, bytes)` so the broadcast menu and the reduction
+//! collectives (ring/tree allreduce, reduce-scatter, allgather) tune
+//! side by side:
 //!
-//! * [`space`] — the candidate grid (algorithms × chunk sizes);
+//! * [`space`] — the candidate grid (per kind: algorithms × parameters);
 //! * [`sweep`] — run the candidates on the simulator for a cluster;
-//! * [`table`] — the message-size-bucketed dispatch table;
+//! * [`table`] — the (kind, size)-bucketed dispatch table;
 //! * [`selector`] — runtime lookup: `MV2-GDR-Opt` = tuned selection;
 //! * [`persist`] — save/load tables as JSON artifacts.
 

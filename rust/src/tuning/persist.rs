@@ -2,7 +2,7 @@
 
 use std::path::Path;
 
-use crate::collectives::Algorithm;
+use crate::collectives::{Algorithm, CollectiveKind};
 use crate::error::{Error, Result};
 use crate::util::json::Json;
 
@@ -15,7 +15,9 @@ fn algo_to_json(a: &Algorithm) -> Json {
         Algorithm::PipelinedChain { chunk } => {
             j.set("chunk", *chunk);
         }
-        Algorithm::Knomial { k } | Algorithm::HostStagedKnomial { k } => {
+        Algorithm::Knomial { k }
+        | Algorithm::HostStagedKnomial { k }
+        | Algorithm::TreeAllreduce { k } => {
             j.set("k", *k as u64);
         }
         _ => {}
@@ -28,6 +30,7 @@ fn algo_from_json(j: &Json) -> Result<Algorithm> {
         .get("family")
         .and_then(|v| v.as_str())
         .ok_or_else(|| Error::Config("algorithm missing family".into()))?;
+    let k_of = |j: &Json| j.get("k").and_then(|v| v.as_u64()).unwrap_or(2) as usize;
     Ok(match family {
         "direct" => Algorithm::Direct,
         "chain" => Algorithm::Chain,
@@ -37,33 +40,53 @@ fn algo_from_json(j: &Json) -> Result<Algorithm> {
                 .and_then(|v| v.as_u64())
                 .ok_or_else(|| Error::Config("pipelined-chain missing chunk".into()))?,
         },
-        "knomial" => Algorithm::Knomial {
-            k: j.get("k").and_then(|v| v.as_u64()).unwrap_or(2) as usize,
-        },
+        "knomial" => Algorithm::Knomial { k: k_of(j) },
         "scatter-ring-allgather" => Algorithm::ScatterRingAllgather,
-        "host-staged-knomial" => Algorithm::HostStagedKnomial {
-            k: j.get("k").and_then(|v| v.as_u64()).unwrap_or(2) as usize,
-        },
+        "host-staged-knomial" => Algorithm::HostStagedKnomial { k: k_of(j) },
+        "ring-reduce-scatter" => Algorithm::RingReduceScatter,
+        "ring-allgather" => Algorithm::RingAllgather,
+        "ring-allreduce" => Algorithm::RingAllreduce,
+        "tree-allreduce" => Algorithm::TreeAllreduce { k: k_of(j) },
         other => return Err(Error::Config(format!("unknown algorithm '{other}'"))),
     })
 }
 
-/// Serialise a table to JSON text.
+fn entry_to_json(e: &TableEntry) -> Json {
+    let mut ej = Json::obj();
+    ej.set("max_bytes", e.max_bytes).set("won_at_ns", e.won_at_ns);
+    ej.set("algorithm", algo_to_json(&e.algorithm));
+    ej
+}
+
+fn entry_from_json(ej: &Json) -> Result<TableEntry> {
+    Ok(TableEntry {
+        max_bytes: ej
+            .get("max_bytes")
+            .and_then(|v| v.as_u64())
+            .ok_or_else(|| Error::Config("entry missing max_bytes".into()))?,
+        won_at_ns: ej.get("won_at_ns").and_then(|v| v.as_u64()).unwrap_or(0),
+        algorithm: algo_from_json(
+            ej.get("algorithm")
+                .ok_or_else(|| Error::Config("entry missing algorithm".into()))?,
+        )?,
+    })
+}
+
+/// Serialise a table to JSON text. The broadcast entries keep the
+/// original `entries` key (old artifacts stay loadable); reduction
+/// collectives serialise under `reductions` keyed by kind name.
 pub fn to_json(table: &TuningTable) -> String {
     let mut j = Json::obj();
     j.set("cluster", table.cluster.as_str());
     j.set("n_ranks", table.n_ranks);
-    let entries: Vec<Json> = table
-        .entries
-        .iter()
-        .map(|e| {
-            let mut ej = Json::obj();
-            ej.set("max_bytes", e.max_bytes).set("won_at_ns", e.won_at_ns);
-            ej.set("algorithm", algo_to_json(&e.algorithm));
-            ej
-        })
-        .collect();
+    let entries: Vec<Json> = table.entries.iter().map(entry_to_json).collect();
     j.set("entries", Json::Arr(entries));
+    let mut reductions = Json::obj();
+    for (kind, entries) in &table.reductions {
+        let arr: Vec<Json> = entries.iter().map(entry_to_json).collect();
+        reductions.set(kind.name(), Json::Arr(arr));
+    }
+    j.set("reductions", reductions);
     j.to_string_pretty()
 }
 
@@ -76,29 +99,28 @@ pub fn from_json(text: &str) -> Result<TuningTable> {
         .unwrap_or("")
         .to_string();
     let n_ranks = j.get("n_ranks").and_then(|v| v.as_u64()).unwrap_or(0) as usize;
-    let mut entries = Vec::new();
+    let mut table = TuningTable::new(cluster, n_ranks);
     for ej in j
         .get("entries")
         .and_then(|v| v.as_arr())
         .ok_or_else(|| Error::Config("tuning table missing entries".into()))?
     {
-        entries.push(TableEntry {
-            max_bytes: ej
-                .get("max_bytes")
-                .and_then(|v| v.as_u64())
-                .ok_or_else(|| Error::Config("entry missing max_bytes".into()))?,
-            won_at_ns: ej.get("won_at_ns").and_then(|v| v.as_u64()).unwrap_or(0),
-            algorithm: algo_from_json(
-                ej.get("algorithm")
-                    .ok_or_else(|| Error::Config("entry missing algorithm".into()))?,
-            )?,
-        });
+        table.entries.push(entry_from_json(ej)?);
     }
-    Ok(TuningTable {
-        cluster,
-        n_ranks,
-        entries,
-    })
+    // reductions are optional: pre-refactor artifacts carry none
+    if let Some(Json::Obj(map)) = j.get("reductions") {
+        for (name, arr) in map {
+            let kind = CollectiveKind::parse(name)
+                .ok_or_else(|| Error::Config(format!("unknown collective '{name}'")))?;
+            let arr = arr
+                .as_arr()
+                .ok_or_else(|| Error::Config(format!("'{name}' entries must be an array")))?;
+            for ej in arr {
+                table.insert_for(kind, entry_from_json(ej)?);
+            }
+        }
+    }
+    Ok(table)
 }
 
 /// Save to a file.
@@ -120,22 +142,44 @@ mod tests {
     use super::*;
 
     fn sample() -> TuningTable {
-        TuningTable {
-            cluster: "kesch-1x16".into(),
-            n_ranks: 16,
-            entries: vec![
-                TableEntry {
-                    max_bytes: 8 << 10,
-                    algorithm: Algorithm::HostStagedKnomial { k: 4 },
-                    won_at_ns: 3_500,
-                },
-                TableEntry {
-                    max_bytes: u64::MAX,
-                    algorithm: Algorithm::PipelinedChain { chunk: 2 << 20 },
-                    won_at_ns: 14_000_000,
-                },
-            ],
-        }
+        let mut t = TuningTable::new("kesch-1x16", 16);
+        t.entries = vec![
+            TableEntry {
+                max_bytes: 8 << 10,
+                algorithm: Algorithm::HostStagedKnomial { k: 4 },
+                won_at_ns: 3_500,
+            },
+            TableEntry {
+                max_bytes: u64::MAX,
+                algorithm: Algorithm::PipelinedChain { chunk: 2 << 20 },
+                won_at_ns: 14_000_000,
+            },
+        ];
+        t.insert_for(
+            CollectiveKind::Allreduce,
+            TableEntry {
+                max_bytes: 64 << 10,
+                algorithm: Algorithm::TreeAllreduce { k: 2 },
+                won_at_ns: 9_000,
+            },
+        );
+        t.insert_for(
+            CollectiveKind::Allreduce,
+            TableEntry {
+                max_bytes: u64::MAX,
+                algorithm: Algorithm::RingAllreduce,
+                won_at_ns: 28_000_000,
+            },
+        );
+        t.insert_for(
+            CollectiveKind::ReduceScatter,
+            TableEntry {
+                max_bytes: u64::MAX,
+                algorithm: Algorithm::RingReduceScatter,
+                won_at_ns: 11_000_000,
+            },
+        );
+        t
     }
 
     #[test]
@@ -145,6 +189,7 @@ mod tests {
         assert_eq!(back.cluster, t.cluster);
         assert_eq!(back.n_ranks, t.n_ranks);
         assert_eq!(back.entries, t.entries);
+        assert_eq!(back.reductions, t.reductions);
     }
 
     #[test]
@@ -155,6 +200,7 @@ mod tests {
         save(&t, &path).unwrap();
         let back = load(&path).unwrap();
         assert_eq!(back.entries, t.entries);
+        assert_eq!(back.reductions, t.reductions);
         let _ = std::fs::remove_dir_all(&dir);
     }
 
@@ -172,5 +218,14 @@ mod tests {
         let text = r#"{"cluster":"x","n_ranks":2,"entries":[
             {"max_bytes":4,"won_at_ns":1,"algorithm":{"family":"bogus"}}]}"#;
         assert!(from_json(text).is_err());
+    }
+
+    #[test]
+    fn pre_refactor_artifact_without_reductions_loads() {
+        let text = r#"{"cluster":"x","n_ranks":2,"entries":[
+            {"max_bytes":4,"won_at_ns":1,"algorithm":{"family":"chain"}}]}"#;
+        let t = from_json(text).unwrap();
+        assert_eq!(t.entries.len(), 1);
+        assert!(t.reductions.is_empty());
     }
 }

@@ -1,11 +1,12 @@
-//! Runtime selection: "MV2-GDR-Opt".
+//! Runtime selection: "MV2-GDR-Opt", generalized per collective.
 //!
 //! A [`Selector`] owns a tuned table (built offline by [`super::sweep`]
 //! or loaded from an artifact) and answers "which algorithm for this
-//! message?" on the hot path — the role MVAPICH2-GDR's enhanced tuning
-//! framework plays at `MPI_Bcast` call time.
+//! (collective, message)?" on the hot path — the role MVAPICH2-GDR's
+//! enhanced tuning framework plays at `MPI_Bcast` call time, extended to
+//! the reduction collectives modern training workloads issue.
 
-use crate::collectives::{self, Algorithm, BcastPlan, BcastSpec};
+use crate::collectives::{self, Algorithm, CollectiveKind, CollectivePlan, CollectiveSpec};
 use crate::comm::Comm;
 use crate::netsim::Engine;
 use crate::topology::Cluster;
@@ -13,14 +14,15 @@ use crate::topology::Cluster;
 use super::sweep;
 use super::table::TuningTable;
 
-/// The tuned broadcast dispatcher.
+/// The tuned collective dispatcher.
 #[derive(Debug, Clone)]
 pub struct Selector {
     table: TuningTable,
 }
 
 impl Selector {
-    /// Tune for a cluster on the default size grid.
+    /// Tune for a cluster on the default size grid (all collective
+    /// kinds).
     pub fn tuned(cluster: &Cluster) -> Selector {
         Selector {
             table: sweep::tune(cluster, &sweep::default_sizes()),
@@ -36,25 +38,36 @@ impl Selector {
         &self.table
     }
 
-    /// The algorithm MV2-GDR-Opt uses for this message size.
+    /// The broadcast algorithm MV2-GDR-Opt uses for this message size.
     pub fn algorithm(&self, bytes: u64) -> Algorithm {
         self.table.select(bytes)
     }
 
-    /// Build the tuned broadcast plan.
-    pub fn plan(&self, comm: &mut Comm, spec: &BcastSpec) -> BcastPlan {
-        collectives::plan(&self.algorithm(spec.bytes), comm, spec)
+    /// The tuned algorithm for any (collective kind, message size).
+    pub fn algorithm_for(&self, kind: CollectiveKind, bytes: u64) -> Algorithm {
+        self.table.select_for(kind, bytes)
     }
 
-    /// Simulated tuned-broadcast latency, ns.
-    pub fn latency_ns(&self, comm: &mut Comm, engine: &mut Engine, spec: &BcastSpec) -> u64 {
-        collectives::latency_ns(&self.algorithm(spec.bytes), comm, engine, spec)
+    /// Build the tuned plan for the spec's collective kind.
+    pub fn plan(&self, comm: &mut Comm, spec: &CollectiveSpec) -> CollectivePlan {
+        collectives::plan(&self.algorithm_for(spec.kind, spec.bytes), comm, spec)
+    }
+
+    /// Simulated tuned-collective latency, ns.
+    pub fn latency_ns(&self, comm: &mut Comm, engine: &mut Engine, spec: &CollectiveSpec) -> u64 {
+        collectives::latency_ns(
+            &self.algorithm_for(spec.kind, spec.bytes),
+            comm,
+            engine,
+            spec,
+        )
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::collectives::BcastSpec;
     use crate::topology::presets::kesch;
 
     #[test]
@@ -85,6 +98,30 @@ mod tests {
                 tuned <= binomial,
                 "tuned {tuned} vs binomial {binomial} at {bytes}B"
             );
+        }
+    }
+
+    #[test]
+    fn tuned_allreduce_never_loses_to_fixed_candidates() {
+        let cluster = kesch(1, 8);
+        let sel = Selector::tuned(&cluster);
+        let mut comm = Comm::new(&cluster);
+        let mut engine = Engine::new(&cluster);
+        for bytes in [4u64, 64 << 10, 8 << 20, 64 << 20] {
+            let spec = CollectiveSpec::allreduce(8, bytes);
+            let tuned = sel.latency_ns(&mut comm, &mut engine, &spec);
+            for algo in [
+                Algorithm::RingAllreduce,
+                Algorithm::TreeAllreduce { k: 2 },
+                Algorithm::TreeAllreduce { k: 4 },
+            ] {
+                let fixed = collectives::latency_ns(&algo, &mut comm, &mut engine, &spec);
+                assert!(
+                    tuned <= fixed,
+                    "tuned {tuned} lost to {} {fixed} at {bytes}B",
+                    algo.name()
+                );
+            }
         }
     }
 }

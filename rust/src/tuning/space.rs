@@ -1,6 +1,6 @@
-//! The candidate space the tuner sweeps.
+//! The candidate space the tuner sweeps, per collective kind.
 
-use crate::collectives::Algorithm;
+use crate::collectives::{Algorithm, CollectiveKind};
 
 /// Chunk sizes tried for the pipelined chain (powers of two, 64 KB–8 MB —
 //  the range MVAPICH2's tuning infrastructure explores).
@@ -23,8 +23,9 @@ pub fn chunk_candidates() -> Vec<u64> {
 /// load of training schedules), so MV2 only stages small messages.
 pub const STAGING_MAX_BYTES: u64 = 32 << 10;
 
-/// All candidate algorithms for a given message size (pruning obviously
-/// hopeless candidates keeps sweeps fast without changing winners).
+/// All candidate broadcast algorithms for a given message size (pruning
+/// obviously hopeless candidates keeps sweeps fast without changing
+/// winners).
 pub fn candidates(bytes: u64) -> Vec<Algorithm> {
     let mut out = vec![
         Algorithm::Knomial { k: 2 },
@@ -45,6 +46,21 @@ pub fn candidates(bytes: u64) -> Vec<Algorithm> {
         }
     }
     out
+}
+
+/// All candidates for a (collective kind, message size).
+pub fn candidates_for(kind: CollectiveKind, bytes: u64) -> Vec<Algorithm> {
+    match kind {
+        CollectiveKind::Broadcast => candidates(bytes),
+        CollectiveKind::ReduceScatter => vec![Algorithm::RingReduceScatter],
+        CollectiveKind::Allgather => vec![Algorithm::RingAllgather],
+        CollectiveKind::Allreduce => vec![
+            Algorithm::RingAllreduce,
+            Algorithm::TreeAllreduce { k: 2 },
+            Algorithm::TreeAllreduce { k: 4 },
+            Algorithm::TreeAllreduce { k: 8 },
+        ],
+    }
 }
 
 #[cfg(test)]
@@ -75,6 +91,19 @@ mod tests {
         let cs = chunk_candidates();
         for w in cs.windows(2) {
             assert_eq!(w[1], w[0] * 2);
+        }
+    }
+
+    #[test]
+    fn per_kind_candidates_implement_their_kind() {
+        for kind in CollectiveKind::ALL {
+            for bytes in [4u64, 64 << 10, 64 << 20] {
+                let cands = candidates_for(kind, bytes);
+                assert!(!cands.is_empty());
+                for algo in cands {
+                    assert_eq!(algo.kind(), kind, "{}", algo.name());
+                }
+            }
         }
     }
 }

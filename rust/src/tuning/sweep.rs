@@ -1,6 +1,7 @@
-//! Offline tuning sweeps: run every candidate on the simulator.
+//! Offline tuning sweeps: run every candidate on the simulator, per
+//! collective kind.
 
-use crate::collectives::{self, Algorithm, BcastSpec};
+use crate::collectives::{self, Algorithm, CollectiveKind, CollectiveSpec};
 use crate::comm::Comm;
 use crate::netsim::Engine;
 use crate::topology::Cluster;
@@ -8,9 +9,10 @@ use crate::topology::Cluster;
 use super::space;
 use super::table::{TableEntry, TuningTable};
 
-/// Result of sweeping one message size.
+/// Result of sweeping one (collective kind, message size).
 #[derive(Debug, Clone)]
 pub struct SweepPoint {
+    pub kind: CollectiveKind,
     pub bytes: u64,
     pub winner: Algorithm,
     pub winner_ns: u64,
@@ -18,13 +20,18 @@ pub struct SweepPoint {
     pub all: Vec<(Algorithm, u64)>,
 }
 
-/// Sweep all candidates at one size.
-pub fn sweep_size(cluster: &Cluster, bytes: u64, root: usize) -> SweepPoint {
+/// Sweep all candidates of one kind at one size.
+pub fn sweep_size_for(
+    cluster: &Cluster,
+    kind: CollectiveKind,
+    bytes: u64,
+    root: usize,
+) -> SweepPoint {
     let n = cluster.n_gpus();
-    let spec = BcastSpec::new(root, n, bytes);
+    let spec = CollectiveSpec::collective(kind, root, n, bytes);
     let mut comm = Comm::new(cluster);
     let mut engine = Engine::new(cluster);
-    let mut all: Vec<(Algorithm, u64)> = space::candidates(bytes)
+    let mut all: Vec<(Algorithm, u64)> = space::candidates_for(kind, bytes)
         .into_iter()
         .map(|algo| {
             let t = collectives::latency_ns(&algo, &mut comm, &mut engine, &spec);
@@ -34,6 +41,7 @@ pub fn sweep_size(cluster: &Cluster, bytes: u64, root: usize) -> SweepPoint {
     all.sort_by_key(|&(_, t)| t);
     let (winner, winner_ns) = all[0];
     SweepPoint {
+        kind,
         bytes,
         winner,
         winner_ns,
@@ -41,33 +49,31 @@ pub fn sweep_size(cluster: &Cluster, bytes: u64, root: usize) -> SweepPoint {
     }
 }
 
-/// Build a tuned table by sweeping a size grid.
+/// Sweep all broadcast candidates at one size (the original entry point).
+pub fn sweep_size(cluster: &Cluster, bytes: u64, root: usize) -> SweepPoint {
+    sweep_size_for(cluster, CollectiveKind::Broadcast, bytes, root)
+}
+
+/// Build a tuned table for every collective kind by sweeping a size grid.
 pub fn tune(cluster: &Cluster, sizes: &[u64]) -> TuningTable {
-    let mut table = TuningTable {
-        cluster: cluster.name.clone(),
-        n_ranks: cluster.n_gpus(),
-        entries: Vec::new(),
-    };
-    for (i, &bytes) in sizes.iter().enumerate() {
-        let point = sweep_size(cluster, bytes, 0);
-        let max_bytes = if i + 1 == sizes.len() {
-            u64::MAX
-        } else {
-            bytes
-        };
-        // merge adjacent buckets won by the same algorithm
-        if let Some(last) = table.entries.last_mut() {
-            if last.algorithm == point.winner {
-                last.max_bytes = max_bytes;
-                last.won_at_ns = point.winner_ns;
-                continue;
-            }
+    let mut table = TuningTable::new(cluster.name.clone(), cluster.n_gpus());
+    for kind in CollectiveKind::ALL {
+        for (i, &bytes) in sizes.iter().enumerate() {
+            let point = sweep_size_for(cluster, kind, bytes, 0);
+            let max_bytes = if i + 1 == sizes.len() {
+                u64::MAX
+            } else {
+                bytes
+            };
+            table.push_bucket(
+                kind,
+                TableEntry {
+                    max_bytes,
+                    algorithm: point.winner,
+                    won_at_ns: point.winner_ns,
+                },
+            );
         }
-        table.entries.push(TableEntry {
-            max_bytes,
-            algorithm: point.winner,
-            won_at_ns: point.winner_ns,
-        });
     }
     table
 }
@@ -124,5 +130,34 @@ mod tests {
             );
         }
         assert_eq!(table.entries.last().unwrap().max_bytes, u64::MAX);
+    }
+
+    #[test]
+    fn allreduce_table_tree_small_ring_large() {
+        let cluster = kesch(1, 16);
+        let table = tune(&cluster, &[4, 8 << 10, 1 << 20, 32 << 20, 128 << 20]);
+        assert!(
+            matches!(
+                table.select_for(CollectiveKind::Allreduce, 4),
+                Algorithm::TreeAllreduce { .. }
+            ),
+            "small allreduce winner: {}",
+            table.select_for(CollectiveKind::Allreduce, 4).name()
+        );
+        assert_eq!(
+            table.select_for(CollectiveKind::Allreduce, 128 << 20),
+            Algorithm::RingAllreduce,
+            "large allreduce winner: {}",
+            table.select_for(CollectiveKind::Allreduce, 128 << 20).name()
+        );
+        // single-candidate kinds still get tuned entries
+        assert_eq!(
+            table.select_for(CollectiveKind::ReduceScatter, 1 << 20),
+            Algorithm::RingReduceScatter
+        );
+        assert_eq!(
+            table.select_for(CollectiveKind::Allgather, 1 << 20),
+            Algorithm::RingAllgather
+        );
     }
 }

@@ -1,6 +1,9 @@
-//! The dispatch table: message-size buckets → winning algorithm.
+//! The dispatch table: (collective kind, message-size bucket) → winning
+//! algorithm.
 
-use crate::collectives::Algorithm;
+use std::collections::BTreeMap;
+
+use crate::collectives::{Algorithm, CollectiveKind};
 
 /// One tuned entry.
 #[derive(Debug, Clone, PartialEq)]
@@ -12,49 +15,117 @@ pub struct TableEntry {
     pub won_at_ns: u64,
 }
 
-/// A tuned dispatch table for one (cluster shape, rank count).
+/// A tuned dispatch table for one (cluster shape, rank count), keyed by
+/// collective kind and message size.
 #[derive(Debug, Clone, Default)]
 pub struct TuningTable {
     /// Identifies the topology the table was tuned for.
     pub cluster: String,
     pub n_ranks: usize,
-    /// Entries sorted by `max_bytes` ascending; the last entry also
-    /// covers everything above it.
+    /// Broadcast entries (the paper's original table), sorted by
+    /// `max_bytes` ascending; the last entry also covers everything
+    /// above it.
     pub entries: Vec<TableEntry>,
+    /// Entries for the reduction collectives, same bucket layout.
+    pub reductions: BTreeMap<CollectiveKind, Vec<TableEntry>>,
 }
 
 impl TuningTable {
-    /// Look up the algorithm for a message size.
-    pub fn select(&self, bytes: u64) -> Algorithm {
-        for e in &self.entries {
+    pub fn new(cluster: impl Into<String>, n_ranks: usize) -> TuningTable {
+        TuningTable {
+            cluster: cluster.into(),
+            n_ranks,
+            entries: Vec::new(),
+            reductions: BTreeMap::new(),
+        }
+    }
+
+    /// When a kind has no tuned entries, fall back to its sane default.
+    fn fallback(kind: CollectiveKind) -> Algorithm {
+        match kind {
+            CollectiveKind::Broadcast => Algorithm::Knomial { k: 2 },
+            CollectiveKind::ReduceScatter => Algorithm::RingReduceScatter,
+            CollectiveKind::Allgather => Algorithm::RingAllgather,
+            CollectiveKind::Allreduce => Algorithm::RingAllreduce,
+        }
+    }
+
+    /// The entry list for a kind (empty slice when never tuned).
+    pub fn entries_for(&self, kind: CollectiveKind) -> &[TableEntry] {
+        match kind {
+            CollectiveKind::Broadcast => &self.entries,
+            _ => self
+                .reductions
+                .get(&kind)
+                .map(Vec::as_slice)
+                .unwrap_or(&[]),
+        }
+    }
+
+    fn entries_mut(&mut self, kind: CollectiveKind) -> &mut Vec<TableEntry> {
+        match kind {
+            CollectiveKind::Broadcast => &mut self.entries,
+            _ => self.reductions.entry(kind).or_default(),
+        }
+    }
+
+    /// Look up the algorithm for a (collective kind, message size).
+    pub fn select_for(&self, kind: CollectiveKind, bytes: u64) -> Algorithm {
+        let entries = self.entries_for(kind);
+        for e in entries {
             if bytes <= e.max_bytes {
                 return e.algorithm;
             }
         }
-        self.entries
+        entries
             .last()
             .map(|e| e.algorithm)
-            .unwrap_or(Algorithm::Knomial { k: 2 })
+            .unwrap_or_else(|| Self::fallback(kind))
     }
 
-    /// Insert an entry keeping the size order.
+    /// Look up the broadcast algorithm for a message size (the original
+    /// single-collective entry point).
+    pub fn select(&self, bytes: u64) -> Algorithm {
+        self.select_for(CollectiveKind::Broadcast, bytes)
+    }
+
+    /// Insert a broadcast entry keeping the size order.
     pub fn insert(&mut self, entry: TableEntry) {
-        let pos = self
-            .entries
+        self.insert_for(CollectiveKind::Broadcast, entry);
+    }
+
+    /// Insert an entry for a kind keeping the size order.
+    pub fn insert_for(&mut self, kind: CollectiveKind, entry: TableEntry) {
+        let entries = self.entries_mut(kind);
+        let pos = entries
             .binary_search_by_key(&entry.max_bytes, |e| e.max_bytes)
             .unwrap_or_else(|p| p);
-        self.entries.insert(pos, entry);
+        entries.insert(pos, entry);
     }
 
-    /// Human-readable rendering (the paper's "tuned version" story).
-    pub fn render(&self) -> String {
+    /// Append a sweep bucket in ascending-size order, merging it into the
+    /// previous bucket when the same algorithm won both.
+    pub fn push_bucket(&mut self, kind: CollectiveKind, entry: TableEntry) {
+        let entries = self.entries_mut(kind);
+        if let Some(last) = entries.last_mut() {
+            if last.algorithm == entry.algorithm {
+                last.max_bytes = entry.max_bytes;
+                last.won_at_ns = entry.won_at_ns;
+                return;
+            }
+        }
+        entries.push(entry);
+    }
+
+    fn render_kind(&self, kind: CollectiveKind) -> String {
         use crate::util::tablefmt::Table;
-        let mut t = Table::new(&["<= size", "algorithm", "latency (us)"])
-            .with_title(format!(
-                "tuning table: {} ({} ranks)",
-                self.cluster, self.n_ranks
-            ));
-        for e in &self.entries {
+        let mut t = Table::new(&["<= size", "algorithm", "latency (us)"]).with_title(format!(
+            "tuning table: {} ({} ranks, {})",
+            self.cluster,
+            self.n_ranks,
+            kind.name()
+        ));
+        for e in self.entries_for(kind) {
             let size = if e.max_bytes == u64::MAX {
                 "max".to_string()
             } else {
@@ -68,6 +139,19 @@ impl TuningTable {
         }
         t.render()
     }
+
+    /// Human-readable rendering (the paper's "tuned version" story),
+    /// one section per tuned collective kind.
+    pub fn render(&self) -> String {
+        let mut out = self.render_kind(CollectiveKind::Broadcast);
+        for (&kind, entries) in &self.reductions {
+            if !entries.is_empty() {
+                out.push('\n');
+                out.push_str(&self.render_kind(kind));
+            }
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -75,11 +159,7 @@ mod tests {
     use super::*;
 
     fn table() -> TuningTable {
-        let mut t = TuningTable {
-            cluster: "test".into(),
-            n_ranks: 8,
-            entries: Vec::new(),
-        };
+        let mut t = TuningTable::new("test", 8);
         t.insert(TableEntry {
             max_bytes: 8 << 10,
             algorithm: Algorithm::HostStagedKnomial { k: 2 },
@@ -114,6 +194,18 @@ mod tests {
     fn empty_table_falls_back() {
         let t = TuningTable::default();
         assert_eq!(t.select(4), Algorithm::Knomial { k: 2 });
+        assert_eq!(
+            t.select_for(CollectiveKind::Allreduce, 4),
+            Algorithm::RingAllreduce
+        );
+        assert_eq!(
+            t.select_for(CollectiveKind::ReduceScatter, 4),
+            Algorithm::RingReduceScatter
+        );
+        assert_eq!(
+            t.select_for(CollectiveKind::Allgather, 4),
+            Algorithm::RingAllgather
+        );
     }
 
     #[test]
@@ -121,5 +213,61 @@ mod tests {
         let s = table().render();
         assert!(s.contains("host-staged-knomial"));
         assert!(s.contains("pipelined-chain"));
+    }
+
+    #[test]
+    fn per_kind_entries_are_independent() {
+        let mut t = table();
+        t.insert_for(
+            CollectiveKind::Allreduce,
+            TableEntry {
+                max_bytes: 64 << 10,
+                algorithm: Algorithm::TreeAllreduce { k: 2 },
+                won_at_ns: 9_000,
+            },
+        );
+        t.insert_for(
+            CollectiveKind::Allreduce,
+            TableEntry {
+                max_bytes: u64::MAX,
+                algorithm: Algorithm::RingAllreduce,
+                won_at_ns: 30_000_000,
+            },
+        );
+        assert_eq!(
+            t.select_for(CollectiveKind::Allreduce, 4),
+            Algorithm::TreeAllreduce { k: 2 }
+        );
+        assert_eq!(
+            t.select_for(CollectiveKind::Allreduce, 16 << 20),
+            Algorithm::RingAllreduce
+        );
+        // broadcast lookups are untouched
+        assert_eq!(t.select(4), Algorithm::HostStagedKnomial { k: 2 });
+        let s = t.render();
+        assert!(s.contains("allreduce"));
+        assert!(s.contains("tree-allreduce"));
+    }
+
+    #[test]
+    fn push_bucket_merges_adjacent_same_winner() {
+        let mut t = TuningTable::new("x", 4);
+        for (max_bytes, algo) in [
+            (1 << 10, Algorithm::RingAllreduce),
+            (1 << 20, Algorithm::RingAllreduce),
+            (u64::MAX, Algorithm::TreeAllreduce { k: 2 }),
+        ] {
+            t.push_bucket(
+                CollectiveKind::Allreduce,
+                TableEntry {
+                    max_bytes,
+                    algorithm: algo,
+                    won_at_ns: 1,
+                },
+            );
+        }
+        let entries = t.entries_for(CollectiveKind::Allreduce);
+        assert_eq!(entries.len(), 2);
+        assert_eq!(entries[0].max_bytes, 1 << 20);
     }
 }

@@ -101,6 +101,21 @@ impl Args {
         Ok(self.opt_parse(name)?.unwrap_or(default))
     }
 
+    /// Parse an option constrained to a fixed set of choices, with a
+    /// default when absent (e.g. `--exchange bcast|allreduce|compare`).
+    pub fn opt_choice(&mut self, name: &str, choices: &[&str], default: &str) -> Result<String> {
+        debug_assert!(choices.contains(&default));
+        let raw = self.opt(name).unwrap_or_else(|| default.to_string());
+        if choices.iter().any(|c| *c == raw) {
+            Ok(raw)
+        } else {
+            Err(Error::Usage(format!(
+                "{name} must be one of {}, got '{raw}'",
+                choices.join("|")
+            )))
+        }
+    }
+
     /// Comma-separated list option, e.g. `--gpus 2,4,8,16`.
     pub fn opt_list<T: FromStr>(&mut self, name: &str) -> Result<Option<Vec<T>>> {
         match self.opt(name) {
@@ -179,6 +194,24 @@ mod tests {
             a.opt_list::<usize>("--gpus").unwrap().unwrap(),
             vec![2, 4, 8, 16]
         );
+    }
+
+    #[test]
+    fn choice_option() {
+        let mut a = Args::new(argv("--exchange allreduce"));
+        assert_eq!(
+            a.opt_choice("--exchange", &["bcast", "allreduce"], "bcast")
+                .unwrap(),
+            "allreduce"
+        );
+        let mut b = Args::new(argv(""));
+        assert_eq!(
+            b.opt_choice("--exchange", &["bcast", "allreduce"], "bcast")
+                .unwrap(),
+            "bcast"
+        );
+        let mut c = Args::new(argv("--exchange bogus"));
+        assert!(c.opt_choice("--exchange", &["bcast", "allreduce"], "bcast").is_err());
     }
 
     #[test]

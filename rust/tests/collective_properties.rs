@@ -1,7 +1,13 @@
-//! Property tests: broadcast invariants over random topologies, roots,
+//! Property tests: collective invariants over random topologies, roots,
 //! sizes, chunk sizes and algorithms (the prop harness shrinks failures).
+//! Broadcasts must deliver every chunk to every rank causally exactly
+//! once; reduction collectives must end with every rank's buffer
+//! reflecting all n contributions exactly once (checked by the
+//! generalized dataflow validator).
 
-use gdrbcast::collectives::{self, validate::check_algorithm, Algorithm, BcastSpec};
+use gdrbcast::collectives::{
+    self, validate::check_algorithm, Algorithm, BcastSpec, CollectiveKind, CollectiveSpec,
+};
 use gdrbcast::comm::Comm;
 use gdrbcast::netsim::Engine;
 use gdrbcast::topology::{presets, Cluster};
@@ -190,6 +196,111 @@ fn prop_deterministic() {
                 Ok(())
             } else {
                 Err(format!("{a} != {b}"))
+            }
+        },
+        shrink_case,
+    );
+}
+
+/// The reduction algorithm a case maps to, honouring each kind's menu.
+fn reduction_algo_of(case: &Case) -> (Algorithm, CollectiveKind) {
+    match case.algo_idx % 4 {
+        0 => (Algorithm::RingReduceScatter, CollectiveKind::ReduceScatter),
+        1 => (Algorithm::RingAllgather, CollectiveKind::Allgather),
+        2 => (Algorithm::RingAllreduce, CollectiveKind::Allreduce),
+        _ => (
+            Algorithm::TreeAllreduce {
+                k: case.k.clamp(2, 8),
+            },
+            CollectiveKind::Allreduce,
+        ),
+    }
+}
+
+/// Every reduction collective, on every topology, leaves every required
+/// final buffer reflecting all n contributions exactly once — across
+/// random roots, rank counts and (chunk-inducing) message sizes.
+#[test]
+fn prop_reductions_all_contributions_exactly_once() {
+    check(
+        Config::default().cases(120),
+        "reduction-dataflow",
+        gen_case,
+        |case| {
+            let cluster = cluster_of(case);
+            let n = cluster.n_gpus();
+            let (algo, kind) = reduction_algo_of(case);
+            let spec = CollectiveSpec::collective(kind, case.root % n, n, case.bytes);
+            let mut comm = Comm::new(&cluster);
+            let mut engine = Engine::new(&cluster);
+            check_algorithm(&algo, &mut comm, &mut engine, &spec).map(|_| ())
+        },
+        shrink_case,
+    );
+}
+
+/// Reduction latency is non-decreasing in message size.
+#[test]
+fn prop_reduction_latency_monotone_in_size() {
+    check(
+        Config::default().cases(60),
+        "reduction-latency-monotone",
+        gen_case,
+        |case| {
+            let cluster = cluster_of(case);
+            let n = cluster.n_gpus();
+            let (algo, kind) = reduction_algo_of(case);
+            let mut comm = Comm::new(&cluster);
+            let mut engine = Engine::new(&cluster);
+            let small = collectives::latency_ns(
+                &algo,
+                &mut comm,
+                &mut engine,
+                &CollectiveSpec::collective(kind, case.root % n, n, case.bytes / 2),
+            );
+            let large = collectives::latency_ns(
+                &algo,
+                &mut comm,
+                &mut engine,
+                &CollectiveSpec::collective(kind, case.root % n, n, case.bytes),
+            );
+            if small <= large {
+                Ok(())
+            } else {
+                Err(format!("{small} > {large} for {}", algo.name()))
+            }
+        },
+        shrink_case,
+    );
+}
+
+/// Ring allreduce moves exactly 2·(n−1)/n × M per rank: its total
+/// traffic is 2·(n−1)·M-ish (segment rounding aside) — the
+/// bandwidth-optimality the modern gradient exchange is built on.
+#[test]
+fn prop_ring_allreduce_traffic_bandwidth_optimal() {
+    check(
+        Config::default().cases(60),
+        "ring-allreduce-traffic",
+        gen_case,
+        |case| {
+            let cluster = cluster_of(case);
+            let n = cluster.n_gpus();
+            if n < 2 {
+                return Ok(());
+            }
+            let bytes = case.bytes.max(n as u64);
+            let spec = CollectiveSpec::allreduce(n, bytes);
+            let mut comm = Comm::new(&cluster);
+            let bp = collectives::plan(&Algorithm::RingAllreduce, &mut comm, &spec);
+            let total = bp.plan.total_bytes();
+            let expect = 2 * (n as u64 - 1) * bytes;
+            // staged hops double-count their relay leg; rounding loses at
+            // most n bytes — accept [expect - n, 2×expect]
+            if total + n as u64 >= expect && total <= 2 * expect {
+                Ok(())
+            } else {
+                Err(format!("moved {total} bytes, expected ~{expect} (n={n}, M={bytes})"))
             }
         },
         shrink_case,

@@ -2,11 +2,79 @@
 //! persistence, selection, and the "tuned never loses" guarantee that
 //! defines MV2-GDR-Opt.
 
-use gdrbcast::collectives::{self, Algorithm, BcastSpec};
+use gdrbcast::collectives::{self, Algorithm, BcastSpec, CollectiveKind, CollectiveSpec};
 use gdrbcast::comm::Comm;
 use gdrbcast::netsim::Engine;
 use gdrbcast::topology::presets;
 use gdrbcast::tuning::{persist, space, sweep, Selector};
+
+#[test]
+fn selector_answers_per_collective_queries() {
+    // the refactor's acceptance bar: one Selector serves tuned picks for
+    // both the broadcast family and the reduction families
+    let cluster = presets::kesch(1, 16);
+    let sel = Selector::tuned(&cluster);
+    for kind in CollectiveKind::ALL {
+        for bytes in [4u64, 8 << 10, 1 << 20, 64 << 20] {
+            let algo = sel.algorithm_for(kind, bytes);
+            assert_eq!(algo.kind(), kind, "{} pick for {kind:?}", algo.name());
+        }
+    }
+    // structure: trees own the small end, the ring the large end
+    assert!(
+        matches!(
+            sel.algorithm_for(CollectiveKind::Allreduce, 4),
+            Algorithm::TreeAllreduce { .. }
+        ),
+        "small allreduce pick: {}",
+        sel.algorithm_for(CollectiveKind::Allreduce, 4).name()
+    );
+    assert_eq!(
+        sel.algorithm_for(CollectiveKind::Allreduce, 128 << 20),
+        Algorithm::RingAllreduce
+    );
+}
+
+#[test]
+fn reduction_tables_persist_with_the_broadcast_table() {
+    let cluster = presets::kesch(1, 8);
+    let sel = Selector::tuned(&cluster);
+    let dir = std::env::temp_dir().join("gdrbcast-tuning-reductions");
+    let path = dir.join("table.json");
+    persist::save(sel.table(), &path).unwrap();
+    let loaded = Selector::from_table(persist::load(&path).unwrap());
+    for kind in CollectiveKind::ALL {
+        for bytes in [4u64, 512 << 10, 64 << 20] {
+            assert_eq!(
+                sel.algorithm_for(kind, bytes),
+                loaded.algorithm_for(kind, bytes),
+                "selection diverged for {kind:?} at {bytes}B after persistence"
+            );
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn tuned_allreduce_beats_both_fixed_designs_across_the_grid() {
+    let cluster = presets::kesch(1, 8);
+    let sel = Selector::tuned(&cluster);
+    let mut comm = Comm::new(&cluster);
+    let mut engine = Engine::new(&cluster);
+    for bytes in sweep::default_sizes() {
+        let spec = CollectiveSpec::allreduce(8, bytes);
+        let tuned = sel.latency_ns(&mut comm, &mut engine, &spec);
+        for algo in space::candidates_for(CollectiveKind::Allreduce, bytes) {
+            let fixed = collectives::latency_ns(&algo, &mut comm, &mut engine, &spec);
+            assert!(
+                tuned <= fixed,
+                "at {bytes}B tuned allreduce ({}) {tuned} lost to {} {fixed}",
+                sel.algorithm_for(CollectiveKind::Allreduce, bytes).name(),
+                algo.name()
+            );
+        }
+    }
+}
 
 #[test]
 fn tuned_beats_every_fixed_algorithm_on_the_grid() {
