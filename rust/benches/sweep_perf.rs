@@ -1,0 +1,125 @@
+//! Sweep-scale performance benchmark: plan-build throughput, engine
+//! execute throughput, and full `tune()` wall time at 16/64/128-GPU
+//! presets — the numbers DESIGN.md §Perf tracks from PR 2 onward.
+//!
+//! Emits `target/reports/BENCH_sweep.json` in the standard report shape
+//! (an array of `{name, mean_ns, std_dev_ns, p50_ns, p99_ns, iters,
+//! samples}` rows; one-shot wall-time measurements appear as single-
+//! sample rows, and derived throughputs as `*_ops_per_sec` rows).
+//!
+//! `cargo bench --bench sweep_perf`
+//! `SWEEP_PERF_SMOKE=1 cargo bench --bench sweep_perf`  (CI smoke mode)
+
+use std::time::Instant;
+
+use gdrbcast::bench::harness::Bencher;
+use gdrbcast::collectives::{self, Algorithm, BcastSpec};
+use gdrbcast::comm::Comm;
+use gdrbcast::netsim::Engine;
+use gdrbcast::topology::presets;
+use gdrbcast::tuning::{persist, sweep};
+use gdrbcast::util::json::Json;
+
+/// A one-shot wall-time row in the standard report shape.
+fn wall_row(name: &str, ns: f64) -> Json {
+    let mut j = Json::obj();
+    j.set("name", name)
+        .set("mean_ns", ns)
+        .set("std_dev_ns", 0.0)
+        .set("p50_ns", ns)
+        .set("p99_ns", ns)
+        .set("iters", 1u64)
+        .set("samples", 1u64);
+    j
+}
+
+fn main() {
+    let smoke = std::env::var("SWEEP_PERF_SMOKE").is_ok();
+    let mut bencher = if smoke {
+        Bencher::quick()
+    } else {
+        Bencher::new()
+    };
+    let mut rows: Vec<Json> = Vec::new();
+
+    // ---- plan-build / engine-execute throughput at 16/64/128 GPUs ------
+    for &(nodes, gpn) in &[(1usize, 16usize), (4, 16), (8, 16)] {
+        let gpus = nodes * gpn;
+        let cluster = presets::kesch(nodes, gpn);
+        let mut comm = Comm::new(&cluster);
+        let bytes: u64 = if smoke { 8 << 20 } else { 64 << 20 };
+        let spec = BcastSpec::new(0, gpus, bytes);
+        let algo = Algorithm::PipelinedChain { chunk: 512 << 10 };
+        let bp = collectives::plan(&algo, &mut comm, &spec);
+        let n_ops = bp.plan.len();
+        println!("-- kesch({nodes}x{gpn}) = {gpus} GPUs, plan of {n_ops} ops --");
+
+        let r = bencher.bench(&format!("plan/pipelined-chain/{gpus}gpus"), || {
+            collectives::plan(&algo, &mut comm, &spec).plan.len()
+        });
+        let build_ops_per_sec = n_ops as f64 / (r.per_iter.mean / 1e9);
+        println!("  plan build: {:.2}M ops/s", build_ops_per_sec / 1e6);
+        rows.push(wall_row(
+            &format!("plan/{gpus}gpus_ops_per_sec"),
+            build_ops_per_sec,
+        ));
+
+        let mut engine = Engine::new(&cluster);
+        let r = bencher.bench(&format!("execute/pipelined-chain/{gpus}gpus"), || {
+            engine.makespan_ns(&bp.plan)
+        });
+        let exec_ops_per_sec = n_ops as f64 / (r.per_iter.mean / 1e9);
+        println!("  engine execute: {:.2}M ops/s", exec_ops_per_sec / 1e6);
+        rows.push(wall_row(
+            &format!("execute/{gpus}gpus_ops_per_sec"),
+            exec_ops_per_sec,
+        ));
+    }
+
+    // ---- full tune() wall time: parallel vs the serial reference -------
+    // kesch(2, 8) is the acceptance-criteria preset; smoke mode shrinks
+    // the size grid but keeps the shape.
+    let sizes = if smoke {
+        vec![4u64, 64 << 10, 1 << 20, 16 << 20]
+    } else {
+        sweep::default_sizes()
+    };
+    let tune_presets: &[(usize, usize)] = if smoke {
+        &[(2, 8)]
+    } else {
+        &[(1, 16), (2, 8), (4, 16), (8, 16)]
+    };
+    for &(nodes, gpn) in tune_presets {
+        let gpus = nodes * gpn;
+        let cluster = presets::kesch(nodes, gpn);
+
+        let t0 = Instant::now();
+        let par = sweep::tune(&cluster, &sizes);
+        let par_ns = t0.elapsed().as_nanos() as f64;
+
+        let t0 = Instant::now();
+        let ser = sweep::tune_serial(&cluster, &sizes);
+        let ser_ns = t0.elapsed().as_nanos() as f64;
+
+        assert_eq!(
+            persist::to_json(&par),
+            persist::to_json(&ser),
+            "parallel tune diverged from serial at {gpus} GPUs"
+        );
+        println!(
+            "tune kesch({nodes}x{gpn}) over {} sizes: parallel {:.2}s, serial {:.2}s ({:.2}x)",
+            sizes.len(),
+            par_ns / 1e9,
+            ser_ns / 1e9,
+            ser_ns / par_ns
+        );
+        rows.push(wall_row(&format!("tune/parallel/{gpus}gpus_wall"), par_ns));
+        rows.push(wall_row(&format!("tune/serial/{gpus}gpus_wall"), ser_ns));
+    }
+
+    // ---- write BENCH_sweep.json (bencher rows + wall rows) -------------
+    let path = bencher
+        .write_report_with("BENCH_sweep", rows)
+        .expect("write report");
+    println!("report: {}", path.display());
+}

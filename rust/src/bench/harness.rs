@@ -6,6 +6,7 @@
 
 use std::time::{Duration, Instant};
 
+use crate::util::json::Json;
 use crate::util::stats::Summary;
 
 /// One benchmark's outcome.
@@ -108,7 +109,16 @@ impl Bencher {
 
     /// Dump all results as JSON into `target/reports/<name>.json`.
     pub fn write_report(&self, report_name: &str) -> std::io::Result<std::path::PathBuf> {
-        use crate::util::json::Json;
+        self.write_report_with(report_name, Vec::new())
+    }
+
+    /// Like [`Self::write_report`], appending caller-built rows in the
+    /// same shape (e.g. `sweep_perf`'s one-shot wall-time measurements).
+    pub fn write_report_with(
+        &self,
+        report_name: &str,
+        extra_rows: Vec<Json>,
+    ) -> std::io::Result<std::path::PathBuf> {
         let mut arr = Vec::new();
         for r in &self.results {
             let mut j = Json::obj();
@@ -121,6 +131,7 @@ impl Bencher {
                 .set("samples", r.samples);
             arr.push(j);
         }
+        arr.extend(extra_rows);
         let dir = std::path::Path::new("target/reports");
         std::fs::create_dir_all(dir)?;
         let path = dir.join(format!("{report_name}.json"));

@@ -8,7 +8,7 @@
 //! `T = (n−1) × (t_s + M/(nB))`
 
 use crate::comm::{chunk::equal_parts, Comm};
-use crate::netsim::OpId;
+use crate::netsim::{Deps, OpId};
 
 use super::traits::{CollectiveKind, CollectivePlan, CollectiveSpec, FlowEdge};
 
@@ -36,7 +36,7 @@ pub fn plan(comm: &mut Comm, spec: &CollectiveSpec) -> CollectivePlan {
             let c = (v + n - t) % n;
             let dst = (v + 1) % n;
             debug_assert!(own[v][c].is_some() || c == v, "rank {v} missing segment {c}");
-            let deps = own[v][c].map(|p| vec![p]).unwrap_or_default();
+            let deps = Deps::from_opt(own[v][c]);
             let op = comm.send(&mut plan, v, dst, parts[c], deps, Some((dst, c)));
             edges.push(FlowEdge::copy(v, dst, c, op));
             arrivals.push((dst, c, op));

@@ -17,7 +17,7 @@
 //! [`super::reduce_scatter`]).
 
 use crate::comm::{chunk::equal_parts, Comm};
-use crate::netsim::OpId;
+use crate::netsim::{Deps, OpId};
 
 use super::traits::{CollectiveKind, CollectivePlan, CollectiveSpec, FlowEdge};
 
@@ -48,7 +48,7 @@ pub fn ring(comm: &mut Comm, spec: &CollectiveSpec) -> CollectivePlan {
         for v in 0..n {
             let s = (v + n - t - 1) % n;
             let dst = (v + 1) % n;
-            let deps = acc[v][s].map(|p| vec![p]).unwrap_or_default();
+            let deps = Deps::from_opt(acc[v][s]);
             // the last hop delivers rank s its fully reduced segment
             let label = if t == n - 2 { Some((dst, s)) } else { None };
             let op = comm.send(&mut plan, v, dst, parts[s], deps, label);
@@ -72,7 +72,7 @@ pub fn ring(comm: &mut Comm, spec: &CollectiveSpec) -> CollectivePlan {
         for v in 0..n {
             let c = (v + n - t) % n;
             let dst = (v + 1) % n;
-            let deps = own[v][c].map(|p| vec![p]).unwrap_or_default();
+            let deps = Deps::from_opt(own[v][c]);
             let op = comm.send(&mut plan, v, dst, parts[c], deps, Some((dst, c)));
             edges.push(FlowEdge::copy(v, dst, c, op));
             arrivals.push((dst, c, op));
@@ -167,7 +167,8 @@ fn reduce_range(
         let src = spec.unlabel(start);
         let dst = spec.unlabel(lo);
         // the sub-head's partial is complete only after all its receives
-        let deps = acc[start].clone();
+        // (≤2 children inline, wider joins spill)
+        let deps = Deps::from_slice(&acc[start]);
         let op = comm.send(plan, src, dst, spec.bytes, deps, None);
         edges.push(FlowEdge::reduce(src, dst, 0, op));
         acc[lo].push(op);
@@ -195,7 +196,7 @@ fn bcast_range(
     for &(start, len) in ranges.iter().skip(1) {
         let src = spec.unlabel(lo);
         let dst = spec.unlabel(start);
-        let op = comm.send(plan, src, dst, spec.bytes, have.to_vec(), Some((dst, 0)));
+        let op = comm.send(plan, src, dst, spec.bytes, Deps::from_slice(have), Some((dst, 0)));
         edges.push(FlowEdge::copy(src, dst, 0, op));
         child_ops.push((start, len, op));
     }

@@ -4,6 +4,7 @@
 //! (paper, §III-A).
 
 use crate::comm::Comm;
+use crate::netsim::Deps;
 
 use super::traits::{BcastPlan, BcastSpec, FlowEdge};
 
@@ -15,7 +16,7 @@ pub fn plan(comm: &mut Comm, spec: &BcastSpec) -> BcastPlan {
         let src = spec.unlabel(v - 1);
         let dst = spec.unlabel(v);
         // store-and-forward: must hold the whole message before sending on
-        let deps = prev.map(|p| vec![p]).unwrap_or_default();
+        let deps = Deps::from_opt(prev);
         let op = comm.send(&mut plan, src, dst, spec.bytes, deps, Some((dst, 0)));
         edges.push(FlowEdge::copy(src, dst, 0, op));
         prev = Some(op);

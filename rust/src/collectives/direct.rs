@@ -3,6 +3,7 @@
 //! the paper models first.
 
 use crate::comm::Comm;
+use crate::netsim::Deps;
 
 use super::traits::{BcastPlan, BcastSpec, FlowEdge};
 
@@ -14,7 +15,7 @@ pub fn plan(comm: &mut Comm, spec: &BcastSpec) -> BcastPlan {
         let dst = spec.unlabel(v);
         // blocking MPI_Send loop: each send departs after the previous
         // completes
-        let deps = prev.map(|p| vec![p]).unwrap_or_default();
+        let deps = Deps::from_opt(prev);
         let op = comm.send(&mut plan, spec.root, dst, spec.bytes, deps, Some((dst, 0)));
         edges.push(FlowEdge::copy(spec.root, dst, 0, op));
         prev = Some(op);

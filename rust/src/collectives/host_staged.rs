@@ -12,7 +12,7 @@
 use std::collections::HashMap;
 
 use crate::comm::Comm;
-use crate::netsim::OpId;
+use crate::netsim::{Deps, OpId};
 use crate::topology::DeviceId;
 
 use super::traits::{BcastPlan, BcastSpec, FlowEdge};
@@ -72,7 +72,7 @@ pub fn plan(comm: &mut Comm, spec: &BcastSpec, k: usize) -> BcastPlan {
         root_host,
         spec.bytes,
         comm.params().staging_copy_overhead_ns,
-        vec![],
+        Deps::none(),
         None,
     );
 
@@ -97,7 +97,7 @@ pub fn plan(comm: &mut Comm, spec: &BcastSpec, k: usize) -> BcastPlan {
                 spec.bytes,
                 GDR_WRITE_TS_NS,
                 GDR_WRITE_ISSUE_NS,
-                vec![have_op],
+                Deps::one(have_op),
                 Some((r, 0)),
             );
             // attribute the rank-level edge to the nearest rank upstream:
@@ -151,7 +151,7 @@ fn knomial_hosts(
         };
         // serialization across the head's sends comes from its shared
         // egress link + creation order (see collectives::knomial)
-        let deps = have[lo].map(|p| vec![p]).unwrap_or_default();
+        let deps = Deps::from_opt(have[lo]);
         let op = comm.raw_transfer(plan, src, dst, bytes, ts, deps, None);
         have[start] = Some(op);
     }

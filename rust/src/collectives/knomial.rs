@@ -7,7 +7,7 @@
 //! sub-range (sequentially, as blocking sends do).
 
 use crate::comm::Comm;
-use crate::netsim::OpId;
+use crate::netsim::{Deps, OpId};
 
 use super::traits::{BcastPlan, BcastSpec, FlowEdge};
 
@@ -69,7 +69,7 @@ fn expand(
     for &(start, len) in starts.iter().skip(1) {
         let src = spec.unlabel(lo);
         let dst = spec.unlabel(start);
-        let deps = have.map(|p| vec![p]).unwrap_or_default();
+        let deps = Deps::from_opt(have);
         let op = comm.send(plan, src, dst, spec.bytes, deps, Some((dst, 0)));
         edges.push(FlowEdge::copy(src, dst, 0, op));
         child_ops.push((start, len, op));

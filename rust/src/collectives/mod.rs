@@ -69,7 +69,9 @@ pub fn plan(algo: &Algorithm, comm: &mut Comm, spec: &CollectiveSpec) -> Collect
     }
 }
 
-/// Simulated collective latency (max over rank completions), ns.
+/// Simulated collective latency (plan makespan), ns. Uses the engine's
+/// makespan-only execution path, so a tuning sweep's inner loop performs
+/// no per-op heap allocation (DESIGN.md §Perf).
 pub fn latency_ns(
     algo: &Algorithm,
     comm: &mut Comm,
@@ -77,6 +79,5 @@ pub fn latency_ns(
     spec: &CollectiveSpec,
 ) -> u64 {
     let bp = plan(algo, comm, spec);
-    let result = engine.execute(&bp.plan);
-    result.makespan
+    engine.makespan_ns(&bp.plan)
 }

@@ -14,7 +14,7 @@
 //! resolves per hop.
 
 use crate::comm::{chunk_sizes, Comm};
-use crate::netsim::OpId;
+use crate::netsim::{Deps, OpId};
 
 use super::traits::{BcastPlan, BcastSpec, FlowEdge};
 
@@ -31,10 +31,7 @@ pub fn plan(comm: &mut Comm, spec: &BcastSpec, chunk: u64) -> BcastPlan {
             let dst = spec.unlabel(v);
             // forward chunk c as soon as it arrived at v-1 (root always
             // has it); link FIFO order serialises chunks on the wire
-            let deps = match recv_op[v - 1][c] {
-                Some(op) => vec![op],
-                None => Vec::new(),
-            };
+            let deps = Deps::from_opt(recv_op[v - 1][c]);
             let op = comm.send(&mut plan, src, dst, cbytes, deps, Some((dst, c)));
             recv_op[v][c] = Some(op);
             edges.push(FlowEdge::copy(src, dst, c, op));

@@ -12,7 +12,7 @@
 //! than the fabric moves the operands.
 
 use crate::comm::{chunk::equal_parts, Comm};
-use crate::netsim::OpId;
+use crate::netsim::{Deps, OpId};
 
 use super::traits::{CollectiveKind, CollectivePlan, CollectiveSpec, FlowEdge};
 
@@ -41,7 +41,7 @@ pub fn plan(comm: &mut Comm, spec: &CollectiveSpec) -> CollectivePlan {
             // at step t rank v carries segment (v - t - 1) mod n
             let s = (v + n - t - 1) % n;
             let dst = (v + 1) % n;
-            let deps = acc[v][s].map(|p| vec![p]).unwrap_or_default();
+            let deps = Deps::from_opt(acc[v][s]);
             // only the last hop delivers the fully reduced segment
             let label = if t == n - 2 { Some((dst, s)) } else { None };
             let op = comm.send(&mut plan, v, dst, parts[s], deps, label);

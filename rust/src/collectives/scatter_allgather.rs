@@ -5,7 +5,7 @@
 //! `T = (⌈log₂ n⌉ + n − 1) × t_s + 2 × (n−1)/n × M/B`
 
 use crate::comm::{chunk::equal_parts, Comm};
-use crate::netsim::OpId;
+use crate::netsim::{Deps, OpId};
 
 use super::traits::{BcastPlan, BcastSpec, FlowEdge};
 
@@ -47,7 +47,7 @@ pub fn plan(comm: &mut Comm, spec: &BcastSpec) -> BcastPlan {
         let bytes: u64 = parts[upper_lo..lo + size].iter().sum();
         let src = spec.unlabel(lo);
         let dst = spec.unlabel(upper_lo);
-        let deps = have.map(|p| vec![p]).unwrap_or_default();
+        let deps = Deps::from_opt(have);
         // the head of the upper range keeps part `upper_lo` permanently —
         // that is its *delivery*; the rest of the range is custody it
         // forwards deeper into the scatter tree
@@ -92,13 +92,10 @@ pub fn plan(comm: &mut Comm, spec: &BcastSpec) -> BcastPlan {
             let src = spec.unlabel(v);
             let dst = spec.unlabel(dst_v);
             // root (v = 0) owns every part from the start: no dependency
-            let deps = match owned[v][part] {
-                Some(op) => vec![op],
-                None => {
-                    assert!(v == 0, "ring allgather: rank {v} missing part {part}");
-                    Vec::new()
-                }
-            };
+            if owned[v][part].is_none() {
+                assert!(v == 0, "ring allgather: rank {v} missing part {part}");
+            }
+            let deps = Deps::from_opt(owned[v][part]);
             let op = comm.send(&mut plan, src, dst, parts[part], deps, Some((dst, part)));
             edges.push(FlowEdge::copy(src, dst, part, op));
             new_ops.push((dst_v, part, op));

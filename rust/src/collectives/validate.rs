@@ -339,9 +339,10 @@ mod tests {
         let mut engine = Engine::new(&c);
         let spec = BcastSpec::new(0, 4, 1024);
         let mut bp = crate::collectives::chain::plan(&mut comm, &spec);
-        // sabotage: drop the final edge's label
+        // sabotage: drop the final edge's label (set_label keeps the
+        // memoized deliveries map in sync)
         let last = bp.plan.ops.len() - 1;
-        bp.plan.ops[last].label = None;
+        bp.plan.set_label(last, None);
         let result = engine.execute(&bp.plan);
         assert!(validate(&bp, &result).is_err());
     }
@@ -355,7 +356,7 @@ mod tests {
         let mut bp = crate::collectives::chain::plan(&mut comm, &spec);
         // sabotage: remove the dependency of the second hop so rank 1
         // "forwards" before receiving
-        bp.plan.ops[1].deps.clear();
+        bp.plan.ops[1].deps = crate::netsim::Deps::none();
         let result = engine.execute(&bp.plan);
         let err = validate(&bp, &result).unwrap_err();
         assert!(err.contains("causality"), "{err}");

@@ -2,7 +2,7 @@
 
 use std::collections::HashMap;
 
-use crate::netsim::{OpId, Plan, SimOp};
+use crate::netsim::{Deps, OpId, Plan, SimOp};
 use crate::topology::{Cluster, DeviceId};
 
 use super::protocol::{select, CommParams, PathPlan};
@@ -68,7 +68,8 @@ impl<'c> Comm<'c> {
             self.cluster.rank_device(src_rank),
             self.cluster.rank_device(dst_rank),
         );
-        self.path_plan(s, d, bytes).estimate_ns(bytes)
+        let cluster = self.cluster;
+        self.path_plan(s, d, bytes).estimate_ns(cluster, bytes)
     }
 
     /// Emit the ops for one rank→rank send of `bytes` into `plan`,
@@ -80,7 +81,7 @@ impl<'c> Comm<'c> {
         src_rank: usize,
         dst_rank: usize,
         bytes: u64,
-        deps: Vec<OpId>,
+        deps: impl Into<Deps>,
         label: Option<(usize, usize)>,
     ) -> OpId {
         let src = self.cluster.rank_device(src_rank);
@@ -96,10 +97,11 @@ impl<'c> Comm<'c> {
         src: DeviceId,
         dst: DeviceId,
         bytes: u64,
-        deps: Vec<OpId>,
+        deps: impl Into<Deps>,
         label: Option<(usize, usize)>,
     ) -> OpId {
-        let path = self.path_plan(src, dst, bytes).clone();
+        // PathPlan is Copy (interned routes): cache hits clone nothing
+        let path = *self.path_plan(src, dst, bytes);
         match path {
             PathPlan::Direct {
                 route,
@@ -144,7 +146,7 @@ impl<'c> Comm<'c> {
                         issue_ns: overhead_each_ns,
                         bw_cap: None,
                     },
-                    vec![mid],
+                    Deps::one(mid),
                     label,
                 )
             }
@@ -160,7 +162,7 @@ impl<'c> Comm<'c> {
         dst: DeviceId,
         bytes: u64,
         overhead_ns: u64,
-        deps: Vec<OpId>,
+        deps: impl Into<Deps>,
         label: Option<(usize, usize)>,
     ) -> OpId {
         self.raw_transfer_issue(plan, src, dst, bytes, overhead_ns, overhead_ns, deps, label)
@@ -178,7 +180,7 @@ impl<'c> Comm<'c> {
         bytes: u64,
         overhead_ns: u64,
         issue_ns: u64,
-        deps: Vec<OpId>,
+        deps: impl Into<Deps>,
         label: Option<(usize, usize)>,
     ) -> OpId {
         let route = self

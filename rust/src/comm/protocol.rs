@@ -1,6 +1,6 @@
 //! Mechanism selection: which hardware path a transfer takes.
 
-use crate::topology::{Cluster, DeviceId, Route};
+use crate::topology::{Cluster, DeviceId, RouteId};
 
 /// The transfer mechanisms of a CUDA-aware MPI runtime (MVAPICH2-GDR's
 /// menu, §II-C / §IV-C of the paper).
@@ -71,29 +71,32 @@ impl Default for CommParams {
     }
 }
 
-/// A resolved transfer recipe between two devices.
-#[derive(Debug, Clone)]
+/// A resolved transfer recipe between two devices. Routes are interned
+/// ids, so the whole recipe is `Copy` — the per-send cache hit on
+/// [`super::p2p::Comm`] no longer clones hop vectors (DESIGN.md §Perf).
+#[derive(Debug, Clone, Copy)]
 pub enum PathPlan {
     /// One cut-through transfer.
     Direct {
         mechanism: Mechanism,
-        route: Route,
+        route: RouteId,
         overhead_ns: u64,
         bw_cap: Option<f64>,
     },
     /// Two chained transfers through an intermediate (host staging).
     Staged {
         mechanism: Mechanism,
-        first: Route,
-        second: Route,
+        first: RouteId,
+        second: RouteId,
         overhead_each_ns: u64,
     },
 }
 
 impl PathPlan {
     /// Uncontended end-to-end estimate, ns — used by the tuning framework
-    /// and by selection itself.
-    pub fn estimate_ns(&self, bytes: u64) -> u64 {
+    /// and by selection itself. Takes the cluster whose table interned the
+    /// routes.
+    pub fn estimate_ns(&self, cluster: &Cluster, bytes: u64) -> u64 {
         match self {
             PathPlan::Direct {
                 route,
@@ -101,12 +104,11 @@ impl PathPlan {
                 bw_cap,
                 ..
             } => {
+                let meta = cluster.route_meta(*route);
                 let bw = bw_cap
-                    .map(|c| route.bottleneck_bw.min(c))
-                    .unwrap_or(route.bottleneck_bw);
-                overhead_ns
-                    + route.latency_ns
-                    + crate::netsim::time::tx_ns(bytes, bw)
+                    .map(|c| meta.bottleneck_bw.min(c))
+                    .unwrap_or(meta.bottleneck_bw);
+                overhead_ns + meta.latency_ns + crate::netsim::time::tx_ns(bytes, bw)
             }
             PathPlan::Staged {
                 first,
@@ -114,8 +116,8 @@ impl PathPlan {
                 overhead_each_ns,
                 ..
             } => {
-                first.uncontended_ns(bytes)
-                    + second.uncontended_ns(bytes)
+                cluster.route_uncontended_ns(*first, bytes)
+                    + cluster.route_uncontended_ns(*second, bytes)
                     + 2 * overhead_each_ns
             }
         }
@@ -170,7 +172,7 @@ pub fn select(
             bw_cap: Some(params.gdr_read_cap),
         };
         return if bytes <= params.staging_preferred_below
-            || staged.estimate_ns(bytes) <= direct.estimate_ns(bytes)
+            || staged.estimate_ns(cluster, bytes) <= direct.estimate_ns(cluster, bytes)
         {
             staged
         } else {
@@ -223,7 +225,7 @@ mod tests {
         let p = CommParams::default();
         let plan = select(&c, &p, c.rank_device(0), c.rank_device(8), 256 << 20);
         // whichever it picks must be the cheaper of the two estimates
-        let est = plan.estimate_ns(256 << 20);
+        let est = plan.estimate_ns(&c, 256 << 20);
         for m in [Mechanism::HostStaged, Mechanism::GdrReadCrossSocket] {
             if plan.mechanism() != m {
                 // crude check: selected plan beats or equals the cap-based
@@ -253,7 +255,7 @@ mod tests {
             let mut prev = 0u64;
             for bytes in [64u64, 4 << 10, 1 << 20, 64 << 20] {
                 let plan = select(&c, &p, c.rank_device(a), c.rank_device(b), bytes);
-                let est = plan.estimate_ns(bytes);
+                let est = plan.estimate_ns(&c, bytes);
                 assert!(est >= prev, "estimate must grow with size");
                 prev = est;
             }
@@ -265,6 +267,6 @@ mod tests {
         let c = kesch(2, 4);
         let p = CommParams::default();
         let eager = select(&c, &p, c.rank_device(0), c.rank_device(4), 4);
-        assert!(eager.estimate_ns(4) < p.rndv_overhead_ns + 10_000);
+        assert!(eager.estimate_ns(&c, 4) < p.rndv_overhead_ns + 10_000);
     }
 }

@@ -181,7 +181,8 @@ fn execute(engine: &mut Engine, merged: crate::netsim::Plan) -> u64 {
     if merged.is_empty() {
         0
     } else {
-        engine.execute(&merged).makespan
+        // makespan-only path: no per-op timestamp bookkeeping
+        engine.makespan_ns(&merged)
     }
 }
 

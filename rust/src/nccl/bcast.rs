@@ -1,7 +1,7 @@
 //! `ncclBcast` model: persistent-kernel ring pipeline.
 
 use crate::collectives::{BcastPlan, BcastSpec, FlowEdge};
-use crate::netsim::{OpId, Plan, SimOp};
+use crate::netsim::{Deps, OpId, Plan, SimOp};
 use crate::topology::Cluster;
 
 use super::cost::NcclParams;
@@ -43,7 +43,7 @@ pub fn plan_ring(
         let dst_dev = cluster.rank_device(dst);
         let peer = cluster.peer_access(src_dev, dst_dev);
         for (s, &sbytes) in slices.iter().enumerate() {
-            let mut deps: Vec<OpId> = Vec::new();
+            let mut deps = Deps::none();
             if let Some(op) = prev_recv[s] {
                 deps.push(op); // slice must have arrived at src
             } else if let Some(op) = root_ready {
@@ -94,7 +94,7 @@ pub fn plan_ring(
                         issue_ns: params.hop_ns,
                         bw_cap: Some(params.copy_bw),
                     },
-                    vec![mid],
+                    Deps::one(mid),
                     label,
                 )
             };
@@ -141,7 +141,7 @@ pub fn plan_intranode(
                 dev,
                 dur_ns: params.launch_ns,
             },
-            vec![],
+            Deps::none(),
             None,
         ));
     }

@@ -12,7 +12,7 @@
 
 use crate::collectives::{BcastPlan, BcastSpec, FlowEdge};
 use crate::comm::Comm;
-use crate::netsim::{OpId, Plan, SimOp};
+use crate::netsim::{Deps, OpId, Plan, SimOp};
 
 use super::bcast::plan_ring;
 use super::cost::NcclParams;
@@ -65,7 +65,7 @@ pub fn plan(
                     dev: cluster.rank_device(r),
                     dur_ns: params.launch_ns,
                 },
-                vec![],
+                Deps::none(),
                 None,
             ));
         }
@@ -95,10 +95,8 @@ pub fn plan(
             let (src_node, dst_node) = (w[0], w[1]);
             let src = leaders[src_node];
             let dst = leaders[dst_node];
-            let deps = match leader_recv[src_node][c] {
-                Some(op) => vec![op],
-                None => Vec::new(), // root leader owns the data
-            };
+            // root leader owns the data (no dependency)
+            let deps = Deps::from_opt(leader_recv[src_node][c]);
             let op = comm.send(&mut plan, src, dst, cbytes, deps, Some((dst, c)));
             edges.push(FlowEdge::copy(src, dst, c, op));
             leader_recv[dst_node][c] = Some(op);
@@ -137,21 +135,15 @@ pub fn plan(
         if launch[r].is_none() {
             continue;
         }
-        let deps = match last_delivery[r] {
-            Some(op) => vec![op],
-            None => {
-                if r == spec.root {
-                    continue;
-                }
-                Vec::new()
-            }
-        };
+        if last_delivery[r].is_none() && r == spec.root {
+            continue;
+        }
         plan.push(
             SimOp::Delay {
                 dev: cluster.rank_device(r),
                 dur_ns: params.sync_ns,
             },
-            deps,
+            Deps::from_opt(last_delivery[r]),
             None,
         );
     }

@@ -5,6 +5,13 @@
 //! order; each transfer's actual start is pushed past the free time of
 //! every link on its route (cut-through occupancy), giving FIFO link
 //! contention. Deterministic by construction.
+//!
+//! Routes are interned ids resolved through the cluster's route table, so
+//! executing an op touches no heap; all per-plan working state (indegree,
+//! CSR dependents graph, ready times, timestamps, the scatter cursor)
+//! lives in reusable scratch on the [`Engine`] (DESIGN.md §Perf). Sweeps
+//! that only need the makespan should call [`Engine::makespan_ns`], which
+//! skips the per-op timestamp copy entirely.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -24,20 +31,20 @@ pub struct ExecResult {
 
 impl ExecResult {
     /// Completion time of the transfer that delivered `(rank, chunk)`,
-    /// given the plan the result came from.
+    /// given the plan the result came from. Uses the plan's memoized
+    /// deliveries map — no per-query rebuild.
     pub fn delivery_time(&self, plan: &Plan, rank: usize, chunk: usize) -> Option<SimTime> {
         plan.deliveries().get(&(rank, chunk)).map(|&id| self.done[id])
     }
 
     /// Per-rank completion: max completion over all labelled deliveries to
-    /// that rank. Ranks with no deliveries (the root) report 0.
+    /// that rank (via the memoized deliveries map — no rescan of the op
+    /// list). Ranks with no deliveries (the root) report 0.
     pub fn rank_completion(&self, plan: &Plan, n_ranks: usize) -> Vec<SimTime> {
         let mut out = vec![0; n_ranks];
-        for (id, op) in plan.ops.iter().enumerate() {
-            if let Some((rank, _chunk)) = op.label {
-                if rank < n_ranks {
-                    out[rank] = out[rank].max(self.done[id]);
-                }
+        for (&(rank, _chunk), &id) in plan.deliveries() {
+            if rank < n_ranks {
+                out[rank] = out[rank].max(self.done[id]);
             }
         }
         out
@@ -45,19 +52,22 @@ impl ExecResult {
 }
 
 /// The simulator engine. Holds reusable scratch state so sweeps don't
-/// re-allocate per broadcast (hot path — see DESIGN.md §Perf).
+/// re-allocate per collective (hot path — see DESIGN.md §Perf).
 pub struct Engine<'c> {
     cluster: &'c Cluster,
     link_free: Vec<SimTime>,
     dev_free: Vec<SimTime>,
     // reusable scratch (per-plan O(n) state) — avoids reallocating on
-    // every broadcast of a sweep. CSR layout for the dependents graph
+    // every collective of a sweep. CSR layout for the dependents graph
     // instead of a Vec<Vec<_>> (§Perf: the per-op Vec allocations made
     // large plans superlinear).
     indegree: Vec<u32>,
     ready_time: Vec<SimTime>,
     dep_offsets: Vec<u32>,
     dep_targets: Vec<OpId>,
+    cursor: Vec<u32>,
+    start: Vec<SimTime>,
+    done: Vec<SimTime>,
     heap: BinaryHeap<Reverse<(SimTime, OpId)>>,
 }
 
@@ -71,6 +81,9 @@ impl<'c> Engine<'c> {
             ready_time: Vec::new(),
             dep_offsets: Vec::new(),
             dep_targets: Vec::new(),
+            cursor: Vec::new(),
+            start: Vec::new(),
+            done: Vec::new(),
             heap: BinaryHeap::new(),
         }
     }
@@ -79,8 +92,25 @@ impl<'c> Engine<'c> {
         self.cluster
     }
 
-    /// Execute a plan starting at virtual time 0.
+    /// Execute a plan starting at virtual time 0, returning per-op
+    /// timestamps.
     pub fn execute(&mut self, plan: &Plan) -> ExecResult {
+        let makespan = self.run(plan, true);
+        ExecResult {
+            start: self.start.clone(),
+            done: self.done.clone(),
+            makespan,
+        }
+    }
+
+    /// Execute a plan and return only its makespan — the sweep hot path.
+    /// Skips per-op timestamp bookkeeping and performs no allocations
+    /// beyond scratch growth on the first (largest) plan.
+    pub fn makespan_ns(&mut self, plan: &Plan) -> SimTime {
+        self.run(plan, false)
+    }
+
+    fn run(&mut self, plan: &Plan, record: bool) -> SimTime {
         self.link_free.iter_mut().for_each(|t| *t = 0);
         self.dev_free.iter_mut().for_each(|t| *t = 0);
 
@@ -92,7 +122,7 @@ impl<'c> Engine<'c> {
         self.dep_offsets.clear();
         self.dep_offsets.resize(n + 1, 0);
         for op in plan.ops.iter() {
-            for &d in &op.deps {
+            for &d in op.deps.as_slice() {
                 self.dep_offsets[d + 1] += 1;
             }
         }
@@ -102,21 +132,24 @@ impl<'c> Engine<'c> {
         let total_deps = self.dep_offsets[n] as usize;
         self.dep_targets.clear();
         self.dep_targets.resize(total_deps, 0);
-        {
-            let mut cursor: Vec<u32> = self.dep_offsets[..n].to_vec();
-            for (id, op) in plan.ops.iter().enumerate() {
-                self.indegree[id] = op.deps.len() as u32;
-                for &d in &op.deps {
-                    self.dep_targets[cursor[d] as usize] = id;
-                    cursor[d] += 1;
-                }
+        self.cursor.clear();
+        self.cursor.extend_from_slice(&self.dep_offsets[..n]);
+        for (id, op) in plan.ops.iter().enumerate() {
+            self.indegree[id] = op.deps.len() as u32;
+            for &d in op.deps.as_slice() {
+                self.dep_targets[self.cursor[d] as usize] = id;
+                self.cursor[d] += 1;
             }
         }
 
         self.ready_time.clear();
         self.ready_time.resize(n, 0);
-        let mut start = vec![0; n];
-        let mut done = vec![0; n];
+        if record {
+            self.start.clear();
+            self.start.resize(n, 0);
+            self.done.clear();
+            self.done.resize(n, 0);
+        }
         // (ready, id) min-heap
         self.heap.clear();
         for id in 0..n {
@@ -130,8 +163,10 @@ impl<'c> Engine<'c> {
         while let Some(Reverse((ready, id))) = self.heap.pop() {
             processed += 1;
             let (s, d) = self.run_op(&plan.ops[id].op, ready);
-            start[id] = s;
-            done[id] = d;
+            if record {
+                self.start[id] = s;
+                self.done[id] = d;
+            }
             makespan = makespan.max(d);
             let lo = self.dep_offsets[id] as usize;
             let hi = self.dep_offsets[id + 1] as usize;
@@ -149,11 +184,7 @@ impl<'c> Engine<'c> {
             "plan has a dependency cycle ({processed}/{n} ops ran)"
         );
 
-        ExecResult {
-            start,
-            done,
-            makespan,
-        }
+        makespan
     }
 
     /// Run one op at its ready time; returns (actual start, completion).
@@ -172,19 +203,22 @@ impl<'c> Engine<'c> {
                 issue_ns,
                 bw_cap,
             } => {
-                if route.hops.is_empty() {
+                let cluster = self.cluster;
+                let meta = cluster.route_meta(*route);
+                if meta.hop_len == 0 {
                     // local (same-device) op: pure overhead
                     return (ready, ready + overhead_ns);
                 }
+                let hops = cluster.route_hops(*route);
                 // start after every link on the path is free (cut-through:
                 // the message occupies the whole path simultaneously)
                 let mut s = ready;
-                for &h in &route.hops {
+                for &h in hops.iter() {
                     s = s.max(self.link_free[h.0]);
                 }
                 let eff_bw = match bw_cap {
-                    Some(cap) => route.bottleneck_bw.min(*cap),
-                    None => route.bottleneck_bw,
+                    Some(cap) => meta.bottleneck_bw.min(*cap),
+                    None => meta.bottleneck_bw,
                 };
                 let tx = tx_ns(*bytes, eff_bw);
                 // Each link is busy for the transfer's *issue* cost plus
@@ -192,14 +226,14 @@ impl<'c> Engine<'c> {
                 // which makes back-to-back chunks on one link cost
                 // (t_s + C/B) each — the pipelining model of the paper's
                 // Eq. (5).
-                for &h in &route.hops {
+                for &h in hops.iter() {
                     let link_bw = match bw_cap {
-                        Some(cap) => self.cluster.link(h).bandwidth.min(*cap),
-                        None => self.cluster.link(h).bandwidth,
+                        Some(cap) => cluster.link(h).bandwidth.min(*cap),
+                        None => cluster.link(h).bandwidth,
                     };
                     self.link_free[h.0] = s + issue_ns + tx_ns(*bytes, link_bw);
                 }
-                let d = s + overhead_ns + route.latency_ns + tx;
+                let d = s + overhead_ns + meta.latency_ns + tx;
                 (s, d)
             }
         }
@@ -209,7 +243,7 @@ impl<'c> Engine<'c> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::netsim::transfer::Plan;
+    use crate::netsim::transfer::{Deps, Plan};
     use crate::topology::presets::flat;
 
     fn transfer_plan(cluster: &Cluster, pairs: &[(usize, usize, u64)]) -> Plan {
@@ -226,7 +260,7 @@ mod tests {
                     issue_ns: 1000,
                     bw_cap: None,
                 },
-                vec![],
+                Deps::none(),
                 Some((dst, 0)),
             );
         }
@@ -280,7 +314,7 @@ mod tests {
                 issue_ns: 0,
                 bw_cap: None,
             },
-            vec![],
+            Deps::none(),
             Some((1, 0)),
         );
         plan.push(
@@ -291,7 +325,7 @@ mod tests {
                 issue_ns: 0,
                 bw_cap: None,
             },
-            vec![a],
+            Deps::one(a),
             Some((2, 0)),
         );
         let r = e.execute(&plan);
@@ -313,7 +347,7 @@ mod tests {
                 issue_ns: 0,
                 bw_cap: Some(2.0e9),
             },
-            vec![],
+            Deps::none(),
             None,
         );
         let r = e.execute(&plan);
@@ -326,8 +360,8 @@ mod tests {
         let mut e = Engine::new(&c);
         let mut plan = Plan::new();
         let dev = c.rank_device(0);
-        plan.push(SimOp::Delay { dev, dur_ns: 500 }, vec![], None);
-        plan.push(SimOp::Delay { dev, dur_ns: 300 }, vec![], None);
+        plan.push(SimOp::Delay { dev, dur_ns: 500 }, Deps::none(), None);
+        plan.push(SimOp::Delay { dev, dur_ns: 300 }, Deps::none(), None);
         let r = e.execute(&plan);
         assert_eq!(r.makespan, 800);
     }
@@ -354,10 +388,10 @@ mod tests {
                 dev: c.rank_device(0),
                 dur_ns: 1,
             },
-            vec![],
+            Deps::none(),
             None,
         );
-        plan.ops[0].deps = vec![0];
+        plan.ops[0].deps = Deps::one(0);
         let mut e = Engine::new(&c);
         e.execute(&plan);
     }
@@ -370,5 +404,20 @@ mod tests {
         let first = e.execute(&plan).makespan;
         let second = e.execute(&plan).makespan;
         assert_eq!(first, second);
+    }
+
+    #[test]
+    fn makespan_only_path_matches_execute() {
+        let c = flat(4);
+        let mut e = Engine::new(&c);
+        let plan = transfer_plan(
+            &c,
+            &[(0, 1, 10_000_000), (0, 2, 5_000_000), (2, 3, 1_000_000)],
+        );
+        let full = e.execute(&plan).makespan;
+        let fast = e.makespan_ns(&plan);
+        assert_eq!(full, fast);
+        // and interleaving the two paths keeps determinism
+        assert_eq!(e.execute(&plan).makespan, full);
     }
 }

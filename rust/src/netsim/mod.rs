@@ -1,10 +1,10 @@
 //! Deterministic discrete-event fabric simulator.
 //!
 //! The unit of work is a [`SimOp`]: either a cut-through `Transfer` of
-//! `bytes` along a [`Route`] (occupying every directed link on the path
-//! for the transmission time, so contention falls out naturally), or a
-//! `Delay` on a device (used for CUDA kernel launches, staging copies'
-//! fixed costs, compute phases).
+//! `bytes` along an interned route (a [`crate::topology::RouteId`]
+//! occupying every directed link on the path for the transmission time,
+//! so contention falls out naturally), or a `Delay` on a device (used for
+//! CUDA kernel launches, staging copies' fixed costs, compute phases).
 //!
 //! Ops are arranged into a dependency DAG — a [`Plan`] — by the collective
 //! algorithms in [`crate::collectives`] and executed by the [`engine`],
@@ -20,4 +20,4 @@ pub mod transfer;
 
 pub use engine::{Engine, ExecResult};
 pub use time::SimTime;
-pub use transfer::{OpId, Plan, PlannedOp, SimOp};
+pub use transfer::{Deps, OpId, Plan, PlannedOp, SimOp};

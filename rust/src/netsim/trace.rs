@@ -24,8 +24,9 @@ pub fn trace(plan: &Plan, result: &ExecResult, cluster: &Cluster) -> Vec<TraceRo
         .map(|(id, op)| {
             let what = match &op.op {
                 SimOp::Transfer { route, bytes, .. } => {
-                    let src = &cluster.device(route.src).name;
-                    let dst = &cluster.device(route.dst).name;
+                    let meta = cluster.route_meta(*route);
+                    let src = &cluster.device(meta.src).name;
+                    let dst = &cluster.device(meta.dst).name;
                     let label = op
                         .label
                         .map(|(r, ch)| format!(" [rank {r} chunk {ch}]"))

@@ -1,6 +1,13 @@
 //! Plan representation: ops, dependencies, labels.
+//!
+//! Hot-path design (DESIGN.md §Perf): a [`SimOp::Transfer`] carries an
+//! interned [`RouteId`] — not an owned hop list — and a [`PlannedOp`]'s
+//! dependencies live in an inline [`Deps`] buffer (≤2 predecessors, which
+//! covers every collective builder's common case) that only spills to the
+//! heap for wide joins. Building a plan therefore performs no per-op
+//! allocations beyond the `ops` vector itself.
 
-use crate::topology::{DeviceId, Route};
+use crate::topology::{DeviceId, RouteId};
 
 use super::time::SimTime;
 
@@ -10,7 +17,7 @@ pub type OpId = usize;
 /// One schedulable unit.
 #[derive(Debug, Clone)]
 pub enum SimOp {
-    /// Move `bytes` from `route.src` to `route.dst`, cut-through,
+    /// Move `bytes` from the route's src to its dst, cut-through,
     /// occupying every link on the path. `overhead_ns` is the protocol
     /// startup cost (the t_s of the paper's models) and contributes to the
     /// completion time; `issue_ns` is the portion of that startup which
@@ -19,9 +26,12 @@ pub enum SimOp {
     /// `issue == overhead` (Eq. 5 semantics); posted GDR writes issue much
     /// faster than their end-to-end latency. `bw_cap` optionally caps the
     /// effective bandwidth below the links' own (e.g. the GDR-read
-    /// ceiling).
+    /// ceiling). The route is an interned id resolved through the
+    /// cluster's route table at execution time — topology mutation
+    /// (`add_device`/`connect`) invalidates the table, so plans must not
+    /// outlive changes to the cluster they were built against.
     Transfer {
-        route: Route,
+        route: RouteId,
         bytes: u64,
         overhead_ns: SimTime,
         issue_ns: SimTime,
@@ -40,12 +50,119 @@ impl SimOp {
     }
 }
 
+/// An op's dependency list: up to two predecessor ids inline (the
+/// overwhelmingly common case for collective plans — "previous hop" and
+/// "data availability"), spilling to a heap `Vec` only for wider joins
+/// (e.g. a k-nomial reduce head waiting on all of its children).
+#[derive(Debug, Clone)]
+pub enum Deps {
+    Inline { buf: [OpId; 2], len: u8 },
+    Spill(Vec<OpId>),
+}
+
+impl Deps {
+    /// No dependencies.
+    pub const fn none() -> Deps {
+        Deps::Inline { buf: [0; 2], len: 0 }
+    }
+
+    /// A single dependency.
+    pub fn one(a: OpId) -> Deps {
+        Deps::Inline { buf: [a, 0], len: 1 }
+    }
+
+    /// Two dependencies.
+    pub fn two(a: OpId, b: OpId) -> Deps {
+        Deps::Inline { buf: [a, b], len: 2 }
+    }
+
+    /// `none()` or `one(..)` from an optional predecessor — the shape
+    /// every chain/ring builder produces.
+    pub fn from_opt(op: Option<OpId>) -> Deps {
+        match op {
+            Some(a) => Deps::one(a),
+            None => Deps::none(),
+        }
+    }
+
+    /// Inline when the slice fits, spilled otherwise.
+    pub fn from_slice(ids: &[OpId]) -> Deps {
+        match ids {
+            [] => Deps::none(),
+            &[a] => Deps::one(a),
+            &[a, b] => Deps::two(a, b),
+            _ => Deps::Spill(ids.to_vec()),
+        }
+    }
+
+    /// Append a dependency, spilling if the inline buffer is full.
+    pub fn push(&mut self, id: OpId) {
+        match self {
+            Deps::Inline { buf, len } => {
+                if (*len as usize) < buf.len() {
+                    buf[*len as usize] = id;
+                    *len += 1;
+                } else {
+                    let mut v = buf.to_vec();
+                    v.push(id);
+                    *self = Deps::Spill(v);
+                }
+            }
+            Deps::Spill(v) => v.push(id),
+        }
+    }
+
+    pub fn as_slice(&self) -> &[OpId] {
+        match self {
+            Deps::Inline { buf, len } => &buf[..*len as usize],
+            Deps::Spill(v) => v,
+        }
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [OpId] {
+        match self {
+            Deps::Inline { buf, len } => &mut buf[..*len as usize],
+            Deps::Spill(v) => v,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.as_slice().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl Default for Deps {
+    fn default() -> Deps {
+        Deps::none()
+    }
+}
+
+impl From<Vec<OpId>> for Deps {
+    fn from(v: Vec<OpId>) -> Deps {
+        if v.len() > 2 {
+            Deps::Spill(v)
+        } else {
+            Deps::from_slice(&v)
+        }
+    }
+}
+
+impl From<Option<OpId>> for Deps {
+    fn from(op: Option<OpId>) -> Deps {
+        Deps::from_opt(op)
+    }
+}
+
 /// An op plus its dependencies and an optional (rank, chunk) label used by
 /// collectives to map completions back to "rank r received chunk c".
 #[derive(Debug, Clone)]
 pub struct PlannedOp {
     pub op: SimOp,
-    pub deps: Vec<OpId>,
+    pub deps: Deps,
     /// (destination rank, chunk index) for delivery-tracking transfers.
     pub label: Option<(usize, usize)>,
 }
@@ -53,7 +170,18 @@ pub struct PlannedOp {
 /// A dependency DAG of ops.
 #[derive(Debug, Clone, Default)]
 pub struct Plan {
-    pub ops: Vec<PlannedOp>,
+    /// Crate-visible so validators/tests can inspect (and tests mutate)
+    /// ops directly; external consumers read via [`Plan::ops`]. Direct
+    /// label mutation bypasses the deliveries-cache invalidation — use
+    /// [`Plan::set_label`].
+    pub(crate) ops: Vec<PlannedOp>,
+    /// Labelled deliveries `(rank, chunk) -> op id`, built lazily on the
+    /// first [`Plan::deliveries`] call (later ops overwrite earlier ones
+    /// with the same label: delivery = last write) and invalidated by
+    /// labelled pushes / [`Plan::set_label`]. Lazy so the plan-build hot
+    /// path performs no per-op hashing. Mutating `ops[..].label`
+    /// directly bypasses the invalidation — use `set_label`.
+    deliveries: std::cell::OnceCell<std::collections::HashMap<(usize, usize), OpId>>,
 }
 
 impl Plan {
@@ -62,15 +190,42 @@ impl Plan {
     }
 
     /// Append an op; returns its id.
-    pub fn push(&mut self, op: SimOp, deps: Vec<OpId>, label: Option<(usize, usize)>) -> OpId {
-        debug_assert!(deps.iter().all(|&d| d < self.ops.len()), "dep on future op");
+    pub fn push(
+        &mut self,
+        op: SimOp,
+        deps: impl Into<Deps>,
+        label: Option<(usize, usize)>,
+    ) -> OpId {
+        let deps = deps.into();
+        debug_assert!(
+            deps.as_slice().iter().all(|&d| d < self.ops.len()),
+            "dep on future op"
+        );
         let id = self.ops.len();
+        if label.is_some() {
+            // a labelled push after a deliveries() query invalidates the
+            // cached map; a no-op (None) before the first query
+            let _ = self.deliveries.take();
+        }
         self.ops.push(PlannedOp { op, deps, label });
         id
     }
 
     pub fn len(&self) -> usize {
         self.ops.len()
+    }
+
+    /// Read-only view of the op list.
+    pub fn ops(&self) -> &[PlannedOp] {
+        &self.ops
+    }
+
+    /// Re-label an op, invalidating the cached deliveries map. Use this
+    /// instead of assigning `ops[id].label` directly (tests sabotage
+    /// plans this way).
+    pub fn set_label(&mut self, id: OpId, label: Option<(usize, usize)>) {
+        let _ = self.deliveries.take();
+        self.ops[id].label = label;
     }
 
     /// Append another plan's ops (shifting its internal dependencies) so
@@ -83,7 +238,7 @@ impl Plan {
         for op in &other.ops {
             let mut shifted = op.clone();
             shifted.label = None;
-            for d in &mut shifted.deps {
+            for d in shifted.deps.as_mut_slice() {
                 *d += offset;
             }
             self.ops.push(shifted);
@@ -100,25 +255,31 @@ impl Plan {
     }
 
     /// All labelled deliveries `(rank, chunk) -> op id`. Later ops
-    /// overwrite earlier ones with the same label (delivery = last write).
-    pub fn deliveries(&self) -> std::collections::HashMap<(usize, usize), OpId> {
-        let mut map = std::collections::HashMap::new();
-        for (id, op) in self.ops.iter().enumerate() {
-            if let Some(label) = op.label {
-                map.insert(label, id);
+    /// overwrite earlier ones with the same label (delivery = last
+    /// write). Built once on first use and cached; repeated queries
+    /// (`delivery_time` loops, validators) borrow the same map.
+    pub fn deliveries(&self) -> &std::collections::HashMap<(usize, usize), OpId> {
+        self.deliveries.get_or_init(|| {
+            let mut map = std::collections::HashMap::new();
+            for (id, op) in self.ops.iter().enumerate() {
+                if let Some(label) = op.label {
+                    map.insert(label, id);
+                }
             }
-        }
-        map
+            map
+        })
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::topology::presets::flat;
     use crate::topology::DeviceId;
 
     #[test]
     fn plan_builds_and_counts() {
+        let c = flat(2);
         let mut p = Plan::new();
         let a = p.push(
             SimOp::Delay {
@@ -128,7 +289,7 @@ mod tests {
             vec![],
             None,
         );
-        let r = Route::trivial(DeviceId(0));
+        let r = c.route(c.rank_device(0), c.rank_device(1)).unwrap();
         let b = p.push(
             SimOp::Transfer {
                 route: r,
@@ -143,5 +304,73 @@ mod tests {
         assert_eq!(p.len(), 2);
         assert_eq!(p.total_bytes(), 128);
         assert_eq!(p.deliveries().get(&(1, 0)), Some(&b));
+    }
+
+    #[test]
+    fn deps_inline_then_spill() {
+        let mut d = Deps::none();
+        assert!(d.is_empty());
+        d.push(7);
+        d.push(9);
+        assert!(matches!(d, Deps::Inline { .. }));
+        assert_eq!(d.as_slice(), &[7, 9]);
+        d.push(11);
+        assert!(matches!(d, Deps::Spill(_)));
+        assert_eq!(d.as_slice(), &[7, 9, 11]);
+        assert_eq!(Deps::from_slice(&[1, 2]).as_slice(), &[1, 2]);
+        assert_eq!(Deps::from_opt(None).len(), 0);
+        assert_eq!(Deps::from_opt(Some(3)).as_slice(), &[3]);
+        let from_vec: Deps = vec![1, 2, 3, 4].into();
+        assert_eq!(from_vec.as_slice(), &[1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn deliveries_track_last_write() {
+        let mut p = Plan::new();
+        let dev = DeviceId(0);
+        p.push(SimOp::Delay { dev, dur_ns: 1 }, vec![], Some((1, 0)));
+        let second = p.push(SimOp::Delay { dev, dur_ns: 1 }, vec![], Some((1, 0)));
+        assert_eq!(p.deliveries().get(&(1, 0)), Some(&second));
+    }
+
+    #[test]
+    fn set_label_keeps_deliveries_in_sync() {
+        let mut p = Plan::new();
+        let dev = DeviceId(0);
+        let a = p.push(SimOp::Delay { dev, dur_ns: 1 }, vec![], Some((1, 0)));
+        p.set_label(a, None);
+        assert!(p.deliveries().is_empty());
+        p.set_label(a, Some((2, 3)));
+        assert_eq!(p.deliveries().get(&(2, 3)), Some(&a));
+        // an op whose label was overwritten by a later push must not
+        // remove the newer delivery when it is itself unlabelled
+        let first = p.push(SimOp::Delay { dev, dur_ns: 1 }, vec![], Some((5, 0)));
+        let newer = p.push(SimOp::Delay { dev, dur_ns: 1 }, vec![], Some((5, 0)));
+        p.set_label(first, None);
+        assert_eq!(p.deliveries().get(&(5, 0)), Some(&newer));
+        // relabelling an *earlier* op to a label a later op holds must
+        // not steal the delivery (delivery = last write)
+        p.set_label(a, Some((5, 0)));
+        assert_eq!(p.deliveries().get(&(5, 0)), Some(&newer));
+        // ...but a later op relabelled onto an earlier op's label wins,
+        // and its old label falls back to the earlier holder
+        p.set_label(newer, Some((2, 3)));
+        assert_eq!(p.deliveries().get(&(2, 3)), Some(&newer));
+        assert_eq!(p.deliveries().get(&(5, 0)), Some(&a));
+    }
+
+    #[test]
+    fn merge_drops_labels_and_shifts_deps() {
+        let dev = DeviceId(0);
+        let mut a = Plan::new();
+        a.push(SimOp::Delay { dev, dur_ns: 1 }, vec![], None);
+        let mut b = Plan::new();
+        let first = b.push(SimOp::Delay { dev, dur_ns: 1 }, vec![], None);
+        b.push(SimOp::Delay { dev, dur_ns: 1 }, vec![first], Some((0, 0)));
+        a.merge(&b);
+        assert_eq!(a.len(), 3);
+        assert_eq!(a.ops[2].deps.as_slice(), &[1]);
+        assert!(a.ops[2].label.is_none());
+        assert!(a.deliveries().is_empty());
     }
 }

@@ -4,7 +4,7 @@ use std::collections::HashMap;
 
 use super::device::{Device, DeviceId, DeviceKind, NodeId};
 use super::link::{Link, LinkId, LinkKind};
-use super::path::Route;
+use super::path::{self, Route, RouteId, RouteMeta, RouteTable};
 use crate::error::{Error, Result};
 
 /// Per-chassis metadata.
@@ -30,6 +30,9 @@ pub struct Cluster {
     nodes: Vec<NodeMeta>,
     /// GPUs in global rank order (node-major).
     gpu_ranks: Vec<DeviceId>,
+    /// Interned routes: BFS runs at most once per (src, dst) pair; plans
+    /// and path caches carry cheap [`RouteId`]s (DESIGN.md §Perf).
+    routes: RouteTable,
 }
 
 impl Cluster {
@@ -41,12 +44,14 @@ impl Cluster {
             adjacency: Vec::new(),
             nodes: Vec::new(),
             gpu_ranks: Vec::new(),
+            routes: RouteTable::new(),
         }
     }
 
     // ---- construction ---------------------------------------------------
 
     pub fn add_device(&mut self, kind: DeviceKind, node: NodeId, socket: u8, name: String) -> DeviceId {
+        self.routes.clear();
         let id = DeviceId(self.devices.len());
         self.devices.push(Device {
             id,
@@ -87,6 +92,7 @@ impl Cluster {
         bandwidth: f64,
         latency_ns: u64,
     ) -> LinkId {
+        self.routes.clear();
         let id = LinkId(self.links.len());
         self.links.push(Link {
             id,
@@ -205,7 +211,7 @@ impl Cluster {
             return false;
         }
         match self.route(a, b) {
-            Ok(route) => !route.hops.iter().any(|&l| {
+            Ok(id) => !self.route_hops(id).iter().any(|&l| {
                 self.link(l).kind == LinkKind::Qpi
                     || self.device(self.link(l).dst).kind == DeviceKind::Host
                     || self.device(self.link(l).src).kind == DeviceKind::Host
@@ -214,20 +220,90 @@ impl Cluster {
         }
     }
 
+    // ---- routes ----------------------------------------------------------
+
     /// Shortest route (min hops, tie-broken by max bottleneck bandwidth)
-    /// from `src` to `dst` via BFS over directed links.
-    pub fn route(&self, src: DeviceId, dst: DeviceId) -> Result<Route> {
+    /// from `src` to `dst`, as an interned [`RouteId`]: a cached lookup
+    /// after the first call per pair — the BFS runs at most once per
+    /// (src, dst).
+    pub fn route(&self, src: DeviceId, dst: DeviceId) -> Result<RouteId> {
         if src.0 >= self.devices.len() {
             return Err(Error::UnknownDevice(src.0));
         }
         if dst.0 >= self.devices.len() {
             return Err(Error::UnknownDevice(dst.0));
         }
-        if src == dst {
-            return Ok(Route::trivial(src));
+        if let Some(id) = self.routes.lookup(src, dst) {
+            return Ok(id);
         }
-        // BFS layers; among equal-hop predecessors keep the one maximising
-        // the bottleneck bandwidth so routes prefer fat paths.
+        if src == dst {
+            return Ok(self.routes.insert(src, dst, &[], f64::INFINITY, 0));
+        }
+        let hops = self.bfs(src, dst)?;
+        let (bw, lat) = path::aggregates(&hops, self);
+        Ok(self.routes.insert(src, dst, &hops, bw, lat))
+    }
+
+    /// Route that explicitly passes through `via` (e.g. staging host),
+    /// interned under its own (src, via, dst) key.
+    pub fn route_via(&self, src: DeviceId, via: DeviceId, dst: DeviceId) -> Result<RouteId> {
+        if let Some(id) = self.routes.lookup_via(src, via, dst) {
+            return Ok(id);
+        }
+        let a = self.route(src, via)?;
+        let b = self.route(via, dst)?;
+        let mut hops: Vec<LinkId> = self.route_hops(a).to_vec();
+        hops.extend_from_slice(&self.route_hops(b));
+        let (bw, lat) = path::aggregates(&hops, self);
+        Ok(self.routes.insert_via(src, via, dst, &hops, bw, lat))
+    }
+
+    /// The intern table itself (cache metrics, tests).
+    pub fn routes(&self) -> &RouteTable {
+        &self.routes
+    }
+
+    /// Cached aggregates of an interned route, by value (hot path).
+    pub fn route_meta(&self, id: RouteId) -> RouteMeta {
+        self.routes.meta(id)
+    }
+
+    /// Hop list of an interned route, borrowed from the arena (hot path —
+    /// no copy). Drop the guard before any call that may intern
+    /// (`route`, `route_via`, `peer_access` on a cold pair): interning
+    /// while the guard is held panics with a `RefCell` borrow error —
+    /// fail-fast rather than serving a reallocated arena.
+    pub fn route_hops(&self, id: RouteId) -> std::cell::Ref<'_, [LinkId]> {
+        self.routes.hops(id)
+    }
+
+    /// Uncontended transfer estimate along an interned route, ns.
+    pub fn route_uncontended_ns(&self, id: RouteId, bytes: u64) -> u64 {
+        self.routes.meta(id).uncontended_ns(bytes)
+    }
+
+    /// Materialize an interned route into an owning [`Route`] view
+    /// (display, tests — not the hot path).
+    pub fn route_view(&self, id: RouteId) -> Route {
+        let meta = self.routes.meta(id);
+        Route {
+            src: meta.src,
+            dst: meta.dst,
+            hops: self.route_hops(id).to_vec(),
+            bottleneck_bw: meta.bottleneck_bw,
+            latency_ns: meta.latency_ns,
+        }
+    }
+
+    /// Shortest route materialized as an owning [`Route`] (convenience
+    /// for tests and inspection).
+    pub fn route_info(&self, src: DeviceId, dst: DeviceId) -> Result<Route> {
+        Ok(self.route_view(self.route(src, dst)?))
+    }
+
+    /// BFS layers; among equal-hop predecessors keep the one maximising
+    /// the bottleneck bandwidth so routes prefer fat paths.
+    fn bfs(&self, src: DeviceId, dst: DeviceId) -> Result<Vec<LinkId>> {
         let n = self.devices.len();
         let mut dist: Vec<u32> = vec![u32::MAX; n];
         let mut best_bw: Vec<f64> = vec![0.0; n];
@@ -270,14 +346,7 @@ impl Cluster {
             cur = self.links[lid.0].src;
         }
         hops.reverse();
-        Ok(Route::from_hops(src, dst, hops, self))
-    }
-
-    /// Route that explicitly passes through `via` (e.g. staging host).
-    pub fn route_via(&self, src: DeviceId, via: DeviceId, dst: DeviceId) -> Result<Route> {
-        let a = self.route(src, via)?;
-        let b = self.route(via, dst)?;
-        Ok(a.concat(&b, self))
+        Ok(hops)
     }
 
     /// Total directed-link count between every adjacent device pair —
@@ -349,7 +418,7 @@ mod tests {
     #[test]
     fn route_gpu_to_gpu() {
         let c = tiny();
-        let r = c.route(DeviceId(0), DeviceId(1)).unwrap();
+        let r = c.route_info(DeviceId(0), DeviceId(1)).unwrap();
         assert_eq!(r.hops.len(), 2); // g0->plx->g1
         assert_eq!(r.src, DeviceId(0));
         assert_eq!(r.dst, DeviceId(1));
@@ -358,7 +427,7 @@ mod tests {
     #[test]
     fn trivial_route() {
         let c = tiny();
-        let r = c.route(DeviceId(0), DeviceId(0)).unwrap();
+        let r = c.route_info(DeviceId(0), DeviceId(0)).unwrap();
         assert!(r.hops.is_empty());
     }
 
@@ -380,9 +449,11 @@ mod tests {
     fn route_via_concatenates() {
         let c = tiny();
         let host = c.staging_host(DeviceId(0)).unwrap();
-        let r = c.route_via(DeviceId(0), host, DeviceId(1)).unwrap();
+        let id = c.route_via(DeviceId(0), host, DeviceId(1)).unwrap();
         // g0->plx->root->host->root->plx->g1
-        assert_eq!(r.hops.len(), 6);
+        assert_eq!(c.route_view(id).hops.len(), 6);
+        // the via-route is cached under its own key
+        assert_eq!(c.route_via(DeviceId(0), host, DeviceId(1)).unwrap(), id);
     }
 
     #[test]

@@ -22,7 +22,7 @@ pub mod presets;
 pub use cluster::{Cluster, NodeMeta};
 pub use device::{Device, DeviceId, DeviceKind, NodeId};
 pub use link::{Link, LinkId, LinkKind};
-pub use path::Route;
+pub use path::{Route, RouteId, RouteMeta, RouteTable};
 
 use crate::config::schema::{ClusterConfig, ClusterPreset};
 use crate::error::Result;

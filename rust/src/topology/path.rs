@@ -1,10 +1,204 @@
-//! Routes: ordered hop lists with cached aggregates.
+//! Routes: interned hop lists with cached aggregates.
+//!
+//! Routes used to be owned `Vec<LinkId>` values cloned into every
+//! simulator op; on the plan-build hot path those clones dominated the
+//! allocation profile (DESIGN.md §Perf). They are now *interned* once per
+//! (src, dst) pair in a [`RouteTable`] hanging off the
+//! [`Cluster`](super::cluster::Cluster): BFS runs at most once per pair,
+//! plans carry a copyable [`RouteId`], and the engine resolves hops /
+//! bottleneck bandwidth / latency through the table without touching the
+//! heap. The owned [`Route`] struct survives as a *materialized view* for
+//! display, tests and topology inspection.
+
+use std::cell::{Ref, RefCell};
+use std::collections::HashMap;
 
 use super::cluster::Cluster;
 use super::device::DeviceId;
 use super::link::LinkId;
 
-/// A directed path through the fabric.
+/// Handle to an interned route. Cheap to copy, trivially hashable;
+/// resolves through the owning cluster's [`RouteTable`]. Carries the
+/// table generation it was interned under, so resolving an id that
+/// outlived a topology mutation fails fast in debug builds instead of
+/// silently aliasing another route.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct RouteId {
+    index: u32,
+    generation: u32,
+}
+
+/// The cached aggregates of one interned route. `Copy` so the engine can
+/// pull it out of the table by value on the hot path.
+#[derive(Debug, Clone, Copy)]
+pub struct RouteMeta {
+    pub src: DeviceId,
+    pub dst: DeviceId,
+    /// Range of this route's hops in the table's flat hop arena.
+    pub hop_start: u32,
+    pub hop_len: u32,
+    /// min over hop bandwidths (bytes/s); `f64::INFINITY` for the trivial
+    /// route.
+    pub bottleneck_bw: f64,
+    /// sum of hop latencies (ns).
+    pub latency_ns: u64,
+}
+
+impl RouteMeta {
+    pub fn n_hops(&self) -> usize {
+        self.hop_len as usize
+    }
+
+    /// Pure (uncontended) time to move `bytes` along this route with
+    /// cut-through forwarding: propagation + bytes / bottleneck-bandwidth.
+    pub fn uncontended_ns(&self, bytes: u64) -> u64 {
+        if !self.bottleneck_bw.is_finite() {
+            return self.latency_ns;
+        }
+        self.latency_ns + (bytes as f64 / self.bottleneck_bw * 1.0e9).round() as u64
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+struct RouteTableInner {
+    /// (src, dst) -> interned shortest route.
+    by_pair: HashMap<(DeviceId, DeviceId), RouteId>,
+    /// (src, via, dst) -> interned concatenated route.
+    by_via: HashMap<(DeviceId, DeviceId, DeviceId), RouteId>,
+    metas: Vec<RouteMeta>,
+    /// Flat hop arena; each meta indexes a contiguous range.
+    hops: Vec<LinkId>,
+    /// Bumped on every [`RouteTable::clear`]; stale ids are rejected.
+    generation: u32,
+}
+
+/// The per-cluster route intern table. Interior-mutable (`RefCell`) so
+/// lookups cache through `&Cluster`; deliberately **not** `Sync` — the
+/// parallel tuning sweep gives each worker thread its own cluster clone
+/// instead of fencing every hot-path read with an atomic.
+#[derive(Debug, Clone, Default)]
+pub struct RouteTable {
+    inner: RefCell<RouteTableInner>,
+}
+
+impl RouteTable {
+    pub fn new() -> RouteTable {
+        RouteTable::default()
+    }
+
+    /// Number of interned routes (tests assert BFS runs once per pair).
+    pub fn n_routes(&self) -> usize {
+        self.inner.borrow().metas.len()
+    }
+
+    /// Drop every cached route. Only the cluster's `&mut self` topology
+    /// mutators call this — exposing it on `&self` would let stale
+    /// `RouteId`s be invalidated out from under live plans.
+    pub(super) fn clear(&self) {
+        let mut inner = self.inner.borrow_mut();
+        inner.by_pair.clear();
+        inner.by_via.clear();
+        inner.metas.clear();
+        inner.hops.clear();
+        inner.generation = inner.generation.wrapping_add(1);
+    }
+
+    pub fn lookup(&self, src: DeviceId, dst: DeviceId) -> Option<RouteId> {
+        self.inner.borrow().by_pair.get(&(src, dst)).copied()
+    }
+
+    pub(super) fn lookup_via(
+        &self,
+        src: DeviceId,
+        via: DeviceId,
+        dst: DeviceId,
+    ) -> Option<RouteId> {
+        self.inner.borrow().by_via.get(&(src, via, dst)).copied()
+    }
+
+    /// Intern a computed route under its (src, dst) key.
+    pub(super) fn insert(
+        &self,
+        src: DeviceId,
+        dst: DeviceId,
+        hops: &[LinkId],
+        bottleneck_bw: f64,
+        latency_ns: u64,
+    ) -> RouteId {
+        let mut inner = self.inner.borrow_mut();
+        let id = Self::push_route(&mut inner, src, dst, hops, bottleneck_bw, latency_ns);
+        inner.by_pair.insert((src, dst), id);
+        id
+    }
+
+    /// Intern a concatenated route under its (src, via, dst) key.
+    pub(super) fn insert_via(
+        &self,
+        src: DeviceId,
+        via: DeviceId,
+        dst: DeviceId,
+        hops: &[LinkId],
+        bottleneck_bw: f64,
+        latency_ns: u64,
+    ) -> RouteId {
+        let mut inner = self.inner.borrow_mut();
+        let id = Self::push_route(&mut inner, src, dst, hops, bottleneck_bw, latency_ns);
+        inner.by_via.insert((src, via, dst), id);
+        id
+    }
+
+    fn push_route(
+        inner: &mut RouteTableInner,
+        src: DeviceId,
+        dst: DeviceId,
+        hops: &[LinkId],
+        bottleneck_bw: f64,
+        latency_ns: u64,
+    ) -> RouteId {
+        let id = RouteId {
+            index: inner.metas.len() as u32,
+            generation: inner.generation,
+        };
+        let hop_start = inner.hops.len() as u32;
+        inner.hops.extend_from_slice(hops);
+        inner.metas.push(RouteMeta {
+            src,
+            dst,
+            hop_start,
+            hop_len: hops.len() as u32,
+            bottleneck_bw,
+            latency_ns,
+        });
+        id
+    }
+
+    /// The cached aggregates, by value.
+    pub fn meta(&self, id: RouteId) -> RouteMeta {
+        let inner = self.inner.borrow();
+        debug_assert_eq!(
+            id.generation, inner.generation,
+            "stale RouteId: topology changed since this route was interned"
+        );
+        inner.metas[id.index as usize]
+    }
+
+    /// The hop list, borrowed straight out of the arena (no copy). The
+    /// returned guard must be dropped before any interning call.
+    pub fn hops(&self, id: RouteId) -> Ref<'_, [LinkId]> {
+        Ref::map(self.inner.borrow(), |inner| {
+            debug_assert_eq!(
+                id.generation, inner.generation,
+                "stale RouteId: topology changed since this route was interned"
+            );
+            let m = &inner.metas[id.index as usize];
+            &inner.hops[m.hop_start as usize..(m.hop_start + m.hop_len) as usize]
+        })
+    }
+}
+
+/// A directed path through the fabric — the materialized (owning) view of
+/// an interned route, for display, tests and topology inspection. The
+/// simulator hot path never builds these; it works on [`RouteId`]s.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Route {
     pub src: DeviceId,
@@ -28,31 +222,6 @@ impl Route {
         }
     }
 
-    pub fn from_hops(src: DeviceId, dst: DeviceId, hops: Vec<LinkId>, cluster: &Cluster) -> Route {
-        let mut bw = f64::INFINITY;
-        let mut lat = 0u64;
-        for &h in &hops {
-            let link = cluster.link(h);
-            bw = bw.min(link.bandwidth);
-            lat += link.latency_ns;
-        }
-        Route {
-            src,
-            dst,
-            hops,
-            bottleneck_bw: bw,
-            latency_ns: lat,
-        }
-    }
-
-    /// Concatenate two routes sharing an endpoint.
-    pub fn concat(&self, other: &Route, cluster: &Cluster) -> Route {
-        assert_eq!(self.dst, other.src, "routes must share endpoint");
-        let mut hops = self.hops.clone();
-        hops.extend_from_slice(&other.hops);
-        Route::from_hops(self.src, other.dst, hops, cluster)
-    }
-
     pub fn n_hops(&self) -> usize {
         self.hops.len()
     }
@@ -69,6 +238,18 @@ impl Route {
     }
 }
 
+/// (bottleneck bandwidth, total latency) of a hop list.
+pub(super) fn aggregates(hops: &[LinkId], cluster: &Cluster) -> (f64, u64) {
+    let mut bw = f64::INFINITY;
+    let mut lat = 0u64;
+    for &h in hops {
+        let link = cluster.link(h);
+        bw = bw.min(link.bandwidth);
+        lat += link.latency_ns;
+    }
+    (bw, lat)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -83,17 +264,68 @@ mod tests {
         let d = c.add_device(DeviceKind::Gpu, NodeId(0), 0, "d".into());
         c.connect_custom(a, b, LinkKind::PcieG3x16, 10.0e9, 100);
         c.connect_custom(b, d, LinkKind::PcieG3x16, 5.0e9, 200);
-        let r = c.route(a, d).unwrap();
+        let r = c.route_info(a, d).unwrap();
         assert_eq!(r.latency_ns, 300);
         assert_eq!(r.bottleneck_bw, 5.0e9);
         // 5 GB/s for 5 MB = 1 ms + 300ns
         let t = r.uncontended_ns(5_000_000);
         assert_eq!(t, 1_000_300);
+        // the interned meta agrees with the materialized view
+        let id = c.route(a, d).unwrap();
+        let meta = c.route_meta(id);
+        assert_eq!(meta.latency_ns, r.latency_ns);
+        assert_eq!(meta.bottleneck_bw, r.bottleneck_bw);
+        assert_eq!(meta.uncontended_ns(5_000_000), t);
     }
 
     #[test]
     fn trivial_route_is_free() {
         let r = Route::trivial(DeviceId(3));
         assert_eq!(r.uncontended_ns(1 << 30), 0);
+    }
+
+    #[test]
+    fn interning_caches_bfs() {
+        let mut c = Cluster::new("t");
+        let a = c.add_device(DeviceKind::Gpu, NodeId(0), 0, "a".into());
+        let b = c.add_device(DeviceKind::PlxSwitch, NodeId(0), 0, "b".into());
+        let d = c.add_device(DeviceKind::Gpu, NodeId(0), 0, "d".into());
+        c.connect(a, b, LinkKind::PcieG3x16);
+        c.connect(b, d, LinkKind::PcieG3x16);
+        let first = c.route(a, d).unwrap();
+        let second = c.route(a, d).unwrap();
+        assert_eq!(first, second, "same pair must intern to the same id");
+        assert_eq!(c.routes().n_routes(), 1);
+        // the reverse direction is a distinct interned route
+        let back = c.route(d, a).unwrap();
+        assert_ne!(first, back);
+        assert_eq!(c.routes().n_routes(), 2);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "stale RouteId")]
+    fn stale_route_id_rejected_in_debug() {
+        let mut c = Cluster::new("t");
+        let a = c.add_device(DeviceKind::Gpu, NodeId(0), 0, "a".into());
+        let b = c.add_device(DeviceKind::Gpu, NodeId(0), 0, "b".into());
+        c.connect(a, b, LinkKind::PcieG3x16);
+        let id = c.route(a, b).unwrap();
+        c.connect(a, b, LinkKind::NvLink2); // clears the route cache
+        let _ = c.route_meta(id);
+    }
+
+    #[test]
+    fn topology_mutation_invalidates_cache() {
+        let mut c = Cluster::new("t");
+        let a = c.add_device(DeviceKind::Gpu, NodeId(0), 0, "a".into());
+        let b = c.add_device(DeviceKind::Gpu, NodeId(0), 0, "b".into());
+        c.connect_custom(a, b, LinkKind::PcieG3x16, 10.0e9, 100);
+        let before = c.route(a, b).unwrap();
+        assert_eq!(c.route_meta(before).latency_ns, 100);
+        // adding a faster parallel path must not serve the stale route
+        c.connect_custom(a, b, LinkKind::NvLink2, 22.0e9, 50);
+        let after = c.route(a, b).unwrap();
+        assert_eq!(c.route_meta(after).latency_ns, 50);
     }
 }

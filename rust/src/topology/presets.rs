@@ -237,7 +237,7 @@ mod tests {
         let a = c.rank_device(0);
         let b = c.rank_device(16);
         assert!(!c.same_node(a, b));
-        let r = c.route(a, b).unwrap();
+        let r = c.route_info(a, b).unwrap();
         let has_ib = r
             .hops
             .iter()
@@ -261,7 +261,7 @@ mod tests {
     fn dgx1_nvlink_peer() {
         let c = dgx1(1, 8, false);
         assert_eq!(c.n_gpus(), 8);
-        let r = c.route(c.rank_device(0), c.rank_device(1)).unwrap();
+        let r = c.route_info(c.rank_device(0), c.rank_device(1)).unwrap();
         assert_eq!(r.n_hops(), 1, "NVLink direct");
         assert_eq!(r.bottleneck_bw, LinkKind::NvLink1.default_bandwidth());
     }
@@ -269,7 +269,7 @@ mod tests {
     #[test]
     fn dgx1v_uses_nvlink2() {
         let c = dgx1(1, 8, true);
-        let r = c.route(c.rank_device(0), c.rank_device(4)).unwrap();
+        let r = c.route_info(c.rank_device(0), c.rank_device(4)).unwrap();
         assert_eq!(r.bottleneck_bw, LinkKind::NvLink2.default_bandwidth());
     }
 
@@ -278,7 +278,7 @@ mod tests {
         let c = flat(8);
         assert_eq!(c.n_gpus(), 8);
         for i in 1..8 {
-            let r = c.route(c.rank_device(0), c.rank_device(i)).unwrap();
+            let r = c.route_info(c.rank_device(0), c.rank_device(i)).unwrap();
             assert_eq!(r.n_hops(), 2);
             assert_eq!(r.latency_ns, 0);
             assert_eq!(r.bottleneck_bw, LinkKind::Ideal.default_bandwidth());

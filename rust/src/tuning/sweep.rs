@@ -1,5 +1,16 @@
 //! Offline tuning sweeps: run every candidate on the simulator, per
 //! collective kind.
+//!
+//! [`tune`] fans the (collective kind, message size) grid across
+//! `std::thread::scope` workers — each worker owns its *own* cluster
+//! clone (the route-intern table is deliberately single-threaded, see
+//! [`crate::topology::RouteTable`]) plus its own [`Comm`] / [`Engine`],
+//! and results merge back in grid order, so the produced table is
+//! byte-identical to a serial run ([`tune_serial`] keeps the reference
+//! path alive for the determinism test and for perf comparisons).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 use crate::collectives::{self, Algorithm, CollectiveKind, CollectiveSpec};
 use crate::comm::Comm;
@@ -20,21 +31,27 @@ pub struct SweepPoint {
     pub all: Vec<(Algorithm, u64)>,
 }
 
-/// Sweep all candidates of one kind at one size.
-pub fn sweep_size_for(
-    cluster: &Cluster,
+/// Sweep all candidates of one kind at one size with caller-owned
+/// simulator state — the building block both the serial and the parallel
+/// tuner share. Callers pass a **fresh `Comm` per point**: its path-plan
+/// cache keys on (src, dst, size-class) but resolves against the first
+/// bytes it sees, so sharing one across points would make a point's
+/// result depend on visit order — breaking the parallel-equals-serial
+/// guarantee. The `Engine` (stateless across runs) and the cluster's
+/// route-intern table are safely reused across points.
+pub fn sweep_size_with(
+    comm: &mut Comm,
+    engine: &mut Engine,
     kind: CollectiveKind,
     bytes: u64,
     root: usize,
 ) -> SweepPoint {
-    let n = cluster.n_gpus();
+    let n = comm.cluster().n_gpus();
     let spec = CollectiveSpec::collective(kind, root, n, bytes);
-    let mut comm = Comm::new(cluster);
-    let mut engine = Engine::new(cluster);
     let mut all: Vec<(Algorithm, u64)> = space::candidates_for(kind, bytes)
         .into_iter()
         .map(|algo| {
-            let t = collectives::latency_ns(&algo, &mut comm, &mut engine, &spec);
+            let t = collectives::latency_ns(&algo, comm, engine, &spec);
             (algo, t)
         })
         .collect();
@@ -49,33 +66,127 @@ pub fn sweep_size_for(
     }
 }
 
+/// Sweep all candidates of one kind at one size (self-contained variant).
+pub fn sweep_size_for(
+    cluster: &Cluster,
+    kind: CollectiveKind,
+    bytes: u64,
+    root: usize,
+) -> SweepPoint {
+    let mut comm = Comm::new(cluster);
+    let mut engine = Engine::new(cluster);
+    sweep_size_with(&mut comm, &mut engine, kind, bytes, root)
+}
+
 /// Sweep all broadcast candidates at one size (the original entry point).
 pub fn sweep_size(cluster: &Cluster, bytes: u64, root: usize) -> SweepPoint {
     sweep_size_for(cluster, CollectiveKind::Broadcast, bytes, root)
 }
 
-/// Build a tuned table for every collective kind by sweeping a size grid.
-pub fn tune(cluster: &Cluster, sizes: &[u64]) -> TuningTable {
+/// The flattened (kind, size) grid, in the deterministic merge order.
+fn grid(sizes: &[u64]) -> Vec<(CollectiveKind, u64)> {
+    CollectiveKind::ALL
+        .iter()
+        .flat_map(|&kind| sizes.iter().map(move |&bytes| (kind, bytes)))
+        .collect()
+}
+
+/// Fold swept points (in [`grid`] order) into the bucketed table — shared
+/// by the serial and parallel tuners so their output is identical.
+fn table_from_points(
+    cluster: &Cluster,
+    sizes: &[u64],
+    points: Vec<SweepPoint>,
+) -> TuningTable {
     let mut table = TuningTable::new(cluster.name.clone(), cluster.n_gpus());
-    for kind in CollectiveKind::ALL {
-        for (i, &bytes) in sizes.iter().enumerate() {
-            let point = sweep_size_for(cluster, kind, bytes, 0);
-            let max_bytes = if i + 1 == sizes.len() {
-                u64::MAX
-            } else {
-                bytes
-            };
-            table.push_bucket(
-                kind,
-                TableEntry {
-                    max_bytes,
-                    algorithm: point.winner,
-                    won_at_ns: point.winner_ns,
-                },
-            );
-        }
+    for (p, point) in points.into_iter().enumerate() {
+        let i = p % sizes.len();
+        let max_bytes = if i + 1 == sizes.len() {
+            u64::MAX
+        } else {
+            point.bytes
+        };
+        table.push_bucket(
+            point.kind,
+            TableEntry {
+                max_bytes,
+                algorithm: point.winner,
+                won_at_ns: point.winner_ns,
+            },
+        );
     }
     table
+}
+
+/// Build a tuned table for every collective kind by sweeping a size grid,
+/// fanning the grid points across OS threads. Deterministic: the merge
+/// runs in grid order and every point is a pure function of the cluster,
+/// so the table is byte-identical to [`tune_serial`]'s.
+pub fn tune(cluster: &Cluster, sizes: &[u64]) -> TuningTable {
+    let points = grid(sizes);
+    let n_workers = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(points.len());
+    if n_workers <= 1 {
+        return tune_serial(cluster, sizes);
+    }
+
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<SweepPoint>>> =
+        points.iter().map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..n_workers {
+            // each worker owns a cluster clone: the route-intern table is
+            // interior-mutable and intentionally not Sync (hot-path reads
+            // carry no atomics); cloning a cluster is a few hundred
+            // device/link records
+            let local = cluster.clone();
+            let next = &next;
+            let slots = &slots;
+            let points = &points;
+            s.spawn(move || {
+                let mut engine = Engine::new(&local);
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= points.len() {
+                        break;
+                    }
+                    let (kind, bytes) = points[i];
+                    // fresh Comm per point (see sweep_size_with); the
+                    // engine scratch and route table carry across
+                    let mut comm = Comm::new(&local);
+                    let point = sweep_size_with(&mut comm, &mut engine, kind, bytes, 0);
+                    *slots[i].lock().expect("sweep slot poisoned") = Some(point);
+                }
+            });
+        }
+    });
+    let results: Vec<SweepPoint> = slots
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .expect("sweep slot poisoned")
+                .expect("sweep point missing")
+        })
+        .collect();
+    table_from_points(cluster, sizes, results)
+}
+
+/// The single-threaded reference tuner: same grid, same merge, one
+/// worker. Kept public so tests (and `sweep_perf`) can assert the
+/// parallel path persists a byte-identical table.
+pub fn tune_serial(cluster: &Cluster, sizes: &[u64]) -> TuningTable {
+    let mut engine = Engine::new(cluster);
+    let results: Vec<SweepPoint> = grid(sizes)
+        .into_iter()
+        .map(|(kind, bytes)| {
+            // fresh Comm per point, matching the parallel workers
+            let mut comm = Comm::new(cluster);
+            sweep_size_with(&mut comm, &mut engine, kind, bytes, 0)
+        })
+        .collect();
+    table_from_points(cluster, sizes, results)
 }
 
 /// The default tuning size grid (powers of two, 4 B – 128 MB).
@@ -87,6 +198,7 @@ pub fn default_sizes() -> Vec<u64> {
 mod tests {
     use super::*;
     use crate::topology::presets::kesch;
+    use crate::tuning::persist;
 
     #[test]
     fn tuner_picks_staged_small_and_pipelined_large() {
@@ -158,6 +270,19 @@ mod tests {
         assert_eq!(
             table.select_for(CollectiveKind::Allgather, 1 << 20),
             Algorithm::RingAllgather
+        );
+    }
+
+    #[test]
+    fn parallel_matches_serial_winners() {
+        let cluster = kesch(1, 8);
+        let sizes = [4u64, 8 << 10, 1 << 20, 32 << 20];
+        let par = tune(&cluster, &sizes);
+        let ser = tune_serial(&cluster, &sizes);
+        assert_eq!(
+            persist::to_json(&par),
+            persist::to_json(&ser),
+            "parallel tune must be byte-identical to serial"
         );
     }
 }

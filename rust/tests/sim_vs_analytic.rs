@@ -124,6 +124,77 @@ fn paper_qualitative_claims_hold_on_kesch() {
 }
 
 #[test]
+fn route_interning_golden_parity() {
+    // Route interning must be invisible to the simulation: for every
+    // algorithm × message size × topology, the makespan is bit-identical
+    // (a) across repeated executions against a warm route cache,
+    // (b) on a freshly cloned cluster whose cache starts cold, and
+    // (c) between the recording (`execute`) and makespan-only
+    //     (`makespan_ns`) engine paths.
+    let algos = [
+        Algorithm::Direct,
+        Algorithm::Chain,
+        Algorithm::PipelinedChain { chunk: 64 << 10 },
+        Algorithm::Knomial { k: 2 },
+        Algorithm::Knomial { k: 4 },
+        Algorithm::ScatterRingAllgather,
+        Algorithm::HostStagedKnomial { k: 2 },
+    ];
+    let topologies: Vec<(&str, gdrbcast::topology::Cluster)> = vec![
+        ("flat(8)", presets::flat(8)),
+        ("kesch(1,8)", presets::kesch(1, 8)),
+        ("kesch(2,8)", presets::kesch(2, 8)),
+    ];
+    for (name, cluster) in &topologies {
+        let n = cluster.n_gpus();
+        let mut comm = Comm::new(cluster);
+        let mut engine = Engine::new(cluster);
+        for algo in &algos {
+            for bytes in [4u64, 64 << 10, 16 << 20] {
+                let spec = BcastSpec::new(0, n, bytes);
+                let bp = collectives::plan(algo, &mut comm, &spec);
+                let warm = engine.execute(&bp.plan).makespan;
+                let warm_again = engine.execute(&bp.plan).makespan;
+                let fast = engine.makespan_ns(&bp.plan);
+                // cold cache: fresh cluster clone, fresh comm/engine
+                let cold_cluster = cluster.clone();
+                let mut cold_comm = Comm::new(&cold_cluster);
+                let mut cold_engine = Engine::new(&cold_cluster);
+                let cold_bp = collectives::plan(algo, &mut cold_comm, &spec);
+                let cold = cold_engine.execute(&cold_bp.plan).makespan;
+                let checks = [
+                    ("warm-repeat", warm_again),
+                    ("makespan-only", fast),
+                    ("cold-cache", cold),
+                ];
+                for (label, t) in checks {
+                    assert_eq!(
+                        warm,
+                        t,
+                        "{} {} {}B: {label} diverged",
+                        name,
+                        algo.name(),
+                        bytes
+                    );
+                }
+            }
+        }
+        // the cache really interns: re-planning the whole menu must not
+        // grow the route table
+        let before = cluster.routes().n_routes();
+        for algo in &algos {
+            let spec = BcastSpec::new(0, n, 16 << 20);
+            let _ = collectives::plan(algo, &mut comm, &spec);
+        }
+        assert_eq!(
+            before,
+            cluster.routes().n_routes(),
+            "{name}: replanning interned new routes"
+        );
+    }
+}
+
+#[test]
 fn eq1_eq2_exact_on_flat() {
     // closed-form identities, exact (integer ns) on the flat fabric
     let cp = CommParams::default();

@@ -144,6 +144,29 @@ fn persistence_roundtrip_preserves_selection() {
 }
 
 #[test]
+fn parallel_tune_persists_byte_identical_table() {
+    // the parallel sweep fans (kind, size) points across threads but
+    // merges in grid order; the persisted artifact must be byte-for-byte
+    // the serial reference's
+    let cluster = presets::kesch(2, 4);
+    let sizes = [4u64, 8 << 10, 1 << 20, 16 << 20, 128 << 20];
+    let par = sweep::tune(&cluster, &sizes);
+    let ser = sweep::tune_serial(&cluster, &sizes);
+    let dir = std::env::temp_dir().join("gdrbcast-tuning-determinism");
+    let par_path = dir.join("parallel.json");
+    let ser_path = dir.join("serial.json");
+    persist::save(&par, &par_path).unwrap();
+    persist::save(&ser, &ser_path).unwrap();
+    let par_bytes = std::fs::read(&par_path).unwrap();
+    let ser_bytes = std::fs::read(&ser_path).unwrap();
+    assert_eq!(
+        par_bytes, ser_bytes,
+        "parallel tune persisted a different table than the serial reference"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn tables_differ_across_topologies() {
     // the whole point of a tuning *framework*: different machines tune
     // differently
