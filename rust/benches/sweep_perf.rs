@@ -1,11 +1,15 @@
 //! Sweep-scale performance benchmark: plan-build throughput, engine
-//! execute throughput, and full `tune()` wall time at 16/64/128-GPU
-//! presets — the numbers DESIGN.md §Perf tracks from PR 2 onward.
+//! execute throughput, templated-vs-rebuild plan acquisition, and full
+//! `tune()` wall time at 16/64/128-GPU presets — the numbers DESIGN.md
+//! §Perf tracks from PR 2 onward.
 //!
 //! Emits `target/reports/BENCH_sweep.json` in the standard report shape
 //! (an array of `{name, mean_ns, std_dev_ns, p50_ns, p99_ns, iters,
 //! samples}` rows; one-shot wall-time measurements appear as single-
-//! sample rows, and derived throughputs as `*_ops_per_sec` rows).
+//! sample rows, derived throughputs as `*_ops_per_sec` rows, the
+//! templated-vs-rebuild ratio as `plan_acquisition/{n}gpus_speedup` and
+//! the cache hit rate as `template_cache/{n}gpus_hit_rate` — see
+//! DESIGN.md §Measuring).
 //!
 //! `cargo bench --bench sweep_perf`
 //! `SWEEP_PERF_SMOKE=1 cargo bench --bench sweep_perf`  (CI smoke mode)
@@ -17,7 +21,7 @@ use gdrbcast::collectives::{self, Algorithm, BcastSpec};
 use gdrbcast::comm::Comm;
 use gdrbcast::netsim::Engine;
 use gdrbcast::topology::presets;
-use gdrbcast::tuning::{persist, sweep};
+use gdrbcast::tuning::{persist, space, sweep};
 use gdrbcast::util::json::Json;
 
 /// A one-shot wall-time row in the standard report shape.
@@ -73,6 +77,65 @@ fn main() {
         rows.push(wall_row(
             &format!("execute/{gpus}gpus_ops_per_sec"),
             exec_ops_per_sec,
+        ));
+    }
+
+    // ---- plan acquisition: templated vs rebuild-per-point (64 GPUs) ----
+    // The tuning sweep's cost model: acquiring every broadcast candidate
+    // at every grid size. "rebuild" pays full plan construction per
+    // point (the pre-template world, plus the now-unconditional byte-
+    // role recording — one Vec per plan, a sliver of the per-op send
+    // work); "templated" goes through the comm's template cache, so the
+    // size axis rescales byte counts in place. The acceptance bar is
+    // ≥ 3× at the 64-GPU preset; the ratio is recorded in the report
+    // (not asserted — timing on shared CI runners is advisory).
+    {
+        let cluster = presets::kesch(4, 16);
+        let gpus = cluster.n_gpus();
+        let acq_sizes: Vec<u64> = if smoke {
+            vec![4, 64 << 10, 1 << 20, 16 << 20]
+        } else {
+            sweep::default_sizes()
+        };
+        let mut comm = Comm::new(&cluster);
+        let r = bencher.bench(&format!("plan_acquisition/rebuild/{gpus}gpus"), || {
+            let mut total = 0usize;
+            for &bytes in &acq_sizes {
+                for algo in space::candidates(bytes) {
+                    let spec = BcastSpec::new(0, gpus, bytes);
+                    total += collectives::plan(&algo, &mut comm, &spec).plan.len();
+                }
+            }
+            total
+        });
+        let rebuild_ns = r.per_iter.mean;
+        let r = bencher.bench(&format!("plan_acquisition/templated/{gpus}gpus"), || {
+            let mut total = 0usize;
+            for &bytes in &acq_sizes {
+                for algo in space::candidates(bytes) {
+                    let spec = BcastSpec::new(0, gpus, bytes);
+                    total += collectives::cached_plan(&algo, &mut comm, &spec).plan.len();
+                }
+            }
+            total
+        });
+        let templated_ns = r.per_iter.mean;
+        let speedup = rebuild_ns / templated_ns.max(1.0);
+        let (hits, misses) = comm.template_cache().stats();
+        let hit_rate = hits as f64 / ((hits + misses).max(1)) as f64;
+        println!(
+            "plan acquisition at {gpus} GPUs over {} sizes: rebuild {:.2} ms vs templated {:.2} ms = {speedup:.1}x (cache hit rate {hit_rate:.3})",
+            acq_sizes.len(),
+            rebuild_ns / 1e6,
+            templated_ns / 1e6,
+        );
+        rows.push(wall_row(
+            &format!("plan_acquisition/{gpus}gpus_speedup"),
+            speedup,
+        ));
+        rows.push(wall_row(
+            &format!("template_cache/{gpus}gpus_hit_rate"),
+            hit_rate,
         ));
     }
 

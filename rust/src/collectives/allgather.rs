@@ -8,22 +8,31 @@
 //! `T = (n−1) × (t_s + M/(nB))`
 
 use crate::comm::{chunk::equal_parts, Comm};
-use crate::netsim::{Deps, OpId};
+use crate::netsim::{ByteRole, Deps, OpId};
 
+use super::template::{CollectiveTemplate, RoleRecorder};
 use super::traits::{CollectiveKind, CollectivePlan, CollectiveSpec, FlowEdge};
 
 pub fn plan(comm: &mut Comm, spec: &CollectiveSpec) -> CollectivePlan {
+    template(comm, spec).cp
+}
+
+pub fn template(comm: &mut Comm, spec: &CollectiveSpec) -> CollectiveTemplate {
     debug_assert_eq!(spec.kind, CollectiveKind::Allgather);
     let n = spec.n_ranks;
     let mut plan = crate::netsim::Plan::new();
+    let mut rec = RoleRecorder::new();
     let mut edges = Vec::new();
     if n == 1 {
-        return CollectivePlan {
-            plan,
-            edges,
-            n_chunks: 1,
-            spec: spec.clone(),
-            algorithm: "ring-allgather".into(),
+        return CollectiveTemplate {
+            roles: rec.finish(&plan),
+            cp: CollectivePlan {
+                plan,
+                edges,
+                n_chunks: 1,
+                spec: spec.clone(),
+                algorithm: "ring-allgather".into(),
+            },
         };
     }
     let parts = equal_parts(spec.bytes, n);
@@ -37,7 +46,17 @@ pub fn plan(comm: &mut Comm, spec: &CollectiveSpec) -> CollectivePlan {
             let dst = (v + 1) % n;
             debug_assert!(own[v][c].is_some() || c == v, "rank {v} missing segment {c}");
             let deps = Deps::from_opt(own[v][c]);
+            let mark = plan.len();
             let op = comm.send(&mut plan, v, dst, parts[c], deps, Some((dst, c)));
+            rec.tag(
+                &plan,
+                mark,
+                ByteRole::Part {
+                    index: c as u32,
+                    of: n as u32,
+                },
+                comm.size_class_of(parts[c]),
+            );
             edges.push(FlowEdge::copy(v, dst, c, op));
             arrivals.push((dst, c, op));
         }
@@ -45,12 +64,15 @@ pub fn plan(comm: &mut Comm, spec: &CollectiveSpec) -> CollectivePlan {
             own[dst][c] = Some(op);
         }
     }
-    CollectivePlan {
-        plan,
-        edges,
-        n_chunks: n,
-        spec: spec.clone(),
-        algorithm: "ring-allgather".into(),
+    CollectiveTemplate {
+        roles: rec.finish(&plan),
+        cp: CollectivePlan {
+            plan,
+            edges,
+            n_chunks: n,
+            spec: spec.clone(),
+            algorithm: "ring-allgather".into(),
+        },
     }
 }
 

@@ -17,24 +17,33 @@
 //! [`super::reduce_scatter`]).
 
 use crate::comm::{chunk::equal_parts, Comm};
-use crate::netsim::{Deps, OpId};
+use crate::netsim::{ByteRole, Deps, OpId};
 
+use super::template::{CollectiveTemplate, RoleRecorder};
 use super::traits::{CollectiveKind, CollectivePlan, CollectiveSpec, FlowEdge};
 
 /// Ring allreduce: reduce-scatter phase (reduce edges) then allgather
 /// phase (copy edges) in one plan.
 pub fn ring(comm: &mut Comm, spec: &CollectiveSpec) -> CollectivePlan {
+    ring_template(comm, spec).cp
+}
+
+pub fn ring_template(comm: &mut Comm, spec: &CollectiveSpec) -> CollectiveTemplate {
     debug_assert_eq!(spec.kind, CollectiveKind::Allreduce);
     let n = spec.n_ranks;
     let mut plan = crate::netsim::Plan::new();
+    let mut rec = RoleRecorder::new();
     let mut edges = Vec::new();
     if n == 1 {
-        return CollectivePlan {
-            plan,
-            edges,
-            n_chunks: 1,
-            spec: spec.clone(),
-            algorithm: "ring-allreduce".into(),
+        return CollectiveTemplate {
+            roles: rec.finish(&plan),
+            cp: CollectivePlan {
+                plan,
+                edges,
+                n_chunks: 1,
+                spec: spec.clone(),
+                algorithm: "ring-allreduce".into(),
+            },
         };
     }
     let parts = equal_parts(spec.bytes, n);
@@ -51,7 +60,17 @@ pub fn ring(comm: &mut Comm, spec: &CollectiveSpec) -> CollectivePlan {
             let deps = Deps::from_opt(acc[v][s]);
             // the last hop delivers rank s its fully reduced segment
             let label = if t == n - 2 { Some((dst, s)) } else { None };
+            let mark = plan.len();
             let op = comm.send(&mut plan, v, dst, parts[s], deps, label);
+            rec.tag(
+                &plan,
+                mark,
+                ByteRole::Part {
+                    index: s as u32,
+                    of: n as u32,
+                },
+                comm.size_class_of(parts[s]),
+            );
             edges.push(FlowEdge::reduce(v, dst, s, op));
             arrivals.push((dst, s, op));
         }
@@ -73,7 +92,17 @@ pub fn ring(comm: &mut Comm, spec: &CollectiveSpec) -> CollectivePlan {
             let c = (v + n - t) % n;
             let dst = (v + 1) % n;
             let deps = Deps::from_opt(own[v][c]);
+            let mark = plan.len();
             let op = comm.send(&mut plan, v, dst, parts[c], deps, Some((dst, c)));
+            rec.tag(
+                &plan,
+                mark,
+                ByteRole::Part {
+                    index: c as u32,
+                    of: n as u32,
+                },
+                comm.size_class_of(parts[c]),
+            );
             edges.push(FlowEdge::copy(v, dst, c, op));
             arrivals.push((dst, c, op));
         }
@@ -82,49 +111,75 @@ pub fn ring(comm: &mut Comm, spec: &CollectiveSpec) -> CollectivePlan {
         }
     }
 
-    CollectivePlan {
-        plan,
-        edges,
-        n_chunks: n,
-        spec: spec.clone(),
-        algorithm: "ring-allreduce".into(),
+    CollectiveTemplate {
+        roles: rec.finish(&plan),
+        cp: CollectivePlan {
+            plan,
+            edges,
+            n_chunks: n,
+            spec: spec.clone(),
+            algorithm: "ring-allreduce".into(),
+        },
     }
 }
 
 /// Tree allreduce: k-nomial reduce to `spec.root`, then k-nomial
 /// broadcast of the reduced buffer.
 pub fn tree(comm: &mut Comm, spec: &CollectiveSpec, k: usize) -> CollectivePlan {
+    tree_template(comm, spec, k).cp
+}
+
+pub fn tree_template(comm: &mut Comm, spec: &CollectiveSpec, k: usize) -> CollectiveTemplate {
     debug_assert_eq!(spec.kind, CollectiveKind::Allreduce);
     assert!(k >= 2, "tree allreduce requires k >= 2");
     let n = spec.n_ranks;
     let mut plan = crate::netsim::Plan::new();
+    let mut rec = RoleRecorder::new();
     let mut edges = Vec::new();
     if n == 1 {
-        return CollectivePlan {
-            plan,
-            edges,
-            n_chunks: 1,
-            spec: spec.clone(),
-            algorithm: format!("tree-allreduce(k={k})"),
+        return CollectiveTemplate {
+            roles: rec.finish(&plan),
+            cp: CollectivePlan {
+                plan,
+                edges,
+                n_chunks: 1,
+                spec: spec.clone(),
+                algorithm: format!("tree-allreduce(k={k})"),
+            },
         };
     }
+    let class = comm.size_class_of(spec.bytes);
 
     // ---- phase 1: k-nomial reduce toward relabeled rank 0 -------------
     // acc[v] = ops that must complete before relabeled rank v's partial
     // holds its whole subtree's contributions
     let mut acc: Vec<Vec<OpId>> = vec![Vec::new(); n];
-    reduce_range(comm, &mut plan, &mut edges, spec, k, 0, n, &mut acc);
+    reduce_range(comm, &mut plan, &mut rec, &mut edges, spec, k, class, 0, n, &mut acc);
 
     // ---- phase 2: k-nomial broadcast of the reduced buffer ------------
     let root_ready = acc[0].clone();
-    bcast_range(comm, &mut plan, &mut edges, spec, k, 0, n, &root_ready);
+    bcast_range(
+        comm,
+        &mut plan,
+        &mut rec,
+        &mut edges,
+        spec,
+        k,
+        class,
+        0,
+        n,
+        &root_ready,
+    );
 
-    CollectivePlan {
-        plan,
-        edges,
-        n_chunks: 1,
-        spec: spec.clone(),
-        algorithm: format!("tree-allreduce(k={k})"),
+    CollectiveTemplate {
+        roles: rec.finish(&plan),
+        cp: CollectivePlan {
+            plan,
+            edges,
+            n_chunks: 1,
+            spec: spec.clone(),
+            algorithm: format!("tree-allreduce(k={k})"),
+        },
     }
 }
 
@@ -149,9 +204,11 @@ fn knomial_ranges(k: usize, lo: usize, size: usize) -> Vec<(usize, usize)> {
 fn reduce_range(
     comm: &mut Comm,
     plan: &mut crate::netsim::Plan,
+    rec: &mut RoleRecorder,
     edges: &mut Vec<FlowEdge>,
     spec: &CollectiveSpec,
     k: usize,
+    class: u8,
     lo: usize,
     size: usize,
     acc: &mut Vec<Vec<OpId>>,
@@ -161,15 +218,17 @@ fn reduce_range(
     }
     let ranges = knomial_ranges(k, lo, size);
     let head_len = ranges[0].1;
-    reduce_range(comm, plan, edges, spec, k, lo, head_len, acc);
+    reduce_range(comm, plan, rec, edges, spec, k, class, lo, head_len, acc);
     for &(start, len) in ranges.iter().skip(1) {
-        reduce_range(comm, plan, edges, spec, k, start, len, acc);
+        reduce_range(comm, plan, rec, edges, spec, k, class, start, len, acc);
         let src = spec.unlabel(start);
         let dst = spec.unlabel(lo);
         // the sub-head's partial is complete only after all its receives
         // (≤2 children inline, wider joins spill)
         let deps = Deps::from_slice(&acc[start]);
+        let mark = plan.len();
         let op = comm.send(plan, src, dst, spec.bytes, deps, None);
+        rec.tag(plan, mark, ByteRole::Whole, class);
         edges.push(FlowEdge::reduce(src, dst, 0, op));
         acc[lo].push(op);
     }
@@ -181,9 +240,11 @@ fn reduce_range(
 fn bcast_range(
     comm: &mut Comm,
     plan: &mut crate::netsim::Plan,
+    rec: &mut RoleRecorder,
     edges: &mut Vec<FlowEdge>,
     spec: &CollectiveSpec,
     k: usize,
+    class: u8,
     lo: usize,
     size: usize,
     have: &[OpId],
@@ -196,14 +257,16 @@ fn bcast_range(
     for &(start, len) in ranges.iter().skip(1) {
         let src = spec.unlabel(lo);
         let dst = spec.unlabel(start);
+        let mark = plan.len();
         let op = comm.send(plan, src, dst, spec.bytes, Deps::from_slice(have), Some((dst, 0)));
+        rec.tag(plan, mark, ByteRole::Whole, class);
         edges.push(FlowEdge::copy(src, dst, 0, op));
         child_ops.push((start, len, op));
     }
     let head_len = ranges[0].1;
-    bcast_range(comm, plan, edges, spec, k, lo, head_len, have);
+    bcast_range(comm, plan, rec, edges, spec, k, class, lo, head_len, have);
     for (start, len, op) in child_ops {
-        bcast_range(comm, plan, edges, spec, k, start, len, &[op]);
+        bcast_range(comm, plan, rec, edges, spec, k, class, start, len, &[op]);
     }
 }
 

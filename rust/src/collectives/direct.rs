@@ -3,29 +3,41 @@
 //! the paper models first.
 
 use crate::comm::Comm;
-use crate::netsim::Deps;
+use crate::netsim::{ByteRole, Deps};
 
+use super::template::{CollectiveTemplate, RoleRecorder};
 use super::traits::{BcastPlan, BcastSpec, FlowEdge};
 
 pub fn plan(comm: &mut Comm, spec: &BcastSpec) -> BcastPlan {
+    template(comm, spec).cp
+}
+
+pub fn template(comm: &mut Comm, spec: &BcastSpec) -> CollectiveTemplate {
     let mut plan = crate::netsim::Plan::new();
+    let mut rec = RoleRecorder::new();
     let mut edges = Vec::new();
+    let class = comm.size_class_of(spec.bytes);
     let mut prev: Option<crate::netsim::OpId> = None;
     for v in 1..spec.n_ranks {
         let dst = spec.unlabel(v);
         // blocking MPI_Send loop: each send departs after the previous
         // completes
         let deps = Deps::from_opt(prev);
+        let mark = plan.len();
         let op = comm.send(&mut plan, spec.root, dst, spec.bytes, deps, Some((dst, 0)));
+        rec.tag(&plan, mark, ByteRole::Whole, class);
         edges.push(FlowEdge::copy(spec.root, dst, 0, op));
         prev = Some(op);
     }
-    BcastPlan {
-        plan,
-        edges,
-        n_chunks: 1,
-        spec: spec.clone(),
-        algorithm: "direct".into(),
+    CollectiveTemplate {
+        roles: rec.finish(&plan),
+        cp: BcastPlan {
+            plan,
+            edges,
+            n_chunks: 1,
+            spec: spec.clone(),
+            algorithm: "direct".into(),
+        },
     }
 }
 

@@ -12,9 +12,10 @@
 use std::collections::HashMap;
 
 use crate::comm::Comm;
-use crate::netsim::{Deps, OpId};
+use crate::netsim::{ByteRole, Deps, OpId, NO_CLASS};
 use crate::topology::DeviceId;
 
+use super::template::{CollectiveTemplate, RoleRecorder};
 use super::traits::{BcastPlan, BcastSpec, FlowEdge};
 
 /// Host-to-host send startup costs (CPU-initiated, cheaper than
@@ -27,17 +28,25 @@ const GDR_WRITE_TS_NS: u64 = 1_300;
 const GDR_WRITE_ISSUE_NS: u64 = 250;
 
 pub fn plan(comm: &mut Comm, spec: &BcastSpec, k: usize) -> BcastPlan {
+    template(comm, spec, k).cp
+}
+
+pub fn template(comm: &mut Comm, spec: &BcastSpec, k: usize) -> CollectiveTemplate {
     assert!(k >= 2);
     let cluster = comm.cluster();
     let mut plan = crate::netsim::Plan::new();
+    let mut rec = RoleRecorder::new();
     let mut edges = Vec::new();
     if spec.n_ranks == 1 {
-        return BcastPlan {
-            plan,
-            edges,
-            n_chunks: 1,
-            spec: spec.clone(),
-            algorithm: format!("host-staged-knomial(k={k})"),
+        return CollectiveTemplate {
+            roles: rec.finish(&plan),
+            cp: BcastPlan {
+                plan,
+                edges,
+                n_chunks: 1,
+                spec: spec.clone(),
+                algorithm: format!("host-staged-knomial(k={k})"),
+            },
         };
     }
 
@@ -65,7 +74,10 @@ pub fn plan(comm: &mut Comm, spec: &BcastSpec, k: usize) -> BcastPlan {
     debug_assert_eq!(hosts[0], root_host);
 
     // ---- stage 1: root GPU -> its host (the M/B_PCIe term) ---------------
+    // fixed per-copy overhead, mechanism never varies with size: the
+    // template can rescale this op across any class (NO_CLASS)
     let root_dev = cluster.rank_device(spec.root);
+    let mark = plan.len();
     let d2h = comm.raw_transfer(
         &mut plan,
         root_dev,
@@ -75,12 +87,27 @@ pub fn plan(comm: &mut Comm, spec: &BcastSpec, k: usize) -> BcastPlan {
         Deps::none(),
         None,
     );
+    rec.tag(&plan, mark, ByteRole::Whole, NO_CLASS);
 
     // ---- stage 2: k-nomial over hosts -------------------------------------
     // have[i] = op after which hosts[i] holds the data
     let mut have: Vec<Option<OpId>> = vec![None; hosts.len()];
     have[0] = Some(d2h);
-    knomial_hosts(comm, &mut plan, &hosts, &mut have, k, 0, hosts.len(), spec.bytes);
+    // the host-to-host startup cost switches at the eager threshold, so
+    // these ops are class-sensitive
+    let class = comm.size_class_of(spec.bytes);
+    knomial_hosts(
+        comm,
+        &mut plan,
+        &mut rec,
+        &hosts,
+        &mut have,
+        k,
+        class,
+        0,
+        hosts.len(),
+        spec.bytes,
+    );
 
     // ---- stage 3: each host fans out to its GPUs (GDR write) -------------
     for (i, &host) in hosts.iter().enumerate() {
@@ -90,6 +117,7 @@ pub fn plan(comm: &mut Comm, spec: &BcastSpec, k: usize) -> BcastPlan {
                 continue;
             }
             let gpu = cluster.rank_device(r);
+            let mark = plan.len();
             let op = comm.raw_transfer_issue(
                 &mut plan,
                 host,
@@ -100,18 +128,22 @@ pub fn plan(comm: &mut Comm, spec: &BcastSpec, k: usize) -> BcastPlan {
                 Deps::one(have_op),
                 Some((r, 0)),
             );
+            rec.tag(&plan, mark, ByteRole::Whole, NO_CLASS);
             // attribute the rank-level edge to the nearest rank upstream:
             // the root (data origin) — host hops are transport detail
             edges.push(FlowEdge::copy(spec.root, r, 0, op));
         }
     }
 
-    BcastPlan {
-        plan,
-        edges,
-        n_chunks: 1,
-        spec: spec.clone(),
-        algorithm: format!("host-staged-knomial(k={k})"),
+    CollectiveTemplate {
+        roles: rec.finish(&plan),
+        cp: BcastPlan {
+            plan,
+            edges,
+            n_chunks: 1,
+            spec: spec.clone(),
+            algorithm: format!("host-staged-knomial(k={k})"),
+        },
     }
 }
 
@@ -120,9 +152,11 @@ pub fn plan(comm: &mut Comm, spec: &BcastSpec, k: usize) -> BcastPlan {
 fn knomial_hosts(
     comm: &mut Comm,
     plan: &mut crate::netsim::Plan,
+    rec: &mut RoleRecorder,
     hosts: &[DeviceId],
     have: &mut [Option<OpId>],
     k: usize,
+    class: u8,
     lo: usize,
     size: usize,
     bytes: u64,
@@ -152,13 +186,15 @@ fn knomial_hosts(
         // serialization across the head's sends comes from its shared
         // egress link + creation order (see collectives::knomial)
         let deps = Deps::from_opt(have[lo]);
+        let mark = plan.len();
         let op = comm.raw_transfer(plan, src, dst, bytes, ts, deps, None);
+        rec.tag(plan, mark, ByteRole::Whole, class);
         have[start] = Some(op);
     }
     let (_, head_len) = ranges[0];
-    knomial_hosts(comm, plan, hosts, have, k, lo, head_len, bytes);
+    knomial_hosts(comm, plan, rec, hosts, have, k, class, lo, head_len, bytes);
     for &(start, len) in ranges.iter().skip(1) {
-        knomial_hosts(comm, plan, hosts, have, k, start, len, bytes);
+        knomial_hosts(comm, plan, rec, hosts, have, k, class, start, len, bytes);
     }
 }
 

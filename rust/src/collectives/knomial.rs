@@ -7,31 +7,43 @@
 //! sub-range (sequentially, as blocking sends do).
 
 use crate::comm::Comm;
-use crate::netsim::{Deps, OpId};
+use crate::netsim::{ByteRole, Deps, OpId};
 
+use super::template::{CollectiveTemplate, RoleRecorder};
 use super::traits::{BcastPlan, BcastSpec, FlowEdge};
 
 pub fn plan(comm: &mut Comm, spec: &BcastSpec, k: usize) -> BcastPlan {
+    template(comm, spec, k).cp
+}
+
+pub fn template(comm: &mut Comm, spec: &BcastSpec, k: usize) -> CollectiveTemplate {
     assert!(k >= 2, "knomial requires k >= 2");
     let mut plan = crate::netsim::Plan::new();
+    let mut rec = RoleRecorder::new();
     let mut edges = Vec::new();
+    let class = comm.size_class_of(spec.bytes);
     // (holder, range) worklist in relabeled space; holder owns range[0]
     expand(
         comm,
         &mut plan,
+        &mut rec,
         &mut edges,
         spec,
         k,
+        class,
         0,
         spec.n_ranks,
         None,
     );
-    BcastPlan {
-        plan,
-        edges,
-        n_chunks: 1,
-        spec: spec.clone(),
-        algorithm: format!("knomial(k={k})"),
+    CollectiveTemplate {
+        roles: rec.finish(&plan),
+        cp: BcastPlan {
+            plan,
+            edges,
+            n_chunks: 1,
+            spec: spec.clone(),
+            algorithm: format!("knomial(k={k})"),
+        },
     }
 }
 
@@ -41,9 +53,11 @@ pub fn plan(comm: &mut Comm, spec: &BcastSpec, k: usize) -> BcastPlan {
 fn expand(
     comm: &mut Comm,
     plan: &mut crate::netsim::Plan,
+    rec: &mut RoleRecorder,
     edges: &mut Vec<FlowEdge>,
     spec: &BcastSpec,
     k: usize,
+    class: u8,
     lo: usize,
     size: usize,
     have: Option<OpId>,
@@ -70,15 +84,17 @@ fn expand(
         let src = spec.unlabel(lo);
         let dst = spec.unlabel(start);
         let deps = Deps::from_opt(have);
+        let mark = plan.len();
         let op = comm.send(plan, src, dst, spec.bytes, deps, Some((dst, 0)));
+        rec.tag(plan, mark, ByteRole::Whole, class);
         edges.push(FlowEdge::copy(src, dst, 0, op));
         child_ops.push((start, len, op));
     }
     // recurse into sub-ranges
     let (_, head_len) = starts[0];
-    expand(comm, plan, edges, spec, k, lo, head_len, have);
+    expand(comm, plan, rec, edges, spec, k, class, lo, head_len, have);
     for (start, len, op) in child_ops {
-        expand(comm, plan, edges, spec, k, start, len, Some(op));
+        expand(comm, plan, rec, edges, spec, k, class, start, len, Some(op));
     }
 }
 

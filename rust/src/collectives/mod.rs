@@ -35,9 +35,11 @@ pub mod knomial;
 pub mod pipelined_chain;
 pub mod reduce_scatter;
 pub mod scatter_allgather;
+pub mod template;
 pub mod traits;
 pub mod validate;
 
+pub use template::{cached_plan, CollectiveTemplate, TemplateCache};
 pub use traits::{
     Algorithm, BcastPlan, BcastSpec, CollectiveKind, CollectivePlan, CollectiveSpec, EdgeSem,
     FlowEdge,
@@ -45,9 +47,15 @@ pub use traits::{
 
 use crate::comm::Comm;
 
-/// Build the plan for `algo` over all cluster ranks. The algorithm must
-/// implement the spec's collective kind.
-pub fn plan(algo: &Algorithm, comm: &mut Comm, spec: &CollectiveSpec) -> CollectivePlan {
+/// Build the template for `algo` over all cluster ranks: the plan plus
+/// the per-op byte roles that let the template cache rescale it across
+/// the message-size axis. The algorithm must implement the spec's
+/// collective kind.
+pub fn template_for(
+    algo: &Algorithm,
+    comm: &mut Comm,
+    spec: &CollectiveSpec,
+) -> CollectiveTemplate {
     debug_assert_eq!(
         algo.kind(),
         spec.kind,
@@ -56,28 +64,36 @@ pub fn plan(algo: &Algorithm, comm: &mut Comm, spec: &CollectiveSpec) -> Collect
         spec.kind.name()
     );
     match algo {
-        Algorithm::Direct => direct::plan(comm, spec),
-        Algorithm::Chain => chain::plan(comm, spec),
-        Algorithm::PipelinedChain { chunk } => pipelined_chain::plan(comm, spec, *chunk),
-        Algorithm::Knomial { k } => knomial::plan(comm, spec, *k),
-        Algorithm::ScatterRingAllgather => scatter_allgather::plan(comm, spec),
-        Algorithm::HostStagedKnomial { k } => host_staged::plan(comm, spec, *k),
-        Algorithm::RingReduceScatter => reduce_scatter::plan(comm, spec),
-        Algorithm::RingAllgather => allgather::plan(comm, spec),
-        Algorithm::RingAllreduce => allreduce::ring(comm, spec),
-        Algorithm::TreeAllreduce { k } => allreduce::tree(comm, spec, *k),
+        Algorithm::Direct => direct::template(comm, spec),
+        Algorithm::Chain => chain::template(comm, spec),
+        Algorithm::PipelinedChain { chunk } => pipelined_chain::template(comm, spec, *chunk),
+        Algorithm::Knomial { k } => knomial::template(comm, spec, *k),
+        Algorithm::ScatterRingAllgather => scatter_allgather::template(comm, spec),
+        Algorithm::HostStagedKnomial { k } => host_staged::template(comm, spec, *k),
+        Algorithm::RingReduceScatter => reduce_scatter::template(comm, spec),
+        Algorithm::RingAllgather => allgather::template(comm, spec),
+        Algorithm::RingAllreduce => allreduce::ring_template(comm, spec),
+        Algorithm::TreeAllreduce { k } => allreduce::tree_template(comm, spec, *k),
     }
 }
 
-/// Simulated collective latency (plan makespan), ns. Uses the engine's
-/// makespan-only execution path, so a tuning sweep's inner loop performs
-/// no per-op heap allocation (DESIGN.md §Perf).
+/// Build a fresh plan for `algo` (no template caching — one-off callers
+/// and the parity suites; hot paths go through [`cached_plan`]).
+pub fn plan(algo: &Algorithm, comm: &mut Comm, spec: &CollectiveSpec) -> CollectivePlan {
+    template_for(algo, comm, spec).cp
+}
+
+/// Simulated collective latency (plan makespan), ns. Acquires the plan
+/// through the comm's template cache — across a sweep's message-size
+/// axis the DAG is built once and rescaled — and uses the engine's
+/// makespan-only execution path, so the inner loop performs no per-op
+/// heap allocation (DESIGN.md §Perf, §Plan templates).
 pub fn latency_ns(
     algo: &Algorithm,
     comm: &mut Comm,
     engine: &mut crate::netsim::Engine,
     spec: &CollectiveSpec,
 ) -> u64 {
-    let bp = plan(algo, comm, spec);
+    let bp = cached_plan(algo, comm, spec);
     engine.makespan_ns(&bp.plan)
 }

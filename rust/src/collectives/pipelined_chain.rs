@@ -14,38 +14,56 @@
 //! resolves per hop.
 
 use crate::comm::{chunk_sizes, Comm};
-use crate::netsim::{Deps, OpId};
+use crate::netsim::{ByteRole, Deps, OpId};
 
+use super::template::{CollectiveTemplate, RoleRecorder};
 use super::traits::{BcastPlan, BcastSpec, FlowEdge};
 
 pub fn plan(comm: &mut Comm, spec: &BcastSpec, chunk: u64) -> BcastPlan {
+    template(comm, spec, chunk).cp
+}
+
+pub fn template(comm: &mut Comm, spec: &BcastSpec, chunk: u64) -> CollectiveTemplate {
     let mut plan = crate::netsim::Plan::new();
+    let mut rec = RoleRecorder::new();
     let mut edges = Vec::new();
     let chunks = chunk_sizes(spec.bytes, chunk);
     // recv_op[v][c] = op that delivered chunk c to relabeled rank v
     let n = spec.n_ranks;
     let mut recv_op: Vec<Vec<Option<OpId>>> = vec![vec![None; chunks.len()]; n];
     for (c, &cbytes) in chunks.iter().enumerate() {
+        // the remainder chunk may sit in a different mechanism class
+        // than the full ones — recorded per chunk
+        let class = comm.size_class_of(cbytes);
+        let role = ByteRole::ChunkSlot {
+            index: c as u32,
+            chunk,
+        };
         for v in 1..n {
             let src = spec.unlabel(v - 1);
             let dst = spec.unlabel(v);
             // forward chunk c as soon as it arrived at v-1 (root always
             // has it); link FIFO order serialises chunks on the wire
             let deps = Deps::from_opt(recv_op[v - 1][c]);
+            let mark = plan.len();
             let op = comm.send(&mut plan, src, dst, cbytes, deps, Some((dst, c)));
+            rec.tag(&plan, mark, role, class);
             recv_op[v][c] = Some(op);
             edges.push(FlowEdge::copy(src, dst, c, op));
         }
     }
-    BcastPlan {
-        plan,
-        edges,
-        n_chunks: chunks.len(),
-        spec: spec.clone(),
-        algorithm: format!(
-            "pipelined-chain(C={})",
-            crate::util::bytes::format_size(chunk)
-        ),
+    CollectiveTemplate {
+        roles: rec.finish(&plan),
+        cp: BcastPlan {
+            plan,
+            edges,
+            n_chunks: chunks.len(),
+            spec: spec.clone(),
+            algorithm: format!(
+                "pipelined-chain(C={})",
+                crate::util::bytes::format_size(chunk)
+            ),
+        },
     }
 }
 

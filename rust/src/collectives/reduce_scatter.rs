@@ -12,22 +12,31 @@
 //! than the fabric moves the operands.
 
 use crate::comm::{chunk::equal_parts, Comm};
-use crate::netsim::{Deps, OpId};
+use crate::netsim::{ByteRole, Deps, OpId};
 
+use super::template::{CollectiveTemplate, RoleRecorder};
 use super::traits::{CollectiveKind, CollectivePlan, CollectiveSpec, FlowEdge};
 
 pub fn plan(comm: &mut Comm, spec: &CollectiveSpec) -> CollectivePlan {
+    template(comm, spec).cp
+}
+
+pub fn template(comm: &mut Comm, spec: &CollectiveSpec) -> CollectiveTemplate {
     debug_assert_eq!(spec.kind, CollectiveKind::ReduceScatter);
     let n = spec.n_ranks;
     let mut plan = crate::netsim::Plan::new();
+    let mut rec = RoleRecorder::new();
     let mut edges = Vec::new();
     if n == 1 {
-        return CollectivePlan {
-            plan,
-            edges,
-            n_chunks: 1,
-            spec: spec.clone(),
-            algorithm: "ring-reduce-scatter".into(),
+        return CollectiveTemplate {
+            roles: rec.finish(&plan),
+            cp: CollectivePlan {
+                plan,
+                edges,
+                n_chunks: 1,
+                spec: spec.clone(),
+                algorithm: "ring-reduce-scatter".into(),
+            },
         };
     }
     let parts = equal_parts(spec.bytes, n);
@@ -44,7 +53,17 @@ pub fn plan(comm: &mut Comm, spec: &CollectiveSpec) -> CollectivePlan {
             let deps = Deps::from_opt(acc[v][s]);
             // only the last hop delivers the fully reduced segment
             let label = if t == n - 2 { Some((dst, s)) } else { None };
+            let mark = plan.len();
             let op = comm.send(&mut plan, v, dst, parts[s], deps, label);
+            rec.tag(
+                &plan,
+                mark,
+                ByteRole::Part {
+                    index: s as u32,
+                    of: n as u32,
+                },
+                comm.size_class_of(parts[s]),
+            );
             edges.push(FlowEdge::reduce(v, dst, s, op));
             arrivals.push((dst, s, op));
         }
@@ -52,12 +71,15 @@ pub fn plan(comm: &mut Comm, spec: &CollectiveSpec) -> CollectivePlan {
             acc[dst][s] = Some(op);
         }
     }
-    CollectivePlan {
-        plan,
-        edges,
-        n_chunks: n,
-        spec: spec.clone(),
-        algorithm: "ring-reduce-scatter".into(),
+    CollectiveTemplate {
+        roles: rec.finish(&plan),
+        cp: CollectivePlan {
+            plan,
+            edges,
+            n_chunks: n,
+            spec: spec.clone(),
+            algorithm: "ring-reduce-scatter".into(),
+        },
     }
 }
 

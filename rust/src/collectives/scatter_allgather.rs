@@ -5,21 +5,30 @@
 //! `T = (⌈log₂ n⌉ + n − 1) × t_s + 2 × (n−1)/n × M/B`
 
 use crate::comm::{chunk::equal_parts, Comm};
-use crate::netsim::{Deps, OpId};
+use crate::netsim::{ByteRole, Deps, OpId};
 
+use super::template::{CollectiveTemplate, RoleRecorder};
 use super::traits::{BcastPlan, BcastSpec, FlowEdge};
 
 pub fn plan(comm: &mut Comm, spec: &BcastSpec) -> BcastPlan {
+    template(comm, spec).cp
+}
+
+pub fn template(comm: &mut Comm, spec: &BcastSpec) -> CollectiveTemplate {
     let n = spec.n_ranks;
     let mut plan = crate::netsim::Plan::new();
+    let mut rec = RoleRecorder::new();
     let mut edges = Vec::new();
     if n == 1 {
-        return BcastPlan {
-            plan,
-            edges,
-            n_chunks: 1,
-            spec: spec.clone(),
-            algorithm: "scatter-ring-allgather".into(),
+        return CollectiveTemplate {
+            roles: rec.finish(&plan),
+            cp: BcastPlan {
+                plan,
+                edges,
+                n_chunks: 1,
+                spec: spec.clone(),
+                algorithm: "scatter-ring-allgather".into(),
+            },
         };
     }
     let parts = equal_parts(spec.bytes, n);
@@ -28,9 +37,11 @@ pub fn plan(comm: &mut Comm, spec: &BcastSpec) -> BcastPlan {
 
     // ---- phase 1: binomial scatter (recursive halving) -------------------
     // holder v owns parts [v, v+size); sends the upper half to v+half
+    #[allow(clippy::too_many_arguments)]
     fn scatter(
         comm: &mut Comm,
         plan: &mut crate::netsim::Plan,
+        rec: &mut RoleRecorder,
         edges: &mut Vec<FlowEdge>,
         spec: &BcastSpec,
         parts: &[u64],
@@ -51,17 +62,40 @@ pub fn plan(comm: &mut Comm, spec: &BcastSpec) -> BcastPlan {
         // the head of the upper range keeps part `upper_lo` permanently —
         // that is its *delivery*; the rest of the range is custody it
         // forwards deeper into the scatter tree
+        let mark = plan.len();
         let op = comm.send(plan, src, dst, bytes, deps, Some((dst, upper_lo)));
+        rec.tag(
+            plan,
+            mark,
+            ByteRole::PartRange {
+                from: upper_lo as u32,
+                to: (lo + size) as u32,
+                of: spec.n_ranks as u32,
+            },
+            comm.size_class_of(bytes),
+        );
         // one flow edge per part carried (custody included) so the
         // validator can track possession precisely
         for p in upper_lo..lo + size {
             part_at[upper_lo][p] = Some(op);
             edges.push(FlowEdge::copy(src, dst, p, op));
         }
-        scatter(comm, plan, edges, spec, parts, part_at, lo, size - half, have);
         scatter(
             comm,
             plan,
+            rec,
+            edges,
+            spec,
+            parts,
+            part_at,
+            lo,
+            size - half,
+            have,
+        );
+        scatter(
+            comm,
+            plan,
+            rec,
             edges,
             spec,
             parts,
@@ -72,7 +106,7 @@ pub fn plan(comm: &mut Comm, spec: &BcastSpec) -> BcastPlan {
         );
     }
     scatter(
-        comm, &mut plan, &mut edges, spec, &parts, &mut part_at, 0, n, None,
+        comm, &mut plan, &mut rec, &mut edges, spec, &parts, &mut part_at, 0, n, None,
     );
 
     // ---- phase 2: ring allgather -----------------------------------------
@@ -96,7 +130,17 @@ pub fn plan(comm: &mut Comm, spec: &BcastSpec) -> BcastPlan {
                 assert!(v == 0, "ring allgather: rank {v} missing part {part}");
             }
             let deps = Deps::from_opt(owned[v][part]);
+            let mark = plan.len();
             let op = comm.send(&mut plan, src, dst, parts[part], deps, Some((dst, part)));
+            rec.tag(
+                &plan,
+                mark,
+                ByteRole::Part {
+                    index: part as u32,
+                    of: n as u32,
+                },
+                comm.size_class_of(parts[part]),
+            );
             edges.push(FlowEdge::copy(src, dst, part, op));
             new_ops.push((dst_v, part, op));
         }
@@ -108,12 +152,15 @@ pub fn plan(comm: &mut Comm, spec: &BcastSpec) -> BcastPlan {
         }
     }
 
-    BcastPlan {
-        plan,
-        edges,
-        n_chunks: n,
-        spec: spec.clone(),
-        algorithm: "scatter-ring-allgather".into(),
+    CollectiveTemplate {
+        roles: rec.finish(&plan),
+        cp: BcastPlan {
+            plan,
+            edges,
+            n_chunks: n,
+            spec: spec.clone(),
+            algorithm: "scatter-ring-allgather".into(),
+        },
     }
 }
 

@@ -1,0 +1,389 @@
+//! Collective plan templates: build each collective's op DAG **once**
+//! per (algorithm, chunk shape, topology) and rescale per message size.
+//!
+//! PR 2 made *executing* a plan allocation-free; this layer removes the
+//! remaining per-grid-point cost of a tuning sweep — plan
+//! *construction*. All message sizes at a fixed (algorithm, chunk count,
+//! topology) share the same DAG shape, routes, overheads and labels,
+//! differing only in per-op byte counts, so every builder records a
+//! [`ByteRole`] per op ([`RoleRecorder`]) and the [`TemplateCache`] on
+//! [`Comm`] serves later sizes by rewriting bytes in place
+//! (`netsim::transfer::rescale`).
+//!
+//! Soundness: a rescale is legal only if every size-class-sensitive op
+//! stays in the class it was built with — `Comm` resolves mechanism
+//! selection at a canonical per-class size, so equal class ⇒ identical
+//! mechanism ⇒ identical structure. A class boundary crossing returns a
+//! cache miss and the plan is rebuilt. The cache key carries the
+//! cluster's topology generation (mirroring `RouteId`'s staleness
+//! check), so a mutation orphans every cached structure instead of
+//! serving plans whose interned routes no longer exist.
+
+use std::collections::HashMap;
+
+use crate::comm::{protocol, Comm};
+use crate::netsim::transfer::{self, ByteRole, OpByte};
+use crate::netsim::Plan;
+
+use super::traits::{Algorithm, CollectiveKind, CollectivePlan, CollectiveSpec};
+
+/// A built collective plus the per-op byte roles needed to rescale it.
+/// `cp` is always concrete: it is the instance served to callers, and
+/// rescaling mutates its byte counts in place.
+#[derive(Debug, Clone)]
+pub struct CollectiveTemplate {
+    pub cp: CollectivePlan,
+    pub roles: Vec<OpByte>,
+}
+
+impl CollectiveTemplate {
+    /// Rescale the held plan to a new message size. Returns `false` —
+    /// the instance is torn and must be discarded — when an op crosses
+    /// its mechanism size class (see `netsim::transfer::rescale`).
+    pub fn rescale(&mut self, bytes: u64, classify: impl Fn(u64) -> u8) -> bool {
+        if transfer::rescale(&mut self.cp.plan, &self.roles, bytes, classify) {
+            self.cp.spec.bytes = bytes;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// Builder-side shim: records one [`OpByte`] per op pushed into a plan.
+/// Builders mark the plan length before each emit and tag everything the
+/// emit appended (staged sends append two ops; both carry the payload).
+#[derive(Debug, Default)]
+pub struct RoleRecorder {
+    roles: Vec<OpByte>,
+}
+
+impl RoleRecorder {
+    pub fn new() -> RoleRecorder {
+        RoleRecorder { roles: Vec::new() }
+    }
+
+    /// Tag every op emitted since `mark` (the plan's length before the
+    /// emit) with `role` at build-time size class `class`
+    /// (`netsim::NO_CLASS` when the op's structure never consulted one).
+    pub fn tag(&mut self, plan: &Plan, mark: usize, role: ByteRole, class: u8) {
+        debug_assert_eq!(self.roles.len(), mark, "ops emitted without a byte role");
+        self.roles.resize(plan.len(), OpByte { role, class });
+    }
+
+    /// Finalize; every op must have been tagged.
+    pub fn finish(self, plan: &Plan) -> Vec<OpByte> {
+        assert_eq!(
+            self.roles.len(),
+            plan.len(),
+            "template builder left ops without byte roles"
+        );
+        self.roles
+    }
+}
+
+/// What built a template: the MPI algorithm menu or an NCCL backend
+/// (keyed by a parameter fingerprint, since `NcclParams` shapes the
+/// plan but is not part of [`Algorithm`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AlgoKey {
+    Mpi(Algorithm),
+    NcclRing { params_fp: u64 },
+    NcclHier { chunk: u64, params_fp: u64 },
+}
+
+/// Everything that fixes a plan's structure except the message size.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TemplateKey {
+    pub kind: CollectiveKind,
+    pub algo: AlgoKey,
+    pub root: usize,
+    pub n_ranks: usize,
+    /// Structural shape along the size axis: the chunk/slice count for
+    /// chunked algorithms (1 otherwise; the hierarchical NCCL backend
+    /// packs `chunk count << 32 | total slices`). Part-based algorithms
+    /// need nothing here — their shape is `n_ranks`, already in the key.
+    pub shape: u64,
+    /// Topology generation the template was built against
+    /// ([`crate::topology::Cluster::generation`]); a mutation bumps it
+    /// and orphans the entry.
+    pub generation: u32,
+}
+
+/// Number of slots `comm::chunk_sizes(total, chunk)` would produce,
+/// without allocating the vector.
+pub fn n_chunk_slots(total: u64, chunk: u64) -> u64 {
+    if total == 0 {
+        return 1;
+    }
+    if chunk == 0 || chunk >= total {
+        return 1;
+    }
+    total / chunk + u64::from(total % chunk > 0)
+}
+
+fn mpi_shape(algo: &Algorithm, spec: &CollectiveSpec) -> u64 {
+    match algo {
+        Algorithm::PipelinedChain { chunk } => n_chunk_slots(spec.bytes, *chunk),
+        _ => 1,
+    }
+}
+
+/// Total cached-op budget: past this the cache clears wholesale before
+/// inserting (epoch eviction). Bounds worst-case memory — the largest
+/// pipelined plans at big presets run to hundreds of thousands of ops
+/// each and, being chunk-count-keyed, a sweep inserts one per grid size
+/// — while staying far above what one tuning sweep's reusable shapes
+/// actually occupy (a few hundred thousand ops), so the clear never
+/// fires on the hot path.
+const OP_BUDGET: usize = 2_000_000;
+
+/// The per-`Comm` template cache. Entries are full [`CollectiveTemplate`]s
+/// whose plan instance is rescaled in place on every hit; hit/miss
+/// counters feed the bench report's cache-hit-rate row. Memory is
+/// bounded by [`OP_BUDGET`] total cached ops (epoch eviction).
+#[derive(Debug, Clone)]
+pub struct TemplateCache {
+    entries: HashMap<TemplateKey, CollectiveTemplate>,
+    /// Generation of the entries currently held; a key from a newer
+    /// generation sweeps the map (topology changed under us).
+    generation: u32,
+    /// Sum of `plan.len()` over all entries (budget accounting).
+    total_ops: usize,
+    op_budget: usize,
+    hits: u64,
+    misses: u64,
+}
+
+impl Default for TemplateCache {
+    fn default() -> TemplateCache {
+        TemplateCache {
+            entries: HashMap::new(),
+            generation: 0,
+            total_ops: 0,
+            op_budget: OP_BUDGET,
+            hits: 0,
+            misses: 0,
+        }
+    }
+}
+
+impl TemplateCache {
+    pub fn new() -> TemplateCache {
+        TemplateCache::default()
+    }
+
+    /// Shrink the op budget (tests exercise the eviction path without
+    /// building two million ops).
+    #[cfg(test)]
+    pub(crate) fn set_op_budget(&mut self, budget: usize) {
+        self.op_budget = budget;
+    }
+
+    /// (hits, misses) since construction.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits, self.misses)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    fn sweep_generation(&mut self, generation: u32) {
+        if self.generation != generation {
+            self.entries.clear();
+            self.total_ops = 0;
+            self.generation = generation;
+        }
+    }
+
+    /// Try to serve `key` at `bytes` by rescaling the cached instance in
+    /// place. Counts a hit on success; on failure (absent, or a class
+    /// boundary was crossed) the stale entry is dropped and a miss is
+    /// counted — the caller rebuilds and [`Self::insert`]s.
+    pub(crate) fn try_rescale(
+        &mut self,
+        key: &TemplateKey,
+        bytes: u64,
+        classify: impl Fn(u64) -> u8,
+    ) -> bool {
+        self.sweep_generation(key.generation);
+        let ok = match self.entries.get_mut(key) {
+            Some(tpl) => tpl.cp.spec.bytes == bytes || tpl.rescale(bytes, classify),
+            None => false,
+        };
+        if ok {
+            self.hits += 1;
+        } else {
+            self.misses += 1;
+            if let Some(old) = self.entries.remove(key) {
+                self.total_ops -= old.cp.plan.len();
+            }
+        }
+        ok
+    }
+
+    pub(crate) fn insert(&mut self, key: TemplateKey, tpl: CollectiveTemplate) {
+        self.sweep_generation(key.generation);
+        debug_assert_eq!(tpl.roles.len(), tpl.cp.plan.len());
+        let ops = tpl.cp.plan.len();
+        if self.total_ops + ops > self.op_budget && !self.entries.is_empty() {
+            // epoch eviction: cheaper and simpler than LRU, and the
+            // budget is sized so real sweeps never reach it
+            self.entries.clear();
+            self.total_ops = 0;
+        }
+        self.total_ops += ops;
+        if let Some(old) = self.entries.insert(key, tpl) {
+            self.total_ops -= old.cp.plan.len();
+        }
+    }
+
+    /// The cached instance for a key known to be present.
+    pub(crate) fn plan_for(&self, key: &TemplateKey) -> &CollectivePlan {
+        &self.entries.get(key).expect("template cache entry").cp
+    }
+}
+
+/// Acquire the plan for `algo` at `spec` through the comm's template
+/// cache: a hit rescales byte counts in place (no construction at all);
+/// a miss builds the template fresh and caches it. The returned plan is
+/// valid until the next acquisition through the same `Comm`.
+pub fn cached_plan<'a, 'c>(
+    algo: &Algorithm,
+    comm: &'a mut Comm<'c>,
+    spec: &CollectiveSpec,
+) -> &'a CollectivePlan {
+    let key = TemplateKey {
+        kind: spec.kind,
+        algo: AlgoKey::Mpi(*algo),
+        root: spec.root,
+        n_ranks: spec.n_ranks,
+        shape: mpi_shape(algo, spec),
+        generation: comm.cluster().generation(),
+    };
+    let params = comm.params().clone();
+    let hit = comm
+        .template_cache_mut()
+        .try_rescale(&key, spec.bytes, |b| protocol::size_class(&params, b));
+    if !hit {
+        let tpl = super::template_for(algo, comm, spec);
+        comm.template_cache_mut().insert(key, tpl);
+    }
+    comm.template_cache().plan_for(&key)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::Engine;
+    use crate::topology::presets::kesch;
+
+    #[test]
+    fn n_chunk_slots_matches_chunk_sizes() {
+        for (total, chunk) in [
+            (0u64, 64u64),
+            (5, 0),
+            (7, 7),
+            (7, 100),
+            (100, 30),
+            (1 << 20, 64 << 10),
+            ((1 << 20) + 1, 64 << 10),
+        ] {
+            assert_eq!(
+                n_chunk_slots(total, chunk),
+                crate::comm::chunk_sizes(total, chunk).len() as u64,
+                "total={total} chunk={chunk}"
+            );
+        }
+    }
+
+    #[test]
+    fn cache_hits_across_the_size_axis() {
+        let cluster = kesch(1, 8);
+        let mut comm = Comm::new(&cluster);
+        let mut engine = Engine::new(&cluster);
+        let algo = Algorithm::Knomial { k: 2 };
+        let mut reference = Vec::new();
+        for &bytes in &[4u64, 512, 8 << 10] {
+            let spec = CollectiveSpec::new(0, 8, bytes);
+            let ns = engine.makespan_ns(&cached_plan(&algo, &mut comm, &spec).plan);
+            reference.push((bytes, ns));
+        }
+        // first size misses, same-class re-sizes rescale in place
+        let (hits, misses) = comm.template_cache().stats();
+        assert_eq!(misses, 1, "one structural build for the whole class");
+        assert_eq!(hits, 2);
+        assert_eq!(comm.template_cache().len(), 1);
+        // revisiting sizes is pure
+        for &(bytes, want) in &reference {
+            let spec = CollectiveSpec::new(0, 8, bytes);
+            let ns = engine.makespan_ns(&cached_plan(&algo, &mut comm, &spec).plan);
+            assert_eq!(ns, want, "revisit at {bytes}B changed the makespan");
+        }
+    }
+
+    #[test]
+    fn class_boundary_rebuilds() {
+        let cluster = kesch(1, 8);
+        let mut comm = Comm::new(&cluster);
+        let algo = Algorithm::Knomial { k: 2 };
+        let small = CollectiveSpec::new(0, 8, 4);
+        let large = CollectiveSpec::new(0, 8, 1 << 20); // crosses eager
+        let _ = cached_plan(&algo, &mut comm, &small);
+        let _ = cached_plan(&algo, &mut comm, &large);
+        let (_, misses) = comm.template_cache().stats();
+        assert_eq!(misses, 2, "crossing the eager class must rebuild");
+    }
+
+    #[test]
+    fn pipelined_chunk_count_keys_separately() {
+        let cluster = kesch(1, 8);
+        let mut comm = Comm::new(&cluster);
+        let algo = Algorithm::PipelinedChain { chunk: 1 << 20 };
+        // 8 chunks vs 9 chunks: different DAG shapes, separate entries
+        let a = CollectiveSpec::new(0, 8, 8 << 20);
+        let b = CollectiveSpec::new(0, 8, (8 << 20) + 1);
+        let _ = cached_plan(&algo, &mut comm, &a);
+        let _ = cached_plan(&algo, &mut comm, &b);
+        assert_eq!(comm.template_cache().len(), 2);
+        // 8 MB + 4 KB: nine slots again with the remainder still in the
+        // small class — hits the second entry's shape and rescales
+        let c = CollectiveSpec::new(0, 8, (8 << 20) + 4096);
+        let _ = cached_plan(&algo, &mut comm, &c);
+        let (hits, misses) = comm.template_cache().stats();
+        assert_eq!((hits, misses), (1, 2));
+    }
+
+    #[test]
+    fn roots_key_separately() {
+        let cluster = kesch(1, 8);
+        let mut comm = Comm::new(&cluster);
+        let algo = Algorithm::Chain;
+        let _ = cached_plan(&algo, &mut comm, &CollectiveSpec::new(0, 8, 4096));
+        let _ = cached_plan(&algo, &mut comm, &CollectiveSpec::new(3, 8, 4096));
+        assert_eq!(comm.template_cache().len(), 2);
+    }
+
+    #[test]
+    fn op_budget_bounds_cache_memory() {
+        let cluster = kesch(1, 8);
+        let mut comm = Comm::new(&cluster);
+        // chain at 8 ranks = 7 ops per entry; budget of 10 fits one
+        comm.template_cache_mut().set_op_budget(10);
+        let algo = Algorithm::Chain;
+        let _ = cached_plan(&algo, &mut comm, &CollectiveSpec::new(0, 8, 4096));
+        assert_eq!(comm.template_cache().len(), 1);
+        // a second root's entry would exceed the budget: epoch-evict
+        let _ = cached_plan(&algo, &mut comm, &CollectiveSpec::new(3, 8, 4096));
+        assert_eq!(comm.template_cache().len(), 1, "old epoch must be dropped");
+        // the surviving entry still serves correct plans
+        let bp = cached_plan(&algo, &mut comm, &CollectiveSpec::new(3, 8, 4096));
+        assert_eq!(bp.spec.root, 3);
+        assert_eq!(bp.plan.len(), 7);
+    }
+}

@@ -2,17 +2,22 @@
 
 use std::collections::HashMap;
 
+use crate::collectives::template::TemplateCache;
 use crate::netsim::{Deps, OpId, Plan, SimOp};
 use crate::topology::{Cluster, DeviceId};
 
-use super::protocol::{select, CommParams, PathPlan};
+use super::protocol::{class_representative, select, size_class, CommParams, PathPlan};
 
 /// The point-to-point engine bound to one cluster. Caches path plans per
-/// (src, dst, size-class) — mechanism choice depends only on the class.
+/// (src, dst, size-class) — mechanism choice depends only on the class —
+/// and carries the collective-plan [`TemplateCache`] so plan structure
+/// is built once per (algorithm, chunk shape, topology) and rescaled per
+/// message size (DESIGN.md §Plan templates).
 pub struct Comm<'c> {
     cluster: &'c Cluster,
     params: CommParams,
     cache: HashMap<(DeviceId, DeviceId, u8), PathPlan>,
+    templates: TemplateCache,
 }
 
 impl<'c> Comm<'c> {
@@ -25,6 +30,7 @@ impl<'c> Comm<'c> {
             cluster,
             params,
             cache: HashMap::new(),
+            templates: TemplateCache::new(),
         }
     }
 
@@ -38,28 +44,52 @@ impl<'c> Comm<'c> {
         &self.params
     }
 
-    /// Size class for plan caching: eager vs rendezvous vs staging
-    /// decisions switch at parameter thresholds; within a class the plan
-    /// is size-independent.
-    fn size_class(&self, bytes: u64) -> u8 {
-        let mut class = 0u8;
-        if bytes > self.params.eager_threshold {
-            class |= 1;
-        }
-        if bytes > self.params.staging_preferred_below {
-            class |= 2;
-        }
-        class
+    /// The mechanism size class of a byte count (eager vs rendezvous vs
+    /// staging switchovers) — recorded into plan templates so rescaling
+    /// knows when a new size would have selected differently.
+    pub fn size_class_of(&self, bytes: u64) -> u8 {
+        size_class(&self.params, bytes)
     }
 
-    /// Resolve (and cache) a path plan.
+    /// The collective plan-template cache (hit-rate inspection).
+    pub fn template_cache(&self) -> &TemplateCache {
+        &self.templates
+    }
+
+    /// Mutable template cache — the `collectives::template::cached_plan`
+    /// entry point drives it; most callers never touch this directly.
+    pub fn template_cache_mut(&mut self) -> &mut TemplateCache {
+        &mut self.templates
+    }
+
+    /// Detach the template cache to carry it across `Comm` instances
+    /// (pair with [`Self::set_template_cache`]). Entries are keyed on the
+    /// cluster's topology generation, so reuse after a mutation misses
+    /// instead of serving stale structure.
+    pub fn take_template_cache(&mut self) -> TemplateCache {
+        std::mem::take(&mut self.templates)
+    }
+
+    pub fn set_template_cache(&mut self, templates: TemplateCache) {
+        self.templates = templates;
+    }
+
+    /// Resolve (and cache) a path plan. Selection runs on the class's
+    /// canonical representative size, making the resolved plan a pure
+    /// function of (cluster, params, src, dst, class) — independent of
+    /// the byte values or visit order that warmed the cache. Template
+    /// rescaling and the parallel tuner's shared-comm workers rely on
+    /// this purity.
     pub fn path_plan(&mut self, src: DeviceId, dst: DeviceId, bytes: u64) -> &PathPlan {
-        let key = (src, dst, self.size_class(bytes));
+        let class = size_class(&self.params, bytes);
+        let key = (src, dst, class);
         let cluster = self.cluster;
         let params = &self.params;
         self.cache
             .entry(key)
-            .or_insert_with(|| select(cluster, params, src, dst, bytes))
+            .or_insert_with(|| {
+                select(cluster, params, src, dst, class_representative(params, class))
+            })
     }
 
     /// Uncontended estimate for one rank-to-rank transfer, ns.
@@ -249,6 +279,29 @@ mod tests {
         let a = comm.estimate_ns(0, 9, 1024);
         let b = comm.estimate_ns(0, 9, 1024);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn path_plans_are_visit_order_independent() {
+        // canonical per-class selection: estimates must not depend on
+        // which byte value first warmed the (src, dst, class) entry
+        let c = kesch(2, 8);
+        let sizes = [256u64 << 20, 4, 1 << 20, (16 << 10) + 1];
+        let mut fwd = Comm::new(&c);
+        for &b in &sizes {
+            let _ = fwd.estimate_ns(0, 9, b);
+        }
+        let mut bwd = Comm::new(&c);
+        for &b in sizes.iter().rev() {
+            let _ = bwd.estimate_ns(0, 9, b);
+        }
+        for &b in &sizes {
+            assert_eq!(
+                fwd.estimate_ns(0, 9, b),
+                bwd.estimate_ns(0, 9, b),
+                "estimate at {b}B depends on cache warm order"
+            );
+        }
     }
 
     #[test]

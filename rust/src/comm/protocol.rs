@@ -71,6 +71,40 @@ impl Default for CommParams {
     }
 }
 
+/// Mechanism size class of a byte count: bit 0 set above the
+/// eager/rendezvous switchover, bit 1 set above the intranode
+/// staging-preference bound. [`select`]'s branching is a pure function
+/// of the class (it is evaluated at [`class_representative`]), which is
+/// what lets path-plan caches, plan templates and the parallel tuner
+/// share state without becoming visit-order dependent.
+pub fn size_class(params: &CommParams, bytes: u64) -> u8 {
+    let mut class = 0u8;
+    if bytes > params.eager_threshold {
+        class |= 1;
+    }
+    if bytes > params.staging_preferred_below {
+        class |= 2;
+    }
+    class
+}
+
+/// The canonical byte count [`select`] evaluates for a class — the
+/// smallest size in it. Selection outcomes must not vary within a class
+/// (the threshold branches cannot by construction; the cross-socket
+/// staged-vs-GDR-read estimate comparison does not in practice because
+/// staging both starts ahead at the class floor and scales with a
+/// shallower slope — guarded by the template golden-parity suite).
+pub fn class_representative(params: &CommParams, class: u8) -> u64 {
+    let mut rep = 1u64;
+    if class & 1 != 0 {
+        rep = params.eager_threshold + 1;
+    }
+    if class & 2 != 0 {
+        rep = rep.max(params.staging_preferred_below + 1);
+    }
+    rep
+}
+
 /// A resolved transfer recipe between two devices. Routes are interned
 /// ids, so the whole recipe is `Copy` — the per-send cache hit on
 /// [`super::p2p::Comm`] no longer clones hop vectors (DESIGN.md §Perf).
@@ -202,6 +236,56 @@ pub fn select(
 mod tests {
     use super::*;
     use crate::topology::presets::kesch;
+
+    #[test]
+    fn class_representative_is_a_class_member() {
+        let p = CommParams::default();
+        for bytes in [
+            1u64,
+            4,
+            16 << 10,
+            (16 << 10) + 1,
+            4 << 20,
+            (4 << 20) + 1,
+            256 << 20,
+        ] {
+            let class = size_class(&p, bytes);
+            assert_eq!(
+                size_class(&p, class_representative(&p, class)),
+                class,
+                "representative left its class at {bytes}B"
+            );
+        }
+    }
+
+    #[test]
+    fn selection_is_constant_within_a_class() {
+        // the assumption canonical path-plan resolution (and therefore
+        // plan-template rescaling) rests on: any two byte values in one
+        // size class resolve to the same mechanism for every pair
+        let c = kesch(2, 16);
+        let p = CommParams::default();
+        let pairs = [(0usize, 1usize), (0, 8), (0, 16)];
+        let groups: [&[u64]; 3] = [
+            &[1, 512, 16 << 10],                // class 0
+            &[(16 << 10) + 1, 1 << 20, 4 << 20], // class 1
+            &[(4 << 20) + 1, 64 << 20, 256 << 20], // class 3
+        ];
+        for (a, b) in pairs {
+            for group in groups {
+                let mechanisms: Vec<Mechanism> = group
+                    .iter()
+                    .map(|&bytes| {
+                        select(&c, &p, c.rank_device(a), c.rank_device(b), bytes).mechanism()
+                    })
+                    .collect();
+                assert!(
+                    mechanisms.windows(2).all(|w| w[0] == w[1]),
+                    "{a}->{b}: mechanism varied within a class: {mechanisms:?}"
+                );
+            }
+        }
+    }
 
     #[test]
     fn intranode_peer_uses_ipc() {

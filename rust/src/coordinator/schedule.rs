@@ -82,8 +82,12 @@ pub fn comm_time_ns(
 ) -> u64 {
     match backend {
         BcastBackend::NcclMv2(params) => {
-            let merged = merge_schedule(comm, messages, |comm, spec| {
-                hierarchical::plan(comm, params, spec, hierarchical::DEFAULT_CHUNK).plan
+            // template-cached: one hierarchical DAG per (root, chunk
+            // shape), rescaled across the schedule's message sizes
+            let merged = merge_schedule(comm, messages, |comm, spec, out| {
+                out.merge(
+                    &hierarchical::cached(comm, params, spec, hierarchical::DEFAULT_CHUNK).plan,
+                );
             });
             execute(engine, merged)
         }
@@ -91,7 +95,9 @@ pub fn comm_time_ns(
             // candidate 1: per-message isolated-latency tuned picks
             let mut best = execute(
                 engine,
-                merge_schedule(comm, messages, |comm, spec| sel.plan(comm, spec).plan),
+                merge_schedule(comm, messages, |comm, spec, out| {
+                    out.merge(&sel.cached_plan(comm, spec).plan);
+                }),
             );
             // candidates 2..: uniform algorithms judged on the schedule
             use crate::collectives::Algorithm;
@@ -103,8 +109,8 @@ pub fn comm_time_ns(
                 Algorithm::HostStagedKnomial { k: 4 },
             ];
             for algo in uniform {
-                let merged = merge_schedule(comm, messages, |comm, spec| {
-                    crate::collectives::plan(&algo, comm, spec).plan
+                let merged = merge_schedule(comm, messages, |comm, spec, out| {
+                    out.merge(&crate::collectives::cached_plan(&algo, comm, spec).plan);
                 });
                 best = best.min(execute(engine, merged));
             }
@@ -154,7 +160,9 @@ pub fn allreduce_time_ns(
             continue;
         }
         let spec = CollectiveSpec::allreduce(n, bytes);
-        merged.merge(&sel.plan(comm, &spec).plan);
+        // template-cached: equal-size buckets (the common case for fused
+        // gradients) rescale the same DAG instead of rebuilding it
+        merged.merge(&sel.cached_plan(comm, &spec).plan);
     }
     execute(engine, merged)
 }
@@ -162,7 +170,10 @@ pub fn allreduce_time_ns(
 fn merge_schedule(
     comm: &mut Comm,
     messages: &[BcastMsg],
-    mut build: impl FnMut(&mut Comm, &BcastSpec) -> crate::netsim::Plan,
+    // merges its plan into the accumulator — plans may be borrowed out
+    // of the comm's template cache, so the callee does the merge while
+    // the borrow is live
+    mut merge_one: impl FnMut(&mut Comm, &BcastSpec, &mut crate::netsim::Plan),
 ) -> crate::netsim::Plan {
     let n = comm.cluster().n_gpus();
     let mut merged = crate::netsim::Plan::new();
@@ -171,8 +182,7 @@ fn merge_schedule(
             continue;
         }
         let spec = BcastSpec::new(msg.root % n, n, msg.bytes);
-        let plan = build(comm, &spec);
-        merged.merge(&plan);
+        merge_one(comm, &spec, &mut merged);
     }
     merged
 }

@@ -1,7 +1,9 @@
 //! `ncclBcast` model: persistent-kernel ring pipeline.
 
-use crate::collectives::{BcastPlan, BcastSpec, FlowEdge};
-use crate::netsim::{Deps, OpId, Plan, SimOp};
+use crate::collectives::template::{AlgoKey, CollectiveTemplate, RoleRecorder, TemplateKey};
+use crate::collectives::{BcastPlan, BcastSpec, CollectiveKind, CollectivePlan, FlowEdge};
+use crate::comm::Comm;
+use crate::netsim::{ByteRole, Deps, OpId, Plan, SimOp, NO_CLASS};
 use crate::topology::Cluster;
 
 use super::cost::NcclParams;
@@ -15,6 +17,13 @@ use super::ring::ring_from;
 /// slice costs `hop_ns` (flag sync + copy start) and rides the PCIe
 /// fabric at `copy_bw`. Pairs without peer access bounce through the
 /// source's host (pinned staging), as NCCL 1.x's via-host transport does.
+///
+/// Every emitted op is tagged with its byte role in `rec` (all
+/// `NO_CLASS`: hop costs are fixed parameters, structure depends only on
+/// topology and slice count). `outer` nests the roles under a
+/// hierarchical chunk: `Some((chunk index, chunk granularity))` when the
+/// ring moves one pipeline chunk rather than the whole message.
+#[allow(clippy::too_many_arguments)]
 pub fn plan_ring(
     cluster: &Cluster,
     params: &NcclParams,
@@ -24,7 +33,9 @@ pub fn plan_ring(
     // chunk labels get offset by this (hierarchical pipelining reuses us
     // per chunk)
     chunk_base: usize,
+    outer: Option<(u32, u64)>,
     plan: &mut Plan,
+    rec: &mut RoleRecorder,
     edges: &mut Vec<FlowEdge>,
     launch: &[Option<OpId>],
     // per-rank op that must precede the root's first send (e.g. the
@@ -43,6 +54,18 @@ pub fn plan_ring(
         let dst_dev = cluster.rank_device(dst);
         let peer = cluster.peer_access(src_dev, dst_dev);
         for (s, &sbytes) in slices.iter().enumerate() {
+            let role = match outer {
+                Some((oc, ochunk)) => ByteRole::SliceOfChunk {
+                    outer: oc,
+                    chunk: ochunk,
+                    index: s as u32,
+                    slice: params.slice_bytes,
+                },
+                None => ByteRole::ChunkSlot {
+                    index: s as u32,
+                    chunk: params.slice_bytes,
+                },
+            };
             let mut deps = Deps::none();
             if let Some(op) = prev_recv[s] {
                 deps.push(op); // slice must have arrived at src
@@ -56,6 +79,7 @@ pub fn plan_ring(
                 deps.push(op);
             }
             let label = Some((dst, chunk_base + s));
+            let mark = plan.len();
             let op = if peer {
                 let route = cluster.route(src_dev, dst_dev).expect("ring route");
                 plan.push(
@@ -98,6 +122,7 @@ pub fn plan_ring(
                     label,
                 )
             };
+            rec.tag(plan, mark, role, NO_CLASS);
             edges.push(FlowEdge::copy(src, dst, chunk_base + s, op));
             prev_recv[s] = Some(op);
             last_recv[pos + 1] = Some(op);
@@ -117,6 +142,45 @@ pub fn plan_intranode(
     params: &NcclParams,
     spec: &BcastSpec,
 ) -> BcastPlan {
+    template_intranode(cluster, params, spec).cp
+}
+
+/// Acquire the intranode plan through the comm's template cache
+/// (`AlgoKey::NcclRing`): message sizes sharing a slice count rescale
+/// the same ring DAG instead of rebuilding it.
+pub fn cached_intranode<'a, 'c>(
+    comm: &'a mut Comm<'c>,
+    params: &NcclParams,
+    spec: &BcastSpec,
+) -> &'a CollectivePlan {
+    let key = TemplateKey {
+        kind: CollectiveKind::Broadcast,
+        algo: AlgoKey::NcclRing {
+            params_fp: params.fingerprint(),
+        },
+        root: spec.root,
+        n_ranks: spec.n_ranks,
+        shape: params.n_slices(spec.bytes) as u64,
+        generation: comm.cluster().generation(),
+    };
+    let comm_params = comm.params().clone();
+    let hit = comm.template_cache_mut().try_rescale(&key, spec.bytes, |b| {
+        crate::comm::protocol::size_class(&comm_params, b)
+    });
+    if !hit {
+        let tpl = template_intranode(comm.cluster(), params, spec);
+        comm.template_cache_mut().insert(key, tpl);
+    }
+    comm.template_cache().plan_for(&key)
+}
+
+/// [`plan_intranode`] with the byte roles recorded, so the plan can be
+/// rescaled across message sizes of equal slice count.
+pub fn template_intranode(
+    cluster: &Cluster,
+    params: &NcclParams,
+    spec: &BcastSpec,
+) -> CollectiveTemplate {
     assert!(
         spec.n_ranks <= cluster.n_gpus(),
         "more ranks than cluster GPUs"
@@ -131,11 +195,13 @@ pub fn plan_intranode(
         "NCCL 1.x is single-node only (§II-B)"
     );
     let mut plan = Plan::new();
+    let mut rec = RoleRecorder::new();
     let mut edges = Vec::new();
     // parallel kernel launches
     let mut launch: Vec<Option<OpId>> = vec![None; cluster.n_gpus()];
     for &r in &ranks {
         let dev = cluster.rank_device(r);
+        let mark = plan.len();
         launch[r] = Some(plan.push(
             SimOp::Delay {
                 dev,
@@ -144,6 +210,7 @@ pub fn plan_intranode(
             Deps::none(),
             None,
         ));
+        rec.tag(&plan, mark, ByteRole::Fixed(0), NO_CLASS);
     }
     plan_ring(
         cluster,
@@ -152,18 +219,23 @@ pub fn plan_intranode(
         spec.root,
         spec.bytes,
         0,
+        None,
         &mut plan,
+        &mut rec,
         &mut edges,
         &launch,
         None,
     );
     let n_chunks = params.n_slices(spec.bytes);
-    BcastPlan {
-        plan,
-        edges,
-        n_chunks,
-        spec: spec.clone(),
-        algorithm: "nccl-bcast".into(),
+    CollectiveTemplate {
+        roles: rec.finish(&plan),
+        cp: BcastPlan {
+            plan,
+            edges,
+            n_chunks,
+            spec: spec.clone(),
+            algorithm: "nccl-bcast".into(),
+        },
     }
 }
 
@@ -224,6 +296,45 @@ mod tests {
         crate::collectives::validate::validate(&bp, &result).unwrap();
         // 15 forwarding hops, one staged (2 ops) + 16 launches
         assert_eq!(bp.plan.len(), 16 + 15 + 1);
+    }
+
+    #[test]
+    fn cached_intranode_matches_fresh_build() {
+        let c = kesch(1, 8);
+        let params = NcclParams::default();
+        let mut comm = Comm::new(&c);
+        let mut engine = Engine::new(&c);
+        // exact revisit, slice-count mate, then new shapes
+        for bytes in [1u64 << 20, 1 << 20, (1 << 20) - 4096, 4, 8 << 20] {
+            let spec = BcastSpec::new(0, 8, bytes);
+            let cached_ns =
+                engine.makespan_ns(&cached_intranode(&mut comm, &params, &spec).plan);
+            let fresh = plan_intranode(&c, &params, &spec);
+            assert_eq!(
+                cached_ns,
+                engine.makespan_ns(&fresh.plan),
+                "intranode template diverged at {bytes}B"
+            );
+        }
+        assert!(comm.template_cache().stats().0 >= 2);
+    }
+
+    #[test]
+    fn template_rescales_within_slice_count() {
+        // same slice count (4): rescaling the template must reproduce a
+        // fresh build bit-for-bit
+        let c = kesch(1, 8);
+        let params = NcclParams::default();
+        let m1: u64 = 1 << 20;
+        let m2: u64 = (1 << 20) - 4096; // 3 full slices + remainder = 4
+        let mut tpl = template_intranode(&c, &params, &BcastSpec::new(0, 8, m1));
+        assert_eq!(tpl.roles.len(), tpl.cp.plan.len());
+        assert!(tpl.rescale(m2, |_| 0), "all-NO_CLASS plan must rescale");
+        let mut e = Engine::new(&c);
+        let rescaled = e.execute(&tpl.cp.plan).makespan;
+        let fresh = plan_intranode(&c, &params, &BcastSpec::new(0, 8, m2));
+        assert_eq!(rescaled, e.execute(&fresh.plan).makespan);
+        assert_eq!(tpl.cp.plan.total_bytes(), fresh.plan.total_bytes());
     }
 
     #[test]

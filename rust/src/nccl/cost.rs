@@ -42,11 +42,40 @@ impl NcclParams {
     pub fn n_slices(&self, bytes: u64) -> usize {
         crate::comm::chunk_sizes(bytes, self.slice_bytes).len()
     }
+
+    /// Stable fingerprint for plan-template cache keys: the NCCL
+    /// parameters shape a plan the way an [`Algorithm`] variant shapes
+    /// an MPI one, but are not part of that enum.
+    ///
+    /// [`Algorithm`]: crate::collectives::Algorithm
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64; // FNV-1a offset basis
+        for v in [
+            self.launch_ns,
+            self.hop_ns,
+            self.slice_bytes,
+            self.copy_bw.to_bits(),
+            self.sync_ns,
+        ] {
+            h ^= v;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        h
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn fingerprint_tracks_parameters() {
+        let a = NcclParams::default();
+        let mut b = NcclParams::default();
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        b.slice_bytes = 128 << 10;
+        assert_ne!(a.fingerprint(), b.fingerprint());
+    }
 
     #[test]
     fn defaults_sane() {

@@ -10,9 +10,12 @@
 //!   collective complete (`sync_ns`);
 //! * intranode movement inherits NCCL's ring/copy cost profile.
 
-use crate::collectives::{BcastPlan, BcastSpec, FlowEdge};
+use crate::collectives::template::{
+    n_chunk_slots, AlgoKey, CollectiveTemplate, RoleRecorder, TemplateKey,
+};
+use crate::collectives::{BcastPlan, BcastSpec, CollectiveKind, CollectivePlan, FlowEdge};
 use crate::comm::Comm;
-use crate::netsim::{Deps, OpId, Plan, SimOp};
+use crate::netsim::{ByteRole, Deps, OpId, Plan, SimOp, NO_CLASS};
 
 use super::bcast::plan_ring;
 use super::cost::NcclParams;
@@ -28,6 +31,64 @@ pub fn plan(
     spec: &BcastSpec,
     chunk: u64,
 ) -> BcastPlan {
+    template(comm, params, spec, chunk).cp
+}
+
+/// Structural shape of the hierarchical pipeline at a message size:
+/// chunk count in the high 32 bits, total slice count in the low. All
+/// non-final chunks are full, so two sizes share a DAG iff both match.
+fn shape(params: &NcclParams, bytes: u64, chunk: u64) -> u64 {
+    let chunks = n_chunk_slots(bytes, chunk);
+    let mut slices = 0u64;
+    for c in 0..chunks {
+        let cbytes = ByteRole::ChunkSlot {
+            index: c as u32,
+            chunk,
+        }
+        .bytes(bytes);
+        slices += n_chunk_slots(cbytes, params.slice_bytes);
+    }
+    (chunks << 32) | slices
+}
+
+/// Acquire the hierarchical plan through the comm's template cache:
+/// across a training schedule's message sizes the op DAG is built once
+/// per (root, chunk shape) and rescaled, exactly like the MPI menu.
+pub fn cached<'a, 'c>(
+    comm: &'a mut Comm<'c>,
+    params: &NcclParams,
+    spec: &BcastSpec,
+    chunk: u64,
+) -> &'a CollectivePlan {
+    let key = TemplateKey {
+        kind: CollectiveKind::Broadcast,
+        algo: AlgoKey::NcclHier {
+            chunk,
+            params_fp: params.fingerprint(),
+        },
+        root: spec.root,
+        n_ranks: spec.n_ranks,
+        shape: shape(params, spec.bytes, chunk),
+        generation: comm.cluster().generation(),
+    };
+    let comm_params = comm.params().clone();
+    let hit = comm.template_cache_mut().try_rescale(&key, spec.bytes, |b| {
+        crate::comm::protocol::size_class(&comm_params, b)
+    });
+    if !hit {
+        let tpl = template(comm, params, spec, chunk);
+        comm.template_cache_mut().insert(key, tpl);
+    }
+    comm.template_cache().plan_for(&key)
+}
+
+/// [`plan`] with byte roles recorded for the template cache.
+pub fn template(
+    comm: &mut Comm,
+    params: &NcclParams,
+    spec: &BcastSpec,
+    chunk: u64,
+) -> CollectiveTemplate {
     let cluster = comm.cluster();
     assert_eq!(
         spec.n_ranks,
@@ -35,6 +96,7 @@ pub fn plan(
         "hierarchical bcast runs over all cluster ranks"
     );
     let mut plan = Plan::new();
+    let mut rec = RoleRecorder::new();
     let mut edges: Vec<FlowEdge> = Vec::new();
 
     // node -> its ranks (rank order is node-major so these are contiguous)
@@ -60,6 +122,7 @@ pub fn plan(
     let mut launch: Vec<Option<OpId>> = vec![None; spec.n_ranks];
     for r in 0..spec.n_ranks {
         if ranks_of_node[cluster.device(cluster.rank_device(r)).node.0].len() > 1 {
+            let mark = plan.len();
             launch[r] = Some(plan.push(
                 SimOp::Delay {
                     dev: cluster.rank_device(r),
@@ -68,6 +131,7 @@ pub fn plan(
                 Deps::none(),
                 None,
             ));
+            rec.tag(&plan, mark, ByteRole::Fixed(0), NO_CLASS);
         }
     }
 
@@ -90,6 +154,12 @@ pub fn plan(
     let mut last_delivery: Vec<Option<OpId>> = vec![None; spec.n_ranks];
 
     for (c, &cbytes) in chunks.iter().enumerate() {
+        // the remainder chunk may sit in a different mechanism class
+        let class = comm.size_class_of(cbytes);
+        let role = ByteRole::ChunkSlot {
+            index: c as u32,
+            chunk,
+        };
         // chain the chunk through the leaders
         for w in order.windows(2) {
             let (src_node, dst_node) = (w[0], w[1]);
@@ -97,7 +167,9 @@ pub fn plan(
             let dst = leaders[dst_node];
             // root leader owns the data (no dependency)
             let deps = Deps::from_opt(leader_recv[src_node][c]);
+            let mark = plan.len();
             let op = comm.send(&mut plan, src, dst, cbytes, deps, Some((dst, c)));
+            rec.tag(&plan, mark, role, class);
             edges.push(FlowEdge::copy(src, dst, c, op));
             leader_recv[dst_node][c] = Some(op);
             last_delivery[dst] = Some(op);
@@ -116,7 +188,9 @@ pub fn plan(
                 leader,
                 cbytes,
                 c * ((params.n_slices(chunk)).max(1)),
+                Some((c as u32, chunk)),
                 &mut plan,
+                &mut rec,
                 &mut edges,
                 &launch,
                 root_ready,
@@ -138,6 +212,7 @@ pub fn plan(
         if last_delivery[r].is_none() && r == spec.root {
             continue;
         }
+        let mark = plan.len();
         plan.push(
             SimOp::Delay {
                 dev: cluster.rank_device(r),
@@ -146,15 +221,19 @@ pub fn plan(
             Deps::from_opt(last_delivery[r]),
             None,
         );
+        rec.tag(&plan, mark, ByteRole::Fixed(0), NO_CLASS);
     }
 
     let slices_per_chunk = params.n_slices(chunk).max(1);
-    BcastPlan {
-        plan,
-        edges,
-        n_chunks: chunks.len() * slices_per_chunk,
-        spec: spec.clone(),
-        algorithm: "nccl-mv2-gdr".into(),
+    CollectiveTemplate {
+        roles: rec.finish(&plan),
+        cp: BcastPlan {
+            plan,
+            edges,
+            n_chunks: chunks.len() * slices_per_chunk,
+            spec: spec.clone(),
+            algorithm: "nccl-mv2-gdr".into(),
+        },
     }
 }
 
@@ -211,6 +290,31 @@ mod tests {
         let ib_ns = (m as f64 / 6.8e9 * 1e9) as u64;
         assert!(t > ib_ns);
         assert!(t < 3 * ib_ns, "{t} vs {ib_ns}");
+    }
+
+    #[test]
+    fn cached_template_matches_fresh_build() {
+        let c = kesch(2, 8);
+        let params = NcclParams::default();
+        let mut comm = Comm::new(&c);
+        let mut engine = Engine::new(&c);
+        // 1 MB twice (exact revisit), a shape-mate of 1 MB, then shapes
+        // that force rebuilds — every acquisition must match a fresh
+        // single-use build
+        for bytes in [1u64 << 20, 1 << 20, (1 << 20) - 4096, 4, 9 << 20, 64 << 20] {
+            let spec = BcastSpec::new(0, 16, bytes);
+            let cached_ns =
+                engine.makespan_ns(&cached(&mut comm, &params, &spec, DEFAULT_CHUNK).plan);
+            let mut fresh_comm = Comm::new(&c);
+            let fresh = plan(&mut fresh_comm, &params, &spec, DEFAULT_CHUNK);
+            assert_eq!(
+                cached_ns,
+                engine.makespan_ns(&fresh.plan),
+                "hierarchical template diverged at {bytes}B"
+            );
+        }
+        let (hits, _) = comm.template_cache().stats();
+        assert!(hits >= 2, "revisits and shape-mates must hit the cache");
     }
 
     #[test]

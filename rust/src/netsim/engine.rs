@@ -11,13 +11,15 @@
 //! CSR dependents graph, ready times, timestamps, the scatter cursor)
 //! lives in reusable scratch on the [`Engine`] (DESIGN.md §Perf). Sweeps
 //! that only need the makespan should call [`Engine::makespan_ns`], which
-//! skips the per-op timestamp copy entirely.
-
-use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+//! skips the per-op timestamp copy entirely. The ready set is an indexed
+//! two-level bucket queue ([`super::queue::ReadyQueue`]) — ready times
+//! are monotone under list scheduling, so the former `BinaryHeap`'s
+//! per-op `O(log n)` was the last superlinear cost on the makespan-only
+//! path.
 
 use crate::topology::Cluster;
 
+use super::queue::ReadyQueue;
 use super::time::{tx_ns, SimTime};
 use super::transfer::{OpId, Plan, SimOp};
 
@@ -55,6 +57,12 @@ impl ExecResult {
 /// re-allocate per collective (hot path — see DESIGN.md §Perf).
 pub struct Engine<'c> {
     cluster: &'c Cluster,
+    /// Route-table generation `link_free`/`dev_free` were sized against.
+    /// The borrow of `cluster` makes a mutation-while-alive impossible
+    /// today, but a future rebind API or interior mutability would
+    /// silently desync the scratch — `run` fails fast in debug builds
+    /// instead (mirroring `RouteId`'s stale-generation check).
+    generation: u32,
     link_free: Vec<SimTime>,
     dev_free: Vec<SimTime>,
     // reusable scratch (per-plan O(n) state) — avoids reallocating on
@@ -68,13 +76,14 @@ pub struct Engine<'c> {
     cursor: Vec<u32>,
     start: Vec<SimTime>,
     done: Vec<SimTime>,
-    heap: BinaryHeap<Reverse<(SimTime, OpId)>>,
+    ready: ReadyQueue,
 }
 
 impl<'c> Engine<'c> {
     pub fn new(cluster: &'c Cluster) -> Engine<'c> {
         Engine {
             cluster,
+            generation: cluster.routes().generation(),
             link_free: vec![0; cluster.n_links()],
             dev_free: vec![0; cluster.n_devices()],
             indegree: Vec::new(),
@@ -84,7 +93,7 @@ impl<'c> Engine<'c> {
             cursor: Vec::new(),
             start: Vec::new(),
             done: Vec::new(),
-            heap: BinaryHeap::new(),
+            ready: ReadyQueue::new(),
         }
     }
 
@@ -111,6 +120,21 @@ impl<'c> Engine<'c> {
     }
 
     fn run(&mut self, plan: &Plan, record: bool) -> SimTime {
+        debug_assert_eq!(
+            self.generation,
+            self.cluster.routes().generation(),
+            "engine scratch desynced: topology changed since Engine::new"
+        );
+        debug_assert_eq!(
+            self.link_free.len(),
+            self.cluster.n_links(),
+            "engine link scratch sized for a different topology"
+        );
+        debug_assert_eq!(
+            self.dev_free.len(),
+            self.cluster.n_devices(),
+            "engine device scratch sized for a different topology"
+        );
         self.link_free.iter_mut().for_each(|t| *t = 0);
         self.dev_free.iter_mut().for_each(|t| *t = 0);
 
@@ -150,17 +174,17 @@ impl<'c> Engine<'c> {
             self.done.clear();
             self.done.resize(n, 0);
         }
-        // (ready, id) min-heap
-        self.heap.clear();
+        // (ready, id) min-queue over monotone ready times
+        self.ready.clear();
         for id in 0..n {
             if self.indegree[id] == 0 {
-                self.heap.push(Reverse((0, id)));
+                self.ready.push(0, id);
             }
         }
 
         let mut processed = 0usize;
         let mut makespan: SimTime = 0;
-        while let Some(Reverse((ready, id))) = self.heap.pop() {
+        while let Some((ready, id)) = self.ready.pop() {
             processed += 1;
             let (s, d) = self.run_op(&plan.ops[id].op, ready);
             if record {
@@ -175,7 +199,7 @@ impl<'c> Engine<'c> {
                 self.ready_time[dep] = self.ready_time[dep].max(d);
                 self.indegree[dep] -= 1;
                 if self.indegree[dep] == 0 {
-                    self.heap.push(Reverse((self.ready_time[dep], dep)));
+                    self.ready.push(self.ready_time[dep], dep);
                 }
             }
         }

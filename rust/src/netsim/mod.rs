@@ -14,10 +14,11 @@
 //! The simulator is *deterministic*: same plan, same timings, every run.
 
 pub mod engine;
+pub mod queue;
 pub mod time;
 pub mod trace;
 pub mod transfer;
 
 pub use engine::{Engine, ExecResult};
 pub use time::SimTime;
-pub use transfer::{Deps, OpId, Plan, PlannedOp, SimOp};
+pub use transfer::{ByteRole, Deps, OpByte, OpId, Plan, PlanTemplate, PlannedOp, SimOp, NO_CLASS};

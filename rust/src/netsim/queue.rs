@@ -1,0 +1,379 @@
+//! The engine's ready queue: an indexed two-level bucket queue over
+//! monotone ready times.
+//!
+//! The list scheduler pops ready ops in `(ready_time, op_id)` order, and
+//! every push is at or after the last popped time (an op becomes ready
+//! only when a parent *completes*, and completions never precede the
+//! current virtual time). That monotonicity lets us replace the
+//! `BinaryHeap`'s per-op `O(log n)` with amortised `O(1)`:
+//!
+//! * **level 1** — a window of [`BUCKETS`] time buckets of width
+//!   `1 << shift` ns starting at `base`; pushes index straight into
+//!   their bucket (unsorted), pushes beyond the window land in an
+//!   overflow vector;
+//! * **level 2** — the *active* bucket, sorted once on activation and
+//!   drained through a cursor; same-bucket pushes (the common
+//!   zero-latency successor case) insert in sorted position within the
+//!   undrained tail;
+//! * when the window drains, the queue **rebases** onto the overflow:
+//!   the bucket width is recomputed from the remaining spread (so each
+//!   item is redistributed at most once per rebase epoch) and items are
+//!   re-indexed;
+//! * **fallback** — a spread so wide that even `1 <<`[`FALLBACK_SHIFT`]
+//!   ns buckets cannot cover it (pathological: hours of simulated time
+//!   between events) degrades the queue to a single globally sorted
+//!   drain, which is exactly the heap's complexity without its constant.
+//!
+//! Pop order is identical to `BinaryHeap<Reverse<(SimTime, OpId)>>`
+//! (asserted by the reference test below), so the engine's determinism
+//! and the golden parity suites are unaffected.
+
+use super::time::SimTime;
+use super::transfer::OpId;
+
+/// Level-1 window size (buckets per rebase epoch).
+const BUCKETS: usize = 256;
+/// Widest bucket before the sorted-drain fallback kicks in: 2^40 ns
+/// buckets cover ~80 days of simulated time per window.
+const FALLBACK_SHIFT: u32 = 40;
+/// Initial bucket width (2^12 ns = ~4 µs; window ≈ 1 ms) — dense
+/// collective plans finish within a couple of windows, and the first
+/// rebase adapts the width to the plan's real spread.
+const INITIAL_SHIFT: u32 = 12;
+
+/// Monotone `(time, id)` min-priority queue. See the module docs.
+#[derive(Debug)]
+pub struct ReadyQueue {
+    buckets: Vec<Vec<(SimTime, OpId)>>,
+    /// Start time of bucket 0 of the current window.
+    base: SimTime,
+    /// Bucket width is `1 << shift` ns.
+    shift: u32,
+    /// Active bucket index; buckets below it are drained and empty.
+    active: usize,
+    /// Drain cursor into the active bucket (sorted from here on).
+    pos: usize,
+    /// Items at or beyond the window end, pending redistribution.
+    overflow: Vec<(SimTime, OpId)>,
+    len: usize,
+    /// Degraded mode storage: globally sorted, drained by cursor.
+    sorted: Vec<(SimTime, OpId)>,
+    sorted_pos: usize,
+    fallback: bool,
+    #[cfg(debug_assertions)]
+    last_popped: SimTime,
+}
+
+impl Default for ReadyQueue {
+    fn default() -> Self {
+        ReadyQueue::new()
+    }
+}
+
+impl ReadyQueue {
+    pub fn new() -> ReadyQueue {
+        ReadyQueue {
+            buckets: (0..BUCKETS).map(|_| Vec::new()).collect(),
+            base: 0,
+            shift: INITIAL_SHIFT,
+            active: 0,
+            pos: 0,
+            overflow: Vec::new(),
+            len: 0,
+            sorted: Vec::new(),
+            sorted_pos: 0,
+            fallback: false,
+            #[cfg(debug_assertions)]
+            last_popped: 0,
+        }
+    }
+
+    /// Reset for a new plan, keeping every allocation.
+    pub fn clear(&mut self) {
+        for b in &mut self.buckets {
+            b.clear();
+        }
+        self.base = 0;
+        self.shift = INITIAL_SHIFT;
+        self.active = 0;
+        self.pos = 0;
+        self.overflow.clear();
+        self.len = 0;
+        self.sorted.clear();
+        self.sorted_pos = 0;
+        self.fallback = false;
+        #[cfg(debug_assertions)]
+        {
+            self.last_popped = 0;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Enqueue. `t` must be at or after the last popped time (the
+    /// engine's monotonicity invariant; debug-asserted).
+    pub fn push(&mut self, t: SimTime, id: OpId) {
+        #[cfg(debug_assertions)]
+        debug_assert!(
+            t >= self.last_popped,
+            "non-monotone push: {t} after popping {}",
+            self.last_popped
+        );
+        self.len += 1;
+        if self.fallback {
+            let tail = &self.sorted[self.sorted_pos..];
+            let at = self.sorted_pos + tail.partition_point(|&e| e < (t, id));
+            self.sorted.insert(at, (t, id));
+            return;
+        }
+        debug_assert!(t >= self.base, "push below the window base");
+        let idx = ((t - self.base) >> self.shift) as usize;
+        if idx >= BUCKETS {
+            self.overflow.push((t, id));
+            return;
+        }
+        debug_assert!(idx >= self.active, "push into a drained bucket");
+        if idx == self.active {
+            // the active bucket is sorted from the drain cursor on;
+            // keep it that way (binary search + short memmove)
+            let v = &mut self.buckets[idx];
+            let at = self.pos + v[self.pos..].partition_point(|&e| e < (t, id));
+            v.insert(at, (t, id));
+        } else {
+            self.buckets[idx].push((t, id));
+        }
+    }
+
+    /// Dequeue the minimum `(time, id)` pair.
+    pub fn pop(&mut self) -> Option<(SimTime, OpId)> {
+        if self.len == 0 {
+            return None;
+        }
+        self.len -= 1;
+        if self.fallback {
+            let e = self.sorted[self.sorted_pos];
+            self.sorted_pos += 1;
+            #[cfg(debug_assertions)]
+            {
+                self.last_popped = e.0;
+            }
+            return Some(e);
+        }
+        loop {
+            while self.active < BUCKETS {
+                if self.pos < self.buckets[self.active].len() {
+                    let e = self.buckets[self.active][self.pos];
+                    self.pos += 1;
+                    #[cfg(debug_assertions)]
+                    {
+                        self.last_popped = e.0;
+                    }
+                    return Some(e);
+                }
+                self.buckets[self.active].clear();
+                self.pos = 0;
+                self.active += 1;
+                if self.active < BUCKETS {
+                    self.buckets[self.active].sort_unstable();
+                }
+            }
+            // window exhausted but items remain: rebase onto the overflow
+            self.rebase();
+            if self.fallback {
+                let e = self.sorted[self.sorted_pos];
+                self.sorted_pos += 1;
+                #[cfg(debug_assertions)]
+                {
+                    self.last_popped = e.0;
+                }
+                return Some(e);
+            }
+        }
+    }
+
+    /// Open a fresh window over the overflow, adapting the bucket width
+    /// to the remaining spread (or degrading to the sorted fallback when
+    /// the spread is pathological).
+    fn rebase(&mut self) {
+        debug_assert!(
+            !self.overflow.is_empty(),
+            "queue accounting broken: len > 0 with nothing stored"
+        );
+        let mut lo = SimTime::MAX;
+        let mut hi: SimTime = 0;
+        for &(t, _) in &self.overflow {
+            lo = lo.min(t);
+            hi = hi.max(t);
+        }
+        let span = hi - lo;
+        // smallest width with span < (BUCKETS - 1) << shift, so every
+        // remaining item fits the new window in one redistribution
+        let mut shift = 0u32;
+        while shift <= FALLBACK_SHIFT && (span >> shift) >= (BUCKETS - 1) as u64 {
+            shift += 1;
+        }
+        if shift > FALLBACK_SHIFT {
+            self.fallback = true;
+            self.sorted.clear();
+            self.sorted_pos = 0;
+            self.sorted.append(&mut self.overflow);
+            self.sorted.sort_unstable();
+            return;
+        }
+        self.shift = shift;
+        self.base = lo & !((1u64 << shift) - 1);
+        self.active = 0;
+        self.pos = 0;
+        let mut items = std::mem::take(&mut self.overflow);
+        for (t, id) in items.drain(..) {
+            let idx = ((t - self.base) >> self.shift) as usize;
+            debug_assert!(idx < BUCKETS, "rebase left an item outside the window");
+            self.buckets[idx].push((t, id));
+        }
+        self.overflow = items; // keep the allocation
+        self.buckets[0].sort_unstable();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+
+    /// Deterministic xorshift for reference-driven tests.
+    struct Xs(u64);
+    impl Xs {
+        fn next(&mut self) -> u64 {
+            let mut x = self.0;
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            self.0 = x;
+            x
+        }
+    }
+
+    /// Drive the queue and a BinaryHeap through an identical monotone
+    /// push/pop schedule; every pop must match.
+    fn reference_run(seed: u64, n: usize, spread: u64) {
+        let mut rng = Xs(seed | 1);
+        let mut q = ReadyQueue::new();
+        let mut h: BinaryHeap<Reverse<(SimTime, OpId)>> = BinaryHeap::new();
+        // seed a ready frontier at t = 0
+        for id in 0..8usize {
+            q.push(0, id);
+            h.push(Reverse((0, id)));
+        }
+        let mut next_id = 8usize;
+        let mut pushed = 8usize;
+        let mut now: SimTime = 0;
+        loop {
+            let got = q.pop();
+            let want = h.pop().map(|Reverse(e)| e);
+            assert_eq!(got, want, "divergence from heap order (seed {seed})");
+            let Some((t, _)) = got else { break };
+            now = t;
+            // each pop spawns 0–2 successors at or after `now`
+            if pushed < n {
+                for _ in 0..(rng.next() % 3) {
+                    let dt = rng.next() % spread;
+                    q.push(now + dt, next_id);
+                    h.push(Reverse((now + dt, next_id)));
+                    next_id += 1;
+                    pushed += 1;
+                }
+            }
+        }
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn matches_binary_heap_dense() {
+        // spreads around and below the bucket width
+        for (seed, spread) in [(1u64, 50u64), (2, 5_000), (3, 1)] {
+            reference_run(seed, 4000, spread);
+        }
+    }
+
+    #[test]
+    fn matches_binary_heap_window_crossing() {
+        // spreads that overflow the initial 1 ms window and force rebases
+        for (seed, spread) in [(7u64, 1 << 21), (8, 1 << 26), (9, 40_000_000)] {
+            reference_run(seed, 2000, spread);
+        }
+    }
+
+    #[test]
+    fn equal_times_pop_in_id_order() {
+        let mut q = ReadyQueue::new();
+        for id in [5usize, 1, 9, 0, 3] {
+            q.push(100, id);
+        }
+        q.push(50, 7);
+        assert_eq!(q.pop(), Some((50, 7)));
+        for want in [0usize, 1, 3, 5, 9] {
+            assert_eq!(q.pop(), Some((100, want)));
+        }
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn same_bucket_insert_after_partial_drain() {
+        let mut q = ReadyQueue::new();
+        q.push(10, 1);
+        q.push(20, 2);
+        assert_eq!(q.pop(), Some((10, 1)));
+        // monotone push equal to the last popped time, smaller id than
+        // the remaining item: must come out first
+        q.push(10, 0);
+        assert_eq!(q.pop(), Some((10, 0)));
+        assert_eq!(q.pop(), Some((20, 2)));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn pathological_spread_falls_back_to_sorted_drain() {
+        let mut q = ReadyQueue::new();
+        q.push(0, 0);
+        assert_eq!(q.pop(), Some((0, 0)));
+        // two items ~2^55 ns apart: no sane bucket width covers the span
+        let far: SimTime = 1 << 55;
+        q.push(far, 2);
+        q.push(far + (1 << 54), 3);
+        q.push(far, 1);
+        assert_eq!(q.pop(), Some((far, 1)));
+        assert!(q.fallback, "spread this wide must degrade to sorted drain");
+        // pushes keep working in fallback mode
+        q.push(far + 5, 4);
+        assert_eq!(q.pop(), Some((far, 2)));
+        assert_eq!(q.pop(), Some((far + 5, 4)));
+        assert_eq!(q.pop(), Some((far + (1 << 54), 3)));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn clear_resets_for_reuse() {
+        let mut q = ReadyQueue::new();
+        for id in 0..100usize {
+            q.push((id as u64) * 1_000_000, id); // forces rebases
+        }
+        for _ in 0..40 {
+            q.pop();
+        }
+        q.clear();
+        assert!(q.is_empty());
+        q.push(3, 1);
+        q.push(1, 2);
+        assert_eq!(q.pop(), Some((1, 2)));
+        assert_eq!(q.pop(), Some((3, 1)));
+        assert_eq!(q.pop(), None);
+        assert_eq!(q.len(), 0);
+    }
+}

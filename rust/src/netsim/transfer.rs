@@ -1,4 +1,4 @@
-//! Plan representation: ops, dependencies, labels.
+//! Plan representation: ops, dependencies, labels — and plan *templates*.
 //!
 //! Hot-path design (DESIGN.md §Perf): a [`SimOp::Transfer`] carries an
 //! interned [`RouteId`] — not an owned hop list — and a [`PlannedOp`]'s
@@ -6,6 +6,15 @@
 //! covers every collective builder's common case) that only spills to the
 //! heap for wide joins. Building a plan therefore performs no per-op
 //! allocations beyond the `ops` vector itself.
+//!
+//! Plan templates (DESIGN.md §Plan templates): every message size at a
+//! fixed (algorithm, chunk count, topology) shares the same DAG shape and
+//! routes, differing only in per-op byte counts. A [`ByteRole`] names how
+//! an op's payload derives from the total message size (whole message /
+//! equal-part index / chunk slot / …); [`rescale`] re-instantiates a
+//! previously built plan for a new total by rewriting only the byte
+//! fields — deps, labels, routes, overheads and the memoized deliveries
+//! map are untouched.
 
 use crate::topology::{DeviceId, RouteId};
 
@@ -271,6 +280,147 @@ impl Plan {
     }
 }
 
+/// `chunk_sizes(total, chunk)[index]` without building the vector.
+fn chunk_slot_bytes(total: u64, chunk: u64, index: u32) -> u64 {
+    if total == 0 {
+        return 0;
+    }
+    if chunk == 0 || chunk >= total {
+        debug_assert_eq!(index, 0, "single-slot plan rescaled out of range");
+        return total;
+    }
+    let full = total / chunk;
+    if (index as u64) < full {
+        chunk
+    } else {
+        total % chunk
+    }
+}
+
+/// Sum of `equal_parts(total, of)[..upto]` without building the vector.
+fn part_prefix_bytes(total: u64, of: u32, upto: u32) -> u64 {
+    let of = of as u64;
+    let upto = upto as u64;
+    let base = total / of;
+    let extra = total % of; // the first `extra` parts carry one extra byte
+    base * upto + upto.min(extra)
+}
+
+/// Symbolic byte count of a templated op: how to recompute the op's
+/// payload for a new total message size without rebuilding the plan.
+/// Each variant mirrors one byte-partitioning scheme the collective
+/// builders use (`comm::chunk::{chunk_sizes, equal_parts}`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ByteRole {
+    /// Bytes independent of the message size (delays, fixed control).
+    Fixed(u64),
+    /// The whole message.
+    Whole,
+    /// `equal_parts(total, of)[index]` — a ring segment / scatter part.
+    Part { index: u32, of: u32 },
+    /// Sum of `equal_parts(total, of)[from..to]` — a scatter subtree's
+    /// custody payload.
+    PartRange { from: u32, to: u32, of: u32 },
+    /// `chunk_sizes(total, chunk)[index]` — a pipelined-chain chunk or an
+    /// NCCL ring slice.
+    ChunkSlot { index: u32, chunk: u64 },
+    /// Slice `index` (granularity `slice`) of chunk `outer` (granularity
+    /// `chunk`) of the total — the hierarchical NCCL pipeline's nesting.
+    SliceOfChunk {
+        outer: u32,
+        chunk: u64,
+        index: u32,
+        slice: u64,
+    },
+}
+
+impl ByteRole {
+    /// The concrete byte count this role takes at a given total message
+    /// size. Pure arithmetic — no allocation.
+    pub fn bytes(&self, total: u64) -> u64 {
+        match *self {
+            ByteRole::Fixed(b) => b,
+            ByteRole::Whole => total,
+            ByteRole::Part { index, of } => {
+                let base = total / of as u64;
+                let extra = total % of as u64;
+                base + u64::from((index as u64) < extra)
+            }
+            ByteRole::PartRange { from, to, of } => {
+                part_prefix_bytes(total, of, to) - part_prefix_bytes(total, of, from)
+            }
+            ByteRole::ChunkSlot { index, chunk } => chunk_slot_bytes(total, chunk, index),
+            ByteRole::SliceOfChunk {
+                outer,
+                chunk,
+                index,
+                slice,
+            } => chunk_slot_bytes(chunk_slot_bytes(total, chunk, outer), slice, index),
+        }
+    }
+}
+
+/// Size-class sentinel for ops whose structure and parameters never
+/// consulted a mechanism size class (raw transfers with fixed overheads,
+/// NCCL ring hops, delays) — rescaling them can never require a rebuild.
+pub const NO_CLASS: u8 = u8::MAX;
+
+/// Per-op template metadata: the byte role plus the mechanism size class
+/// the op's payload had when the template was built ([`NO_CLASS`] when
+/// irrelevant). Equal class ⇒ identical mechanism selection ⇒ identical
+/// structure, because `comm::Comm` resolves path plans at a canonical
+/// per-class byte size.
+#[derive(Debug, Clone, Copy)]
+pub struct OpByte {
+    pub role: ByteRole,
+    pub class: u8,
+}
+
+/// Rescale a templated plan in place to a new total message size: every
+/// transfer op's byte count is recomputed from its [`ByteRole`]; deps,
+/// labels, routes, overheads and the memoized deliveries map are left
+/// untouched. Returns `false` — leaving the plan partially rescaled, so
+/// the caller must discard and rebuild — when some op's new byte count
+/// falls in a different mechanism size class (`classify`) than the one
+/// recorded at build time: crossing a class boundary can change
+/// mechanism selection and therefore plan *structure*, which a rescale
+/// cannot express.
+pub fn rescale(
+    plan: &mut Plan,
+    roles: &[OpByte],
+    total: u64,
+    classify: impl Fn(u64) -> u8,
+) -> bool {
+    debug_assert_eq!(plan.ops.len(), roles.len(), "byte roles out of sync with ops");
+    for (po, meta) in plan.ops.iter_mut().zip(roles.iter()) {
+        if let SimOp::Transfer { bytes, .. } = &mut po.op {
+            let nb = meta.role.bytes(total);
+            if meta.class != NO_CLASS && classify(nb) != meta.class {
+                return false;
+            }
+            *bytes = nb;
+        }
+    }
+    true
+}
+
+/// A plan plus the per-op byte roles needed to [`rescale`] it: built once
+/// per (algorithm, chunk count, topology), re-instantiated per message
+/// size. The collectives layer wraps this with flow edges and caching
+/// (`collectives::template`).
+#[derive(Debug, Clone, Default)]
+pub struct PlanTemplate {
+    pub plan: Plan,
+    pub roles: Vec<OpByte>,
+}
+
+impl PlanTemplate {
+    /// Rescale the held plan in place; see [`rescale`].
+    pub fn rescale(&mut self, total: u64, classify: impl Fn(u64) -> u8) -> bool {
+        rescale(&mut self.plan, &self.roles, total, classify)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -357,6 +507,116 @@ mod tests {
         p.set_label(newer, Some((2, 3)));
         assert_eq!(p.deliveries().get(&(2, 3)), Some(&newer));
         assert_eq!(p.deliveries().get(&(5, 0)), Some(&a));
+    }
+
+    #[test]
+    fn byte_roles_match_chunk_and_part_helpers() {
+        use crate::comm::chunk::{chunk_sizes, equal_parts};
+        for total in [0u64, 1, 7, 4096, (1 << 20) + 13, 9 << 20] {
+            for chunk in [1u64 << 10, 256 << 10, 4 << 20] {
+                let slots = chunk_sizes(total, chunk);
+                for (i, &expect) in slots.iter().enumerate() {
+                    let role = ByteRole::ChunkSlot {
+                        index: i as u32,
+                        chunk,
+                    };
+                    assert_eq!(role.bytes(total), expect, "total={total} chunk={chunk} i={i}");
+                }
+            }
+            for of in [1usize, 3, 8] {
+                let parts = equal_parts(total, of);
+                for (i, &expect) in parts.iter().enumerate() {
+                    let role = ByteRole::Part {
+                        index: i as u32,
+                        of: of as u32,
+                    };
+                    assert_eq!(role.bytes(total), expect, "total={total} of={of} i={i}");
+                }
+                for from in 0..of {
+                    for to in from..=of {
+                        let expect: u64 = parts[from..to].iter().sum();
+                        let role = ByteRole::PartRange {
+                            from: from as u32,
+                            to: to as u32,
+                            of: of as u32,
+                        };
+                        assert_eq!(role.bytes(total), expect);
+                    }
+                }
+            }
+        }
+        // nesting: slice 1 of chunk 2 of 9M+5 at 4M chunks / 256K slices
+        let total = (9u64 << 20) + 5;
+        let outer = ByteRole::ChunkSlot { index: 2, chunk: 4 << 20 }.bytes(total);
+        assert_eq!(outer, (1 << 20) + 5);
+        let nested = ByteRole::SliceOfChunk {
+            outer: 2,
+            chunk: 4 << 20,
+            index: 1,
+            slice: 256 << 10,
+        };
+        assert_eq!(
+            nested.bytes(total),
+            crate::comm::chunk::chunk_sizes(outer, 256 << 10)[1]
+        );
+        assert_eq!(ByteRole::Whole.bytes(total), total);
+        assert_eq!(ByteRole::Fixed(42).bytes(total), 42);
+    }
+
+    #[test]
+    fn rescale_rewrites_bytes_and_respects_classes() {
+        let c = flat(3);
+        let r01 = c.route(c.rank_device(0), c.rank_device(1)).unwrap();
+        let r12 = c.route(c.rank_device(1), c.rank_device(2)).unwrap();
+        let mut tpl = PlanTemplate::default();
+        let built: u64 = 10 << 20;
+        let a = tpl.plan.push(
+            SimOp::Transfer {
+                route: r01,
+                bytes: built,
+                overhead_ns: 5,
+                issue_ns: 5,
+                bw_cap: None,
+            },
+            Deps::none(),
+            Some((1, 0)),
+        );
+        tpl.plan.push(
+            SimOp::Transfer {
+                route: r12,
+                bytes: built / 2,
+                overhead_ns: 5,
+                issue_ns: 5,
+                bw_cap: None,
+            },
+            Deps::one(a),
+            Some((2, 0)),
+        );
+        let threshold: u64 = 1 << 20;
+        let classify = move |b: u64| u8::from(b > threshold);
+        tpl.roles.push(OpByte {
+            role: ByteRole::Whole,
+            class: classify(built),
+        });
+        tpl.roles.push(OpByte {
+            role: ByteRole::Part { index: 0, of: 2 },
+            class: NO_CLASS,
+        });
+        // deliveries memoized before the rescale must survive it
+        assert_eq!(tpl.plan.deliveries().len(), 2);
+        assert!(tpl.rescale(8 << 20, classify));
+        assert_eq!(tpl.plan.ops()[0].op.bytes(), 8 << 20);
+        assert_eq!(tpl.plan.ops()[1].op.bytes(), 4 << 20);
+        assert_eq!(tpl.plan.deliveries().len(), 2);
+        assert_eq!(tpl.plan.ops()[0].deps.len(), 0);
+        assert_eq!(tpl.plan.ops()[1].deps.as_slice(), &[0]);
+        // dropping below the class boundary must refuse the rescale
+        assert!(!tpl.rescale(4096, classify));
+        // a NO_CLASS-only plan rescales across any boundary
+        tpl.roles[0].class = NO_CLASS;
+        assert!(tpl.rescale(4096, classify));
+        assert_eq!(tpl.plan.ops()[0].op.bytes(), 4096);
+        assert_eq!(tpl.plan.ops()[1].op.bytes(), 2048);
     }
 
     #[test]

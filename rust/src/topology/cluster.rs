@@ -263,6 +263,13 @@ impl Cluster {
         &self.routes
     }
 
+    /// Topology generation: bumped by `add_device`/`connect`. Anything
+    /// derived from the graph (routes, engine scratch, plan templates)
+    /// keys on this to fail fast — or miss — after a mutation.
+    pub fn generation(&self) -> u32 {
+        self.routes.generation()
+    }
+
     /// Cached aggregates of an interned route, by value (hot path).
     pub fn route_meta(&self, id: RouteId) -> RouteMeta {
         self.routes.meta(id)

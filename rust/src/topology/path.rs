@@ -91,6 +91,13 @@ impl RouteTable {
         self.inner.borrow().metas.len()
     }
 
+    /// The table generation — bumped by every topology mutation.
+    /// `RouteId`s, engine scratch and plan-template caches keyed on it
+    /// become stale when it changes.
+    pub fn generation(&self) -> u32 {
+        self.inner.borrow().generation
+    }
+
     /// Drop every cached route. Only the cluster's `&mut self` topology
     /// mutators call this — exposing it on `&self` would let stale
     /// `RouteId`s be invalidated out from under live plans.

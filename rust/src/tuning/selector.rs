@@ -29,6 +29,14 @@ impl Selector {
         }
     }
 
+    /// [`Self::tuned`] with a bound on the sweep's worker fan-out
+    /// (`None` = available parallelism) — the `--tune-threads` CLI knob.
+    pub fn tuned_with_threads(cluster: &Cluster, threads: Option<usize>) -> Selector {
+        Selector {
+            table: sweep::tune_with_threads(cluster, &sweep::default_sizes(), threads),
+        }
+    }
+
     /// Wrap an existing (e.g. persisted) table.
     pub fn from_table(table: TuningTable) -> Selector {
         Selector { table }
@@ -51,6 +59,17 @@ impl Selector {
     /// Build the tuned plan for the spec's collective kind.
     pub fn plan(&self, comm: &mut Comm, spec: &CollectiveSpec) -> CollectivePlan {
         collectives::plan(&self.algorithm_for(spec.kind, spec.bytes), comm, spec)
+    }
+
+    /// The tuned plan through the comm's template cache: across a
+    /// schedule's message sizes the picked algorithm's DAG is built once
+    /// and rescaled (DESIGN.md §Plan templates).
+    pub fn cached_plan<'a, 'c>(
+        &self,
+        comm: &'a mut Comm<'c>,
+        spec: &CollectiveSpec,
+    ) -> &'a CollectivePlan {
+        collectives::cached_plan(&self.algorithm_for(spec.kind, spec.bytes), comm, spec)
     }
 
     /// Simulated tuned-collective latency, ns.

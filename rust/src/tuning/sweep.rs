@@ -8,6 +8,14 @@
 //! and results merge back in grid order, so the produced table is
 //! byte-identical to a serial run ([`tune_serial`] keeps the reference
 //! path alive for the determinism test and for perf comparisons).
+//!
+//! Each worker's `Comm` persists across its grid points: path-plan
+//! selection is canonical per size class and plan templates rescale
+//! byte-exactly, so every point stays a pure function of the cluster
+//! while the template cache turns the size axis of the sweep into
+//! rescales instead of rebuilds (DESIGN.md §Plan templates). The
+//! [`tune_with_threads`] variant bounds the fan-out for constrained CI
+//! runners (`--tune-threads`).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -33,12 +41,13 @@ pub struct SweepPoint {
 
 /// Sweep all candidates of one kind at one size with caller-owned
 /// simulator state — the building block both the serial and the parallel
-/// tuner share. Callers pass a **fresh `Comm` per point**: its path-plan
-/// cache keys on (src, dst, size-class) but resolves against the first
-/// bytes it sees, so sharing one across points would make a point's
-/// result depend on visit order — breaking the parallel-equals-serial
-/// guarantee. The `Engine` (stateless across runs) and the cluster's
-/// route-intern table are safely reused across points.
+/// tuner share. The `Comm` (path cache + plan-template cache), the
+/// `Engine` (stateless across runs) and the cluster's route-intern table
+/// may all be reused across points: path plans resolve at each class's
+/// canonical size and templates rescale byte-exactly, so a point's
+/// result is a pure function of the cluster regardless of what warmed
+/// the caches — the property the parallel-equals-serial guarantee and
+/// the golden parity suite pin down.
 pub fn sweep_size_with(
     comm: &mut Comm,
     engine: &mut Engine,
@@ -119,15 +128,31 @@ fn table_from_points(
 }
 
 /// Build a tuned table for every collective kind by sweeping a size grid,
-/// fanning the grid points across OS threads. Deterministic: the merge
-/// runs in grid order and every point is a pure function of the cluster,
-/// so the table is byte-identical to [`tune_serial`]'s.
+/// fanning the grid points across OS threads (available parallelism).
+/// Deterministic: the merge runs in grid order and every point is a pure
+/// function of the cluster, so the table is byte-identical to
+/// [`tune_serial`]'s.
 pub fn tune(cluster: &Cluster, sizes: &[u64]) -> TuningTable {
+    tune_with_threads(cluster, sizes, None)
+}
+
+/// [`tune`] with an explicit bound on the worker fan-out. `None` uses
+/// available parallelism; `Some(1)` runs the serial reference path —
+/// constrained CI runners and laptops set this via `--tune-threads`.
+pub fn tune_with_threads(
+    cluster: &Cluster,
+    sizes: &[u64],
+    threads: Option<usize>,
+) -> TuningTable {
     let points = grid(sizes);
-    let n_workers = std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(1)
-        .min(points.len());
+    let n_workers = threads
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        })
+        .max(1)
+        .min(points.len().max(1));
     if n_workers <= 1 {
         return tune_serial(cluster, sizes);
     }
@@ -147,15 +172,17 @@ pub fn tune(cluster: &Cluster, sizes: &[u64]) -> TuningTable {
             let points = &points;
             s.spawn(move || {
                 let mut engine = Engine::new(&local);
+                // one Comm per worker, persistent across its points: the
+                // template cache rescales across the size axis, and
+                // canonical path selection keeps every point a pure
+                // function of the cluster (see sweep_size_with)
+                let mut comm = Comm::new(&local);
                 loop {
                     let i = next.fetch_add(1, Ordering::Relaxed);
                     if i >= points.len() {
                         break;
                     }
                     let (kind, bytes) = points[i];
-                    // fresh Comm per point (see sweep_size_with); the
-                    // engine scratch and route table carry across
-                    let mut comm = Comm::new(&local);
                     let point = sweep_size_with(&mut comm, &mut engine, kind, bytes, 0);
                     *slots[i].lock().expect("sweep slot poisoned") = Some(point);
                 }
@@ -178,13 +205,10 @@ pub fn tune(cluster: &Cluster, sizes: &[u64]) -> TuningTable {
 /// parallel path persists a byte-identical table.
 pub fn tune_serial(cluster: &Cluster, sizes: &[u64]) -> TuningTable {
     let mut engine = Engine::new(cluster);
+    let mut comm = Comm::new(cluster);
     let results: Vec<SweepPoint> = grid(sizes)
         .into_iter()
-        .map(|(kind, bytes)| {
-            // fresh Comm per point, matching the parallel workers
-            let mut comm = Comm::new(cluster);
-            sweep_size_with(&mut comm, &mut engine, kind, bytes, 0)
-        })
+        .map(|(kind, bytes)| sweep_size_with(&mut comm, &mut engine, kind, bytes, 0))
         .collect();
     table_from_points(cluster, sizes, results)
 }
@@ -271,6 +295,22 @@ mod tests {
             table.select_for(CollectiveKind::Allgather, 1 << 20),
             Algorithm::RingAllgather
         );
+    }
+
+    #[test]
+    fn bounded_thread_fanout_is_byte_identical() {
+        // --tune-threads N must not change the table, for any N
+        let cluster = kesch(1, 4);
+        let sizes = [4u64, 8 << 10, 1 << 20, 32 << 20];
+        let reference = persist::to_json(&tune_serial(&cluster, &sizes));
+        for threads in [Some(1), Some(2), Some(3), None] {
+            let t = tune_with_threads(&cluster, &sizes, threads);
+            assert_eq!(
+                persist::to_json(&t),
+                reference,
+                "tune_with_threads({threads:?}) diverged from serial"
+            );
+        }
     }
 
     #[test]

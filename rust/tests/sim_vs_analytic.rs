@@ -195,6 +195,112 @@ fn route_interning_golden_parity() {
 }
 
 #[test]
+fn plan_template_golden_parity() {
+    // Plan templates must be invisible to the simulation: for every
+    // algorithm × message size × topology, acquiring the plan through
+    // the template cache (build once, rescale per size — ascending AND
+    // descending so rescale runs both directions, with revisits hitting
+    // the exact-size fast path) produces bit-identical makespans to a
+    // fresh single-use build.
+    use gdrbcast::collectives::{template, CollectiveSpec};
+
+    let algos = [
+        Algorithm::Direct,
+        Algorithm::Chain,
+        Algorithm::PipelinedChain { chunk: 64 << 10 },
+        Algorithm::Knomial { k: 2 },
+        Algorithm::Knomial { k: 4 },
+        Algorithm::ScatterRingAllgather,
+        Algorithm::HostStagedKnomial { k: 2 },
+        Algorithm::RingReduceScatter,
+        Algorithm::RingAllgather,
+        Algorithm::RingAllreduce,
+        Algorithm::TreeAllreduce { k: 2 },
+    ];
+    let topologies: Vec<(&str, gdrbcast::topology::Cluster)> = vec![
+        ("flat(8)", presets::flat(8)),
+        ("kesch(1,8)", presets::kesch(1, 8)),
+        ("kesch(2,8)", presets::kesch(2, 8)),
+    ];
+    let axis = [4u64, 4 << 10, 64 << 10, 1 << 20, 16 << 20];
+    for (name, cluster) in &topologies {
+        let n = cluster.n_gpus();
+        let mut comm = Comm::new(cluster); // shared: templates warm across sizes
+        let mut engine = Engine::new(cluster);
+        let mut order: Vec<u64> = axis.to_vec();
+        order.extend(axis.iter().rev());
+        for algo in &algos {
+            for &bytes in &order {
+                let spec = CollectiveSpec::collective(algo.kind(), 0, n, bytes);
+                let cached =
+                    engine.makespan_ns(&template::cached_plan(algo, &mut comm, &spec).plan);
+                let mut fresh_comm = Comm::new(cluster);
+                let fresh = collectives::plan(algo, &mut fresh_comm, &spec);
+                assert_eq!(
+                    cached,
+                    engine.makespan_ns(&fresh.plan),
+                    "{} {} {}B: templated plan diverged from fresh build",
+                    name,
+                    algo.name(),
+                    bytes
+                );
+            }
+        }
+        let (hits, misses) = comm.template_cache().stats();
+        assert!(
+            hits > misses,
+            "{name}: the size axis should mostly rescale ({hits} hits / {misses} misses)"
+        );
+    }
+}
+
+#[test]
+fn plan_template_cache_invalidated_by_topology_mutation() {
+    // A template cache carried across a topology mutation must miss on
+    // the bumped generation instead of serving plans whose interned
+    // routes no longer exist (in debug builds a served stale plan would
+    // also trip the RouteId generation check).
+    use gdrbcast::collectives::CollectiveSpec;
+    use gdrbcast::topology::LinkKind;
+
+    let mut cluster = presets::kesch(1, 8);
+    let spec = CollectiveSpec::new(0, 8, 1 << 20);
+    let algo = Algorithm::Knomial { k: 2 };
+    let cache = {
+        let mut comm = Comm::new(&cluster);
+        let mut engine = Engine::new(&cluster);
+        let _ = engine.makespan_ns(
+            &gdrbcast::collectives::cached_plan(&algo, &mut comm, &spec).plan,
+        );
+        assert_eq!(comm.template_cache().stats().1, 1);
+        comm.take_template_cache()
+    };
+    // mutation: a new NVLink between ranks 0 and 1 changes routing and
+    // bumps the cluster generation
+    let before = cluster.generation();
+    let (g0, g1) = (cluster.rank_device(0), cluster.rank_device(1));
+    cluster.connect(g0, g1, LinkKind::NvLink2);
+    assert_ne!(before, cluster.generation());
+
+    let mut comm = Comm::new(&cluster);
+    comm.set_template_cache(cache);
+    let mut engine = Engine::new(&cluster);
+    let cached =
+        engine.makespan_ns(&gdrbcast::collectives::cached_plan(&algo, &mut comm, &spec).plan);
+    let mut fresh_comm = Comm::new(&cluster);
+    let fresh = collectives::plan(&algo, &mut fresh_comm, &spec);
+    assert_eq!(
+        cached,
+        engine.makespan_ns(&fresh.plan),
+        "stale template served after topology mutation"
+    );
+    // the stale entry was swept, not rescaled: the post-mutation
+    // acquisition must have been a rebuild
+    let (hits, _) = comm.template_cache().stats();
+    assert_eq!(hits, 0, "a cross-generation hit means stale structure");
+}
+
+#[test]
 fn eq1_eq2_exact_on_flat() {
     // closed-form identities, exact (integer ns) on the flat fabric
     let cp = CommParams::default();
