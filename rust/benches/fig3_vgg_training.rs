@@ -1,21 +1,43 @@
 //! Bench F3 — regenerates the paper's Figure 3 (VGG data-parallel
-//! training time under CNTK, NCCL-MV2-GDR vs MV2-GDR-Opt, 8–128 GPUs).
+//! training time under CNTK, NCCL-MV2-GDR vs MV2-GDR-Opt, 8–128 GPUs)
+//! and extends it with the full-exchange training modes under the
+//! compute/comm overlap timeline: for each [`TrainingMode`], iteration
+//! time with the barrier model (overlap off) and with layer-wise
+//! backprop overlapping the exchange (overlap on).
 //!
 //! `cargo bench --bench fig3_vgg_training`
+//! `FIG3_SMOKE=1 cargo bench --bench fig3_vgg_training`  (CI smoke mode:
+//! one scale, quick harness; still emits the overlap-on/off rows the CI
+//! gate checks for)
+//!
+//! Report: `target/reports/fig3_vgg_training.json` — harness rows plus
+//! one `fig3/<model>/<gpus>gpus/<mode>/overlap-{off,on}` row per
+//! (training mode, overlap setting), `mean_ns` carrying the estimated
+//! per-iteration time in ns.
 
-use gdrbcast::bench::harness::Bencher;
-use gdrbcast::coordinator::train::estimate_iteration;
-use gdrbcast::coordinator::BcastBackend;
+use gdrbcast::bench::harness::{one_shot_row, Bencher};
+use gdrbcast::coordinator::train::{
+    estimate_iteration, estimate_training_iteration_opts, ExchangeOptions,
+};
+use gdrbcast::coordinator::{BcastBackend, TrainingMode};
 use gdrbcast::models::zoo::{googlenet, vgg16};
 use gdrbcast::nccl::NcclParams;
 use gdrbcast::topology::presets;
 use gdrbcast::tuning::Selector;
+use gdrbcast::util::json::Json;
 use gdrbcast::util::tablefmt::Table;
 
 fn main() {
+    let smoke = std::env::var("FIG3_SMOKE").is_ok();
     let nccl = NcclParams::default();
-    let mut bencher = Bencher::new();
+    let mut bencher = if smoke { Bencher::quick() } else { Bencher::new() };
+    let mut rows: Vec<Json> = Vec::new();
     let batch_per_gpu = 16; // weak scaling, as the CNTK runs fix per-GPU minibatch
+    let scales: &[(usize, usize)] = if smoke {
+        &[(1, 8)]
+    } else {
+        &[(1, 8), (1, 16), (2, 16), (4, 16), (8, 16)]
+    };
 
     for model in [vgg16(), googlenet()] {
         let mut t = Table::new(&[
@@ -29,7 +51,7 @@ fn main() {
             model.name
         ));
         let mut peak = (0usize, 0.0f64);
-        for (nodes, gpn) in [(1usize, 8usize), (1, 16), (2, 16), (4, 16), (8, 16)] {
+        for &(nodes, gpn) in scales {
             let cluster = presets::kesch(nodes, gpn);
             let batch = batch_per_gpu * cluster.n_gpus();
             let sel = Selector::tuned(&cluster);
@@ -57,14 +79,66 @@ fn main() {
         println!("  => peak improvement {:.1}% at {} GPUs\n", peak.1, peak.0);
     }
 
-    // wall-clock of the full iteration estimate (tuning + schedule + sim)
-    let cluster = presets::kesch(2, 16);
+    // ---- full-exchange training modes, barrier vs overlap timeline ----
+    // smoke keeps one node so CI stays fast; the full run reports the
+    // paper's 32-GPU application scale
+    let (nodes, gpn) = if smoke { (1, 8) } else { (2, 16) };
+    let cluster = presets::kesch(nodes, gpn);
     let sel = Selector::tuned(&cluster);
     let model = vgg16();
     let batch = batch_per_gpu * cluster.n_gpus();
-    bencher.bench("sim/fig3/vgg16/32gpus/iteration-estimate", || {
-        estimate_iteration(&cluster, &model, &BcastBackend::Mv2Opt(&sel), batch, 0.0).iter_us
-    });
-    bencher.write_report("fig3_vgg_training").expect("report");
+    let gpus = cluster.n_gpus();
+    let mut t = Table::new(&["mode", "overlap", "compute ms", "exposed comm ms", "iter ms"])
+        .with_title(format!(
+            "{} full-exchange iteration, {gpus} GPUs — barrier vs overlap timeline",
+            model.name
+        ));
+    for mode in [TrainingMode::PartitionedBcast, TrainingMode::AllreduceGradients] {
+        for overlap in [false, true] {
+            let e = estimate_training_iteration_opts(
+                &cluster,
+                &model,
+                &sel,
+                mode,
+                batch,
+                0.0,
+                ExchangeOptions {
+                    overlap,
+                    ..ExchangeOptions::default()
+                },
+            );
+            let setting = if overlap { "on" } else { "off" };
+            t.row(vec![
+                mode.label().to_string(),
+                setting.to_string(),
+                format!("{:.2}", e.compute_us / 1e3),
+                format!("{:.2}", e.comm_us / 1e3),
+                format!("{:.2}", e.iter_us / 1e3),
+            ]);
+            rows.push(one_shot_row(
+                &format!(
+                    "fig3/{}/{}gpus/{}/overlap-{setting}",
+                    model.name,
+                    gpus,
+                    mode.label()
+                ),
+                e.iter_us * 1000.0,
+            ));
+        }
+    }
+    print!("{}", t.render());
+    println!();
+
+    // wall-clock of the full iteration estimate (tuning + schedule + sim)
+    bencher.bench(
+        &format!("sim/fig3/vgg16/{gpus}gpus/iteration-estimate"),
+        || {
+            estimate_iteration(&cluster, &model, &BcastBackend::Mv2Opt(&sel), batch, 0.0)
+                .iter_us
+        },
+    );
+    bencher
+        .write_report_with("fig3_vgg_training", rows)
+        .expect("report");
     println!("\npaper reference: up to 7% faster VGG training at 32 GPUs; matches or beats NCCL-MV2-GDR at every scale");
 }

@@ -26,15 +26,7 @@ use gdrbcast::util::json::Json;
 
 /// A one-shot wall-time row in the standard report shape.
 fn wall_row(name: &str, ns: f64) -> Json {
-    let mut j = Json::obj();
-    j.set("name", name)
-        .set("mean_ns", ns)
-        .set("std_dev_ns", 0.0)
-        .set("p50_ns", ns)
-        .set("p99_ns", ns)
-        .set("iters", 1u64)
-        .set("samples", 1u64);
-    j
+    gdrbcast::bench::harness::one_shot_row(name, ns)
 }
 
 fn main() {

@@ -34,6 +34,23 @@ impl BenchResult {
     }
 }
 
+/// A single-measurement row in the standard report shape (`iters` and
+/// `samples` of 1) — for one-shot wall times and derived estimates that
+/// ride along harness rows via [`Bencher::write_report_with`]. Keeping
+/// the schema in one place means report-consuming gates (CI) track a
+/// single definition.
+pub fn one_shot_row(name: &str, ns: f64) -> Json {
+    let mut j = Json::obj();
+    j.set("name", name)
+        .set("mean_ns", ns)
+        .set("std_dev_ns", 0.0)
+        .set("p50_ns", ns)
+        .set("p99_ns", ns)
+        .set("iters", 1u64)
+        .set("samples", 1u64);
+    j
+}
+
 /// Harness configuration.
 #[derive(Debug, Clone)]
 pub struct Bencher {

@@ -360,6 +360,52 @@ mod tests {
     }
 
     #[test]
+    fn remainder_chunk_class_crossing_refuses_rescale() {
+        // regression for the remainder-chunk edge `pipelined_chain`
+        // records: the rescale refuse-and-rebuild check must be
+        // *per-chunk*, not whole-message. Both totals here sit in the
+        // same whole-message class — only the remainder chunk crosses
+        // the eager threshold — so a whole-message check would wrongly
+        // serve a rescaled plan built for the eager remainder.
+        let cluster = kesch(1, 8);
+        let mut comm = Comm::new(&cluster);
+        let mut engine = Engine::new(&cluster);
+        let chunk: u64 = 64 << 10;
+        let big = 4 * chunk + (32 << 10); // remainder 32K: rendezvous class
+        let small = 4 * chunk + (8 << 10); // remainder 8K: eager class
+        let same = 4 * chunk + (24 << 10); // remainder 24K: rendezvous class
+        assert_eq!(
+            comm.size_class_of(big),
+            comm.size_class_of(small),
+            "precondition: whole messages share a class"
+        );
+        assert_ne!(
+            comm.size_class_of(32 << 10),
+            comm.size_class_of(8 << 10),
+            "precondition: remainder chunks cross the eager threshold"
+        );
+        assert_eq!(n_chunk_slots(big, chunk), n_chunk_slots(small, chunk));
+        let algo = Algorithm::PipelinedChain { chunk };
+        let _ = cached_plan(&algo, &mut comm, &CollectiveSpec::new(0, 8, big));
+        // same-class remainder: rescales in place
+        let _ = cached_plan(&algo, &mut comm, &CollectiveSpec::new(0, 8, same));
+        assert_eq!(comm.template_cache().stats(), (1, 1));
+        // remainder crosses the eager class: must refuse and rebuild
+        let ns = engine.makespan_ns(
+            &cached_plan(&algo, &mut comm, &CollectiveSpec::new(0, 8, small)).plan,
+        );
+        assert_eq!(
+            comm.template_cache().stats().1,
+            2,
+            "remainder class crossing must force a rebuild"
+        );
+        // and the rebuilt plan is bit-identical to a fresh build
+        let mut fresh_comm = Comm::new(&cluster);
+        let fresh = super::super::plan(&algo, &mut fresh_comm, &CollectiveSpec::new(0, 8, small));
+        assert_eq!(ns, engine.makespan_ns(&fresh.plan));
+    }
+
+    #[test]
     fn roots_key_separately() {
         let cluster = kesch(1, 8);
         let mut comm = Comm::new(&cluster);

@@ -8,7 +8,8 @@
 //! causality. `BcastSpec`/`BcastPlan` remain as thin aliases so the
 //! original broadcast builders read unchanged.
 
-use crate::netsim::{OpId, Plan};
+use crate::netsim::{OpId, Plan, SimOp};
+use crate::topology::{Cluster, DeviceId};
 
 /// Which collective operation a spec describes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
@@ -189,6 +190,86 @@ pub struct CollectivePlan {
     pub algorithm: String,
 }
 
+impl CollectivePlan {
+    /// Per-rank *entry* ops: ops with no in-plan dependencies, grouped
+    /// by the rank owning the op's source device (a transfer's route
+    /// source, a delay's device). These are the ops an external
+    /// scheduler must gate to make the whole collective wait on
+    /// per-rank preconditions — the overlap timeline hangs each rank's
+    /// backprop delays off them ([`crate::coordinator::timeline`]).
+    /// Entries whose source device is not a rank GPU are conservatively
+    /// listed under every rank (gating them on anyone's precondition
+    /// gates them on all).
+    pub fn rank_entry_ops(&self, cluster: &Cluster) -> Vec<Vec<OpId>> {
+        let n = self.spec.n_ranks;
+        let mut out = vec![Vec::new(); n];
+        for (id, op) in self.plan.ops().iter().enumerate() {
+            if !op.deps.is_empty() {
+                continue;
+            }
+            let src = match &op.op {
+                SimOp::Transfer { route, .. } => cluster.route_meta(*route).src,
+                SimOp::Delay { dev, .. } => *dev,
+            };
+            match rank_of(cluster, src) {
+                Some(r) if r < n => out[r].push(id),
+                _ => {
+                    for per_rank in out.iter_mut() {
+                        per_rank.push(id);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Per-rank *exit* ops: ops no other op depends on, grouped by the
+    /// receiving rank (the delivery label's rank when present, the route
+    /// destination's owning rank otherwise). Exposed so schedulers can
+    /// hang follow-on work off a specific rank's completions without
+    /// rescanning the op list. Exits attributable to no rank GPU are
+    /// listed under every rank.
+    pub fn rank_exit_ops(&self, cluster: &Cluster) -> Vec<Vec<OpId>> {
+        let n = self.spec.n_ranks;
+        let mut has_dependent = vec![false; self.plan.len()];
+        for op in self.plan.ops() {
+            for &d in op.deps.as_slice() {
+                has_dependent[d] = true;
+            }
+        }
+        let mut out = vec![Vec::new(); n];
+        for (id, op) in self.plan.ops().iter().enumerate() {
+            if has_dependent[id] {
+                continue;
+            }
+            let rank = match op.label {
+                Some((r, _)) if r < n => Some(r),
+                _ => {
+                    let dst = match &op.op {
+                        SimOp::Transfer { route, .. } => cluster.route_meta(*route).dst,
+                        SimOp::Delay { dev, .. } => *dev,
+                    };
+                    rank_of(cluster, dst).filter(|&r| r < n)
+                }
+            };
+            match rank {
+                Some(r) => out[r].push(id),
+                None => {
+                    for per_rank in out.iter_mut() {
+                        per_rank.push(id);
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// The rank owning a GPU device, if any.
+fn rank_of(cluster: &Cluster, dev: DeviceId) -> Option<usize> {
+    cluster.gpu_ranks().iter().position(|&d| d == dev)
+}
+
 /// Historical alias for the broadcast builders.
 pub type BcastPlan = CollectivePlan;
 
@@ -338,6 +419,55 @@ mod tests {
         wins.insert(Algorithm::PipelinedChain { chunk: 1 << 20 }, 30);
         assert_eq!(wins.len(), 2);
         assert_eq!(wins[&Algorithm::PipelinedChain { chunk: 1 << 20 }], 30);
+    }
+
+    #[test]
+    fn rank_entry_exit_ops_for_pipelined_chain() {
+        use crate::comm::Comm;
+        use crate::topology::presets::flat;
+        let c = flat(4);
+        let mut comm = Comm::new(&c);
+        let spec = BcastSpec::new(1, 4, 12 << 20);
+        let bp = super::super::pipelined_chain::plan(&mut comm, &spec, 4 << 20);
+        // entries: the root's first send of each chunk (3 chunks)
+        let entries = bp.rank_entry_ops(&c);
+        assert_eq!(entries[1].len(), 3, "root owns every entry");
+        for (r, ops) in entries.iter().enumerate() {
+            if r != 1 {
+                assert!(ops.is_empty(), "rank {r} must have no entries");
+            }
+            for &id in ops {
+                assert!(bp.plan.ops()[id].deps.is_empty());
+            }
+        }
+        // exits: the tail rank's receptions — the chain rooted at 1
+        // walks relabeled ranks 1,2,3,0, so rank 0 is the tail
+        let exits = bp.rank_exit_ops(&c);
+        assert_eq!(exits[0].len(), 3, "tail receives every chunk last");
+        for (r, ops) in exits.iter().enumerate() {
+            if r != 0 {
+                assert!(ops.is_empty(), "rank {r} must have no exits");
+            }
+            for &id in ops {
+                let (rank, _) = bp.plan.ops()[id].label.expect("tail receptions are labelled");
+                assert_eq!(rank, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn rank_entry_ops_for_ring_allgather() {
+        use crate::comm::Comm;
+        use crate::topology::presets::flat;
+        let c = flat(5);
+        let mut comm = Comm::new(&c);
+        let spec = CollectiveSpec::allgather(5, 5000);
+        let cp = super::super::allgather::plan(&mut comm, &spec);
+        // every rank contributes its own segment: one entry each
+        let entries = cp.rank_entry_ops(&c);
+        for (r, ops) in entries.iter().enumerate() {
+            assert_eq!(ops.len(), 1, "rank {r} must have exactly one entry");
+        }
     }
 
     #[test]

@@ -1,8 +1,15 @@
 //! Message chunking for pipelined transfers.
+//!
+//! Both splitters guard their degenerate inputs explicitly — `chunk == 0`,
+//! `chunk > total`, `total == 0`, `parts == 0` — instead of panicking on
+//! a division by zero or handing back surprise shapes: callers range over
+//! tuning grids and CLI inputs where the degenerate corners are reachable.
 
 /// Split `total` bytes into chunks of at most `chunk` bytes (last chunk
-/// carries the remainder). `chunk == 0` or `chunk >= total` yields one
-/// chunk.
+/// carries the remainder). Degenerate inputs collapse to a single slot:
+/// `chunk == 0` or `chunk >= total` yields one chunk of `total`, and
+/// `total == 0` one empty chunk (so a plan always has at least one slot
+/// per message).
 pub fn chunk_sizes(total: u64, chunk: u64) -> Vec<u64> {
     if total == 0 {
         return vec![0];
@@ -20,9 +27,14 @@ pub fn chunk_sizes(total: u64, chunk: u64) -> Vec<u64> {
 }
 
 /// Split `total` into exactly `parts` near-equal pieces (scatter-allgather
-/// partitioning). Earlier parts get the extra bytes.
+/// partitioning). Earlier parts get the extra bytes. `parts == 0` is a
+/// zero-part split: no pieces at all (and therefore no bytes) — not a
+/// panic. `netsim::ByteRole::Part` mirrors this (a part of a zero-part
+/// split is 0 bytes).
 pub fn equal_parts(total: u64, parts: usize) -> Vec<u64> {
-    assert!(parts > 0);
+    if parts == 0 {
+        return Vec::new();
+    }
     let base = total / parts as u64;
     let extra = (total % parts as u64) as usize;
     (0..parts)
@@ -33,6 +45,7 @@ pub fn equal_parts(total: u64, parts: usize) -> Vec<u64> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prop::{check, shrink_u64, Config};
 
     #[test]
     fn chunks_cover_total() {
@@ -51,6 +64,19 @@ mod tests {
     }
 
     #[test]
+    fn degenerate_inputs_are_guarded() {
+        // chunk == 0 -> one whole-message chunk, no div-by-zero
+        assert_eq!(chunk_sizes(5, 0), vec![5]);
+        // chunk > total -> one chunk
+        assert_eq!(chunk_sizes(7, 100), vec![7]);
+        // parts == 0 -> a zero-part split has no pieces, no panic
+        assert_eq!(equal_parts(10, 0), Vec::<u64>::new());
+        assert_eq!(equal_parts(0, 0), Vec::<u64>::new());
+        // total == 0 still yields the requested number of (empty) parts
+        assert_eq!(equal_parts(0, 3), vec![0, 0, 0]);
+    }
+
+    #[test]
     fn equal_parts_cover_and_balance() {
         let ps = equal_parts(10, 3);
         assert_eq!(ps, vec![4, 3, 3]);
@@ -63,5 +89,91 @@ mod tests {
     fn exact_division() {
         assert_eq!(chunk_sizes(1 << 20, 256 << 10).len(), 4);
         assert_eq!(equal_parts(1 << 20, 4), vec![256 << 10; 4]);
+    }
+
+    #[test]
+    fn prop_chunk_sizes_total_and_shape() {
+        // randomized totals/chunks including the degenerate corners:
+        // coverage, per-chunk bound, and only-the-last-chunk-short
+        check(
+            Config::default().cases(256),
+            "chunk-sizes-invariants",
+            |rng| (rng.range_u64(0, 1 << 24), rng.range_u64(0, 1 << 22)),
+            |&(total, chunk)| {
+                let cs = chunk_sizes(total, chunk);
+                if cs.iter().sum::<u64>() != total {
+                    return Err(format!("sum {} != total {total}", cs.iter().sum::<u64>()));
+                }
+                if cs.is_empty() {
+                    return Err("no slots".into());
+                }
+                if chunk == 0 || chunk >= total {
+                    // degenerate corner: exactly one whole-message slot
+                    if cs != vec![total] {
+                        return Err(format!("degenerate input not one slot: {cs:?}"));
+                    }
+                } else {
+                    // all slots but the last are exactly C; the remainder
+                    // slot is short but never empty
+                    if cs[..cs.len() - 1].iter().any(|&c| c != chunk) {
+                        return Err(format!("non-final slot differs from C in {cs:?}"));
+                    }
+                    let last = *cs.last().unwrap();
+                    if last == 0 || last > chunk {
+                        return Err(format!("bad remainder slot {last} in {cs:?}"));
+                    }
+                }
+                Ok(())
+            },
+            |&(t, c)| {
+                let mut out = Vec::new();
+                for st in shrink_u64(t, 0) {
+                    out.push((st, c));
+                }
+                for sc in shrink_u64(c, 0) {
+                    out.push((t, sc));
+                }
+                out
+            },
+        );
+    }
+
+    #[test]
+    fn prop_equal_parts_total_count_balance() {
+        check(
+            Config::default().cases(256),
+            "equal-parts-invariants",
+            |rng| (rng.range_u64(0, 1 << 24), rng.range_usize(0, 64)),
+            |&(total, parts)| {
+                let ps = equal_parts(total, parts);
+                if ps.len() != parts {
+                    return Err(format!("{} parts, wanted {parts}", ps.len()));
+                }
+                if parts == 0 {
+                    return Ok(()); // zero-part split: nothing else to hold
+                }
+                if ps.iter().sum::<u64>() != total {
+                    return Err(format!("sum {} != total {total}", ps.iter().sum::<u64>()));
+                }
+                let (max, min) = (ps.iter().max().unwrap(), ps.iter().min().unwrap());
+                if max - min > 1 {
+                    return Err(format!("imbalance {max}-{min} in {ps:?}"));
+                }
+                if !ps.windows(2).all(|w| w[0] >= w[1]) {
+                    return Err(format!("extra bytes not front-loaded: {ps:?}"));
+                }
+                Ok(())
+            },
+            |&(t, p)| {
+                let mut out = Vec::new();
+                for st in shrink_u64(t, 0) {
+                    out.push((st, p));
+                }
+                if p > 0 {
+                    out.push((t, p - 1));
+                }
+                out
+            },
+        );
     }
 }

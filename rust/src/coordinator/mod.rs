@@ -12,6 +12,10 @@
 //! * [`train`] — the Fig. 3 estimator: compute-time model × simulated
 //!   communication, per GPU count — plus the mode-aware full-exchange
 //!   estimator ([`train::estimate_training_iteration`]);
+//! * [`timeline`] — the compute/comm *overlap* timeline: per-layer
+//!   backprop delays + bucketed exchange stitched into one engine DAG
+//!   whose makespan is the overlapped iteration time
+//!   (`ExchangeOptions { overlap: true, .. }`);
 //! * [`leader`] / [`worker`] — the actual data-parallel execution engine
 //!   (leader owns parameters, workers compute gradient shards; threaded
 //!   over channels, or serial for non-`Send` backends like PJRT);
@@ -20,6 +24,7 @@
 pub mod leader;
 pub mod metrics;
 pub mod schedule;
+pub mod timeline;
 pub mod train;
 pub mod worker;
 
@@ -28,5 +33,6 @@ pub use metrics::{IterationMetrics, TrainingMetrics};
 pub use schedule::{
     aggregation_time_ns, allreduce_time_ns, comm_time_ns, BcastBackend, TrainingMode,
 };
-pub use train::estimate_training_iteration;
+pub use timeline::{overlap_iteration_ns, ExchangeUnit};
+pub use train::{estimate_training_iteration, estimate_training_iteration_opts, ExchangeOptions};
 pub use worker::ComputeBackend;

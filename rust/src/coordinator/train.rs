@@ -82,9 +82,32 @@ pub fn estimate_iteration(
     estimate_from(gpus, global_batch, compute_us, comm_ns)
 }
 
+/// Knobs for the full-exchange estimator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExchangeOptions {
+    /// Overlap backprop with the gradient exchange: cost the iteration
+    /// as the makespan of the layer-wise timeline DAG
+    /// ([`super::timeline`]) instead of the `compute + comm` barrier
+    /// model. Off reproduces the pre-timeline estimates bit-for-bit.
+    pub overlap: bool,
+    /// Gradient-fusion bucket size for the allreduce mode (the
+    /// `--bucket-bytes` flush threshold; both the barrier and overlap
+    /// paths bucket with it).
+    pub bucket_bytes: u64,
+}
+
+impl Default for ExchangeOptions {
+    fn default() -> ExchangeOptions {
+        ExchangeOptions {
+            overlap: false,
+            bucket_bytes: crate::models::DEFAULT_BUCKET_BYTES,
+        }
+    }
+}
+
 /// Estimate one iteration of the *full* gradient/parameter exchange
 /// under a [`TrainingMode`], with the tuned MPI runtime carrying the
-/// collectives.
+/// collectives — default options (no overlap, default buckets).
 ///
 /// Unlike [`estimate_iteration`] (which reproduces the paper's Fig. 3
 /// broadcast-only accounting), the partitioned mode here also pays the
@@ -99,10 +122,58 @@ pub fn estimate_training_iteration(
     global_batch: usize,
     compute_us_override: f64,
 ) -> TrainingEstimate {
+    estimate_training_iteration_opts(
+        cluster,
+        model,
+        sel,
+        mode,
+        global_batch,
+        compute_us_override,
+        ExchangeOptions::default(),
+    )
+}
+
+/// [`estimate_training_iteration`] with explicit [`ExchangeOptions`].
+///
+/// With `overlap` off, the iteration is `compute + comm` (a global
+/// barrier between backprop and the exchange). With `overlap` on, the
+/// iteration is the makespan of the overlap timeline — per-layer
+/// backprop delays feeding the bucketed exchange in one DAG — and
+/// `comm_us` reports only the *exposed* (non-hidden) communication.
+/// With zero per-layer compute the two paths agree exactly.
+pub fn estimate_training_iteration_opts(
+    cluster: &Cluster,
+    model: &DnnModel,
+    sel: &Selector,
+    mode: TrainingMode,
+    global_batch: usize,
+    compute_us_override: f64,
+    opts: ExchangeOptions,
+) -> TrainingEstimate {
     let gpus = cluster.n_gpus();
     let compute_us = compute_us_for(model, gpus, global_batch, compute_us_override);
     let mut comm = Comm::new(cluster);
     let mut engine = Engine::new(cluster);
+    if opts.overlap {
+        let compute_ns = (compute_us * 1000.0).round() as u64;
+        let makespan = super::timeline::overlap_iteration_ns(
+            &mut comm,
+            &mut engine,
+            sel,
+            mode,
+            model,
+            compute_ns,
+            opts.bucket_bytes,
+        );
+        let iter_us = makespan as f64 / 1000.0;
+        return TrainingEstimate {
+            gpus,
+            compute_us,
+            comm_us: (iter_us - compute_us).max(0.0),
+            iter_us,
+            throughput: global_batch as f64 / (iter_us / 1e6),
+        };
+    }
     let comm_ns = match mode {
         TrainingMode::PartitionedBcast => {
             let msgs = bcast_messages(model, gpus, MessageSchedule::Partitioned);
@@ -115,7 +186,7 @@ pub fn estimate_training_iteration(
                 + comm_time_ns(&mut comm, &mut engine, &BcastBackend::Mv2Opt(sel), &msgs)
         }
         TrainingMode::AllreduceGradients => {
-            let buckets = allreduce_buckets(model, crate::models::DEFAULT_BUCKET_BYTES);
+            let buckets = allreduce_buckets(model, opts.bucket_bytes);
             allreduce_time_ns(&mut comm, &mut engine, sel, &buckets)
         }
     };
@@ -224,6 +295,178 @@ mod tests {
         let b = estimate_iteration(&cluster, &model, &BcastBackend::Mv2Opt(&sel), 64, 0.0);
         assert_eq!(a.compute_us, b.compute_us);
         assert!(a.comm_us > 0.0);
+    }
+
+    #[test]
+    fn overlap_no_worse_than_barrier_at_32_gpus() {
+        // acceptance: VGG16 on the 32-GPU kesch preset — overlapping
+        // backprop with the exchange never loses to the barrier model,
+        // in either training mode
+        let cluster = kesch(2, 16);
+        let model = vgg16();
+        let sel = Selector::tuned(&cluster);
+        let batch = 16 * cluster.n_gpus();
+        for mode in [TrainingMode::PartitionedBcast, TrainingMode::AllreduceGradients] {
+            let off = estimate_training_iteration_opts(
+                &cluster,
+                &model,
+                &sel,
+                mode,
+                batch,
+                0.0,
+                ExchangeOptions::default(),
+            );
+            let on = estimate_training_iteration_opts(
+                &cluster,
+                &model,
+                &sel,
+                mode,
+                batch,
+                0.0,
+                ExchangeOptions {
+                    overlap: true,
+                    ..ExchangeOptions::default()
+                },
+            );
+            assert!(
+                on.iter_us <= off.iter_us,
+                "{}: overlap {} us vs barrier {} us",
+                mode.label(),
+                on.iter_us,
+                off.iter_us
+            );
+            // overlap can hide comm, never compute
+            assert!(on.iter_us >= on.compute_us);
+            assert_eq!(on.compute_us, off.compute_us);
+        }
+    }
+
+    #[test]
+    fn overlap_equals_barrier_at_zero_compute() {
+        // acceptance: with zero per-layer compute the timeline's
+        // exchange DAG replays the barrier model's exactly — iteration
+        // times must agree to the bit, in both training modes
+        let cluster = kesch(2, 16);
+        let model = vgg16().with_flops(0); // zero compute, real messages
+        let sel = Selector::tuned(&cluster);
+        let batch = 16 * cluster.n_gpus();
+        for mode in [TrainingMode::PartitionedBcast, TrainingMode::AllreduceGradients] {
+            let off = estimate_training_iteration_opts(
+                &cluster,
+                &model,
+                &sel,
+                mode,
+                batch,
+                0.0,
+                ExchangeOptions::default(),
+            );
+            let on = estimate_training_iteration_opts(
+                &cluster,
+                &model,
+                &sel,
+                mode,
+                batch,
+                0.0,
+                ExchangeOptions {
+                    overlap: true,
+                    ..ExchangeOptions::default()
+                },
+            );
+            assert_eq!(off.compute_us, 0.0);
+            assert_eq!(
+                on.iter_us,
+                off.iter_us,
+                "{}: zero-compute overlap must be exact",
+                mode.label()
+            );
+        }
+    }
+
+    #[test]
+    fn no_overlap_path_matches_schedule_primitives_bit_for_bit() {
+        // golden parity: the overlap-capable estimator with overlap OFF
+        // must reproduce the pre-timeline composition of the schedule
+        // primitives exactly
+        let cluster = kesch(1, 8);
+        let model = vgg16();
+        let sel = Selector::tuned(&cluster);
+        let gpus = cluster.n_gpus();
+        let batch = 16 * gpus;
+        // partitioned: aggregation + judged broadcast schedule
+        let mut comm = Comm::new(&cluster);
+        let mut engine = Engine::new(&cluster);
+        let msgs = bcast_messages(&model, gpus, MessageSchedule::Partitioned);
+        let want_part = aggregation_time_ns(&mut comm, &mut engine, &msgs)
+            + comm_time_ns(&mut comm, &mut engine, &BcastBackend::Mv2Opt(&sel), &msgs);
+        let got_part = estimate_training_iteration_opts(
+            &cluster,
+            &model,
+            &sel,
+            TrainingMode::PartitionedBcast,
+            batch,
+            0.0,
+            ExchangeOptions::default(),
+        );
+        assert_eq!(got_part.comm_us, want_part as f64 / 1000.0);
+        // allreduce: merged default-size buckets
+        let buckets = allreduce_buckets(&model, crate::models::DEFAULT_BUCKET_BYTES);
+        let want_ar = allreduce_time_ns(&mut comm, &mut engine, &sel, &buckets);
+        let got_ar = estimate_training_iteration_opts(
+            &cluster,
+            &model,
+            &sel,
+            TrainingMode::AllreduceGradients,
+            batch,
+            0.0,
+            ExchangeOptions::default(),
+        );
+        assert_eq!(got_ar.comm_us, want_ar as f64 / 1000.0);
+        // and the default-options wrapper is the same path
+        let wrapped = estimate_training_iteration(
+            &cluster,
+            &model,
+            &sel,
+            TrainingMode::AllreduceGradients,
+            batch,
+            0.0,
+        );
+        assert_eq!(wrapped.iter_us, got_ar.iter_us);
+    }
+
+    #[test]
+    fn bucket_bytes_knob_changes_allreduce_schedule() {
+        let cluster = kesch(1, 4);
+        let model = vgg16();
+        let sel = Selector::tuned(&cluster);
+        let coarse = estimate_training_iteration_opts(
+            &cluster,
+            &model,
+            &sel,
+            TrainingMode::AllreduceGradients,
+            64,
+            0.0,
+            ExchangeOptions {
+                overlap: false,
+                bucket_bytes: model.total_bytes(), // one giant bucket
+            },
+        );
+        let fine = estimate_training_iteration_opts(
+            &cluster,
+            &model,
+            &sel,
+            TrainingMode::AllreduceGradients,
+            64,
+            0.0,
+            ExchangeOptions {
+                overlap: false,
+                bucket_bytes: 8 << 20,
+            },
+        );
+        assert!(coarse.comm_us > 0.0 && fine.comm_us > 0.0);
+        assert_ne!(
+            coarse.comm_us, fine.comm_us,
+            "bucket size must change the merged schedule"
+        );
     }
 
     #[test]

@@ -96,6 +96,35 @@ impl DnnModel {
         self.fwd_flops = fwd_flops;
         self
     }
+
+    /// Apportion a per-iteration backprop compute budget (ns) across the
+    /// layers, proportional to each layer's parameter count — the
+    /// per-layer `Delay` durations the overlap timeline emits in reverse
+    /// layer order ([`crate::coordinator::timeline`]). The split is
+    /// exact: the pieces always sum to `total_ns` (cumulative rounding,
+    /// so no layer is off by more than one ns from proportional).
+    /// Parameter-free models split the budget equally.
+    pub fn layer_compute_split(&self, total_ns: u64) -> Vec<u64> {
+        let n = self.layers.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let params = self.total_params();
+        // weight by params; all-zero models fall back to uniform weights
+        let uniform = params == 0;
+        let total_weight = if uniform { n as u64 } else { params };
+        let mut out = Vec::with_capacity(n);
+        let mut acc = 0u64;
+        let mut prev = 0u64;
+        for layer in &self.layers {
+            acc += if uniform { 1 } else { layer.params };
+            // u128: total_ns × params overflows u64 for real models
+            let upto = (total_ns as u128 * acc as u128 / total_weight as u128) as u64;
+            out.push(upto - prev);
+            prev = upto;
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -108,6 +137,33 @@ mod tests {
         assert_eq!(m.layers.len(), 4);
         assert_eq!(m.total_params(), 3 * 3 * 3 * 64 + 64 + 1000 + 10);
         assert_eq!(m.total_bytes(), m.total_params() * 4);
+    }
+
+    #[test]
+    fn layer_compute_split_is_exact_and_proportional() {
+        let m = DnnModel::new("toy").conv("c1", 3, 3, 3, 64).fc("f1", 100, 10);
+        let total: u64 = 1_000_000;
+        let split = m.layer_compute_split(total);
+        assert_eq!(split.len(), m.layers.len());
+        assert_eq!(split.iter().sum::<u64>(), total, "split must be exact");
+        // the dominant layer gets the dominant share
+        let (imax, _) = m
+            .layers
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, l)| l.params)
+            .unwrap();
+        assert_eq!(
+            split.iter().enumerate().max_by_key(|&(_, &ns)| ns).unwrap().0,
+            imax
+        );
+        // zero budget -> all-zero pieces; zero-param model -> uniform
+        assert!(m.layer_compute_split(0).iter().all(|&ns| ns == 0));
+        let mut flat = DnnModel::new("z");
+        flat.layers.push(Layer::new("a", 0));
+        flat.layers.push(Layer::new("b", 0));
+        assert_eq!(flat.layer_compute_split(10), vec![5, 5]);
+        assert!(DnnModel::new("empty").layer_compute_split(7).is_empty());
     }
 
     #[test]

@@ -402,6 +402,27 @@ mod tests {
     }
 
     #[test]
+    fn merged_schedules_keep_delivery_queries() {
+        // regression: Plan::merge used to drop labels, so rank_completion
+        // and delivery_time on a merged schedule returned empty/0
+        let c = flat(3);
+        let mut e = Engine::new(&c);
+        let a = transfer_plan(&c, &[(0, 1, 1000)]);
+        let b = transfer_plan(&c, &[(0, 2, 1000)]);
+        let mut merged = Plan::new();
+        let ha = merged.merge(&a);
+        let hb = merged.merge(&b);
+        let r = e.execute(&merged);
+        let t1 = r.delivery_time(&merged, 1, crate::netsim::ns_chunk(ha.namespace, 0));
+        let t2 = r.delivery_time(&merged, 2, crate::netsim::ns_chunk(hb.namespace, 0));
+        assert!(t1.is_some() && t2.is_some());
+        let rc = r.rank_completion(&merged, 3);
+        assert_eq!(rc[1], t1.unwrap());
+        assert_eq!(rc[2], t2.unwrap());
+        assert_eq!(rc[0], 0);
+    }
+
+    #[test]
     #[should_panic(expected = "cycle")]
     fn cycle_detected() {
         // construct a cyclic plan by hand (bypassing push's debug_assert)

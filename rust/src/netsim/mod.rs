@@ -21,4 +21,7 @@ pub mod transfer;
 
 pub use engine::{Engine, ExecResult};
 pub use time::SimTime;
-pub use transfer::{ByteRole, Deps, OpByte, OpId, Plan, PlanTemplate, PlannedOp, SimOp, NO_CLASS};
+pub use transfer::{
+    ns_chunk, ByteRole, Deps, MergeHandle, OpByte, OpId, Plan, PlanTemplate, PlannedOp, SimOp,
+    LABEL_NS_STRIDE, NO_CLASS,
+};

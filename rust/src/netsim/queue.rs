@@ -261,8 +261,9 @@ mod tests {
     }
 
     /// Drive the queue and a BinaryHeap through an identical monotone
-    /// push/pop schedule; every pop must match.
-    fn reference_run(seed: u64, n: usize, spread: u64) {
+    /// push/pop schedule (`dt` draws each successor's delay); every pop
+    /// must match bit-for-bit.
+    fn reference_run_with(seed: u64, n: usize, mut dt: impl FnMut(&mut Xs) -> u64) {
         let mut rng = Xs(seed | 1);
         let mut q = ReadyQueue::new();
         let mut h: BinaryHeap<Reverse<(SimTime, OpId)>> = BinaryHeap::new();
@@ -283,15 +284,20 @@ mod tests {
             // each pop spawns 0–2 successors at or after `now`
             if pushed < n {
                 for _ in 0..(rng.next() % 3) {
-                    let dt = rng.next() % spread;
-                    q.push(now + dt, next_id);
-                    h.push(Reverse((now + dt, next_id)));
+                    let d = dt(&mut rng);
+                    q.push(now + d, next_id);
+                    h.push(Reverse((now + d, next_id)));
                     next_id += 1;
                     pushed += 1;
                 }
             }
         }
         assert!(q.is_empty());
+    }
+
+    /// [`reference_run_with`] drawing delays uniformly below `spread`.
+    fn reference_run(seed: u64, n: usize, spread: u64) {
+        reference_run_with(seed, n, move |rng| rng.next() % spread);
     }
 
     #[test]
@@ -307,6 +313,54 @@ mod tests {
         // spreads that overflow the initial 1 ms window and force rebases
         for (seed, spread) in [(7u64, 1 << 21), (8, 1 << 26), (9, 40_000_000)] {
             reference_run(seed, 2000, spread);
+        }
+    }
+
+    #[test]
+    fn matches_binary_heap_at_window_edge() {
+        // the initial window covers BUCKETS << INITIAL_SHIFT ns; spreads
+        // hugging that edge exercise the last in-window bucket, the
+        // first overflow item, and the rebase that follows
+        let window = (BUCKETS as u64) << INITIAL_SHIFT;
+        for (seed, spread) in [
+            (11u64, window - 1),
+            (12, window),
+            (13, window + 1),
+            (14, window / 2 + 1),
+            (15, 2 * window - 1),
+        ] {
+            reference_run(seed, 3000, spread);
+        }
+    }
+
+    #[test]
+    fn matches_binary_heap_across_fallback_threshold() {
+        // spreads so wide that rebase cannot cover the span with
+        // 1 << FALLBACK_SHIFT buckets: the queue must degrade to the
+        // sorted drain and still match the heap exactly. The span needed
+        // is (BUCKETS - 1) << FALLBACK_SHIFT ≈ 2^48 ns.
+        // spreads stay ≤ 2^52 so ~600 chained generations cannot
+        // overflow the u64 clock
+        for (seed, spread) in [(21u64, 1u64 << 49), (22, 1 << 50), (23, 1 << 52)] {
+            reference_run(seed, 600, spread);
+        }
+    }
+
+    #[test]
+    fn matches_binary_heap_bimodal_straddle() {
+        // mostly-dense streams with rare giant gaps: the queue keeps
+        // rebasing onto tight windows until one gap blows past the
+        // fallback threshold mid-run, then drains sorted — pops must
+        // stay bit-identical to the heap through the transition
+        for seed in [31u64, 32, 33] {
+            reference_run_with(seed, 1200, |rng| {
+                if rng.next() % 64 == 0 {
+                    // ~2^50 ns: guarantees the eventual fallback
+                    (1u64 << 50) + rng.next() % (1 << 20)
+                } else {
+                    rng.next() % 5_000
+                }
+            });
         }
     }
 

@@ -176,6 +176,36 @@ pub struct PlannedOp {
     pub label: Option<(usize, usize)>,
 }
 
+/// Stride between label namespaces: every plan merged into another via
+/// [`Plan::merge`]/[`Plan::merge_after`] has its labels' chunk indices
+/// offset by `namespace * LABEL_NS_STRIDE`, so deliveries from different
+/// merged sub-plans stay distinguishable instead of colliding (or, as
+/// before the fix, being dropped). Leaf plans built by the collective
+/// builders keep chunk indices far below the stride (debug-asserted on
+/// merge).
+pub const LABEL_NS_STRIDE: usize = 1 << 32;
+
+/// The chunk key under which merge namespace `ns` holds chunk `chunk` —
+/// pair with [`Plan::deliveries`] / `ExecResult::delivery_time` to query
+/// a merged sub-plan's deliveries through a [`MergeHandle`].
+pub fn ns_chunk(ns: usize, chunk: usize) -> usize {
+    debug_assert!(chunk < LABEL_NS_STRIDE, "chunk index overflows its namespace");
+    ns * LABEL_NS_STRIDE + chunk
+}
+
+/// Where a plan merged via [`Plan::merge`]/[`Plan::merge_after`] landed:
+/// its ops occupy `offset..offset + len` of the destination, and its
+/// labels moved to chunk namespace `namespace` (see [`ns_chunk`]) — a
+/// leaf plan's labels land exactly there; a plan that was itself built
+/// by merging occupies the range `namespace ..= namespace + its own
+/// merge count`, keeping nested namespaces distinct.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MergeHandle {
+    pub offset: OpId,
+    pub len: usize,
+    pub namespace: usize,
+}
+
 /// A dependency DAG of ops.
 #[derive(Debug, Clone, Default)]
 pub struct Plan {
@@ -184,12 +214,17 @@ pub struct Plan {
     /// label mutation bypasses the deliveries-cache invalidation — use
     /// [`Plan::set_label`].
     pub(crate) ops: Vec<PlannedOp>,
+    /// Number of plans merged in so far; merge `k` (1-based) namespaces
+    /// its labels at chunk offset `k * LABEL_NS_STRIDE` (directly pushed
+    /// labels live in namespace 0).
+    merge_seq: usize,
     /// Labelled deliveries `(rank, chunk) -> op id`, built lazily on the
     /// first [`Plan::deliveries`] call (later ops overwrite earlier ones
     /// with the same label: delivery = last write) and invalidated by
-    /// labelled pushes / [`Plan::set_label`]. Lazy so the plan-build hot
-    /// path performs no per-op hashing. Mutating `ops[..].label`
-    /// directly bypasses the invalidation — use `set_label`.
+    /// labelled pushes / [`Plan::set_label`] / labelled merges. Lazy so
+    /// the plan-build hot path performs no per-op hashing. Mutating
+    /// `ops[..].label` directly bypasses the invalidation — use
+    /// `set_label`.
     deliveries: std::cell::OnceCell<std::collections::HashMap<(usize, usize), OpId>>,
 }
 
@@ -239,19 +274,74 @@ impl Plan {
 
     /// Append another plan's ops (shifting its internal dependencies) so
     /// independent collectives can execute concurrently on the shared
-    /// fabric — contention on common links resolves in the engine. The
-    /// merged-in labels are dropped (delivery bookkeeping stays with the
-    /// original plans).
-    pub fn merge(&mut self, other: &Plan) {
+    /// fabric — contention on common links resolves in the engine.
+    /// Merged-in labels are kept, with their chunk indices moved into a
+    /// fresh namespace (`handle.namespace`, see [`ns_chunk`]) so
+    /// deliveries from different merged sub-plans stay distinguishable
+    /// and `ExecResult::{delivery_time, rank_completion}` keep working on
+    /// merged schedules.
+    pub fn merge(&mut self, other: &Plan) -> MergeHandle {
+        self.merge_after(other, &[])
+    }
+
+    /// [`Plan::merge`] with cross-plan dependency stitching: every op of
+    /// `other` that has no in-plan dependencies additionally depends on
+    /// `external` (op ids in `self`, which must all precede the merge).
+    /// This is how the overlap timeline gates a merged collective on
+    /// compute ops or on another merged plan's completions.
+    pub fn merge_after(&mut self, other: &Plan, external: &[OpId]) -> MergeHandle {
         let offset = self.ops.len();
+        debug_assert!(
+            external.iter().all(|&d| d < offset),
+            "external dep on an op at or past the merge point"
+        );
+        // allocate a namespace *range*, not a single slot, so merging an
+        // already-merged plan keeps its internal namespaces distinct
+        // (closed under composition): `other`'s namespace k lands at
+        // `namespace + k`, and the next merge starts past all of them
+        let namespace = self.merge_seq + 1;
+        self.merge_seq += other.merge_seq + 1;
+        let mut merged_label = false;
         for op in &other.ops {
             let mut shifted = op.clone();
-            shifted.label = None;
-            for d in shifted.deps.as_mut_slice() {
-                *d += offset;
+            if let Some((rank, chunk)) = shifted.label {
+                debug_assert!(
+                    chunk < (other.merge_seq + 1) * LABEL_NS_STRIDE,
+                    "chunk index overflows the merged plan's namespace range"
+                );
+                shifted.label = Some((rank, chunk + namespace * LABEL_NS_STRIDE));
+                merged_label = true;
+            }
+            if shifted.deps.is_empty() {
+                shifted.deps = Deps::from_slice(external);
+            } else {
+                for d in shifted.deps.as_mut_slice() {
+                    *d += offset;
+                }
             }
             self.ops.push(shifted);
         }
+        if merged_label {
+            // a labelled merge after a deliveries() query must not serve
+            // the stale pre-merge map
+            let _ = self.deliveries.take();
+        }
+        MergeHandle {
+            offset,
+            len: other.ops.len(),
+            namespace,
+        }
+    }
+
+    /// Append a dependency to an existing op (cross-plan stitching:
+    /// gating a merged sub-plan's entry ops on ops pushed earlier).
+    /// Dependencies don't affect labels, so the deliveries cache stays
+    /// valid. The caller is responsible for not closing a cycle — the
+    /// engine fails fast on cyclic plans.
+    pub fn add_dep(&mut self, op: OpId, dep: OpId) {
+        debug_assert!(op < self.ops.len() && dep < self.ops.len(), "op id out of range");
+        debug_assert_ne!(op, dep, "op depending on itself");
+        self.ops[op].deps.push(dep);
     }
 
     pub fn is_empty(&self) -> bool {
@@ -298,7 +388,12 @@ fn chunk_slot_bytes(total: u64, chunk: u64, index: u32) -> u64 {
 }
 
 /// Sum of `equal_parts(total, of)[..upto]` without building the vector.
+/// `of == 0` names a zero-part split ([`crate::comm::chunk::equal_parts`]
+/// returns no parts), so every prefix is empty: 0, not a div-by-zero.
 fn part_prefix_bytes(total: u64, of: u32, upto: u32) -> u64 {
+    if of == 0 {
+        return 0;
+    }
     let of = of as u64;
     let upto = upto as u64;
     let base = total / of;
@@ -342,6 +437,10 @@ impl ByteRole {
             ByteRole::Fixed(b) => b,
             ByteRole::Whole => total,
             ByteRole::Part { index, of } => {
+                if of == 0 {
+                    // a zero-part split has no parts to take bytes from
+                    return 0;
+                }
                 let base = total / of as u64;
                 let extra = total % of as u64;
                 base + u64::from((index as u64) < extra)
@@ -620,17 +719,110 @@ mod tests {
     }
 
     #[test]
-    fn merge_drops_labels_and_shifts_deps() {
+    fn merge_namespaces_labels_and_shifts_deps() {
         let dev = DeviceId(0);
         let mut a = Plan::new();
-        a.push(SimOp::Delay { dev, dur_ns: 1 }, vec![], None);
+        a.push(SimOp::Delay { dev, dur_ns: 1 }, vec![], Some((0, 0)));
         let mut b = Plan::new();
         let first = b.push(SimOp::Delay { dev, dur_ns: 1 }, vec![], None);
         b.push(SimOp::Delay { dev, dur_ns: 1 }, vec![first], Some((0, 0)));
-        a.merge(&b);
+        let h = a.merge(&b);
+        assert_eq!((h.offset, h.len, h.namespace), (1, 2, 1));
         assert_eq!(a.len(), 3);
         assert_eq!(a.ops[2].deps.as_slice(), &[1]);
-        assert!(a.ops[2].label.is_none());
-        assert!(a.deliveries().is_empty());
+        // the merged label survives, moved into namespace 1 — it must
+        // not collide with a's own (0, 0) delivery
+        assert_eq!(a.ops[2].label, Some((0, ns_chunk(1, 0))));
+        assert_eq!(a.deliveries().get(&(0, 0)), Some(&0));
+        assert_eq!(a.deliveries().get(&(0, ns_chunk(h.namespace, 0))), Some(&2));
+        // a second merge of the same plan lands in namespace 2
+        let h2 = a.merge(&b);
+        assert_eq!((h2.offset, h2.namespace), (3, 2));
+        assert_eq!(a.deliveries().get(&(0, ns_chunk(2, 0))), Some(&4));
+    }
+
+    #[test]
+    fn merge_invalidates_memoized_deliveries() {
+        // regression: merge used to leave the OnceCell warm, so a
+        // labelled merge after a deliveries() query served a stale map
+        let dev = DeviceId(0);
+        let mut a = Plan::new();
+        a.push(SimOp::Delay { dev, dur_ns: 1 }, vec![], Some((1, 0)));
+        assert_eq!(a.deliveries().len(), 1); // warm the cache
+        let mut b = Plan::new();
+        b.push(SimOp::Delay { dev, dur_ns: 1 }, vec![], Some((2, 0)));
+        let h = a.merge(&b);
+        assert_eq!(a.deliveries().len(), 2);
+        assert_eq!(a.deliveries().get(&(2, ns_chunk(h.namespace, 0))), Some(&1));
+        // an unlabelled merge needn't invalidate — and must not lose
+        // what's there
+        let mut c = Plan::new();
+        c.push(SimOp::Delay { dev, dur_ns: 1 }, vec![], None);
+        a.merge(&c);
+        assert_eq!(a.deliveries().len(), 2);
+    }
+
+    #[test]
+    fn nested_merges_keep_namespaces_distinct() {
+        // merging an already-merged plan must not fold its namespaces
+        // onto a later merge's (release builds have no assert to catch
+        // a collision — the allocation itself must be collision-free)
+        let dev = DeviceId(0);
+        let mut leaf1 = Plan::new();
+        leaf1.push(SimOp::Delay { dev, dur_ns: 1 }, vec![], Some((0, 7)));
+        let mut leaf2 = Plan::new();
+        leaf2.push(SimOp::Delay { dev, dur_ns: 1 }, vec![], Some((0, 9)));
+        let mut a = Plan::new();
+        let _ = a.merge(&leaf1); // a's ns 1
+        let _ = a.merge(&leaf2); // a's ns 2
+        let mut c = Plan::new();
+        let ha = c.merge(&a); // consumes ns 1..=3 (a's 0..=2 shifted)
+        let hb = c.merge(&leaf2); // must land past all of a's namespaces
+        assert_eq!(ha.namespace, 1);
+        assert_eq!(hb.namespace, 4);
+        // all three labels stay distinct deliveries
+        assert_eq!(c.deliveries().len(), 3);
+        assert_eq!(c.deliveries().get(&(0, ns_chunk(2, 7))), Some(&0));
+        assert_eq!(c.deliveries().get(&(0, ns_chunk(3, 9))), Some(&1));
+        assert_eq!(c.deliveries().get(&(0, ns_chunk(4, 9))), Some(&2));
+    }
+
+    #[test]
+    fn merge_after_gates_entry_ops_on_externals() {
+        let dev = DeviceId(0);
+        let mut a = Plan::new();
+        let g0 = a.push(SimOp::Delay { dev, dur_ns: 5 }, vec![], None);
+        let g1 = a.push(SimOp::Delay { dev, dur_ns: 7 }, vec![], None);
+        let mut b = Plan::new();
+        let first = b.push(SimOp::Delay { dev, dur_ns: 1 }, vec![], None);
+        b.push(SimOp::Delay { dev, dur_ns: 1 }, vec![first], None);
+        let h = a.merge_after(&b, &[g0, g1]);
+        // b's dep-less op now waits on both externals; its internal
+        // dependency is shifted, not re-gated
+        assert_eq!(a.ops[h.offset].deps.as_slice(), &[g0, g1]);
+        assert_eq!(a.ops[h.offset + 1].deps.as_slice(), &[h.offset]);
+    }
+
+    #[test]
+    fn add_dep_extends_existing_ops() {
+        let dev = DeviceId(0);
+        let mut p = Plan::new();
+        let a = p.push(SimOp::Delay { dev, dur_ns: 1 }, vec![], None);
+        let b = p.push(SimOp::Delay { dev, dur_ns: 1 }, vec![], None);
+        p.add_dep(b, a);
+        assert_eq!(p.ops[b].deps.as_slice(), &[a]);
+    }
+
+    #[test]
+    fn degenerate_byte_roles_are_guarded() {
+        // of == 0 names a zero-part split: no parts, zero bytes, no
+        // div-by-zero panic
+        assert_eq!(ByteRole::Part { index: 0, of: 0 }.bytes(1 << 20), 0);
+        assert_eq!(
+            ByteRole::PartRange { from: 0, to: 0, of: 0 }.bytes(1 << 20),
+            0
+        );
+        // chunk == 0 collapses to a single whole-message slot
+        assert_eq!(ByteRole::ChunkSlot { index: 0, chunk: 0 }.bytes(4096), 4096);
     }
 }
