@@ -2,9 +2,15 @@
 //! NCCL vs MV2-GDR-Opt on one KESCH node, 2/4/8/16 GPUs) and measures
 //! the wall-clock cost of simulating it (the L3 hot path).
 //!
+//! Each scale is reported under every link-contention model (FIFO
+//! serialized occupancy vs max-min fair share — DESIGN.md §Contention
+//! models) side by side; the tuned selector is re-tuned per model so its
+//! picks are consistent with the engine judging them. `LINK_MODEL=fifo`
+//! (or `fairshare`) restricts a run to one model.
+//!
 //! `cargo bench --bench fig1_intranode`
 
-use gdrbcast::bench::harness::Bencher;
+use gdrbcast::bench::harness::{link_models_from_env, Bencher};
 use gdrbcast::bench::osu::osu_bcast;
 use gdrbcast::bench::report::Figure;
 use gdrbcast::collectives::BcastSpec;
@@ -19,36 +25,56 @@ fn main() {
     let sizes = pow2_sweep(4, 128 << 20);
     let nccl_params = NcclParams::default();
     let mut bencher = Bencher::new();
+    let models = link_models_from_env();
 
     println!("== Figure 1: intranode broadcast latency (KESCH node) ==\n");
     for gpus in [2usize, 4, 8, 16] {
         let cluster = presets::kesch(1, gpus);
-        let selector = Selector::tuned(&cluster);
-        let mut comm = Comm::new(&cluster);
-        let mut engine = Engine::new(&cluster);
+        for &model in &models {
+            let selector = Selector::tuned_with_model(&cluster, None, model);
+            let mut comm = Comm::new(&cluster);
+            let mut engine = Engine::with_model(&cluster, model);
 
-        let nccl_res = osu_bcast(&mut engine, &sizes, 3, 1, |bytes, _| {
-            nccl_bcast::plan_intranode(&cluster, &nccl_params, &BcastSpec::new(0, gpus, bytes))
-        });
-        let mv2_res = osu_bcast(&mut engine, &sizes, 3, 1, |bytes, _| {
-            selector.plan(&mut comm, &BcastSpec::new(0, gpus, bytes))
-        });
+            let nccl_res = osu_bcast(&mut engine, &sizes, 3, 1, |bytes, _| {
+                nccl_bcast::plan_intranode(
+                    &cluster,
+                    &nccl_params,
+                    &BcastSpec::new(0, gpus, bytes),
+                )
+            });
+            let mv2_res = osu_bcast(&mut engine, &sizes, 3, 1, |bytes, _| {
+                selector.plan(&mut comm, &BcastSpec::new(0, gpus, bytes))
+            });
 
-        let mut fig = Figure::new(format!("{gpus} GPUs"), sizes.clone());
-        fig.push_series("NCCL", nccl_res.iter().map(|r| r.latency_us).collect());
-        fig.push_series("MV2-GDR-Opt", mv2_res.iter().map(|r| r.latency_us).collect());
-        print!("{}", fig.render());
-        let (at, ratio) = fig.max_ratio_below(8 << 10).unwrap();
-        let large = fig.ratio_at_max().unwrap();
-        println!("  => up to {ratio:.1}x at {at}B (small/medium); {large:.2}x at 128M (large)\n");
+            let mut fig = Figure::new(
+                format!("{gpus} GPUs ({} link model)", model.name()),
+                sizes.clone(),
+            );
+            fig.push_series("NCCL", nccl_res.iter().map(|r| r.latency_us).collect());
+            fig.push_series("MV2-GDR-Opt", mv2_res.iter().map(|r| r.latency_us).collect());
+            print!("{}", fig.render());
+            let (at, ratio) = fig.max_ratio_below(8 << 10).unwrap();
+            let large = fig.ratio_at_max().unwrap();
+            println!(
+                "  => [{}] up to {ratio:.1}x at {at}B (small/medium); {large:.2}x at 128M (large)\n",
+                model.name()
+            );
 
-        // wall-clock of the simulation itself (perf target: see DESIGN.md)
-        bencher.bench(&format!("sim/fig1/{gpus}gpus/4B/tuned"), || {
-            selector.latency_ns(&mut comm, &mut engine, &BcastSpec::new(0, gpus, 4))
-        });
-        bencher.bench(&format!("sim/fig1/{gpus}gpus/128M/tuned"), || {
-            selector.latency_ns(&mut comm, &mut engine, &BcastSpec::new(0, gpus, 128 << 20))
-        });
+            // wall-clock of the simulation itself (perf target: DESIGN.md)
+            bencher.bench(&format!("sim/fig1/{gpus}gpus/4B/tuned/{}", model.name()), || {
+                selector.latency_ns(&mut comm, &mut engine, &BcastSpec::new(0, gpus, 4))
+            });
+            bencher.bench(
+                &format!("sim/fig1/{gpus}gpus/128M/tuned/{}", model.name()),
+                || {
+                    selector.latency_ns(
+                        &mut comm,
+                        &mut engine,
+                        &BcastSpec::new(0, gpus, 128 << 20),
+                    )
+                },
+            );
+        }
     }
     bencher.write_report("fig1_intranode").expect("report");
     println!("\npaper reference: 14X / 10.6X / 9.4X / 13X lower latency vs NCCL for 2/4/8/16 GPUs (<=8KB), comparable at large sizes");

@@ -1,9 +1,13 @@
 //! Bench F2 — regenerates the paper's Figure 2 (internode broadcast,
 //! NCCL-MV2-GDR vs MV2-GDR-Opt on 2/4/8 KESCH nodes = 32/64/128 GPUs).
 //!
+//! Each scale is reported under every link-contention model (FIFO vs
+//! max-min fair share) side by side; `LINK_MODEL=fifo|fairshare`
+//! restricts a run to one model.
+//!
 //! `cargo bench --bench fig2_internode`
 
-use gdrbcast::bench::harness::Bencher;
+use gdrbcast::bench::harness::{link_models_from_env, Bencher};
 use gdrbcast::bench::osu::osu_bcast;
 use gdrbcast::bench::report::Figure;
 use gdrbcast::collectives::BcastSpec;
@@ -18,41 +22,50 @@ fn main() {
     let sizes = pow2_sweep(4, 128 << 20);
     let nccl_params = NcclParams::default();
     let mut bencher = Bencher::new();
+    let models = link_models_from_env();
 
     println!("== Figure 2: internode broadcast latency (KESCH, 16 GPUs/node) ==\n");
     for nodes in [2usize, 4, 8] {
         let cluster = presets::kesch(nodes, 16);
         let gpus = cluster.n_gpus();
-        let selector = Selector::tuned(&cluster);
-        let mut comm = Comm::new(&cluster);
-        let mut engine = Engine::new(&cluster);
+        for &model in &models {
+            let selector = Selector::tuned_with_model(&cluster, None, model);
+            let mut comm = Comm::new(&cluster);
+            let mut engine = Engine::with_model(&cluster, model);
 
-        let nccl_res = osu_bcast(&mut engine, &sizes, 2, 1, |bytes, _| {
-            hierarchical::plan(
-                &mut comm,
-                &nccl_params,
-                &BcastSpec::new(0, gpus, bytes),
-                hierarchical::DEFAULT_CHUNK,
-            )
-        });
-        let mv2_res = osu_bcast(&mut engine, &sizes, 2, 1, |bytes, _| {
-            selector.plan(&mut comm, &BcastSpec::new(0, gpus, bytes))
-        });
+            let nccl_res = osu_bcast(&mut engine, &sizes, 2, 1, |bytes, _| {
+                hierarchical::plan(
+                    &mut comm,
+                    &nccl_params,
+                    &BcastSpec::new(0, gpus, bytes),
+                    hierarchical::DEFAULT_CHUNK,
+                )
+            });
+            let mv2_res = osu_bcast(&mut engine, &sizes, 2, 1, |bytes, _| {
+                selector.plan(&mut comm, &BcastSpec::new(0, gpus, bytes))
+            });
 
-        let mut fig = Figure::new(format!("{gpus} GPUs ({nodes} nodes)"), sizes.clone());
-        fig.push_series(
-            "NCCL-MV2-GDR",
-            nccl_res.iter().map(|r| r.latency_us).collect(),
-        );
-        fig.push_series("MV2-GDR-Opt", mv2_res.iter().map(|r| r.latency_us).collect());
-        print!("{}", fig.render());
-        let (at, ratio) = fig.max_ratio_below(8 << 10).unwrap();
-        let large = fig.ratio_at_max().unwrap();
-        println!("  => up to {ratio:.1}x at {at}B (small/medium); {large:.2}x at 128M (large)\n");
+            let mut fig = Figure::new(
+                format!("{gpus} GPUs ({nodes} nodes, {} link model)", model.name()),
+                sizes.clone(),
+            );
+            fig.push_series(
+                "NCCL-MV2-GDR",
+                nccl_res.iter().map(|r| r.latency_us).collect(),
+            );
+            fig.push_series("MV2-GDR-Opt", mv2_res.iter().map(|r| r.latency_us).collect());
+            print!("{}", fig.render());
+            let (at, ratio) = fig.max_ratio_below(8 << 10).unwrap();
+            let large = fig.ratio_at_max().unwrap();
+            println!(
+                "  => [{}] up to {ratio:.1}x at {at}B (small/medium); {large:.2}x at 128M (large)\n",
+                model.name()
+            );
 
-        bencher.bench(&format!("sim/fig2/{gpus}gpus/4B/tuned"), || {
-            selector.latency_ns(&mut comm, &mut engine, &BcastSpec::new(0, gpus, 4))
-        });
+            bencher.bench(&format!("sim/fig2/{gpus}gpus/4B/tuned/{}", model.name()), || {
+                selector.latency_ns(&mut comm, &mut engine, &BcastSpec::new(0, gpus, 4))
+            });
+        }
     }
     bencher.write_report("fig2_internode").expect("report");
     println!("\npaper reference: up to 16.4X @64 GPUs / 16.6X @128 GPUs (small/medium), comparable at large sizes");

@@ -5,19 +5,25 @@
 //! time with the barrier model (overlap off) and with layer-wise
 //! backprop overlapping the exchange (overlap on).
 //!
+//! Every table is produced under each link-contention model (FIFO
+//! serialized occupancy vs max-min fair share) side by side — the
+//! overlap timeline runs many bucket collectives concurrently, so this
+//! is where the models diverge most. `LINK_MODEL=fifo|fairshare`
+//! restricts a run; the CI gate requires rows for both.
+//!
 //! `cargo bench --bench fig3_vgg_training`
 //! `FIG3_SMOKE=1 cargo bench --bench fig3_vgg_training`  (CI smoke mode:
-//! one scale, quick harness; still emits the overlap-on/off rows the CI
-//! gate checks for)
+//! one scale, quick harness; still emits the overlap-on/off × link-model
+//! rows the CI gate checks for)
 //!
 //! Report: `target/reports/fig3_vgg_training.json` — harness rows plus
-//! one `fig3/<model>/<gpus>gpus/<mode>/overlap-{off,on}` row per
-//! (training mode, overlap setting), `mean_ns` carrying the estimated
-//! per-iteration time in ns.
+//! one `fig3/<model>/<gpus>gpus/<mode>/overlap-{off,on}/<linkmodel>` row
+//! per (training mode, overlap setting, link model), `mean_ns` carrying
+//! the estimated per-iteration time in ns.
 
-use gdrbcast::bench::harness::{one_shot_row, Bencher};
+use gdrbcast::bench::harness::{link_models_from_env, one_shot_row, Bencher};
 use gdrbcast::coordinator::train::{
-    estimate_iteration, estimate_training_iteration_opts, ExchangeOptions,
+    estimate_iteration_with_model, estimate_training_iteration_opts, ExchangeOptions,
 };
 use gdrbcast::coordinator::{BcastBackend, TrainingMode};
 use gdrbcast::models::zoo::{googlenet, vgg16};
@@ -32,6 +38,7 @@ fn main() {
     let nccl = NcclParams::default();
     let mut bencher = if smoke { Bencher::quick() } else { Bencher::new() };
     let mut rows: Vec<Json> = Vec::new();
+    let link_models = link_models_from_env();
     let batch_per_gpu = 16; // weak scaling, as the CNTK runs fix per-GPU minibatch
     let scales: &[(usize, usize)] = if smoke {
         &[(1, 8)]
@@ -40,43 +47,58 @@ fn main() {
     };
 
     for model in [vgg16(), googlenet()] {
-        let mut t = Table::new(&[
-            "GPUs",
-            "NCCL-MV2-GDR s/100it",
-            "MV2-GDR-Opt s/100it",
-            "improvement",
-        ])
-        .with_title(format!(
-            "Fig. 3 — {} training time ({batch_per_gpu} samples/GPU, weak scaling)",
-            model.name
-        ));
-        let mut peak = (0usize, 0.0f64);
-        for &(nodes, gpn) in scales {
-            let cluster = presets::kesch(nodes, gpn);
-            let batch = batch_per_gpu * cluster.n_gpus();
-            let sel = Selector::tuned(&cluster);
-            let a =
-                estimate_iteration(&cluster, &model, &BcastBackend::Mv2Opt(&sel), batch, 0.0);
-            let b = estimate_iteration(
-                &cluster,
-                &model,
-                &BcastBackend::NcclMv2(&nccl),
-                batch,
-                0.0,
-            );
-            let gain = (b.iter_us - a.iter_us) / b.iter_us * 100.0;
-            if gain > peak.1 {
-                peak = (cluster.n_gpus(), gain);
+        for &lm in &link_models {
+            let mut t = Table::new(&[
+                "GPUs",
+                "NCCL-MV2-GDR s/100it",
+                "MV2-GDR-Opt s/100it",
+                "improvement",
+            ])
+            .with_title(format!(
+                "Fig. 3 — {} training time ({batch_per_gpu} samples/GPU, weak scaling, {} link model)",
+                model.name,
+                lm.name()
+            ));
+            let mut peak = (0usize, 0.0f64);
+            for &(nodes, gpn) in scales {
+                let cluster = presets::kesch(nodes, gpn);
+                let batch = batch_per_gpu * cluster.n_gpus();
+                let sel = Selector::tuned_with_model(&cluster, None, lm);
+                let a = estimate_iteration_with_model(
+                    &cluster,
+                    &model,
+                    &BcastBackend::Mv2Opt(&sel),
+                    batch,
+                    0.0,
+                    lm,
+                );
+                let b = estimate_iteration_with_model(
+                    &cluster,
+                    &model,
+                    &BcastBackend::NcclMv2(&nccl),
+                    batch,
+                    0.0,
+                    lm,
+                );
+                let gain = (b.iter_us - a.iter_us) / b.iter_us * 100.0;
+                if gain > peak.1 {
+                    peak = (cluster.n_gpus(), gain);
+                }
+                t.row(vec![
+                    cluster.n_gpus().to_string(),
+                    format!("{:.2}", b.iter_us * 100.0 / 1e6),
+                    format!("{:.2}", a.iter_us * 100.0 / 1e6),
+                    format!("{gain:.1}%"),
+                ]);
             }
-            t.row(vec![
-                cluster.n_gpus().to_string(),
-                format!("{:.2}", b.iter_us * 100.0 / 1e6),
-                format!("{:.2}", a.iter_us * 100.0 / 1e6),
-                format!("{gain:.1}%"),
-            ]);
+            print!("{}", t.render());
+            println!(
+                "  => [{}] peak improvement {:.1}% at {} GPUs\n",
+                lm.name(),
+                peak.1,
+                peak.0
+            );
         }
-        print!("{}", t.render());
-        println!("  => peak improvement {:.1}% at {} GPUs\n", peak.1, peak.0);
     }
 
     // ---- full-exchange training modes, barrier vs overlap timeline ----
@@ -84,57 +106,76 @@ fn main() {
     // paper's 32-GPU application scale
     let (nodes, gpn) = if smoke { (1, 8) } else { (2, 16) };
     let cluster = presets::kesch(nodes, gpn);
-    let sel = Selector::tuned(&cluster);
     let model = vgg16();
     let batch = batch_per_gpu * cluster.n_gpus();
     let gpus = cluster.n_gpus();
-    let mut t = Table::new(&["mode", "overlap", "compute ms", "exposed comm ms", "iter ms"])
-        .with_title(format!(
-            "{} full-exchange iteration, {gpus} GPUs — barrier vs overlap timeline",
-            model.name
-        ));
-    for mode in [TrainingMode::PartitionedBcast, TrainingMode::AllreduceGradients] {
-        for overlap in [false, true] {
-            let e = estimate_training_iteration_opts(
-                &cluster,
-                &model,
-                &sel,
-                mode,
-                batch,
-                0.0,
-                ExchangeOptions {
-                    overlap,
-                    ..ExchangeOptions::default()
-                },
-            );
-            let setting = if overlap { "on" } else { "off" };
-            t.row(vec![
-                mode.label().to_string(),
-                setting.to_string(),
-                format!("{:.2}", e.compute_us / 1e3),
-                format!("{:.2}", e.comm_us / 1e3),
-                format!("{:.2}", e.iter_us / 1e3),
-            ]);
-            rows.push(one_shot_row(
-                &format!(
-                    "fig3/{}/{}gpus/{}/overlap-{setting}",
-                    model.name,
-                    gpus,
-                    mode.label()
-                ),
-                e.iter_us * 1000.0,
+    let mut fifo_sel: Option<Selector> = None;
+    for &lm in &link_models {
+        let sel = Selector::tuned_with_model(&cluster, None, lm);
+        let mut t = Table::new(&["mode", "overlap", "compute ms", "exposed comm ms", "iter ms"])
+            .with_title(format!(
+                "{} full-exchange iteration, {gpus} GPUs — barrier vs overlap ({} link model)",
+                model.name,
+                lm.name()
             ));
+        for mode in [TrainingMode::PartitionedBcast, TrainingMode::AllreduceGradients] {
+            for overlap in [false, true] {
+                let e = estimate_training_iteration_opts(
+                    &cluster,
+                    &model,
+                    &sel,
+                    mode,
+                    batch,
+                    0.0,
+                    ExchangeOptions {
+                        overlap,
+                        link_model: lm,
+                        ..ExchangeOptions::default()
+                    },
+                );
+                let setting = if overlap { "on" } else { "off" };
+                t.row(vec![
+                    mode.label().to_string(),
+                    setting.to_string(),
+                    format!("{:.2}", e.compute_us / 1e3),
+                    format!("{:.2}", e.comm_us / 1e3),
+                    format!("{:.2}", e.iter_us / 1e3),
+                ]);
+                rows.push(one_shot_row(
+                    &format!(
+                        "fig3/{}/{}gpus/{}/overlap-{setting}/{}",
+                        model.name,
+                        gpus,
+                        mode.label(),
+                        lm.name()
+                    ),
+                    e.iter_us * 1000.0,
+                ));
+            }
+        }
+        print!("{}", t.render());
+        println!();
+        if lm == gdrbcast::netsim::LinkModel::Fifo {
+            fifo_sel = Some(sel);
         }
     }
-    print!("{}", t.render());
-    println!();
 
-    // wall-clock of the full iteration estimate (tuning + schedule + sim)
+    // wall-clock of the full iteration estimate (schedule + sim), reusing
+    // the loop's FIFO-tuned selector rather than re-running the sweep
+    // (only re-tuned when LINK_MODEL restricted the loop to fairshare)
+    let sel = fifo_sel.unwrap_or_else(|| Selector::tuned(&cluster));
     bencher.bench(
         &format!("sim/fig3/vgg16/{gpus}gpus/iteration-estimate"),
         || {
-            estimate_iteration(&cluster, &model, &BcastBackend::Mv2Opt(&sel), batch, 0.0)
-                .iter_us
+            estimate_iteration_with_model(
+                &cluster,
+                &model,
+                &BcastBackend::Mv2Opt(&sel),
+                batch,
+                0.0,
+                gdrbcast::netsim::LinkModel::Fifo,
+            )
+            .iter_us
         },
     );
     bencher

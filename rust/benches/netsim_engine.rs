@@ -1,10 +1,13 @@
 //! Engine micro-bench: raw discrete-event throughput (ops/second) — the
 //! L3 hot path that every figure sweep multiplies. §Perf tracks this
-//! number before/after optimisation.
+//! number before/after optimisation. Execution throughput is reported
+//! under both link-contention models (the fair-share path re-levels
+//! max-min rates on every flow event, so its constant is inherently
+//! higher — the bench keeps the two honest side by side).
 //!
 //! `cargo bench --bench netsim_engine`
 
-use gdrbcast::bench::harness::Bencher;
+use gdrbcast::bench::harness::{link_models_from_env, Bencher};
 use gdrbcast::collectives::{self, Algorithm, BcastSpec};
 use gdrbcast::comm::Comm;
 use gdrbcast::netsim::Engine;
@@ -12,6 +15,7 @@ use gdrbcast::topology::presets;
 
 fn main() {
     let mut bencher = Bencher::new();
+    let models = link_models_from_env();
 
     // plan construction vs execution, separated
     let cluster = presets::kesch(8, 16);
@@ -30,22 +34,26 @@ fn main() {
         collectives::plan(&algo, &mut comm, &spec).plan.len()
     });
 
-    let mut engine = Engine::new(&cluster);
-    let r = bencher.bench("execute/pipelined-chain/128gpus/128M", || {
-        engine.execute(&plan.plan).makespan
-    });
-    let ops_per_sec = plan.plan.len() as f64 / (r.per_iter.mean / 1e9);
-    println!("engine throughput: {:.1}M ops/s", ops_per_sec / 1e6);
-
-    // scaling with op count
-    for chunk in [4u64 << 20, 1 << 20, 256 << 10, 64 << 10] {
-        let a = Algorithm::PipelinedChain { chunk };
-        let p = collectives::plan(&a, &mut comm, &spec);
-        let label = format!(
-            "execute/{}ops",
-            p.plan.len()
+    for &model in &models {
+        let mut engine = Engine::with_model(&cluster, model);
+        let r = bencher.bench(
+            &format!("execute/pipelined-chain/128gpus/128M/{}", model.name()),
+            || engine.execute(&plan.plan).makespan,
         );
-        bencher.bench(&label, || engine.execute(&p.plan).makespan);
+        let ops_per_sec = plan.plan.len() as f64 / (r.per_iter.mean / 1e9);
+        println!(
+            "engine throughput [{}]: {:.1}M ops/s",
+            model.name(),
+            ops_per_sec / 1e6
+        );
+
+        // scaling with op count
+        for chunk in [4u64 << 20, 1 << 20, 256 << 10, 64 << 10] {
+            let a = Algorithm::PipelinedChain { chunk };
+            let p = collectives::plan(&a, &mut comm, &spec);
+            let label = format!("execute/{}ops/{}", p.plan.len(), model.name());
+            bencher.bench(&label, || engine.execute(&p.plan).makespan);
+        }
     }
 
     // full figure-sweep budget check (DESIGN.md: F1+F2 sweep < 10 s)

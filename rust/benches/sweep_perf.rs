@@ -16,13 +16,22 @@
 
 use std::time::Instant;
 
-use gdrbcast::bench::harness::Bencher;
+use gdrbcast::bench::harness::{link_models_from_env, Bencher};
 use gdrbcast::collectives::{self, Algorithm, BcastSpec};
 use gdrbcast::comm::Comm;
-use gdrbcast::netsim::Engine;
+use gdrbcast::netsim::{Engine, LinkModel};
 use gdrbcast::topology::presets;
 use gdrbcast::tuning::{persist, space, sweep};
 use gdrbcast::util::json::Json;
+
+/// Row-name suffix per link model: FIFO keeps the pre-fair-share names
+/// (schema back-compat for report consumers); fair share is tagged.
+fn row_suffix(model: LinkModel) -> &'static str {
+    match model {
+        LinkModel::Fifo => "",
+        LinkModel::FairShare => "/fairshare",
+    }
+}
 
 /// A one-shot wall-time row in the standard report shape.
 fn wall_row(name: &str, ns: f64) -> Json {
@@ -37,6 +46,7 @@ fn main() {
         Bencher::new()
     };
     let mut rows: Vec<Json> = Vec::new();
+    let link_models = link_models_from_env();
 
     // ---- plan-build / engine-execute throughput at 16/64/128 GPUs ------
     for &(nodes, gpn) in &[(1usize, 16usize), (4, 16), (8, 16)] {
@@ -60,16 +70,24 @@ fn main() {
             build_ops_per_sec,
         ));
 
-        let mut engine = Engine::new(&cluster);
-        let r = bencher.bench(&format!("execute/pipelined-chain/{gpus}gpus"), || {
-            engine.makespan_ns(&bp.plan)
-        });
-        let exec_ops_per_sec = n_ops as f64 / (r.per_iter.mean / 1e9);
-        println!("  engine execute: {:.2}M ops/s", exec_ops_per_sec / 1e6);
-        rows.push(wall_row(
-            &format!("execute/{gpus}gpus_ops_per_sec"),
-            exec_ops_per_sec,
-        ));
+        for &model in &link_models {
+            let sfx = row_suffix(model);
+            let mut engine = Engine::with_model(&cluster, model);
+            let r = bencher.bench(
+                &format!("execute/pipelined-chain/{gpus}gpus{sfx}"),
+                || engine.makespan_ns(&bp.plan),
+            );
+            let exec_ops_per_sec = n_ops as f64 / (r.per_iter.mean / 1e9);
+            println!(
+                "  engine execute [{}]: {:.2}M ops/s",
+                model.name(),
+                exec_ops_per_sec / 1e6
+            );
+            rows.push(wall_row(
+                &format!("execute/{gpus}gpus_ops_per_sec{sfx}"),
+                exec_ops_per_sec,
+            ));
+        }
     }
 
     // ---- plan acquisition: templated vs rebuild-per-point (64 GPUs) ----
@@ -148,28 +166,33 @@ fn main() {
         let gpus = nodes * gpn;
         let cluster = presets::kesch(nodes, gpn);
 
-        let t0 = Instant::now();
-        let par = sweep::tune(&cluster, &sizes);
-        let par_ns = t0.elapsed().as_nanos() as f64;
+        for &model in &link_models {
+            let sfx = row_suffix(model);
+            let t0 = Instant::now();
+            let par = sweep::tune_with_model(&cluster, &sizes, None, model);
+            let par_ns = t0.elapsed().as_nanos() as f64;
 
-        let t0 = Instant::now();
-        let ser = sweep::tune_serial(&cluster, &sizes);
-        let ser_ns = t0.elapsed().as_nanos() as f64;
+            let t0 = Instant::now();
+            let ser = sweep::tune_serial_with_model(&cluster, &sizes, model);
+            let ser_ns = t0.elapsed().as_nanos() as f64;
 
-        assert_eq!(
-            persist::to_json(&par),
-            persist::to_json(&ser),
-            "parallel tune diverged from serial at {gpus} GPUs"
-        );
-        println!(
-            "tune kesch({nodes}x{gpn}) over {} sizes: parallel {:.2}s, serial {:.2}s ({:.2}x)",
-            sizes.len(),
-            par_ns / 1e9,
-            ser_ns / 1e9,
-            ser_ns / par_ns
-        );
-        rows.push(wall_row(&format!("tune/parallel/{gpus}gpus_wall"), par_ns));
-        rows.push(wall_row(&format!("tune/serial/{gpus}gpus_wall"), ser_ns));
+            assert_eq!(
+                persist::to_json(&par),
+                persist::to_json(&ser),
+                "parallel tune diverged from serial at {gpus} GPUs ({})",
+                model.name()
+            );
+            println!(
+                "tune kesch({nodes}x{gpn}) [{}] over {} sizes: parallel {:.2}s, serial {:.2}s ({:.2}x)",
+                model.name(),
+                sizes.len(),
+                par_ns / 1e9,
+                ser_ns / 1e9,
+                ser_ns / par_ns
+            );
+            rows.push(wall_row(&format!("tune/parallel/{gpus}gpus_wall{sfx}"), par_ns));
+            rows.push(wall_row(&format!("tune/serial/{gpus}gpus_wall{sfx}"), ser_ns));
+        }
     }
 
     // ---- write BENCH_sweep.json (bencher rows + wall rows) -------------

@@ -51,6 +51,21 @@ pub fn one_shot_row(name: &str, ns: f64) -> Json {
     j
 }
 
+/// Which link-contention models a bench should report. `LINK_MODEL=fifo`
+/// or `LINK_MODEL=fairshare` restricts a local run to one; unset (or
+/// `both`) reports the two models side by side — the default, so the CI
+/// report gates can fail when either model's rows are missing.
+pub fn link_models_from_env() -> Vec<crate::netsim::LinkModel> {
+    use crate::netsim::LinkModel;
+    match std::env::var("LINK_MODEL").ok().as_deref() {
+        None | Some("both") | Some("") => LinkModel::ALL.to_vec(),
+        Some(s) => match LinkModel::parse(s) {
+            Some(m) => vec![m],
+            None => panic!("unknown LINK_MODEL '{s}' (expected fifo|fairshare|both)"),
+        },
+    }
+}
+
 /// Harness configuration.
 #[derive(Debug, Clone)]
 pub struct Bencher {

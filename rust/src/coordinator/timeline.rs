@@ -29,6 +29,13 @@
 //!   the *lowest* covered layer index). Data-parallel ranks run
 //!   identical compute, so gating entries is timing-exact even for ring
 //!   algorithms whose interior ops implicitly use local data;
+//! * **contention** — the timeline runs many bucket collectives
+//!   *concurrently* on the shared fabric, so the engine's
+//!   [`crate::netsim::LinkModel`] matters here more than anywhere else:
+//!   under FIFO the concurrent buckets serialize on shared links, under
+//!   max-min fair share they progressively fill them. The engine passed
+//!   in carries the model (`ExchangeOptions::link_model` upstream);
+//!   this module is model-agnostic;
 //! * **partitioned mode** keeps CNTK's aggregation→broadcast barrier —
 //!   one zero-duration op depending on every aggregation send, handed
 //!   to [`Plan::merge_after`] as each broadcast's external dep: the
@@ -66,7 +73,13 @@ pub struct ExchangeUnit {
 /// Map a schedule's contiguous `(root, bytes)` ranges — in order, tiling
 /// the flattened gradient vector — onto the layers they cover.
 /// Zero-byte parts are dropped, mirroring the barrier estimators.
+/// Degenerate models — no layers, or layers with zero total bytes —
+/// have nothing to gate an exchange on and yield no units (guarding the
+/// `total - 1` below against underflow).
 pub fn exchange_units(model: &DnnModel, parts: &[(usize, u64)]) -> Vec<ExchangeUnit> {
+    if model.layers.is_empty() {
+        return Vec::new();
+    }
     let mut prefix = Vec::with_capacity(model.layers.len() + 1);
     let mut acc = 0u64;
     prefix.push(0u64);
@@ -75,17 +88,21 @@ pub fn exchange_units(model: &DnnModel, parts: &[(usize, u64)]) -> Vec<ExchangeU
         prefix.push(acc);
     }
     let total = acc;
+    if total == 0 {
+        return Vec::new();
+    }
     let mut out = Vec::new();
     let mut offset = 0u64;
     for &(root, bytes) in parts {
         let start = offset;
         offset += bytes;
-        if bytes == 0 || model.layers.is_empty() || total == 0 {
+        if bytes == 0 {
             continue;
         }
         // the unit's lowest covered layer is the one containing its
         // first byte (layer ranges tile the vector; zero-byte layers
-        // can never contain it)
+        // can never contain it). Parts past the end of the vector clamp
+        // onto the last layer.
         let a = start.min(total - 1);
         let dep_layer = prefix
             .partition_point(|&p| p <= a)
@@ -346,6 +363,104 @@ mod tests {
         // ...and the next unit starts inside layer 1
         let two = exchange_units(&m, &[(0, b0 + 4), (1, 8)]);
         assert_eq!(two[1].dep_layer, 1);
+    }
+
+    #[test]
+    fn degenerate_models_yield_no_units() {
+        // regression: a zero-layer (or zero-param) model used to reach
+        // `start.min(total - 1)` territory; both degenerate shapes must
+        // short-circuit to an empty unit list instead
+        use crate::models::DnnModel;
+        let empty = DnnModel::new("empty");
+        assert!(exchange_units(&empty, &[(0, 4), (1, 8)]).is_empty());
+        let zero_param = DnnModel::new("zero-param").fc("l0", 0, 0).fc("l1", 0, 0);
+        assert_eq!(zero_param.total_bytes(), 0);
+        assert!(exchange_units(&zero_param, &[(0, 4)]).is_empty());
+        assert!(exchange_units(&zero_param, &[]).is_empty());
+    }
+
+    #[test]
+    fn exchange_unit_layer_mapping_property() {
+        // property: every unit's dep_layer is exactly the layer whose
+        // [prefix[l], prefix[l+1]) byte range contains the unit's first
+        // byte (clamped to the last layer for parts past the end) —
+        // driven across randomized partitions, including boundary-exact
+        // splits, via the deterministic xorshift the queue tests use
+        let m = vgg16();
+        let total = m.total_bytes();
+        let mut prefix = vec![0u64];
+        for l in &m.layers {
+            prefix.push(prefix.last().unwrap() + l.bytes());
+        }
+        let mut state = 0x9e3779b97f4a7c15u64;
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            state
+        };
+        for case in 0..200 {
+            // random contiguous partition of [0, total + slack)
+            let mut parts: Vec<(usize, u64)> = Vec::new();
+            let mut used = 0u64;
+            while used < total {
+                let bytes = match case % 3 {
+                    // exact layer-boundary splits
+                    0 => {
+                        let l = (next() % m.layers.len() as u64) as usize;
+                        m.layers[l].bytes()
+                    }
+                    // byte-granular jitter around boundaries
+                    1 => (next() % 5).max(1),
+                    // large random spans
+                    _ => next() % (total / 4) + 1,
+                }
+                .min(total - used);
+                if next() % 7 == 0 {
+                    // zero-byte parts must be dropped without shifting
+                    // the byte ranges of their neighbours
+                    parts.push(((next() % 4) as usize, 0));
+                }
+                parts.push(((next() % 4) as usize, bytes));
+                used += bytes;
+                if parts.len() > 4096 {
+                    break;
+                }
+            }
+            let units = exchange_units(&m, &parts);
+            let nonzero: Vec<&(usize, u64)> = parts.iter().filter(|p| p.1 > 0).collect();
+            assert_eq!(units.len(), nonzero.len(), "zero-byte parts drop");
+            let mut start = 0u64;
+            let mut ui = 0usize;
+            for &(root, bytes) in &parts {
+                if bytes == 0 {
+                    continue;
+                }
+                let u = &units[ui];
+                ui += 1;
+                assert_eq!(u.root, root);
+                assert_eq!(u.bytes, bytes);
+                let a = start.min(total - 1);
+                assert!(
+                    prefix[u.dep_layer] <= a && a < prefix[u.dep_layer + 1],
+                    "case {case}: first byte {a} outside layer {} = [{}, {})",
+                    u.dep_layer,
+                    prefix[u.dep_layer],
+                    prefix[u.dep_layer + 1]
+                );
+                start += bytes;
+            }
+        }
+        // boundary spot checks: a unit starting exactly on a layer
+        // boundary gates on that layer; the final byte on the last layer
+        let b0 = m.layers[0].bytes();
+        let at_boundary = exchange_units(&m, &[(0, b0), (0, 4)]);
+        assert_eq!(at_boundary[1].dep_layer, 1);
+        let last = exchange_units(&m, &[(0, total - 1), (0, 1)]);
+        assert_eq!(last[1].dep_layer, m.layers.len() - 1);
+        // parts overshooting the vector clamp to the last layer
+        let over = exchange_units(&m, &[(0, total), (0, 8)]);
+        assert_eq!(over[1].dep_layer, m.layers.len() - 1);
     }
 
     #[test]

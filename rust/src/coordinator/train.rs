@@ -6,7 +6,7 @@
 
 use crate::comm::Comm;
 use crate::models::{allreduce_buckets, bcast_messages, DnnModel, MessageSchedule};
-use crate::netsim::Engine;
+use crate::netsim::{Engine, LinkModel};
 use crate::topology::Cluster;
 use crate::tuning::Selector;
 
@@ -73,11 +73,34 @@ pub fn estimate_iteration(
     global_batch: usize,
     compute_us_override: f64,
 ) -> TrainingEstimate {
+    estimate_iteration_with_model(
+        cluster,
+        model,
+        backend,
+        global_batch,
+        compute_us_override,
+        LinkModel::Fifo,
+    )
+}
+
+/// [`estimate_iteration`] under an explicit link-contention model: the
+/// broadcast schedule is simulated on an engine running `link_model`
+/// (concurrent owner-broadcasts share fabric links fairly instead of
+/// serializing). Pass a selector tuned under the same model for a
+/// consistent story.
+pub fn estimate_iteration_with_model(
+    cluster: &Cluster,
+    model: &DnnModel,
+    backend: &BcastBackend,
+    global_batch: usize,
+    compute_us_override: f64,
+    link_model: LinkModel,
+) -> TrainingEstimate {
     let gpus = cluster.n_gpus();
     let compute_us = compute_us_for(model, gpus, global_batch, compute_us_override);
     let msgs = bcast_messages(model, gpus, MessageSchedule::Partitioned);
     let mut comm = Comm::new(cluster);
-    let mut engine = Engine::new(cluster);
+    let mut engine = Engine::with_model(cluster, link_model);
     let comm_ns = comm_time_ns(&mut comm, &mut engine, backend, &msgs);
     estimate_from(gpus, global_batch, compute_us, comm_ns)
 }
@@ -94,6 +117,11 @@ pub struct ExchangeOptions {
     /// `--bucket-bytes` flush threshold; both the barrier and overlap
     /// paths bucket with it).
     pub bucket_bytes: u64,
+    /// Link-contention model the exchange is simulated under (the
+    /// `--link-model` knob). Matters most with `overlap`: the timeline
+    /// runs many bucket collectives *concurrently* on the shared fabric,
+    /// which FIFO serializes but fair sharing progressively fills.
+    pub link_model: LinkModel,
 }
 
 impl Default for ExchangeOptions {
@@ -101,6 +129,7 @@ impl Default for ExchangeOptions {
         ExchangeOptions {
             overlap: false,
             bucket_bytes: crate::models::DEFAULT_BUCKET_BYTES,
+            link_model: LinkModel::Fifo,
         }
     }
 }
@@ -153,7 +182,7 @@ pub fn estimate_training_iteration_opts(
     let gpus = cluster.n_gpus();
     let compute_us = compute_us_for(model, gpus, global_batch, compute_us_override);
     let mut comm = Comm::new(cluster);
-    let mut engine = Engine::new(cluster);
+    let mut engine = Engine::with_model(cluster, opts.link_model);
     if opts.overlap {
         let compute_ns = (compute_us * 1000.0).round() as u64;
         let makespan = super::timeline::overlap_iteration_ns(
@@ -434,6 +463,49 @@ mod tests {
     }
 
     #[test]
+    fn fairshare_exchange_estimates_are_sane() {
+        // the fair-share model must produce a well-formed estimate in
+        // both training modes, with and without overlap: iteration
+        // contains all the compute, communication is positive, and the
+        // model flows through ExchangeOptions (closed-form correctness
+        // is pinned by the engine's fair-share unit tests)
+        let cluster = kesch(1, 4);
+        let model = vgg16();
+        let sel = Selector::tuned_with_model(&cluster, None, crate::netsim::LinkModel::FairShare);
+        for overlap in [false, true] {
+            for mode in [TrainingMode::PartitionedBcast, TrainingMode::AllreduceGradients] {
+                let e = estimate_training_iteration_opts(
+                    &cluster,
+                    &model,
+                    &sel,
+                    mode,
+                    64,
+                    0.0,
+                    ExchangeOptions {
+                        overlap,
+                        link_model: crate::netsim::LinkModel::FairShare,
+                        ..ExchangeOptions::default()
+                    },
+                );
+                assert!(e.iter_us >= e.compute_us, "{mode:?} overlap={overlap}");
+                assert!(e.iter_us > 0.0 && e.throughput > 0.0);
+            }
+        }
+        // the fifo-model broadcast path is reachable through the
+        // explicit-model wrapper too, and matches the default entry
+        let a = estimate_iteration(&cluster, &model, &BcastBackend::Mv2Opt(&sel), 64, 0.0);
+        let b = estimate_iteration_with_model(
+            &cluster,
+            &model,
+            &BcastBackend::Mv2Opt(&sel),
+            64,
+            0.0,
+            crate::netsim::LinkModel::Fifo,
+        );
+        assert_eq!(a.iter_us, b.iter_us);
+    }
+
+    #[test]
     fn bucket_bytes_knob_changes_allreduce_schedule() {
         let cluster = kesch(1, 4);
         let model = vgg16();
@@ -448,6 +520,7 @@ mod tests {
             ExchangeOptions {
                 overlap: false,
                 bucket_bytes: model.total_bytes(), // one giant bucket
+                ..ExchangeOptions::default()
             },
         );
         let fine = estimate_training_iteration_opts(
@@ -460,6 +533,7 @@ mod tests {
             ExchangeOptions {
                 overlap: false,
                 bucket_bytes: 8 << 20,
+                ..ExchangeOptions::default()
             },
         );
         assert!(coarse.comm_us > 0.0 && fine.comm_us > 0.0);

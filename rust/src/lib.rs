@@ -17,7 +17,9 @@
 //!   (KESCH Cray CS-Storm, DGX-1, DGX-1V presets) with PCIe/PLX/QPI/NVLink/
 //!   InfiniBand link models and routing.
 //! * [`netsim`] — a deterministic discrete-event fabric simulator with
-//!   cut-through transfers and per-link contention.
+//!   cut-through transfers and selectable per-link contention: exclusive
+//!   FIFO occupancy (default) or progressive-filling max-min fair
+//!   bandwidth sharing ([`netsim::LinkModel`]).
 //! * [`comm`] — the CUDA-aware point-to-point engine: GDR read/write, CUDA
 //!   IPC, host staging, SGL eager — with the mechanism-selection logic that
 //!   MVAPICH2-GDR's wins come from.

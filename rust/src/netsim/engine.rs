@@ -2,25 +2,37 @@
 //!
 //! Greedy list scheduling over the op DAG: ops become *ready* when all
 //! dependencies complete; ready ops are processed in (ready-time, op-id)
-//! order; each transfer's actual start is pushed past the free time of
-//! every link on its route (cut-through occupancy), giving FIFO link
-//! contention. Deterministic by construction.
+//! order. How concurrent transfers contend for links is selectable
+//! ([`LinkModel`], DESIGN.md §Contention models):
+//!
+//! * [`LinkModel::Fifo`] (default) — each transfer's actual start is
+//!   pushed past the free time of every link on its route (cut-through
+//!   exclusive occupancy), so concurrent transfers on a shared link
+//!   serialize back-to-back;
+//! * [`LinkModel::FairShare`] — in-flight transfers are *flows* that
+//!   progressively fill shared links: per-link active-flow sets determine
+//!   max-min fair rates, recomputed on every flow arrival/departure
+//!   event ([`super::fairshare`]). Deps, delays, labels and deliveries
+//!   behave identically; only bandwidth sharing differs.
+//!
+//! Both paths are deterministic by construction.
 //!
 //! Routes are interned ids resolved through the cluster's route table, so
 //! executing an op touches no heap; all per-plan working state (indegree,
-//! CSR dependents graph, ready times, timestamps, the scatter cursor)
-//! lives in reusable scratch on the [`Engine`] (DESIGN.md §Perf). Sweeps
-//! that only need the makespan should call [`Engine::makespan_ns`], which
-//! skips the per-op timestamp copy entirely. The ready set is an indexed
-//! two-level bucket queue ([`super::queue::ReadyQueue`]) — ready times
-//! are monotone under list scheduling, so the former `BinaryHeap`'s
-//! per-op `O(log n)` was the last superlinear cost on the makespan-only
-//! path.
+//! CSR dependents graph, ready times, timestamps, the scatter cursor,
+//! and the fair-share flow set) lives in reusable scratch on the
+//! [`Engine`] (DESIGN.md §Perf). Sweeps that only need the makespan
+//! should call [`Engine::makespan_ns`], which skips the per-op timestamp
+//! copy entirely. The ready set is an indexed two-level bucket queue
+//! ([`super::queue::ReadyQueue`]) — ready times are monotone under list
+//! scheduling, so the former `BinaryHeap`'s per-op `O(log n)` was the
+//! last superlinear cost on the makespan-only path.
 
 use crate::topology::Cluster;
 
+use super::fairshare::{FairShareScratch, Flow, LinkModel};
 use super::queue::ReadyQueue;
-use super::time::{tx_ns, SimTime};
+use super::time::{tx_ns, SimTime, UNREACHABLE_NS};
 use super::transfer::{OpId, Plan, SimOp};
 
 /// Execution outcome: per-op timestamps plus the makespan.
@@ -57,6 +69,8 @@ impl ExecResult {
 /// re-allocate per collective (hot path — see DESIGN.md §Perf).
 pub struct Engine<'c> {
     cluster: &'c Cluster,
+    /// Link-contention model this engine resolves transfers with.
+    model: LinkModel,
     /// Route-table generation `link_free`/`dev_free` were sized against.
     /// The borrow of `cluster` makes a mutation-while-alive impossible
     /// today, but a future rebind API or interior mutability would
@@ -77,12 +91,21 @@ pub struct Engine<'c> {
     start: Vec<SimTime>,
     done: Vec<SimTime>,
     ready: ReadyQueue,
+    /// Fair-share flow set + water-filling scratch (unused under FIFO).
+    fs: FairShareScratch,
 }
 
 impl<'c> Engine<'c> {
+    /// An engine with the default [`LinkModel::Fifo`] contention model.
     pub fn new(cluster: &'c Cluster) -> Engine<'c> {
+        Engine::with_model(cluster, LinkModel::Fifo)
+    }
+
+    /// An engine resolving link contention with an explicit model.
+    pub fn with_model(cluster: &'c Cluster, model: LinkModel) -> Engine<'c> {
         Engine {
             cluster,
+            model,
             generation: cluster.routes().generation(),
             link_free: vec![0; cluster.n_links()],
             dev_free: vec![0; cluster.n_devices()],
@@ -94,11 +117,17 @@ impl<'c> Engine<'c> {
             start: Vec::new(),
             done: Vec::new(),
             ready: ReadyQueue::new(),
+            fs: FairShareScratch::new(cluster.n_links()),
         }
     }
 
     pub fn cluster(&self) -> &Cluster {
         self.cluster
+    }
+
+    /// The contention model this engine runs.
+    pub fn link_model(&self) -> LinkModel {
+        self.model
     }
 
     /// Execute a plan starting at virtual time 0, returning per-op
@@ -182,6 +211,21 @@ impl<'c> Engine<'c> {
             }
         }
 
+        let (processed, makespan) = match self.model {
+            LinkModel::Fifo => self.run_fifo(plan, record),
+            LinkModel::FairShare => self.run_fairshare(plan, record),
+        };
+        assert_eq!(
+            processed, n,
+            "plan has a dependency cycle ({processed}/{n} ops ran)"
+        );
+
+        makespan
+    }
+
+    /// The FIFO list-scheduling loop: every popped op resolves its
+    /// start/completion immediately against the link/device free times.
+    fn run_fifo(&mut self, plan: &Plan, record: bool) -> (usize, SimTime) {
         let mut processed = 0usize;
         let mut makespan: SimTime = 0;
         while let Some((ready, id)) = self.ready.pop() {
@@ -192,23 +236,191 @@ impl<'c> Engine<'c> {
                 self.done[id] = d;
             }
             makespan = makespan.max(d);
-            let lo = self.dep_offsets[id] as usize;
-            let hi = self.dep_offsets[id + 1] as usize;
-            for i in lo..hi {
-                let dep = self.dep_targets[i];
-                self.ready_time[dep] = self.ready_time[dep].max(d);
-                self.indegree[dep] -= 1;
-                if self.indegree[dep] == 0 {
-                    self.ready.push(self.ready_time[dep], dep);
+            self.release_dependents(id, d);
+        }
+        (processed, makespan)
+    }
+
+    /// The fair-share event loop: multi-hop transfers become *flows* that
+    /// progressively fill their links; max-min rates are recomputed on
+    /// every flow arrival/departure, and the clock advances event to
+    /// event (earliest pending arrival vs earliest predicted departure).
+    /// Delays and local copies resolve immediately at their arrival —
+    /// their device serialization is rate-independent. See DESIGN.md
+    /// §Contention models for the event-rate-recompute algorithm.
+    fn run_fairshare(&mut self, plan: &Plan, record: bool) -> (usize, SimTime) {
+        /// A flow is drained when this close to zero bytes remain —
+        /// covers the float noise of `remaining -= rate · dt` round
+        /// trips (payloads are integer bytes, so sub-milli-byte residue
+        /// is never a real byte).
+        const DRAIN_EPS: f64 = 1e-3;
+        debug_assert!(
+            self.fs.sized_for(self.cluster.n_links()),
+            "fair-share scratch sized for a different topology"
+        );
+        let unreachable = UNREACHABLE_NS as f64;
+        let cluster = self.cluster;
+        let mut processed = 0usize;
+        let mut makespan: SimTime = 0;
+        let mut now: f64 = 0.0;
+        let mut dirty = false; // active set changed since the last rate pass
+        // Highest integer ready time admitted so far. At sentinel
+        // magnitudes (~2^62 ns) one f64 ulp is ~1024 ns, so `now` can sit
+        // *below* an admitted op's exact u64 ready time; retire instants
+        // clamp up to this so released dependents never push below an
+        // already-popped time (the ready queue's monotone invariant).
+        // Exact at normal scales, where `now.round() >= last_admit`
+        // always holds and the clamp is a no-op.
+        let mut last_admit: SimTime = 0;
+        self.fs.flows.clear();
+        loop {
+            // 1) admit every op due at the current instant
+            loop {
+                let Some((t, id)) = self.ready.peek() else { break };
+                if (t as f64) > now {
+                    break;
+                }
+                let _ = self.ready.pop();
+                processed += 1;
+                last_admit = last_admit.max(t);
+                let planned = &plan.ops[id];
+                let flow = match &planned.op {
+                    SimOp::Transfer {
+                        route,
+                        bytes,
+                        overhead_ns,
+                        bw_cap,
+                        ..
+                    } => {
+                        let meta = cluster.route_meta(*route);
+                        if meta.hop_len == 0 {
+                            None // local copy: resolves like a Delay below
+                        } else {
+                            Some(Flow {
+                                op: id,
+                                route: *route,
+                                remaining: *bytes as f64,
+                                rate: 0.0,
+                                cap: bw_cap.unwrap_or(f64::INFINITY),
+                                fixed: false,
+                                fin: 0.0,
+                                overhead_ns: *overhead_ns,
+                                latency_ns: meta.latency_ns,
+                            })
+                        }
+                    }
+                    SimOp::Delay { .. } => None,
+                };
+                match flow {
+                    Some(f) => {
+                        if record {
+                            self.start[id] = t;
+                        }
+                        self.fs.flows.push(f);
+                        dirty = true;
+                    }
+                    None => {
+                        let (s, d) = self.run_op(&planned.op, t);
+                        if record {
+                            self.start[id] = s;
+                            self.done[id] = d;
+                        }
+                        makespan = makespan.max(d);
+                        self.release_dependents(id, d);
+                    }
+                }
+            }
+            // 2) re-level the allocation if the active set changed
+            if dirty {
+                self.fs.recompute_rates(cluster);
+                dirty = false;
+            }
+            // 3) the next event: earliest pending arrival vs earliest
+            //    predicted flow departure under the current rates
+            let t_arr = match self.ready.peek() {
+                Some((t, _)) => t as f64,
+                None => f64::INFINITY,
+            };
+            let mut t_dep = f64::INFINITY;
+            for f in self.fs.flows.iter_mut() {
+                f.fin = if f.remaining <= DRAIN_EPS || f.rate.is_infinite() {
+                    now
+                } else if f.rate > 0.0 {
+                    now + f.remaining / f.rate * 1.0e9
+                } else {
+                    f64::INFINITY // starved: a zero-bandwidth link
+                };
+                t_dep = t_dep.min(f.fin);
+            }
+            let t_next = t_arr.min(t_dep);
+            if t_next.is_infinite() {
+                if self.fs.flows.is_empty() {
+                    break; // everything drained
+                }
+                // every remaining flow is starved and nothing further
+                // arrives: complete them at the unreachable sentinel,
+                // mirroring `tx_ns` on a dead link (never rewinding the
+                // clock — a chain of sentinel completions can already
+                // have pushed it past the sentinel itself)
+                now = now.max(unreachable);
+                for f in self.fs.flows.iter_mut() {
+                    f.remaining = 0.0;
+                    f.fin = now;
+                }
+            } else {
+                // 4) drain the interval at the current rates. (No clamp:
+                // ops scheduled after an unreachable completion live at
+                // sentinel-plus timestamps, and the clock must reach
+                // them — u64 headroom is what the sentinel's MAX/4
+                // margin and the saturating adds are for.)
+                let dt_s = ((t_next - now) / 1.0e9).max(0.0);
+                if dt_s > 0.0 {
+                    for f in self.fs.flows.iter_mut() {
+                        if f.rate.is_finite() {
+                            f.remaining -= f.rate * dt_s;
+                        }
+                    }
+                }
+                now = t_next;
+            }
+            // 5) retire every flow that drained — or whose predicted
+            //    finish *is* this instant: at a huge `now` the interval
+            //    to the finish can round below one ulp, so the drain
+            //    above could never zero it out
+            let mut i = 0;
+            while i < self.fs.flows.len() {
+                if self.fs.flows[i].remaining <= DRAIN_EPS || self.fs.flows[i].fin <= now {
+                    let f = self.fs.flows.swap_remove(i);
+                    let e = (now.round() as SimTime).max(last_admit);
+                    let d = e.saturating_add(f.overhead_ns).saturating_add(f.latency_ns);
+                    if record {
+                        self.done[f.op] = d;
+                    }
+                    makespan = makespan.max(d);
+                    self.release_dependents(f.op, d);
+                    dirty = true;
+                } else {
+                    i += 1;
                 }
             }
         }
-        assert_eq!(
-            processed, n,
-            "plan has a dependency cycle ({processed}/{n} ops ran)"
-        );
+        (processed, makespan)
+    }
 
-        makespan
+    /// Release `id`'s dependents at completion time `d`: each dependent's
+    /// ready time folds in `d`, and dependents whose indegree hits zero
+    /// enqueue at their final ready time.
+    fn release_dependents(&mut self, id: OpId, d: SimTime) {
+        let lo = self.dep_offsets[id] as usize;
+        let hi = self.dep_offsets[id + 1] as usize;
+        for i in lo..hi {
+            let dep = self.dep_targets[i];
+            self.ready_time[dep] = self.ready_time[dep].max(d);
+            self.indegree[dep] -= 1;
+            if self.indegree[dep] == 0 {
+                self.ready.push(self.ready_time[dep], dep);
+            }
+        }
     }
 
     /// Run one op at its ready time; returns (actual start, completion).
@@ -230,8 +442,19 @@ impl<'c> Engine<'c> {
                 let cluster = self.cluster;
                 let meta = cluster.route_meta(*route);
                 if meta.hop_len == 0 {
-                    // local (same-device) op: pure overhead
-                    return (ready, ready + overhead_ns);
+                    // local (same-device) copy: costs its overhead and
+                    // serialises on the device like `Delay` does. (It
+                    // used to ignore `issue_ns` and `dev_free` entirely,
+                    // letting unlimited local copies on one GPU complete
+                    // concurrently for free.) The device stays busy for
+                    // the larger of the issue and overhead costs, so
+                    // zero-issue copies still occupy it for their
+                    // duration.
+                    let dev = meta.src;
+                    let s = ready.max(self.dev_free[dev.0]);
+                    let d = s.saturating_add(*overhead_ns);
+                    self.dev_free[dev.0] = s.saturating_add((*overhead_ns).max(*issue_ns));
+                    return (s, d);
                 }
                 let hops = cluster.route_hops(*route);
                 // start after every link on the path is free (cut-through:
@@ -244,6 +467,8 @@ impl<'c> Engine<'c> {
                     Some(cap) => meta.bottleneck_bw.min(*cap),
                     None => meta.bottleneck_bw,
                 };
+                // saturating sums: `tx_ns` reports a dead link as the
+                // UNREACHABLE_NS sentinel, which plain `+` would overflow
                 let tx = tx_ns(*bytes, eff_bw);
                 // Each link is busy for the transfer's *issue* cost plus
                 // its own transmission time. MPI sends set issue == t_s,
@@ -255,9 +480,13 @@ impl<'c> Engine<'c> {
                         Some(cap) => cluster.link(h).bandwidth.min(*cap),
                         None => cluster.link(h).bandwidth,
                     };
-                    self.link_free[h.0] = s + issue_ns + tx_ns(*bytes, link_bw);
+                    self.link_free[h.0] =
+                        s.saturating_add(*issue_ns).saturating_add(tx_ns(*bytes, link_bw));
                 }
-                let d = s + overhead_ns + meta.latency_ns + tx;
+                let d = s
+                    .saturating_add(*overhead_ns)
+                    .saturating_add(meta.latency_ns)
+                    .saturating_add(tx);
                 (s, d)
             }
         }
@@ -449,6 +678,279 @@ mod tests {
         let first = e.execute(&plan).makespan;
         let second = e.execute(&plan).makespan;
         assert_eq!(first, second);
+    }
+
+    fn dead_link_cluster() -> Cluster {
+        use crate::topology::{DeviceKind, LinkKind, NodeId, NodeMeta};
+        let mut c = Cluster::new("dead-link");
+        let a = c.add_device(DeviceKind::Gpu, NodeId(0), 0, "a".into());
+        let b = c.add_device(DeviceKind::Gpu, NodeId(0), 0, "b".into());
+        let d = c.add_device(DeviceKind::Gpu, NodeId(0), 0, "d".into());
+        c.connect_custom(a, b, LinkKind::Ideal, 0.0, 0);
+        c.connect_custom(b, d, LinkKind::Ideal, 10.0e9, 0);
+        c.push_node_meta(NodeMeta {
+            id: NodeId(0),
+            gpus: vec![a, b, d],
+            hosts: vec![],
+            hcas: vec![],
+        });
+        c
+    }
+
+    #[test]
+    fn zero_bandwidth_link_saturates_instead_of_overflowing() {
+        // regression: tx_ns on a dead link used to report u64::MAX and
+        // the completion sum `s + overhead + latency + tx` overflowed
+        use crate::netsim::time::UNREACHABLE_NS;
+        let c = dead_link_cluster();
+        for model in LinkModel::ALL {
+            let mut e = Engine::with_model(&c, model);
+            let mut plan = transfer_plan(&c, &[(0, 1, 1 << 20)]);
+            // a dependent op after the unreachable transfer must not
+            // overflow either
+            plan.push(
+                SimOp::Delay {
+                    dev: c.rank_device(1),
+                    dur_ns: 500,
+                },
+                Deps::one(0),
+                None,
+            );
+            let r = e.execute(&plan);
+            assert!(
+                r.makespan >= UNREACHABLE_NS,
+                "{}: dead link must report the unreachable sentinel",
+                model.name()
+            );
+            assert!(
+                r.makespan < SimTime::MAX / 2,
+                "{}: sentinel arithmetic must stay far from wrapping",
+                model.name()
+            );
+        }
+    }
+
+    #[test]
+    fn transfers_chained_after_a_dead_link_stay_monotone() {
+        // regression for the sentinel-magnitude clock: a *transfer* (not
+        // just a Delay) scheduled after an unreachable completion lives
+        // at ~2^62 ns, where one f64 ulp is ~1024 ns — its retire
+        // instant must never round below its own admitted ready time,
+        // or the released dependents would push non-monotonically into
+        // the ready queue (debug builds assert on that)
+        let c = dead_link_cluster();
+        for model in LinkModel::ALL {
+            let mut e = Engine::with_model(&c, model);
+            let mut plan = Plan::new();
+            let dead = c.route(c.rank_device(0), c.rank_device(1)).unwrap();
+            // overhead chosen so the first dependent's exact ready time
+            // (sentinel + 1500) rounds DOWN through f64 (ulp ≈ 1024 at
+            // 2^62): the admitted op's integer time sits above the f64
+            // clock, the adversarial case for the retire-instant clamp
+            let mut prev = plan.push(
+                SimOp::Transfer {
+                    route: dead,
+                    bytes: 1 << 20,
+                    overhead_ns: 1500,
+                    issue_ns: 1500,
+                    bw_cap: None,
+                },
+                Deps::none(),
+                None,
+            );
+            let live = c.route(c.rank_device(1), c.rank_device(2)).unwrap();
+            for _ in 0..4 {
+                prev = plan.push(
+                    SimOp::Transfer {
+                        route: live,
+                        bytes: 100, // 10 ns at 10 GB/s — far below one ulp
+                        overhead_ns: 0,
+                        issue_ns: 0,
+                        bw_cap: None,
+                    },
+                    Deps::one(prev),
+                    None,
+                );
+            }
+            let r = e.execute(&plan);
+            assert!(r.makespan >= crate::netsim::time::UNREACHABLE_NS, "{}", model.name());
+            // completions stay ordered along the chain
+            for w in 1..plan.len() - 1 {
+                assert!(
+                    r.done[w + 1] >= r.done[w],
+                    "{}: chain completion went backwards at op {w}",
+                    model.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn zero_hop_transfers_serialize_on_device() {
+        // regression: same-device copies used to ignore issue_ns and
+        // dev_free — unlimited local copies completed concurrently for
+        // free; they must serialize on the device like `Delay` does
+        let c = flat(2);
+        let dev = c.rank_device(0);
+        let route = c.route(dev, dev).unwrap();
+        for model in LinkModel::ALL {
+            let mut e = Engine::with_model(&c, model);
+            let mut plan = Plan::new();
+            for _ in 0..3 {
+                plan.push(
+                    SimOp::Transfer {
+                        route,
+                        bytes: 4096,
+                        overhead_ns: 1000,
+                        issue_ns: 1000,
+                        bw_cap: None,
+                    },
+                    Deps::none(),
+                    None,
+                );
+            }
+            let r = e.execute(&plan);
+            assert_eq!(r.makespan, 3000, "{}", model.name());
+            assert_eq!(r.start[1], 1000, "{}", model.name());
+            assert_eq!(r.start[2], 2000, "{}", model.name());
+            // and they contend with Delay ops for the same device
+            let mut mixed = Plan::new();
+            mixed.push(SimOp::Delay { dev, dur_ns: 700 }, Deps::none(), None);
+            mixed.push(
+                SimOp::Transfer {
+                    route,
+                    bytes: 4096,
+                    overhead_ns: 1000,
+                    issue_ns: 1000,
+                    bw_cap: None,
+                },
+                Deps::none(),
+                None,
+            );
+            let r = e.execute(&mixed);
+            assert_eq!(r.start[1], 700, "{}", model.name());
+            assert_eq!(r.makespan, 1700, "{}", model.name());
+        }
+    }
+
+    #[test]
+    fn fairshare_single_flow_matches_fifo() {
+        // with no contention the two models agree: a lone flow's rate is
+        // the route bottleneck, exactly what FIFO charges
+        let c = flat(4);
+        let mut fifo = Engine::new(&c);
+        let mut fair = Engine::with_model(&c, LinkModel::FairShare);
+        for bytes in [1u64 << 10, 1 << 20, 10_000_000] {
+            let plan = transfer_plan(&c, &[(0, 1, bytes)]);
+            assert_eq!(
+                fifo.execute(&plan).makespan,
+                fair.execute(&plan).makespan,
+                "single flow of {bytes}B diverged"
+            );
+        }
+        // a dependent chain is a sequence of lone flows: still identical
+        let mut plan = Plan::new();
+        let r01 = c.route(c.rank_device(0), c.rank_device(1)).unwrap();
+        let r12 = c.route(c.rank_device(1), c.rank_device(2)).unwrap();
+        let a = plan.push(
+            SimOp::Transfer {
+                route: r01,
+                bytes: 10_000_000,
+                overhead_ns: 1000,
+                issue_ns: 1000,
+                bw_cap: None,
+            },
+            Deps::none(),
+            None,
+        );
+        plan.push(
+            SimOp::Transfer {
+                route: r12,
+                bytes: 5_000_000,
+                overhead_ns: 1000,
+                issue_ns: 1000,
+                bw_cap: None,
+            },
+            Deps::one(a),
+            None,
+        );
+        assert_eq!(fifo.execute(&plan).makespan, fair.execute(&plan).makespan);
+        // bw_cap binds the lone flow's rate exactly like FIFO's tx cap
+        let mut capped = Plan::new();
+        capped.push(
+            SimOp::Transfer {
+                route: r01,
+                bytes: 10_000_000,
+                overhead_ns: 0,
+                issue_ns: 0,
+                bw_cap: Some(2.0e9),
+            },
+            Deps::none(),
+            None,
+        );
+        assert_eq!(fifo.execute(&capped).makespan, 5_000_000);
+        assert_eq!(fair.execute(&capped).makespan, 5_000_000);
+    }
+
+    #[test]
+    fn fairshare_two_flows_share_the_uplink() {
+        // the hand-computed closed form: 10 MB (0->1) and 5 MB (0->2)
+        // share the 10 GB/s uplink. Progressive filling: both run at
+        // 5 GB/s until the 5 MB flow drains at t = 1 ms; the survivor
+        // then fills the link, draining its remaining 5 MB in 0.5 ms.
+        let c = flat(3);
+        let mut fair = Engine::with_model(&c, LinkModel::FairShare);
+        let plan = transfer_plan(&c, &[(0, 1, 10_000_000), (0, 2, 5_000_000)]);
+        let r = fair.execute(&plan);
+        assert_eq!(r.done[1], 1_000_000 + 1000, "small flow: 1 ms + t_s");
+        assert_eq!(r.done[0], 1_500_000 + 1000, "large flow: 1.5 ms + t_s");
+        assert_eq!(r.makespan, 1_501_000);
+        // FIFO serializes the same pair: 1.001 ms link occupancy, then
+        // the second pays its own t_s + 0.5 ms
+        let mut fifo = Engine::new(&c);
+        assert_eq!(fifo.execute(&plan).makespan, 1_502_000);
+
+        // equal flows: both drain together at 2 ms — one t_s cheaper
+        // than FIFO's serialization
+        let plan = transfer_plan(&c, &[(0, 1, 10_000_000), (0, 2, 10_000_000)]);
+        assert_eq!(fair.execute(&plan).makespan, 2_001_000);
+        assert_eq!(fifo.execute(&plan).makespan, 2_002_000);
+    }
+
+    #[test]
+    fn fairshare_keeps_dag_semantics() {
+        // deps, delays, labels and deliveries behave exactly as under
+        // FIFO — only bandwidth sharing differs
+        let c = flat(3);
+        let mut fair = Engine::with_model(&c, LinkModel::FairShare);
+        // delays serialize on their device identically
+        let mut delays = Plan::new();
+        let dev = c.rank_device(0);
+        delays.push(SimOp::Delay { dev, dur_ns: 500 }, Deps::none(), None);
+        delays.push(SimOp::Delay { dev, dur_ns: 300 }, Deps::none(), None);
+        assert_eq!(fair.execute(&delays).makespan, 800);
+        // a dependent starts exactly at its parent's completion
+        let plan = transfer_plan(&c, &[(0, 1, 1000), (0, 2, 1000)]);
+        let r = fair.execute(&plan);
+        let rc = r.rank_completion(&plan, 3);
+        assert_eq!(rc[1], r.delivery_time(&plan, 1, 0).unwrap());
+        assert_eq!(rc[2], r.delivery_time(&plan, 2, 0).unwrap());
+        assert_eq!(rc[0], 0);
+    }
+
+    #[test]
+    fn fairshare_engine_reuse_and_makespan_only_match() {
+        let c = flat(4);
+        let mut e = Engine::with_model(&c, LinkModel::FairShare);
+        assert_eq!(e.link_model(), LinkModel::FairShare);
+        let plan = transfer_plan(
+            &c,
+            &[(0, 1, 10_000_000), (0, 2, 5_000_000), (2, 3, 1_000_000)],
+        );
+        let full = e.execute(&plan).makespan;
+        let fast = e.makespan_ns(&plan);
+        assert_eq!(full, fast);
+        assert_eq!(e.execute(&plan).makespan, full);
     }
 
     #[test]

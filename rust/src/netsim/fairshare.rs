@@ -1,0 +1,343 @@
+//! The max-min fair-share link-contention model.
+//!
+//! The FIFO engine charges every shared link as *exclusive* occupancy:
+//! concurrent transfers on one link serialize back-to-back. Real
+//! interconnects (PCIe, NVLink, IB — see the paper's §II and the
+//! GPU-centric communication literature) instead *progressively fill*
+//! shared links: every in-flight transfer is a flow, each link splits its
+//! bandwidth across the flows crossing it, and a flow's rate is the
+//! max-min fair allocation over its whole path. This module provides the
+//! pieces the engine's fair-share execution path
+//! ([`super::engine::Engine`] with [`LinkModel::FairShare`]) runs on:
+//!
+//! * [`LinkModel`] — the selectable contention model, threaded from the
+//!   CLI/tuning layers down to the engine;
+//! * [`Flow`] — one in-flight transfer (remaining bytes, current rate,
+//!   per-flow cap);
+//! * [`FairShareScratch`] — reusable per-engine scratch whose
+//!   [`FairShareScratch::recompute_rates`] runs the progressive-filling
+//!   (water-filling) allocation on every flow arrival/departure event;
+//! * [`maxmin_rates`] — a standalone entry point for property tests
+//!   (link-capacity conservation) and diagnostics.
+//!
+//! The DAG semantics (deps, delays, labels, deliveries) are identical to
+//! the FIFO path; only *how concurrent transfers share links* differs.
+//! See DESIGN.md §Contention models.
+
+use crate::topology::{Cluster, LinkId, RouteId};
+
+use super::time::SimTime;
+use super::transfer::OpId;
+
+/// Which contention model the engine resolves concurrent transfers with.
+///
+/// `Fifo` is the default and is bit-identical to the engine's historical
+/// behaviour (the golden-parity suites pin this). `FairShare` replaces
+/// link serialization with progressive-filling max-min bandwidth
+/// sharing. Tuned tables record the model that produced them
+/// ([`crate::tuning::TuningTable::link_model`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum LinkModel {
+    /// Exclusive FIFO link occupancy: a transfer starts only once every
+    /// link on its route is free, then owns the path for its issue +
+    /// transmission time (the paper's Eq. 5 pipelining semantics).
+    #[default]
+    Fifo,
+    /// Progressive-filling max-min fair sharing: concurrent flows split
+    /// each link's bandwidth; rates are recomputed on every flow
+    /// arrival/departure. `issue_ns` does not serialize links (there is
+    /// no exclusive occupancy to serialize); per-op `overhead_ns` and
+    /// route latency still charge to the completion time.
+    FairShare,
+}
+
+impl LinkModel {
+    pub const ALL: [LinkModel; 2] = [LinkModel::Fifo, LinkModel::FairShare];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            LinkModel::Fifo => "fifo",
+            LinkModel::FairShare => "fairshare",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<LinkModel> {
+        match s {
+            "fifo" => Some(LinkModel::Fifo),
+            "fairshare" | "fair-share" | "maxmin" | "max-min" => Some(LinkModel::FairShare),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for LinkModel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One in-flight transfer of the fair-share engine.
+#[derive(Debug, Clone)]
+pub(crate) struct Flow {
+    pub op: OpId,
+    pub route: RouteId,
+    /// Bytes not yet drained.
+    pub remaining: f64,
+    /// Current max-min rate, bytes/second (recomputed every event).
+    pub rate: f64,
+    /// Per-flow bandwidth cap (`bw_cap`), `INFINITY` when uncapped.
+    pub cap: f64,
+    /// Water-filling marker: this flow's rate is finalized for the pass.
+    pub fixed: bool,
+    /// Predicted drain instant under the current rates (engine scratch).
+    pub fin: f64,
+    pub overhead_ns: SimTime,
+    pub latency_ns: SimTime,
+}
+
+/// Reusable fair-share scratch hanging off the engine: the active flow
+/// set plus the per-link working state of the water-filling pass. Sized
+/// once per topology; steady-state execution performs no allocations
+/// (the `makespan_ns` contract extends to the fair-share path).
+#[derive(Debug, Default)]
+pub(crate) struct FairShareScratch {
+    /// Active (in-flight) flows.
+    pub flows: Vec<Flow>,
+    /// Per-link remaining capacity during a pass (sized `n_links`).
+    caps: Vec<f64>,
+    /// Per-link count of unfixed flows crossing it (sized `n_links`).
+    nflows: Vec<u32>,
+    /// Links charged by the current pass — reset lazily so a pass costs
+    /// O(active flows × hops), not O(n_links).
+    touched: Vec<LinkId>,
+    /// Per-flow tightest-constraint scratch for one round.
+    lims: Vec<f64>,
+}
+
+impl FairShareScratch {
+    pub fn new(n_links: usize) -> FairShareScratch {
+        FairShareScratch {
+            flows: Vec::new(),
+            caps: vec![0.0; n_links],
+            nflows: vec![0; n_links],
+            touched: Vec::new(),
+            lims: Vec::new(),
+        }
+    }
+
+    /// `true` when the per-link scratch matches the topology (the engine
+    /// mirrors its generation fail-fast on this).
+    pub fn sized_for(&self, n_links: usize) -> bool {
+        self.caps.len() == n_links && self.nflows.len() == n_links
+    }
+
+    /// Recompute every active flow's max-min fair rate by progressive
+    /// filling (water-filling): repeatedly find the tightest constraint —
+    /// a link's `remaining capacity / unfixed flows crossing it`, or a
+    /// flow's own cap — fix every flow attaining it at that rate, charge
+    /// its links, and repeat until all flows are fixed. Each round fixes
+    /// at least the arg-min flow (its limit *is* the round's level, an
+    /// exact comparison between identically computed values), so the pass
+    /// terminates in at most `flows` rounds; cost is
+    /// O(rounds × flows × hops).
+    pub fn recompute_rates(&mut self, cluster: &Cluster) {
+        // reset the previous pass's per-link charges lazily
+        while let Some(l) = self.touched.pop() {
+            self.nflows[l.0] = 0;
+        }
+        for f in self.flows.iter_mut() {
+            f.fixed = false;
+            f.rate = 0.0;
+        }
+        for f in self.flows.iter() {
+            for &h in cluster.route_hops(f.route).iter() {
+                if self.nflows[h.0] == 0 {
+                    // a zero/negative-bandwidth link contributes zero
+                    // capacity: flows crossing it fix at rate 0 and the
+                    // engine completes them at the unreachable sentinel
+                    self.caps[h.0] = cluster.link(h).bandwidth.max(0.0);
+                    self.touched.push(h);
+                }
+                self.nflows[h.0] += 1;
+            }
+        }
+        let mut unfixed = self.flows.len();
+        self.lims.clear();
+        self.lims.resize(self.flows.len(), 0.0);
+        while unfixed > 0 {
+            // the round's water level: the tightest constraint over all
+            // unfixed flows
+            let mut level = f64::INFINITY;
+            for (i, f) in self.flows.iter().enumerate() {
+                if f.fixed {
+                    continue;
+                }
+                let mut lim = f.cap;
+                for &h in cluster.route_hops(f.route).iter() {
+                    lim = lim.min(self.caps[h.0] / self.nflows[h.0] as f64);
+                }
+                self.lims[i] = lim;
+                level = level.min(lim);
+            }
+            if level.is_infinite() {
+                // no finite constraint (trivial/infinite links, uncapped
+                // flows): the remainder drains instantly
+                for f in self.flows.iter_mut() {
+                    if !f.fixed {
+                        f.fixed = true;
+                        f.rate = f64::INFINITY;
+                    }
+                }
+                break;
+            }
+            for i in 0..self.flows.len() {
+                if self.flows[i].fixed || self.lims[i] > level {
+                    continue;
+                }
+                self.flows[i].fixed = true;
+                self.flows[i].rate = level;
+                unfixed -= 1;
+                let route = self.flows[i].route;
+                for &h in cluster.route_hops(route).iter() {
+                    self.caps[h.0] = (self.caps[h.0] - level).max(0.0);
+                    self.nflows[h.0] -= 1;
+                }
+            }
+        }
+    }
+}
+
+/// Max-min fair rates (bytes/second) for a set of concurrent flows, each
+/// a route plus an optional per-flow bandwidth cap — the progressive-
+/// filling allocation the fair-share engine applies between events.
+/// Exposed for property tests (link-capacity conservation: on every
+/// link, the rates of the flows crossing it sum to at most its
+/// bandwidth) and diagnostics; the engine's hot path reuses its own
+/// scratch instead.
+pub fn maxmin_rates(cluster: &Cluster, flows: &[(RouteId, Option<f64>)]) -> Vec<f64> {
+    let mut scratch = FairShareScratch::new(cluster.n_links());
+    for (i, &(route, cap)) in flows.iter().enumerate() {
+        scratch.flows.push(Flow {
+            op: i,
+            route,
+            remaining: 1.0,
+            rate: 0.0,
+            cap: cap.unwrap_or(f64::INFINITY),
+            fixed: false,
+            fin: 0.0,
+            overhead_ns: 0,
+            latency_ns: 0,
+        });
+    }
+    scratch.recompute_rates(cluster);
+    scratch.flows.iter().map(|f| f.rate).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::presets::flat;
+
+    #[test]
+    fn link_model_names_parse_round_trip() {
+        for m in LinkModel::ALL {
+            assert_eq!(LinkModel::parse(m.name()), Some(m));
+            assert_eq!(format!("{m}"), m.name());
+        }
+        assert_eq!(LinkModel::parse("fair-share"), Some(LinkModel::FairShare));
+        assert_eq!(LinkModel::parse("max-min"), Some(LinkModel::FairShare));
+        assert_eq!(LinkModel::parse("bogus"), None);
+        assert_eq!(LinkModel::default(), LinkModel::Fifo);
+    }
+
+    #[test]
+    fn single_flow_gets_the_bottleneck() {
+        let c = flat(3);
+        let r01 = c.route(c.rank_device(0), c.rank_device(1)).unwrap();
+        let rates = maxmin_rates(&c, &[(r01, None)]);
+        assert_eq!(rates, vec![10.0e9]); // the flat preset's Ideal links
+        // a per-flow cap below the links binds instead
+        let rates = maxmin_rates(&c, &[(r01, Some(2.0e9))]);
+        assert_eq!(rates, vec![2.0e9]);
+    }
+
+    #[test]
+    fn shared_uplink_splits_evenly() {
+        // 0->1 and 0->2 share the 0->xbar uplink; downstream links are
+        // private, so each flow gets half the shared 10 GB/s
+        let c = flat(3);
+        let r01 = c.route(c.rank_device(0), c.rank_device(1)).unwrap();
+        let r02 = c.route(c.rank_device(0), c.rank_device(2)).unwrap();
+        let rates = maxmin_rates(&c, &[(r01, None), (r02, None)]);
+        assert_eq!(rates, vec![5.0e9, 5.0e9]);
+    }
+
+    #[test]
+    fn capped_flow_releases_share_to_the_other() {
+        // max-min, not equal split: the capped flow takes its 1 GB/s and
+        // the uncapped one fills the remaining 9 GB/s of the shared link
+        let c = flat(3);
+        let r01 = c.route(c.rank_device(0), c.rank_device(1)).unwrap();
+        let r02 = c.route(c.rank_device(0), c.rank_device(2)).unwrap();
+        let rates = maxmin_rates(&c, &[(r01, Some(1.0e9)), (r02, None)]);
+        assert_eq!(rates, vec![1.0e9, 9.0e9]);
+    }
+
+    #[test]
+    fn disjoint_flows_do_not_share() {
+        let c = flat(4);
+        let r01 = c.route(c.rank_device(0), c.rank_device(1)).unwrap();
+        let r23 = c.route(c.rank_device(2), c.rank_device(3)).unwrap();
+        let rates = maxmin_rates(&c, &[(r01, None), (r23, None)]);
+        assert_eq!(rates, vec![10.0e9, 10.0e9]);
+    }
+
+    #[test]
+    fn rates_conserve_every_link_capacity() {
+        // all-to-all-ish flow set on a shared crossbar: on every link the
+        // allocated rates must sum to at most its bandwidth
+        let c = flat(6);
+        let mut flows = Vec::new();
+        for src in 0..6usize {
+            for dst in 0..6usize {
+                if src != dst {
+                    let r = c.route(c.rank_device(src), c.rank_device(dst)).unwrap();
+                    let cap = if (src + dst) % 3 == 0 { Some(1.5e9) } else { None };
+                    flows.push((r, cap));
+                }
+            }
+        }
+        let rates = maxmin_rates(&c, &flows);
+        let mut per_link = vec![0.0f64; c.n_links()];
+        for (i, &(route, _)) in flows.iter().enumerate() {
+            assert!(rates[i] > 0.0, "flow {i} starved on a live fabric");
+            for &h in c.route_view(route).hops.iter() {
+                per_link[h.0] += rates[i];
+            }
+        }
+        for (l, &used) in per_link.iter().enumerate() {
+            let bw = c.links()[l].bandwidth;
+            assert!(
+                used <= bw * (1.0 + 1e-9),
+                "link {l} oversubscribed: {used} > {bw}"
+            );
+        }
+    }
+
+    #[test]
+    fn zero_bandwidth_link_starves_only_its_flows() {
+        use crate::topology::device::{DeviceKind, NodeId};
+        use crate::topology::link::LinkKind;
+        let mut c = Cluster::new("dead-link");
+        let a = c.add_device(DeviceKind::Gpu, NodeId(0), 0, "a".into());
+        let b = c.add_device(DeviceKind::Gpu, NodeId(0), 0, "b".into());
+        let d = c.add_device(DeviceKind::Gpu, NodeId(0), 0, "d".into());
+        c.connect_custom(a, b, LinkKind::Ideal, 0.0, 0);
+        c.connect_custom(a, d, LinkKind::Ideal, 10.0e9, 0);
+        let dead = c.route(a, b).unwrap();
+        let live = c.route(a, d).unwrap();
+        let rates = maxmin_rates(&c, &[(dead, None), (live, None)]);
+        assert_eq!(rates[0], 0.0, "dead link must starve its flow");
+        assert_eq!(rates[1], 10.0e9, "live flow must be unaffected");
+    }
+}

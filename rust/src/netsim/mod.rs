@@ -8,19 +8,23 @@
 //!
 //! Ops are arranged into a dependency DAG — a [`Plan`] — by the collective
 //! algorithms in [`crate::collectives`] and executed by the [`engine`],
-//! which resolves link contention FIFO-by-ready-time and returns per-op
-//! start/completion timestamps on a virtual nanosecond clock.
+//! which resolves link contention under a selectable [`LinkModel`] —
+//! exclusive FIFO occupancy (the default) or progressive-filling max-min
+//! fair sharing ([`fairshare`]) — and returns per-op start/completion
+//! timestamps on a virtual nanosecond clock.
 //!
 //! The simulator is *deterministic*: same plan, same timings, every run.
 
 pub mod engine;
+pub mod fairshare;
 pub mod queue;
 pub mod time;
 pub mod trace;
 pub mod transfer;
 
 pub use engine::{Engine, ExecResult};
-pub use time::SimTime;
+pub use fairshare::{maxmin_rates, LinkModel};
+pub use time::{SimTime, UNREACHABLE_NS};
 pub use transfer::{
     ns_chunk, ByteRole, Deps, MergeHandle, OpByte, OpId, Plan, PlanTemplate, PlannedOp, SimOp,
     LABEL_NS_STRIDE, NO_CLASS,

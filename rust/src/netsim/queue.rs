@@ -55,6 +55,11 @@ pub struct ReadyQueue {
     pos: usize,
     /// Items at or beyond the window end, pending redistribution.
     overflow: Vec<(SimTime, OpId)>,
+    /// Cached minimum of `overflow` — kept incrementally (overflow is
+    /// append-only between rebases and wholly drained by one), so
+    /// [`ReadyQueue::peek`] stays O(1) on the overflow side instead of
+    /// rescanning it per probe.
+    overflow_min: Option<(SimTime, OpId)>,
     len: usize,
     /// Degraded mode storage: globally sorted, drained by cursor.
     sorted: Vec<(SimTime, OpId)>,
@@ -79,6 +84,7 @@ impl ReadyQueue {
             active: 0,
             pos: 0,
             overflow: Vec::new(),
+            overflow_min: None,
             len: 0,
             sorted: Vec::new(),
             sorted_pos: 0,
@@ -98,6 +104,7 @@ impl ReadyQueue {
         self.active = 0;
         self.pos = 0;
         self.overflow.clear();
+        self.overflow_min = None;
         self.len = 0;
         self.sorted.clear();
         self.sorted_pos = 0;
@@ -136,6 +143,10 @@ impl ReadyQueue {
         let idx = ((t - self.base) >> self.shift) as usize;
         if idx >= BUCKETS {
             self.overflow.push((t, id));
+            self.overflow_min = Some(match self.overflow_min {
+                Some(m) => m.min((t, id)),
+                None => (t, id),
+            });
             return;
         }
         debug_assert!(idx >= self.active, "push into a drained bucket");
@@ -197,6 +208,44 @@ impl ReadyQueue {
         }
     }
 
+    /// The minimum `(time, id)` pair without dequeuing it — the
+    /// fair-share engine's next-arrival probe. Purely observational:
+    /// unlike `pop` it performs none of the lazy maintenance (bucket
+    /// clearing, activation sorts, rebase). That matters for
+    /// correctness, not just cleanliness — only *popped* times bound
+    /// later pushes, so after a peek the engine may legally push an
+    /// earlier time than the peeked front (a flow retiring before a
+    /// far-future arrival); had the peek advanced the window or rebased
+    /// onto the overflow, that push would land below the active bucket
+    /// or the new base and be misordered.
+    pub fn peek(&self) -> Option<(SimTime, OpId)> {
+        if self.len == 0 {
+            return None;
+        }
+        if self.fallback {
+            return Some(self.sorted[self.sorted_pos]);
+        }
+        // buckets partition time in order, so the first non-empty bucket
+        // holds the window minimum: the active bucket's undrained tail
+        // is sorted (its first element is the bucket min); later buckets
+        // are unsorted until activation (linear scan)
+        if let Some(&e) = self.buckets[self.active].get(self.pos) {
+            return Some(e);
+        }
+        for idx in self.active + 1..BUCKETS {
+            if let Some(&e) = self.buckets[idx].iter().min() {
+                return Some(e);
+            }
+        }
+        // window exhausted: everything left overflowed past its end
+        debug_assert_eq!(
+            self.overflow_min,
+            self.overflow.iter().min().copied(),
+            "overflow min cache out of sync"
+        );
+        self.overflow_min
+    }
+
     /// Open a fresh window over the overflow, adapting the bucket width
     /// to the remaining spread (or degrading to the sorted fallback when
     /// the spread is pathological).
@@ -223,6 +272,7 @@ impl ReadyQueue {
             self.sorted.clear();
             self.sorted_pos = 0;
             self.sorted.append(&mut self.overflow);
+            self.overflow_min = None;
             self.sorted.sort_unstable();
             return;
         }
@@ -237,6 +287,7 @@ impl ReadyQueue {
             self.buckets[idx].push((t, id));
         }
         self.overflow = items; // keep the allocation
+        self.overflow_min = None;
         self.buckets[0].sort_unstable();
     }
 }
@@ -410,6 +461,70 @@ mod tests {
         assert_eq!(q.pop(), Some((far + 5, 4)));
         assert_eq!(q.pop(), Some((far + (1 << 54), 3)));
         assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn peek_is_nondestructive_and_matches_pop() {
+        // dense, window-crossing and fallback-triggering schedules: a
+        // peek before every pop must return exactly the popped pair and
+        // leave the queue's contents (and subsequent pop order) intact
+        for (seed, spread) in [(41u64, 50u64), (42, 1 << 21), (43, 1 << 50)] {
+            let mut rng = Xs(seed | 1);
+            let mut q = ReadyQueue::new();
+            let mut h: BinaryHeap<Reverse<(SimTime, OpId)>> = BinaryHeap::new();
+            for id in 0..8usize {
+                q.push(0, id);
+                h.push(Reverse((0, id)));
+            }
+            let mut next_id = 8usize;
+            let mut pushed = 8usize;
+            loop {
+                let peeked = q.peek();
+                assert_eq!(q.peek(), peeked, "repeated peeks must agree");
+                let got = q.pop();
+                assert_eq!(got, peeked, "pop must return the peeked pair");
+                let want = h.pop().map(|Reverse(e)| e);
+                assert_eq!(got, want, "divergence from heap order (seed {seed})");
+                let Some((t, _)) = got else { break };
+                if pushed < 1500 {
+                    for _ in 0..(rng.next() % 3) {
+                        let d = rng.next() % spread;
+                        q.push(t + d, next_id);
+                        h.push(Reverse((t + d, next_id)));
+                        next_id += 1;
+                        pushed += 1;
+                    }
+                }
+            }
+            assert!(q.is_empty());
+            assert_eq!(q.peek(), None);
+        }
+    }
+
+    #[test]
+    fn push_below_a_peeked_far_future_front_stays_ordered() {
+        // the fair-share hazard: peeking a far-future arrival while an
+        // earlier completion is about to be pushed. Were peek to perform
+        // pop's window advance / overflow rebase, the later (earlier-
+        // timed, still monotone) push would land below the active bucket
+        // or the rebased base. Peek is purely observational, so the
+        // push must come out first.
+        let window = (BUCKETS as u64) << INITIAL_SHIFT;
+        let mut q = ReadyQueue::new();
+        q.push(0, 0);
+        assert_eq!(q.pop(), Some((0, 0)));
+        // far item lands in the overflow (beyond the initial window)
+        q.push(5 * window, 1);
+        assert_eq!(q.peek(), Some((5 * window, 1)));
+        // an in-window, post-last-popped push after the peek
+        q.push(100, 2);
+        assert_eq!(q.peek(), Some((100, 2)));
+        q.push(window - 1, 3);
+        assert_eq!(q.pop(), Some((100, 2)));
+        assert_eq!(q.pop(), Some((window - 1, 3)));
+        assert_eq!(q.pop(), Some((5 * window, 1)));
+        assert_eq!(q.pop(), None);
+        assert_eq!(q.peek(), None);
     }
 
     #[test]

@@ -16,13 +16,35 @@ pub fn us_to_ns(us: f64) -> SimTime {
     (us * 1000.0).round() as SimTime
 }
 
+/// Transmission-time sentinel for unreachable links: a non-positive (or
+/// NaN) bandwidth can never move a byte, so [`tx_ns`] reports this value
+/// instead of the `inf.round() as u64 == u64::MAX` it used to produce —
+/// which overflowed the engine's `start + overhead + latency + tx` sum.
+/// A quarter of the clock range leaves headroom for overhead/latency
+/// additions (done with `saturating_add`) and for chains of ops scheduled
+/// after an unreachable completion, without ever wrapping `u64` time.
+pub const UNREACHABLE_NS: SimTime = SimTime::MAX / 4;
+
 /// Convert a bytes/bandwidth pair to transmission nanoseconds.
+///
+/// A non-positive or NaN bandwidth names an unreachable link: the result
+/// is the saturating [`UNREACHABLE_NS`] sentinel (finite results are also
+/// capped there). An *infinite* bandwidth is the trivial same-device
+/// route: free.
 #[inline]
 pub fn tx_ns(bytes: u64, bandwidth_bytes_per_sec: f64) -> SimTime {
-    if bytes == 0 || !bandwidth_bytes_per_sec.is_finite() {
+    if bandwidth_bytes_per_sec.is_nan() || bandwidth_bytes_per_sec <= 0.0 {
+        return UNREACHABLE_NS;
+    }
+    if bytes == 0 || bandwidth_bytes_per_sec.is_infinite() {
         return 0;
     }
-    (bytes as f64 / bandwidth_bytes_per_sec * 1.0e9).round() as SimTime
+    let t = (bytes as f64 / bandwidth_bytes_per_sec * 1.0e9).round();
+    if t >= UNREACHABLE_NS as f64 {
+        UNREACHABLE_NS
+    } else {
+        t as SimTime
+    }
 }
 
 #[cfg(test)]
@@ -36,5 +58,19 @@ mod tests {
         assert_eq!(tx_ns(1_000_000_000, 1.0e9), 1_000_000_000);
         assert_eq!(tx_ns(0, 1.0e9), 0);
         assert_eq!(tx_ns(100, f64::INFINITY), 0);
+    }
+
+    #[test]
+    fn degenerate_bandwidth_saturates_to_sentinel() {
+        // regression: zero bandwidth used to produce u64::MAX, which
+        // overflowed the engine's completion-time sums
+        assert_eq!(tx_ns(100, 0.0), UNREACHABLE_NS);
+        assert_eq!(tx_ns(100, -1.0), UNREACHABLE_NS);
+        assert_eq!(tx_ns(100, f64::NAN), UNREACHABLE_NS);
+        assert_eq!(tx_ns(0, 0.0), UNREACHABLE_NS);
+        // huge-but-finite results cap at the sentinel too
+        assert_eq!(tx_ns(u64::MAX, f64::MIN_POSITIVE), UNREACHABLE_NS);
+        // and the sentinel leaves room for downstream additions
+        assert!(UNREACHABLE_NS.checked_add(UNREACHABLE_NS).is_some());
     }
 }

@@ -96,9 +96,11 @@ pub struct Link {
 
 impl Link {
     /// Time to push `bytes` through this link (transmission only), ns.
+    /// A non-positive/NaN bandwidth saturates to the unreachable sentinel
+    /// (see [`crate::netsim::time::tx_ns`]) instead of casting `inf`.
     #[inline]
     pub fn transmission_ns(&self, bytes: u64) -> u64 {
-        (bytes as f64 / self.bandwidth * 1.0e9).round() as u64
+        crate::netsim::time::tx_ns(bytes, self.bandwidth)
     }
 }
 

@@ -51,11 +51,12 @@ impl RouteMeta {
 
     /// Pure (uncontended) time to move `bytes` along this route with
     /// cut-through forwarding: propagation + bytes / bottleneck-bandwidth.
+    /// A non-positive bottleneck (dead link on the path) saturates to the
+    /// [`crate::netsim::UNREACHABLE_NS`] sentinel instead of overflowing;
+    /// the trivial route's infinite bandwidth stays free.
     pub fn uncontended_ns(&self, bytes: u64) -> u64 {
-        if !self.bottleneck_bw.is_finite() {
-            return self.latency_ns;
-        }
-        self.latency_ns + (bytes as f64 / self.bottleneck_bw * 1.0e9).round() as u64
+        self.latency_ns
+            .saturating_add(crate::netsim::time::tx_ns(bytes, self.bottleneck_bw))
     }
 }
 
@@ -235,13 +236,10 @@ impl Route {
 
     /// Pure (uncontended) time to move `bytes` along this route with
     /// cut-through forwarding: propagation + bytes / bottleneck-bandwidth.
+    /// Saturating, mirroring [`RouteMeta::uncontended_ns`].
     pub fn uncontended_ns(&self, bytes: u64) -> u64 {
-        let bw = if self.bottleneck_bw.is_finite() {
-            self.bottleneck_bw
-        } else {
-            return self.latency_ns;
-        };
-        self.latency_ns + (bytes as f64 / bw * 1.0e9).round() as u64
+        self.latency_ns
+            .saturating_add(crate::netsim::time::tx_ns(bytes, self.bottleneck_bw))
     }
 }
 

@@ -79,6 +79,7 @@ pub fn to_json(table: &TuningTable) -> String {
     let mut j = Json::obj();
     j.set("cluster", table.cluster.as_str());
     j.set("n_ranks", table.n_ranks);
+    j.set("link_model", table.link_model.name());
     let entries: Vec<Json> = table.entries.iter().map(entry_to_json).collect();
     j.set("entries", Json::Arr(entries));
     let mut reductions = Json::obj();
@@ -100,6 +101,11 @@ pub fn from_json(text: &str) -> Result<TuningTable> {
         .to_string();
     let n_ranks = j.get("n_ranks").and_then(|v| v.as_u64()).unwrap_or(0) as usize;
     let mut table = TuningTable::new(cluster, n_ranks);
+    // absent in pre-fair-share artifacts: those were tuned under FIFO
+    if let Some(name) = j.get("link_model").and_then(|v| v.as_str()) {
+        table.link_model = crate::netsim::LinkModel::parse(name)
+            .ok_or_else(|| Error::Config(format!("unknown link model '{name}'")))?;
+    }
     for ej in j
         .get("entries")
         .and_then(|v| v.as_arr())
@@ -211,6 +217,23 @@ mod tests {
         let t = sample();
         let back = from_json(&to_json(&t)).unwrap();
         assert!(back.entries[1].max_bytes > 1 << 62);
+    }
+
+    #[test]
+    fn link_model_round_trips_and_defaults_fifo() {
+        use crate::netsim::LinkModel;
+        let t = sample().with_link_model(LinkModel::FairShare);
+        let back = from_json(&to_json(&t)).unwrap();
+        assert_eq!(back.link_model, LinkModel::FairShare);
+        assert_eq!(back.entries, t.entries);
+        // artifacts written before the contention-model split carry no
+        // link_model key: they were tuned under FIFO
+        let text = r#"{"cluster":"x","n_ranks":2,"entries":[
+            {"max_bytes":4,"won_at_ns":1,"algorithm":{"family":"chain"}}]}"#;
+        assert_eq!(from_json(text).unwrap().link_model, LinkModel::Fifo);
+        // an unknown model name is a config error, not a silent default
+        let bad = r#"{"cluster":"x","n_ranks":2,"link_model":"bogus","entries":[]}"#;
+        assert!(from_json(bad).is_err());
     }
 
     #[test]

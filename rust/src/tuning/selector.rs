@@ -8,7 +8,7 @@
 
 use crate::collectives::{self, Algorithm, CollectiveKind, CollectivePlan, CollectiveSpec};
 use crate::comm::Comm;
-use crate::netsim::Engine;
+use crate::netsim::{Engine, LinkModel};
 use crate::topology::Cluster;
 
 use super::sweep;
@@ -37,6 +37,20 @@ impl Selector {
         }
     }
 
+    /// Tune under an explicit link-contention model: the sweep simulates
+    /// every candidate on an engine running `model` and the selector's
+    /// table records it ([`Self::link_model`]) — dispatch it against an
+    /// engine running the same model.
+    pub fn tuned_with_model(
+        cluster: &Cluster,
+        threads: Option<usize>,
+        model: LinkModel,
+    ) -> Selector {
+        Selector {
+            table: sweep::tune_with_model(cluster, &sweep::default_sizes(), threads, model),
+        }
+    }
+
     /// Wrap an existing (e.g. persisted) table.
     pub fn from_table(table: TuningTable) -> Selector {
         Selector { table }
@@ -44,6 +58,11 @@ impl Selector {
 
     pub fn table(&self) -> &TuningTable {
         &self.table
+    }
+
+    /// The link-contention model this selector's table was tuned under.
+    pub fn link_model(&self) -> LinkModel {
+        self.table.link_model
     }
 
     /// The broadcast algorithm MV2-GDR-Opt uses for this message size.
@@ -95,6 +114,31 @@ mod tests {
         let sel = Selector::tuned(&cluster);
         for bytes in [4u64, 8 << 10, 2 << 20, 128 << 20] {
             assert_eq!(sel.algorithm(bytes), sel.table().select(bytes));
+        }
+    }
+
+    #[test]
+    fn fairshare_tuned_selector_never_loses_on_a_fairshare_engine() {
+        // the tuned pick must win (or tie) against any fixed candidate
+        // *under the model it was tuned for*
+        let cluster = kesch(1, 8);
+        let sel = Selector::tuned_with_model(&cluster, None, LinkModel::FairShare);
+        assert_eq!(sel.link_model(), LinkModel::FairShare);
+        let mut comm = Comm::new(&cluster);
+        let mut engine = Engine::with_model(&cluster, LinkModel::FairShare);
+        for bytes in [4u64, 64 << 10, 8 << 20] {
+            let spec = BcastSpec::new(0, 8, bytes);
+            let tuned = sel.latency_ns(&mut comm, &mut engine, &spec);
+            let binomial = collectives::latency_ns(
+                &Algorithm::Knomial { k: 2 },
+                &mut comm,
+                &mut engine,
+                &spec,
+            );
+            assert!(
+                tuned <= binomial,
+                "fair-share tuned {tuned} vs binomial {binomial} at {bytes}B"
+            );
         }
     }
 

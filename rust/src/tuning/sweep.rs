@@ -22,7 +22,7 @@ use std::sync::Mutex;
 
 use crate::collectives::{self, Algorithm, CollectiveKind, CollectiveSpec};
 use crate::comm::Comm;
-use crate::netsim::Engine;
+use crate::netsim::{Engine, LinkModel};
 use crate::topology::Cluster;
 
 use super::space;
@@ -101,13 +101,15 @@ fn grid(sizes: &[u64]) -> Vec<(CollectiveKind, u64)> {
 }
 
 /// Fold swept points (in [`grid`] order) into the bucketed table — shared
-/// by the serial and parallel tuners so their output is identical.
+/// by the serial and parallel tuners so their output is identical. The
+/// table records the contention model the points were simulated under.
 fn table_from_points(
     cluster: &Cluster,
     sizes: &[u64],
     points: Vec<SweepPoint>,
+    model: LinkModel,
 ) -> TuningTable {
-    let mut table = TuningTable::new(cluster.name.clone(), cluster.n_gpus());
+    let mut table = TuningTable::new(cluster.name.clone(), cluster.n_gpus()).with_link_model(model);
     for (p, point) in points.into_iter().enumerate() {
         let i = p % sizes.len();
         let max_bytes = if i + 1 == sizes.len() {
@@ -144,6 +146,21 @@ pub fn tune_with_threads(
     sizes: &[u64],
     threads: Option<usize>,
 ) -> TuningTable {
+    tune_with_model(cluster, sizes, threads, LinkModel::Fifo)
+}
+
+/// [`tune_with_threads`] under an explicit link-contention model: every
+/// candidate is simulated on an engine running `model`, and the produced
+/// table records it ([`TuningTable::link_model`]) so a selector can be
+/// matched to the engine it will dispatch for. The winners *can* differ
+/// between models — fair sharing changes what concurrent chunks of a
+/// pipelined chain or ring cost on a shared link.
+pub fn tune_with_model(
+    cluster: &Cluster,
+    sizes: &[u64],
+    threads: Option<usize>,
+    model: LinkModel,
+) -> TuningTable {
     let points = grid(sizes);
     let n_workers = threads
         .unwrap_or_else(|| {
@@ -154,7 +171,7 @@ pub fn tune_with_threads(
         .max(1)
         .min(points.len().max(1));
     if n_workers <= 1 {
-        return tune_serial(cluster, sizes);
+        return tune_serial_with_model(cluster, sizes, model);
     }
 
     let next = AtomicUsize::new(0);
@@ -171,7 +188,7 @@ pub fn tune_with_threads(
             let slots = &slots;
             let points = &points;
             s.spawn(move || {
-                let mut engine = Engine::new(&local);
+                let mut engine = Engine::with_model(&local, model);
                 // one Comm per worker, persistent across its points: the
                 // template cache rescales across the size axis, and
                 // canonical path selection keeps every point a pure
@@ -197,20 +214,29 @@ pub fn tune_with_threads(
                 .expect("sweep point missing")
         })
         .collect();
-    table_from_points(cluster, sizes, results)
+    table_from_points(cluster, sizes, results, model)
 }
 
 /// The single-threaded reference tuner: same grid, same merge, one
 /// worker. Kept public so tests (and `sweep_perf`) can assert the
 /// parallel path persists a byte-identical table.
 pub fn tune_serial(cluster: &Cluster, sizes: &[u64]) -> TuningTable {
-    let mut engine = Engine::new(cluster);
+    tune_serial_with_model(cluster, sizes, LinkModel::Fifo)
+}
+
+/// [`tune_serial`] under an explicit link-contention model.
+pub fn tune_serial_with_model(
+    cluster: &Cluster,
+    sizes: &[u64],
+    model: LinkModel,
+) -> TuningTable {
+    let mut engine = Engine::with_model(cluster, model);
     let mut comm = Comm::new(cluster);
     let results: Vec<SweepPoint> = grid(sizes)
         .into_iter()
         .map(|(kind, bytes)| sweep_size_with(&mut comm, &mut engine, kind, bytes, 0))
         .collect();
-    table_from_points(cluster, sizes, results)
+    table_from_points(cluster, sizes, results, model)
 }
 
 /// The default tuning size grid (powers of two, 4 B – 128 MB).
@@ -311,6 +337,27 @@ mod tests {
                 "tune_with_threads({threads:?}) diverged from serial"
             );
         }
+    }
+
+    #[test]
+    fn fairshare_tune_is_deterministic_and_tagged() {
+        // the fair-share model is a pure function of the cluster too:
+        // parallel and serial sweeps must produce byte-identical tables,
+        // and the table must record which model produced it
+        let cluster = kesch(1, 4);
+        let sizes = [4u64, 8 << 10, 1 << 20, 32 << 20];
+        let ser = tune_serial_with_model(&cluster, &sizes, LinkModel::FairShare);
+        assert_eq!(ser.link_model, LinkModel::FairShare);
+        for threads in [Some(2), None] {
+            let par = tune_with_model(&cluster, &sizes, threads, LinkModel::FairShare);
+            assert_eq!(
+                persist::to_json(&par),
+                persist::to_json(&ser),
+                "fair-share tune_with_model({threads:?}) diverged from serial"
+            );
+        }
+        // and the default-model paths still tag FIFO
+        assert_eq!(tune(&cluster, &sizes).link_model, LinkModel::Fifo);
     }
 
     #[test]

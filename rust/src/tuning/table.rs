@@ -4,6 +4,7 @@
 use std::collections::BTreeMap;
 
 use crate::collectives::{Algorithm, CollectiveKind};
+use crate::netsim::LinkModel;
 
 /// One tuned entry.
 #[derive(Debug, Clone, PartialEq)]
@@ -22,6 +23,10 @@ pub struct TuningTable {
     /// Identifies the topology the table was tuned for.
     pub cluster: String,
     pub n_ranks: usize,
+    /// The link-contention model the sweep simulated under: entries won
+    /// against FIFO-serialized or max-min fair-shared links, and a
+    /// selector should dispatch on an engine running the same model.
+    pub link_model: LinkModel,
     /// Broadcast entries (the paper's original table), sorted by
     /// `max_bytes` ascending; the last entry also covers everything
     /// above it.
@@ -35,9 +40,16 @@ impl TuningTable {
         TuningTable {
             cluster: cluster.into(),
             n_ranks,
+            link_model: LinkModel::Fifo,
             entries: Vec::new(),
             reductions: BTreeMap::new(),
         }
+    }
+
+    /// Tag the table with the contention model that produced it.
+    pub fn with_link_model(mut self, model: LinkModel) -> TuningTable {
+        self.link_model = model;
+        self
     }
 
     /// When a kind has no tuned entries, fall back to its sane default.
@@ -120,10 +132,11 @@ impl TuningTable {
     fn render_kind(&self, kind: CollectiveKind) -> String {
         use crate::util::tablefmt::Table;
         let mut t = Table::new(&["<= size", "algorithm", "latency (us)"]).with_title(format!(
-            "tuning table: {} ({} ranks, {})",
+            "tuning table: {} ({} ranks, {}, {} link model)",
             self.cluster,
             self.n_ranks,
-            kind.name()
+            kind.name(),
+            self.link_model.name()
         ));
         for e in self.entries_for(kind) {
             let size = if e.max_bytes == u64::MAX {
@@ -213,6 +226,17 @@ mod tests {
         let s = table().render();
         assert!(s.contains("host-staged-knomial"));
         assert!(s.contains("pipelined-chain"));
+        // the table advertises the contention model it was tuned under
+        assert!(s.contains("fifo link model"));
+    }
+
+    #[test]
+    fn link_model_tag_defaults_fifo_and_renders() {
+        let t = table();
+        assert_eq!(t.link_model, LinkModel::Fifo);
+        let fair = table().with_link_model(LinkModel::FairShare);
+        assert_eq!(fair.link_model, LinkModel::FairShare);
+        assert!(fair.render().contains("fairshare link model"));
     }
 
     #[test]

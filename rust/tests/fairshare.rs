@@ -1,0 +1,246 @@
+//! Fair-share contention-model integration tests: link-capacity
+//! conservation, single-flow parity with FIFO, divergence under real
+//! contention, and FIFO golden parity across the algorithm × size ×
+//! topology grid (the fair-share subsystem must be invisible when the
+//! default model is selected).
+
+use gdrbcast::collectives::{self, Algorithm, CollectiveSpec};
+use gdrbcast::comm::Comm;
+use gdrbcast::netsim::{maxmin_rates, Deps, Engine, LinkModel, Plan};
+use gdrbcast::topology::presets;
+use gdrbcast::tuning::Selector;
+
+/// Deterministic xorshift (the repo's reference-test idiom).
+struct Xs(u64);
+impl Xs {
+    fn next(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.0 = x;
+        x
+    }
+}
+
+fn grid_algorithms() -> Vec<Algorithm> {
+    vec![
+        Algorithm::Direct,
+        Algorithm::Chain,
+        Algorithm::PipelinedChain { chunk: 64 << 10 },
+        Algorithm::Knomial { k: 2 },
+        Algorithm::Knomial { k: 4 },
+        Algorithm::ScatterRingAllgather,
+        Algorithm::HostStagedKnomial { k: 2 },
+        Algorithm::RingReduceScatter,
+        Algorithm::RingAllgather,
+        Algorithm::RingAllreduce,
+        Algorithm::TreeAllreduce { k: 2 },
+    ]
+}
+
+fn grid_topologies() -> Vec<(&'static str, gdrbcast::topology::Cluster)> {
+    vec![
+        ("flat(8)", presets::flat(8)),
+        ("kesch(1,8)", presets::kesch(1, 8)),
+        ("kesch(2,8)", presets::kesch(2, 8)),
+    ]
+}
+
+#[test]
+fn maxmin_rates_conserve_link_capacity_on_kesch() {
+    // the acceptance property: for random concurrent flow sets on the
+    // paper's testbed topology, the sum of allocated rates on any link
+    // never exceeds that link's bandwidth
+    let cluster = presets::kesch(2, 16);
+    let n = cluster.n_gpus();
+    let mut rng = Xs(0xfa15_eed1 | 1);
+    for case in 0..50 {
+        let n_flows = 2 + (rng.next() % 24) as usize;
+        let mut flows = Vec::with_capacity(n_flows);
+        for _ in 0..n_flows {
+            let src = (rng.next() % n as u64) as usize;
+            let mut dst = (rng.next() % n as u64) as usize;
+            if dst == src {
+                dst = (dst + 1) % n;
+            }
+            let route = cluster
+                .route(cluster.rank_device(src), cluster.rank_device(dst))
+                .unwrap();
+            let cap = if rng.next() % 4 == 0 {
+                Some(1.0e9 + (rng.next() % 8) as f64 * 1.0e9)
+            } else {
+                None
+            };
+            flows.push((route, cap));
+        }
+        let rates = maxmin_rates(&cluster, &flows);
+        assert_eq!(rates.len(), flows.len());
+        let mut per_link = vec![0.0f64; cluster.n_links()];
+        for (i, &(route, cap)) in flows.iter().enumerate() {
+            assert!(
+                rates[i] > 0.0,
+                "case {case}: flow {i} starved on a live fabric"
+            );
+            if let Some(cap) = cap {
+                assert!(
+                    rates[i] <= cap * (1.0 + 1e-9),
+                    "case {case}: flow {i} exceeds its cap"
+                );
+            }
+            for &h in cluster.route_view(route).hops.iter() {
+                per_link[h.0] += rates[i];
+            }
+        }
+        for (l, &used) in per_link.iter().enumerate() {
+            let bw = cluster.links()[l].bandwidth;
+            assert!(
+                used <= bw * (1.0 + 1e-9),
+                "case {case}: link {l} oversubscribed ({used} > {bw})"
+            );
+        }
+    }
+}
+
+#[test]
+fn single_mechanism_sends_match_fifo() {
+    // one rank-to-rank send at a time — across the mechanism menu
+    // (IPC, GDR, staged, eager) — costs exactly the same under both
+    // models: a lone flow's max-min rate is the FIFO bottleneck
+    let cluster = presets::kesch(2, 8);
+    let pairs = [(0usize, 1usize), (0, 4), (0, 8), (3, 12), (8, 15)];
+    for &(src, dst) in &pairs {
+        for bytes in [4u64, 64 << 10, 1 << 20, 16 << 20] {
+            let mut comm = Comm::new(&cluster);
+            let mut plan = Plan::new();
+            comm.send(&mut plan, src, dst, bytes, Deps::none(), Some((dst, 0)));
+            let fifo = Engine::new(&cluster).execute(&plan).makespan;
+            let fair = Engine::with_model(&cluster, LinkModel::FairShare)
+                .execute(&plan)
+                .makespan;
+            assert_eq!(
+                fifo, fair,
+                "lone send {src}->{dst} of {bytes}B diverged between models"
+            );
+        }
+    }
+}
+
+#[test]
+fn contended_fanout_diverges_and_fairshare_wins_the_star() {
+    // a non-blocking star fan-out: the root issues 7 concurrent sends
+    // over its single uplink. FIFO serializes them back-to-back (each
+    // send additionally pays the issue gap); fair share drains all
+    // flows together — strictly faster, and the models must *disagree*
+    // (the serialized-contention fidelity bug this subsystem fixes).
+    let cluster = presets::flat(8);
+    let n = cluster.n_gpus();
+    let bytes: u64 = 16 << 20;
+    let mut comm = Comm::new(&cluster);
+    let mut plan = Plan::new();
+    for dst in 1..n {
+        comm.send(&mut plan, 0, dst, bytes, Deps::none(), Some((dst, 0)));
+    }
+    let fifo = Engine::new(&cluster).execute(&plan).makespan;
+    let mut fair_engine = Engine::with_model(&cluster, LinkModel::FairShare);
+    let fair = fair_engine.execute(&plan).makespan;
+    assert_ne!(fifo, fair, "contended fan-out must distinguish the models");
+    assert!(
+        fair < fifo,
+        "fair share must beat FIFO serialization on the star: {fair} vs {fifo}"
+    );
+    // and the shared uplink still bounds it: 7 concurrent 16 MB flows
+    // over 10 GB/s cannot beat the aggregate-bytes bound
+    let aggregate_floor = ((7 * bytes) as f64 / 10.0e9 * 1e9) as u64;
+    assert!(
+        fair >= aggregate_floor,
+        "fair share under-charges the shared uplink: {fair} < {aggregate_floor}"
+    );
+    // every rank still gets its delivery recorded
+    let r = fair_engine.execute(&plan);
+    for dst in 1..n {
+        assert!(r.delivery_time(&plan, dst, 0).is_some());
+    }
+}
+
+#[test]
+fn fifo_golden_parity_grid() {
+    // the default model must be bit-identical whether selected
+    // implicitly (Engine::new) or explicitly, across repeats and across
+    // the recording/makespan-only paths, for every algorithm × size ×
+    // topology — i.e. the fair-share subsystem changes nothing unless
+    // asked for
+    for (name, cluster) in &grid_topologies() {
+        let n = cluster.n_gpus();
+        let mut comm = Comm::new(cluster);
+        let mut default_engine = Engine::new(cluster);
+        let mut fifo_engine = Engine::with_model(cluster, LinkModel::Fifo);
+        assert_eq!(default_engine.link_model(), LinkModel::Fifo);
+        for algo in &grid_algorithms() {
+            for bytes in [4u64, 64 << 10, 16 << 20] {
+                let spec = CollectiveSpec::collective(algo.kind(), 0, n, bytes);
+                let bp = collectives::plan(algo, &mut comm, &spec);
+                let implicit = default_engine.execute(&bp.plan).makespan;
+                let explicit = fifo_engine.execute(&bp.plan).makespan;
+                let repeat = fifo_engine.execute(&bp.plan).makespan;
+                let fast = fifo_engine.makespan_ns(&bp.plan);
+                assert_eq!(implicit, explicit, "{name} {} {bytes}B", algo.name());
+                assert_eq!(implicit, repeat, "{name} {} {bytes}B", algo.name());
+                assert_eq!(implicit, fast, "{name} {} {bytes}B", algo.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn fairshare_grid_is_deterministic_and_keeps_plans_valid() {
+    // across the same grid: the fair-share engine is deterministic
+    // (fresh engines agree, repeats agree, makespan-only agrees) and
+    // the executed schedule still satisfies every collective invariant
+    // (delivery, causality, dataflow) — the DAG semantics are untouched
+    for (name, cluster) in &grid_topologies() {
+        let n = cluster.n_gpus();
+        let mut comm = Comm::new(cluster);
+        let mut engine = Engine::with_model(cluster, LinkModel::FairShare);
+        for algo in &grid_algorithms() {
+            for bytes in [4u64, 64 << 10, 16 << 20] {
+                let spec = CollectiveSpec::collective(algo.kind(), 0, n, bytes);
+                let bp = collectives::plan(algo, &mut comm, &spec);
+                let result = engine.execute(&bp.plan);
+                collectives::validate::validate(&bp, &result).unwrap_or_else(|e| {
+                    panic!("{name} {} {bytes}B invalid under fair share: {e}", algo.name())
+                });
+                let mut fresh = Engine::with_model(cluster, LinkModel::FairShare);
+                assert_eq!(
+                    result.makespan,
+                    fresh.execute(&bp.plan).makespan,
+                    "{name} {} {bytes}B nondeterministic",
+                    algo.name()
+                );
+                assert_eq!(
+                    result.makespan,
+                    engine.makespan_ns(&bp.plan),
+                    "{name} {} {bytes}B makespan-only diverged",
+                    algo.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fairshare_tuned_selector_round_trips_through_persist() {
+    // a fair-share-tuned table keeps its model tag through the JSON
+    // artifact, so a selector rebuilt from disk still knows which engine
+    // it should dispatch for
+    let cluster = presets::kesch(1, 4);
+    let sel = Selector::tuned_with_model(&cluster, Some(2), LinkModel::FairShare);
+    assert_eq!(sel.link_model(), LinkModel::FairShare);
+    let json = gdrbcast::tuning::persist::to_json(sel.table());
+    let back = gdrbcast::tuning::persist::from_json(&json).unwrap();
+    assert_eq!(back.link_model, LinkModel::FairShare);
+    let restored = Selector::from_table(back);
+    for bytes in [4u64, 1 << 20, 32 << 20] {
+        assert_eq!(restored.algorithm(bytes), sel.algorithm(bytes));
+    }
+}
