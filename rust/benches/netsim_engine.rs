@@ -7,11 +7,11 @@
 //!
 //! `cargo bench --bench netsim_engine`
 
-use gdrbcast::bench::harness::{link_models_from_env, Bencher};
+use gdrbcast::bench::harness::{link_models_from_env, one_shot_row, Bencher};
 use gdrbcast::collectives::{self, Algorithm, BcastSpec};
 use gdrbcast::comm::Comm;
-use gdrbcast::netsim::Engine;
-use gdrbcast::topology::presets;
+use gdrbcast::netsim::{Engine, LinkModel, OpId, Plan, SimOp};
+use gdrbcast::topology::{presets, Cluster};
 
 fn main() {
     let mut bencher = Bencher::new();
@@ -56,6 +56,43 @@ fn main() {
         }
     }
 
+    // fair-share event throughput: the incremental max-min solver vs the
+    // full-recompute reference, one engine flipped via
+    // set_full_recompute. Per-node chain broadcasts keep the flow
+    // components disjoint across nodes, so the incremental ripple stays
+    // local while the reference re-levels everything on every event.
+    let ev_plan = per_node_chain_plan(&cluster, 8, 16, 16, 1 << 20);
+    let events = 2 * ev_plan.len();
+    let mut en = Engine::with_model(&cluster, LinkModel::FairShare);
+    en.set_full_recompute(false);
+    let r = bencher.bench("engine_events/kesch8x16/incremental", || {
+        en.makespan_ns(&ev_plan)
+    });
+    let inc_ns = r.per_iter.mean;
+    en.set_full_recompute(true);
+    let r = bencher.bench("engine_events/kesch8x16/full", || en.makespan_ns(&ev_plan));
+    let full_ns = r.per_iter.mean;
+    let extra = vec![
+        one_shot_row(
+            "engine_events/kesch8x16/fairshare_events_per_sec",
+            events as f64 / (inc_ns / 1e9),
+        ),
+        one_shot_row(
+            "engine_events/kesch8x16/fairshare_full_events_per_sec",
+            events as f64 / (full_ns / 1e9),
+        ),
+        one_shot_row(
+            "engine_events/kesch8x16_incremental_vs_full",
+            full_ns / inc_ns.max(1.0),
+        ),
+    ];
+    println!(
+        "fair-share events kesch(8x16): {:.2}M ev/s incremental vs {:.2}M ev/s full ({:.2}x)",
+        events as f64 / (inc_ns / 1e9) / 1e6,
+        events as f64 / (full_ns / 1e9) / 1e6,
+        full_ns / inc_ns.max(1.0)
+    );
+
     // full figure-sweep budget check (DESIGN.md: F1+F2 sweep < 10 s)
     let t0 = std::time::Instant::now();
     let sizes = gdrbcast::util::bytes::pow2_sweep(4, 128 << 20);
@@ -74,5 +111,46 @@ fn main() {
         t0.elapsed().as_secs_f64()
     );
 
-    bencher.write_report("netsim_engine").expect("report");
+    bencher
+        .write_report_with("netsim_engine", extra)
+        .expect("report");
+}
+
+/// See `sweep_perf`'s twin: per-node chunked chain broadcasts whose flow
+/// components never cross node boundaries.
+fn per_node_chain_plan(
+    cluster: &Cluster,
+    nodes: usize,
+    gpn: usize,
+    chunks: usize,
+    bytes: u64,
+) -> Plan {
+    let mut plan = Plan::new();
+    for node in 0..nodes {
+        let base = node * gpn;
+        for chunk in 0..chunks {
+            let mut left: Option<OpId> = None;
+            for i in 0..gpn - 1 {
+                let route = cluster
+                    .route(
+                        cluster.rank_device(base + i),
+                        cluster.rank_device(base + i + 1),
+                    )
+                    .expect("intra-node route");
+                let id = plan.push(
+                    SimOp::Transfer {
+                        route,
+                        bytes: bytes + (chunk as u64) * 65536,
+                        overhead_ns: 1000,
+                        issue_ns: 1000,
+                        bw_cap: None,
+                    },
+                    left,
+                    None,
+                );
+                left = Some(id);
+            }
+        }
+    }
+    plan
 }

@@ -40,6 +40,11 @@ impl CollectiveTemplate {
     /// Rescale the held plan to a new message size. Returns `false` —
     /// the instance is torn and must be discarded — when an op crosses
     /// its mechanism size class (see `netsim::transfer::rescale`).
+    /// Under the SoA plan layout a rescale rewrites only the `bytes`
+    /// column (transfer rows, per their [`ByteRole`]); ends, overheads,
+    /// issue costs, caps, deps and labels are never touched, so the
+    /// plan's structure — and the engine's CSR scratch reuse — survive
+    /// every hit (DESIGN.md §SoA plan layout).
     pub fn rescale(&mut self, bytes: u64, classify: impl Fn(u64) -> u8) -> bool {
         if transfer::rescale(&mut self.cp.plan, &self.roles, bytes, classify) {
             self.cp.spec.bytes = bytes;

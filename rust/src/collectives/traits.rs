@@ -8,7 +8,7 @@
 //! causality. `BcastSpec`/`BcastPlan` remain as thin aliases so the
 //! original broadcast builders read unchanged.
 
-use crate::netsim::{OpId, Plan, SimOp};
+use crate::netsim::{OpEnd, OpId, Plan};
 use crate::topology::{Cluster, DeviceId};
 
 /// Which collective operation a spec describes.
@@ -203,13 +203,13 @@ impl CollectivePlan {
     pub fn rank_entry_ops(&self, cluster: &Cluster) -> Vec<Vec<OpId>> {
         let n = self.spec.n_ranks;
         let mut out = vec![Vec::new(); n];
-        for (id, op) in self.plan.ops().iter().enumerate() {
-            if !op.deps.is_empty() {
+        for id in 0..self.plan.len() {
+            if !self.plan.deps[id].is_empty() {
                 continue;
             }
-            let src = match &op.op {
-                SimOp::Transfer { route, .. } => cluster.route_meta(*route).src,
-                SimOp::Delay { dev, .. } => *dev,
+            let src = match self.plan.ends[id] {
+                OpEnd::Route(route) => cluster.route_meta(route).src,
+                OpEnd::Dev(dev) => dev,
             };
             match rank_of(cluster, src) {
                 Some(r) if r < n => out[r].push(id),
@@ -232,22 +232,22 @@ impl CollectivePlan {
     pub fn rank_exit_ops(&self, cluster: &Cluster) -> Vec<Vec<OpId>> {
         let n = self.spec.n_ranks;
         let mut has_dependent = vec![false; self.plan.len()];
-        for op in self.plan.ops() {
-            for &d in op.deps.as_slice() {
+        for deps in self.plan.deps.iter() {
+            for &d in deps.as_slice() {
                 has_dependent[d] = true;
             }
         }
         let mut out = vec![Vec::new(); n];
-        for (id, op) in self.plan.ops().iter().enumerate() {
+        for id in 0..self.plan.len() {
             if has_dependent[id] {
                 continue;
             }
-            let rank = match op.label {
+            let rank = match self.plan.labels[id] {
                 Some((r, _)) if r < n => Some(r),
                 _ => {
-                    let dst = match &op.op {
-                        SimOp::Transfer { route, .. } => cluster.route_meta(*route).dst,
-                        SimOp::Delay { dev, .. } => *dev,
+                    let dst = match self.plan.ends[id] {
+                        OpEnd::Route(route) => cluster.route_meta(route).dst,
+                        OpEnd::Dev(dev) => dev,
                     };
                     rank_of(cluster, dst).filter(|&r| r < n)
                 }
@@ -437,7 +437,7 @@ mod tests {
                 assert!(ops.is_empty(), "rank {r} must have no entries");
             }
             for &id in ops {
-                assert!(bp.plan.ops()[id].deps.is_empty());
+                assert!(bp.plan.deps[id].is_empty());
             }
         }
         // exits: the tail rank's receptions — the chain rooted at 1
@@ -449,7 +449,7 @@ mod tests {
                 assert!(ops.is_empty(), "rank {r} must have no exits");
             }
             for &id in ops {
-                let (rank, _) = bp.plan.ops()[id].label.expect("tail receptions are labelled");
+                let (rank, _) = bp.plan.labels[id].expect("tail receptions are labelled");
                 assert_eq!(rank, 0);
             }
         }

@@ -38,8 +38,8 @@ fn validate_broadcast(bp: &CollectivePlan, result: &ExecResult) -> Result<(), St
 
     // uniqueness + coverage from labels
     let mut seen: HashMap<(usize, usize), usize> = HashMap::new();
-    for (id, op) in bp.plan.ops.iter().enumerate() {
-        if let Some((rank, chunk)) = op.label {
+    for (id, label) in bp.plan.labels.iter().enumerate() {
+        if let Some((rank, chunk)) = *label {
             if rank >= spec.n_ranks {
                 return Err(format!("delivery to out-of-range rank {rank}"));
             }
@@ -152,8 +152,8 @@ fn validate_dataflow(bp: &CollectivePlan, result: &ExecResult) -> Result<(), Str
 
     // labelled deliveries must be unique, as in the broadcast validator
     let mut seen_labels: HashMap<(usize, usize), usize> = HashMap::new();
-    for (id, op) in bp.plan.ops.iter().enumerate() {
-        if let Some((rank, chunk)) = op.label {
+    for (id, label) in bp.plan.labels.iter().enumerate() {
+        if let Some((rank, chunk)) = *label {
             if rank >= n || chunk >= k {
                 return Err(format!("delivery label ({rank}, {chunk}) out of range"));
             }
@@ -341,7 +341,7 @@ mod tests {
         let mut bp = crate::collectives::chain::plan(&mut comm, &spec);
         // sabotage: drop the final edge's label (set_label keeps the
         // memoized deliveries map in sync)
-        let last = bp.plan.ops.len() - 1;
+        let last = bp.plan.len() - 1;
         bp.plan.set_label(last, None);
         let result = engine.execute(&bp.plan);
         assert!(validate(&bp, &result).is_err());
@@ -356,7 +356,7 @@ mod tests {
         let mut bp = crate::collectives::chain::plan(&mut comm, &spec);
         // sabotage: remove the dependency of the second hop so rank 1
         // "forwards" before receiving
-        bp.plan.ops[1].deps = crate::netsim::Deps::none();
+        bp.plan.deps[1] = crate::netsim::Deps::none();
         let result = engine.execute(&bp.plan);
         let err = validate(&bp, &result).unwrap_err();
         assert!(err.contains("causality"), "{err}");

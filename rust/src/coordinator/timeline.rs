@@ -473,15 +473,9 @@ mod tests {
         assert_eq!(plan.len(), 6);
         for per_rank in &ops {
             // layer 2 runs first (no deps), layer 0 last
-            assert!(plan.ops()[per_rank[2]].deps.is_empty());
-            assert_eq!(
-                plan.ops()[per_rank[1]].deps.as_slice(),
-                &[per_rank[2]]
-            );
-            assert_eq!(
-                plan.ops()[per_rank[0]].deps.as_slice(),
-                &[per_rank[1]]
-            );
+            assert!(plan.deps[per_rank[2]].is_empty());
+            assert_eq!(plan.deps[per_rank[1]].as_slice(), &[per_rank[2]]);
+            assert_eq!(plan.deps[per_rank[0]].as_slice(), &[per_rank[1]]);
         }
         // the chain alone costs the summed compute
         let mut engine = Engine::new(&cluster);

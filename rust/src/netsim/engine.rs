@@ -11,9 +11,10 @@
 //!   serialize back-to-back;
 //! * [`LinkModel::FairShare`] — in-flight transfers are *flows* that
 //!   progressively fill shared links: per-link active-flow sets determine
-//!   max-min fair rates, recomputed on every flow arrival/departure
-//!   event ([`super::fairshare`]). Deps, delays, labels and deliveries
-//!   behave identically; only bandwidth sharing differs.
+//!   max-min fair rates, recomputed (incrementally — see DESIGN.md
+//!   §Incremental water-filling) on every flow arrival/departure event
+//!   ([`super::fairshare`]). Deps, delays, labels and deliveries behave
+//!   identically; only bandwidth sharing differs.
 //!
 //! Both paths are deterministic by construction.
 //!
@@ -26,14 +27,22 @@
 //! copy entirely. The ready set is an indexed two-level bucket queue
 //! ([`super::queue::ReadyQueue`]) — ready times are monotone under list
 //! scheduling, so the former `BinaryHeap`'s per-op `O(log n)` was the
-//! last superlinear cost on the makespan-only path.
+//! last superlinear cost on the makespan-only path. Both loops drain the
+//! queue in whole same-instant *batches*
+//! ([`super::queue::ReadyQueue::pop_ready_batch`]); a zero-duration op
+//! that releases a same-instant dependent splices it into the undrained
+//! batch tail by op id, which reproduces the one-at-a-time `(t, id)` pop
+//! order exactly. The execute loops stream the plan's SoA columns
+//! (`ends`/`bytes`/`overheads`/`issues`/`bw_caps`/`deps`) rather than
+//! reconstructing per-op structs.
 
 use crate::topology::Cluster;
 
 use super::fairshare::{FairShareScratch, Flow, LinkModel};
 use super::queue::ReadyQueue;
 use super::time::{tx_ns, SimTime, UNREACHABLE_NS};
-use super::transfer::{OpId, Plan, SimOp};
+use super::trace::FlowEvent;
+use super::transfer::{OpEnd, OpId, Plan};
 
 /// Execution outcome: per-op timestamps plus the makespan.
 #[derive(Debug, Clone)]
@@ -91,6 +100,8 @@ pub struct Engine<'c> {
     start: Vec<SimTime>,
     done: Vec<SimTime>,
     ready: ReadyQueue,
+    /// Same-instant drain buffer for [`ReadyQueue::pop_ready_batch`].
+    batch: Vec<OpId>,
     /// Fair-share flow set + water-filling scratch (unused under FIFO).
     fs: FairShareScratch,
 }
@@ -117,6 +128,7 @@ impl<'c> Engine<'c> {
             start: Vec::new(),
             done: Vec::new(),
             ready: ReadyQueue::new(),
+            batch: Vec::new(),
             fs: FairShareScratch::new(cluster.n_links()),
         }
     }
@@ -130,10 +142,25 @@ impl<'c> Engine<'c> {
         self.model
     }
 
+    /// Force (or un-force) the fair-share solver's full-recompute
+    /// reference mode, overriding the `FAIRSHARE_FULL_RECOMPUTE`
+    /// environment default — the `engine_events` benches measure both
+    /// modes in one process to report the incremental speedup.
+    pub fn set_full_recompute(&mut self, on: bool) {
+        self.fs.set_full_recompute(on);
+    }
+
+    /// `(incremental, full)` fair-share rate-solve counts since this
+    /// engine was built — lets tests and benches confirm which solver
+    /// path actually ran.
+    pub fn fairshare_solve_counts(&self) -> (u64, u64) {
+        self.fs.solve_counts()
+    }
+
     /// Execute a plan starting at virtual time 0, returning per-op
     /// timestamps.
     pub fn execute(&mut self, plan: &Plan) -> ExecResult {
-        let makespan = self.run(plan, true);
+        let makespan = self.run(plan, true, None);
         ExecResult {
             start: self.start.clone(),
             done: self.done.clone(),
@@ -141,14 +168,36 @@ impl<'c> Engine<'c> {
         }
     }
 
+    /// [`Engine::execute`], additionally recording a [`FlowEvent`] every
+    /// time a fair-share flow's max-min rate changes (admission,
+    /// contention shifts, departures). Under [`LinkModel::Fifo`] there
+    /// are no flows and the event list comes back empty.
+    pub fn execute_with_flow_trace(&mut self, plan: &Plan) -> (ExecResult, Vec<FlowEvent>) {
+        let mut events = Vec::new();
+        let makespan = self.run(plan, true, Some(&mut events));
+        (
+            ExecResult {
+                start: self.start.clone(),
+                done: self.done.clone(),
+                makespan,
+            },
+            events,
+        )
+    }
+
     /// Execute a plan and return only its makespan — the sweep hot path.
     /// Skips per-op timestamp bookkeeping and performs no allocations
     /// beyond scratch growth on the first (largest) plan.
     pub fn makespan_ns(&mut self, plan: &Plan) -> SimTime {
-        self.run(plan, false)
+        self.run(plan, false, None)
     }
 
-    fn run(&mut self, plan: &Plan, record: bool) -> SimTime {
+    fn run(
+        &mut self,
+        plan: &Plan,
+        record: bool,
+        flow_trace: Option<&mut Vec<FlowEvent>>,
+    ) -> SimTime {
         debug_assert_eq!(
             self.generation,
             self.cluster.routes().generation(),
@@ -167,15 +216,15 @@ impl<'c> Engine<'c> {
         self.link_free.iter_mut().for_each(|t| *t = 0);
         self.dev_free.iter_mut().for_each(|t| *t = 0);
 
-        let n = plan.ops.len();
+        let n = plan.len();
         // CSR reverse-dependency graph: dep_offsets[d]..dep_offsets[d+1]
         // indexes dep_targets with the ops depending on d
         self.indegree.clear();
         self.indegree.resize(n, 0);
         self.dep_offsets.clear();
         self.dep_offsets.resize(n + 1, 0);
-        for op in plan.ops.iter() {
-            for &d in op.deps.as_slice() {
+        for deps in plan.deps.iter() {
+            for &d in deps.as_slice() {
                 self.dep_offsets[d + 1] += 1;
             }
         }
@@ -187,9 +236,9 @@ impl<'c> Engine<'c> {
         self.dep_targets.resize(total_deps, 0);
         self.cursor.clear();
         self.cursor.extend_from_slice(&self.dep_offsets[..n]);
-        for (id, op) in plan.ops.iter().enumerate() {
-            self.indegree[id] = op.deps.len() as u32;
-            for &d in op.deps.as_slice() {
+        for (id, deps) in plan.deps.iter().enumerate() {
+            self.indegree[id] = deps.len() as u32;
+            for &d in deps.as_slice() {
                 self.dep_targets[self.cursor[d] as usize] = id;
                 self.cursor[d] += 1;
             }
@@ -213,7 +262,7 @@ impl<'c> Engine<'c> {
 
         let (processed, makespan) = match self.model {
             LinkModel::Fifo => self.run_fifo(plan, record),
-            LinkModel::FairShare => self.run_fairshare(plan, record),
+            LinkModel::FairShare => self.run_fairshare(plan, record, flow_trace),
         };
         assert_eq!(
             processed, n,
@@ -223,21 +272,32 @@ impl<'c> Engine<'c> {
         makespan
     }
 
-    /// The FIFO list-scheduling loop: every popped op resolves its
-    /// start/completion immediately against the link/device free times.
+    /// The FIFO list-scheduling loop: the queue is drained one
+    /// same-instant batch at a time; every op resolves its
+    /// start/completion immediately against the link/device free times,
+    /// and a zero-duration op's same-instant dependents splice into the
+    /// batch's undrained tail (id order), reproducing the one-at-a-time
+    /// pop order exactly.
     fn run_fifo(&mut self, plan: &Plan, record: bool) -> (usize, SimTime) {
         let mut processed = 0usize;
         let mut makespan: SimTime = 0;
-        while let Some((ready, id)) = self.ready.pop() {
-            processed += 1;
-            let (s, d) = self.run_op(&plan.ops[id].op, ready);
-            if record {
-                self.start[id] = s;
-                self.done[id] = d;
+        let mut batch = std::mem::take(&mut self.batch);
+        while let Some(t) = self.ready.pop_ready_batch(&mut batch) {
+            let mut i = 0;
+            while i < batch.len() {
+                let id = batch[i];
+                i += 1;
+                processed += 1;
+                let (s, d) = self.run_op(plan, id, t);
+                if record {
+                    self.start[id] = s;
+                    self.done[id] = d;
+                }
+                makespan = makespan.max(d);
+                self.release_dependents_batched(id, d, t, &mut batch, i);
             }
-            makespan = makespan.max(d);
-            self.release_dependents(id, d);
         }
+        self.batch = batch;
         (processed, makespan)
     }
 
@@ -248,7 +308,12 @@ impl<'c> Engine<'c> {
     /// Delays and local copies resolve immediately at their arrival —
     /// their device serialization is rate-independent. See DESIGN.md
     /// §Contention models for the event-rate-recompute algorithm.
-    fn run_fairshare(&mut self, plan: &Plan, record: bool) -> (usize, SimTime) {
+    fn run_fairshare(
+        &mut self,
+        plan: &Plan,
+        record: bool,
+        mut flow_trace: Option<&mut Vec<FlowEvent>>,
+    ) -> (usize, SimTime) {
         /// A flow is drained when this close to zero bytes remain —
         /// covers the float noise of `remaining -= rate · dt` round
         /// trips (payloads are integer bytes, so sub-milli-byte residue
@@ -272,61 +337,68 @@ impl<'c> Engine<'c> {
         // Exact at normal scales, where `now.round() >= last_admit`
         // always holds and the clamp is a no-op.
         let mut last_admit: SimTime = 0;
-        self.fs.flows.clear();
+        self.fs.reset();
+        let mut batch = std::mem::take(&mut self.batch);
         loop {
-            // 1) admit every op due at the current instant
+            // 1) admit every op due at the current instant, one
+            //    same-ready-time batch at a time
             loop {
-                let Some((t, id)) = self.ready.peek() else { break };
-                if (t as f64) > now {
-                    break;
+                match self.ready.peek() {
+                    Some((t, _)) if (t as f64) <= now => {}
+                    _ => break,
                 }
-                let _ = self.ready.pop();
-                processed += 1;
+                let t = self
+                    .ready
+                    .pop_ready_batch(&mut batch)
+                    .expect("peeked entry vanished");
                 last_admit = last_admit.max(t);
-                let planned = &plan.ops[id];
-                let flow = match &planned.op {
-                    SimOp::Transfer {
-                        route,
-                        bytes,
-                        overhead_ns,
-                        bw_cap,
-                        ..
-                    } => {
-                        let meta = cluster.route_meta(*route);
-                        if meta.hop_len == 0 {
-                            None // local copy: resolves like a Delay below
-                        } else {
-                            Some(Flow {
-                                op: id,
-                                route: *route,
-                                remaining: *bytes as f64,
-                                rate: 0.0,
-                                cap: bw_cap.unwrap_or(f64::INFINITY),
-                                fixed: false,
-                                fin: 0.0,
-                                overhead_ns: *overhead_ns,
-                                latency_ns: meta.latency_ns,
-                            })
+                let mut i = 0;
+                while i < batch.len() {
+                    let id = batch[i];
+                    i += 1;
+                    processed += 1;
+                    let joins = match plan.ends[id] {
+                        OpEnd::Route(route) => {
+                            let meta = cluster.route_meta(route);
+                            if meta.hop_len == 0 {
+                                None // local copy: resolves like a Delay below
+                            } else {
+                                Some((route, meta.latency_ns))
+                            }
                         }
-                    }
-                    SimOp::Delay { .. } => None,
-                };
-                match flow {
-                    Some(f) => {
-                        if record {
-                            self.start[id] = t;
+                        OpEnd::Dev(_) => None,
+                    };
+                    match joins {
+                        Some((route, latency_ns)) => {
+                            if record {
+                                self.start[id] = t;
+                            }
+                            self.fs.add(
+                                cluster,
+                                Flow {
+                                    op: id,
+                                    route,
+                                    remaining: plan.bytes[id] as f64,
+                                    rate: 0.0,
+                                    cap: plan.bw_caps[id],
+                                    fixed: false,
+                                    fin: 0.0,
+                                    last_rate: -1.0,
+                                    overhead_ns: plan.overheads[id],
+                                    latency_ns,
+                                },
+                            );
+                            dirty = true;
                         }
-                        self.fs.flows.push(f);
-                        dirty = true;
-                    }
-                    None => {
-                        let (s, d) = self.run_op(&planned.op, t);
-                        if record {
-                            self.start[id] = s;
-                            self.done[id] = d;
+                        None => {
+                            let (s, d) = self.run_op(plan, id, t);
+                            if record {
+                                self.start[id] = s;
+                                self.done[id] = d;
+                            }
+                            makespan = makespan.max(d);
+                            self.release_dependents_batched(id, d, t, &mut batch, i);
                         }
-                        makespan = makespan.max(d);
-                        self.release_dependents(id, d);
                     }
                 }
             }
@@ -334,6 +406,19 @@ impl<'c> Engine<'c> {
             if dirty {
                 self.fs.recompute_rates(cluster);
                 dirty = false;
+                if let Some(events) = flow_trace.as_deref_mut() {
+                    let t_ns = (now.round() as SimTime).max(last_admit);
+                    for f in self.fs.flows.iter_mut() {
+                        if f.rate != f.last_rate {
+                            events.push(FlowEvent {
+                                t_ns,
+                                op: f.op,
+                                rate: f.rate,
+                            });
+                            f.last_rate = f.rate;
+                        }
+                    }
+                }
             }
             // 3) the next event: earliest pending arrival vs earliest
             //    predicted flow departure under the current rates
@@ -390,7 +475,7 @@ impl<'c> Engine<'c> {
             let mut i = 0;
             while i < self.fs.flows.len() {
                 if self.fs.flows[i].remaining <= DRAIN_EPS || self.fs.flows[i].fin <= now {
-                    let f = self.fs.flows.swap_remove(i);
+                    let f = self.fs.remove(cluster, i);
                     let e = (now.round() as SimTime).max(last_admit);
                     let d = e.saturating_add(f.overhead_ns).saturating_add(f.latency_ns);
                     if record {
@@ -404,6 +489,7 @@ impl<'c> Engine<'c> {
                 }
             }
         }
+        self.batch = batch;
         (processed, makespan)
     }
 
@@ -423,24 +509,59 @@ impl<'c> Engine<'c> {
         }
     }
 
-    /// Run one op at its ready time; returns (actual start, completion).
-    fn run_op(&mut self, op: &SimOp, ready: SimTime) -> (SimTime, SimTime) {
-        match op {
-            SimOp::Delay { dev, dur_ns } => {
+    /// [`Engine::release_dependents`] from inside a same-instant batch: a
+    /// dependent whose final ready time *is* the batch instant (released
+    /// by a zero-duration parent) splices into the batch's undrained
+    /// tail in id order — exactly where a one-at-a-time pop loop would
+    /// have dequeued it — instead of round-tripping through the queue.
+    /// (A dependent's id always exceeds its parent's, and the tail is
+    /// sorted ascending, so the splice preserves `(t, id)` pop order.)
+    /// Later ready times go through the queue as usual.
+    fn release_dependents_batched(
+        &mut self,
+        id: OpId,
+        d: SimTime,
+        batch_t: SimTime,
+        batch: &mut Vec<OpId>,
+        cursor: usize,
+    ) {
+        let lo = self.dep_offsets[id] as usize;
+        let hi = self.dep_offsets[id + 1] as usize;
+        for i in lo..hi {
+            let dep = self.dep_targets[i];
+            self.ready_time[dep] = self.ready_time[dep].max(d);
+            self.indegree[dep] -= 1;
+            if self.indegree[dep] == 0 {
+                let rt = self.ready_time[dep];
+                if rt == batch_t {
+                    let at = cursor + batch[cursor..].partition_point(|&e| e < dep);
+                    batch.insert(at, dep);
+                } else {
+                    self.ready.push(rt, dep);
+                }
+            }
+        }
+    }
+
+    /// Run op `id` at its ready time, streaming the plan's columns;
+    /// returns (actual start, completion).
+    fn run_op(&mut self, plan: &Plan, id: OpId, ready: SimTime) -> (SimTime, SimTime) {
+        match plan.ends[id] {
+            OpEnd::Dev(dev) => {
+                // a Delay: its duration lives in the overheads column
                 let s = ready.max(self.dev_free[dev.0]);
-                let d = s + dur_ns;
+                let d = s + plan.overheads[id];
                 self.dev_free[dev.0] = d;
                 (s, d)
             }
-            SimOp::Transfer {
-                route,
-                bytes,
-                overhead_ns,
-                issue_ns,
-                bw_cap,
-            } => {
+            OpEnd::Route(route) => {
                 let cluster = self.cluster;
-                let meta = cluster.route_meta(*route);
+                let meta = cluster.route_meta(route);
+                let bytes = plan.bytes[id];
+                let overhead_ns = plan.overheads[id];
+                let issue_ns = plan.issues[id];
+                // INFINITY = uncapped; `min` with it is exact identity
+                let cap = plan.bw_caps[id];
                 if meta.hop_len == 0 {
                     // local (same-device) copy: costs its overhead and
                     // serialises on the device like `Delay` does. (It
@@ -452,39 +573,33 @@ impl<'c> Engine<'c> {
                     // duration.
                     let dev = meta.src;
                     let s = ready.max(self.dev_free[dev.0]);
-                    let d = s.saturating_add(*overhead_ns);
-                    self.dev_free[dev.0] = s.saturating_add((*overhead_ns).max(*issue_ns));
+                    let d = s.saturating_add(overhead_ns);
+                    self.dev_free[dev.0] = s.saturating_add(overhead_ns.max(issue_ns));
                     return (s, d);
                 }
-                let hops = cluster.route_hops(*route);
+                let hops = cluster.route_hops(route);
                 // start after every link on the path is free (cut-through:
                 // the message occupies the whole path simultaneously)
                 let mut s = ready;
                 for &h in hops.iter() {
                     s = s.max(self.link_free[h.0]);
                 }
-                let eff_bw = match bw_cap {
-                    Some(cap) => meta.bottleneck_bw.min(*cap),
-                    None => meta.bottleneck_bw,
-                };
+                let eff_bw = meta.bottleneck_bw.min(cap);
                 // saturating sums: `tx_ns` reports a dead link as the
                 // UNREACHABLE_NS sentinel, which plain `+` would overflow
-                let tx = tx_ns(*bytes, eff_bw);
+                let tx = tx_ns(bytes, eff_bw);
                 // Each link is busy for the transfer's *issue* cost plus
                 // its own transmission time. MPI sends set issue == t_s,
                 // which makes back-to-back chunks on one link cost
                 // (t_s + C/B) each — the pipelining model of the paper's
                 // Eq. (5).
                 for &h in hops.iter() {
-                    let link_bw = match bw_cap {
-                        Some(cap) => cluster.link(h).bandwidth.min(*cap),
-                        None => cluster.link(h).bandwidth,
-                    };
+                    let link_bw = cluster.link(h).bandwidth.min(cap);
                     self.link_free[h.0] =
-                        s.saturating_add(*issue_ns).saturating_add(tx_ns(*bytes, link_bw));
+                        s.saturating_add(issue_ns).saturating_add(tx_ns(bytes, link_bw));
                 }
                 let d = s
-                    .saturating_add(*overhead_ns)
+                    .saturating_add(overhead_ns)
                     .saturating_add(meta.latency_ns)
                     .saturating_add(tx);
                 (s, d)
@@ -496,7 +611,7 @@ impl<'c> Engine<'c> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::netsim::transfer::{Deps, Plan};
+    use crate::netsim::transfer::{Deps, Plan, SimOp};
     use crate::topology::presets::flat;
 
     fn transfer_plan(cluster: &Cluster, pairs: &[(usize, usize, u64)]) -> Plan {
@@ -665,7 +780,7 @@ mod tests {
             Deps::none(),
             None,
         );
-        plan.ops[0].deps = Deps::one(0);
+        plan.deps[0] = Deps::one(0);
         let mut e = Engine::new(&c);
         e.execute(&plan);
     }
@@ -966,5 +1081,59 @@ mod tests {
         assert_eq!(full, fast);
         // and interleaving the two paths keeps determinism
         assert_eq!(e.execute(&plan).makespan, full);
+    }
+
+    #[test]
+    fn fairshare_full_recompute_mode_matches_incremental() {
+        // the reference mode must agree on makespans (the incremental
+        // solver is bit-identical, not just approximately right), and
+        // disjoint per-pair contention must actually take the
+        // incremental path
+        let c = flat(8);
+        let pairs: Vec<(usize, usize, u64)> = (0..4)
+            .map(|p| (2 * p, 2 * p + 1, 4_000_000 + (p as u64) * 1_000_000))
+            .collect();
+        // interleave a second wave on the same sources so arrivals and
+        // departures ripple within each pair's component
+        let mut plan = transfer_plan(&c, &pairs);
+        for p in 0..4usize {
+            let route = c
+                .route(c.rank_device(2 * p), c.rank_device((2 * p + 3) % 8))
+                .unwrap();
+            plan.push(
+                SimOp::Transfer {
+                    route,
+                    bytes: 2_000_000,
+                    overhead_ns: 1000,
+                    issue_ns: 1000,
+                    bw_cap: None,
+                },
+                Deps::one(p),
+                None,
+            );
+        }
+        let mut inc = Engine::with_model(&c, LinkModel::FairShare);
+        inc.set_full_recompute(false);
+        let mut full = Engine::with_model(&c, LinkModel::FairShare);
+        full.set_full_recompute(true);
+        let a = inc.execute(&plan);
+        let b = full.execute(&plan);
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.done, b.done);
+        let (i_inc, _) = inc.fairshare_solve_counts();
+        assert!(i_inc > 0, "incremental path never engaged");
+        let (f_inc, f_full) = full.fairshare_solve_counts();
+        assert_eq!(f_inc, 0, "reference mode must always solve fully");
+        assert!(f_full > 0);
+    }
+
+    #[test]
+    fn flow_trace_is_empty_under_fifo() {
+        let c = flat(3);
+        let mut e = Engine::new(&c);
+        let plan = transfer_plan(&c, &[(0, 1, 1000), (0, 2, 1000)]);
+        let (r, events) = e.execute_with_flow_trace(&plan);
+        assert!(events.is_empty());
+        assert_eq!(r.makespan, e.execute(&plan).makespan);
     }
 }

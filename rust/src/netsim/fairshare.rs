@@ -15,10 +15,35 @@
 //! * [`Flow`] — one in-flight transfer (remaining bytes, current rate,
 //!   per-flow cap);
 //! * [`FairShareScratch`] — reusable per-engine scratch whose
-//!   [`FairShareScratch::recompute_rates`] runs the progressive-filling
-//!   (water-filling) allocation on every flow arrival/departure event;
+//!   [`FairShareScratch::recompute_rates`] re-solves the max-min
+//!   allocation on every flow arrival/departure event, *incrementally*
+//!   where possible (see below);
 //! * [`maxmin_rates`] — a standalone entry point for property tests
 //!   (link-capacity conservation) and diagnostics.
+//!
+//! ## Incremental recomputation (DESIGN.md §Incremental water-filling)
+//!
+//! A full progressive-filling pass costs O(rounds × flows × hops) and the
+//! engine triggers one per arrival/departure — quadratic in concurrent
+//! flows over a workload's lifetime. But an arrival/departure can only
+//! change the rates of flows in the *same connected component* of the
+//! flow↔link sharing graph: the water-filling solution decomposes
+//! exactly (and, with care about iteration order, *bit-exactly*) across
+//! components, because a flow's assigned rate is its own tightest
+//! constraint at fix time and flows of disjoint components never share a
+//! constraint. [`FairShareScratch::add`]/[`FairShareScratch::remove`]
+//! therefore record the touched links as *seeds*;
+//! [`FairShareScratch::recompute_rates`] grows the affected component
+//! from the seeds (epoch-stamped link/flow marks, no per-event clearing)
+//! and re-runs water-filling over that member set only, leaving every
+//! other flow's rate untouched — those flows' subproblems are unchanged,
+//! so their stored rates are still the full-solve answer (maintained
+//! inductively). It falls back to the full pass when the component
+//! closure doesn't converge quickly ([`MAX_CLOSURE_PASSES`]), when the
+//! members exceed [the fallback threshold](FairShareScratch::recompute_rates)
+//! anyway, or when a hopless flow (which joins no link component) is
+//! added. Debug builds re-run the full solve after every incremental one
+//! and assert bit-identical rates.
 //!
 //! The DAG semantics (deps, delays, labels, deliveries) are identical to
 //! the FIFO path; only *how concurrent transfers share links* differs.
@@ -91,14 +116,41 @@ pub(crate) struct Flow {
     pub fixed: bool,
     /// Predicted drain instant under the current rates (engine scratch).
     pub fin: f64,
+    /// Rate at the last emitted trace event (−1.0 before the first), so
+    /// flow tracing reports only actual rate *changes*. Maintained by the
+    /// engine only when a flow trace is requested.
+    pub last_rate: f64,
     pub overhead_ns: SimTime,
     pub latency_ns: SimTime,
+}
+
+/// Component-closure passes before the incremental path gives up and
+/// falls back to a full solve. Each pass is O(flows × hops); a ripple
+/// that is still growing after this many breadth steps is wide enough
+/// that the full pass costs about the same.
+const MAX_CLOSURE_PASSES: u32 = 8;
+
+/// `true` when `FAIRSHARE_FULL_RECOMPUTE` is set (to anything but `0`)
+/// in the environment: every solve runs the full water-filling pass —
+/// the reference mode the `engine_events` benches use to isolate the
+/// incremental win. Read once per process.
+fn env_full_recompute() -> bool {
+    static FULL: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *FULL.get_or_init(|| {
+        std::env::var_os("FAIRSHARE_FULL_RECOMPUTE").is_some_and(|v| v != "0")
+    })
 }
 
 /// Reusable fair-share scratch hanging off the engine: the active flow
 /// set plus the per-link working state of the water-filling pass. Sized
 /// once per topology; steady-state execution performs no allocations
 /// (the `makespan_ns` contract extends to the fair-share path).
+///
+/// Flow membership must go through [`FairShareScratch::add`] /
+/// [`FairShareScratch::remove`] / [`FairShareScratch::reset`] — they
+/// keep the incremental solver's seed set and per-flow marks in sync
+/// with the flow list. Mutating a flow's `remaining`/`fin` in place
+/// (the engine's drain loop) is fine.
 #[derive(Debug, Default)]
 pub(crate) struct FairShareScratch {
     /// Active (in-flight) flows.
@@ -108,10 +160,33 @@ pub(crate) struct FairShareScratch {
     /// Per-link count of unfixed flows crossing it (sized `n_links`).
     nflows: Vec<u32>,
     /// Links charged by the current pass — reset lazily so a pass costs
-    /// O(active flows × hops), not O(n_links).
+    /// O(members × hops), not O(n_links).
     touched: Vec<LinkId>,
-    /// Per-flow tightest-constraint scratch for one round.
+    /// Per-*member* tightest-constraint scratch for one round (indexed
+    /// by member slot, not flow index).
     lims: Vec<f64>,
+    /// Flow indices the current solve re-rates (the affected component,
+    /// or everyone on the full path).
+    members: Vec<usize>,
+    /// Links on routes of flows added/removed since the last solve —
+    /// the incremental closure grows the affected component from these.
+    /// Link ids, not flow indices, so `remove`'s `swap_remove` cannot
+    /// invalidate them.
+    seeds: Vec<LinkId>,
+    /// Epoch-stamped membership marks (`== epoch` ⇒ in the current
+    /// closure), so starting a solve clears nothing.
+    link_mark: Vec<u64>,
+    flow_mark: Vec<u64>,
+    epoch: u64,
+    /// A hopless flow joined since the last solve: it belongs to no link
+    /// component, so only a full pass can rate it.
+    force_next_full: bool,
+    /// Always run the full pass (env `FAIRSHARE_FULL_RECOMPUTE`, or
+    /// [`FairShareScratch::set_full_recompute`] — the benches' reference
+    /// mode).
+    full_recompute: bool,
+    incremental_solves: u64,
+    full_solves: u64,
 }
 
 impl FairShareScratch {
@@ -122,35 +197,177 @@ impl FairShareScratch {
             nflows: vec![0; n_links],
             touched: Vec::new(),
             lims: Vec::new(),
+            members: Vec::new(),
+            seeds: Vec::new(),
+            link_mark: vec![0; n_links],
+            flow_mark: Vec::new(),
+            epoch: 0,
+            force_next_full: false,
+            full_recompute: env_full_recompute(),
+            incremental_solves: 0,
+            full_solves: 0,
         }
     }
 
     /// `true` when the per-link scratch matches the topology (the engine
     /// mirrors its generation fail-fast on this).
     pub fn sized_for(&self, n_links: usize) -> bool {
-        self.caps.len() == n_links && self.nflows.len() == n_links
+        self.caps.len() == n_links
+            && self.nflows.len() == n_links
+            && self.link_mark.len() == n_links
     }
 
-    /// Recompute every active flow's max-min fair rate by progressive
-    /// filling (water-filling): repeatedly find the tightest constraint —
-    /// a link's `remaining capacity / unfixed flows crossing it`, or a
-    /// flow's own cap — fix every flow attaining it at that rate, charge
-    /// its links, and repeat until all flows are fixed. Each round fixes
-    /// at least the arg-min flow (its limit *is* the round's level, an
-    /// exact comparison between identically computed values), so the pass
-    /// terminates in at most `flows` rounds; cost is
-    /// O(rounds × flows × hops).
+    /// Force (or un-force) the full-recompute reference mode, overriding
+    /// the `FAIRSHARE_FULL_RECOMPUTE` environment default.
+    pub fn set_full_recompute(&mut self, on: bool) {
+        self.full_recompute = on;
+    }
+
+    /// `(incremental, full)` solve counts since construction.
+    pub fn solve_counts(&self) -> (u64, u64) {
+        (self.incremental_solves, self.full_solves)
+    }
+
+    /// Admit a flow. Its route's links seed the next incremental solve;
+    /// a hopless flow (src == dst route) forces the next solve full,
+    /// since it joins no link component.
+    pub fn add(&mut self, cluster: &Cluster, flow: Flow) {
+        {
+            let hops = cluster.route_hops(flow.route);
+            if hops.is_empty() {
+                self.force_next_full = true;
+            } else {
+                self.seeds.extend_from_slice(&hops);
+            }
+        }
+        self.flows.push(flow);
+        self.flow_mark.push(0);
+    }
+
+    /// Retire flow `i` (swap-remove order, mirrored in the mark column).
+    /// Its links seed the next solve so the component it leaves gets
+    /// re-rated.
+    pub fn remove(&mut self, cluster: &Cluster, i: usize) -> Flow {
+        {
+            let hops = cluster.route_hops(self.flows[i].route);
+            self.seeds.extend_from_slice(&hops);
+        }
+        self.flow_mark.swap_remove(i);
+        self.flows.swap_remove(i)
+    }
+
+    /// Drop all flows and pending seeds (a fresh `run`). The lazily-reset
+    /// per-link scratch carries over untouched — the next solve clears
+    /// exactly what the previous pass charged.
+    pub fn reset(&mut self) {
+        self.flows.clear();
+        self.flow_mark.clear();
+        self.seeds.clear();
+        self.force_next_full = false;
+    }
+
+    /// Recompute active flows' max-min fair rates, incrementally when
+    /// the pending arrivals/departures allow it.
+    ///
+    /// Full pass: progressive filling (water-filling) over every flow —
+    /// repeatedly find the tightest constraint (a link's `remaining
+    /// capacity / unfixed flows crossing it`, or a flow's own cap), fix
+    /// every flow attaining it at that rate, charge its links, repeat.
+    /// Each round fixes at least the arg-min flow (its limit *is* the
+    /// round's level, an exact comparison between identically computed
+    /// values), so the pass terminates in at most `flows` rounds.
+    ///
+    /// Incremental pass: grow the affected component from the seed links
+    /// (flows crossing a marked link join and mark their own links, to a
+    /// fixpoint), then water-fill the members only. Falls back to the
+    /// full pass when the closure needs more than [`MAX_CLOSURE_PASSES`]
+    /// growth steps or the members exceed ¾ of the active flows (the
+    /// incremental bookkeeping would cost more than it saves), or when a
+    /// hopless flow arrived. Rates are bit-identical either way: the
+    /// max-min solution decomposes across sharing components, and member
+    /// iteration preserves ascending flow order, so every comparison and
+    /// subtraction sees the same operands in the same sequence as the
+    /// full pass (debug builds assert this after every incremental
+    /// solve).
     pub fn recompute_rates(&mut self, cluster: &Cluster) {
-        // reset the previous pass's per-link charges lazily
+        let n = self.flows.len();
+        if self.full_recompute || self.force_next_full {
+            self.solve_full(cluster);
+            return;
+        }
+        // grow the affected component from the seed links
+        self.members.clear();
+        self.epoch += 1;
+        let e = self.epoch;
+        for &l in &self.seeds {
+            self.link_mark[l.0] = e;
+        }
+        self.seeds.clear();
+        let mut passes = 0;
+        loop {
+            let mut grew = false;
+            for i in 0..n {
+                if self.flow_mark[i] == e {
+                    continue;
+                }
+                let hops = cluster.route_hops(self.flows[i].route);
+                if hops.iter().any(|&h| self.link_mark[h.0] == e) {
+                    self.flow_mark[i] = e;
+                    self.members.push(i);
+                    for &h in hops.iter() {
+                        if self.link_mark[h.0] != e {
+                            self.link_mark[h.0] = e;
+                            grew = true;
+                        }
+                    }
+                }
+            }
+            if !grew {
+                break;
+            }
+            passes += 1;
+            if passes >= MAX_CLOSURE_PASSES {
+                // runaway ripple — the full pass costs about the same
+                self.solve_full(cluster);
+                return;
+            }
+        }
+        if self.members.len() * 4 > n * 3 {
+            self.solve_full(cluster);
+            return;
+        }
+        self.incremental_solves += 1;
+        self.waterfill_members(cluster);
+        #[cfg(debug_assertions)]
+        self.differential_check(cluster);
+    }
+
+    fn solve_full(&mut self, cluster: &Cluster) {
+        self.seeds.clear();
+        self.force_next_full = false;
+        self.members.clear();
+        self.members.extend(0..self.flows.len());
+        self.full_solves += 1;
+        self.waterfill_members(cluster);
+    }
+
+    /// Water-fill the flows listed in `self.members`, leaving every other
+    /// flow's rate untouched. Iterates members in the order they were
+    /// pushed — ascending flow index for the full pass, which makes the
+    /// full pass's arithmetic identical to the historical whole-set
+    /// solver.
+    fn waterfill_members(&mut self, cluster: &Cluster) {
+        // reset the previous pass's per-link charges lazily (invariant:
+        // a link not in `touched` has nflows == 0)
         while let Some(l) = self.touched.pop() {
             self.nflows[l.0] = 0;
         }
-        for f in self.flows.iter_mut() {
-            f.fixed = false;
-            f.rate = 0.0;
-        }
-        for f in self.flows.iter() {
-            for &h in cluster.route_hops(f.route).iter() {
+        for k in 0..self.members.len() {
+            let i = self.members[k];
+            self.flows[i].fixed = false;
+            self.flows[i].rate = 0.0;
+            let route = self.flows[i].route;
+            for &h in cluster.route_hops(route).iter() {
                 if self.nflows[h.0] == 0 {
                     // a zero/negative-bandwidth link contributes zero
                     // capacity: flows crossing it fix at rate 0 and the
@@ -161,14 +378,15 @@ impl FairShareScratch {
                 self.nflows[h.0] += 1;
             }
         }
-        let mut unfixed = self.flows.len();
+        let mut unfixed = self.members.len();
         self.lims.clear();
-        self.lims.resize(self.flows.len(), 0.0);
+        self.lims.resize(self.members.len(), 0.0);
         while unfixed > 0 {
             // the round's water level: the tightest constraint over all
-            // unfixed flows
+            // unfixed members
             let mut level = f64::INFINITY;
-            for (i, f) in self.flows.iter().enumerate() {
+            for k in 0..self.members.len() {
+                let f = &self.flows[self.members[k]];
                 if f.fixed {
                     continue;
                 }
@@ -176,13 +394,14 @@ impl FairShareScratch {
                 for &h in cluster.route_hops(f.route).iter() {
                     lim = lim.min(self.caps[h.0] / self.nflows[h.0] as f64);
                 }
-                self.lims[i] = lim;
+                self.lims[k] = lim;
                 level = level.min(lim);
             }
             if level.is_infinite() {
                 // no finite constraint (trivial/infinite links, uncapped
                 // flows): the remainder drains instantly
-                for f in self.flows.iter_mut() {
+                for k in 0..self.members.len() {
+                    let f = &mut self.flows[self.members[k]];
                     if !f.fixed {
                         f.fixed = true;
                         f.rate = f64::INFINITY;
@@ -190,8 +409,9 @@ impl FairShareScratch {
                 }
                 break;
             }
-            for i in 0..self.flows.len() {
-                if self.flows[i].fixed || self.lims[i] > level {
+            for k in 0..self.members.len() {
+                let i = self.members[k];
+                if self.flows[i].fixed || self.lims[k] > level {
                     continue;
                 }
                 self.flows[i].fixed = true;
@@ -203,6 +423,27 @@ impl FairShareScratch {
                     self.nflows[h.0] -= 1;
                 }
             }
+        }
+    }
+
+    /// Debug-mode differential check: re-run the full pass and assert it
+    /// reproduces the incremental result bit for bit. The full pass
+    /// *overwrites* every rate — if the incremental solve was right this
+    /// is idempotent; if not, the assert fires before the divergence can
+    /// propagate into makespans.
+    #[cfg(debug_assertions)]
+    fn differential_check(&mut self, cluster: &Cluster) {
+        let got: Vec<u64> = self.flows.iter().map(|f| f.rate.to_bits()).collect();
+        self.members.clear();
+        self.members.extend(0..self.flows.len());
+        self.waterfill_members(cluster);
+        for (i, &bits) in got.iter().enumerate() {
+            debug_assert_eq!(
+                bits,
+                self.flows[i].rate.to_bits(),
+                "incremental max-min diverged from the full solve at flow {i} (op {})",
+                self.flows[i].op
+            );
         }
     }
 }
@@ -217,17 +458,21 @@ impl FairShareScratch {
 pub fn maxmin_rates(cluster: &Cluster, flows: &[(RouteId, Option<f64>)]) -> Vec<f64> {
     let mut scratch = FairShareScratch::new(cluster.n_links());
     for (i, &(route, cap)) in flows.iter().enumerate() {
-        scratch.flows.push(Flow {
-            op: i,
-            route,
-            remaining: 1.0,
-            rate: 0.0,
-            cap: cap.unwrap_or(f64::INFINITY),
-            fixed: false,
-            fin: 0.0,
-            overhead_ns: 0,
-            latency_ns: 0,
-        });
+        scratch.add(
+            cluster,
+            Flow {
+                op: i,
+                route,
+                remaining: 1.0,
+                rate: 0.0,
+                cap: cap.unwrap_or(f64::INFINITY),
+                fixed: false,
+                fin: 0.0,
+                last_rate: -1.0,
+                overhead_ns: 0,
+                latency_ns: 0,
+            },
+        );
     }
     scratch.recompute_rates(cluster);
     scratch.flows.iter().map(|f| f.rate).collect()
@@ -339,5 +584,173 @@ mod tests {
         let rates = maxmin_rates(&c, &[(dead, None), (live, None)]);
         assert_eq!(rates[0], 0.0, "dead link must starve its flow");
         assert_eq!(rates[1], 10.0e9, "live flow must be unaffected");
+    }
+
+    fn mk_flow(op: OpId, route: RouteId, cap: Option<f64>) -> Flow {
+        Flow {
+            op,
+            route,
+            remaining: 1.0,
+            rate: 0.0,
+            cap: cap.unwrap_or(f64::INFINITY),
+            fixed: false,
+            fin: 0.0,
+            last_rate: -1.0,
+            overhead_ns: 0,
+            latency_ns: 0,
+        }
+    }
+
+    #[test]
+    fn incremental_arrival_leaves_disjoint_components_alone() {
+        // many disjoint pair-flows, then one more arrival: the solve
+        // must take the incremental path (members ≪ flows) and still
+        // produce the exact full-solve rates
+        let c = flat(12);
+        let mut fs = FairShareScratch::new(c.n_links());
+        fs.set_full_recompute(false);
+        for p in 0..6usize {
+            let r = c
+                .route(c.rank_device(2 * p), c.rank_device(2 * p + 1))
+                .unwrap();
+            fs.add(&c, mk_flow(p, r, None));
+            fs.recompute_rates(&c);
+        }
+        let (inc0, _) = fs.solve_counts();
+        // a 7th flow contending with pair 0's source uplink
+        let r = c.route(c.rank_device(0), c.rank_device(3)).unwrap();
+        fs.add(&c, mk_flow(6, r, None));
+        fs.recompute_rates(&c);
+        let (inc1, _) = fs.solve_counts();
+        assert!(inc1 > inc0, "arrival into a small component must solve incrementally");
+        for f in &fs.flows {
+            let expect = match f.op {
+                // ops 0 and 6 now split device 0's 10 GB/s uplink
+                0 | 6 => 5.0e9,
+                _ => 10.0e9,
+            };
+            assert_eq!(f.rate, expect, "op {}", f.op);
+        }
+        // departures seed the component they leave: retire op 6 (flow
+        // order is swap-remove, find it first)
+        let i6 = fs.flows.iter().position(|f| f.op == 6).unwrap();
+        fs.remove(&c, i6);
+        fs.recompute_rates(&c);
+        for f in &fs.flows {
+            assert_eq!(f.rate, 10.0e9, "op {} after departure", f.op);
+        }
+    }
+
+    /// A line of devices with heterogeneous link speeds: multi-hop BFS
+    /// routes cross several potential bottlenecks.
+    fn chain_cluster(n: usize) -> Cluster {
+        use crate::topology::device::{DeviceKind, NodeId};
+        use crate::topology::link::LinkKind;
+        let mut c = Cluster::new("hetero-chain");
+        let devs: Vec<_> = (0..n)
+            .map(|i| c.add_device(DeviceKind::Gpu, NodeId(0), 0, format!("g{i}")))
+            .collect();
+        for i in 0..n - 1 {
+            // 4, 6, 8, 10, 4, 6, ... GB/s — no uniform bottleneck
+            let bw = (4.0 + 2.0 * ((i % 4) as f64)) * 1.0e9;
+            c.connect_custom(devs[i], devs[i + 1], LinkKind::Ideal, bw, 0);
+        }
+        c
+    }
+
+    #[test]
+    fn incremental_matches_full_on_random_traces() {
+        use crate::util::rng::Rng;
+        let clusters = [flat(8), chain_cluster(9)];
+        for (ci, c) in clusters.iter().enumerate() {
+            // every src→dst route (chain routes are multi-hop)
+            let n_dev = if ci == 0 { 8 } else { 9 };
+            let mut routes = Vec::new();
+            for s in 0..n_dev {
+                for d in 0..n_dev {
+                    if s != d {
+                        let (a, b) = if ci == 0 {
+                            (c.rank_device(s), c.rank_device(d))
+                        } else {
+                            (crate::topology::DeviceId(s), crate::topology::DeviceId(d))
+                        };
+                        routes.push(c.route(a, b).unwrap());
+                    }
+                }
+            }
+            let mut inc = FairShareScratch::new(c.n_links());
+            let mut full = FairShareScratch::new(c.n_links());
+            inc.set_full_recompute(false);
+            full.set_full_recompute(true);
+            let mut rng = Rng::new(0x5eed_0001 + ci as u64);
+            for step in 0..300usize {
+                if inc.flows.is_empty() || rng.next_below(3) > 0 {
+                    let r = routes[rng.range_usize(0, routes.len() - 1)];
+                    let cap = if rng.next_below(4) == 0 {
+                        Some((1 + rng.next_below(8)) as f64 * 0.5e9)
+                    } else {
+                        None
+                    };
+                    inc.add(c, mk_flow(step, r, cap));
+                    full.add(c, mk_flow(step, r, cap));
+                } else {
+                    let i = rng.range_usize(0, inc.flows.len() - 1);
+                    inc.remove(c, i);
+                    full.remove(c, i);
+                }
+                inc.recompute_rates(c);
+                full.recompute_rates(c);
+                assert_eq!(inc.flows.len(), full.flows.len());
+                for (a, b) in inc.flows.iter().zip(full.flows.iter()) {
+                    assert_eq!(a.op, b.op, "flow order diverged at step {step}");
+                    assert_eq!(
+                        a.rate.to_bits(),
+                        b.rate.to_bits(),
+                        "cluster {ci} step {step} op {}: incremental {} vs full {}",
+                        a.op,
+                        a.rate,
+                        b.rate
+                    );
+                }
+            }
+            let (incremental, _) = inc.solve_counts();
+            assert!(incremental > 0, "cluster {ci}: incremental path never taken");
+            let (f_inc, _) = full.solve_counts();
+            assert_eq!(f_inc, 0, "reference scratch must always solve fully");
+        }
+    }
+
+    #[test]
+    fn hopless_flow_forces_a_full_solve_and_gets_its_cap() {
+        // a src == dst route has no links: it can't join a component, so
+        // the next solve must be full and rate it by its own cap
+        let c = flat(4);
+        let d0 = c.rank_device(0);
+        let self_route = c.route(d0, d0).unwrap();
+        let pair = c.route(c.rank_device(2), c.rank_device(3)).unwrap();
+        let mut fs = FairShareScratch::new(c.n_links());
+        fs.set_full_recompute(false);
+        fs.add(&c, mk_flow(0, pair, None));
+        fs.recompute_rates(&c);
+        fs.add(&c, mk_flow(1, self_route, Some(3.0e9)));
+        fs.recompute_rates(&c);
+        assert_eq!(fs.flows[1].rate, 3.0e9);
+        let uncapped = c.route(d0, d0).unwrap();
+        fs.add(&c, mk_flow(2, uncapped, None));
+        fs.recompute_rates(&c);
+        assert_eq!(fs.flows[2].rate, f64::INFINITY);
+    }
+
+    #[test]
+    fn reset_clears_flows_and_pending_seeds() {
+        let c = flat(3);
+        let r01 = c.route(c.rank_device(0), c.rank_device(1)).unwrap();
+        let mut fs = FairShareScratch::new(c.n_links());
+        fs.add(&c, mk_flow(0, r01, None));
+        fs.reset();
+        assert!(fs.flows.is_empty());
+        fs.add(&c, mk_flow(1, r01, None));
+        fs.recompute_rates(&c);
+        assert_eq!(fs.flows[0].rate, 10.0e9);
     }
 }

@@ -25,7 +25,8 @@ pub mod transfer;
 pub use engine::{Engine, ExecResult};
 pub use fairshare::{maxmin_rates, LinkModel};
 pub use time::{SimTime, UNREACHABLE_NS};
+pub use trace::FlowEvent;
 pub use transfer::{
-    ns_chunk, ByteRole, Deps, MergeHandle, OpByte, OpId, Plan, PlanTemplate, PlannedOp, SimOp,
-    LABEL_NS_STRIDE, NO_CLASS,
+    ns_chunk, ByteRole, Deps, MergeHandle, OpByte, OpEnd, OpId, Plan, PlanTemplate, PlannedOp,
+    SimOp, LABEL_NS_STRIDE, NO_CLASS,
 };

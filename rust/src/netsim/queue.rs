@@ -208,6 +208,47 @@ impl ReadyQueue {
         }
     }
 
+    /// Dequeue the minimum pair *and* every other entry sharing its
+    /// ready time, appending the op ids to `out` in ascending id order
+    /// (`out` is cleared first); returns the batch's shared ready time.
+    /// Exactly equivalent to a `pop` loop that stops when the front's
+    /// time changes — the engine drains whole instants in one call and
+    /// retires them in a single scratch pass instead of re-entering the
+    /// event loop per op.
+    pub fn pop_ready_batch(&mut self, out: &mut Vec<OpId>) -> Option<SimTime> {
+        out.clear();
+        let (t0, first) = self.pop()?;
+        out.push(first);
+        if self.fallback {
+            let run = self.sorted[self.sorted_pos..]
+                .iter()
+                .take_while(|e| e.0 == t0)
+                .count();
+            out.extend(
+                self.sorted[self.sorted_pos..self.sorted_pos + run]
+                    .iter()
+                    .map(|e| e.1),
+            );
+            self.sorted_pos += run;
+            self.len -= run;
+            return Some(t0);
+        }
+        // pop() finished the lazy maintenance: the served bucket is the
+        // active one, sorted from the cursor on. Entries with equal
+        // times always share a bucket (the index is a function of the
+        // time under the current base/shift — and a rebase moves *all*
+        // remaining items), so the rest of the batch is exactly the
+        // leading equal-time run of the active bucket's tail.
+        if self.active < BUCKETS {
+            let v = &self.buckets[self.active];
+            let run = v[self.pos..].iter().take_while(|e| e.0 == t0).count();
+            out.extend(v[self.pos..self.pos + run].iter().map(|e| e.1));
+            self.pos += run;
+            self.len -= run;
+        }
+        Some(t0)
+    }
+
     /// The minimum `(time, id)` pair without dequeuing it — the
     /// fair-share engine's next-arrival probe. Purely observational:
     /// unlike `pop` it performs none of the lazy maintenance (bucket
@@ -525,6 +566,95 @@ mod tests {
         assert_eq!(q.pop(), Some((5 * window, 1)));
         assert_eq!(q.pop(), None);
         assert_eq!(q.peek(), None);
+    }
+
+    /// Drive two identical queues through the same monotone schedule:
+    /// one drained with [`ReadyQueue::pop_ready_batch`], the other with
+    /// the one-at-a-time reference (`pop`, then keep popping while the
+    /// peeked front shares the time). Batches must agree exactly.
+    fn batch_reference_run(seed: u64, n: usize, mut dt: impl FnMut(&mut Xs) -> u64) {
+        let mut rng = Xs(seed | 1);
+        let mut qa = ReadyQueue::new();
+        let mut qb = ReadyQueue::new();
+        for id in 0..16usize {
+            qa.push(0, id);
+            qb.push(0, id);
+        }
+        let mut next_id = 16usize;
+        let mut pushed = 16usize;
+        let mut batch = Vec::new();
+        let mut want = Vec::new();
+        loop {
+            let got_t = qa.pop_ready_batch(&mut batch);
+            want.clear();
+            let want_t = match qb.pop() {
+                Some((t0, id)) => {
+                    want.push(id);
+                    while qb.peek().is_some_and(|e| e.0 == t0) {
+                        want.push(qb.pop().unwrap().1);
+                    }
+                    Some(t0)
+                }
+                None => None,
+            };
+            assert_eq!(got_t, want_t, "batch time diverged (seed {seed})");
+            assert_eq!(batch, want, "batch contents diverged (seed {seed})");
+            let Some(t0) = got_t else { break };
+            if pushed < n {
+                // every retired op spawns 0–2 successors at or after t0
+                for _ in 0..batch.len() {
+                    for _ in 0..(rng.next() % 3) {
+                        let d = dt(&mut rng);
+                        qa.push(t0 + d, next_id);
+                        qb.push(t0 + d, next_id);
+                        next_id += 1;
+                        pushed += 1;
+                    }
+                }
+            }
+        }
+        assert!(qa.is_empty() && qb.is_empty());
+    }
+
+    #[test]
+    fn pop_ready_batch_matches_pop_loop() {
+        // same-instant-heavy: half the successors arrive with zero delay,
+        // so batches routinely span several ops
+        for seed in [51u64, 52, 53] {
+            batch_reference_run(seed, 3000, |rng| {
+                if rng.next() % 2 == 0 {
+                    0
+                } else {
+                    rng.next() % 5_000
+                }
+            });
+        }
+        // bimodal: dense zero-delay bursts, window-crossing spreads, and
+        // rare ~2^50 ns gaps that force the sorted-drain fallback
+        for seed in [54u64, 55] {
+            batch_reference_run(seed, 800, |rng| match rng.next() % 8 {
+                0 => (1u64 << 50) + rng.next() % (1 << 20),
+                1..=4 => 0,
+                _ => rng.next() % (1 << 21),
+            });
+        }
+    }
+
+    #[test]
+    fn pop_ready_batch_drains_equal_times_in_id_order() {
+        let mut q = ReadyQueue::new();
+        for id in [5usize, 1, 9, 0, 3] {
+            q.push(100, id);
+        }
+        q.push(50, 7);
+        let mut out = Vec::new();
+        assert_eq!(q.pop_ready_batch(&mut out), Some(50));
+        assert_eq!(out, vec![7]);
+        assert_eq!(q.pop_ready_batch(&mut out), Some(100));
+        assert_eq!(out, vec![0, 1, 3, 5, 9]);
+        assert_eq!(q.pop_ready_batch(&mut out), None);
+        assert!(out.is_empty(), "an empty-queue batch must clear `out`");
+        assert!(q.is_empty());
     }
 
     #[test]

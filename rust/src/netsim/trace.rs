@@ -1,10 +1,18 @@
 //! Timeline capture for debugging and the paper-style timeline dumps.
+//!
+//! Besides the per-op rows, the fair-share model can report *flow
+//! rate-change events* ([`FlowEvent`], recorded by
+//! [`super::engine::Engine::execute_with_flow_trace`]): one event each
+//! time the max-min allocation assigns a flow a different rate —
+//! admission, a contending arrival squeezing it, or a departure letting
+//! it expand. [`trace_with_flows`] merges those into the op timeline.
 
 use crate::topology::Cluster;
 use crate::util::bytes::format_us;
 
 use super::engine::ExecResult;
-use super::transfer::{Plan, SimOp};
+use super::time::SimTime;
+use super::transfer::{OpEnd, OpId, Plan};
 
 /// One rendered timeline row.
 #[derive(Debug, Clone)]
@@ -15,26 +23,40 @@ pub struct TraceRow {
     pub what: String,
 }
 
+/// A fair-share flow rate change: at `t_ns`, the max-min allocation
+/// granted op `op` a new `rate` (bytes/second). Emitted by
+/// [`super::engine::Engine::execute_with_flow_trace`] after every rate
+/// recompute, for exactly the flows whose rate differs from their
+/// previous allocation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FlowEvent {
+    pub t_ns: SimTime,
+    pub op: OpId,
+    pub rate: f64,
+}
+
 /// Produce a chronological human-readable trace of a plan execution.
 pub fn trace(plan: &Plan, result: &ExecResult, cluster: &Cluster) -> Vec<TraceRow> {
-    let mut rows: Vec<TraceRow> = plan
-        .ops
-        .iter()
-        .enumerate()
-        .map(|(id, op)| {
-            let what = match &op.op {
-                SimOp::Transfer { route, bytes, .. } => {
-                    let meta = cluster.route_meta(*route);
+    let mut rows: Vec<TraceRow> = (0..plan.len())
+        .map(|id| {
+            let what = match plan.ends[id] {
+                OpEnd::Route(route) => {
+                    let meta = cluster.route_meta(route);
                     let src = &cluster.device(meta.src).name;
                     let dst = &cluster.device(meta.dst).name;
-                    let label = op
-                        .label
+                    let bytes = plan.bytes[id];
+                    let label = plan.labels[id]
                         .map(|(r, ch)| format!(" [rank {r} chunk {ch}]"))
                         .unwrap_or_default();
                     format!("xfer {src} -> {dst} {bytes}B{label}")
                 }
-                SimOp::Delay { dev, dur_ns } => {
-                    format!("delay {} {}us", cluster.device(*dev).name, dur_ns / 1000)
+                OpEnd::Dev(dev) => {
+                    // a Delay: its duration lives in the overheads column
+                    format!(
+                        "delay {} {}us",
+                        cluster.device(dev).name,
+                        plan.overheads[id] / 1000
+                    )
                 }
             };
             TraceRow {
@@ -45,6 +67,27 @@ pub fn trace(plan: &Plan, result: &ExecResult, cluster: &Cluster) -> Vec<TraceRo
             }
         })
         .collect();
+    rows.sort_by_key(|r| (r.start_ns, r.op_id));
+    rows
+}
+
+/// [`trace`], with the fair-share [`FlowEvent`]s merged in as
+/// zero-duration `rate` rows at their emission instants — the contention
+/// story (who got squeezed when, who expanded after a departure) reads
+/// inline with the op timeline.
+pub fn trace_with_flows(
+    plan: &Plan,
+    result: &ExecResult,
+    cluster: &Cluster,
+    events: &[FlowEvent],
+) -> Vec<TraceRow> {
+    let mut rows = trace(plan, result, cluster);
+    rows.extend(events.iter().map(|e| TraceRow {
+        op_id: e.op,
+        start_ns: e.t_ns,
+        done_ns: e.t_ns,
+        what: format!("rate -> {:.3} GB/s", e.rate / 1.0e9),
+    }));
     rows.sort_by_key(|r| (r.start_ns, r.op_id));
     rows
 }
@@ -68,7 +111,8 @@ pub fn render(rows: &[TraceRow]) -> String {
 mod tests {
     use super::*;
     use crate::netsim::engine::Engine;
-    use crate::netsim::transfer::Plan;
+    use crate::netsim::fairshare::LinkModel;
+    use crate::netsim::transfer::{Deps, Plan, SimOp};
     use crate::topology::presets::flat;
 
     #[test]
@@ -106,5 +150,60 @@ mod tests {
         assert!(rows[0].start_ns <= rows[1].start_ns);
         let text = render(&rows);
         assert!(text.contains("rank 2"));
+    }
+
+    #[test]
+    fn contention_trace_records_the_rate_drop_and_recovery() {
+        // the closed-form two-flow scenario from the engine tests: 10 MB
+        // (op 0) and 5 MB (op 1) share the 10 GB/s uplink. Both admit at
+        // 5 GB/s; when the 5 MB flow drains at t = 1 ms the survivor
+        // expands to the full 10 GB/s — the trace must contain both the
+        // shared-rate events and the recovery event.
+        let c = flat(3);
+        let mut plan = Plan::new();
+        for (dst, bytes) in [(1usize, 10_000_000u64), (2, 5_000_000)] {
+            let route = c.route(c.rank_device(0), c.rank_device(dst)).unwrap();
+            plan.push(
+                SimOp::Transfer {
+                    route,
+                    bytes,
+                    overhead_ns: 1000,
+                    issue_ns: 1000,
+                    bw_cap: None,
+                },
+                Deps::none(),
+                Some((dst, 0)),
+            );
+        }
+        let mut e = Engine::with_model(&c, LinkModel::FairShare);
+        let (result, events) = e.execute_with_flow_trace(&plan);
+        assert_eq!(result.makespan, 1_501_000);
+        // both flows admitted at the shared 5 GB/s rate, at t = 0
+        for op in [0usize, 1] {
+            assert!(
+                events
+                    .iter()
+                    .any(|ev| ev.op == op && ev.t_ns == 0 && ev.rate == 5.0e9),
+                "missing shared-rate event for op {op}: {events:?}"
+            );
+        }
+        // the survivor expands to the full link after the departure
+        assert!(
+            events
+                .iter()
+                .any(|ev| ev.op == 0 && ev.t_ns >= 1_000_000 && ev.rate == 10.0e9),
+            "missing recovery event: {events:?}"
+        );
+        // and no event ever repeats a flow's previous rate
+        let mut last: std::collections::HashMap<usize, f64> = Default::default();
+        for ev in &events {
+            assert_ne!(last.get(&ev.op).copied(), Some(ev.rate), "duplicate: {ev:?}");
+            last.insert(ev.op, ev.rate);
+        }
+        // the merged timeline interleaves rate rows with op rows
+        let rows = trace_with_flows(&plan, &result, &c, &events);
+        assert_eq!(rows.len(), plan.len() + events.len());
+        let text = render(&rows);
+        assert!(text.contains("GB/s"), "{text}");
     }
 }

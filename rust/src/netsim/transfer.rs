@@ -1,11 +1,22 @@
 //! Plan representation: ops, dependencies, labels — and plan *templates*.
 //!
-//! Hot-path design (DESIGN.md §Perf): a [`SimOp::Transfer`] carries an
-//! interned [`RouteId`] — not an owned hop list — and a [`PlannedOp`]'s
-//! dependencies live in an inline [`Deps`] buffer (≤2 predecessors, which
-//! covers every collective builder's common case) that only spills to the
-//! heap for wide joins. Building a plan therefore performs no per-op
-//! allocations beyond the `ops` vector itself.
+//! Hot-path design (DESIGN.md §Perf, §SoA plan layout): a [`Plan`] stores
+//! its ops as parallel *columns* (struct-of-arrays) — kind/target
+//! ([`OpEnd`]), payload bytes, overheads, issue costs, bandwidth caps,
+//! dependencies and labels each live in their own `Vec`. The execute loop
+//! streams exactly the columns it needs (`bytes`/`ends`/`overheads`/
+//! `deps`) instead of striding over fat per-op structs, and
+//! [`rescale`]-ing a template rewrites the `bytes` column alone. The
+//! [`PlannedOp`] row view survives as an *accessor* ([`Plan::planned`])
+//! for consumers that want the old shape; [`SimOp`] remains the builder-
+//! facing currency ([`Plan::push`] decomposes it into the columns,
+//! [`Plan::op`] reconstructs it).
+//!
+//! A `Transfer` carries an interned [`RouteId`] — not an owned hop list —
+//! and an op's dependencies live in an inline [`Deps`] buffer (≤2
+//! predecessors, which covers every collective builder's common case)
+//! that only spills to the heap for wide joins. Building a plan therefore
+//! performs no per-op allocations beyond the column vectors themselves.
 //!
 //! Plan templates (DESIGN.md §Plan templates): every message size at a
 //! fixed (algorithm, chunk count, topology) shares the same DAG shape and
@@ -13,7 +24,7 @@
 //! an op's payload derives from the total message size (whole message /
 //! equal-part index / chunk slot / …); [`rescale`] re-instantiates a
 //! previously built plan for a new total by rewriting only the byte
-//! fields — deps, labels, routes, overheads and the memoized deliveries
+//! column — deps, labels, routes, overheads and the memoized deliveries
 //! map are untouched.
 
 use crate::topology::{DeviceId, RouteId};
@@ -57,6 +68,20 @@ impl SimOp {
             SimOp::Delay { .. } => 0,
         }
     }
+}
+
+/// The kind/target column entry of the SoA [`Plan`]: what an op *is*
+/// (transfer along a route, or a device-local delay). The remaining
+/// per-op parameters live in the sibling columns — for a `Route` entry
+/// the plan's `bytes`/`overheads`/`issues`/`bw_caps` columns hold the
+/// transfer parameters; for a `Dev` entry the `overheads` column holds
+/// the delay duration (the other columns carry neutral values).
+#[derive(Debug, Clone, Copy)]
+pub enum OpEnd {
+    /// A cut-through transfer along an interned route.
+    Route(RouteId),
+    /// A fixed-duration occupancy of a device.
+    Dev(DeviceId),
 }
 
 /// An op's dependency list: up to two predecessor ids inline (the
@@ -166,8 +191,11 @@ impl From<Option<OpId>> for Deps {
     }
 }
 
-/// An op plus its dependencies and an optional (rank, chunk) label used by
-/// collectives to map completions back to "rank r received chunk c".
+/// A reconstructed *row view* of the SoA [`Plan`]: an op plus its
+/// dependencies and an optional (rank, chunk) label used by collectives
+/// to map completions back to "rank r received chunk c". Not the storage
+/// layout — gather one via [`Plan::planned`]; hot paths should stream the
+/// plan's columns instead.
 #[derive(Debug, Clone)]
 pub struct PlannedOp {
     pub op: SimOp,
@@ -206,14 +234,49 @@ pub struct MergeHandle {
     pub namespace: usize,
 }
 
-/// A dependency DAG of ops.
+/// Per-flow bandwidth caps are stored as plain `f64` in the cap column;
+/// `f64::INFINITY` means uncapped (`bw_cap: None`).
+fn cap_to_col(cap: Option<f64>) -> f64 {
+    cap.unwrap_or(f64::INFINITY)
+}
+
+fn cap_from_col(cap: f64) -> Option<f64> {
+    if cap.is_finite() {
+        Some(cap)
+    } else {
+        None
+    }
+}
+
+/// A dependency DAG of ops, stored as parallel columns (SoA — see the
+/// module docs and DESIGN.md §SoA plan layout).
+///
+/// Column ownership: builders append through [`Plan::push`] /
+/// [`Plan::merge`]; [`rescale`] rewrites the `bytes` column only;
+/// [`Plan::add_dep`] and [`Plan::set_label`] touch the `deps` and
+/// `labels` columns respectively; the engine reads every column but
+/// writes none. The columns are crate-visible so the engine, validators
+/// and tests can stream (and tests mutate) them directly; external
+/// consumers go through the row accessors ([`Plan::op`],
+/// [`Plan::planned`], [`Plan::label_of`], [`Plan::deps_of`]). Direct
+/// label mutation bypasses the deliveries-cache invalidation — use
+/// [`Plan::set_label`].
 #[derive(Debug, Clone, Default)]
 pub struct Plan {
-    /// Crate-visible so validators/tests can inspect (and tests mutate)
-    /// ops directly; external consumers read via [`Plan::ops`]. Direct
-    /// label mutation bypasses the deliveries-cache invalidation — use
-    /// [`Plan::set_label`].
-    pub(crate) ops: Vec<PlannedOp>,
+    /// Kind/target column: route for transfers, device for delays.
+    pub(crate) ends: Vec<OpEnd>,
+    /// Payload bytes (0 for delays) — the only column [`rescale`] writes.
+    pub(crate) bytes: Vec<u64>,
+    /// Transfer `overhead_ns`, or a delay's `dur_ns`.
+    pub(crate) overheads: Vec<SimTime>,
+    /// Transfer `issue_ns` (0 for delays).
+    pub(crate) issues: Vec<SimTime>,
+    /// Per-flow bandwidth cap; `f64::INFINITY` = uncapped.
+    pub(crate) bw_caps: Vec<f64>,
+    /// Dependency lists (inline ≤2, spilled beyond).
+    pub(crate) deps: Vec<Deps>,
+    /// Optional (rank, chunk) delivery labels.
+    pub(crate) labels: Vec<Option<(usize, usize)>>,
     /// Number of plans merged in so far; merge `k` (1-based) namespaces
     /// its labels at chunk offset `k * LABEL_NS_STRIDE` (directly pushed
     /// labels live in namespace 0).
@@ -223,7 +286,7 @@ pub struct Plan {
     /// with the same label: delivery = last write) and invalidated by
     /// labelled pushes / [`Plan::set_label`] / labelled merges. Lazy so
     /// the plan-build hot path performs no per-op hashing. Mutating
-    /// `ops[..].label` directly bypasses the invalidation — use
+    /// the `labels` column directly bypasses the invalidation — use
     /// `set_label`.
     deliveries: std::cell::OnceCell<std::collections::HashMap<(usize, usize), OpId>>,
 }
@@ -233,7 +296,8 @@ impl Plan {
         Plan::default()
     }
 
-    /// Append an op; returns its id.
+    /// Append an op; returns its id. Decomposes the [`SimOp`] into the
+    /// plan's columns.
     pub fn push(
         &mut self,
         op: SimOp,
@@ -242,34 +306,84 @@ impl Plan {
     ) -> OpId {
         let deps = deps.into();
         debug_assert!(
-            deps.as_slice().iter().all(|&d| d < self.ops.len()),
+            deps.as_slice().iter().all(|&d| d < self.ends.len()),
             "dep on future op"
         );
-        let id = self.ops.len();
+        let id = self.ends.len();
         if label.is_some() {
             // a labelled push after a deliveries() query invalidates the
             // cached map; a no-op (None) before the first query
             let _ = self.deliveries.take();
         }
-        self.ops.push(PlannedOp { op, deps, label });
+        let (end, bytes, overhead, issue, cap) = match op {
+            SimOp::Transfer {
+                route,
+                bytes,
+                overhead_ns,
+                issue_ns,
+                bw_cap,
+            } => (OpEnd::Route(route), bytes, overhead_ns, issue_ns, cap_to_col(bw_cap)),
+            SimOp::Delay { dev, dur_ns } => (OpEnd::Dev(dev), 0, dur_ns, 0, f64::INFINITY),
+        };
+        self.ends.push(end);
+        self.bytes.push(bytes);
+        self.overheads.push(overhead);
+        self.issues.push(issue);
+        self.bw_caps.push(cap);
+        self.deps.push(deps);
+        self.labels.push(label);
         id
     }
 
     pub fn len(&self) -> usize {
-        self.ops.len()
+        self.ends.len()
     }
 
-    /// Read-only view of the op list.
-    pub fn ops(&self) -> &[PlannedOp] {
-        &self.ops
+    /// Reconstruct op `id` from the columns. A `bw_cap` of
+    /// `Some(f64::INFINITY)` pushed in round-trips as `None` — the two
+    /// spell the same "uncapped" semantics.
+    pub fn op(&self, id: OpId) -> SimOp {
+        match self.ends[id] {
+            OpEnd::Route(route) => SimOp::Transfer {
+                route,
+                bytes: self.bytes[id],
+                overhead_ns: self.overheads[id],
+                issue_ns: self.issues[id],
+                bw_cap: cap_from_col(self.bw_caps[id]),
+            },
+            OpEnd::Dev(dev) => SimOp::Delay {
+                dev,
+                dur_ns: self.overheads[id],
+            },
+        }
+    }
+
+    /// Reconstruct the full row view of op `id` (op + deps + label).
+    /// Clones the dependency list — diagnostics and tests, not hot paths.
+    pub fn planned(&self, id: OpId) -> PlannedOp {
+        PlannedOp {
+            op: self.op(id),
+            deps: self.deps[id].clone(),
+            label: self.labels[id],
+        }
+    }
+
+    /// Op `id`'s dependency list, borrowed from the deps column.
+    pub fn deps_of(&self, id: OpId) -> &Deps {
+        &self.deps[id]
+    }
+
+    /// Op `id`'s delivery label.
+    pub fn label_of(&self, id: OpId) -> Option<(usize, usize)> {
+        self.labels[id]
     }
 
     /// Re-label an op, invalidating the cached deliveries map. Use this
-    /// instead of assigning `ops[id].label` directly (tests sabotage
+    /// instead of assigning the `labels` column directly (tests sabotage
     /// plans this way).
     pub fn set_label(&mut self, id: OpId, label: Option<(usize, usize)>) {
         let _ = self.deliveries.take();
-        self.ops[id].label = label;
+        self.labels[id] = label;
     }
 
     /// Append another plan's ops (shifting its internal dependencies) so
@@ -288,9 +402,11 @@ impl Plan {
     /// `other` that has no in-plan dependencies additionally depends on
     /// `external` (op ids in `self`, which must all precede the merge).
     /// This is how the overlap timeline gates a merged collective on
-    /// compute ops or on another merged plan's completions.
+    /// compute ops or on another merged plan's completions. Only the
+    /// `deps` and `labels` columns are transformed; the parameter
+    /// columns append verbatim.
     pub fn merge_after(&mut self, other: &Plan, external: &[OpId]) -> MergeHandle {
-        let offset = self.ops.len();
+        let offset = self.ends.len();
         debug_assert!(
             external.iter().all(|&d| d < offset),
             "external dep on an op at or past the merge point"
@@ -302,24 +418,35 @@ impl Plan {
         let namespace = self.merge_seq + 1;
         self.merge_seq += other.merge_seq + 1;
         let mut merged_label = false;
-        for op in &other.ops {
-            let mut shifted = op.clone();
-            if let Some((rank, chunk)) = shifted.label {
-                debug_assert!(
-                    chunk < (other.merge_seq + 1) * LABEL_NS_STRIDE,
-                    "chunk index overflows the merged plan's namespace range"
-                );
-                shifted.label = Some((rank, chunk + namespace * LABEL_NS_STRIDE));
-                merged_label = true;
-            }
-            if shifted.deps.is_empty() {
-                shifted.deps = Deps::from_slice(external);
+        self.ends.extend_from_slice(&other.ends);
+        self.bytes.extend_from_slice(&other.bytes);
+        self.overheads.extend_from_slice(&other.overheads);
+        self.issues.extend_from_slice(&other.issues);
+        self.bw_caps.extend_from_slice(&other.bw_caps);
+        for &label in &other.labels {
+            let shifted = match label {
+                Some((rank, chunk)) => {
+                    debug_assert!(
+                        chunk < (other.merge_seq + 1) * LABEL_NS_STRIDE,
+                        "chunk index overflows the merged plan's namespace range"
+                    );
+                    merged_label = true;
+                    Some((rank, chunk + namespace * LABEL_NS_STRIDE))
+                }
+                None => None,
+            };
+            self.labels.push(shifted);
+        }
+        for deps in &other.deps {
+            let mut shifted = deps.clone();
+            if shifted.is_empty() {
+                shifted = Deps::from_slice(external);
             } else {
-                for d in shifted.deps.as_mut_slice() {
+                for d in shifted.as_mut_slice() {
                     *d += offset;
                 }
             }
-            self.ops.push(shifted);
+            self.deps.push(shifted);
         }
         if merged_label {
             // a labelled merge after a deliveries() query must not serve
@@ -328,7 +455,7 @@ impl Plan {
         }
         MergeHandle {
             offset,
-            len: other.ops.len(),
+            len: other.len(),
             namespace,
         }
     }
@@ -339,18 +466,19 @@ impl Plan {
     /// valid. The caller is responsible for not closing a cycle — the
     /// engine fails fast on cyclic plans.
     pub fn add_dep(&mut self, op: OpId, dep: OpId) {
-        debug_assert!(op < self.ops.len() && dep < self.ops.len(), "op id out of range");
+        debug_assert!(op < self.len() && dep < self.len(), "op id out of range");
         debug_assert_ne!(op, dep, "op depending on itself");
-        self.ops[op].deps.push(dep);
+        self.deps[op].push(dep);
     }
 
     pub fn is_empty(&self) -> bool {
-        self.ops.is_empty()
+        self.ends.is_empty()
     }
 
-    /// Total payload bytes moved by the plan (sum over transfers).
+    /// Total payload bytes moved by the plan (sum over transfers; delay
+    /// rows hold zero in the byte column).
     pub fn total_bytes(&self) -> u64 {
-        self.ops.iter().map(|o| o.op.bytes()).sum()
+        self.bytes.iter().sum()
     }
 
     /// All labelled deliveries `(rank, chunk) -> op id`. Later ops
@@ -360,8 +488,8 @@ impl Plan {
     pub fn deliveries(&self) -> &std::collections::HashMap<(usize, usize), OpId> {
         self.deliveries.get_or_init(|| {
             let mut map = std::collections::HashMap::new();
-            for (id, op) in self.ops.iter().enumerate() {
-                if let Some(label) = op.label {
+            for (id, label) in self.labels.iter().enumerate() {
+                if let Some(label) = *label {
                     map.insert(label, id);
                 }
             }
@@ -476,28 +604,29 @@ pub struct OpByte {
 }
 
 /// Rescale a templated plan in place to a new total message size: every
-/// transfer op's byte count is recomputed from its [`ByteRole`]; deps,
-/// labels, routes, overheads and the memoized deliveries map are left
-/// untouched. Returns `false` — leaving the plan partially rescaled, so
-/// the caller must discard and rebuild — when some op's new byte count
-/// falls in a different mechanism size class (`classify`) than the one
-/// recorded at build time: crossing a class boundary can change
-/// mechanism selection and therefore plan *structure*, which a rescale
-/// cannot express.
+/// transfer op's byte count is recomputed from its [`ByteRole`] and
+/// written into the plan's byte *column* — the only column a rescale may
+/// touch; deps, labels, routes, overheads and the memoized deliveries
+/// map are left untouched. Returns `false` — leaving the plan partially
+/// rescaled, so the caller must discard and rebuild — when some op's new
+/// byte count falls in a different mechanism size class (`classify`)
+/// than the one recorded at build time: crossing a class boundary can
+/// change mechanism selection and therefore plan *structure*, which a
+/// rescale cannot express.
 pub fn rescale(
     plan: &mut Plan,
     roles: &[OpByte],
     total: u64,
     classify: impl Fn(u64) -> u8,
 ) -> bool {
-    debug_assert_eq!(plan.ops.len(), roles.len(), "byte roles out of sync with ops");
-    for (po, meta) in plan.ops.iter_mut().zip(roles.iter()) {
-        if let SimOp::Transfer { bytes, .. } = &mut po.op {
+    debug_assert_eq!(plan.len(), roles.len(), "byte roles out of sync with ops");
+    for (i, meta) in roles.iter().enumerate() {
+        if let OpEnd::Route(_) = plan.ends[i] {
             let nb = meta.role.bytes(total);
             if meta.class != NO_CLASS && classify(nb) != meta.class {
                 return false;
             }
-            *bytes = nb;
+            plan.bytes[i] = nb;
         }
     }
     true
@@ -571,6 +700,72 @@ mod tests {
         assert_eq!(Deps::from_opt(Some(3)).as_slice(), &[3]);
         let from_vec: Deps = vec![1, 2, 3, 4].into();
         assert_eq!(from_vec.as_slice(), &[1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn soa_round_trips_through_op_and_planned() {
+        // the column decomposition must reconstruct exactly what was
+        // pushed — for both op kinds, with and without a bandwidth cap
+        let c = flat(2);
+        let mut p = Plan::new();
+        let r = c.route(c.rank_device(0), c.rank_device(1)).unwrap();
+        p.push(
+            SimOp::Transfer {
+                route: r,
+                bytes: 4096,
+                overhead_ns: 7,
+                issue_ns: 3,
+                bw_cap: Some(2.5e9),
+            },
+            vec![],
+            Some((1, 0)),
+        );
+        p.push(
+            SimOp::Delay {
+                dev: DeviceId(1),
+                dur_ns: 123,
+            },
+            vec![0],
+            None,
+        );
+        match p.op(0) {
+            SimOp::Transfer {
+                bytes,
+                overhead_ns,
+                issue_ns,
+                bw_cap,
+                ..
+            } => {
+                assert_eq!((bytes, overhead_ns, issue_ns), (4096, 7, 3));
+                assert_eq!(bw_cap, Some(2.5e9));
+            }
+            other => panic!("expected a transfer, got {other:?}"),
+        }
+        match p.op(1) {
+            SimOp::Delay { dev, dur_ns } => {
+                assert_eq!((dev, dur_ns), (DeviceId(1), 123));
+            }
+            other => panic!("expected a delay, got {other:?}"),
+        }
+        let row = p.planned(1);
+        assert_eq!(row.deps.as_slice(), &[0]);
+        assert_eq!(row.label, None);
+        assert_eq!(p.label_of(0), Some((1, 0)));
+        assert_eq!(p.deps_of(1).as_slice(), &[0]);
+        // an uncapped transfer round-trips to bw_cap: None
+        let mut q = Plan::new();
+        q.push(
+            SimOp::Transfer {
+                route: r,
+                bytes: 1,
+                overhead_ns: 0,
+                issue_ns: 0,
+                bw_cap: None,
+            },
+            vec![],
+            None,
+        );
+        assert!(matches!(q.op(0), SimOp::Transfer { bw_cap: None, .. }));
     }
 
     #[test]
@@ -704,18 +899,18 @@ mod tests {
         // deliveries memoized before the rescale must survive it
         assert_eq!(tpl.plan.deliveries().len(), 2);
         assert!(tpl.rescale(8 << 20, classify));
-        assert_eq!(tpl.plan.ops()[0].op.bytes(), 8 << 20);
-        assert_eq!(tpl.plan.ops()[1].op.bytes(), 4 << 20);
+        assert_eq!(tpl.plan.op(0).bytes(), 8 << 20);
+        assert_eq!(tpl.plan.op(1).bytes(), 4 << 20);
         assert_eq!(tpl.plan.deliveries().len(), 2);
-        assert_eq!(tpl.plan.ops()[0].deps.len(), 0);
-        assert_eq!(tpl.plan.ops()[1].deps.as_slice(), &[0]);
+        assert_eq!(tpl.plan.deps[0].len(), 0);
+        assert_eq!(tpl.plan.deps[1].as_slice(), &[0]);
         // dropping below the class boundary must refuse the rescale
         assert!(!tpl.rescale(4096, classify));
         // a NO_CLASS-only plan rescales across any boundary
         tpl.roles[0].class = NO_CLASS;
         assert!(tpl.rescale(4096, classify));
-        assert_eq!(tpl.plan.ops()[0].op.bytes(), 4096);
-        assert_eq!(tpl.plan.ops()[1].op.bytes(), 2048);
+        assert_eq!(tpl.plan.op(0).bytes(), 4096);
+        assert_eq!(tpl.plan.op(1).bytes(), 2048);
     }
 
     #[test]
@@ -729,10 +924,10 @@ mod tests {
         let h = a.merge(&b);
         assert_eq!((h.offset, h.len, h.namespace), (1, 2, 1));
         assert_eq!(a.len(), 3);
-        assert_eq!(a.ops[2].deps.as_slice(), &[1]);
+        assert_eq!(a.deps[2].as_slice(), &[1]);
         // the merged label survives, moved into namespace 1 — it must
         // not collide with a's own (0, 0) delivery
-        assert_eq!(a.ops[2].label, Some((0, ns_chunk(1, 0))));
+        assert_eq!(a.labels[2], Some((0, ns_chunk(1, 0))));
         assert_eq!(a.deliveries().get(&(0, 0)), Some(&0));
         assert_eq!(a.deliveries().get(&(0, ns_chunk(h.namespace, 0))), Some(&2));
         // a second merge of the same plan lands in namespace 2
@@ -799,8 +994,8 @@ mod tests {
         let h = a.merge_after(&b, &[g0, g1]);
         // b's dep-less op now waits on both externals; its internal
         // dependency is shifted, not re-gated
-        assert_eq!(a.ops[h.offset].deps.as_slice(), &[g0, g1]);
-        assert_eq!(a.ops[h.offset + 1].deps.as_slice(), &[h.offset]);
+        assert_eq!(a.deps[h.offset].as_slice(), &[g0, g1]);
+        assert_eq!(a.deps[h.offset + 1].as_slice(), &[h.offset]);
     }
 
     #[test]
@@ -810,7 +1005,7 @@ mod tests {
         let a = p.push(SimOp::Delay { dev, dur_ns: 1 }, vec![], None);
         let b = p.push(SimOp::Delay { dev, dur_ns: 1 }, vec![], None);
         p.add_dep(b, a);
-        assert_eq!(p.ops[b].deps.as_slice(), &[a]);
+        assert_eq!(p.deps[b].as_slice(), &[a]);
     }
 
     #[test]
