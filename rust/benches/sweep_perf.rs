@@ -19,9 +19,9 @@ use std::time::Instant;
 use gdrbcast::bench::harness::{link_models_from_env, Bencher};
 use gdrbcast::collectives::{self, Algorithm, BcastSpec};
 use gdrbcast::comm::Comm;
-use gdrbcast::netsim::{Engine, LinkModel, OpId, Plan, SimOp};
+use gdrbcast::netsim::{Engine, FaultProfile, LinkModel, OpId, Plan, SimOp};
 use gdrbcast::topology::{presets, Cluster};
-use gdrbcast::tuning::{persist, space, sweep};
+use gdrbcast::tuning::{montecarlo, persist, space, sweep};
 use gdrbcast::util::json::Json;
 
 /// Row-name suffix per link model: FIFO keeps the pre-fair-share names
@@ -289,6 +289,58 @@ fn main() {
             rows.push(wall_row(&format!("tune/parallel/{gpus}gpus_wall{sfx}"), par_ns));
             rows.push(wall_row(&format!("tune/serial/{gpus}gpus_wall{sfx}"), ser_ns));
         }
+    }
+
+    // ---- fault Monte Carlo smoke (FAULT_SMOKE=1) -----------------------
+    // Not a throughput number: a seeded fault sweep on the acceptance
+    // preset whose p50/p99/delivered rows land in the report so CI can
+    // pin (a) the rows exist under both link models and (b) the run is
+    // deterministic — two back-to-back sweeps must be byte-identical
+    // (`fault_sweep/determinism` is 1.0 iff they are).
+    if std::env::var("FAULT_SMOKE").is_ok() {
+        let cluster = presets::kesch(2, 8);
+        let profile =
+            FaultProfile::parse("kill=1@500us,degrade=2:0.5@200us,straggle=1:3,jitter=0.05")
+                .expect("fault profile");
+        let mc_algos = [Algorithm::Chain, Algorithm::Knomial { k: 2 }];
+        let mc_sizes = [64u64 << 10, 4 << 20];
+        let mut deterministic = true;
+        for &model in &link_models {
+            let sfx = row_suffix(model);
+            let cfg = montecarlo::McConfig {
+                trials: 6,
+                seed: 0x5eed,
+                link_model: model,
+                threads: None,
+            };
+            let mc = montecarlo::run(&cluster, &mc_algos, &mc_sizes, &profile, &cfg);
+            let rerun = montecarlo::run(&cluster, &mc_algos, &mc_sizes, &profile, &cfg);
+            deterministic &= mc == rerun;
+            for row in &mc {
+                let base = format!("fault_sweep/{}/{}{sfx}", row.algorithm, row.bytes);
+                println!(
+                    "  fault sweep [{}] {} @ {} B: {}/{} delivered",
+                    model.name(),
+                    row.algorithm,
+                    row.bytes,
+                    row.delivered,
+                    row.trials
+                );
+                if let Some(s) = &row.stats {
+                    rows.push(wall_row(&format!("{base}/p50"), s.p50_ns));
+                    rows.push(wall_row(&format!("{base}/p99"), s.p99_ns));
+                }
+                rows.push(wall_row(
+                    &format!("{base}/delivered_frac"),
+                    row.delivered_frac(),
+                ));
+            }
+        }
+        println!("  fault sweep deterministic across reruns: {deterministic}");
+        rows.push(wall_row(
+            "fault_sweep/determinism",
+            if deterministic { 1.0 } else { 0.0 },
+        ));
     }
 
     // ---- write BENCH_sweep.json (bencher rows + wall rows) -------------

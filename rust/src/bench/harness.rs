@@ -126,7 +126,8 @@ impl Bencher {
         }
         let result = BenchResult {
             name: name.to_string(),
-            per_iter: Summary::of(&samples),
+            per_iter: Summary::of(&samples)
+                .expect("bench samples are non-empty by construction"),
             iters_per_sample: iters,
             samples: self.samples,
         };

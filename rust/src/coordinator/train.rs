@@ -6,7 +6,7 @@
 
 use crate::comm::Comm;
 use crate::models::{allreduce_buckets, bcast_messages, DnnModel, MessageSchedule};
-use crate::netsim::{Engine, LinkModel};
+use crate::netsim::{Engine, FaultSchedule, LinkModel};
 use crate::topology::Cluster;
 use crate::tuning::Selector;
 
@@ -106,8 +106,8 @@ pub fn estimate_iteration_with_model(
 }
 
 /// Knobs for the full-exchange estimator.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub struct ExchangeOptions {
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ExchangeOptions<'f> {
     /// Overlap backprop with the gradient exchange: cost the iteration
     /// as the makespan of the layer-wise timeline DAG
     /// ([`super::timeline`]) instead of the `compute + comm` barrier
@@ -122,14 +122,19 @@ pub struct ExchangeOptions {
     /// runs many bucket collectives *concurrently* on the shared fabric,
     /// which FIFO serializes but fair sharing progressively fills.
     pub link_model: LinkModel,
+    /// Fault schedule injected into the exchange's engine (the
+    /// `--faults` knob; DESIGN.md §Fault model). `None` — and an empty
+    /// schedule — leave the estimate bit-identical to the healthy path.
+    pub faults: Option<&'f FaultSchedule>,
 }
 
-impl Default for ExchangeOptions {
-    fn default() -> ExchangeOptions {
+impl Default for ExchangeOptions<'_> {
+    fn default() -> Self {
         ExchangeOptions {
             overlap: false,
             bucket_bytes: crate::models::DEFAULT_BUCKET_BYTES,
             link_model: LinkModel::Fifo,
+            faults: None,
         }
     }
 }
@@ -177,12 +182,17 @@ pub fn estimate_training_iteration_opts(
     mode: TrainingMode,
     global_batch: usize,
     compute_us_override: f64,
-    opts: ExchangeOptions,
+    opts: ExchangeOptions<'_>,
 ) -> TrainingEstimate {
     let gpus = cluster.n_gpus();
     let compute_us = compute_us_for(model, gpus, global_batch, compute_us_override);
     let mut comm = Comm::new(cluster);
     let mut engine = Engine::with_model(cluster, opts.link_model);
+    if let Some(f) = opts.faults {
+        // both the overlap timeline and the barrier path below run every
+        // collective on this engine, so one install covers the exchange
+        engine.set_faults(Some(f.clone()));
+    }
     if opts.overlap {
         let compute_ns = (compute_us * 1000.0).round() as u64;
         let makespan = super::timeline::overlap_iteration_ns(

@@ -36,9 +36,10 @@
 //! (`ends`/`bytes`/`overheads`/`issues`/`bw_caps`/`deps`) rather than
 //! reconstructing per-op structs.
 
-use crate::topology::Cluster;
+use crate::topology::{Cluster, DeviceId, DeviceKind, RouteId};
 
 use super::fairshare::{FairShareScratch, Flow, LinkModel};
+use super::faults::{FaultSchedule, LinkEvent};
 use super::queue::ReadyQueue;
 use super::time::{tx_ns, SimTime, UNREACHABLE_NS};
 use super::trace::FlowEvent;
@@ -50,6 +51,35 @@ pub struct ExecResult {
     pub start: Vec<SimTime>,
     pub done: Vec<SimTime>,
     pub makespan: SimTime,
+}
+
+/// Per-rank delivery status of a (possibly fault-injected) run — the
+/// degraded-outcome view of an [`ExecResult`]. A rank is *undelivered*
+/// when any of its labelled deliveries completed at (or past) the
+/// [`UNREACHABLE_NS`] sentinel: the fabric lost every route to it within
+/// the retry budget and the run finished partially instead of panicking.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DegradedOutcome {
+    pub n_ranks: usize,
+    /// Ranks whose payload never arrived, ascending.
+    pub undelivered: Vec<usize>,
+    /// Max completion over the ops that finished below the sentinel —
+    /// the makespan of the part of the run that actually happened.
+    pub delivered_makespan: SimTime,
+    /// The full makespan (sentinel-valued when anything was lost).
+    pub makespan: SimTime,
+}
+
+impl DegradedOutcome {
+    /// Every rank got its payload.
+    pub fn is_complete(&self) -> bool {
+        self.undelivered.is_empty()
+    }
+
+    /// Number of ranks that did receive their payload.
+    pub fn delivered_ranks(&self) -> usize {
+        self.n_ranks - self.undelivered.len()
+    }
 }
 
 impl ExecResult {
@@ -71,6 +101,32 @@ impl ExecResult {
             }
         }
         out
+    }
+
+    /// The degraded-outcome view: which ranks were actually delivered,
+    /// given the plan the result came from. On a healthy run every rank
+    /// is delivered and `delivered_makespan == makespan`.
+    pub fn degraded_outcome(&self, plan: &Plan, n_ranks: usize) -> DegradedOutcome {
+        let mut lost = vec![false; n_ranks];
+        for (&(rank, _chunk), &id) in plan.deliveries() {
+            if rank < n_ranks && self.done[id] >= UNREACHABLE_NS {
+                lost[rank] = true;
+            }
+        }
+        let undelivered: Vec<usize> = (0..n_ranks).filter(|&r| lost[r]).collect();
+        let delivered_makespan = self
+            .done
+            .iter()
+            .copied()
+            .filter(|&d| d < UNREACHABLE_NS)
+            .max()
+            .unwrap_or(0);
+        DegradedOutcome {
+            n_ranks,
+            undelivered,
+            delivered_makespan,
+            makespan: self.makespan,
+        }
     }
 }
 
@@ -104,6 +160,35 @@ pub struct Engine<'c> {
     batch: Vec<OpId>,
     /// Fair-share flow set + water-filling scratch (unused under FIFO).
     fs: FairShareScratch,
+    // ---- fault injection (DESIGN.md §Fault model) ----
+    /// Active fault schedule. `None` or empty ⇒ every fault branch below
+    /// is skipped and execution is bit-identical to the pre-fault engine.
+    faults: Option<FaultSchedule>,
+    /// `faults` is present *and* non-empty, latched per run.
+    faults_active: bool,
+    /// Per-link bandwidth factor currently in effect (fair-share event
+    /// cursor state; FIFO looks factors up by start time instead).
+    bw_factor: Vec<f64>,
+    /// Per-device straggler duration multiplier (1.0 = nominal).
+    dev_factor: Vec<f64>,
+    /// Per-link `(at_ns, factor)` event lists, time-sorted — the
+    /// factor-at-instant lookup both loops and the detour picker share.
+    link_fault_events: Vec<Vec<(SimTime, f64)>>,
+    /// Detour attempts left per op (seeded from the schedule's budget).
+    retry_left: Vec<u32>,
+    /// Detour route a re-admitted op must run on instead of its plan
+    /// route (fair-share retries round-trip through the ready set).
+    retry_route: Vec<Option<RouteId>>,
+    /// Bytes still undrained when the op's flow was killed.
+    retry_remaining: Vec<f64>,
+    /// The op's next pop from the ready set is a re-admission: keep its
+    /// original start, don't re-count it as processed.
+    retry_pending: Vec<bool>,
+    /// Virtual time charged per detour attempt (from the schedule).
+    retry_timeout_ns: SimTime,
+    /// The previous run injected faults: reset `bw_factor`, the
+    /// fair-share scales and the event lists before the next run.
+    scales_stale: bool,
 }
 
 impl<'c> Engine<'c> {
@@ -130,7 +215,31 @@ impl<'c> Engine<'c> {
             ready: ReadyQueue::new(),
             batch: Vec::new(),
             fs: FairShareScratch::new(cluster.n_links()),
+            faults: None,
+            faults_active: false,
+            bw_factor: Vec::new(),
+            dev_factor: Vec::new(),
+            link_fault_events: Vec::new(),
+            retry_left: Vec::new(),
+            retry_route: Vec::new(),
+            retry_remaining: Vec::new(),
+            retry_pending: Vec::new(),
+            retry_timeout_ns: 0,
+            scales_stale: false,
         }
+    }
+
+    /// Install (or clear) a fault schedule for subsequent runs. An empty
+    /// schedule behaves exactly like `None`: the engine's fault branches
+    /// are gated on non-emptiness, so healthy execution stays
+    /// bit-identical to an engine that never saw this call.
+    pub fn set_faults(&mut self, faults: Option<FaultSchedule>) {
+        self.faults = faults;
+    }
+
+    /// The installed fault schedule, if any.
+    pub fn faults(&self) -> Option<&FaultSchedule> {
+        self.faults.as_ref()
     }
 
     pub fn cluster(&self) -> &Cluster {
@@ -216,7 +325,46 @@ impl<'c> Engine<'c> {
         self.link_free.iter_mut().for_each(|t| *t = 0);
         self.dev_free.iter_mut().for_each(|t| *t = 0);
 
+        // fault overlay: reset stale state from a previous faulted run
+        // (the fair-share solver reads `bw_scale` unconditionally, so a
+        // healthy run after a faulted one must see all-ones again), then
+        // install the current schedule's events/stragglers/retry budget
+        if self.scales_stale {
+            self.fs.reset_scales();
+            self.bw_factor.iter_mut().for_each(|f| *f = 1.0);
+            self.dev_factor.iter_mut().for_each(|f| *f = 1.0);
+            self.link_fault_events.iter_mut().for_each(|v| v.clear());
+            self.scales_stale = false;
+        }
         let n = plan.len();
+        self.faults_active = self.faults.as_ref().is_some_and(|f| !f.is_empty());
+        if self.faults_active {
+            self.scales_stale = true;
+            self.bw_factor.resize(self.cluster.n_links(), 1.0);
+            self.dev_factor.resize(self.cluster.n_devices(), 1.0);
+            self.link_fault_events
+                .resize(self.cluster.n_links(), Vec::new());
+            let sched = self.faults.clone().expect("faults_active");
+            for ev in &sched.link_events {
+                if ev.link.0 < self.link_fault_events.len() {
+                    self.link_fault_events[ev.link.0].push((ev.at_ns, ev.bw_factor));
+                }
+            }
+            for &(rank, f) in &sched.stragglers {
+                if rank < self.cluster.n_gpus() {
+                    self.dev_factor[self.cluster.rank_device(rank).0] = f;
+                }
+            }
+            self.retry_timeout_ns = sched.retry_timeout_ns;
+            self.retry_left.clear();
+            self.retry_left.resize(n, sched.retry_budget);
+            self.retry_route.clear();
+            self.retry_route.resize(n, None);
+            self.retry_remaining.clear();
+            self.retry_remaining.resize(n, 0.0);
+            self.retry_pending.clear();
+            self.retry_pending.resize(n, false);
+        }
         // CSR reverse-dependency graph: dep_offsets[d]..dep_offsets[d+1]
         // indexes dep_targets with the ops depending on d
         self.indegree.clear();
@@ -338,8 +486,90 @@ impl<'c> Engine<'c> {
         // always holds and the clamp is a no-op.
         let mut last_admit: SimTime = 0;
         self.fs.reset();
+        // fault overlay: the schedule's event list drives a cursor that
+        // joins the event race below (clone: the borrow would otherwise
+        // pin `self` for the whole loop; fault runs are not the hot path)
+        let faults_active = self.faults_active;
+        let fault_events: Vec<LinkEvent> = if faults_active {
+            self.faults
+                .as_ref()
+                .expect("faults_active without a schedule")
+                .link_events
+                .clone()
+        } else {
+            Vec::new()
+        };
+        let mut fcur = 0usize;
         let mut batch = std::mem::take(&mut self.batch);
         loop {
+            // 0) apply fault events due at the current instant: a
+            //    degraded link re-seeds the incremental max-min solve
+            //    with its new capacity; a failed link drops its
+            //    in-flight flows back to the ready set (timed detour
+            //    retries) or completes them at the sentinel when no
+            //    route survives the budget
+            if faults_active {
+                let mut applied = false;
+                while fcur < fault_events.len()
+                    && (fault_events[fcur].at_ns as f64) <= now
+                {
+                    let ev = fault_events[fcur];
+                    fcur += 1;
+                    self.bw_factor[ev.link.0] = ev.bw_factor;
+                    self.fs.scale_link(ev.link, ev.bw_factor);
+                    applied = true;
+                }
+                if applied {
+                    dirty = true;
+                    let e_now = (now.round() as SimTime).max(last_admit);
+                    let mut i = 0;
+                    while i < self.fs.flows.len() {
+                        let dead = {
+                            let hops = cluster.route_hops(self.fs.flows[i].route);
+                            hops.iter().any(|&h| {
+                                cluster.link(h).bandwidth * self.bw_factor[h.0] <= 0.0
+                            })
+                        };
+                        if !dead {
+                            i += 1;
+                            continue;
+                        }
+                        let f = self.fs.remove(cluster, i);
+                        let id = f.op;
+                        let meta = cluster.route_meta(f.route);
+                        let mut detour = None;
+                        let mut t_try = e_now;
+                        while self.retry_left[id] > 0 {
+                            self.retry_left[id] -= 1;
+                            t_try = t_try.saturating_add(self.retry_timeout_ns);
+                            if let Some(r2) = self.detour_route(meta.src, meta.dst, t_try)
+                            {
+                                detour = Some((r2, t_try));
+                                break;
+                            }
+                        }
+                        match detour {
+                            Some((r2, t_re)) => {
+                                self.retry_route[id] = Some(r2);
+                                self.retry_remaining[id] = f.remaining.max(0.0);
+                                self.retry_pending[id] = true;
+                                self.ready.push(t_re, id);
+                            }
+                            None => {
+                                let d = e_now
+                                    .saturating_add(f.overhead_ns)
+                                    .saturating_add(f.latency_ns)
+                                    .saturating_add(UNREACHABLE_NS);
+                                if record {
+                                    self.done[id] = d;
+                                }
+                                makespan = makespan.max(d);
+                                self.release_dependents(id, d);
+                            }
+                        }
+                    }
+                }
+            }
             // 1) admit every op due at the current instant, one
             //    same-ready-time batch at a time
             loop {
@@ -356,7 +586,14 @@ impl<'c> Engine<'c> {
                 while i < batch.len() {
                     let id = batch[i];
                     i += 1;
-                    processed += 1;
+                    // re-admission of a killed flow on its detour: the op
+                    // was already counted at first admission
+                    let is_retry = faults_active && self.retry_pending[id];
+                    if is_retry {
+                        self.retry_pending[id] = false;
+                    } else {
+                        processed += 1;
+                    }
                     let joins = match plan.ends[id] {
                         OpEnd::Route(route) => {
                             let meta = cluster.route_meta(route);
@@ -370,7 +607,73 @@ impl<'c> Engine<'c> {
                     };
                     match joins {
                         Some((route, latency_ns)) => {
-                            if record {
+                            // fault overlay: a retried op runs on its
+                            // detour with the undrained remainder, a
+                            // straggler source scales the overhead, and a
+                            // route already dead at admission goes
+                            // straight to detour retry or the sentinel
+                            let (route, latency_ns, remaining, overhead_ns) =
+                                if faults_active {
+                                    let (r, lat) = match self.retry_route[id] {
+                                        Some(r2) => (r2, cluster.route_meta(r2).latency_ns),
+                                        None => (route, latency_ns),
+                                    };
+                                    let rem = if is_retry {
+                                        self.retry_remaining[id]
+                                    } else {
+                                        plan.bytes[id] as f64
+                                    };
+                                    let meta_r = cluster.route_meta(r);
+                                    let oh = self.scale_dur(plan.overheads[id], meta_r.src.0);
+                                    let dead = {
+                                        let hops = cluster.route_hops(r);
+                                        hops.iter().any(|&h| {
+                                            cluster.link(h).bandwidth * self.bw_factor[h.0]
+                                                <= 0.0
+                                        })
+                                    };
+                                    if dead {
+                                        if record && !is_retry {
+                                            self.start[id] = t;
+                                        }
+                                        let mut detour = None;
+                                        let mut t_try = t;
+                                        while self.retry_left[id] > 0 {
+                                            self.retry_left[id] -= 1;
+                                            t_try = t_try.saturating_add(self.retry_timeout_ns);
+                                            if let Some(r2) = self.detour_route(
+                                                meta_r.src, meta_r.dst, t_try,
+                                            ) {
+                                                detour = Some((r2, t_try));
+                                                break;
+                                            }
+                                        }
+                                        match detour {
+                                            Some((r2, t_re)) => {
+                                                self.retry_route[id] = Some(r2);
+                                                self.retry_remaining[id] = rem;
+                                                self.retry_pending[id] = true;
+                                                self.ready.push(t_re, id);
+                                            }
+                                            None => {
+                                                let d = t
+                                                    .saturating_add(oh)
+                                                    .saturating_add(meta_r.latency_ns)
+                                                    .saturating_add(UNREACHABLE_NS);
+                                                if record {
+                                                    self.done[id] = d;
+                                                }
+                                                makespan = makespan.max(d);
+                                                self.release_dependents(id, d);
+                                            }
+                                        }
+                                        continue;
+                                    }
+                                    (r, lat, rem, oh)
+                                } else {
+                                    (route, latency_ns, plan.bytes[id] as f64, plan.overheads[id])
+                                };
+                            if record && !is_retry {
                                 self.start[id] = t;
                             }
                             self.fs.add(
@@ -378,13 +681,13 @@ impl<'c> Engine<'c> {
                                 Flow {
                                     op: id,
                                     route,
-                                    remaining: plan.bytes[id] as f64,
+                                    remaining,
                                     rate: 0.0,
                                     cap: plan.bw_caps[id],
                                     fixed: false,
                                     fin: 0.0,
                                     last_rate: -1.0,
-                                    overhead_ns: plan.overheads[id],
+                                    overhead_ns,
                                     latency_ns,
                                 },
                             );
@@ -437,7 +740,12 @@ impl<'c> Engine<'c> {
                 };
                 t_dep = t_dep.min(f.fin);
             }
-            let t_next = t_arr.min(t_dep);
+            let t_fault = if faults_active && fcur < fault_events.len() {
+                fault_events[fcur].at_ns as f64
+            } else {
+                f64::INFINITY
+            };
+            let t_next = t_arr.min(t_dep).min(t_fault);
             if t_next.is_infinite() {
                 if self.fs.flows.is_empty() {
                     break; // everything drained
@@ -546,6 +854,9 @@ impl<'c> Engine<'c> {
     /// Run op `id` at its ready time, streaming the plan's columns;
     /// returns (actual start, completion).
     fn run_op(&mut self, plan: &Plan, id: OpId, ready: SimTime) -> (SimTime, SimTime) {
+        if self.faults_active {
+            return self.run_op_faulty(plan, id, ready);
+        }
         match plan.ends[id] {
             OpEnd::Dev(dev) => {
                 // a Delay: its duration lives in the overheads column
@@ -605,6 +916,161 @@ impl<'c> Engine<'c> {
                 (s, d)
             }
         }
+    }
+
+    /// [`Engine::run_op`] under an active fault schedule: durations on a
+    /// straggler's device are stretched by its multiplier, transfers see
+    /// the per-link bandwidth factors in effect at their start instant,
+    /// and a transfer whose route is dead retries over detours within
+    /// the budget before completing at the sentinel.
+    fn run_op_faulty(&mut self, plan: &Plan, id: OpId, ready: SimTime) -> (SimTime, SimTime) {
+        match plan.ends[id] {
+            OpEnd::Dev(dev) => {
+                let s = ready.max(self.dev_free[dev.0]);
+                let d = s.saturating_add(self.scale_dur(plan.overheads[id], dev.0));
+                self.dev_free[dev.0] = d;
+                (s, d)
+            }
+            OpEnd::Route(route) => {
+                let meta = self.cluster.route_meta(route);
+                if meta.hop_len == 0 {
+                    let dev = meta.src;
+                    let overhead_ns = self.scale_dur(plan.overheads[id], dev.0);
+                    let issue_ns = self.scale_dur(plan.issues[id], dev.0);
+                    let s = ready.max(self.dev_free[dev.0]);
+                    let d = s.saturating_add(overhead_ns);
+                    self.dev_free[dev.0] = s.saturating_add(overhead_ns.max(issue_ns));
+                    return (s, d);
+                }
+                self.fifo_transfer_faulty(plan, id, route, ready)
+            }
+        }
+    }
+
+    /// One FIFO transfer attempt on `route` starting no earlier than
+    /// `ready`. The per-hop bandwidth factor is resolved once at the
+    /// start instant (cut-through occupancy is atomic in this model —
+    /// mid-transfer re-rating belongs to the fair-share loop). A route
+    /// dead at its start recurses onto a detour, consuming retry budget
+    /// per attempt, and completes at the sentinel when the budget runs
+    /// dry with no live route.
+    fn fifo_transfer_faulty(
+        &mut self,
+        plan: &Plan,
+        id: OpId,
+        route: RouteId,
+        ready: SimTime,
+    ) -> (SimTime, SimTime) {
+        let cluster = self.cluster;
+        let meta = cluster.route_meta(route);
+        let bytes = plan.bytes[id];
+        let overhead_ns = self.scale_dur(plan.overheads[id], meta.src.0);
+        let issue_ns = self.scale_dur(plan.issues[id], meta.src.0);
+        let cap = plan.bw_caps[id];
+        let mut s = ready;
+        let mut bottleneck = f64::INFINITY;
+        {
+            let hops = cluster.route_hops(route);
+            for &h in hops.iter() {
+                s = s.max(self.link_free[h.0]);
+            }
+            for &h in hops.iter() {
+                bottleneck =
+                    bottleneck.min(cluster.link(h).bandwidth * self.factor_at(h.0, s));
+            }
+        }
+        if bottleneck <= 0.0 {
+            let mut t_try = s;
+            while self.retry_left[id] > 0 {
+                self.retry_left[id] -= 1;
+                t_try = t_try.saturating_add(self.retry_timeout_ns);
+                if let Some(r2) = self.detour_route(meta.src, meta.dst, t_try) {
+                    return self.fifo_transfer_faulty(plan, id, r2, t_try);
+                }
+            }
+            // no surviving route: `tx_ns` on a dead link is the sentinel,
+            // matching the healthy engine's dead-link completion shape
+            let d = s
+                .saturating_add(overhead_ns)
+                .saturating_add(meta.latency_ns)
+                .saturating_add(tx_ns(bytes, 0.0));
+            return (s, d);
+        }
+        let tx = tx_ns(bytes, bottleneck.min(cap));
+        {
+            let hops = cluster.route_hops(route);
+            for &h in hops.iter() {
+                let link_bw = (cluster.link(h).bandwidth * self.factor_at(h.0, s)).min(cap);
+                let busy = tx_ns(bytes, link_bw);
+                self.link_free[h.0] = s.saturating_add(issue_ns).saturating_add(busy);
+            }
+        }
+        let d = s
+            .saturating_add(overhead_ns)
+            .saturating_add(meta.latency_ns)
+            .saturating_add(tx);
+        (s, d)
+    }
+
+    /// Bandwidth factor in effect on link index `link` at instant `t`:
+    /// the latest scheduled event at or before `t`, else 1.0 (healthy).
+    fn factor_at(&self, link: usize, t: SimTime) -> f64 {
+        let evs = &self.link_fault_events[link];
+        let k = evs.partition_point(|&(at, _)| at <= t);
+        if k == 0 {
+            1.0
+        } else {
+            evs[k - 1].1
+        }
+    }
+
+    /// Straggler stretch: duration `ns` scaled by the device's fault
+    /// multiplier. Exactly `ns` for the 1.0 (healthy) factor.
+    fn scale_dur(&self, ns: SimTime, dev: usize) -> SimTime {
+        let f = self.dev_factor.get(dev).copied().unwrap_or(1.0);
+        if f == 1.0 {
+            ns
+        } else {
+            ((ns as f64 * f).round()).min(UNREACHABLE_NS as f64) as SimTime
+        }
+    }
+
+    /// Deterministic detour selection at instant `t`: the first staging
+    /// candidate (Host and IB HCA devices, in device-id order) whose
+    /// src→via→dst route is non-trivial and fully live under the fault
+    /// schedule. Public so tests can reconstruct which route a retried
+    /// transfer actually ran on.
+    pub fn detour_route(
+        &self,
+        src: DeviceId,
+        dst: DeviceId,
+        t: SimTime,
+    ) -> Option<RouteId> {
+        for (i, d) in self.cluster.devices().iter().enumerate() {
+            if !matches!(d.kind, DeviceKind::Host | DeviceKind::IbHca) {
+                continue;
+            }
+            let via = DeviceId(i);
+            if via == src || via == dst {
+                continue;
+            }
+            let Ok(r) = self.cluster.route_via(src, via, dst) else {
+                continue;
+            };
+            if self.cluster.route_meta(r).hop_len == 0 {
+                continue;
+            }
+            let alive = {
+                let hops = self.cluster.route_hops(r);
+                hops.iter().all(|&h| {
+                    self.cluster.link(h).bandwidth * self.factor_at(h.0, t) > 0.0
+                })
+            };
+            if alive {
+                return Some(r);
+            }
+        }
+        None
     }
 }
 

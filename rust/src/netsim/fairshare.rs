@@ -173,6 +173,11 @@ pub(crate) struct FairShareScratch {
     /// Link ids, not flow indices, so `remove`'s `swap_remove` cannot
     /// invalidate them.
     seeds: Vec<LinkId>,
+    /// Per-link bandwidth scale (the fault-injection overlay, sized
+    /// `n_links`): water-filling sees `bandwidth × bw_scale`. All-ones
+    /// outside fault runs — `× 1.0` is an exact identity, so healthy
+    /// runs stay bit-identical to the pre-fault solver.
+    bw_scale: Vec<f64>,
     /// Epoch-stamped membership marks (`== epoch` ⇒ in the current
     /// closure), so starting a solve clears nothing.
     link_mark: Vec<u64>,
@@ -199,6 +204,7 @@ impl FairShareScratch {
             lims: Vec::new(),
             members: Vec::new(),
             seeds: Vec::new(),
+            bw_scale: vec![1.0; n_links],
             link_mark: vec![0; n_links],
             flow_mark: Vec::new(),
             epoch: 0,
@@ -215,6 +221,21 @@ impl FairShareScratch {
         self.caps.len() == n_links
             && self.nflows.len() == n_links
             && self.link_mark.len() == n_links
+            && self.bw_scale.len() == n_links
+    }
+
+    /// Set a link's fault-overlay bandwidth scale and seed it for the
+    /// next incremental solve — a degraded/failed/restored link re-rates
+    /// exactly the component it touches.
+    pub fn scale_link(&mut self, l: LinkId, factor: f64) {
+        self.bw_scale[l.0] = factor.max(0.0);
+        self.seeds.push(l);
+    }
+
+    /// Clear every fault-overlay scale back to 1.0 (the engine calls
+    /// this before a run when the previous run injected faults).
+    pub fn reset_scales(&mut self) {
+        self.bw_scale.iter_mut().for_each(|f| *f = 1.0);
     }
 
     /// Force (or un-force) the full-recompute reference mode, overriding
@@ -371,8 +392,11 @@ impl FairShareScratch {
                 if self.nflows[h.0] == 0 {
                     // a zero/negative-bandwidth link contributes zero
                     // capacity: flows crossing it fix at rate 0 and the
-                    // engine completes them at the unreachable sentinel
-                    self.caps[h.0] = cluster.link(h).bandwidth.max(0.0);
+                    // engine completes them at the unreachable sentinel.
+                    // The fault overlay rescales here (×1.0 when healthy
+                    // — exact identity).
+                    self.caps[h.0] =
+                        (cluster.link(h).bandwidth * self.bw_scale[h.0]).max(0.0);
                     self.touched.push(h);
                 }
                 self.nflows[h.0] += 1;

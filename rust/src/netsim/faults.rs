@@ -1,0 +1,512 @@
+//! Deterministic fault injection: link failures, bandwidth degradation,
+//! straggler ranks, and per-link jitter.
+//!
+//! A [`FaultSchedule`] is a fully *realized* fault scenario — concrete
+//! per-link bandwidth events on the virtual clock plus per-rank duration
+//! multipliers — that both engine loops execute
+//! ([`super::engine::Engine::set_faults`]):
+//!
+//! * a **degraded** link (`bw_factor` in `(0, 1)`) rescales that link's
+//!   capacity from the event instant on. The FIFO loop resolves each
+//!   transfer against the factors in effect at its start (cut-through
+//!   occupancy has no in-flight state to re-rate); the fair-share loop
+//!   re-seeds the link and triggers the incremental max-min re-solve
+//!   with the new capacity, re-rating in-flight flows;
+//! * a **failed** link (`bw_factor == 0`) starves everything crossing
+//!   it. In-flight fair-share flows are dropped back to the ready set
+//!   and retried over a [`crate::topology::Cluster::route_via`] detour
+//!   (via hosts/HCAs, in device-id order) under a bounded
+//!   retry/timeout budget; when no live detour exists within the
+//!   budget, the op completes at the [`super::time::UNREACHABLE_NS`]
+//!   sentinel and the run finishes *partially* — per-rank delivery
+//!   status is reported by
+//!   [`super::engine::ExecResult::degraded_outcome`] instead of
+//!   panicking;
+//! * a **straggler** rank multiplies every overhead/issue/delay charged
+//!   to its device (slow kernels, slow injection).
+//!
+//! Schedules are usually produced from a [`FaultProfile`] — the parsed
+//! `--faults` specification — whose random draws
+//! ([`FaultProfile::realize`]) come from the deterministic
+//! [`crate::util::rng`] generators: same profile + same seed + same
+//! cluster ⇒ the same schedule, on any thread count. An **empty**
+//! schedule is the healthy fabric: the engine's fault paths are gated
+//! on non-emptiness, so results are bit-identical to an engine without
+//! fault support (pinned by the golden-parity suite).
+//!
+//! See DESIGN.md §Fault model for the schedule format and the
+//! retry/timeout and degraded-outcome contracts.
+
+use crate::error::{Error, Result};
+use crate::topology::{Cluster, LinkId};
+use crate::util::rng::Rng;
+
+use super::time::SimTime;
+
+/// Default retry budget: how many timed detour attempts a transfer
+/// crossing a failed link gets before completing at the sentinel.
+pub const DEFAULT_RETRY_BUDGET: u32 = 2;
+
+/// Default per-attempt retry timeout (1 ms of virtual time): each detour
+/// attempt re-admits the op this much later.
+pub const DEFAULT_RETRY_TIMEOUT_NS: SimTime = 1_000_000;
+
+/// One bandwidth event on one directed link: from `at_ns` on, the link
+/// runs at `bw_factor` × its nominal bandwidth. `0.0` is a hard failure;
+/// a later event on the same link may restore it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkEvent {
+    pub at_ns: SimTime,
+    pub link: LinkId,
+    pub bw_factor: f64,
+}
+
+/// A realized fault scenario on the virtual clock. Build one directly,
+/// through the `with_*` helpers, or from a parsed [`FaultProfile`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSchedule {
+    /// Bandwidth events, sorted by `(at_ns, link)` — [`Self::normalize`]
+    /// restores the order after manual pushes.
+    pub link_events: Vec<LinkEvent>,
+    /// `(rank, multiplier)` stragglers: every overhead/issue/delay on
+    /// that rank's device is scaled by the multiplier.
+    pub stragglers: Vec<(usize, f64)>,
+    /// Detour attempts per op crossing a failed link.
+    pub retry_budget: u32,
+    /// Virtual time charged per detour attempt.
+    pub retry_timeout_ns: SimTime,
+}
+
+impl Default for FaultSchedule {
+    fn default() -> FaultSchedule {
+        FaultSchedule {
+            link_events: Vec::new(),
+            stragglers: Vec::new(),
+            retry_budget: DEFAULT_RETRY_BUDGET,
+            retry_timeout_ns: DEFAULT_RETRY_TIMEOUT_NS,
+        }
+    }
+}
+
+impl FaultSchedule {
+    /// `true` when the schedule perturbs nothing — the engine treats it
+    /// exactly like no schedule at all (bit-identical execution).
+    pub fn is_empty(&self) -> bool {
+        self.link_events.is_empty() && self.stragglers.is_empty()
+    }
+
+    /// Append a bandwidth event (re-sorting lazily via
+    /// [`Self::normalize`]).
+    pub fn with_link_event(mut self, at_ns: SimTime, link: LinkId, bw_factor: f64) -> Self {
+        self.link_events.push(LinkEvent {
+            at_ns,
+            link,
+            bw_factor: bw_factor.max(0.0),
+        });
+        self.normalize();
+        self
+    }
+
+    /// Append a straggler rank.
+    pub fn with_straggler(mut self, rank: usize, multiplier: f64) -> Self {
+        self.stragglers.push((rank, multiplier.max(0.0)));
+        self
+    }
+
+    /// Override the retry/timeout budget.
+    pub fn with_retry(mut self, budget: u32, timeout_ns: SimTime) -> Self {
+        self.retry_budget = budget;
+        self.retry_timeout_ns = timeout_ns;
+        self
+    }
+
+    /// Restore the `(at_ns, link)` event order the engine's event cursor
+    /// relies on (stable, so same-instant same-link events keep their
+    /// insertion order and the last one wins).
+    pub fn normalize(&mut self) {
+        self.link_events
+            .sort_by_key(|e| (e.at_ns, e.link.0));
+    }
+}
+
+/// One clause of a `--faults` specification (see [`FaultProfile`]).
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultClause {
+    /// `kill=N@TIME` — hard-fail N random live links at TIME.
+    Kill { n: usize, at_ns: SimTime },
+    /// `degrade=N:F@TIME` — scale N random live links to F at TIME.
+    Degrade { n: usize, factor: f64, at_ns: SimTime },
+    /// `link=I:F@TIME` — explicit event on link index I.
+    Link {
+        index: usize,
+        factor: f64,
+        at_ns: SimTime,
+    },
+    /// `straggle=N:F` — N random ranks run F× slower.
+    Straggle { n: usize, factor: f64 },
+    /// `rank=R:F` — explicit straggler.
+    Rank { rank: usize, factor: f64 },
+    /// `jitter=S` — every link's bandwidth drawn uniformly from
+    /// `[1−S, 1] ×` nominal at t = 0 (degradation-only jitter).
+    Jitter { spread: f64 },
+    /// `retry=N` — detour attempts per failed transfer.
+    Retry { budget: u32 },
+    /// `timeout=T` — virtual time per detour attempt.
+    Timeout { ns: SimTime },
+}
+
+/// A parsed `--faults` specification: comma-separated clauses, e.g.
+///
+/// ```text
+/// kill=1@500us,degrade=2:0.5@200us,straggle=1:3,jitter=0.05,retry=2,timeout=1ms
+/// ```
+///
+/// A profile is *symbolic* — which links/ranks the random clauses hit is
+/// drawn per trial by [`FaultProfile::realize`] from a seeded
+/// [`Rng`], in fixed clause order, so a `(profile, cluster, seed)`
+/// triple always realizes the same [`FaultSchedule`].
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FaultProfile {
+    pub clauses: Vec<FaultClause>,
+}
+
+impl FaultProfile {
+    /// Parse a comma-separated clause list (grammar above). Empty input
+    /// parses to an empty profile (healthy fabric).
+    pub fn parse(spec: &str) -> Result<FaultProfile> {
+        let mut clauses = Vec::new();
+        for raw in spec.split(',') {
+            let raw = raw.trim();
+            if raw.is_empty() {
+                continue;
+            }
+            let (key, val) = raw
+                .split_once('=')
+                .ok_or_else(|| bad(raw, "expected key=value"))?;
+            let clause = match key {
+                "kill" => {
+                    let (n, at) = split_at(val, raw)?;
+                    FaultClause::Kill {
+                        n: parse_count(n, raw)?,
+                        at_ns: parse_ns(at)?,
+                    }
+                }
+                "degrade" => {
+                    let (nf, at) = split_at(val, raw)?;
+                    let (n, f) = split_colon(nf, raw)?;
+                    FaultClause::Degrade {
+                        n: parse_count(n, raw)?,
+                        factor: parse_factor(f, raw)?,
+                        at_ns: parse_ns(at)?,
+                    }
+                }
+                "link" => {
+                    let (nf, at) = split_at(val, raw)?;
+                    let (i, f) = split_colon(nf, raw)?;
+                    FaultClause::Link {
+                        index: parse_count(i, raw)?,
+                        factor: parse_factor(f, raw)?,
+                        at_ns: parse_ns(at)?,
+                    }
+                }
+                "straggle" => {
+                    let (n, f) = split_colon(val, raw)?;
+                    FaultClause::Straggle {
+                        n: parse_count(n, raw)?,
+                        factor: parse_factor_unbounded(f, raw)?,
+                    }
+                }
+                "rank" => {
+                    let (r, f) = split_colon(val, raw)?;
+                    FaultClause::Rank {
+                        rank: parse_count(r, raw)?,
+                        factor: parse_factor_unbounded(f, raw)?,
+                    }
+                }
+                "jitter" => FaultClause::Jitter {
+                    spread: parse_factor(val, raw)?,
+                },
+                "retry" => FaultClause::Retry {
+                    budget: parse_count(val, raw)? as u32,
+                },
+                "timeout" => FaultClause::Timeout { ns: parse_ns(val)? },
+                other => {
+                    return Err(Error::Usage(format!(
+                        "unknown fault clause '{other}' in '{raw}' (expected \
+                         kill|degrade|link|straggle|rank|jitter|retry|timeout)"
+                    )));
+                }
+            };
+            clauses.push(clause);
+        }
+        Ok(FaultProfile { clauses })
+    }
+
+    /// `true` when the profile has no clauses.
+    pub fn is_empty(&self) -> bool {
+        self.clauses.is_empty()
+    }
+
+    /// Realize the profile into a concrete schedule for one trial. All
+    /// random draws come from `Rng::new(seed)` in fixed clause order,
+    /// so the realization is a pure function of
+    /// `(profile, cluster, seed)`. Random link clauses draw without
+    /// replacement from the cluster's *live* (bandwidth > 0) directed
+    /// links; random stragglers draw from the GPU ranks.
+    pub fn realize(&self, cluster: &Cluster, seed: u64) -> FaultSchedule {
+        let mut rng = Rng::new(seed);
+        let mut schedule = FaultSchedule::default();
+        let live_links: Vec<usize> = (0..cluster.n_links())
+            .filter(|&l| cluster.links()[l].bandwidth > 0.0)
+            .collect();
+        for clause in &self.clauses {
+            match *clause {
+                FaultClause::Jitter { spread } => {
+                    for &l in &live_links {
+                        let f = 1.0 - spread.clamp(0.0, 1.0) * rng.next_f64();
+                        schedule.link_events.push(LinkEvent {
+                            at_ns: 0,
+                            link: LinkId(l),
+                            bw_factor: f,
+                        });
+                    }
+                }
+                FaultClause::Kill { n, at_ns } => {
+                    for l in draw_links(&mut rng, &live_links, n) {
+                        schedule.link_events.push(LinkEvent {
+                            at_ns,
+                            link: LinkId(l),
+                            bw_factor: 0.0,
+                        });
+                    }
+                }
+                FaultClause::Degrade { n, factor, at_ns } => {
+                    for l in draw_links(&mut rng, &live_links, n) {
+                        schedule.link_events.push(LinkEvent {
+                            at_ns,
+                            link: LinkId(l),
+                            bw_factor: factor,
+                        });
+                    }
+                }
+                FaultClause::Link {
+                    index,
+                    factor,
+                    at_ns,
+                } => {
+                    if index < cluster.n_links() {
+                        schedule.link_events.push(LinkEvent {
+                            at_ns,
+                            link: LinkId(index),
+                            bw_factor: factor,
+                        });
+                    }
+                }
+                FaultClause::Straggle { n, factor } => {
+                    let ranks: Vec<usize> = (0..cluster.n_gpus()).collect();
+                    for r in draw_links(&mut rng, &ranks, n) {
+                        schedule.stragglers.push((r, factor));
+                    }
+                }
+                FaultClause::Rank { rank, factor } => {
+                    schedule.stragglers.push((rank, factor));
+                }
+                FaultClause::Retry { budget } => schedule.retry_budget = budget,
+                FaultClause::Timeout { ns } => schedule.retry_timeout_ns = ns,
+            }
+        }
+        schedule.normalize();
+        schedule
+    }
+}
+
+/// Draw `n` distinct elements of `pool` (all of them when `n >= len`),
+/// in draw order — deterministic given the generator state.
+fn draw_links(rng: &mut Rng, pool: &[usize], n: usize) -> Vec<usize> {
+    if n >= pool.len() {
+        return pool.to_vec();
+    }
+    let mut remaining: Vec<usize> = pool.to_vec();
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let i = rng.range_usize(0, remaining.len() - 1);
+        out.push(remaining.swap_remove(i));
+    }
+    out
+}
+
+/// Parse a duration with an optional `ns`/`us`/`ms`/`s` suffix (bare
+/// numbers are nanoseconds): `"500us"`, `"1.5ms"`, `"2s"`, `"1500"`.
+pub fn parse_ns(s: &str) -> Result<SimTime> {
+    let s = s.trim();
+    let (num, mult) = if let Some(v) = s.strip_suffix("ns") {
+        (v, 1.0)
+    } else if let Some(v) = s.strip_suffix("us") {
+        (v, 1.0e3)
+    } else if let Some(v) = s.strip_suffix("ms") {
+        (v, 1.0e6)
+    } else if let Some(v) = s.strip_suffix('s') {
+        (v, 1.0e9)
+    } else {
+        (s, 1.0)
+    };
+    let x: f64 = num
+        .trim()
+        .parse()
+        .map_err(|_| Error::Usage(format!("cannot parse duration '{s}'")))?;
+    if x < 0.0 {
+        return Err(Error::Usage(format!("negative duration '{s}'")));
+    }
+    Ok((x * mult).round() as SimTime)
+}
+
+fn bad(clause: &str, why: &str) -> Error {
+    Error::Usage(format!("bad fault clause '{clause}': {why}"))
+}
+
+fn split_at<'a>(val: &'a str, clause: &str) -> Result<(&'a str, &'a str)> {
+    val.split_once('@')
+        .ok_or_else(|| bad(clause, "expected ...@TIME"))
+}
+
+fn split_colon<'a>(val: &'a str, clause: &str) -> Result<(&'a str, &'a str)> {
+    val.split_once(':')
+        .ok_or_else(|| bad(clause, "expected A:B"))
+}
+
+fn parse_count(s: &str, clause: &str) -> Result<usize> {
+    s.trim()
+        .parse()
+        .map_err(|_| bad(clause, "expected an integer"))
+}
+
+fn parse_factor(s: &str, clause: &str) -> Result<f64> {
+    let f: f64 = s
+        .trim()
+        .parse()
+        .map_err(|_| bad(clause, "expected a factor"))?;
+    if !(0.0..=1.0).contains(&f) {
+        return Err(bad(clause, "factor must be in [0, 1]"));
+    }
+    Ok(f)
+}
+
+fn parse_factor_unbounded(s: &str, clause: &str) -> Result<f64> {
+    let f: f64 = s
+        .trim()
+        .parse()
+        .map_err(|_| bad(clause, "expected a multiplier"))?;
+    if f < 0.0 {
+        return Err(bad(clause, "multiplier must be >= 0"));
+    }
+    Ok(f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::presets::kesch;
+
+    #[test]
+    fn parse_ns_suffixes() {
+        assert_eq!(parse_ns("1500").unwrap(), 1500);
+        assert_eq!(parse_ns("1500ns").unwrap(), 1500);
+        assert_eq!(parse_ns("500us").unwrap(), 500_000);
+        assert_eq!(parse_ns("1.5ms").unwrap(), 1_500_000);
+        assert_eq!(parse_ns("2s").unwrap(), 2_000_000_000);
+        assert!(parse_ns("banana").is_err());
+        assert!(parse_ns("-3us").is_err());
+    }
+
+    #[test]
+    fn profile_grammar_round_trip() {
+        let p = FaultProfile::parse(
+            "kill=1@500us,degrade=2:0.5@200us,link=7:0.25@1ms,straggle=1:3,\
+             rank=0:2.5,jitter=0.05,retry=4,timeout=2ms",
+        )
+        .unwrap();
+        assert_eq!(p.clauses.len(), 8);
+        assert_eq!(
+            p.clauses[0],
+            FaultClause::Kill {
+                n: 1,
+                at_ns: 500_000
+            }
+        );
+        assert_eq!(
+            p.clauses[3],
+            FaultClause::Straggle { n: 1, factor: 3.0 }
+        );
+        assert!(FaultProfile::parse("").unwrap().is_empty());
+        assert!(FaultProfile::parse("bogus=1").is_err());
+        assert!(FaultProfile::parse("kill=1").is_err(), "missing @TIME");
+        assert!(FaultProfile::parse("degrade=1:1.5@0").is_err(), "factor > 1");
+    }
+
+    #[test]
+    fn realize_is_deterministic_and_seed_sensitive() {
+        let cluster = kesch(2, 8);
+        let p = FaultProfile::parse("kill=2@500us,degrade=3:0.5@200us,straggle=2:3").unwrap();
+        let a = p.realize(&cluster, 42);
+        let b = p.realize(&cluster, 42);
+        assert_eq!(a, b, "same seed must realize the same schedule");
+        let c = p.realize(&cluster, 43);
+        assert_ne!(a, c, "different seeds should hit different links");
+        assert_eq!(a.link_events.len(), 5);
+        assert_eq!(a.stragglers.len(), 2);
+        // events come out sorted by (time, link)
+        for w in a.link_events.windows(2) {
+            assert!((w[0].at_ns, w[0].link.0) <= (w[1].at_ns, w[1].link.0));
+        }
+        // kills draw distinct links
+        let kills: Vec<usize> = a
+            .link_events
+            .iter()
+            .filter(|e| e.bw_factor == 0.0)
+            .map(|e| e.link.0)
+            .collect();
+        assert_eq!(kills.len(), 2);
+        assert_ne!(kills[0], kills[1]);
+    }
+
+    #[test]
+    fn empty_schedule_and_profile() {
+        let s = FaultSchedule::default();
+        assert!(s.is_empty());
+        assert_eq!(s.retry_budget, DEFAULT_RETRY_BUDGET);
+        assert_eq!(s.retry_timeout_ns, DEFAULT_RETRY_TIMEOUT_NS);
+        let cluster = kesch(1, 4);
+        let realized = FaultProfile::default().realize(&cluster, 7);
+        assert!(realized.is_empty());
+        assert_eq!(realized, s);
+    }
+
+    #[test]
+    fn jitter_degrades_only() {
+        let cluster = kesch(1, 8);
+        let p = FaultProfile::parse("jitter=0.1").unwrap();
+        let s = p.realize(&cluster, 9);
+        assert!(!s.link_events.is_empty());
+        for e in &s.link_events {
+            assert_eq!(e.at_ns, 0);
+            assert!(
+                (0.9..=1.0).contains(&e.bw_factor),
+                "jitter factor {} out of [0.9, 1]",
+                e.bw_factor
+            );
+        }
+    }
+
+    #[test]
+    fn builders_keep_events_sorted() {
+        let s = FaultSchedule::default()
+            .with_link_event(2000, LinkId(3), 0.5)
+            .with_link_event(1000, LinkId(7), 0.0)
+            .with_straggler(1, 2.0)
+            .with_retry(1, 500);
+        assert_eq!(s.link_events[0].link, LinkId(7));
+        assert_eq!(s.retry_budget, 1);
+        assert_eq!(s.retry_timeout_ns, 500);
+        assert!(!s.is_empty());
+    }
+}

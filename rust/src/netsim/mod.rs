@@ -17,13 +17,15 @@
 
 pub mod engine;
 pub mod fairshare;
+pub mod faults;
 pub mod queue;
 pub mod time;
 pub mod trace;
 pub mod transfer;
 
-pub use engine::{Engine, ExecResult};
+pub use engine::{DegradedOutcome, Engine, ExecResult};
 pub use fairshare::{maxmin_rates, LinkModel};
+pub use faults::{FaultProfile, FaultSchedule, LinkEvent};
 pub use time::{SimTime, UNREACHABLE_NS};
 pub use trace::FlowEvent;
 pub use transfer::{

@@ -15,6 +15,7 @@
 //! * [`selector`] — runtime lookup: `MV2-GDR-Opt` = tuned selection;
 //! * [`persist`] — save/load tables as JSON artifacts.
 
+pub mod montecarlo;
 pub mod persist;
 pub mod selector;
 pub mod space;

@@ -1,0 +1,268 @@
+//! Monte Carlo fault trials: p50/p99 makespan per `(algorithm, size,
+//! fault profile)` over N seeded realizations.
+//!
+//! Each *trial* realizes the [`FaultProfile`] with its own derived seed
+//! ([`trial_seed`] — a pure function of the base seed and the grid/trial
+//! indices, never of worker assignment), installs the schedule on a
+//! fresh-per-pair [`Engine`], executes the collective, and classifies
+//! the outcome through [`crate::netsim::engine::ExecResult::degraded_outcome`]:
+//! trials that delivered every rank contribute their makespan to the
+//! sample; aborted trials are counted but excluded (their makespans sit
+//! at the unreachable sentinel and would poison every percentile).
+//!
+//! The `(algorithm, size)` grid fans out across `std::thread::scope`
+//! workers exactly like [`super::sweep::tune_with_model`]: each worker
+//! owns a cluster clone and each grid pair builds its own `Comm` +
+//! `Engine`, so a pair's row is a pure function of `(cluster, pair,
+//! profile, config)` and the merged output is byte-identical for any
+//! `--tune-threads` setting — the determinism the acceptance gate pins.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::collectives::{self, Algorithm, CollectiveSpec};
+use crate::comm::Comm;
+use crate::netsim::faults::FaultProfile;
+use crate::netsim::{Engine, LinkModel};
+use crate::topology::Cluster;
+use crate::util::rng::SplitMix64;
+use crate::util::stats::Summary;
+
+/// Monte Carlo run parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct McConfig {
+    /// Seeded realizations per `(algorithm, size)` pair.
+    pub trials: usize,
+    /// Base seed; trial seeds derive from it via [`trial_seed`].
+    pub seed: u64,
+    pub link_model: LinkModel,
+    /// Worker fan-out bound (`None` = available parallelism). Output is
+    /// identical for every setting.
+    pub threads: Option<usize>,
+}
+
+impl Default for McConfig {
+    fn default() -> Self {
+        McConfig {
+            trials: 20,
+            seed: 0x5eed,
+            link_model: LinkModel::Fifo,
+            threads: None,
+        }
+    }
+}
+
+/// Makespan statistics over the delivered trials of one pair.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrialStats {
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    /// Half-width of the normal-approximation 95% confidence interval
+    /// on the mean (1.96·σ/√n; 0 for a single sample).
+    pub ci95_ns: f64,
+}
+
+/// One `(algorithm, size)` row of a Monte Carlo run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct McRow {
+    pub algorithm: String,
+    pub bytes: u64,
+    pub trials: usize,
+    /// Trials in which every rank received its payload.
+    pub delivered: usize,
+    /// `None` when every trial aborted (no delivered makespans).
+    pub stats: Option<TrialStats>,
+}
+
+impl McRow {
+    /// Fraction of trials that delivered every rank.
+    pub fn delivered_frac(&self) -> f64 {
+        if self.trials == 0 {
+            0.0
+        } else {
+            self.delivered as f64 / self.trials as f64
+        }
+    }
+}
+
+/// The seed a given trial realizes its schedule with: a pure function of
+/// `(base, pair index, trial index)`, whitened through SplitMix64 so
+/// neighbouring trials don't share fault draws.
+pub fn trial_seed(base: u64, pair: u64, trial: u64) -> u64 {
+    SplitMix64::new(base ^ pair.rotate_left(32) ^ trial).next_u64()
+}
+
+/// Run one `(algorithm, size)` pair: `cfg.trials` seeded realizations on
+/// a pair-local `Comm`/`Engine`. Self-contained on purpose — purity per
+/// pair is what makes the parallel fan-out byte-identical to serial.
+fn run_pair(
+    cluster: &Cluster,
+    algo: &Algorithm,
+    bytes: u64,
+    profile: &FaultProfile,
+    cfg: &McConfig,
+    pair: usize,
+) -> McRow {
+    let n = cluster.n_gpus();
+    let spec = CollectiveSpec::new(0, n, bytes);
+    let mut comm = Comm::new(cluster);
+    let mut engine = Engine::with_model(cluster, cfg.link_model);
+    let mut samples: Vec<f64> = Vec::with_capacity(cfg.trials);
+    let mut delivered = 0usize;
+    for trial in 0..cfg.trials {
+        let sched = profile.realize(cluster, trial_seed(cfg.seed, pair as u64, trial as u64));
+        engine.set_faults(Some(sched));
+        let cp = collectives::cached_plan(algo, &mut comm, &spec);
+        let res = engine.execute(&cp.plan);
+        let outcome = res.degraded_outcome(&cp.plan, n);
+        if outcome.is_complete() {
+            delivered += 1;
+            samples.push(outcome.makespan as f64);
+        }
+    }
+    engine.set_faults(None);
+    let stats = Summary::of(&samples).map(|s| TrialStats {
+        mean_ns: s.mean,
+        p50_ns: s.p50,
+        p99_ns: s.p99,
+        ci95_ns: if s.n > 1 {
+            1.96 * s.std_dev / (s.n as f64).sqrt()
+        } else {
+            0.0
+        },
+    });
+    McRow {
+        algorithm: algo.name(),
+        bytes,
+        trials: cfg.trials,
+        delivered,
+        stats,
+    }
+}
+
+/// Monte Carlo over the `algorithms × sizes` grid. Rows come back in
+/// grid order (algorithm-major) regardless of the worker fan-out.
+pub fn run(
+    cluster: &Cluster,
+    algorithms: &[Algorithm],
+    sizes: &[u64],
+    profile: &FaultProfile,
+    cfg: &McConfig,
+) -> Vec<McRow> {
+    let grid: Vec<(&Algorithm, u64)> = algorithms
+        .iter()
+        .flat_map(|a| sizes.iter().map(move |&b| (a, b)))
+        .collect();
+    let n_workers = cfg
+        .threads
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        })
+        .max(1)
+        .min(grid.len().max(1));
+    if n_workers <= 1 {
+        return grid
+            .iter()
+            .enumerate()
+            .map(|(p, &(algo, bytes))| run_pair(cluster, algo, bytes, profile, cfg, p))
+            .collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<McRow>>> = grid.iter().map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..n_workers {
+            // cluster clone per worker: the route-intern table is
+            // interior-mutable and intentionally not Sync
+            let local = cluster.clone();
+            let next = &next;
+            let slots = &slots;
+            let grid = &grid;
+            s.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= grid.len() {
+                    break;
+                }
+                let (algo, bytes) = grid[i];
+                let row = run_pair(&local, algo, bytes, profile, cfg, i);
+                *slots[i].lock().expect("mc slot poisoned") = Some(row);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .expect("mc slot poisoned")
+                .expect("mc row missing")
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::presets::kesch;
+
+    fn profile() -> FaultProfile {
+        FaultProfile::parse("degrade=1:0.5@200us,straggle=1:2,jitter=0.05").unwrap()
+    }
+
+    #[test]
+    fn rows_cover_grid_in_order() {
+        let cluster = kesch(1, 4);
+        let algos = [Algorithm::Direct, Algorithm::Chain];
+        let sizes = [4u64, 64 << 10];
+        let cfg = McConfig {
+            trials: 3,
+            threads: Some(1),
+            ..McConfig::default()
+        };
+        let rows = run(&cluster, &algos, &sizes, &profile(), &cfg);
+        assert_eq!(rows.len(), 4);
+        assert_eq!(rows[0].algorithm, Algorithm::Direct.name());
+        assert_eq!(rows[0].bytes, 4);
+        assert_eq!(rows[3].algorithm, Algorithm::Chain.name());
+        assert_eq!(rows[3].bytes, 64 << 10);
+        for r in &rows {
+            assert_eq!(r.trials, 3);
+            assert!(r.delivered <= r.trials);
+        }
+    }
+
+    #[test]
+    fn thread_fanout_and_reruns_are_identical() {
+        let cluster = kesch(1, 4);
+        let algos = [Algorithm::Chain, Algorithm::Knomial { k: 2 }];
+        let sizes = [64u64 << 10];
+        let cfg = McConfig {
+            trials: 4,
+            threads: Some(1),
+            ..McConfig::default()
+        };
+        let reference = run(&cluster, &algos, &sizes, &profile(), &cfg);
+        for threads in [Some(1), Some(2), None] {
+            let cfg_t = McConfig { threads, ..cfg };
+            let rows = run(&cluster, &algos, &sizes, &profile(), &cfg_t);
+            assert_eq!(rows, reference, "threads={threads:?} diverged");
+        }
+    }
+
+    #[test]
+    fn degraded_only_profile_delivers_everything() {
+        // no kill clause ⇒ every trial completes; stats must be present
+        let cluster = kesch(1, 4);
+        let cfg = McConfig {
+            trials: 3,
+            threads: Some(1),
+            ..McConfig::default()
+        };
+        let rows = run(&cluster, &[Algorithm::Direct], &[4], &profile(), &cfg);
+        assert_eq!(rows[0].delivered, 3);
+        let stats = rows[0].stats.as_ref().expect("delivered trials");
+        assert!(stats.p50_ns <= stats.p99_ns);
+        assert!((rows[0].delivered_frac() - 1.0).abs() < 1e-12);
+    }
+}

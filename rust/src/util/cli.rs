@@ -25,6 +25,10 @@ pub struct Args {
     flags: Vec<String>,
     positionals: Vec<String>,
     consumed: Vec<String>,
+    /// Option keys that appeared more than once — silently keeping the
+    /// last occurrence hid typos like `--faults a --faults b`; reported
+    /// as a usage error by [`Args::finish`].
+    dups: Vec<String>,
 }
 
 impl Args {
@@ -33,18 +37,25 @@ impl Args {
         let mut opts = HashMap::new();
         let mut flags = Vec::new();
         let mut positionals = Vec::new();
+        let mut dups = Vec::new();
         let mut it = argv.into_iter().peekable();
         while let Some(arg) = it.next() {
             if let Some(rest) = arg.strip_prefix("--") {
                 if let Some(eq) = rest.find('=') {
-                    opts.insert(format!("--{}", &rest[..eq]), rest[eq + 1..].to_string());
+                    let key = format!("--{}", &rest[..eq]);
+                    if opts.insert(key.clone(), rest[eq + 1..].to_string()).is_some() {
+                        dups.push(key);
+                    }
                 } else if it
                     .peek()
                     .map(|next| !next.starts_with("--"))
                     .unwrap_or(false)
                 {
                     let val = it.next().unwrap();
-                    opts.insert(format!("--{rest}"), val);
+                    let key = format!("--{rest}");
+                    if opts.insert(key.clone(), val).is_some() {
+                        dups.push(key);
+                    }
                 } else {
                     flags.push(format!("--{rest}"));
                 }
@@ -57,6 +68,7 @@ impl Args {
             flags,
             positionals,
             consumed: Vec::new(),
+            dups,
         }
     }
 
@@ -132,8 +144,12 @@ impl Args {
         }
     }
 
-    /// Error if any `--options` remain that were never consumed.
+    /// Error if any option was given twice, or any `--options` remain
+    /// that were never consumed.
     pub fn finish(self) -> Result<()> {
+        if let Some(d) = self.dups.first() {
+            return Err(Error::Usage(format!("option {d} given more than once")));
+        }
         for k in self.opts.keys() {
             if !self.consumed.contains(k) {
                 return Err(Error::Usage(format!("unknown option {k}")));
@@ -225,6 +241,19 @@ mod tests {
     fn bad_parse_is_error() {
         let mut a = Args::new(argv("--gpus banana"));
         assert!(a.opt_parse::<usize>("--gpus").is_err());
+    }
+
+    #[test]
+    fn duplicate_option_rejected() {
+        // last-one-wins used to swallow the first value silently
+        let mut a = Args::new(argv("--gpus 4 --gpus 8"));
+        assert_eq!(a.opt_parse::<usize>("--gpus").unwrap(), Some(8));
+        let err = a.finish().unwrap_err();
+        assert!(err.to_string().contains("more than once"), "{err}");
+        // mixed `--k v` and `--k=v` forms count as the same option
+        let mut b = Args::new(argv("--size=8K --size 16K"));
+        let _ = b.opt("--size");
+        assert!(b.finish().is_err());
     }
 
     #[test]

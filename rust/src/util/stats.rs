@@ -14,28 +14,33 @@ pub struct Summary {
 }
 
 impl Summary {
-    /// Compute a summary; panics on an empty sample.
-    pub fn of(samples: &[f64]) -> Summary {
-        assert!(!samples.is_empty(), "Summary::of on empty sample");
-        let n = samples.len();
-        let mean = samples.iter().sum::<f64>() / n as f64;
+    /// Compute a summary. NaN observations are dropped first (they carry
+    /// no ordering information, and one of them used to poison every
+    /// percentile through the sort); returns `None` when nothing remains
+    /// — e.g. a Monte Carlo trial vector where every trial aborted.
+    pub fn of(samples: &[f64]) -> Option<Summary> {
+        let mut sorted: Vec<f64> = samples.iter().copied().filter(|x| !x.is_nan()).collect();
+        if sorted.is_empty() {
+            return None;
+        }
+        let n = sorted.len();
+        let mean = sorted.iter().sum::<f64>() / n as f64;
         let var = if n > 1 {
-            samples.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (n - 1) as f64
+            sorted.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (n - 1) as f64
         } else {
             0.0
         };
-        let mut sorted = samples.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        Summary {
+        sorted.sort_by(f64::total_cmp);
+        Some(Summary {
             n,
             mean,
             std_dev: var.sqrt(),
             min: sorted[0],
             max: sorted[n - 1],
-            p50: percentile_sorted(&sorted, 50.0),
-            p90: percentile_sorted(&sorted, 90.0),
-            p99: percentile_sorted(&sorted, 99.0),
-        }
+            p50: percentile_sorted(&sorted, 50.0).expect("non-empty"),
+            p90: percentile_sorted(&sorted, 90.0).expect("non-empty"),
+            p99: percentile_sorted(&sorted, 99.0).expect("non-empty"),
+        })
     }
 
     /// Relative standard deviation (coefficient of variation).
@@ -48,22 +53,26 @@ impl Summary {
     }
 }
 
-/// Linear-interpolated percentile of an already-sorted sample.
-pub fn percentile_sorted(sorted: &[f64], pct: f64) -> f64 {
-    assert!(!sorted.is_empty());
+/// Linear-interpolated percentile of an already-sorted sample; `None`
+/// on an empty one. The percentile itself must be in `[0, 100]` — that
+/// is a caller bug, not a data condition, and still asserts.
+pub fn percentile_sorted(sorted: &[f64], pct: f64) -> Option<f64> {
     assert!((0.0..=100.0).contains(&pct));
+    if sorted.is_empty() {
+        return None;
+    }
     if sorted.len() == 1 {
-        return sorted[0];
+        return Some(sorted[0]);
     }
     let rank = pct / 100.0 * (sorted.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
-    if lo == hi {
+    Some(if lo == hi {
         sorted[lo]
     } else {
         let frac = rank - lo as f64;
         sorted[lo] * (1.0 - frac) + sorted[hi] * frac
-    }
+    })
 }
 
 /// Online mean/variance accumulator (Welford).
@@ -113,7 +122,7 @@ mod tests {
 
     #[test]
     fn summary_basic() {
-        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]).unwrap();
         assert_eq!(s.n, 5);
         assert!((s.mean - 3.0).abs() < 1e-12);
         assert_eq!(s.min, 1.0);
@@ -123,24 +132,47 @@ mod tests {
 
     #[test]
     fn summary_single() {
-        let s = Summary::of(&[7.5]);
+        let s = Summary::of(&[7.5]).unwrap();
         assert_eq!(s.mean, 7.5);
         assert_eq!(s.std_dev, 0.0);
         assert_eq!(s.p99, 7.5);
     }
 
     #[test]
+    fn summary_empty_is_none() {
+        assert!(Summary::of(&[]).is_none());
+    }
+
+    #[test]
+    fn summary_drops_nans() {
+        // all-NaN collapses to the empty sample
+        assert!(Summary::of(&[f64::NAN, f64::NAN]).is_none());
+        // a NaN among real observations is ignored, not propagated
+        let s = Summary::of(&[2.0, f64::NAN, 4.0]).unwrap();
+        assert_eq!(s.n, 2);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 2.0);
+        assert_eq!(s.max, 4.0);
+        assert!(!s.p99.is_nan());
+    }
+
+    #[test]
     fn percentile_interpolates() {
         let sorted = [0.0, 10.0];
-        assert!((percentile_sorted(&sorted, 50.0) - 5.0).abs() < 1e-12);
-        assert_eq!(percentile_sorted(&sorted, 0.0), 0.0);
-        assert_eq!(percentile_sorted(&sorted, 100.0), 10.0);
+        assert!((percentile_sorted(&sorted, 50.0).unwrap() - 5.0).abs() < 1e-12);
+        assert_eq!(percentile_sorted(&sorted, 0.0), Some(0.0));
+        assert_eq!(percentile_sorted(&sorted, 100.0), Some(10.0));
+    }
+
+    #[test]
+    fn percentile_empty_is_none() {
+        assert_eq!(percentile_sorted(&[], 50.0), None);
     }
 
     #[test]
     fn welford_matches_summary() {
         let xs: Vec<f64> = (0..100).map(|i| (i as f64).sin() * 10.0).collect();
-        let s = Summary::of(&xs);
+        let s = Summary::of(&xs).unwrap();
         let mut w = Welford::new();
         for &x in &xs {
             w.push(x);

@@ -1,0 +1,443 @@
+//! Fault-injection integration tests: empty-schedule golden parity
+//! across the algorithm × size × topology grid under both contention
+//! models, fair-share link conservation through a mid-flight link kill
+//! with detour re-routing, lone-surviving-flow parity between the
+//! models, bounded-retry degraded outcomes, and Monte Carlo
+//! determinism across thread counts and re-runs.
+
+use gdrbcast::collectives::{self, Algorithm, CollectiveSpec};
+use gdrbcast::comm::Comm;
+use gdrbcast::netsim::{
+    Deps, Engine, FaultProfile, FaultSchedule, LinkModel, Plan, SimOp, UNREACHABLE_NS,
+};
+use gdrbcast::topology::{presets, LinkKind};
+use gdrbcast::tuning::montecarlo::{self, McConfig};
+
+fn grid_algorithms() -> Vec<Algorithm> {
+    vec![
+        Algorithm::Direct,
+        Algorithm::Chain,
+        Algorithm::PipelinedChain { chunk: 64 << 10 },
+        Algorithm::Knomial { k: 2 },
+        Algorithm::Knomial { k: 4 },
+        Algorithm::ScatterRingAllgather,
+        Algorithm::HostStagedKnomial { k: 2 },
+        Algorithm::RingReduceScatter,
+        Algorithm::RingAllgather,
+        Algorithm::RingAllreduce,
+        Algorithm::TreeAllreduce { k: 2 },
+    ]
+}
+
+fn grid_topologies() -> Vec<(&'static str, gdrbcast::topology::Cluster)> {
+    vec![
+        ("flat(8)", presets::flat(8)),
+        ("kesch(1,8)", presets::kesch(1, 8)),
+        ("kesch(2,8)", presets::kesch(2, 8)),
+    ]
+}
+
+#[test]
+fn empty_schedule_golden_parity_grid() {
+    // the acceptance gate: an installed-but-empty FaultSchedule must be
+    // bit-identical to no schedule at all — per-op starts, completions
+    // and makespans — for every algorithm × size × topology, under both
+    // contention models
+    for model in LinkModel::ALL {
+        for (name, cluster) in &grid_topologies() {
+            let n = cluster.n_gpus();
+            let mut comm = Comm::new(cluster);
+            let mut healthy = Engine::with_model(cluster, model);
+            let mut gated = Engine::with_model(cluster, model);
+            gated.set_faults(Some(FaultSchedule::default()));
+            for algo in &grid_algorithms() {
+                for bytes in [4u64, 64 << 10, 16 << 20] {
+                    let spec = CollectiveSpec::collective(algo.kind(), 0, n, bytes);
+                    let bp = collectives::plan(algo, &mut comm, &spec);
+                    let a = healthy.execute(&bp.plan);
+                    let b = gated.execute(&bp.plan);
+                    let ctx = format!("{} {name} {} {bytes}B", model.name(), algo.name());
+                    assert_eq!(a.makespan, b.makespan, "{ctx}: makespan diverged");
+                    assert_eq!(a.start, b.start, "{ctx}: starts diverged");
+                    assert_eq!(a.done, b.done, "{ctx}: completions diverged");
+                    // and a healthy run reports a complete outcome
+                    let outcome = b.degraded_outcome(&bp.plan, n);
+                    assert!(outcome.is_complete(), "{ctx}: healthy run lost ranks");
+                    assert_eq!(outcome.delivered_makespan, outcome.makespan, "{ctx}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn clearing_faults_restores_healthy_execution() {
+    // a run under a real (destructive) schedule must not leak state into
+    // the next run: clearing the schedule restores bit-identical healthy
+    // results (the bw-scale / event-list reset path)
+    let cluster = presets::kesch(1, 8);
+    let n = cluster.n_gpus();
+    let profile =
+        FaultProfile::parse("kill=2@100us,degrade=2:0.3@50us,straggle=2:4,jitter=0.2").unwrap();
+    let schedule = profile.realize(&cluster, 0xdead_beef);
+    for model in LinkModel::ALL {
+        let mut comm = Comm::new(&cluster);
+        let mut reference = Engine::with_model(&cluster, model);
+        let mut reused = Engine::with_model(&cluster, model);
+        for algo in [Algorithm::Chain, Algorithm::Knomial { k: 2 }] {
+            let spec = CollectiveSpec::collective(algo.kind(), 0, n, 4 << 20);
+            let bp = collectives::plan(&algo, &mut comm, &spec);
+            let clean = reference.execute(&bp.plan);
+            reused.set_faults(Some(schedule.clone()));
+            let faulted = reused.execute(&bp.plan);
+            reused.set_faults(None);
+            let after = reused.execute(&bp.plan);
+            let ctx = format!("{} {}", model.name(), algo.name());
+            assert_ne!(
+                clean.makespan, faulted.makespan,
+                "{ctx}: destructive schedule changed nothing"
+            );
+            assert_eq!(clean.done, after.done, "{ctx}: fault state leaked");
+            assert_eq!(clean.makespan, after.makespan, "{ctx}: fault state leaked");
+        }
+    }
+}
+
+/// The concurrent-transfer plan the conservation test executes on
+/// kesch(2,16): op 0 is the long cross-node transfer whose IB rail the
+/// schedule kills mid-flight; the rest contend on node 1's PCIe tree.
+/// Zero overhead/issue so completions decompose exactly into
+/// drain-instant + route latency.
+fn conservation_plan(
+    cluster: &gdrbcast::topology::Cluster,
+) -> (Plan, Vec<gdrbcast::topology::RouteId>) {
+    let mut plan = Plan::new();
+    let mut routes = Vec::new();
+    let pairs: [(usize, usize, u64); 5] = [
+        (0, 16, 64 << 20), // the victim: node 0 -> node 1 over the s0 rail
+        (16, 17, 16 << 20),
+        (16, 20, 16 << 20), // shares gpu16's uplink with the one above
+        (18, 21, 16 << 20), // shares plx->root->plx with 16->20
+        (1, 2, 16 << 20),
+    ];
+    for (i, &(src, dst, bytes)) in pairs.iter().enumerate() {
+        let route = cluster
+            .route(cluster.rank_device(src), cluster.rank_device(dst))
+            .unwrap();
+        routes.push(route);
+        plan.push(
+            SimOp::Transfer {
+                route,
+                bytes,
+                overhead_ns: 0,
+                issue_ns: 0,
+                bw_cap: None,
+            },
+            Deps::none(),
+            Some((dst, i)),
+        );
+    }
+    (plan, routes)
+}
+
+#[test]
+fn fairshare_conserves_capacity_through_midflight_kill_and_reroute() {
+    // kill the victim's FDR uplink mid-flight. The fair-share loop must
+    // (a) drop the in-flight flow off the dead link and re-admit it on a
+    // detour after the retry timeout, (b) keep every link's allocated
+    // rate sum within its (possibly zeroed) capacity at every event
+    // instant, and (c) still deliver every rank
+    let cluster = presets::kesch(2, 16);
+    let (plan, plan_routes) = conservation_plan(&cluster);
+    let kill_ns: u64 = 2_000_000; // 2 ms — the 64 MB FDR flow needs ~9 ms
+    let victim_route = cluster
+        .route(cluster.rank_device(0), cluster.rank_device(16))
+        .unwrap();
+    let victim = cluster.route_view(victim_route);
+    let dead_link = *victim
+        .hops
+        .iter()
+        .find(|&&h| cluster.link(h).kind == LinkKind::IbFdr)
+        .expect("cross-node route crosses the FDR rail");
+    let schedule = FaultSchedule::default().with_link_event(kill_ns, dead_link, 0.0);
+    let timeout_ns = schedule.retry_timeout_ns;
+
+    let mut engine = Engine::with_model(&cluster, LinkModel::FairShare);
+    engine.set_faults(Some(schedule));
+    let (result, events) = engine.execute_with_flow_trace(&plan);
+
+    // (c) delivered everywhere, with the victim finishing after the kill
+    let outcome = result.degraded_outcome(&plan, cluster.n_gpus());
+    assert!(
+        outcome.is_complete(),
+        "detour must deliver: lost ranks {:?}",
+        outcome.undelivered
+    );
+    assert!(result.makespan < UNREACHABLE_NS);
+    assert!(
+        result.done[0] > kill_ns,
+        "victim was not in flight at the kill instant"
+    );
+
+    // (a) reconstruct the detour the engine re-admitted the victim on:
+    // the first attempt happens one retry timeout after the kill applies
+    let t_re = kill_ns + timeout_ns;
+    let meta = cluster.route_meta(victim_route);
+    let detour_id = engine
+        .detour_route(meta.src, meta.dst, t_re)
+        .expect("a socket-1 detour must survive a single-rail kill");
+    let detour = cluster.route_view(detour_id);
+    assert!(
+        !detour.hops.contains(&dead_link),
+        "detour still crosses the killed link"
+    );
+    assert!(
+        result.done[0] >= t_re + detour.latency_ns,
+        "victim cannot finish before its re-admission plus the detour latency"
+    );
+
+    // (b) per-link conservation at every event instant. Final route and
+    // drain instant per op (zero overheads: done = drain + latency):
+    let n_ops = plan.len();
+    let mut final_route = Vec::with_capacity(n_ops);
+    let mut drain = Vec::with_capacity(n_ops);
+    for op in 0..n_ops {
+        let r = if op == 0 { detour_id } else { plan_routes[op] };
+        let lat = cluster.route_view(r).latency_ns;
+        final_route.push(r);
+        drain.push(result.done[op].saturating_sub(lat));
+    }
+    let mut instants: Vec<u64> = events.iter().map(|e| e.t_ns).collect();
+    instants.dedup();
+    let mut cur_rate = vec![0.0f64; n_ops];
+    let mut cursor = 0usize;
+    for &t in &instants {
+        while cursor < events.len() && events[cursor].t_ns <= t {
+            cur_rate[events[cursor].op] = events[cursor].rate;
+            cursor += 1;
+        }
+        let mut per_link = vec![0.0f64; cluster.n_links()];
+        for op in 0..n_ops {
+            if t >= drain[op] {
+                continue; // already retired
+            }
+            // the victim is off the fabric between the kill and its
+            // re-admission, and runs the detour afterwards
+            let route = if op == 0 {
+                if t >= kill_ns && t < t_re {
+                    continue;
+                }
+                if t < kill_ns {
+                    plan_routes[0]
+                } else {
+                    detour_id
+                }
+            } else {
+                final_route[op]
+            };
+            for &h in cluster.route_view(route).hops.iter() {
+                per_link[h.0] += cur_rate[op];
+            }
+        }
+        for (l, &used) in per_link.iter().enumerate() {
+            let factor = if l == dead_link.0 && t >= kill_ns {
+                0.0
+            } else {
+                1.0
+            };
+            let cap = cluster.links()[l].bandwidth * factor;
+            assert!(
+                used <= cap * (1.0 + 1e-6) + 1e-6,
+                "t={t}: link {l} oversubscribed ({used} > {cap})"
+            );
+        }
+    }
+}
+
+#[test]
+fn lone_surviving_flow_matches_fifo_under_faults() {
+    // two disjoint transfers; one's only uplink is killed at t = 0 with
+    // a zero retry budget. Both models must agree exactly: the survivor
+    // is a lone flow (max-min rate == FIFO bottleneck) and the victim
+    // completes through the shared sentinel formula
+    let cluster = presets::flat(4);
+    let bytes: u64 = 8 << 20;
+    let mut plan = Plan::new();
+    for &(src, dst) in &[(0usize, 1usize), (2, 3)] {
+        let route = cluster
+            .route(cluster.rank_device(src), cluster.rank_device(dst))
+            .unwrap();
+        plan.push(
+            SimOp::Transfer {
+                route,
+                bytes,
+                overhead_ns: 1000,
+                issue_ns: 1000,
+                bw_cap: None,
+            },
+            Deps::none(),
+            Some((dst, 0)),
+        );
+    }
+    let victim_route = cluster
+        .route(cluster.rank_device(0), cluster.rank_device(1))
+        .unwrap();
+    let dead_link = cluster.route_view(victim_route).hops[0];
+    let schedule = FaultSchedule::default()
+        .with_link_event(0, dead_link, 0.0)
+        .with_retry(0, 0);
+
+    let mut results = Vec::new();
+    for model in LinkModel::ALL {
+        let mut engine = Engine::with_model(&cluster, model);
+        engine.set_faults(Some(schedule.clone()));
+        results.push((model, engine.execute(&plan)));
+    }
+    let (_, fifo) = &results[0];
+    for (model, r) in &results[1..] {
+        assert_eq!(fifo.done, r.done, "{} diverged from FIFO", model.name());
+        assert_eq!(fifo.makespan, r.makespan, "{}", model.name());
+    }
+    // the victim hit the sentinel, the survivor did not, and the
+    // degraded outcome reports exactly that split
+    for (model, r) in &results {
+        assert!(r.done[0] >= UNREACHABLE_NS, "{}", model.name());
+        assert!(r.done[1] < UNREACHABLE_NS, "{}", model.name());
+        let outcome = r.degraded_outcome(&plan, cluster.n_gpus());
+        assert_eq!(outcome.undelivered, vec![1], "{}", model.name());
+        assert_eq!(outcome.delivered_ranks(), 3, "{}", model.name());
+        assert_eq!(outcome.delivered_makespan, r.done[1], "{}", model.name());
+        assert!(outcome.makespan >= UNREACHABLE_NS, "{}", model.name());
+    }
+}
+
+#[test]
+fn dead_rail_detours_or_degrades_with_budget() {
+    // a cross-node transfer whose IB rail dies at t = 0: with the
+    // default retry budget both models deliver over a detour (slower
+    // than healthy); with a zero budget the destination rank is
+    // reported undelivered instead of the run panicking
+    let cluster = presets::kesch(2, 8);
+    let route = cluster
+        .route(cluster.rank_device(0), cluster.rank_device(8))
+        .unwrap();
+    let dead_link = *cluster
+        .route_view(route)
+        .hops
+        .iter()
+        .find(|&&h| cluster.link(h).kind == LinkKind::IbFdr)
+        .expect("cross-node route crosses the FDR rail");
+    let mut plan = Plan::new();
+    plan.push(
+        SimOp::Transfer {
+            route,
+            bytes: 4 << 20,
+            overhead_ns: 1000,
+            issue_ns: 1000,
+            bw_cap: None,
+        },
+        Deps::none(),
+        Some((8, 0)),
+    );
+    for model in LinkModel::ALL {
+        let mut healthy = Engine::with_model(&cluster, model);
+        let base = healthy.execute(&plan);
+
+        let mut engine = Engine::with_model(&cluster, model);
+        engine.set_faults(Some(
+            FaultSchedule::default().with_link_event(0, dead_link, 0.0),
+        ));
+        let detoured = engine.execute(&plan);
+        let outcome = detoured.degraded_outcome(&plan, cluster.n_gpus());
+        assert!(outcome.is_complete(), "{}: detour failed", model.name());
+        assert!(
+            detoured.makespan > base.makespan,
+            "{}: detour cannot beat the direct rail",
+            model.name()
+        );
+        assert!(detoured.makespan < UNREACHABLE_NS, "{}", model.name());
+
+        let mut starved = Engine::with_model(&cluster, model);
+        starved.set_faults(Some(
+            FaultSchedule::default()
+                .with_link_event(0, dead_link, 0.0)
+                .with_retry(0, 0),
+        ));
+        let lost = starved.execute(&plan).degraded_outcome(&plan, cluster.n_gpus());
+        assert_eq!(lost.undelivered, vec![8], "{}", model.name());
+        assert!(lost.makespan >= UNREACHABLE_NS, "{}", model.name());
+        assert!(lost.delivered_makespan < UNREACHABLE_NS, "{}", model.name());
+    }
+}
+
+#[test]
+fn stragglers_and_degradation_slow_both_models_deterministically() {
+    // a non-destructive profile (no kills) must slow execution without
+    // losing ranks, identically across engine instances
+    let cluster = presets::kesch(1, 8);
+    let n = cluster.n_gpus();
+    let profile = FaultProfile::parse("degrade=2:0.4@100us,straggle=1:3,jitter=0.05").unwrap();
+    let schedule = profile.realize(&cluster, 17);
+    let mut comm = Comm::new(&cluster);
+    let spec = CollectiveSpec::new(0, n, 8 << 20);
+    let bp = collectives::plan(&Algorithm::Knomial { k: 2 }, &mut comm, &spec);
+    for model in LinkModel::ALL {
+        let mut healthy = Engine::with_model(&cluster, model);
+        let base = healthy.execute(&bp.plan).makespan;
+        let mut a = Engine::with_model(&cluster, model);
+        a.set_faults(Some(schedule.clone()));
+        let ra = a.execute(&bp.plan);
+        let mut b = Engine::with_model(&cluster, model);
+        b.set_faults(Some(schedule.clone()));
+        let rb = b.execute(&bp.plan);
+        assert_eq!(ra.done, rb.done, "{}: nondeterministic", model.name());
+        assert!(
+            ra.makespan > base,
+            "{}: degradation + stragglers must cost time",
+            model.name()
+        );
+        assert!(
+            ra.degraded_outcome(&bp.plan, n).is_complete(),
+            "{}: non-destructive profile lost ranks",
+            model.name()
+        );
+    }
+}
+
+#[test]
+fn montecarlo_rows_are_identical_across_runs_and_threads() {
+    // the CLI-facing determinism gate: same (profile, seed, cluster) ⇒
+    // byte-identical p50/p99 rows on every re-run and for every
+    // --tune-threads setting, under both link models
+    let cluster = presets::kesch(2, 8);
+    let algos = [Algorithm::Chain, Algorithm::Knomial { k: 2 }];
+    let sizes = [64u64 << 10, 4 << 20];
+    let profile = FaultProfile::parse("kill=1@500us,straggle=1:3,jitter=0.05").unwrap();
+    for link_model in LinkModel::ALL {
+        let cfg = McConfig {
+            trials: 6,
+            seed: 42,
+            link_model,
+            threads: Some(1),
+        };
+        let reference = montecarlo::run(&cluster, &algos, &sizes, &profile, &cfg);
+        assert_eq!(reference.len(), algos.len() * sizes.len());
+        for r in &reference {
+            assert_eq!(r.trials, 6);
+        }
+        // re-run with a freshly parsed profile: determinism must not
+        // depend on object identity
+        let again = FaultProfile::parse("kill=1@500us,straggle=1:3,jitter=0.05").unwrap();
+        let rerun = montecarlo::run(&cluster, &algos, &sizes, &again, &cfg);
+        assert_eq!(rerun, reference, "{}: re-run diverged", link_model.name());
+        for threads in [Some(2), Some(4), None] {
+            let cfg_t = McConfig { threads, ..cfg };
+            let rows = montecarlo::run(&cluster, &algos, &sizes, &profile, &cfg_t);
+            assert_eq!(
+                rows, reference,
+                "{}: threads={threads:?} diverged",
+                link_model.name()
+            );
+        }
+    }
+}
