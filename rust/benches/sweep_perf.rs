@@ -18,6 +18,7 @@ use std::time::Instant;
 
 use gdrbcast::bench::harness::{link_models_from_env, Bencher};
 use gdrbcast::collectives::{self, Algorithm, BcastSpec};
+use gdrbcast::coordinator::{RecoveryConfig, RecoveryPolicy};
 use gdrbcast::comm::Comm;
 use gdrbcast::netsim::{Engine, FaultProfile, LinkModel, OpId, Plan, SimOp};
 use gdrbcast::topology::{presets, Cluster};
@@ -313,8 +314,10 @@ fn main() {
                 link_model: model,
                 threads: None,
             };
-            let mc = montecarlo::run(&cluster, &mc_algos, &mc_sizes, &profile, &cfg);
-            let rerun = montecarlo::run(&cluster, &mc_algos, &mc_sizes, &profile, &cfg);
+            let mc = montecarlo::run(&cluster, &mc_algos, &mc_sizes, &profile, &cfg)
+                .expect("profile indices fit the smoke preset");
+            let rerun = montecarlo::run(&cluster, &mc_algos, &mc_sizes, &profile, &cfg)
+                .expect("profile indices fit the smoke preset");
             deterministic &= mc == rerun;
             for row in &mc {
                 let base = format!("fault_sweep/{}/{}{sfx}", row.algorithm, row.bytes);
@@ -341,6 +344,69 @@ fn main() {
             "fault_sweep/determinism",
             if deterministic { 1.0 } else { 0.0 },
         ));
+
+        // ---- recovery-policy smoke -----------------------------------
+        // (a) a rank-isolating kill at t = 0 with a zero retry budget:
+        // `none` aborts every trial while the recovering policies finish
+        // the job — pinning the `recovery_sweep/<policy>/{p50,p99,
+        // aborted_frac}` rows CI gates; (b) a zero-fault baseline where
+        // every policy runs the identical healthy job — CI asserts
+        // replan's p99 does not exceed restart's there (a policy must
+        // cost nothing when nothing fails).
+        let victim = cluster.rank_device(cluster.n_gpus() - 1);
+        let kills: Vec<String> = cluster
+            .links()
+            .iter()
+            .filter(|l| l.src == victim || l.dst == victim)
+            .map(|l| format!("link={}:0.0@0", l.id.0))
+            .collect();
+        let fatal = FaultProfile::parse(&format!("{},retry=0,timeout=100us", kills.join(",")))
+            .expect("rank-isolating profile");
+        let zero_fault = FaultProfile::parse("").expect("empty profile");
+        let policies = [
+            RecoveryConfig::default(),
+            RecoveryConfig::with_policy(RecoveryPolicy::Replan),
+            RecoveryConfig::with_policy(RecoveryPolicy::Shrink),
+            RecoveryConfig::with_policy(RecoveryPolicy::Restart {
+                restore_ns: gdrbcast::coordinator::recovery::DEFAULT_RESTORE_NS,
+            }),
+        ];
+        let rcfg = montecarlo::McConfig {
+            trials: 4,
+            seed: 0x5eed,
+            link_model: LinkModel::Fifo,
+            threads: Some(1),
+        };
+        for (prefix, profile) in [
+            ("recovery_sweep", &fatal),
+            ("recovery_sweep/zero_fault", &zero_fault),
+        ] {
+            let rrows = montecarlo::recovery_run(
+                &cluster,
+                &Algorithm::Chain,
+                64 << 10,
+                4,
+                &policies,
+                profile,
+                &rcfg,
+            )
+            .expect("recovery sweep on the smoke preset");
+            for row in &rrows {
+                let base = format!("{prefix}/{}", row.policy);
+                println!(
+                    "  recovery sweep {base}: {}/{} completed, {} recoveries",
+                    row.completed, row.trials, row.recoveries
+                );
+                if let Some(s) = &row.stats {
+                    rows.push(wall_row(&format!("{base}/p50"), s.p50_ns));
+                    rows.push(wall_row(&format!("{base}/p99"), s.p99_ns));
+                }
+                rows.push(wall_row(
+                    &format!("{base}/aborted_frac"),
+                    row.aborted_frac(),
+                ));
+            }
+        }
     }
 
     // ---- write BENCH_sweep.json (bencher rows + wall rows) -------------

@@ -23,6 +23,7 @@
 
 pub mod leader;
 pub mod metrics;
+pub mod recovery;
 pub mod schedule;
 pub mod timeline;
 pub mod train;
@@ -30,6 +31,9 @@ pub mod worker;
 
 pub use leader::{run_serial, run_threaded, SgdConfig};
 pub use metrics::{IterationMetrics, TrainingMetrics};
+pub use recovery::{
+    run_collective_job, run_training_job, JobOutcome, RecoveryConfig, RecoveryPolicy,
+};
 pub use schedule::{
     aggregation_time_ns, allreduce_time_ns, comm_time_ns, BcastBackend, TrainingMode,
 };

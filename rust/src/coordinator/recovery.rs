@@ -1,0 +1,769 @@
+//! The recovery layer: multi-iteration jobs driven *through* faults with
+//! pluggable recovery policies (PAPER.md §V's re-formed rings; the
+//! communicator-shrink / re-route / restart axis of the GPU-communication
+//! survey in PAPERS.md).
+//!
+//! PR 7's fault model stops at one collective: a killed link either
+//! detours inside the engine's retry budget or the run finishes degraded.
+//! Real jobs are *sequences* of iterations, and real stacks react — this
+//! module simulates an N-iteration job on the virtual clock, observing
+//! failures after a configurable **detection latency** (failures are not
+//! known the instant a link dies) and then applying a [`RecoveryPolicy`]:
+//!
+//! * [`RecoveryPolicy::Replan`] — rebuild the collective plan on the
+//!   *surviving topology*: observed-dead links are removed from the
+//!   routable graph ([`Cluster::kill_link`] bumps the topology
+//!   generation, so the fresh `Comm`'s template cache and the re-tuned
+//!   selector key on the new generation), ranks the failure disconnected
+//!   are dropped, and the job retries the failed iteration. Re-planned
+//!   routes avoid dead links entirely — no detour timeouts recur.
+//! * [`RecoveryPolicy::Shrink`] — elastic shrink: the topology is left
+//!   as-is (transfers crossing dead links keep paying engine-level
+//!   detours), but ranks the failure cut off are dropped and the job
+//!   continues at world size n−k with per-rank work rescaled (the
+//!   partitioned blocks re-tile over fewer ranks; compute per rank grows
+//!   by n/(n−k) for a fixed global batch).
+//! * [`RecoveryPolicy::Restart`] — checkpoint/restart: pay a
+//!   parameterized restore cost, rewind to the last checkpoint
+//!   ([`RecoveryConfig::checkpoint_every`]) and replay on pristine
+//!   hardware; faults already fired are healed, future ones still
+//!   strike ([`FaultSchedule::shifted_healed`]).
+//!
+//! Every recovery epoch rebuilds `Comm` + `Engine` from the (possibly
+//! mutated) topology — the engine's debug generation check makes reuse
+//! across a mutation a hard error, which is exactly the invariant this
+//! layer leans on. With an empty fault schedule no policy branch ever
+//! executes and every policy's job makespan is bit-identical to the
+//! no-recovery path (the golden-parity anchor in `rust/tests/recovery.rs`).
+
+use crate::collectives::{self, Algorithm, CollectiveSpec};
+use crate::comm::Comm;
+use crate::error::{Error, Result};
+use crate::models::{allreduce_buckets, bcast_messages, DnnModel, MessageSchedule};
+use crate::netsim::{Engine, FaultSchedule, LinkModel, UNREACHABLE_NS};
+use crate::topology::{Cluster, LinkId};
+use crate::tuning::Selector;
+
+use super::schedule::{
+    aggregation_time_ns, allreduce_time_ns, comm_time_ns, BcastBackend, TrainingMode,
+};
+use super::train::ExchangeOptions;
+
+/// Default failure-detection latency (100 µs of virtual time): the gap
+/// between a link dying and the job *observing* it (IB timeout / NCCL
+/// watchdog scale, compressed for simulation).
+pub const DEFAULT_DETECT_NS: u64 = 100_000;
+
+/// Default virtual-time cost of rebuilding the communicator + plans on a
+/// replan/shrink recovery (host-side work, cheap next to a restore).
+pub const DEFAULT_REPLAN_NS: u64 = 200_000;
+
+/// Default checkpoint-restore cost for `--recovery restart` when no
+/// explicit `:COST` is given (50 ms — reading a checkpoint back beats
+/// re-planning by orders of magnitude of virtual time).
+pub const DEFAULT_RESTORE_NS: u64 = 50_000_000;
+
+/// Default bound on recovery attempts before the job aborts.
+pub const DEFAULT_MAX_RECOVERIES: u32 = 8;
+
+/// What the job does when a failure is observed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RecoveryPolicy {
+    /// PR 7 behavior: the first iteration that loses a rank aborts the
+    /// job.
+    #[default]
+    None,
+    /// Re-plan on the surviving topology (dead links unroutable, dead
+    /// ranks dropped, plans rebuilt, selector re-tuned).
+    Replan,
+    /// Elastic shrink: drop cut-off ranks, keep going at n−k.
+    Shrink,
+    /// Checkpoint/restart: pay `restore_ns`, rewind to the last
+    /// checkpoint, replay on healed hardware.
+    Restart { restore_ns: u64 },
+}
+
+impl RecoveryPolicy {
+    /// Parse the `--recovery` CLI value: `none`, `replan`, `shrink`,
+    /// `restart` or `restart:<cost>` (duration suffixes as in `--faults`).
+    pub fn parse(s: &str) -> Result<RecoveryPolicy> {
+        let s = s.trim();
+        match s {
+            "none" => return Ok(RecoveryPolicy::None),
+            "replan" => return Ok(RecoveryPolicy::Replan),
+            "shrink" => return Ok(RecoveryPolicy::Shrink),
+            "restart" => {
+                return Ok(RecoveryPolicy::Restart {
+                    restore_ns: DEFAULT_RESTORE_NS,
+                })
+            }
+            _ => {}
+        }
+        if let Some(cost) = s.strip_prefix("restart:") {
+            return Ok(RecoveryPolicy::Restart {
+                restore_ns: crate::netsim::faults::parse_ns(cost)?,
+            });
+        }
+        Err(Error::Usage(format!(
+            "unknown recovery policy '{s}' (expected none|replan|shrink|restart[:<cost>])"
+        )))
+    }
+
+    /// Stable short name (report rows, tables).
+    pub fn name(&self) -> &'static str {
+        match self {
+            RecoveryPolicy::None => "none",
+            RecoveryPolicy::Replan => "replan",
+            RecoveryPolicy::Shrink => "shrink",
+            RecoveryPolicy::Restart { .. } => "restart",
+        }
+    }
+}
+
+/// The recovery knobs threaded through [`ExchangeOptions`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RecoveryConfig {
+    pub policy: RecoveryPolicy,
+    /// Virtual time between a kill firing and the job observing it.
+    pub detect_ns: u64,
+    /// Virtual time charged for a replan/shrink communicator rebuild.
+    pub replan_ns: u64,
+    /// Recovery attempts before the job gives up.
+    pub max_recoveries: u32,
+    /// Checkpoint cadence for the restart policy (iterations). The job
+    /// rewinds to the highest completed multiple on restart.
+    pub checkpoint_every: u32,
+}
+
+impl Default for RecoveryConfig {
+    fn default() -> Self {
+        RecoveryConfig {
+            policy: RecoveryPolicy::None,
+            detect_ns: DEFAULT_DETECT_NS,
+            replan_ns: DEFAULT_REPLAN_NS,
+            max_recoveries: DEFAULT_MAX_RECOVERIES,
+            checkpoint_every: 1,
+        }
+    }
+}
+
+impl RecoveryConfig {
+    /// A config running `policy` with every other knob at its default.
+    pub fn with_policy(policy: RecoveryPolicy) -> RecoveryConfig {
+        RecoveryConfig {
+            policy,
+            ..RecoveryConfig::default()
+        }
+    }
+}
+
+/// The outcome of an N-iteration job run through faults.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobOutcome {
+    /// Iterations requested.
+    pub iterations: usize,
+    /// Iterations actually completed (== `iterations` unless aborted).
+    pub completed: usize,
+    /// Total virtual job time: iterations + detection + recovery costs.
+    pub total_ns: u64,
+    /// The job gave up (policy `None` hit a failure, the communicator
+    /// fell below 2 ranks, or the recovery budget ran out).
+    pub aborted: bool,
+    /// Recovery attempts taken.
+    pub recoveries: u32,
+    /// Original rank ids of the final communicator, ascending.
+    pub alive_ranks: Vec<usize>,
+    /// Links observed dead over the job (empty after a restart healed
+    /// them).
+    pub dead_links: Vec<LinkId>,
+    /// Makespan of the last *successful* iteration (0 when none ran) —
+    /// the acceptance tests pin it below the unreachable sentinel.
+    pub last_iteration_ns: u64,
+}
+
+impl JobOutcome {
+    /// Surviving world size.
+    pub fn final_n_ranks(&self) -> usize {
+        self.alive_ranks.len()
+    }
+}
+
+/// A per-iteration workload the generic job loop drives. Implementations
+/// must treat `iteration_ns` as a pure function of the `(topology,
+/// engine fault state)` pair so retries are reproducible.
+pub trait Workload {
+    /// Called at the start of every epoch (initially and after each
+    /// topology mutation) with the current topology, before the epoch's
+    /// `Comm`/`Engine` are built. Rebuild tuned state here.
+    fn on_epoch(&mut self, topo: &Cluster);
+
+    /// One iteration's virtual time on the current communicator. A value
+    /// at or above [`UNREACHABLE_NS`] marks a failed iteration (some op
+    /// completed at the sentinel).
+    fn iteration_ns(&mut self, comm: &mut Comm, engine: &mut Engine) -> u64;
+}
+
+/// What the failure handler decided inside the epoch's borrow scope; the
+/// topology mutation itself happens after `Comm`/`Engine` are dropped.
+enum Pending {
+    Abort,
+    Replan,
+    Shrink,
+    Restart { restore_ns: u64 },
+}
+
+/// Drive `iterations` of `workload` through `schedule` (absolute virtual
+/// time over the whole job) under `rc`. The core recovery loop shared by
+/// the collective-level and training-level runners.
+pub fn run_job<W: Workload>(
+    cluster: &Cluster,
+    schedule: &FaultSchedule,
+    link_model: LinkModel,
+    iterations: usize,
+    rc: &RecoveryConfig,
+    workload: &mut W,
+) -> JobOutcome {
+    let n0 = cluster.n_gpus();
+    let all: Vec<usize> = (0..n0).collect();
+    let mut topo = cluster.clone();
+    let mut alive = all.clone();
+    // `base` is the schedule re-anchored at `base_t` (restart heals the
+    // past by re-basing); each attempt derives its engine-local view by
+    // shifting `base` to the current clock.
+    let mut base = schedule.clone();
+    let mut base_t: u64 = 0;
+    let mut clock: u64 = 0;
+    let mut completed = 0usize;
+    let mut last_ckpt = 0usize;
+    let mut recoveries = 0u32;
+    let mut dead: Vec<LinkId> = Vec::new();
+    let mut aborted = false;
+    let mut last_iteration_ns = 0u64;
+
+    'job: while completed < iterations && !aborted {
+        workload.on_epoch(&topo);
+        let mut pending: Option<Pending> = None;
+        {
+            let mut comm = Comm::new(&topo);
+            let mut engine = Engine::with_model(&topo, link_model);
+            loop {
+                let active = base.shifted(clock - base_t, &alive);
+                if active.is_empty() {
+                    engine.set_faults(None);
+                } else {
+                    engine.set_faults(Some(active.clone()));
+                }
+                let ns = workload.iteration_ns(&mut comm, &mut engine);
+                if ns < UNREACHABLE_NS {
+                    clock = clock.saturating_add(ns);
+                    last_iteration_ns = ns;
+                    completed += 1;
+                    if rc.checkpoint_every > 0 && completed % rc.checkpoint_every as usize == 0 {
+                        last_ckpt = completed;
+                    }
+                    if completed >= iterations {
+                        break 'job;
+                    }
+                    continue;
+                }
+                // failed iteration: the job worked until the first kill,
+                // then burned the detection latency before reacting
+                let first_kill = active
+                    .link_events
+                    .iter()
+                    .filter(|e| e.bw_factor == 0.0)
+                    .map(|e| e.at_ns)
+                    .min()
+                    .unwrap_or(0);
+                clock = clock.saturating_add(first_kill.saturating_add(rc.detect_ns));
+                let observed = first_kill.saturating_add(rc.detect_ns);
+                for e in active
+                    .link_events
+                    .iter()
+                    .filter(|e| e.bw_factor == 0.0 && e.at_ns <= observed)
+                {
+                    if !dead.contains(&e.link) {
+                        dead.push(e.link);
+                    }
+                }
+                recoveries += 1;
+                pending = Some(match rc.policy {
+                    RecoveryPolicy::None => Pending::Abort,
+                    _ if recoveries > rc.max_recoveries => Pending::Abort,
+                    RecoveryPolicy::Replan => Pending::Replan,
+                    RecoveryPolicy::Shrink => Pending::Shrink,
+                    RecoveryPolicy::Restart { restore_ns } => Pending::Restart { restore_ns },
+                });
+                break;
+            }
+        }
+        match pending {
+            None => {}
+            Some(Pending::Abort) => aborted = true,
+            Some(Pending::Replan) => {
+                clock = clock.saturating_add(rc.replan_ns);
+                for &l in &dead {
+                    // idempotent; the clone shares the original link ids
+                    let _ = topo.kill_link(l);
+                }
+                let keep = reachable_ranks(&topo);
+                if keep.len() < 2 {
+                    aborted = true;
+                } else if keep.len() < topo.n_gpus() {
+                    let prev = alive.clone();
+                    alive = keep.iter().map(|&i| prev[i]).collect();
+                    topo.retain_ranks(&keep)
+                        .expect("reachable_ranks produced an invalid subset");
+                }
+            }
+            Some(Pending::Shrink) => {
+                clock = clock.saturating_add(rc.replan_ns);
+                // probe reachability on a throwaway clone with the dead
+                // links removed; the live topology keeps them routable
+                // (transfers detour at the engine level)
+                let mut probe = topo.clone();
+                for &l in &dead {
+                    let _ = probe.kill_link(l);
+                }
+                let keep = reachable_ranks(&probe);
+                if keep.len() < 2 {
+                    aborted = true;
+                } else if keep.len() < topo.n_gpus() {
+                    let prev = alive.clone();
+                    alive = keep.iter().map(|&i| prev[i]).collect();
+                    topo.retain_ranks(&keep)
+                        .expect("reachable_ranks produced an invalid subset");
+                }
+            }
+            Some(Pending::Restart { restore_ns }) => {
+                clock = clock.saturating_add(restore_ns);
+                completed = last_ckpt;
+                topo = cluster.clone();
+                alive = all.clone();
+                base = schedule.shifted_healed(clock, &all);
+                base_t = clock;
+                dead.clear();
+            }
+        }
+    }
+
+    JobOutcome {
+        iterations,
+        completed,
+        total_ns: clock,
+        aborted,
+        recoveries,
+        alive_ranks: alive,
+        dead_links: dead,
+        last_iteration_ns,
+    }
+}
+
+/// Ranks (current indices, ascending) that can still reach — and be
+/// reached by — rank 0 on `topo`'s routable graph. Rank 0 anchors the
+/// surviving communicator (the re-formed ring's root).
+fn reachable_ranks(topo: &Cluster) -> Vec<usize> {
+    let root = topo.rank_device(0);
+    (0..topo.n_gpus())
+        .filter(|&r| {
+            let dev = topo.rank_device(r);
+            topo.route(root, dev).is_ok() && topo.route(dev, root).is_ok()
+        })
+        .collect()
+}
+
+/// The repeated-collective workload: one `algo` collective of `bytes`
+/// per iteration (the Monte Carlo sweeps' unit of work).
+pub struct CollectiveWorkload {
+    pub algorithm: Algorithm,
+    pub bytes: u64,
+}
+
+impl Workload for CollectiveWorkload {
+    fn on_epoch(&mut self, _topo: &Cluster) {}
+
+    fn iteration_ns(&mut self, comm: &mut Comm, engine: &mut Engine) -> u64 {
+        let n = comm.cluster().n_gpus();
+        let spec = CollectiveSpec::new(0, n, self.bytes);
+        let cp = collectives::cached_plan(&self.algorithm, comm, &spec);
+        engine.makespan_ns(&cp.plan)
+    }
+}
+
+/// Run an N-iteration repeated-collective job through `schedule` under a
+/// recovery policy.
+pub fn run_collective_job(
+    cluster: &Cluster,
+    algorithm: &Algorithm,
+    bytes: u64,
+    iterations: usize,
+    schedule: &FaultSchedule,
+    link_model: LinkModel,
+    rc: &RecoveryConfig,
+) -> JobOutcome {
+    let mut w = CollectiveWorkload {
+        algorithm: *algorithm,
+        bytes,
+    };
+    run_job(cluster, schedule, link_model, iterations, rc, &mut w)
+}
+
+/// The training workload: per iteration, compute (rescaled when the
+/// world shrinks — fixed global batch over fewer ranks) plus the full
+/// gradient/parameter exchange of `mode`, composed exactly like
+/// [`super::train::estimate_training_iteration_opts`]. On a topology
+/// mutation the selector re-tunes only the affected size classes
+/// ([`Selector::retuned_for`]).
+pub struct TrainingWorkload<'a> {
+    model: &'a DnnModel,
+    base_sel: &'a Selector,
+    sel: Selector,
+    mode: TrainingMode,
+    overlap: bool,
+    bucket_bytes: u64,
+    compute_ns0: u64,
+    n0: usize,
+    first_epoch: bool,
+}
+
+impl<'a> TrainingWorkload<'a> {
+    pub fn new(
+        model: &'a DnnModel,
+        sel: &'a Selector,
+        mode: TrainingMode,
+        overlap: bool,
+        bucket_bytes: u64,
+        compute_ns0: u64,
+        n0: usize,
+    ) -> TrainingWorkload<'a> {
+        TrainingWorkload {
+            model,
+            base_sel: sel,
+            sel: sel.clone(),
+            mode,
+            overlap,
+            bucket_bytes,
+            compute_ns0,
+            n0,
+            first_epoch: true,
+        }
+    }
+}
+
+impl Workload for TrainingWorkload<'_> {
+    fn on_epoch(&mut self, topo: &Cluster) {
+        if self.first_epoch {
+            // the untouched topology dispatches on the caller's selector
+            // verbatim — the golden-parity anchor
+            self.first_epoch = false;
+            return;
+        }
+        self.sel = self.base_sel.retuned_for(topo);
+    }
+
+    fn iteration_ns(&mut self, comm: &mut Comm, engine: &mut Engine) -> u64 {
+        let n = comm.cluster().n_gpus();
+        // fixed global batch: per-rank compute grows as the world shrinks
+        let compute_ns = if n == self.n0 {
+            self.compute_ns0
+        } else {
+            ((self.compute_ns0 as u128 * self.n0 as u128).div_ceil(n as u128)) as u64
+        };
+        if self.overlap {
+            return super::timeline::overlap_iteration_ns(
+                comm,
+                engine,
+                &self.sel,
+                self.mode,
+                self.model,
+                compute_ns,
+                self.bucket_bytes,
+            );
+        }
+        let comm_ns = match self.mode {
+            TrainingMode::PartitionedBcast => {
+                let msgs = bcast_messages(self.model, n, MessageSchedule::Partitioned);
+                aggregation_time_ns(comm, engine, &msgs).saturating_add(comm_time_ns(
+                    comm,
+                    engine,
+                    &BcastBackend::Mv2Opt(&self.sel),
+                    &msgs,
+                ))
+            }
+            TrainingMode::AllreduceGradients => {
+                let buckets = allreduce_buckets(self.model, self.bucket_bytes);
+                allreduce_time_ns(comm, engine, &self.sel, &buckets)
+            }
+        };
+        compute_ns.saturating_add(comm_ns)
+    }
+}
+
+/// Simulate an N-iteration training job through faults: compute + full
+/// exchange per iteration, detection + recovery per failure, all on the
+/// virtual clock. `opts` carries the exchange shape, the link model, the
+/// fault schedule *and* the recovery policy ([`ExchangeOptions::recovery`]).
+/// With no faults installed the outcome is `iterations ×` the
+/// single-iteration estimate, bit-for-bit, whatever the policy.
+#[allow(clippy::too_many_arguments)]
+pub fn run_training_job(
+    cluster: &Cluster,
+    model: &DnnModel,
+    sel: &Selector,
+    mode: TrainingMode,
+    iterations: usize,
+    global_batch: usize,
+    compute_us_override: f64,
+    opts: ExchangeOptions<'_>,
+) -> JobOutcome {
+    let n0 = cluster.n_gpus();
+    let compute_us =
+        super::train::compute_us_for(model, n0, global_batch, compute_us_override);
+    let compute_ns0 = (compute_us * 1000.0).round() as u64;
+    let empty = FaultSchedule::default();
+    let schedule = opts.faults.unwrap_or(&empty);
+    let mut w = TrainingWorkload::new(
+        model,
+        sel,
+        mode,
+        opts.overlap,
+        opts.bucket_bytes,
+        compute_ns0,
+        n0,
+    );
+    run_job(
+        cluster,
+        schedule,
+        opts.link_model,
+        iterations,
+        &opts.recovery,
+        &mut w,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::LinkEvent;
+    use crate::topology::presets::kesch;
+
+    #[test]
+    fn policy_parse_round_trip() {
+        assert_eq!(RecoveryPolicy::parse("none").unwrap(), RecoveryPolicy::None);
+        assert_eq!(
+            RecoveryPolicy::parse("replan").unwrap(),
+            RecoveryPolicy::Replan
+        );
+        assert_eq!(
+            RecoveryPolicy::parse("shrink").unwrap(),
+            RecoveryPolicy::Shrink
+        );
+        assert_eq!(
+            RecoveryPolicy::parse("restart").unwrap(),
+            RecoveryPolicy::Restart {
+                restore_ns: DEFAULT_RESTORE_NS
+            }
+        );
+        assert_eq!(
+            RecoveryPolicy::parse("restart:2ms").unwrap(),
+            RecoveryPolicy::Restart {
+                restore_ns: 2_000_000
+            }
+        );
+        assert!(RecoveryPolicy::parse("reboot").is_err());
+        assert!(RecoveryPolicy::parse("restart:banana").is_err());
+        assert_eq!(RecoveryPolicy::Replan.name(), "replan");
+        assert_eq!(
+            RecoveryPolicy::Restart { restore_ns: 1 }.name(),
+            "restart"
+        );
+    }
+
+    #[test]
+    fn healthy_job_is_n_times_one_iteration() {
+        let cluster = kesch(1, 4);
+        let empty = FaultSchedule::default();
+        let one = run_collective_job(
+            &cluster,
+            &Algorithm::Chain,
+            64 << 10,
+            1,
+            &empty,
+            LinkModel::Fifo,
+            &RecoveryConfig::default(),
+        );
+        assert!(!one.aborted);
+        for policy in [
+            RecoveryPolicy::None,
+            RecoveryPolicy::Replan,
+            RecoveryPolicy::Shrink,
+            RecoveryPolicy::Restart { restore_ns: 1 << 20 },
+        ] {
+            let job = run_collective_job(
+                &cluster,
+                &Algorithm::Chain,
+                64 << 10,
+                5,
+                &empty,
+                LinkModel::Fifo,
+                &RecoveryConfig::with_policy(policy),
+            );
+            assert!(!job.aborted);
+            assert_eq!(job.completed, 5);
+            assert_eq!(job.recoveries, 0);
+            assert_eq!(job.total_ns, 5 * one.total_ns, "{}", policy.name());
+            assert_eq!(job.last_iteration_ns, one.total_ns);
+            assert_eq!(job.alive_ranks, vec![0, 1, 2, 3]);
+        }
+    }
+
+    #[test]
+    fn none_policy_aborts_on_first_failure() {
+        // kill every link out of rank 3's GPU so its payload is
+        // undeliverable whatever the detour
+        let cluster = kesch(1, 4);
+        let dst = cluster.rank_device(3);
+        let mut sched = FaultSchedule::default().with_retry(0, 1000);
+        for l in cluster.links() {
+            if l.dst == dst || l.src == dst {
+                sched.link_events.push(LinkEvent {
+                    at_ns: 0,
+                    link: l.id,
+                    bw_factor: 0.0,
+                });
+            }
+        }
+        sched.normalize();
+        let job = run_collective_job(
+            &cluster,
+            &Algorithm::Chain,
+            64 << 10,
+            3,
+            &sched,
+            LinkModel::Fifo,
+            &RecoveryConfig::default(),
+        );
+        assert!(job.aborted);
+        assert_eq!(job.completed, 0);
+        assert_eq!(job.recoveries, 1);
+    }
+
+    #[test]
+    fn replan_drops_cut_off_rank_and_finishes() {
+        let cluster = kesch(1, 4);
+        let dst = cluster.rank_device(3);
+        let mut sched = FaultSchedule::default().with_retry(0, 1000);
+        for l in cluster.links() {
+            if l.dst == dst || l.src == dst {
+                sched.link_events.push(LinkEvent {
+                    at_ns: 0,
+                    link: l.id,
+                    bw_factor: 0.0,
+                });
+            }
+        }
+        sched.normalize();
+        let rc = RecoveryConfig::with_policy(RecoveryPolicy::Replan);
+        let job = run_collective_job(
+            &cluster,
+            &Algorithm::Chain,
+            64 << 10,
+            3,
+            &sched,
+            LinkModel::Fifo,
+            &rc,
+        );
+        assert!(!job.aborted, "{job:?}");
+        assert_eq!(job.completed, 3);
+        assert_eq!(job.recoveries, 1);
+        assert_eq!(job.alive_ranks, vec![0, 1, 2], "rank 3 is unreachable");
+        assert!(job.last_iteration_ns < UNREACHABLE_NS);
+        assert!(!job.dead_links.is_empty());
+        // time accounting: detection + replan charges are in the total
+        assert!(job.total_ns > 3 * job.last_iteration_ns);
+    }
+
+    #[test]
+    fn shrink_matches_replan_world_on_isolating_failure() {
+        let cluster = kesch(1, 4);
+        let dst = cluster.rank_device(2);
+        let mut sched = FaultSchedule::default().with_retry(0, 1000);
+        for l in cluster.links() {
+            if l.dst == dst || l.src == dst {
+                sched.link_events.push(LinkEvent {
+                    at_ns: 0,
+                    link: l.id,
+                    bw_factor: 0.0,
+                });
+            }
+        }
+        sched.normalize();
+        let job = run_collective_job(
+            &cluster,
+            &Algorithm::Chain,
+            64 << 10,
+            3,
+            &sched,
+            LinkModel::Fifo,
+            &RecoveryConfig::with_policy(RecoveryPolicy::Shrink),
+        );
+        assert!(!job.aborted, "{job:?}");
+        assert_eq!(job.completed, 3);
+        assert_eq!(job.alive_ranks, vec![0, 1, 3]);
+    }
+
+    #[test]
+    fn restart_replays_from_checkpoint_and_heals() {
+        // a kill striking mid-job, late enough that iterations complete
+        // before it: restart must rewind to the checkpoint and replay on
+        // healed hardware (no further failures → full completion)
+        let cluster = kesch(1, 4);
+        let empty = FaultSchedule::default();
+        let one = run_collective_job(
+            &cluster,
+            &Algorithm::Chain,
+            64 << 10,
+            1,
+            &empty,
+            LinkModel::Fifo,
+            &RecoveryConfig::default(),
+        )
+        .total_ns;
+        let dst = cluster.rank_device(1);
+        let strike = one * 2 + one / 2; // mid third iteration
+        let mut sched = FaultSchedule::default().with_retry(0, 1000);
+        for l in cluster.links() {
+            if l.dst == dst || l.src == dst {
+                sched.link_events.push(LinkEvent {
+                    at_ns: strike,
+                    link: l.id,
+                    bw_factor: 0.0,
+                });
+            }
+        }
+        sched.normalize();
+        let rc = RecoveryConfig {
+            policy: RecoveryPolicy::Restart {
+                restore_ns: 5 * one,
+            },
+            checkpoint_every: 2,
+            ..RecoveryConfig::default()
+        };
+        let job = run_collective_job(
+            &cluster,
+            &Algorithm::Chain,
+            64 << 10,
+            5,
+            &sched,
+            LinkModel::Fifo,
+            &rc,
+        );
+        assert!(!job.aborted, "{job:?}");
+        assert_eq!(job.completed, 5);
+        assert_eq!(job.recoveries, 1);
+        assert_eq!(job.alive_ranks.len(), 4, "restart keeps the full world");
+        assert!(job.dead_links.is_empty(), "restart heals observed damage");
+        // 2 clean + failed 3rd (partial + detect) + restore + replay 3
+        assert!(job.total_ns > 5 * one + 5 * one);
+    }
+}

@@ -29,8 +29,9 @@ pub struct TrainingEstimate {
     pub throughput: f64,
 }
 
-/// The compute half of an estimate, shared across exchange models.
-fn compute_us_for(
+/// The compute half of an estimate, shared across exchange models (and
+/// by the recovery runner's training workload).
+pub(crate) fn compute_us_for(
     model: &DnnModel,
     gpus: usize,
     global_batch: usize,
@@ -126,6 +127,12 @@ pub struct ExchangeOptions<'f> {
     /// `--faults` knob; DESIGN.md §Fault model). `None` — and an empty
     /// schedule — leave the estimate bit-identical to the healthy path.
     pub faults: Option<&'f FaultSchedule>,
+    /// Recovery policy + detection/replan knobs for multi-iteration jobs
+    /// ([`super::recovery::run_training_job`]; the `--recovery` and
+    /// `--detect-ns` flags). The single-iteration estimators ignore it;
+    /// the default (`RecoveryPolicy::None`) aborts a job on its first
+    /// failed iteration, matching the pre-recovery behavior.
+    pub recovery: super::recovery::RecoveryConfig,
 }
 
 impl Default for ExchangeOptions<'_> {
@@ -135,6 +142,7 @@ impl Default for ExchangeOptions<'_> {
             bucket_bytes: crate::models::DEFAULT_BUCKET_BYTES,
             link_model: LinkModel::Fifo,
             faults: None,
+            recovery: super::recovery::RecoveryConfig::default(),
         }
     }
 }

@@ -127,6 +127,68 @@ impl FaultSchedule {
         self.link_events
             .sort_by_key(|e| (e.at_ns, e.link.0));
     }
+
+    /// Re-anchor the schedule for a recovery attempt starting `elapsed`
+    /// ns into the original scenario, on a communicator whose rank `i`
+    /// was original rank `alive_ranks[i]`:
+    ///
+    /// * events already fired (`at_ns <= elapsed`) collapse to factor
+    ///   events at t = 0 — last event per link wins — so persistent
+    ///   damage carries into the retry;
+    /// * future events shift left by `elapsed`;
+    /// * stragglers are remapped through `alive_ranks`; stragglers on
+    ///   dead ranks drop out.
+    ///
+    /// Retry/timeout budgets are preserved.
+    pub fn shifted(&self, elapsed: SimTime, alive_ranks: &[usize]) -> FaultSchedule {
+        let mut out = self.shifted_healed(elapsed, alive_ranks);
+        // collapse the past: last factor per link, re-issued at t = 0
+        let mut past: Vec<(LinkId, f64)> = Vec::new();
+        for e in self.link_events.iter().filter(|e| e.at_ns <= elapsed) {
+            match past.iter_mut().find(|(l, _)| *l == e.link) {
+                Some((_, f)) => *f = e.bw_factor,
+                None => past.push((e.link, e.bw_factor)),
+            }
+        }
+        for (link, bw_factor) in past {
+            if bw_factor < 1.0 {
+                out.link_events.push(LinkEvent {
+                    at_ns: 0,
+                    link,
+                    bw_factor,
+                });
+            }
+        }
+        out.normalize();
+        out
+    }
+
+    /// Like [`Self::shifted`], but past events are *dropped* instead of
+    /// collapsed to t = 0 — the checkpoint/restart view, where restored
+    /// hardware comes back healthy and only faults still in the future
+    /// can strike again.
+    pub fn shifted_healed(&self, elapsed: SimTime, alive_ranks: &[usize]) -> FaultSchedule {
+        let mut out = FaultSchedule {
+            link_events: Vec::new(),
+            stragglers: Vec::new(),
+            retry_budget: self.retry_budget,
+            retry_timeout_ns: self.retry_timeout_ns,
+        };
+        for e in self.link_events.iter().filter(|e| e.at_ns > elapsed) {
+            out.link_events.push(LinkEvent {
+                at_ns: e.at_ns - elapsed,
+                link: e.link,
+                bw_factor: e.bw_factor,
+            });
+        }
+        for &(rank, f) in &self.stragglers {
+            if let Some(new_rank) = alive_ranks.iter().position(|&r| r == rank) {
+                out.stragglers.push((new_rank, f));
+            }
+        }
+        out.normalize();
+        out
+    }
 }
 
 /// One clause of a `--faults` specification (see [`FaultProfile`]).
@@ -252,8 +314,11 @@ impl FaultProfile {
     /// so the realization is a pure function of
     /// `(profile, cluster, seed)`. Random link clauses draw without
     /// replacement from the cluster's *live* (bandwidth > 0) directed
-    /// links; random stragglers draw from the GPU ranks.
-    pub fn realize(&self, cluster: &Cluster, seed: u64) -> FaultSchedule {
+    /// links; random stragglers draw from the GPU ranks. Explicit
+    /// `link=I:...` / `rank=R:...` clauses whose index is out of range
+    /// for this cluster are rejected with a usage error (they used to
+    /// silently no-op or panic downstream).
+    pub fn realize(&self, cluster: &Cluster, seed: u64) -> Result<FaultSchedule> {
         let mut rng = Rng::new(seed);
         let mut schedule = FaultSchedule::default();
         let live_links: Vec<usize> = (0..cluster.n_links())
@@ -294,13 +359,20 @@ impl FaultProfile {
                     factor,
                     at_ns,
                 } => {
-                    if index < cluster.n_links() {
-                        schedule.link_events.push(LinkEvent {
-                            at_ns,
-                            link: LinkId(index),
-                            bw_factor: factor,
-                        });
+                    if index >= cluster.n_links() {
+                        return Err(Error::Usage(format!(
+                            "fault clause 'link={index}:...' out of range: cluster \
+                             '{}' has {} directed links (indices 0..={})",
+                            cluster.name,
+                            cluster.n_links(),
+                            cluster.n_links().saturating_sub(1)
+                        )));
                     }
+                    schedule.link_events.push(LinkEvent {
+                        at_ns,
+                        link: LinkId(index),
+                        bw_factor: factor,
+                    });
                 }
                 FaultClause::Straggle { n, factor } => {
                     let ranks: Vec<usize> = (0..cluster.n_gpus()).collect();
@@ -309,6 +381,15 @@ impl FaultProfile {
                     }
                 }
                 FaultClause::Rank { rank, factor } => {
+                    if rank >= cluster.n_gpus() {
+                        return Err(Error::Usage(format!(
+                            "fault clause 'rank={rank}:...' out of range: cluster \
+                             '{}' has {} GPU ranks (indices 0..={})",
+                            cluster.name,
+                            cluster.n_gpus(),
+                            cluster.n_gpus().saturating_sub(1)
+                        )));
+                    }
                     schedule.stragglers.push((rank, factor));
                 }
                 FaultClause::Retry { budget } => schedule.retry_budget = budget,
@@ -316,7 +397,7 @@ impl FaultProfile {
             }
         }
         schedule.normalize();
-        schedule
+        Ok(schedule)
     }
 }
 
@@ -447,10 +528,10 @@ mod tests {
     fn realize_is_deterministic_and_seed_sensitive() {
         let cluster = kesch(2, 8);
         let p = FaultProfile::parse("kill=2@500us,degrade=3:0.5@200us,straggle=2:3").unwrap();
-        let a = p.realize(&cluster, 42);
-        let b = p.realize(&cluster, 42);
+        let a = p.realize(&cluster, 42).unwrap();
+        let b = p.realize(&cluster, 42).unwrap();
         assert_eq!(a, b, "same seed must realize the same schedule");
-        let c = p.realize(&cluster, 43);
+        let c = p.realize(&cluster, 43).unwrap();
         assert_ne!(a, c, "different seeds should hit different links");
         assert_eq!(a.link_events.len(), 5);
         assert_eq!(a.stragglers.len(), 2);
@@ -476,16 +557,86 @@ mod tests {
         assert_eq!(s.retry_budget, DEFAULT_RETRY_BUDGET);
         assert_eq!(s.retry_timeout_ns, DEFAULT_RETRY_TIMEOUT_NS);
         let cluster = kesch(1, 4);
-        let realized = FaultProfile::default().realize(&cluster, 7);
+        let realized = FaultProfile::default().realize(&cluster, 7).unwrap();
         assert!(realized.is_empty());
         assert_eq!(realized, s);
+    }
+
+    #[test]
+    fn realize_rejects_out_of_range_link_and_rank() {
+        let cluster = kesch(1, 4);
+        let n_links = cluster.n_links();
+        let p = FaultProfile::parse(&format!("link={n_links}:0.5@0")).unwrap();
+        let err = p.realize(&cluster, 1).unwrap_err();
+        let msg = err.to_string();
+        assert!(
+            msg.contains("out of range") && msg.contains(&format!("{n_links} directed links")),
+            "unexpected message: {msg}"
+        );
+        let p = FaultProfile::parse("rank=4:2.0").unwrap();
+        let err = p.realize(&cluster, 1).unwrap_err();
+        let msg = err.to_string();
+        assert!(
+            msg.contains("out of range") && msg.contains("4 GPU ranks"),
+            "unexpected message: {msg}"
+        );
+        // boundary indices still realize
+        let p = FaultProfile::parse(&format!("link={}:0.5@0,rank=3:2.0", n_links - 1)).unwrap();
+        let s = p.realize(&cluster, 1).unwrap();
+        assert_eq!(s.link_events.len(), 1);
+        assert_eq!(s.stragglers, vec![(3, 2.0)]);
+    }
+
+    #[test]
+    fn shifted_collapses_past_and_shifts_future() {
+        let s = FaultSchedule::default()
+            .with_link_event(100, LinkId(3), 0.5)
+            .with_link_event(200, LinkId(3), 0.0)
+            .with_link_event(150, LinkId(5), 1.0)
+            .with_link_event(900, LinkId(7), 0.25)
+            .with_straggler(0, 2.0)
+            .with_straggler(2, 3.0)
+            .with_retry(5, 777);
+        // shift past t = 300 with rank 0 dead (alive: original 1, 2, 3)
+        let sh = s.shifted(300, &[1, 2, 3]);
+        // link 3: last past event (kill) carries at t = 0; link 5's
+        // restore-to-1.0 is the identity and drops out
+        assert_eq!(
+            sh.link_events,
+            vec![
+                LinkEvent {
+                    at_ns: 0,
+                    link: LinkId(3),
+                    bw_factor: 0.0
+                },
+                LinkEvent {
+                    at_ns: 600,
+                    link: LinkId(7),
+                    bw_factor: 0.25
+                },
+            ]
+        );
+        // straggler on dead rank 0 dropped; original rank 2 is now rank 1
+        assert_eq!(sh.stragglers, vec![(1, 3.0)]);
+        assert_eq!(sh.retry_budget, 5);
+        assert_eq!(sh.retry_timeout_ns, 777);
+        // healed view: past damage gone entirely
+        let healed = s.shifted_healed(300, &[1, 2, 3]);
+        assert_eq!(
+            healed.link_events,
+            vec![LinkEvent {
+                at_ns: 600,
+                link: LinkId(7),
+                bw_factor: 0.25
+            }]
+        );
     }
 
     #[test]
     fn jitter_degrades_only() {
         let cluster = kesch(1, 8);
         let p = FaultProfile::parse("jitter=0.1").unwrap();
-        let s = p.realize(&cluster, 9);
+        let s = p.realize(&cluster, 9).unwrap();
         assert!(!s.link_events.is_empty());
         for e in &s.link_events {
             assert_eq!(e.at_ns, 0);

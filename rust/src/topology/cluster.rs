@@ -30,6 +30,11 @@ pub struct Cluster {
     nodes: Vec<NodeMeta>,
     /// GPUs in global rank order (node-major).
     gpu_ranks: Vec<DeviceId>,
+    /// Directed links administratively removed by [`Cluster::kill_link`].
+    /// Dead links are skipped by BFS so re-planned routes avoid them —
+    /// distinct from zero-bandwidth links, which stay routable and cost
+    /// the `UNREACHABLE_NS` sentinel at execution time.
+    dead_links: Vec<bool>,
     /// Interned routes: BFS runs at most once per (src, dst) pair; plans
     /// and path caches carry cheap [`RouteId`]s (DESIGN.md §Perf).
     routes: RouteTable,
@@ -44,6 +49,7 @@ impl Cluster {
             adjacency: Vec::new(),
             nodes: Vec::new(),
             gpu_ranks: Vec::new(),
+            dead_links: Vec::new(),
             routes: RouteTable::new(),
         }
     }
@@ -103,6 +109,7 @@ impl Cluster {
             latency_ns,
         });
         self.adjacency[src.0].push(id);
+        self.dead_links.push(false);
         id
     }
 
@@ -111,6 +118,67 @@ impl Cluster {
             self.gpu_ranks.push(g);
         }
         self.nodes.push(meta);
+    }
+
+    // ---- recovery mutations ----------------------------------------------
+
+    /// Administratively remove a directed link from the routable topology.
+    /// BFS will never traverse it again, so every route interned after this
+    /// call detours around the failure. Bumps the topology generation:
+    /// existing `RouteId`s, engines and templates keyed on the old
+    /// generation must be rebuilt.
+    pub fn kill_link(&mut self, id: LinkId) -> Result<()> {
+        if id.0 >= self.links.len() {
+            return Err(Error::Config(format!(
+                "kill_link: link index {} out of range (cluster has {} directed links)",
+                id.0,
+                self.links.len()
+            )));
+        }
+        self.routes.clear();
+        self.dead_links[id.0] = true;
+        Ok(())
+    }
+
+    /// Whether a directed link is still routable (not removed by
+    /// [`Cluster::kill_link`]).
+    pub fn link_alive(&self, id: LinkId) -> bool {
+        !self.dead_links[id.0]
+    }
+
+    /// Count of administratively dead directed links.
+    pub fn n_dead_links(&self) -> usize {
+        self.dead_links.iter().filter(|&&d| d).count()
+    }
+
+    /// Shrink the communicator to a subset of the current ranks: `alive`
+    /// holds rank indices into the *current* rank order, in ascending
+    /// order. Surviving GPUs are renumbered densely (rank `i` becomes the
+    /// `i`-th surviving GPU); dead GPUs stay in the device graph but no
+    /// longer back any rank. Bumps the topology generation.
+    pub fn retain_ranks(&mut self, alive: &[usize]) -> Result<()> {
+        if alive.is_empty() {
+            return Err(Error::InvalidRanks("retain_ranks: empty rank set".into()));
+        }
+        if alive.windows(2).any(|w| w[0] >= w[1]) {
+            return Err(Error::InvalidRanks(
+                "retain_ranks: rank set must be strictly ascending".into(),
+            ));
+        }
+        if *alive.last().unwrap() >= self.gpu_ranks.len() {
+            return Err(Error::InvalidRanks(format!(
+                "retain_ranks: rank {} out of range (world size {})",
+                alive.last().unwrap(),
+                self.gpu_ranks.len()
+            )));
+        }
+        self.routes.clear();
+        let kept: Vec<DeviceId> = alive.iter().map(|&r| self.gpu_ranks[r]).collect();
+        for meta in &mut self.nodes {
+            meta.gpus.retain(|g| kept.contains(g));
+        }
+        self.gpu_ranks = kept;
+        Ok(())
     }
 
     // ---- queries ---------------------------------------------------------
@@ -323,6 +391,9 @@ impl Cluster {
             for &u in &frontier {
                 let du = dist[u.0];
                 for &lid in &self.adjacency[u.0] {
+                    if self.dead_links[lid.0] {
+                        continue;
+                    }
                     let link = &self.links[lid.0];
                     let v = link.dst;
                     let bw = best_bw[u.0].min(link.bandwidth);
@@ -473,5 +544,59 @@ mod tests {
     fn describe_mentions_counts() {
         let d = tiny().describe();
         assert!(d.contains("2 gpus"));
+    }
+
+    #[test]
+    fn kill_link_detours_and_bumps_generation() {
+        // diamond: a -> {b, c} -> d, two equal-hop routes
+        let mut c = Cluster::new("diamond");
+        let a = c.add_device(DeviceKind::Gpu, NodeId(0), 0, "a".into());
+        let b = c.add_device(DeviceKind::PlxSwitch, NodeId(0), 0, "b".into());
+        let cc = c.add_device(DeviceKind::PlxSwitch, NodeId(0), 0, "c".into());
+        let d = c.add_device(DeviceKind::Gpu, NodeId(0), 0, "d".into());
+        // fat path through b, thin through c: BFS prefers b
+        let (ab, _) = c.connect_custom(a, b, LinkKind::PcieG3x16, 32.0, 0);
+        c.connect_custom(b, d, LinkKind::PcieG3x16, 32.0, 0);
+        c.connect_custom(a, cc, LinkKind::PcieG3x16, 1.0, 0);
+        c.connect_custom(cc, d, LinkKind::PcieG3x16, 1.0, 0);
+        let via_b = c.route_info(a, d).unwrap();
+        assert!(via_b.hops.contains(&ab));
+        let g0 = c.generation();
+        c.kill_link(ab).unwrap();
+        assert_ne!(c.generation(), g0, "kill_link must bump the generation");
+        assert!(!c.link_alive(ab));
+        assert_eq!(c.n_dead_links(), 1);
+        let via_c = c.route_info(a, d).unwrap();
+        assert!(!via_c.hops.contains(&ab), "route must avoid the dead link");
+        assert_eq!(via_c.hops.len(), 2);
+    }
+
+    #[test]
+    fn kill_link_out_of_range_errors() {
+        let mut c = tiny();
+        let err = c.kill_link(LinkId(999)).unwrap_err();
+        assert!(err.to_string().contains("out of range"));
+    }
+
+    #[test]
+    fn retain_ranks_renumbers_surviving_gpus() {
+        let mut c = tiny();
+        let g1 = c.rank_device(1);
+        let g0_old = c.generation();
+        c.retain_ranks(&[1]).unwrap();
+        assert_eq!(c.n_gpus(), 1);
+        assert_eq!(c.rank_device(0), g1);
+        assert_eq!(c.nodes()[0].gpus, vec![g1]);
+        assert_ne!(c.generation(), g0_old);
+    }
+
+    #[test]
+    fn retain_ranks_validates() {
+        let mut c = tiny();
+        assert!(c.retain_ranks(&[]).is_err());
+        assert!(c.retain_ranks(&[1, 0]).is_err());
+        assert!(c.retain_ranks(&[0, 7]).is_err());
+        // original rank set untouched after rejected calls
+        assert_eq!(c.n_gpus(), 2);
     }
 }

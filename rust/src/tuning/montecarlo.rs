@@ -22,8 +22,10 @@ use std::sync::Mutex;
 
 use crate::collectives::{self, Algorithm, CollectiveSpec};
 use crate::comm::Comm;
+use crate::coordinator::recovery::{run_collective_job, RecoveryConfig, RecoveryPolicy};
+use crate::error::Result;
 use crate::netsim::faults::FaultProfile;
-use crate::netsim::{Engine, LinkModel};
+use crate::netsim::{Engine, FaultSchedule, LinkEvent, LinkModel};
 use crate::topology::Cluster;
 use crate::util::rng::SplitMix64;
 use crate::util::stats::Summary;
@@ -84,6 +86,17 @@ impl McRow {
             self.delivered as f64 / self.trials as f64
         }
     }
+
+    /// Fraction of trials that aborted (lost at least one rank) — the
+    /// complement of [`Self::delivered_frac`], rendered as its own
+    /// report column so lossy profiles are visible at a glance.
+    pub fn aborted_frac(&self) -> f64 {
+        if self.trials == 0 {
+            0.0
+        } else {
+            (self.trials - self.delivered) as f64 / self.trials as f64
+        }
+    }
 }
 
 /// The seed a given trial realizes its schedule with: a pure function of
@@ -111,7 +124,9 @@ fn run_pair(
     let mut samples: Vec<f64> = Vec::with_capacity(cfg.trials);
     let mut delivered = 0usize;
     for trial in 0..cfg.trials {
-        let sched = profile.realize(cluster, trial_seed(cfg.seed, pair as u64, trial as u64));
+        let sched = profile
+            .realize(cluster, trial_seed(cfg.seed, pair as u64, trial as u64))
+            .expect("profile validated against this cluster by run()");
         engine.set_faults(Some(sched));
         let cp = collectives::cached_plan(algo, &mut comm, &spec);
         let res = engine.execute(&cp.plan);
@@ -143,13 +158,17 @@ fn run_pair(
 
 /// Monte Carlo over the `algorithms × sizes` grid. Rows come back in
 /// grid order (algorithm-major) regardless of the worker fan-out.
+/// Errors up front when the profile names a link/rank index the cluster
+/// doesn't have (validity is seed-independent, so one probe realization
+/// covers every trial).
 pub fn run(
     cluster: &Cluster,
     algorithms: &[Algorithm],
     sizes: &[u64],
     profile: &FaultProfile,
     cfg: &McConfig,
-) -> Vec<McRow> {
+) -> Result<Vec<McRow>> {
+    profile.realize(cluster, cfg.seed)?;
     let grid: Vec<(&Algorithm, u64)> = algorithms
         .iter()
         .flat_map(|a| sizes.iter().map(move |&b| (a, b)))
@@ -164,11 +183,11 @@ pub fn run(
         .max(1)
         .min(grid.len().max(1));
     if n_workers <= 1 {
-        return grid
+        return Ok(grid
             .iter()
             .enumerate()
             .map(|(p, &(algo, bytes))| run_pair(cluster, algo, bytes, profile, cfg, p))
-            .collect();
+            .collect());
     }
     let next = AtomicUsize::new(0);
     let slots: Vec<Mutex<Option<McRow>>> = grid.iter().map(|_| Mutex::new(None)).collect();
@@ -191,14 +210,231 @@ pub fn run(
             });
         }
     });
-    slots
+    Ok(slots
         .into_iter()
         .map(|m| {
             m.into_inner()
                 .expect("mc slot poisoned")
                 .expect("mc row missing")
         })
-        .collect()
+        .collect())
+}
+
+/// One recovery-policy row of a [`recovery_run`]: `trials` N-iteration
+/// jobs driven through per-trial fault realizations under the policy.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RecoveryRow {
+    /// [`RecoveryPolicy::name`] of the policy the row swept.
+    pub policy: String,
+    pub trials: usize,
+    /// Jobs that completed all N iterations.
+    pub completed: usize,
+    /// Recovery attempts summed over all trials.
+    pub recoveries: u64,
+    /// Time-to-completion statistics over the *completed* jobs' total
+    /// virtual time (`None` when every job aborted).
+    pub stats: Option<TrialStats>,
+}
+
+impl RecoveryRow {
+    /// Fraction of jobs that gave up before iteration N.
+    pub fn aborted_frac(&self) -> f64 {
+        if self.trials == 0 {
+            0.0
+        } else {
+            (self.trials - self.completed) as f64 / self.trials as f64
+        }
+    }
+}
+
+/// Sweep recovery policies over a repeated-collective job: for each
+/// policy, `cfg.trials` seeded profile realizations each drive an
+/// `iterations`-long job through [`run_collective_job`], yielding
+/// p50/p99 time-to-completion and the aborted fraction per policy.
+/// Trials reuse [`trial_seed`] with the *policy index* as the pair
+/// index, so every policy faces an identical fault draw sequence — rows
+/// differ only by how the policy copes. Serial and deterministic.
+#[allow(clippy::too_many_arguments)]
+pub fn recovery_run(
+    cluster: &Cluster,
+    algorithm: &Algorithm,
+    bytes: u64,
+    iterations: usize,
+    policies: &[RecoveryConfig],
+    profile: &FaultProfile,
+    cfg: &McConfig,
+) -> Result<Vec<RecoveryRow>> {
+    profile.realize(cluster, cfg.seed)?;
+    let mut rows = Vec::with_capacity(policies.len());
+    for rc in policies {
+        let mut samples: Vec<f64> = Vec::with_capacity(cfg.trials);
+        let mut completed = 0usize;
+        let mut recoveries = 0u64;
+        for trial in 0..cfg.trials {
+            // seed by trial only (not policy): identical draws per policy
+            let sched = profile
+                .realize(cluster, trial_seed(cfg.seed, 0, trial as u64))
+                .expect("validated above");
+            let job = run_collective_job(
+                cluster,
+                algorithm,
+                bytes,
+                iterations,
+                &sched,
+                cfg.link_model,
+                rc,
+            );
+            recoveries += u64::from(job.recoveries);
+            if !job.aborted {
+                completed += 1;
+                samples.push(job.total_ns as f64);
+            }
+        }
+        rows.push(RecoveryRow {
+            policy: rc.policy.name().to_string(),
+            trials: cfg.trials,
+            completed,
+            recoveries,
+            stats: summarize(&samples),
+        });
+    }
+    Ok(rows)
+}
+
+/// One MTBF point of the shrink-vs-restart crossover table.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MtbfRow {
+    pub mtbf_ns: u64,
+    /// p50 time-to-completion per compared policy, `None` when every
+    /// trial under that policy aborted. Order matches the `policies`
+    /// argument of [`mtbf_crossover`].
+    pub p50_ns: Vec<Option<f64>>,
+    /// `policy.name()` of the fastest completing policy at this MTBF
+    /// (`"-"` when nothing completed).
+    pub winner: String,
+}
+
+/// The crossover table: at each MTBF, links die with exponential
+/// inter-arrival times (deterministic per `(cfg.seed, mtbf, trial)`)
+/// and each policy runs the same N-iteration job through the identical
+/// kill sequence; the row records each policy's p50 time-to-completion
+/// and which one wins. Sweeping MTBF from harsh to benign locates where
+/// checkpoint/restart stops paying for itself against elastic shrink.
+pub fn mtbf_crossover(
+    cluster: &Cluster,
+    algorithm: &Algorithm,
+    bytes: u64,
+    iterations: usize,
+    mtbfs_ns: &[u64],
+    policies: &[RecoveryConfig],
+    cfg: &McConfig,
+) -> Vec<MtbfRow> {
+    // horizon: generously past the healthy job so late kills can strike
+    // replayed iterations too
+    let healthy = run_collective_job(
+        cluster,
+        algorithm,
+        bytes,
+        1,
+        &FaultSchedule::default(),
+        cfg.link_model,
+        &RecoveryConfig::default(),
+    )
+    .total_ns;
+    let horizon = healthy.saturating_mul(iterations as u64).saturating_mul(4);
+    let mut rows = Vec::with_capacity(mtbfs_ns.len());
+    for (m, &mtbf_ns) in mtbfs_ns.iter().enumerate() {
+        let mut per_policy: Vec<Vec<f64>> = vec![Vec::new(); policies.len()];
+        for trial in 0..cfg.trials {
+            let seed = trial_seed(cfg.seed, m as u64, trial as u64);
+            let sched = exponential_kills(cluster, mtbf_ns, horizon, seed);
+            for (p, rc) in policies.iter().enumerate() {
+                let job = run_collective_job(
+                    cluster,
+                    algorithm,
+                    bytes,
+                    iterations,
+                    &sched,
+                    cfg.link_model,
+                    rc,
+                );
+                if !job.aborted {
+                    per_policy[p].push(job.total_ns as f64);
+                }
+            }
+        }
+        let p50_ns: Vec<Option<f64>> = per_policy
+            .iter()
+            .map(|s| summarize(s).map(|st| st.p50_ns))
+            .collect();
+        let winner = p50_ns
+            .iter()
+            .enumerate()
+            .filter_map(|(p, v)| v.map(|ns| (p, ns)))
+            .min_by(|a, b| a.1.total_cmp(&b.1))
+            .map(|(p, _)| policies[p].policy.name().to_string())
+            .unwrap_or_else(|| "-".to_string());
+        rows.push(MtbfRow {
+            mtbf_ns,
+            p50_ns,
+            winner,
+        });
+    }
+    rows
+}
+
+/// A kill-only fault schedule with exponential inter-arrival times of
+/// mean `mtbf_ns`, each kill striking a random live fabric link. Pure in
+/// `(cluster, mtbf_ns, horizon_ns, seed)`.
+pub fn exponential_kills(
+    cluster: &Cluster,
+    mtbf_ns: u64,
+    horizon_ns: u64,
+    seed: u64,
+) -> FaultSchedule {
+    let live: Vec<_> = cluster
+        .links()
+        .iter()
+        .filter(|l| l.bandwidth > 0.0)
+        .map(|l| l.id)
+        .collect();
+    let mut sched = FaultSchedule::default();
+    if live.is_empty() || mtbf_ns == 0 {
+        return sched;
+    }
+    let mut rng = SplitMix64::new(seed);
+    let mut t = 0u64;
+    loop {
+        // inverse-CDF exponential draw on a (0,1] uniform from the top
+        // 53 bits, never exactly 0
+        let u = ((rng.next_u64() >> 11) + 1) as f64 * (1.0 / (1u64 << 53) as f64);
+        let dt = (-u.ln() * mtbf_ns as f64).round() as u64;
+        t = t.saturating_add(dt.max(1));
+        if t > horizon_ns {
+            break;
+        }
+        let link = live[(rng.next_u64() % live.len() as u64) as usize];
+        sched.link_events.push(LinkEvent {
+            at_ns: t,
+            link,
+            bw_factor: 0.0,
+        });
+    }
+    sched.normalize();
+    sched
+}
+
+fn summarize(samples: &[f64]) -> Option<TrialStats> {
+    Summary::of(samples).map(|s| TrialStats {
+        mean_ns: s.mean,
+        p50_ns: s.p50,
+        p99_ns: s.p99,
+        ci95_ns: if s.n > 1 {
+            1.96 * s.std_dev / (s.n as f64).sqrt()
+        } else {
+            0.0
+        },
+    })
 }
 
 #[cfg(test)]
@@ -220,7 +456,7 @@ mod tests {
             threads: Some(1),
             ..McConfig::default()
         };
-        let rows = run(&cluster, &algos, &sizes, &profile(), &cfg);
+        let rows = run(&cluster, &algos, &sizes, &profile(), &cfg).unwrap();
         assert_eq!(rows.len(), 4);
         assert_eq!(rows[0].algorithm, Algorithm::Direct.name());
         assert_eq!(rows[0].bytes, 4);
@@ -242,11 +478,17 @@ mod tests {
             threads: Some(1),
             ..McConfig::default()
         };
-        let reference = run(&cluster, &algos, &sizes, &profile(), &cfg);
+        let reference = run(&cluster, &algos, &sizes, &profile(), &cfg).unwrap();
         for threads in [Some(1), Some(2), None] {
             let cfg_t = McConfig { threads, ..cfg };
-            let rows = run(&cluster, &algos, &sizes, &profile(), &cfg_t);
+            let rows = run(&cluster, &algos, &sizes, &profile(), &cfg_t).unwrap();
             assert_eq!(rows, reference, "threads={threads:?} diverged");
+            // the aborted fraction is part of the deterministic contract
+            // (and the two fractions partition the trials)
+            for (r, rr) in rows.iter().zip(reference.iter()) {
+                assert_eq!(r.aborted_frac(), rr.aborted_frac());
+                assert!((r.aborted_frac() + r.delivered_frac() - 1.0).abs() < 1e-12);
+            }
         }
     }
 
@@ -259,10 +501,125 @@ mod tests {
             threads: Some(1),
             ..McConfig::default()
         };
-        let rows = run(&cluster, &[Algorithm::Direct], &[4], &profile(), &cfg);
+        let rows = run(&cluster, &[Algorithm::Direct], &[4], &profile(), &cfg).unwrap();
         assert_eq!(rows[0].delivered, 3);
         let stats = rows[0].stats.as_ref().expect("delivered trials");
         assert!(stats.p50_ns <= stats.p99_ns);
         assert!((rows[0].delivered_frac() - 1.0).abs() < 1e-12);
+        assert_eq!(rows[0].aborted_frac(), 0.0);
+    }
+
+    #[test]
+    fn out_of_range_profile_errors_up_front() {
+        let cluster = kesch(1, 4); // 4 ranks — rank 9 doesn't exist
+        let bad = FaultProfile::parse("straggle=9:2").unwrap();
+        let cfg = McConfig {
+            trials: 2,
+            threads: Some(1),
+            ..McConfig::default()
+        };
+        let err = run(&cluster, &[Algorithm::Direct], &[4], &bad, &cfg).unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
+        let err = recovery_run(
+            &cluster,
+            &Algorithm::Direct,
+            4,
+            2,
+            &[RecoveryConfig::default()],
+            &bad,
+            &cfg,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
+    }
+
+    #[test]
+    fn recovery_rows_are_deterministic_and_zero_fault_policies_tie() {
+        let cluster = kesch(1, 4);
+        let none = FaultProfile::parse("").unwrap();
+        let cfg = McConfig {
+            trials: 3,
+            threads: Some(1),
+            ..McConfig::default()
+        };
+        let policies = [
+            RecoveryConfig::default(),
+            RecoveryConfig::with_policy(RecoveryPolicy::Replan),
+            RecoveryConfig::with_policy(RecoveryPolicy::Shrink),
+            RecoveryConfig::with_policy(RecoveryPolicy::Restart {
+                restore_ns: 1 << 20,
+            }),
+        ];
+        let rows =
+            recovery_run(&cluster, &Algorithm::Chain, 64 << 10, 4, &policies, &none, &cfg)
+                .unwrap();
+        let again =
+            recovery_run(&cluster, &Algorithm::Chain, 64 << 10, 4, &policies, &none, &cfg)
+                .unwrap();
+        assert_eq!(rows, again, "recovery sweep must be deterministic");
+        assert_eq!(rows.len(), 4);
+        // nothing fails ⇒ every policy completes every trial in the same
+        // virtual time and recovery never triggers
+        let p50 = rows[0].stats.as_ref().unwrap().p50_ns;
+        for r in &rows {
+            assert_eq!(r.completed, 3, "{}", r.policy);
+            assert_eq!(r.recoveries, 0, "{}", r.policy);
+            assert_eq!(r.aborted_frac(), 0.0, "{}", r.policy);
+            assert_eq!(r.stats.as_ref().unwrap().p50_ns, p50, "{}", r.policy);
+        }
+    }
+
+    #[test]
+    fn mtbf_crossover_rows_cover_grid_and_harsh_mtbf_aborts_more() {
+        let cluster = kesch(1, 4);
+        let cfg = McConfig {
+            trials: 3,
+            threads: Some(1),
+            ..McConfig::default()
+        };
+        let policies = [
+            RecoveryConfig::with_policy(RecoveryPolicy::Shrink),
+            RecoveryConfig::with_policy(RecoveryPolicy::Restart {
+                restore_ns: 1 << 22,
+            }),
+        ];
+        let mtbfs = [50_000u64, 1_000_000_000_000];
+        let rows = mtbf_crossover(
+            &cluster,
+            &Algorithm::Chain,
+            64 << 10,
+            3,
+            &mtbfs,
+            &policies,
+            &cfg,
+        );
+        assert_eq!(rows.len(), 2);
+        for r in &rows {
+            assert_eq!(r.p50_ns.len(), 2);
+        }
+        // an MTBF far beyond the job horizon means no kills at all:
+        // every policy completes and the winner is decided on clean time
+        let benign = &rows[1];
+        assert!(benign.p50_ns.iter().all(|v| v.is_some()));
+        assert_ne!(benign.winner, "-");
+    }
+
+    #[test]
+    fn exponential_kills_is_pure_and_scales_with_mtbf() {
+        let cluster = kesch(1, 4);
+        let a = exponential_kills(&cluster, 10_000, 1_000_000, 42);
+        let b = exponential_kills(&cluster, 10_000, 1_000_000, 42);
+        assert_eq!(a.link_events, b.link_events);
+        let sparse = exponential_kills(&cluster, 1_000_000, 1_000_000, 42);
+        assert!(
+            a.link_events.len() > sparse.link_events.len(),
+            "shorter MTBF must draw more kills ({} vs {})",
+            a.link_events.len(),
+            sparse.link_events.len()
+        );
+        for e in &a.link_events {
+            assert_eq!(e.bw_factor, 0.0);
+            assert!(e.at_ns >= 1 && e.at_ns <= 1_000_000);
+        }
     }
 }

@@ -100,6 +100,51 @@ impl Selector {
             spec,
         )
     }
+
+    /// Re-tune for a *mutated* topology (the recovery layer's re-plan
+    /// path), re-sweeping only the affected size classes: each bucket's
+    /// recorded winner is re-measured at the bucket boundary on the new
+    /// topology, and buckets whose winning latency is bit-unchanged keep
+    /// their entry verbatim — a size class a dead link never touched
+    /// costs one probe, not a full candidate sweep. Buckets whose winner
+    /// slowed down (re-routed transfers) or whose rank count changed
+    /// re-run the full candidate selection at the boundary size.
+    pub fn retuned_for(&self, cluster: &Cluster) -> Selector {
+        // the open-ended top bucket's `won_at_ns` was recorded at the
+        // sweep grid's largest size; probe it there
+        let top_probe = sweep::default_sizes().last().copied().unwrap_or(128 << 20);
+        let n = cluster.n_gpus();
+        let mut comm = Comm::new(cluster);
+        let mut engine = Engine::with_model(cluster, self.table.link_model);
+        let mut out = TuningTable::new(self.table.cluster.clone(), n)
+            .with_link_model(self.table.link_model);
+        for kind in CollectiveKind::ALL {
+            for e in self.table.entries_for(kind) {
+                let probe = if e.max_bytes == u64::MAX {
+                    top_probe
+                } else {
+                    e.max_bytes
+                };
+                let spec = CollectiveSpec::collective(kind, 0, n, probe);
+                let now_ns =
+                    collectives::latency_ns(&e.algorithm, &mut comm, &mut engine, &spec);
+                if n == self.table.n_ranks && now_ns == e.won_at_ns {
+                    out.push_bucket(kind, e.clone());
+                    continue;
+                }
+                let point = sweep::sweep_size_with(&mut comm, &mut engine, kind, probe, 0);
+                out.push_bucket(
+                    kind,
+                    super::table::TableEntry {
+                        max_bytes: e.max_bytes,
+                        algorithm: point.winner,
+                        won_at_ns: point.winner_ns,
+                    },
+                );
+            }
+        }
+        Selector { table: out }
+    }
 }
 
 #[cfg(test)]

@@ -79,7 +79,7 @@ fn clearing_faults_restores_healthy_execution() {
     let n = cluster.n_gpus();
     let profile =
         FaultProfile::parse("kill=2@100us,degrade=2:0.3@50us,straggle=2:4,jitter=0.2").unwrap();
-    let schedule = profile.realize(&cluster, 0xdead_beef);
+    let schedule = profile.realize(&cluster, 0xdead_beef).unwrap();
     for model in LinkModel::ALL {
         let mut comm = Comm::new(&cluster);
         let mut reference = Engine::with_model(&cluster, model);
@@ -377,7 +377,7 @@ fn stragglers_and_degradation_slow_both_models_deterministically() {
     let cluster = presets::kesch(1, 8);
     let n = cluster.n_gpus();
     let profile = FaultProfile::parse("degrade=2:0.4@100us,straggle=1:3,jitter=0.05").unwrap();
-    let schedule = profile.realize(&cluster, 17);
+    let schedule = profile.realize(&cluster, 17).unwrap();
     let mut comm = Comm::new(&cluster);
     let spec = CollectiveSpec::new(0, n, 8 << 20);
     let bp = collectives::plan(&Algorithm::Knomial { k: 2 }, &mut comm, &spec);
@@ -420,19 +420,24 @@ fn montecarlo_rows_are_identical_across_runs_and_threads() {
             link_model,
             threads: Some(1),
         };
-        let reference = montecarlo::run(&cluster, &algos, &sizes, &profile, &cfg);
+        let reference = montecarlo::run(&cluster, &algos, &sizes, &profile, &cfg).unwrap();
         assert_eq!(reference.len(), algos.len() * sizes.len());
         for r in &reference {
             assert_eq!(r.trials, 6);
+            // aborted_frac partitions the trial population with the
+            // delivered fraction — and must be as deterministic as the
+            // latency stats below
+            let frac = r.aborted_frac();
+            assert!((0.0..=1.0).contains(&frac), "aborted_frac out of range");
         }
         // re-run with a freshly parsed profile: determinism must not
         // depend on object identity
         let again = FaultProfile::parse("kill=1@500us,straggle=1:3,jitter=0.05").unwrap();
-        let rerun = montecarlo::run(&cluster, &algos, &sizes, &again, &cfg);
+        let rerun = montecarlo::run(&cluster, &algos, &sizes, &again, &cfg).unwrap();
         assert_eq!(rerun, reference, "{}: re-run diverged", link_model.name());
         for threads in [Some(2), Some(4), None] {
             let cfg_t = McConfig { threads, ..cfg };
-            let rows = montecarlo::run(&cluster, &algos, &sizes, &profile, &cfg_t);
+            let rows = montecarlo::run(&cluster, &algos, &sizes, &profile, &cfg_t).unwrap();
             assert_eq!(
                 rows, reference,
                 "{}: threads={threads:?} diverged",

@@ -1,0 +1,390 @@
+//! Recovery-layer integration tests: golden parity (with no faults every
+//! recovery policy's multi-iteration job is bit-identical to the
+//! no-recovery path, for both the repeated-collective and training
+//! workloads, under both link models), the mid-job link-kill acceptance
+//! scenario (replan finishes every iteration and the rebuilt ring avoids
+//! the dead rail, reconstructed from the flow trace), and the
+//! exhausted-detour contract (a victim with no live via completes at the
+//! sentinel at the same instant whatever the retry budget).
+
+use gdrbcast::collectives::{self, Algorithm, CollectiveSpec};
+use gdrbcast::comm::Comm;
+use gdrbcast::coordinator::{
+    run_collective_job, run_training_job, ExchangeOptions, RecoveryConfig, RecoveryPolicy,
+    TrainingMode,
+};
+use gdrbcast::models;
+use gdrbcast::netsim::{Deps, Engine, FaultSchedule, LinkModel, Plan, SimOp, UNREACHABLE_NS};
+use gdrbcast::topology::{presets, LinkKind};
+use gdrbcast::tuning::Selector;
+
+fn all_policies() -> [RecoveryPolicy; 4] {
+    [
+        RecoveryPolicy::None,
+        RecoveryPolicy::Replan,
+        RecoveryPolicy::Shrink,
+        RecoveryPolicy::Restart {
+            restore_ns: 1 << 20,
+        },
+    ]
+}
+
+#[test]
+fn healthy_collective_job_is_policy_invariant_under_both_models() {
+    // the golden-parity acceptance gate, collective flavour: with no
+    // faults, an N-iteration job under ANY recovery policy is
+    // bit-identical to N× the single-iteration simulation — the policy
+    // machinery must cost nothing when nothing fails
+    let cluster = presets::kesch(2, 8);
+    let n = cluster.n_gpus();
+    let bytes: u64 = 1 << 20;
+    let algo = Algorithm::Chain;
+    let empty = FaultSchedule::default();
+    for model in LinkModel::ALL {
+        let mut comm = Comm::new(&cluster);
+        let mut engine = Engine::with_model(&cluster, model);
+        let spec = CollectiveSpec::new(0, n, bytes);
+        let one = collectives::latency_ns(&algo, &mut comm, &mut engine, &spec);
+        let reference = run_collective_job(
+            &cluster,
+            &algo,
+            bytes,
+            4,
+            &empty,
+            model,
+            &RecoveryConfig::default(),
+        );
+        assert!(!reference.aborted);
+        assert_eq!(reference.total_ns, 4 * one, "{}", model.name());
+        for policy in all_policies() {
+            let job = run_collective_job(
+                &cluster,
+                &algo,
+                bytes,
+                4,
+                &empty,
+                model,
+                &RecoveryConfig::with_policy(policy),
+            );
+            let ctx = format!("{} {}", model.name(), policy.name());
+            assert_eq!(job, reference, "{ctx}: healthy outcome diverged");
+            assert_eq!(job.recoveries, 0, "{ctx}");
+            assert_eq!(job.completed, 4, "{ctx}");
+            assert_eq!(job.last_iteration_ns, one, "{ctx}");
+            assert_eq!(job.final_n_ranks(), n, "{ctx}");
+        }
+    }
+}
+
+#[test]
+fn healthy_training_job_is_policy_invariant_under_both_models() {
+    // same gate, training flavour: compute + full exchange per
+    // iteration, barrier and overlap composition both pinned
+    let cluster = presets::kesch(1, 4);
+    let model_net = models::alexnet();
+    for link_model in LinkModel::ALL {
+        let sel = Selector::tuned_with_model(&cluster, Some(1), link_model);
+        for overlap in [false, true] {
+            let opts = ExchangeOptions {
+                overlap,
+                link_model,
+                ..ExchangeOptions::default()
+            };
+            let single = run_training_job(
+                &cluster,
+                &model_net,
+                &sel,
+                TrainingMode::AllreduceGradients,
+                1,
+                256,
+                0.0,
+                opts,
+            );
+            assert!(!single.aborted);
+            assert!(single.total_ns > 0);
+            for policy in all_policies() {
+                let jopts = ExchangeOptions {
+                    recovery: RecoveryConfig::with_policy(policy),
+                    ..opts
+                };
+                let job = run_training_job(
+                    &cluster,
+                    &model_net,
+                    &sel,
+                    TrainingMode::AllreduceGradients,
+                    3,
+                    256,
+                    0.0,
+                    jopts,
+                );
+                let ctx = format!(
+                    "{} overlap={overlap} {}",
+                    link_model.name(),
+                    policy.name()
+                );
+                assert!(!job.aborted, "{ctx}");
+                assert_eq!(job.completed, 3, "{ctx}");
+                assert_eq!(job.recoveries, 0, "{ctx}");
+                assert_eq!(
+                    job.total_ns,
+                    3 * single.total_ns,
+                    "{ctx}: policy cost leaked into a healthy job"
+                );
+                assert_eq!(job.last_iteration_ns, single.total_ns, "{ctx}");
+            }
+        }
+    }
+}
+
+#[test]
+fn installed_empty_schedule_matches_absent_faults_in_job_mode() {
+    // an ExchangeOptions with `faults: Some(&empty)` must drive the job
+    // identically to `faults: None` — the engine golden-parity contract
+    // lifted to the multi-iteration runner
+    let cluster = presets::kesch(1, 4);
+    let model_net = models::alexnet();
+    let sel = Selector::tuned_with_threads(&cluster, Some(1));
+    let empty = FaultSchedule::default();
+    let base = ExchangeOptions {
+        recovery: RecoveryConfig::with_policy(RecoveryPolicy::Replan),
+        ..ExchangeOptions::default()
+    };
+    let without = run_training_job(
+        &cluster,
+        &model_net,
+        &sel,
+        TrainingMode::PartitionedBcast,
+        3,
+        256,
+        0.0,
+        base,
+    );
+    let with_empty = run_training_job(
+        &cluster,
+        &model_net,
+        &sel,
+        TrainingMode::PartitionedBcast,
+        3,
+        256,
+        0.0,
+        ExchangeOptions {
+            faults: Some(&empty),
+            ..base
+        },
+    );
+    assert_eq!(without, with_empty);
+}
+
+#[test]
+fn replan_survives_midjob_rail_kill_and_rebuilt_ring_avoids_dead_links() {
+    // the PR's acceptance scenario: a chain broadcast job on kesch(2,8)
+    // loses the FDR rail its cross-node hop runs on, mid-job, with a
+    // zero retry budget (no engine-level detour). The replan policy must
+    // observe the failure, remove the rail from the routable graph,
+    // rebuild the ring on the surviving topology and finish every
+    // iteration with the full world intact — verified by replaying the
+    // rebuilt plan with a flow trace and checking no flow touches a
+    // dead link.
+    let cluster = presets::kesch(2, 8);
+    let n = cluster.n_gpus();
+    let bytes: u64 = 1 << 20;
+    let algo = Algorithm::Chain;
+
+    // one healthy iteration, to place the kill mid-iteration-2
+    let one = {
+        let mut comm = Comm::new(&cluster);
+        let mut engine = Engine::with_model(&cluster, LinkModel::FairShare);
+        let spec = CollectiveSpec::new(0, n, bytes);
+        collectives::latency_ns(&algo, &mut comm, &mut engine, &spec)
+    };
+    assert!(one > 0 && one < UNREACHABLE_NS);
+
+    // the chain's cross-node hop is rank 7 -> rank 8; kill its FDR rail
+    let cross = cluster
+        .route(cluster.rank_device(7), cluster.rank_device(8))
+        .unwrap();
+    let dead_link = *cluster
+        .route_view(cross)
+        .hops
+        .iter()
+        .find(|&&h| cluster.link(h).kind == LinkKind::IbFdr)
+        .expect("cross-node route crosses an FDR rail");
+    let sched = FaultSchedule::default()
+        .with_link_event(one + one / 2, dead_link, 0.0)
+        .with_retry(0, 1000);
+
+    let rc = RecoveryConfig::with_policy(RecoveryPolicy::Replan);
+    let job = run_collective_job(
+        &cluster,
+        &algo,
+        bytes,
+        4,
+        &sched,
+        LinkModel::FairShare,
+        &rc,
+    );
+    assert!(!job.aborted, "{job:?}");
+    assert_eq!(job.completed, 4, "replan must finish every iteration");
+    assert_eq!(job.recoveries, 1, "{job:?}");
+    // the other socket's rail keeps every rank reachable: full world
+    assert_eq!(job.alive_ranks, (0..n).collect::<Vec<_>>(), "{job:?}");
+    assert!(
+        job.last_iteration_ns < UNREACHABLE_NS,
+        "final iteration still hit the sentinel: {job:?}"
+    );
+    assert!(
+        job.dead_links.contains(&dead_link),
+        "the killed rail was never observed: {job:?}"
+    );
+    // time accounting: detection + replan charges on top of the work
+    assert!(job.total_ns > 4 * one);
+
+    // reconstruct the surviving topology the job re-planned on and
+    // replay the rebuilt ring with a flow trace
+    let mut survivor = cluster.clone();
+    for &l in &job.dead_links {
+        survivor.kill_link(l).unwrap();
+    }
+    let mut comm = Comm::new(&survivor);
+    let spec = CollectiveSpec::new(0, n, bytes);
+    let bp = collectives::plan(&algo, &mut comm, &spec);
+    let mut engine = Engine::with_model(&survivor, LinkModel::FairShare);
+    let (result, events) = engine.execute_with_flow_trace(&bp.plan);
+    let outcome = result.degraded_outcome(&bp.plan, n);
+    assert!(
+        outcome.is_complete(),
+        "rebuilt ring lost ranks: {:?}",
+        outcome.undelivered
+    );
+    assert!(result.makespan < UNREACHABLE_NS);
+    assert!(!events.is_empty(), "flow trace is empty");
+    for ev in &events {
+        if let SimOp::Transfer { route, .. } = bp.plan.op(ev.op) {
+            let hops = survivor.route_view(route).hops;
+            for d in &job.dead_links {
+                assert!(
+                    !hops.contains(d),
+                    "rebuilt ring still crosses dead link {d:?} (op {})",
+                    ev.op
+                );
+            }
+        }
+    }
+    // and the re-formed ring genuinely re-routed: the original topology
+    // ran the cross-node hop over the now-dead rail
+    assert!(cluster.route_view(cross).hops.contains(&dead_link));
+    let rerouted = survivor
+        .route(survivor.rank_device(7), survivor.rank_device(8))
+        .unwrap();
+    assert!(!survivor.route_view(rerouted).hops.contains(&dead_link));
+}
+
+#[test]
+fn exhausted_detour_candidates_hit_sentinel_without_burning_budget() {
+    // kill every link touching rank 3's GPU: no Host/IbHca via can reach
+    // it, so detour_route must report None and the victim completes at
+    // the unreachable sentinel — at the *same instant* whatever the
+    // retry budget (the engine must not charge timeouts looping over a
+    // detour set with no survivors)
+    let cluster = presets::kesch(1, 4);
+    let victim_dev = cluster.rank_device(3);
+    let mut base = FaultSchedule::default();
+    for l in cluster.links() {
+        if l.src == victim_dev || l.dst == victim_dev {
+            base = base.with_link_event(0, l.id, 0.0);
+        }
+    }
+    let route = cluster
+        .route(cluster.rank_device(0), victim_dev)
+        .unwrap();
+    let mut plan = Plan::new();
+    plan.push(
+        SimOp::Transfer {
+            route,
+            bytes: 1 << 20,
+            overhead_ns: 1000,
+            issue_ns: 1000,
+            bw_cap: None,
+        },
+        Deps::none(),
+        Some((3, 0)),
+    );
+    for model in LinkModel::ALL {
+        let mut results = Vec::new();
+        for budget in [0u32, 4] {
+            let mut engine = Engine::with_model(&cluster, model);
+            engine.set_faults(Some(base.clone().with_retry(budget, 10_000)));
+            let r = engine.execute(&plan);
+            assert!(
+                r.done[0] >= UNREACHABLE_NS,
+                "{} budget={budget}: victim delivered without a live route",
+                model.name()
+            );
+            let outcome = r.degraded_outcome(&plan, cluster.n_gpus());
+            assert_eq!(outcome.undelivered, vec![3], "{}", model.name());
+            // every via candidate is dead at any retry instant
+            assert!(
+                engine
+                    .detour_route(cluster.rank_device(0), victim_dev, 20_000)
+                    .is_none(),
+                "{} budget={budget}: a detour survived the isolation",
+                model.name()
+            );
+            results.push(r);
+        }
+        assert_eq!(
+            results[0].done, results[1].done,
+            "{}: retry budget changed the give-up instant on a dead detour set",
+            model.name()
+        );
+        assert_eq!(results[0].makespan, results[1].makespan, "{}", model.name());
+    }
+}
+
+#[test]
+fn shrink_job_rescales_and_restart_heals_on_the_integration_preset() {
+    // end-to-end policy comparison on kesch(2,8): isolate rank 15's GPU
+    // at t = 0 (undetourable), run the same job under shrink and
+    // restart. Shrink continues at n-1; restart heals (the t = 0 kill is
+    // in the past after the restore) and keeps the full world.
+    let cluster = presets::kesch(2, 8);
+    let n = cluster.n_gpus();
+    let victim_dev = cluster.rank_device(n - 1);
+    let mut sched = FaultSchedule::default().with_retry(0, 1000);
+    for l in cluster.links() {
+        if l.src == victim_dev || l.dst == victim_dev {
+            sched = sched.with_link_event(0, l.id, 0.0);
+        }
+    }
+    let shrink = run_collective_job(
+        &cluster,
+        &Algorithm::Chain,
+        1 << 20,
+        3,
+        &sched,
+        LinkModel::Fifo,
+        &RecoveryConfig::with_policy(RecoveryPolicy::Shrink),
+    );
+    assert!(!shrink.aborted, "{shrink:?}");
+    assert_eq!(shrink.completed, 3);
+    assert_eq!(
+        shrink.alive_ranks,
+        (0..n - 1).collect::<Vec<_>>(),
+        "shrink drops exactly the cut-off rank"
+    );
+    let restart = run_collective_job(
+        &cluster,
+        &Algorithm::Chain,
+        1 << 20,
+        3,
+        &sched,
+        LinkModel::Fifo,
+        &RecoveryConfig::with_policy(RecoveryPolicy::Restart {
+            restore_ns: 1 << 20,
+        }),
+    );
+    assert!(!restart.aborted, "{restart:?}");
+    assert_eq!(restart.completed, 3);
+    assert_eq!(restart.final_n_ranks(), n, "restart keeps the full world");
+    assert!(restart.dead_links.is_empty(), "restart heals observed damage");
+}
