@@ -1,0 +1,17 @@
+//! Detects whether the real `xla` crate has been vendored (see the
+//! `pjrt` feature in Cargo.toml). The feature flag alone cannot make
+//! `runtime/pjrt.rs`'s real client compile in the offline image — the
+//! crate simply is not there — so the module is gated on
+//! `all(feature = "pjrt", pjrt_vendored)`: feature-complete builds like
+//! `clippy --all-features` keep working against the stub until the
+//! dependency is actually present.
+
+use std::path::Path;
+
+fn main() {
+    println!("cargo::rustc-check-cfg=cfg(pjrt_vendored)");
+    println!("cargo::rerun-if-changed=vendor/xla/Cargo.toml");
+    if Path::new("vendor/xla/Cargo.toml").exists() {
+        println!("cargo::rustc-cfg=pjrt_vendored");
+    }
+}

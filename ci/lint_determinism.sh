@@ -1,0 +1,49 @@
+#!/usr/bin/env bash
+# Determinism lint for diagnostic paths.
+#
+# The static verifier (rust/src/analysis) and the plan validator
+# (rust/src/collectives/validate.rs) promise byte-identical reports run
+# to run. Two things silently break that promise:
+#
+#   1. std::collections::{HashMap,HashSet} — iteration order depends on
+#      a per-process RandomState, so any report built by walking one is
+#      nondeterministic. Diagnostic paths use Vec/sort or dense index
+#      tables instead.
+#   2. bare `+`/`*` on values that can sit at the UNREACHABLE_NS
+#      sentinel (SimTime::MAX / 4) — close enough to the top of the
+#      range that naive arithmetic overflows; saturating_add /
+#      saturating_mul are required.
+#
+# Escape hatch: append a `det-ok` comment to a line that is a verified
+# false positive.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+DIAG_PATHS=(rust/src/analysis rust/src/collectives/validate.rs)
+fail=0
+
+hits=$(grep -rn 'HashMap\|HashSet' "${DIAG_PATHS[@]}" | grep -v 'det-ok' || true)
+if [ -n "$hits" ]; then
+    echo "determinism lint: hash collections in diagnostic paths" >&2
+    echo "(iteration order is random per process; use Vec/sort or dense tables):" >&2
+    echo "$hits" >&2
+    fail=1
+fi
+
+# Strip `//` comment tails before matching so prose mentioning
+# UNREACHABLE_NS or arithmetic doesn't trip the lint.
+hits=$(grep -rn 'UNREACHABLE_NS' "${DIAG_PATHS[@]}" \
+    | sed 's@//.*@@' \
+    | grep -v 'saturating_\|det-ok' \
+    | grep '[+*]' || true)
+if [ -n "$hits" ]; then
+    echo "determinism lint: bare +/* arithmetic near UNREACHABLE_NS" >&2
+    echo "(values at the sentinel overflow; use saturating_add/saturating_mul):" >&2
+    echo "$hits" >&2
+    fail=1
+fi
+
+if [ "$fail" -ne 0 ]; then
+    exit 1
+fi
+echo "determinism lint: clean"

@@ -409,6 +409,15 @@ fn main() {
         }
     }
 
+    // ---- verifier overhead on the measured path ------------------------
+    // The static-verification hooks compile to no-ops outside debug
+    // builds, so on the bench path this row must read exactly 0; CI
+    // gates on it to catch the hooks ever leaking into release.
+    rows.push(wall_row(
+        "verify/debug_overhead_ns",
+        gdrbcast::analysis::verify_time_ns() as f64,
+    ));
+
     // ---- write BENCH_sweep.json (bencher rows + wall rows) -------------
     let path = bencher
         .write_report_with("BENCH_sweep", rows)

@@ -1,0 +1,403 @@
+//! Static dataflow: replay the copy/reduce contribution algebra of
+//! [`crate::collectives::validate`] purely over *dependency order* — no
+//! `ExecResult`, no simulated clock. Each op gets a completion depth
+//! (`structure::done_depths`); a flow edge captures its source cell at
+//! the op's start depth and applies it to the destination cell at the
+//! op's completion depth, with applies ordered before captures at equal
+//! depth (an arrival may feed a forward that starts the same instant —
+//! the engine's dependency semantics). For dep-wired plans this replays
+//! exactly the linearization the engine would produce, so the final
+//! contracts — all n contributions exactly once — are provable before
+//! anything executes.
+
+use crate::collectives::{CollectiveKind, CollectivePlan, EdgeSem};
+
+use super::diag::{Code, Diag};
+use super::structure;
+
+pub(super) fn check(cp: &CollectivePlan, diags: &mut Vec<Diag>) {
+    let spec = &cp.spec;
+    let n = spec.n_ranks;
+    let k = cp.n_chunks;
+    let plan = &cp.plan;
+    let n_ops = plan.len();
+
+    if n == 0 || k == 0 {
+        diags.push(Diag::new(
+            Code::ChunkCount,
+            format!("degenerate collective shape: {n} ranks x {k} chunks"),
+        ));
+        return;
+    }
+    if matches!(
+        spec.kind,
+        CollectiveKind::ReduceScatter | CollectiveKind::Allgather
+    ) && k != n
+    {
+        diags.push(Diag::new(
+            Code::ChunkCount,
+            format!(
+                "{} plan must carry one chunk per rank (got {k} chunks for {n} ranks)",
+                spec.kind.name()
+            ),
+        ));
+        return;
+    }
+
+    // delivery labels: range + uniqueness, via a dense (rank, chunk) map
+    // scanned in op order — first writer wins, the duplicate is reported
+    // at the second op (deterministic, no hashing)
+    let mut delivered = vec![usize::MAX; n * k];
+    for (id, label) in plan.labels.iter().enumerate() {
+        if let Some((r, c)) = *label {
+            if r >= n || c >= k {
+                diags.push(Diag::at(
+                    Code::LabelRange,
+                    id,
+                    format!("delivery label ({r}, {c}) outside {n} ranks x {k} chunks"),
+                ));
+                continue;
+            }
+            let cell = r * k + c;
+            if delivered[cell] != usize::MAX {
+                diags.push(Diag::at(
+                    Code::DuplicateLabel,
+                    id,
+                    format!(
+                        "duplicate delivery of chunk {c} to rank {r} \
+                         (ops {} and {id})",
+                        delivered[cell]
+                    ),
+                ));
+            } else {
+                delivered[cell] = id;
+            }
+        }
+    }
+
+    // broadcast owes every (non-root rank, chunk) a labelled delivery
+    if spec.kind == CollectiveKind::Broadcast {
+        for r in 0..n {
+            if r == spec.root {
+                continue;
+            }
+            for c in 0..k {
+                if delivered[r * k + c] == usize::MAX {
+                    diags.push(Diag::new(
+                        Code::MissingDelivery,
+                        format!("rank {r} never receives chunk {c}"),
+                    ));
+                }
+            }
+        }
+    }
+
+    // flow edges: range checks gate the replay (bad indices cannot be
+    // replayed), duplicates are structural waste/double-application
+    let mut edges_ok = true;
+    for (i, e) in cp.edges.iter().enumerate() {
+        let problem = if e.src >= n || e.dst >= n {
+            Some(format!("edge {i}: ranks {} -> {} outside 0..{n}", e.src, e.dst))
+        } else if e.chunk >= k {
+            Some(format!("edge {i}: chunk {} outside 0..{k}", e.chunk))
+        } else if e.op >= n_ops {
+            Some(format!("edge {i}: references nonexistent op {}", e.op))
+        } else {
+            None
+        };
+        if let Some(message) = problem {
+            diags.push(Diag::new(Code::EdgeRange, message));
+            edges_ok = false;
+        }
+    }
+    if edges_ok && spec.kind != CollectiveKind::Broadcast {
+        // broadcast legitimately records several custody edges per
+        // (dst, chunk); reductions must ship each contribution once
+        let mut keys: Vec<(usize, usize, usize, u8, usize)> = cp
+            .edges
+            .iter()
+            .enumerate()
+            .map(|(i, e)| {
+                let sem = match e.sem {
+                    EdgeSem::Copy => 0u8,
+                    EdgeSem::Reduce => 1u8,
+                };
+                (e.src, e.dst, e.chunk, sem, i)
+            })
+            .collect();
+        keys.sort_unstable();
+        for pair in keys.windows(2) {
+            let (a, b) = (pair[0], pair[1]);
+            if (a.0, a.1, a.2, a.3) == (b.0, b.1, b.2, b.3) {
+                diags.push(Diag::at(
+                    Code::DuplicateEdge,
+                    cp.edges[b.4].op,
+                    format!(
+                        "duplicate flow edge {} -> {} for chunk {} (edges {} and {})",
+                        a.0, a.1, a.2, a.4, b.4
+                    ),
+                ));
+                edges_ok = false;
+            }
+        }
+    }
+    if !edges_ok {
+        return;
+    }
+
+    let Some(depths) = structure::done_depths(plan) else {
+        // cyclic or dangling — already diagnosed by the structure pass
+        return;
+    };
+
+    // initial contributions, one dense cell per (rank, chunk)
+    let mut state: Vec<Vec<u32>> = vec![vec![0u32; n]; n * k];
+    match spec.kind {
+        CollectiveKind::Broadcast => {
+            for c in 0..k {
+                state[spec.root * k + c][spec.root] = 1;
+            }
+        }
+        CollectiveKind::ReduceScatter | CollectiveKind::Allreduce => {
+            for r in 0..n {
+                for c in 0..k {
+                    state[r * k + c][r] = 1;
+                }
+            }
+        }
+        CollectiveKind::Allgather => {
+            for r in 0..n {
+                state[r * k + r][r] = 1;
+            }
+        }
+    }
+
+    // replay edge events in depth order; applies before captures at the
+    // same depth
+    const APPLY: u8 = 0;
+    const CAPTURE: u8 = 1;
+    let mut events: Vec<(u32, u8, usize)> = Vec::with_capacity(2 * cp.edges.len());
+    for (i, e) in cp.edges.iter().enumerate() {
+        events.push((depths[e.op] - 1, CAPTURE, i));
+        events.push((depths[e.op], APPLY, i));
+    }
+    events.sort_unstable();
+
+    let mut payloads: Vec<Option<Vec<u32>>> = vec![None; cp.edges.len()];
+    let mut causal = true;
+    for (_depth, phase, i) in events {
+        let e = &cp.edges[i];
+        if phase == CAPTURE {
+            let snap = state[e.src * k + e.chunk].clone();
+            if snap.iter().all(|&x| x == 0) {
+                diags.push(Diag::at(
+                    Code::Causality,
+                    e.op,
+                    format!(
+                        "rank {} forwards chunk {} before any dependency \
+                         chain could deliver it",
+                        e.src, e.chunk
+                    ),
+                ));
+                causal = false;
+            }
+            payloads[i] = Some(snap);
+        } else {
+            let payload = payloads[i].take().unwrap_or_else(|| vec![0u32; n]);
+            match e.sem {
+                EdgeSem::Reduce => {
+                    for (acc, add) in state[e.dst * k + e.chunk].iter_mut().zip(&payload) {
+                        *acc = acc.saturating_add(*add);
+                    }
+                }
+                EdgeSem::Copy => state[e.dst * k + e.chunk] = payload,
+            }
+        }
+    }
+    if !causal {
+        // the final state is garbage downstream of a causality break;
+        // reporting contract mismatches on top would only add noise
+        return;
+    }
+
+    // final contracts
+    let mut contract = |rank: usize, chunk: usize, want: &dyn Fn(usize) -> u32| {
+        for (i, &got) in state[rank * k + chunk].iter().enumerate() {
+            let want = want(i);
+            if got != want {
+                diags.push(Diag::new(
+                    Code::Contribution,
+                    format!(
+                        "rank {rank} chunk {chunk}: contribution from rank {i} \
+                         appears {got} times (want {want})"
+                    ),
+                ));
+            }
+        }
+    };
+    match spec.kind {
+        CollectiveKind::Broadcast => {
+            let root = spec.root;
+            for r in 0..n {
+                for c in 0..k {
+                    contract(r, c, &|i| u32::from(i == root));
+                }
+            }
+        }
+        CollectiveKind::Allreduce => {
+            for r in 0..n {
+                for c in 0..k {
+                    contract(r, c, &|_| 1);
+                }
+            }
+        }
+        CollectiveKind::ReduceScatter => {
+            for s in 0..n {
+                contract(s, s, &|_| 1);
+            }
+        }
+        CollectiveKind::Allgather => {
+            for r in 0..n {
+                for c in 0..k {
+                    contract(r, c, &|i| u32::from(i == c));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::{self, Algorithm, BcastSpec, CollectiveSpec};
+    use crate::comm::Comm;
+    use crate::netsim::Deps;
+    use crate::topology::presets::{flat, kesch};
+
+    fn diags_for(cp: &CollectivePlan) -> Vec<Diag> {
+        let mut diags = Vec::new();
+        check(cp, &mut diags);
+        diags
+    }
+
+    #[test]
+    fn every_algorithm_replays_clean() {
+        let c = kesch(1, 8);
+        let mut comm = Comm::new(&c);
+        for (algo, spec) in [
+            (Algorithm::Direct, BcastSpec::new(0, 8, 1 << 20)),
+            (Algorithm::Chain, BcastSpec::new(3, 8, 1 << 20)),
+            (
+                Algorithm::PipelinedChain { chunk: 64 << 10 },
+                BcastSpec::new(0, 8, 1 << 20),
+            ),
+            (Algorithm::Knomial { k: 2 }, BcastSpec::new(0, 8, 1 << 20)),
+            (
+                Algorithm::ScatterRingAllgather,
+                BcastSpec::new(0, 8, 1 << 20),
+            ),
+            (
+                Algorithm::HostStagedKnomial { k: 2 },
+                BcastSpec::new(0, 8, 64 << 10),
+            ),
+            (
+                Algorithm::RingReduceScatter,
+                CollectiveSpec::reduce_scatter(8, 1 << 20),
+            ),
+            (
+                Algorithm::RingAllgather,
+                CollectiveSpec::allgather(8, 1 << 20),
+            ),
+            (
+                Algorithm::RingAllreduce,
+                CollectiveSpec::allreduce(8, 1 << 20),
+            ),
+            (
+                Algorithm::TreeAllreduce { k: 2 },
+                CollectiveSpec::allreduce(8, 8 << 10),
+            ),
+        ] {
+            let cp = collectives::plan(&algo, &mut comm, &spec);
+            let diags = diags_for(&cp);
+            assert!(diags.is_empty(), "{}: {diags:?}", algo.name());
+        }
+    }
+
+    #[test]
+    fn dropped_dep_breaks_static_causality() {
+        let c = flat(4);
+        let mut comm = Comm::new(&c);
+        let mut cp = collectives::chain::plan(&mut comm, &BcastSpec::new(0, 4, 1 << 20));
+        cp.plan.deps[1] = Deps::none();
+        let diags = diags_for(&cp);
+        assert!(
+            diags.iter().any(|d| d.code == Code::Causality),
+            "{diags:?}"
+        );
+    }
+
+    #[test]
+    fn dropped_reduce_edge_breaks_contract() {
+        let c = flat(4);
+        let mut comm = Comm::new(&c);
+        let mut cp = collectives::allreduce::ring(&mut comm, &CollectiveSpec::allreduce(4, 4096));
+        cp.edges.remove(0);
+        let diags = diags_for(&cp);
+        assert!(
+            diags.iter().any(|d| d.code == Code::Contribution),
+            "{diags:?}"
+        );
+    }
+
+    #[test]
+    fn duplicated_reduce_edge_flagged() {
+        let c = flat(4);
+        let mut comm = Comm::new(&c);
+        let mut cp = collectives::allreduce::ring(&mut comm, &CollectiveSpec::allreduce(4, 4096));
+        let dup = cp.edges[0];
+        cp.edges.push(dup);
+        let diags = diags_for(&cp);
+        assert!(
+            diags.iter().any(|d| d.code == Code::DuplicateEdge),
+            "{diags:?}"
+        );
+    }
+
+    #[test]
+    fn missing_and_duplicate_labels_flagged() {
+        let c = flat(4);
+        let mut comm = Comm::new(&c);
+        let mut cp = collectives::chain::plan(&mut comm, &BcastSpec::new(0, 4, 1 << 20));
+        let last = cp.plan.len() - 1;
+        let first_labeled = (0..last)
+            .find(|&i| cp.plan.label_of(i).is_some())
+            .expect("chain has labelled deliveries before the tail");
+        let hijack = cp.plan.label_of(first_labeled);
+        cp.plan.set_label(last, hijack);
+        let diags = diags_for(&cp);
+        assert!(
+            diags.iter().any(|d| d.code == Code::DuplicateLabel),
+            "{diags:?}"
+        );
+        assert!(
+            diags.iter().any(|d| d.code == Code::MissingDelivery),
+            "{diags:?}"
+        );
+    }
+
+    #[test]
+    fn wrong_chunk_count_flagged() {
+        let c = flat(4);
+        let mut comm = Comm::new(&c);
+        let mut cp = collectives::reduce_scatter::plan(
+            &mut comm,
+            &CollectiveSpec::reduce_scatter(4, 4096),
+        );
+        cp.n_chunks = 2;
+        let diags = diags_for(&cp);
+        assert!(
+            diags.iter().any(|d| d.code == Code::ChunkCount),
+            "{diags:?}"
+        );
+    }
+}

@@ -1,0 +1,240 @@
+//! Typed verifier diagnostics: stable codes, deterministic ordering.
+//!
+//! Every invariant the static verifier (and the post-execution validator
+//! in [`crate::collectives::validate`]) can reject has a stable `PL*`
+//! code — `PL0xx` are errors (the plan is wrong), `PL1xx` are warnings
+//! (the plan is suspicious but executable). Diagnostics are plain data:
+//! a code, an optional anchoring op id and a rendered message. Reports
+//! are sorted by `(op id, code, message)` — never by hash-map iteration
+//! order — so the same plan yields byte-identical output run to run
+//! (DESIGN.md §Static plan verification).
+
+use crate::netsim::OpId;
+use std::fmt;
+
+/// How bad a diagnostic is: errors fail verification (and panic the
+/// debug-build hooks), warnings are reported but do not.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Severity {
+    Error,
+    Warning,
+}
+
+/// Stable diagnostic codes. The numeric part never changes meaning; new
+/// checks append new codes. Declaration order matches numeric order so
+/// the derived `Ord` sorts reports by code.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Code {
+    /// PL001: the dependency graph has a cycle — the plan can never run
+    /// to completion (deadlock).
+    Cycle,
+    /// PL002: an op depends on an op id past the end of the plan.
+    DanglingDep,
+    /// PL003: an op depends on itself.
+    SelfDep,
+    /// PL004: the SoA columns disagree on length — the plan was mutated
+    /// behind the builders' back.
+    ColumnMismatch,
+    /// PL005: a transfer's `RouteId` was interned under an older topology
+    /// generation (stale template after `kill_link`/`retain_ranks`).
+    StaleRoute,
+    /// PL006: a transfer's route traverses a link marked dead.
+    DeadLink,
+    /// PL007: a transfer endpoint is a GPU that is no longer a rank
+    /// (removed by `retain_ranks`).
+    DeadEndpoint,
+    /// PL008: a delivery label's (rank, chunk) is outside the
+    /// collective's declared shape.
+    LabelRange,
+    /// PL009: two ops deliver the same (rank, chunk).
+    DuplicateLabel,
+    /// PL010: a (rank, chunk) the collective owes a delivery to is never
+    /// delivered.
+    MissingDelivery,
+    /// PL011: static causality violation — a flow edge captures its
+    /// source's buffer before any dependency chain could have filled it.
+    Causality,
+    /// PL012: a flow edge references an out-of-range rank, chunk or op.
+    EdgeRange,
+    /// PL013: duplicate flow edge (same src, dst, chunk, semantics) —
+    /// wasted traffic or double-applied reduction.
+    DuplicateEdge,
+    /// PL014: the replayed final state violates the collective's
+    /// contract (a contribution appears the wrong number of times).
+    Contribution,
+    /// PL015: the chunk count is inconsistent with the collective kind
+    /// (reduce-scatter/allgather carry one chunk per rank).
+    ChunkCount,
+    /// PL016: a delay row carries transfer-only parameters (nonzero
+    /// bytes/issue cost or a finite bandwidth cap).
+    MalformedDelay,
+    /// PL100 (warning): a zero-byte transfer still pays a nonzero
+    /// protocol overhead.
+    ZeroByteOverhead,
+    /// PL101 (warning): a terminal transfer into a rank GPU carries no
+    /// delivery label — completions there are invisible to
+    /// delivery-tracking consumers.
+    UnlabeledTerminal,
+    /// PL102 (warning): a byte or duration column entry sits in the
+    /// `UNREACHABLE_NS` saturation band — likely leaked sentinel
+    /// arithmetic.
+    UnreachableValue,
+}
+
+impl Code {
+    /// Every code, in numeric order (docs and coverage tests iterate
+    /// this).
+    pub const ALL: [Code; 19] = [
+        Code::Cycle,
+        Code::DanglingDep,
+        Code::SelfDep,
+        Code::ColumnMismatch,
+        Code::StaleRoute,
+        Code::DeadLink,
+        Code::DeadEndpoint,
+        Code::LabelRange,
+        Code::DuplicateLabel,
+        Code::MissingDelivery,
+        Code::Causality,
+        Code::EdgeRange,
+        Code::DuplicateEdge,
+        Code::Contribution,
+        Code::ChunkCount,
+        Code::MalformedDelay,
+        Code::ZeroByteOverhead,
+        Code::UnlabeledTerminal,
+        Code::UnreachableValue,
+    ];
+
+    /// The stable wire/display name.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Code::Cycle => "PL001",
+            Code::DanglingDep => "PL002",
+            Code::SelfDep => "PL003",
+            Code::ColumnMismatch => "PL004",
+            Code::StaleRoute => "PL005",
+            Code::DeadLink => "PL006",
+            Code::DeadEndpoint => "PL007",
+            Code::LabelRange => "PL008",
+            Code::DuplicateLabel => "PL009",
+            Code::MissingDelivery => "PL010",
+            Code::Causality => "PL011",
+            Code::EdgeRange => "PL012",
+            Code::DuplicateEdge => "PL013",
+            Code::Contribution => "PL014",
+            Code::ChunkCount => "PL015",
+            Code::MalformedDelay => "PL016",
+            Code::ZeroByteOverhead => "PL100",
+            Code::UnlabeledTerminal => "PL101",
+            Code::UnreachableValue => "PL102",
+        }
+    }
+
+    pub fn severity(&self) -> Severity {
+        match self {
+            Code::ZeroByteOverhead | Code::UnlabeledTerminal | Code::UnreachableValue => {
+                Severity::Warning
+            }
+            _ => Severity::Error,
+        }
+    }
+}
+
+impl fmt::Display for Code {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// One verifier finding.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diag {
+    pub code: Code,
+    /// The op the finding anchors to, when there is a single one.
+    pub op: Option<OpId>,
+    pub message: String,
+}
+
+impl Diag {
+    /// A plan-level finding (no single anchoring op).
+    pub fn new(code: Code, message: impl Into<String>) -> Diag {
+        Diag {
+            code,
+            op: None,
+            message: message.into(),
+        }
+    }
+
+    /// A finding anchored to op `op`.
+    pub fn at(code: Code, op: OpId, message: impl Into<String>) -> Diag {
+        Diag {
+            code,
+            op: Some(op),
+            message: message.into(),
+        }
+    }
+
+    pub fn severity(&self) -> Severity {
+        self.code.severity()
+    }
+}
+
+impl fmt::Display for Diag {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.op {
+            Some(op) => write!(f, "{} [op {}]: {}", self.code, op, self.message),
+            None => write!(f, "{}: {}", self.code, self.message),
+        }
+    }
+}
+
+/// Canonical report order: by anchoring op (plan-level findings last),
+/// then code, then message — fully deterministic, independent of
+/// discovery order.
+pub fn sort(diags: &mut [Diag]) {
+    diags.sort_by(|a, b| {
+        let ka = (a.op.unwrap_or(usize::MAX), a.code, &a.message);
+        let kb = (b.op.unwrap_or(usize::MAX), b.code, &b.message);
+        ka.cmp(&kb)
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codes_are_unique_and_ordered() {
+        for pair in Code::ALL.windows(2) {
+            assert!(pair[0] < pair[1], "{} !< {}", pair[0], pair[1]);
+            assert!(pair[0].as_str() < pair[1].as_str());
+        }
+    }
+
+    #[test]
+    fn severity_split_matches_numbering() {
+        for code in Code::ALL {
+            let is_warning = code.as_str().starts_with("PL1");
+            assert_eq!(code.severity() == Severity::Warning, is_warning, "{code}");
+        }
+    }
+
+    #[test]
+    fn report_order_is_op_then_code() {
+        let mut diags = vec![
+            Diag::new(Code::MissingDelivery, "plan-level"),
+            Diag::at(Code::Causality, 7, "late"),
+            Diag::at(Code::Cycle, 2, "loop"),
+            Diag::at(Code::SelfDep, 2, "self"),
+        ];
+        sort(&mut diags);
+        let codes: Vec<&str> = diags.iter().map(|d| d.code.as_str()).collect();
+        assert_eq!(codes, ["PL001", "PL003", "PL011", "PL010"]);
+        assert_eq!(
+            diags[0].to_string(),
+            "PL001 [op 2]: loop",
+            "display format is part of the stable surface"
+        );
+    }
+}

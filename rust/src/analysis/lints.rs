@@ -1,0 +1,108 @@
+//! Sanity lints: findings that don't make a plan wrong, but almost
+//! always mean a builder (or a rescale) did something unintended. All
+//! warnings (`PL1xx`) — the debug-build hooks ignore them; the `verify`
+//! CLI reports them.
+
+use crate::netsim::{OpEnd, Plan, UNREACHABLE_NS};
+use crate::topology::{Cluster, DeviceKind};
+
+use super::diag::{Code, Diag};
+
+pub(super) fn check(cluster: &Cluster, plan: &Plan, diags: &mut Vec<Diag>) {
+    let dependents = plan.dependent_flags();
+    for id in 0..plan.len() {
+        // values in the saturation band mean sentinel arithmetic leaked
+        // into a parameter column (tx_ns saturates *to* UNREACHABLE_NS;
+        // anything at or above it in bytes/durations is nonsense)
+        if plan.bytes[id] >= UNREACHABLE_NS
+            || plan.overheads[id] >= UNREACHABLE_NS
+            || plan.issues[id] >= UNREACHABLE_NS
+        {
+            diags.push(Diag::at(
+                Code::UnreachableValue,
+                id,
+                format!(
+                    "parameter column in the UNREACHABLE_NS saturation band \
+                     (bytes {}, overhead {} ns, issue {} ns)",
+                    plan.bytes[id], plan.overheads[id], plan.issues[id]
+                ),
+            ));
+        }
+        let OpEnd::Route(route) = plan.ends[id] else {
+            continue;
+        };
+        if plan.bytes[id] == 0 && plan.overheads[id] > 0 {
+            diags.push(Diag::at(
+                Code::ZeroByteOverhead,
+                id,
+                format!(
+                    "zero-byte transfer still pays {} ns of overhead",
+                    plan.overheads[id]
+                ),
+            ));
+        }
+        // a terminal transfer into a rank GPU with no delivery label is
+        // invisible to delivery tracking — usually a forgotten label
+        if !dependents[id] && plan.labels[id].is_none() && cluster.route_current(route) {
+            let dst = cluster.route_meta(route).dst;
+            if cluster.device(dst).kind == DeviceKind::Gpu
+                && cluster.gpu_ranks().contains(&dst)
+            {
+                diags.push(Diag::at(
+                    Code::UnlabeledTerminal,
+                    id,
+                    format!("terminal transfer into rank GPU {} has no label", dst.0),
+                ));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::{chain, BcastSpec};
+    use crate::comm::Comm;
+    use crate::topology::presets::flat;
+
+    #[test]
+    fn clean_plan_has_no_lint_findings() {
+        let c = flat(4);
+        let mut comm = Comm::new(&c);
+        let bp = chain::plan(&mut comm, &BcastSpec::new(0, 4, 1 << 20));
+        let mut diags = Vec::new();
+        check(&c, &bp.plan, &mut diags);
+        assert!(diags.is_empty(), "{diags:?}");
+    }
+
+    #[test]
+    fn zero_byte_overhead_and_unlabeled_terminal_flagged() {
+        let c = flat(4);
+        let mut comm = Comm::new(&c);
+        let bp = chain::plan(&mut comm, &BcastSpec::new(0, 4, 1 << 20));
+        let mut plan = bp.plan.clone();
+        let last = plan.len() - 1;
+        plan.set_label(last, None); // terminal delivery, label dropped
+        plan.bytes[last] = 0; // and starved of payload
+        let mut diags = Vec::new();
+        check(&c, &plan, &mut diags);
+        let codes: Vec<Code> = diags.iter().map(|d| d.code).collect();
+        assert!(codes.contains(&Code::ZeroByteOverhead), "{diags:?}");
+        assert!(codes.contains(&Code::UnlabeledTerminal), "{diags:?}");
+    }
+
+    #[test]
+    fn saturation_band_values_flagged() {
+        let c = flat(4);
+        let mut comm = Comm::new(&c);
+        let bp = chain::plan(&mut comm, &BcastSpec::new(0, 4, 1 << 20));
+        let mut plan = bp.plan.clone();
+        plan.overheads[0] = UNREACHABLE_NS;
+        let mut diags = Vec::new();
+        check(&c, &plan, &mut diags);
+        assert!(
+            diags.iter().any(|d| d.code == Code::UnreachableValue),
+            "{diags:?}"
+        );
+    }
+}

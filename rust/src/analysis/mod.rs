@@ -1,0 +1,199 @@
+//! Static plan verification: prove DAG, route and dataflow invariants
+//! *before* execution.
+//!
+//! The netsim engine and the post-execution validator catch broken plans
+//! late — after simulated time was spent, or (for `debug_assert`s) only
+//! on the exact schedule that ran. This module proves the same
+//! invariants statically, over any [`Plan`]/[`CollectivePlan`] — freshly
+//! built, merged into an overlap timeline, or replanned after a fault —
+//! without executing anything:
+//!
+//! - **structure** — SoA column consistency, dependency sanity
+//!   (in-range, non-self), acyclicity ([`structure`]);
+//! - **routes** — every `RouteId` current under the cluster's topology
+//!   generation, no dead-link traversal, endpoints still ranks
+//!   ([`routes`]);
+//! - **dataflow** — replay of the copy/reduce contribution-set algebra
+//!   over dependency order, proving every rank ends with exactly the
+//!   contributions its collective contract owes it ([`dataflow`]);
+//! - **lints** — suspicious-but-executable shapes: zero-byte transfers
+//!   paying overhead, unlabeled terminal deliveries, values in the
+//!   `UNREACHABLE_NS` saturation band ([`lints`]).
+//!
+//! Findings are typed [`Diag`]s with stable `PL*` codes, reported in a
+//! deterministic order (never hash-map iteration order). Debug builds
+//! run the verifier on every plan entering [`Engine::run`] and every
+//! collective plan built by `collectives::plan`, so the whole test suite
+//! doubles as a verifier test; release builds compile the hooks to
+//! nothing (`verify_time_ns` proves it from the bench path). Opt out
+//! with `GDRBCAST_VERIFY=0`.
+//!
+//! [`Engine::run`]: crate::netsim::Engine::run
+
+mod dataflow;
+mod diag;
+mod lints;
+#[cfg(test)]
+mod mutation;
+mod routes;
+mod structure;
+
+pub use diag::{sort, Code, Diag, Severity};
+
+use crate::collectives::CollectivePlan;
+use crate::netsim::Plan;
+use crate::topology::Cluster;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Statically verify a raw transfer plan against `cluster`: structure,
+/// route liveness and sanity lints. Returns all findings, sorted into
+/// the canonical deterministic order (errors and warnings mixed; filter
+/// with [`has_errors`] / [`Diag::severity`]).
+pub fn verify_plan(cluster: &Cluster, plan: &Plan) -> Vec<Diag> {
+    let mut diags = Vec::new();
+    if structure::check(plan, &mut diags) {
+        routes::check(cluster, plan, &mut diags);
+        lints::check(cluster, plan, &mut diags);
+    }
+    sort(&mut diags);
+    diags
+}
+
+/// Statically verify a collective plan: everything [`verify_plan`]
+/// proves, plus the label/edge shape and the contribution-set dataflow
+/// contract of the collective kind.
+pub fn verify_collective(cluster: &Cluster, cp: &CollectivePlan) -> Vec<Diag> {
+    let mut diags = Vec::new();
+    if structure::check(&cp.plan, &mut diags) {
+        routes::check(cluster, &cp.plan, &mut diags);
+        lints::check(cluster, &cp.plan, &mut diags);
+        dataflow::check(cp, &mut diags);
+    }
+    sort(&mut diags);
+    diags
+}
+
+/// Whether any finding is an error (warnings alone verify clean).
+pub fn has_errors(diags: &[Diag]) -> bool {
+    diags.iter().any(|d| d.severity() == Severity::Error)
+}
+
+/// Render findings one per line for terminal/panic output.
+pub fn render(diags: &[Diag]) -> String {
+    let mut out = String::new();
+    for d in diags {
+        out.push_str(&d.to_string());
+        out.push('\n');
+    }
+    out
+}
+
+/// Nanoseconds spent inside the debug verification hooks since process
+/// start. Always 0 in release builds — the bench harness records this to
+/// prove the verifier costs nothing on the measured path.
+pub fn verify_time_ns() -> u64 {
+    VERIFY_NS.load(Ordering::Relaxed)
+}
+
+static VERIFY_NS: AtomicU64 = AtomicU64::new(0);
+
+#[cfg(debug_assertions)]
+fn hooks_enabled() -> bool {
+    use std::sync::OnceLock;
+    static ENABLED: OnceLock<bool> = OnceLock::new();
+    *ENABLED.get_or_init(|| std::env::var("GDRBCAST_VERIFY").as_deref() != Ok("0"))
+}
+
+#[cfg(debug_assertions)]
+fn finish_hook(context: &str, diags: Vec<Diag>, started: std::time::Instant) {
+    VERIFY_NS.fetch_add(started.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    if has_errors(&diags) {
+        panic!("static plan verification failed at {context}:\n{}", render(&diags));
+    }
+}
+
+/// Debug-build hook: verify `plan` and panic (with the rendered report)
+/// on any error-severity finding. Compiled to nothing in release builds;
+/// disable in debug builds with `GDRBCAST_VERIFY=0`.
+#[cfg(debug_assertions)]
+pub fn debug_verify_plan(cluster: &Cluster, plan: &Plan, context: &str) {
+    if !hooks_enabled() {
+        return;
+    }
+    let started = std::time::Instant::now();
+    let diags = verify_plan(cluster, plan);
+    finish_hook(context, diags, started);
+}
+
+/// Release-build no-op twin of the debug verification hook.
+#[cfg(not(debug_assertions))]
+#[inline(always)]
+pub fn debug_verify_plan(_cluster: &Cluster, _plan: &Plan, _context: &str) {}
+
+/// Debug-build hook for collective plans (adds the dataflow contract to
+/// [`debug_verify_plan`]'s checks). No-op in release builds.
+#[cfg(debug_assertions)]
+pub fn debug_verify_collective(cluster: &Cluster, cp: &CollectivePlan, context: &str) {
+    if !hooks_enabled() {
+        return;
+    }
+    let started = std::time::Instant::now();
+    let diags = verify_collective(cluster, cp);
+    finish_hook(context, diags, started);
+}
+
+/// Release-build no-op twin of the collective verification hook.
+#[cfg(not(debug_assertions))]
+#[inline(always)]
+pub fn debug_verify_collective(_cluster: &Cluster, _cp: &CollectivePlan, _context: &str) {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::{chain, plan, Algorithm, BcastSpec};
+    use crate::comm::Comm;
+    use crate::netsim::Deps;
+    use crate::topology::presets::{flat, kesch};
+
+    #[test]
+    fn clean_collective_plan_verifies() {
+        let c = kesch(1, 8);
+        let mut comm = Comm::new(&c);
+        let cp = plan(
+            &Algorithm::Knomial { k: 2 },
+            &mut comm,
+            &BcastSpec::new(0, 8, 1 << 20),
+        );
+        let diags = verify_collective(&c, &cp);
+        assert!(!has_errors(&diags), "{}", render(&diags));
+    }
+
+    #[test]
+    fn report_is_deterministic_and_sorted() {
+        let c = flat(4);
+        let mut comm = Comm::new(&c);
+        let mut cp = chain::plan(&mut comm, &BcastSpec::new(0, 4, 1 << 20));
+        cp.plan.deps[1] = Deps::none(); // break causality
+        cp.plan.set_label(cp.plan.len() - 1, None); // drop a delivery
+        let a = verify_collective(&c, &cp);
+        let b = verify_collective(&c, &cp);
+        assert_eq!(a, b);
+        assert!(has_errors(&a), "{}", render(&a));
+        for pair in a.windows(2) {
+            let key = |d: &Diag| (d.op.unwrap_or(usize::MAX), d.code);
+            assert!(key(&pair[0]) <= key(&pair[1]), "{}", render(&a));
+        }
+    }
+
+    #[test]
+    fn warnings_alone_do_not_fail_verification() {
+        let c = flat(4);
+        let mut comm = Comm::new(&c);
+        let cp = chain::plan(&mut comm, &BcastSpec::new(0, 4, 1 << 20));
+        let mut plan = cp.plan.clone();
+        plan.bytes[0] = 0; // zero-byte transfer paying overhead: PL100
+        let diags = verify_plan(&c, &plan);
+        assert!(!diags.is_empty(), "expected a PL100 warning");
+        assert!(!has_errors(&diags), "{}", render(&diags));
+    }
+}

@@ -1,0 +1,121 @@
+//! Mutation-kill tests: seed one defect into a known-good plan and
+//! assert the verifier reports the expected `PL*` code — across every
+//! topology family. If a check ever regresses into a no-op, one of
+//! these fails.
+
+use crate::collectives::{self, Algorithm, CollectivePlan, CollectiveSpec};
+use crate::comm::Comm;
+use crate::netsim::{Deps, SimOp};
+use crate::topology::presets::{flat, kesch};
+use crate::topology::Cluster;
+
+use super::{has_errors, render, verify_collective, Code};
+
+fn topologies() -> Vec<(&'static str, Cluster)> {
+    vec![
+        ("flat(8)", flat(8)),
+        ("kesch(1,16)", kesch(1, 16)),
+        ("kesch(2,8)", kesch(2, 8)),
+    ]
+}
+
+fn chain_plan(c: &Cluster) -> CollectivePlan {
+    let mut comm = Comm::new(c);
+    let spec = CollectiveSpec::new(0, c.n_gpus(), 1 << 20);
+    collectives::plan(&Algorithm::Chain, &mut comm, &spec)
+}
+
+/// Apply `mutate`, verify, and assert `code` is reported (as an error).
+fn assert_killed(
+    name: &str,
+    c: &Cluster,
+    mut cp: CollectivePlan,
+    code: Code,
+    mutate: impl FnOnce(&mut Cluster, &mut CollectivePlan),
+) {
+    let mut cluster = c.clone();
+    mutate(&mut cluster, &mut cp);
+    let diags = verify_collective(&cluster, &cp);
+    assert!(
+        diags.iter().any(|d| d.code == code),
+        "{name}: mutation not flagged {code}; got:\n{}",
+        render(&diags)
+    );
+    assert!(has_errors(&diags), "{name}: {code} must be error severity");
+}
+
+#[test]
+fn baseline_plans_are_clean_everywhere() {
+    for (name, c) in topologies() {
+        let cp = chain_plan(&c);
+        let diags = verify_collective(&c, &cp);
+        assert!(!has_errors(&diags), "{name}:\n{}", render(&diags));
+    }
+}
+
+#[test]
+fn dropped_dep_is_flagged_pl011() {
+    for (name, c) in topologies() {
+        let cp = chain_plan(&c);
+        assert_killed(name, &c, cp, Code::Causality, |_, cp| {
+            // the final delivery op captures its source's buffer before
+            // any dependency chain could have filled it
+            let last = cp.plan.len() - 1;
+            cp.plan.deps[last] = Deps::none();
+        });
+    }
+}
+
+#[test]
+fn introduced_cycle_is_flagged_pl001() {
+    for (name, c) in topologies() {
+        let cp = chain_plan(&c);
+        assert_killed(name, &c, cp, Code::Cycle, |_, cp| {
+            // the chain's head already (transitively) feeds the tail;
+            // closing the loop deadlocks the whole plan
+            let last = cp.plan.len() - 1;
+            cp.plan.deps[0] = Deps::one(last);
+        });
+    }
+}
+
+#[test]
+fn byte_swapped_into_delay_row_is_flagged_pl016() {
+    for (name, c) in topologies() {
+        let cp = chain_plan(&c);
+        let dev = c.rank_device(0);
+        assert_killed(name, &c, cp, Code::MalformedDelay, move |_, cp| {
+            let id = cp.plan.push(SimOp::Delay { dev, dur_ns: 5 }, Deps::none(), None);
+            // direct column surgery behind `push`'s back
+            cp.plan.bytes[id] = 42;
+        });
+    }
+}
+
+#[test]
+fn stale_route_after_kill_link_is_flagged_pl005() {
+    for (name, c) in topologies() {
+        let cp = chain_plan(&c);
+        assert_killed(name, &c, cp, Code::StaleRoute, |cluster, _| {
+            // any kill bumps the topology generation; the un-rebuilt
+            // plan's interned routes all go stale
+            let victim = cluster.links()[0].id;
+            cluster.kill_link(victim).unwrap();
+        });
+    }
+}
+
+#[test]
+fn duplicated_label_is_flagged_pl009() {
+    for (name, c) in topologies() {
+        let cp = chain_plan(&c);
+        assert_killed(name, &c, cp, Code::DuplicateLabel, |_, cp| {
+            let labeled: Vec<usize> = (0..cp.plan.len())
+                .filter(|&i| cp.plan.label_of(i).is_some())
+                .collect();
+            assert!(labeled.len() >= 2, "chain delivers to at least 2 ranks");
+            let hijack = cp.plan.label_of(labeled[0]);
+            cp.plan.set_label(labeled[1], hijack);
+        });
+    }
+}

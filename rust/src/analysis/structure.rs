@@ -1,0 +1,252 @@
+//! DAG well-formedness: column consistency, dependency sanity, acyclicity.
+
+use crate::netsim::{OpEnd, Plan};
+
+use super::diag::{Code, Diag};
+
+/// Check structural invariants, appending findings to `diags`. Returns
+/// `true` when the plan is structurally sound — columns consistent,
+/// every dep in range and non-self, no cycles — i.e. when the deeper
+/// route/dataflow passes may safely index and topologically order it.
+pub(super) fn check(plan: &Plan, diags: &mut Vec<Diag>) -> bool {
+    let lens = plan.column_lens();
+    let n = lens[0];
+    if lens.iter().any(|&l| l != n) {
+        diags.push(Diag::new(
+            Code::ColumnMismatch,
+            format!(
+                "SoA columns disagree on length \
+                 (ends/bytes/overheads/issues/bw_caps/deps/labels = {lens:?})"
+            ),
+        ));
+        // nothing below can index safely
+        return false;
+    }
+
+    let mut sound = true;
+    for (id, deps) in plan.deps.iter().enumerate() {
+        for &d in deps.as_slice() {
+            if d >= n {
+                diags.push(Diag::at(
+                    Code::DanglingDep,
+                    id,
+                    format!("depends on nonexistent op {d} (plan has {n} ops)"),
+                ));
+                sound = false;
+            } else if d == id {
+                diags.push(Diag::at(Code::SelfDep, id, "depends on itself".to_string()));
+                sound = false;
+            }
+        }
+    }
+
+    // delay rows must carry neutral transfer parameters: `Plan::push`
+    // guarantees it, so a violation means the columns were mutated
+    // directly (or a future append path went wrong)
+    for id in 0..n {
+        if let OpEnd::Dev(_) = plan.ends[id] {
+            if plan.bytes[id] != 0 || plan.issues[id] != 0 || plan.bw_caps[id].is_finite() {
+                diags.push(Diag::at(
+                    Code::MalformedDelay,
+                    id,
+                    format!(
+                        "delay row carries transfer parameters \
+                         (bytes {}, issue {} ns, bw cap {})",
+                        plan.bytes[id], plan.issues[id], plan.bw_caps[id]
+                    ),
+                ));
+                sound = false;
+            }
+        }
+    }
+
+    let unprocessed = kahn_unprocessed(plan, n);
+    if unprocessed > 0 {
+        let stuck = first_stuck_op(plan, n);
+        diags.push(Diag::at(
+            Code::Cycle,
+            stuck,
+            format!("dependency cycle: {unprocessed} op(s) can never become ready"),
+        ));
+        sound = false;
+    }
+    sound
+}
+
+/// Number of ops Kahn's algorithm cannot schedule (0 ⇔ acyclic).
+/// Out-of-range deps are ignored here — they are diagnosed separately.
+fn kahn_unprocessed(plan: &Plan, n: usize) -> usize {
+    let (indeg, start, adj) = adjacency(plan, n);
+    let mut indeg = indeg;
+    let mut ready: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+    let mut processed = 0usize;
+    while let Some(i) = ready.pop() {
+        processed += 1;
+        for &j in &adj[start[i]..start[i + 1]] {
+            indeg[j] -= 1;
+            if indeg[j] == 0 {
+                ready.push(j);
+            }
+        }
+    }
+    n - processed
+}
+
+/// The smallest op id left unscheduled by Kahn's algorithm — the
+/// deterministic anchor for the cycle diagnostic.
+fn first_stuck_op(plan: &Plan, n: usize) -> usize {
+    let (indeg, start, adj) = adjacency(plan, n);
+    let mut indeg = indeg;
+    let mut ready: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+    while let Some(i) = ready.pop() {
+        for &j in &adj[start[i]..start[i + 1]] {
+            indeg[j] -= 1;
+            if indeg[j] == 0 {
+                ready.push(j);
+            }
+        }
+    }
+    indeg.iter().position(|&d| d > 0).unwrap_or(0)
+}
+
+/// CSR adjacency (dep -> dependents) plus per-op in-degrees, counting
+/// only in-range deps.
+fn adjacency(plan: &Plan, n: usize) -> (Vec<u32>, Vec<usize>, Vec<usize>) {
+    let mut indeg = vec![0u32; n];
+    let mut out_count = vec![0usize; n];
+    for (id, deps) in plan.deps.iter().enumerate() {
+        for &d in deps.as_slice() {
+            if d < n {
+                indeg[id] += 1;
+                out_count[d] += 1;
+            }
+        }
+    }
+    let mut start = vec![0usize; n + 1];
+    for i in 0..n {
+        start[i + 1] = start[i] + out_count[i];
+    }
+    let mut adj = vec![0usize; start[n]];
+    let mut cursor = start.clone();
+    for (id, deps) in plan.deps.iter().enumerate() {
+        for &d in deps.as_slice() {
+            if d < n {
+                adj[cursor[d]] = id;
+                cursor[d] += 1;
+            }
+        }
+    }
+    (indeg, start, adj)
+}
+
+/// Completion depth of every op under the dependency partial order:
+/// `done_depth(i) = 1 + max(done_depth(d) for d in deps(i))`, 1 for
+/// dep-free ops. `None` if the plan is cyclic or has out-of-range deps
+/// (callers diagnose those via [`check`] first). The dataflow replay
+/// linearizes edge events on these depths.
+pub(super) fn done_depths(plan: &Plan) -> Option<Vec<u32>> {
+    let n = plan.len();
+    for deps in plan.deps.iter() {
+        if deps.as_slice().iter().any(|&d| d >= n) {
+            return None;
+        }
+    }
+    let (indeg, start, adj) = adjacency(plan, n);
+    let mut indeg = indeg;
+    let mut depth = vec![1u32; n];
+    let mut ready: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+    let mut processed = 0usize;
+    while let Some(i) = ready.pop() {
+        processed += 1;
+        for &j in &adj[start[i]..start[i + 1]] {
+            depth[j] = depth[j].max(depth[i] + 1);
+            indeg[j] -= 1;
+            if indeg[j] == 0 {
+                ready.push(j);
+            }
+        }
+    }
+    if processed < n {
+        return None;
+    }
+    Some(depth)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::{Deps, SimOp};
+    use crate::topology::DeviceId;
+
+    fn delay_plan(n: usize) -> Plan {
+        let mut p = Plan::new();
+        for i in 0..n {
+            let deps = if i == 0 { Deps::none() } else { Deps::one(i - 1) };
+            p.push(
+                SimOp::Delay {
+                    dev: DeviceId(0),
+                    dur_ns: 1,
+                },
+                deps,
+                None,
+            );
+        }
+        p
+    }
+
+    #[test]
+    fn clean_chain_is_sound() {
+        let p = delay_plan(4);
+        let mut diags = Vec::new();
+        assert!(check(&p, &mut diags));
+        assert!(diags.is_empty(), "{diags:?}");
+        assert_eq!(done_depths(&p).unwrap(), vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn cycle_found() {
+        let mut p = delay_plan(3);
+        p.deps[0] = Deps::one(2); // 0 -> 2 -> 1 -> 0
+        let mut diags = Vec::new();
+        assert!(!check(&p, &mut diags));
+        assert!(diags.iter().any(|d| d.code == Code::Cycle), "{diags:?}");
+        assert!(done_depths(&p).is_none());
+    }
+
+    #[test]
+    fn dangling_and_self_deps_found() {
+        let mut p = delay_plan(2);
+        p.deps[1] = Deps::two(5, 1);
+        let mut diags = Vec::new();
+        assert!(!check(&p, &mut diags));
+        let codes: Vec<Code> = diags.iter().map(|d| d.code).collect();
+        assert!(codes.contains(&Code::DanglingDep), "{diags:?}");
+        assert!(codes.contains(&Code::SelfDep), "{diags:?}");
+    }
+
+    #[test]
+    fn malformed_delay_found() {
+        let mut p = delay_plan(2);
+        p.bytes[1] = 42;
+        let mut diags = Vec::new();
+        assert!(!check(&p, &mut diags));
+        assert!(
+            diags.iter().any(|d| d.code == Code::MalformedDelay && d.op == Some(1)),
+            "{diags:?}"
+        );
+    }
+
+    #[test]
+    fn depths_join_at_the_widest_dep() {
+        let mut p = delay_plan(3); // 0 -> 1 -> 2
+        p.push(
+            SimOp::Delay {
+                dev: DeviceId(0),
+                dur_ns: 1,
+            },
+            Deps::two(0, 2),
+            None,
+        );
+        assert_eq!(done_depths(&p).unwrap(), vec![1, 2, 3, 4]);
+    }
+}

@@ -80,7 +80,11 @@ pub fn template_for(
 /// Build a fresh plan for `algo` (no template caching — one-off callers
 /// and the parity suites; hot paths go through [`cached_plan`]).
 pub fn plan(algo: &Algorithm, comm: &mut Comm, spec: &CollectiveSpec) -> CollectivePlan {
-    template_for(algo, comm, spec).cp
+    let cp = template_for(algo, comm, spec).cp;
+    // debug builds statically verify every freshly built collective plan
+    // (DAG + routes + dataflow contract); no-op in release
+    crate::analysis::debug_verify_collective(comm.cluster(), &cp, "collectives::plan");
+    cp
 }
 
 /// Simulated collective latency (plan makespan), ns. Acquires the plan

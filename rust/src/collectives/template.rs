@@ -277,6 +277,13 @@ pub fn cached_plan<'a, 'c>(
         .try_rescale(&key, spec.bytes, |b| protocol::size_class(&params, b));
     if !hit {
         let tpl = super::template_for(algo, comm, spec);
+        // debug builds statically verify each freshly built template —
+        // once per structure; rescale hits reuse the proven DAG
+        crate::analysis::debug_verify_collective(
+            comm.cluster(),
+            &tpl.cp,
+            "collectives::cached_plan",
+        );
         comm.template_cache_mut().insert(key, tpl);
     }
     comm.template_cache().plan_for(&key)

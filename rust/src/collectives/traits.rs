@@ -231,12 +231,7 @@ impl CollectivePlan {
     /// listed under every rank.
     pub fn rank_exit_ops(&self, cluster: &Cluster) -> Vec<Vec<OpId>> {
         let n = self.spec.n_ranks;
-        let mut has_dependent = vec![false; self.plan.len()];
-        for deps in self.plan.deps.iter() {
-            for &d in deps.as_slice() {
-                has_dependent[d] = true;
-            }
-        }
+        let has_dependent = self.plan.dependent_flags();
         let mut out = vec![Vec::new(); n];
         for id in 0..self.plan.len() {
             if has_dependent[id] {

@@ -1,4 +1,4 @@
-//! Collective-plan invariants.
+//! Collective-plan invariants (post-execution).
 //!
 //! Broadcast plans must satisfy delivery + causality: every non-root rank
 //! is delivered every chunk exactly once, and no rank forwards a chunk
@@ -11,16 +11,22 @@
 //! exactly once**. These are the invariants the property tests in
 //! `rust/tests/` sweep across random topologies, roots, sizes and
 //! algorithms.
+//!
+//! Violations are reported as the typed [`Diag`]s of [`crate::analysis`]
+//! (the static verifier proves the same contracts *before* execution;
+//! this validator re-proves them over the schedule that actually ran).
+//! The first violation in a fixed scan order is returned — membership is
+//! tracked in dense per-(rank, chunk) tables, never hash maps, so the
+//! selected diagnostic is identical run to run.
 
-use std::collections::HashMap;
-
+use crate::analysis::{Code, Diag};
 use crate::netsim::{Engine, ExecResult};
 
 use super::traits::{CollectiveKind, CollectivePlan, EdgeSem, FlowEdge};
 
 /// Validate a plan against an execution of it, dispatching on the spec's
 /// collective kind.
-pub fn validate(bp: &CollectivePlan, result: &ExecResult) -> Result<(), String> {
+pub fn validate(bp: &CollectivePlan, result: &ExecResult) -> Result<(), Diag> {
     match bp.spec.kind {
         CollectiveKind::Broadcast => validate_broadcast(bp, result),
         _ => validate_dataflow(bp, result),
@@ -33,46 +39,69 @@ pub fn validate(bp: &CollectivePlan, result: &ExecResult) -> Result<(), String> 
 ///   delivery of that chunk at the edge's source rank (the root owns all
 ///   chunks at t=0);
 /// * uniqueness — no two labelled ops deliver the same (rank, chunk).
-fn validate_broadcast(bp: &CollectivePlan, result: &ExecResult) -> Result<(), String> {
+fn validate_broadcast(bp: &CollectivePlan, result: &ExecResult) -> Result<(), Diag> {
     let spec = &bp.spec;
+    let n = spec.n_ranks;
+    let k = bp.n_chunks;
 
-    // uniqueness + coverage from labels
-    let mut seen: HashMap<(usize, usize), usize> = HashMap::new();
+    // uniqueness + coverage from labels (dense (rank, chunk) table;
+    // usize::MAX = not yet delivered)
+    let mut seen: Vec<usize> = vec![usize::MAX; n * k];
     for (id, label) in bp.plan.labels.iter().enumerate() {
         if let Some((rank, chunk)) = *label {
-            if rank >= spec.n_ranks {
-                return Err(format!("delivery to out-of-range rank {rank}"));
+            if rank >= n {
+                return Err(Diag::at(
+                    Code::LabelRange,
+                    id,
+                    format!("delivery to out-of-range rank {rank}"),
+                ));
             }
-            if chunk >= bp.n_chunks {
-                return Err(format!("delivery of out-of-range chunk {chunk}"));
+            if chunk >= k {
+                return Err(Diag::at(
+                    Code::LabelRange,
+                    id,
+                    format!("delivery of out-of-range chunk {chunk}"),
+                ));
             }
-            if let Some(prev) = seen.insert((rank, chunk), id) {
-                return Err(format!(
-                    "duplicate delivery of chunk {chunk} to rank {rank} (ops {prev} and {id})"
+            let prev = seen[rank * k + chunk];
+            if prev != usize::MAX {
+                return Err(Diag::at(
+                    Code::DuplicateLabel,
+                    id,
+                    format!(
+                        "duplicate delivery of chunk {chunk} to rank {rank} (ops {prev} and {id})"
+                    ),
+                ));
+            }
+            seen[rank * k + chunk] = id;
+        }
+    }
+    for rank in 0..n {
+        if rank == spec.root {
+            continue;
+        }
+        for chunk in 0..k {
+            if seen[rank * k + chunk] == usize::MAX {
+                return Err(Diag::new(
+                    Code::MissingDelivery,
+                    format!("rank {rank} never receives chunk {chunk}"),
                 ));
             }
         }
     }
-    for rank in 0..spec.n_ranks {
-        if rank == spec.root {
-            continue;
-        }
-        for chunk in 0..bp.n_chunks {
-            if !seen.contains_key(&(rank, chunk)) {
-                return Err(format!("rank {rank} never receives chunk {chunk}"));
-            }
-        }
+
+    // edges index the dense possession table below: range-check first
+    for e in &bp.edges {
+        check_edge_range(e, n, k, result.done.len())?;
     }
 
     // possession: when each rank first holds each chunk (via *any* flow
     // edge, including scatter custody that labels don't record)
-    let mut possession: HashMap<(usize, usize), u64> = HashMap::new();
+    let mut possession: Vec<u64> = vec![u64::MAX; n * k];
     for edge in &bp.edges {
         let t = result.done[edge.op];
-        possession
-            .entry((edge.dst, edge.chunk))
-            .and_modify(|v| *v = (*v).min(t))
-            .or_insert(t);
+        let cell = &mut possession[edge.dst * k + edge.chunk];
+        *cell = (*cell).min(t);
     }
 
     // causality over flow edges
@@ -80,22 +109,50 @@ fn validate_broadcast(bp: &CollectivePlan, result: &ExecResult) -> Result<(), St
         if edge.src == spec.root {
             continue; // root owns everything at t=0
         }
-        let have_at = match possession.get(&(edge.src, edge.chunk)) {
-            Some(&t) => t,
-            None => {
-                return Err(format!(
+        let have_at = possession[edge.src * k + edge.chunk];
+        if have_at == u64::MAX {
+            return Err(Diag::at(
+                Code::Causality,
+                edge.op,
+                format!(
                     "edge {} -> {} forwards chunk {} the source never received",
                     edge.src, edge.dst, edge.chunk
-                ))
-            }
-        };
-        let starts = result.start[edge.op];
-        if starts < have_at {
-            return Err(format!(
-                "causality violation: rank {} forwards chunk {} at {}ns but receives it at {}ns",
-                edge.src, edge.chunk, starts, have_at
+                ),
             ));
         }
+        let starts = result.start[edge.op];
+        if starts < have_at {
+            return Err(Diag::at(
+                Code::Causality,
+                edge.op,
+                format!(
+                    "causality violation: rank {} forwards chunk {} at {}ns but receives it at {}ns",
+                    edge.src, edge.chunk, starts, have_at
+                ),
+            ));
+        }
+    }
+    Ok(())
+}
+
+fn check_edge_range(e: &FlowEdge, n: usize, k: usize, n_ops: usize) -> Result<(), Diag> {
+    if e.src >= n || e.dst >= n {
+        return Err(Diag::new(
+            Code::EdgeRange,
+            format!("edge {} -> {} out of rank range", e.src, e.dst),
+        ));
+    }
+    if e.chunk >= k {
+        return Err(Diag::new(
+            Code::EdgeRange,
+            format!("edge carries out-of-range chunk {}", e.chunk),
+        ));
+    }
+    if e.op >= n_ops {
+        return Err(Diag::new(
+            Code::EdgeRange,
+            format!("edge references unknown op {}", e.op),
+        ));
     }
     Ok(())
 }
@@ -112,7 +169,7 @@ fn is_zero(c: &Contribs) -> bool {
 /// payload (the source's contribution-set) at the op's start time and
 /// apply it at the dst (copy = replace, reduce = fold) at completion;
 /// the final state must match the collective's contract exactly.
-fn validate_dataflow(bp: &CollectivePlan, result: &ExecResult) -> Result<(), String> {
+fn validate_dataflow(bp: &CollectivePlan, result: &ExecResult) -> Result<(), Diag> {
     let spec = &bp.spec;
     let n = spec.n_ranks;
     let k = bp.n_chunks;
@@ -122,46 +179,77 @@ fn validate_dataflow(bp: &CollectivePlan, result: &ExecResult) -> Result<(), Str
         CollectiveKind::ReduceScatter | CollectiveKind::Allgather
     ) && k != n
     {
-        return Err(format!(
-            "{} plan must carry one chunk per rank (got {k} chunks for {n} ranks)",
-            spec.kind.name()
+        return Err(Diag::new(
+            Code::ChunkCount,
+            format!(
+                "{} plan must carry one chunk per rank (got {k} chunks for {n} ranks)",
+                spec.kind.name()
+            ),
         ));
     }
 
-    let mut seen_edges = std::collections::HashSet::new();
     for e in &bp.edges {
-        if e.src >= n || e.dst >= n {
-            return Err(format!("edge {} -> {} out of rank range", e.src, e.dst));
+        check_edge_range(e, n, k, result.done.len())?;
+    }
+    // copy application is idempotent in the replay, so duplicated
+    // transfers (wasted traffic, double delivery) must be rejected
+    // structurally. Sort-based duplicate scan: the reported edge is the
+    // first (in edge order) that repeats an earlier key.
+    let mut keyed: Vec<(usize, usize, usize, u8, usize)> = bp
+        .edges
+        .iter()
+        .enumerate()
+        .map(|(i, e)| {
+            let sem = match e.sem {
+                EdgeSem::Copy => 0u8,
+                EdgeSem::Reduce => 1u8,
+            };
+            (e.src, e.dst, e.chunk, sem, i)
+        })
+        .collect();
+    keyed.sort_unstable();
+    let mut dup: Option<usize> = None;
+    for pair in keyed.windows(2) {
+        let (a, b) = (&pair[0], &pair[1]);
+        if (a.0, a.1, a.2, a.3) == (b.0, b.1, b.2, b.3) {
+            // b.4 > a.4 after the sort (index is the tiebreaker)
+            dup = Some(dup.map_or(b.4, |d| d.min(b.4)));
         }
-        if e.chunk >= k {
-            return Err(format!("edge carries out-of-range chunk {}", e.chunk));
-        }
-        if e.op >= result.done.len() {
-            return Err(format!("edge references unknown op {}", e.op));
-        }
-        // copy application is idempotent in the replay, so duplicated
-        // transfers (wasted traffic, double delivery) must be rejected
-        // structurally
-        if !seen_edges.insert((e.src, e.dst, e.chunk, e.sem)) {
-            return Err(format!(
+    }
+    if let Some(i) = dup {
+        let e = &bp.edges[i];
+        return Err(Diag::at(
+            Code::DuplicateEdge,
+            e.op,
+            format!(
                 "duplicate flow edge {} -> {} for chunk {}",
                 e.src, e.dst, e.chunk
-            ));
-        }
+            ),
+        ));
     }
 
     // labelled deliveries must be unique, as in the broadcast validator
-    let mut seen_labels: HashMap<(usize, usize), usize> = HashMap::new();
+    let mut seen_labels: Vec<usize> = vec![usize::MAX; n * k];
     for (id, label) in bp.plan.labels.iter().enumerate() {
         if let Some((rank, chunk)) = *label {
             if rank >= n || chunk >= k {
-                return Err(format!("delivery label ({rank}, {chunk}) out of range"));
-            }
-            if let Some(prev) = seen_labels.insert((rank, chunk), id) {
-                return Err(format!(
-                    "duplicate delivery of chunk {chunk} to rank {rank} (ops {prev} and {id})"
+                return Err(Diag::at(
+                    Code::LabelRange,
+                    id,
+                    format!("delivery label ({rank}, {chunk}) out of range"),
                 ));
             }
+            let prev = seen_labels[rank * k + chunk];
+            if prev != usize::MAX {
+                return Err(Diag::at(
+                    Code::DuplicateLabel,
+                    id,
+                    format!(
+                        "duplicate delivery of chunk {chunk} to rank {rank} (ops {prev} and {id})"
+                    ),
+                ));
+            }
+            seen_labels[rank * k + chunk] = id;
         }
     }
 
@@ -197,12 +285,16 @@ fn validate_dataflow(bp: &CollectivePlan, result: &ExecResult) -> Result<(), Str
     }
     events.sort_unstable();
 
-    let capture = |edge: &FlowEdge, state: &[Vec<Contribs>]| -> Result<Contribs, String> {
+    let capture = |edge: &FlowEdge, state: &[Vec<Contribs>]| -> Result<Contribs, Diag> {
         let snap = state[edge.src][edge.chunk].clone();
         if is_zero(&snap) {
-            return Err(format!(
-                "causality violation: rank {} forwards chunk {} before holding any data for it",
-                edge.src, edge.chunk
+            return Err(Diag::at(
+                Code::Causality,
+                edge.op,
+                format!(
+                    "causality violation: rank {} forwards chunk {} before holding any data for it",
+                    edge.src, edge.chunk
+                ),
             ));
         }
         Ok(snap)
@@ -234,13 +326,16 @@ fn validate_dataflow(bp: &CollectivePlan, result: &ExecResult) -> Result<(), Str
     }
 
     // final contracts
-    let check = |rank: usize, chunk: usize, want: &dyn Fn(usize) -> u32| -> Result<(), String> {
+    let check = |rank: usize, chunk: usize, want: &dyn Fn(usize) -> u32| -> Result<(), Diag> {
         for (i, &got) in state[rank][chunk].iter().enumerate() {
             let want = want(i);
             if got != want {
-                return Err(format!(
-                    "rank {rank} chunk {chunk}: contribution from rank {i} \
-                     appears {got} times (want {want})"
+                return Err(Diag::new(
+                    Code::Contribution,
+                    format!(
+                        "rank {rank} chunk {chunk}: contribution from rank {i} \
+                         appears {got} times (want {want})"
+                    ),
                 ));
             }
         }
@@ -278,7 +373,7 @@ pub fn check_algorithm(
     comm: &mut crate::comm::Comm,
     engine: &mut Engine,
     spec: &super::CollectiveSpec,
-) -> Result<u64, String> {
+) -> Result<u64, Diag> {
     let bp = super::plan(algo, comm, spec);
     let result = engine.execute(&bp.plan);
     validate(&bp, &result)?;
@@ -344,7 +439,8 @@ mod tests {
         let last = bp.plan.len() - 1;
         bp.plan.set_label(last, None);
         let result = engine.execute(&bp.plan);
-        assert!(validate(&bp, &result).is_err());
+        let err = validate(&bp, &result).unwrap_err();
+        assert_eq!(err.code, Code::MissingDelivery, "{err}");
     }
 
     #[test]
@@ -359,7 +455,8 @@ mod tests {
         bp.plan.deps[1] = crate::netsim::Deps::none();
         let result = engine.execute(&bp.plan);
         let err = validate(&bp, &result).unwrap_err();
-        assert!(err.contains("causality"), "{err}");
+        assert_eq!(err.code, Code::Causality, "{err}");
+        assert!(err.to_string().contains("causality"), "{err}");
     }
 
     #[test]
@@ -392,7 +489,8 @@ mod tests {
         bp.edges.remove(0);
         let result = engine.execute(&bp.plan);
         let err = validate(&bp, &result).unwrap_err();
-        assert!(err.contains("appears"), "unexpected error: {err}");
+        assert_eq!(err.code, Code::Contribution, "{err}");
+        assert!(err.to_string().contains("appears"), "unexpected error: {err}");
     }
 
     #[test]
@@ -407,7 +505,8 @@ mod tests {
         bp.edges.push(dup);
         let result = engine.execute(&bp.plan);
         let err = validate(&bp, &result).unwrap_err();
-        assert!(err.contains("duplicate"), "unexpected error: {err}");
+        assert_eq!(err.code, Code::DuplicateEdge, "{err}");
+        assert!(err.to_string().contains("duplicate"), "unexpected error: {err}");
     }
 
     #[test]
@@ -427,7 +526,7 @@ mod tests {
         bp.edges.push(ag_edge);
         let result = engine.execute(&bp.plan);
         let err = validate(&bp, &result).unwrap_err();
-        assert!(err.contains("duplicate"), "unexpected error: {err}");
+        assert_eq!(err.code, Code::DuplicateEdge, "{err}");
     }
 
     #[test]
@@ -439,6 +538,7 @@ mod tests {
         let mut bp = crate::collectives::reduce_scatter::plan(&mut comm, &spec);
         bp.n_chunks = 2;
         let result = engine.execute(&bp.plan);
-        assert!(validate(&bp, &result).is_err());
+        let err = validate(&bp, &result).unwrap_err();
+        assert_eq!(err.code, Code::ChunkCount, "{err}");
     }
 }

@@ -23,6 +23,9 @@
 //! * [`comm`] — the CUDA-aware point-to-point engine: GDR read/write, CUDA
 //!   IPC, host staging, SGL eager — with the mechanism-selection logic that
 //!   MVAPICH2-GDR's wins come from.
+//! * [`analysis`] — the static plan verifier: proves DAG/route/dataflow
+//!   invariants over any plan *before* execution, with typed `PL*`
+//!   diagnostics (debug builds verify every plan automatically).
 //! * [`collectives`] — broadcast algorithms: direct, chain, **pipelined
 //!   chain (the paper's contribution)**, k-nomial, binomial,
 //!   scatter-ring-allgather, host-staged k-nomial, ring.
@@ -47,6 +50,7 @@
 //! See `DESIGN.md` for the full system inventory and the per-experiment
 //! index, and `EXPERIMENTS.md` for paper-vs-measured results.
 
+pub mod analysis;
 pub mod analytic;
 pub mod bench;
 pub mod collectives;

@@ -322,6 +322,10 @@ impl<'c> Engine<'c> {
             self.cluster.n_devices(),
             "engine device scratch sized for a different topology"
         );
+        // static verification before any simulated time is spent: debug
+        // builds prove structure/route invariants on every plan entering
+        // the engine (no-op in release; opt out with GDRBCAST_VERIFY=0)
+        crate::analysis::debug_verify_plan(self.cluster, plan, "Engine::run");
         self.link_free.iter_mut().for_each(|t| *t = 0);
         self.dev_free.iter_mut().for_each(|t| *t = 0);
 

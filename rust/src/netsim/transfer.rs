@@ -481,6 +481,40 @@ impl Plan {
         self.bytes.iter().sum()
     }
 
+    /// Lengths of all seven SoA columns, in declaration order
+    /// (`ends`/`bytes`/`overheads`/`issues`/`bw_caps`/`deps`/`labels`).
+    /// [`Plan::push`]/[`Plan::merge`] keep them equal by construction; the
+    /// static verifier re-proves it so column-level sabotage (tests) and
+    /// future partial-append bugs surface as a diagnostic, not an index
+    /// panic deep in the engine.
+    pub(crate) fn column_lens(&self) -> [usize; 7] {
+        [
+            self.ends.len(),
+            self.bytes.len(),
+            self.overheads.len(),
+            self.issues.len(),
+            self.bw_caps.len(),
+            self.deps.len(),
+            self.labels.len(),
+        ]
+    }
+
+    /// `flags[i]` ⇔ some other op depends on op `i`. One pass over the
+    /// deps column; shared by exit-op discovery
+    /// (`CollectivePlan::rank_exit_ops`) and the verifier's terminal-op
+    /// lint.
+    pub fn dependent_flags(&self) -> Vec<bool> {
+        let mut flags = vec![false; self.len()];
+        for deps in &self.deps {
+            for &d in deps.as_slice() {
+                if d < flags.len() {
+                    flags[d] = true;
+                }
+            }
+        }
+        flags
+    }
+
     /// All labelled deliveries `(rank, chunk) -> op id`. Later ops
     /// overwrite earlier ones with the same label (delivery = last
     /// write). Built once on first use and cached; repeated queries

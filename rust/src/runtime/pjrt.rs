@@ -2,12 +2,14 @@
 //!
 //! The real client binds the `xla` crate's PJRT CPU runtime. That crate
 //! is unavailable in the offline build, so it is gated behind the `pjrt`
-//! cargo feature (enable it after vendoring `xla`); the default build
-//! ships a stub with the same surface that returns a friendly error,
-//! keeping the rest of the crate — and the tests that skip when
-//! artifacts are missing — fully buildable.
+//! cargo feature *and* the `pjrt_vendored` cfg that build.rs emits only
+//! once `vendor/xla` exists — `--all-features` builds stay compilable
+//! before the crate is vendored. Every other configuration ships a stub
+//! with the same surface that returns a friendly error, keeping the
+//! rest of the crate — and the tests that skip when artifacts are
+//! missing — fully buildable.
 
-#[cfg(feature = "pjrt")]
+#[cfg(all(feature = "pjrt", pjrt_vendored))]
 mod real {
     use std::path::Path;
 
@@ -88,7 +90,7 @@ mod real {
     }
 }
 
-#[cfg(not(feature = "pjrt"))]
+#[cfg(not(all(feature = "pjrt", pjrt_vendored)))]
 mod stub {
     use std::path::Path;
 
@@ -138,12 +140,12 @@ mod stub {
     }
 }
 
-#[cfg(feature = "pjrt")]
+#[cfg(all(feature = "pjrt", pjrt_vendored))]
 pub use real::{Executable, Runtime};
-#[cfg(not(feature = "pjrt"))]
+#[cfg(not(all(feature = "pjrt", pjrt_vendored)))]
 pub use stub::{Executable, Runtime};
 
-#[cfg(all(test, feature = "pjrt"))]
+#[cfg(all(test, feature = "pjrt", pjrt_vendored))]
 mod tests {
     use super::*;
     use std::path::Path;
@@ -166,7 +168,7 @@ mod tests {
     }
 }
 
-#[cfg(all(test, not(feature = "pjrt")))]
+#[cfg(all(test, not(all(feature = "pjrt", pjrt_vendored))))]
 mod stub_tests {
     use super::*;
 

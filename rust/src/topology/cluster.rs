@@ -343,6 +343,12 @@ impl Cluster {
         self.routes.meta(id)
     }
 
+    /// Whether an interned `RouteId` still resolves against the current
+    /// topology generation (the static verifier's stale-route probe).
+    pub fn route_current(&self, id: RouteId) -> bool {
+        self.routes.is_current(id)
+    }
+
     /// Hop list of an interned route, borrowed from the arena (hot path —
     /// no copy). Drop the guard before any call that may intern
     /// (`route`, `route_via`, `peer_access` on a cold pair): interning

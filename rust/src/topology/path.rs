@@ -180,6 +180,15 @@ impl RouteTable {
         id
     }
 
+    /// Whether `id` still resolves against this table: interned under the
+    /// current generation and in range. The static verifier uses this to
+    /// flag stale routes as a diagnostic instead of tripping the
+    /// debug-assert in [`Self::meta`].
+    pub fn is_current(&self, id: RouteId) -> bool {
+        let inner = self.inner.borrow();
+        id.generation == inner.generation && (id.index as usize) < inner.metas.len()
+    }
+
     /// The cached aggregates, by value.
     pub fn meta(&self, id: RouteId) -> RouteMeta {
         let inner = self.inner.borrow();

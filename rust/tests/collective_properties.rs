@@ -103,7 +103,9 @@ fn prop_delivery_and_causality() {
             let algo = algo_of(case);
             let mut comm = Comm::new(&cluster);
             let mut engine = Engine::new(&cluster);
-            check_algorithm(&algo, &mut comm, &mut engine, &spec).map(|_| ())
+            check_algorithm(&algo, &mut comm, &mut engine, &spec)
+                .map(|_| ())
+                .map_err(|d| d.to_string())
         },
         shrink_case,
     );
@@ -233,7 +235,9 @@ fn prop_reductions_all_contributions_exactly_once() {
             let spec = CollectiveSpec::collective(kind, case.root % n, n, case.bytes);
             let mut comm = Comm::new(&cluster);
             let mut engine = Engine::new(&cluster);
-            check_algorithm(&algo, &mut comm, &mut engine, &spec).map(|_| ())
+            check_algorithm(&algo, &mut comm, &mut engine, &spec)
+                .map(|_| ())
+                .map_err(|d| d.to_string())
         },
         shrink_case,
     );

@@ -1,0 +1,176 @@
+//! Integration sweep of the static plan verifier: every algorithm the
+//! simulator ships, across sizes and topology families, must verify
+//! clean through the public API — plus the lifecycle cases the `verify`
+//! CLI exercises (merged overlap timelines, post-`kill_link` staleness).
+
+use gdrbcast::analysis::{self, Code};
+use gdrbcast::collectives::{self, Algorithm, CollectiveKind, CollectiveSpec};
+use gdrbcast::comm::Comm;
+use gdrbcast::netsim::Plan;
+use gdrbcast::topology::presets::{flat, kesch};
+use gdrbcast::topology::{Cluster, LinkKind};
+
+fn menu() -> Vec<Algorithm> {
+    vec![
+        Algorithm::Direct,
+        Algorithm::Chain,
+        Algorithm::PipelinedChain { chunk: 64 << 10 },
+        Algorithm::Knomial { k: 2 },
+        Algorithm::Knomial { k: 4 },
+        Algorithm::ScatterRingAllgather,
+        Algorithm::HostStagedKnomial { k: 2 },
+        Algorithm::RingReduceScatter,
+        Algorithm::RingAllgather,
+        Algorithm::RingAllreduce,
+        Algorithm::TreeAllreduce { k: 2 },
+    ]
+}
+
+fn spec_for(algo: &Algorithm, n: usize, bytes: u64) -> CollectiveSpec {
+    match algo.kind() {
+        CollectiveKind::Broadcast => CollectiveSpec::new(0, n, bytes),
+        CollectiveKind::ReduceScatter => CollectiveSpec::reduce_scatter(n, bytes),
+        CollectiveKind::Allgather => CollectiveSpec::allgather(n, bytes),
+        CollectiveKind::Allreduce => CollectiveSpec::allreduce(n, bytes),
+    }
+}
+
+fn topologies() -> Vec<(&'static str, Cluster)> {
+    vec![
+        ("flat(8)", flat(8)),
+        ("kesch(1,16)", kesch(1, 16)),
+        ("kesch(2,8)", kesch(2, 8)),
+    ]
+}
+
+#[test]
+fn full_grid_verifies_clean() {
+    for (tname, cluster) in topologies() {
+        let n = cluster.n_gpus();
+        let mut comm = Comm::new(&cluster);
+        for algo in menu() {
+            for bytes in [64u64 << 10, 1 << 20, 16 << 20] {
+                let spec = spec_for(&algo, n, bytes);
+                let cp = collectives::plan(&algo, &mut comm, &spec);
+                let diags = analysis::verify_collective(&cluster, &cp);
+                assert!(
+                    !analysis::has_errors(&diags),
+                    "{tname} {} {bytes}B:\n{}",
+                    algo.name(),
+                    analysis::render(&diags)
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn merged_overlap_timeline_verifies_clean() {
+    let cluster = kesch(2, 8);
+    let n = cluster.n_gpus();
+    let mut comm = Comm::new(&cluster);
+    let mut timeline = Plan::new();
+    let ar = collectives::plan(
+        &Algorithm::RingAllreduce,
+        &mut comm,
+        &CollectiveSpec::allreduce(n, 1 << 20),
+    );
+    let h = timeline.merge(&ar.plan);
+    let gate = [h.offset + ar.plan.len() - 1];
+    let bc = collectives::plan(
+        &Algorithm::PipelinedChain { chunk: 64 << 10 },
+        &mut comm,
+        &CollectiveSpec::new(0, n, 1 << 20),
+    );
+    timeline.merge_after(&bc.plan, &gate);
+    let diags = analysis::verify_plan(&cluster, &timeline);
+    assert!(
+        !analysis::has_errors(&diags),
+        "{}",
+        analysis::render(&diags)
+    );
+}
+
+#[test]
+fn post_kill_stale_plan_flagged_and_replan_clean() {
+    let mut cluster = kesch(2, 8);
+    let n = cluster.n_gpus();
+    let spec = CollectiveSpec::new(0, n, 1 << 20);
+    let stale = {
+        let mut comm = Comm::new(&cluster);
+        collectives::plan(&Algorithm::Chain, &mut comm, &spec)
+    };
+    // kill one FDR rail of the dual-rail node: the graph stays routable
+    // through the sibling socket, but every pre-kill route goes stale
+    let cross = cluster
+        .route(cluster.rank_device(7), cluster.rank_device(8))
+        .unwrap();
+    let rail = *cluster
+        .route_view(cross)
+        .hops
+        .iter()
+        .find(|&&h| cluster.link(h).kind == LinkKind::IbFdr)
+        .expect("cross-node route crosses an FDR rail");
+    cluster.kill_link(rail).unwrap();
+
+    let diags = analysis::verify_collective(&cluster, &stale);
+    assert!(
+        diags.iter().any(|d| d.code == Code::StaleRoute),
+        "stale plan not flagged PL005:\n{}",
+        analysis::render(&diags)
+    );
+
+    let rebuilt = {
+        let mut comm = Comm::new(&cluster);
+        collectives::plan(&Algorithm::Chain, &mut comm, &spec)
+    };
+    let diags = analysis::verify_collective(&cluster, &rebuilt);
+    assert!(
+        !analysis::has_errors(&diags),
+        "replan on the surviving topology must verify clean:\n{}",
+        analysis::render(&diags)
+    );
+}
+
+#[test]
+fn label_mutation_caught_through_public_api() {
+    // the one mutation expressible without crate-private column access:
+    // hijack a delivery label and expect PL009 (duplicate) + PL010
+    // (the hijacked slot goes undelivered)
+    let cluster = flat(8);
+    let mut comm = Comm::new(&cluster);
+    let mut cp = collectives::plan(
+        &Algorithm::Chain,
+        &mut comm,
+        &CollectiveSpec::new(0, 8, 1 << 20),
+    );
+    let labeled: Vec<usize> = (0..cp.plan.len())
+        .filter(|&i| cp.plan.label_of(i).is_some())
+        .collect();
+    let hijack = cp.plan.label_of(labeled[0]);
+    cp.plan.set_label(labeled[1], hijack);
+    let diags = analysis::verify_collective(&cluster, &cp);
+    let codes: Vec<Code> = diags.iter().map(|d| d.code).collect();
+    assert!(codes.contains(&Code::DuplicateLabel), "{codes:?}");
+    assert!(codes.contains(&Code::MissingDelivery), "{codes:?}");
+}
+
+#[test]
+fn diagnostics_render_deterministically() {
+    let cluster = flat(8);
+    let mut comm = Comm::new(&cluster);
+    let mut cp = collectives::plan(
+        &Algorithm::Chain,
+        &mut comm,
+        &CollectiveSpec::new(0, 8, 1 << 20),
+    );
+    let labeled: Vec<usize> = (0..cp.plan.len())
+        .filter(|&i| cp.plan.label_of(i).is_some())
+        .collect();
+    let hijack = cp.plan.label_of(labeled[0]);
+    cp.plan.set_label(labeled[1], hijack);
+    let a = analysis::render(&analysis::verify_collective(&cluster, &cp));
+    let b = analysis::render(&analysis::verify_collective(&cluster, &cp));
+    assert_eq!(a, b, "report must be byte-identical run to run");
+    assert!(a.contains("PL009"), "{a}");
+}
