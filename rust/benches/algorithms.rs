@@ -15,7 +15,7 @@ use gdrbcast::util::bytes::{format_size, format_us};
 use gdrbcast::util::tablefmt::Table;
 
 fn main() {
-    let cluster = presets::kesch(2, 16);
+    let cluster = presets::kesch(2, 16).unwrap();
     let n = cluster.n_gpus();
     let mut comm = Comm::new(&cluster);
     let mut engine = Engine::new(&cluster);

@@ -29,7 +29,7 @@ fn main() {
 
     // simulated latency tables over the kesch presets
     for (nodes, gpn) in [(1usize, 8usize), (1, 16), (2, 16)] {
-        let cluster = presets::kesch(nodes, gpn);
+        let cluster = presets::kesch(nodes, gpn).unwrap();
         let n = cluster.n_gpus();
         let mut comm = Comm::new(&cluster);
         let mut engine = Engine::new(&cluster);
@@ -55,7 +55,7 @@ fn main() {
     }
 
     // the ring/tree crossover the tuner keys on: full 4 B – 256 MB sweep
-    let cluster = presets::kesch(2, 16);
+    let cluster = presets::kesch(2, 16).unwrap();
     let n = cluster.n_gpus();
     let mut comm = Comm::new(&cluster);
     let mut engine = Engine::new(&cluster);

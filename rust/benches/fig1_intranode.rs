@@ -29,7 +29,7 @@ fn main() {
 
     println!("== Figure 1: intranode broadcast latency (KESCH node) ==\n");
     for gpus in [2usize, 4, 8, 16] {
-        let cluster = presets::kesch(1, gpus);
+        let cluster = presets::kesch(1, gpus).unwrap();
         for &model in &models {
             let selector = Selector::tuned_with_model(&cluster, None, model);
             let mut comm = Comm::new(&cluster);

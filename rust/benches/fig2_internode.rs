@@ -26,7 +26,7 @@ fn main() {
 
     println!("== Figure 2: internode broadcast latency (KESCH, 16 GPUs/node) ==\n");
     for nodes in [2usize, 4, 8] {
-        let cluster = presets::kesch(nodes, 16);
+        let cluster = presets::kesch(nodes, 16).unwrap();
         let gpus = cluster.n_gpus();
         for &model in &models {
             let selector = Selector::tuned_with_model(&cluster, None, model);

@@ -61,7 +61,7 @@ fn main() {
             ));
             let mut peak = (0usize, 0.0f64);
             for &(nodes, gpn) in scales {
-                let cluster = presets::kesch(nodes, gpn);
+                let cluster = presets::kesch(nodes, gpn).unwrap();
                 let batch = batch_per_gpu * cluster.n_gpus();
                 let sel = Selector::tuned_with_model(&cluster, None, lm);
                 let a = estimate_iteration_with_model(
@@ -105,7 +105,7 @@ fn main() {
     // smoke keeps one node so CI stays fast; the full run reports the
     // paper's 32-GPU application scale
     let (nodes, gpn) = if smoke { (1, 8) } else { (2, 16) };
-    let cluster = presets::kesch(nodes, gpn);
+    let cluster = presets::kesch(nodes, gpn).unwrap();
     let model = vgg16();
     let batch = batch_per_gpu * cluster.n_gpus();
     let gpus = cluster.n_gpus();

@@ -18,7 +18,7 @@ fn main() {
     let models = link_models_from_env();
 
     // plan construction vs execution, separated
-    let cluster = presets::kesch(8, 16);
+    let cluster = presets::kesch(8, 16).unwrap();
     let n = cluster.n_gpus();
     let mut comm = Comm::new(&cluster);
     let spec = BcastSpec::new(0, n, 128 << 20);
@@ -97,7 +97,7 @@ fn main() {
     let t0 = std::time::Instant::now();
     let sizes = gdrbcast::util::bytes::pow2_sweep(4, 128 << 20);
     for gpus in [2usize, 4, 8, 16] {
-        let c = presets::kesch(1, gpus);
+        let c = presets::kesch(1, gpus).unwrap();
         let sel = gdrbcast::tuning::Selector::tuned(&c);
         let mut cm = Comm::new(&c);
         let mut en = Engine::new(&c);

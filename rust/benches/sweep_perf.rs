@@ -97,7 +97,7 @@ fn main() {
     // ---- plan-build / engine-execute throughput at 16/64/128 GPUs ------
     for &(nodes, gpn) in &[(1usize, 16usize), (4, 16), (8, 16)] {
         let gpus = nodes * gpn;
-        let cluster = presets::kesch(nodes, gpn);
+        let cluster = presets::kesch(nodes, gpn).unwrap();
         let mut comm = Comm::new(&cluster);
         let bytes: u64 = if smoke { 8 << 20 } else { 64 << 20 };
         let spec = BcastSpec::new(0, gpus, bytes);
@@ -147,7 +147,7 @@ fn main() {
     // (templated slower than rebuild would be an outright regression —
     // both sides run on the same runner, so the ratio is noise-robust).
     {
-        let cluster = presets::kesch(4, 16);
+        let cluster = presets::kesch(4, 16).unwrap();
         let gpus = cluster.n_gpus();
         let acq_sizes: Vec<u64> = if smoke {
             vec![4, 64 << 10, 1 << 20, 16 << 20]
@@ -203,7 +203,7 @@ fn main() {
     // FAIRSHARE_FULL_RECOMPUTE env var sets the same default). The
     // `incremental_vs_full` ratio is gated >= 1x in CI.
     for &(nodes, gpn) in &[(4usize, 16usize), (8, 16)] {
-        let cluster = presets::kesch(nodes, gpn);
+        let cluster = presets::kesch(nodes, gpn).unwrap();
         let chunks = if smoke { 8 } else { 32 };
         let plan = per_node_chain_plan(&cluster, nodes, gpn, chunks, 1 << 20);
         // every op is a flow: one arrival + one departure event each
@@ -261,7 +261,7 @@ fn main() {
     };
     for &(nodes, gpn) in tune_presets {
         let gpus = nodes * gpn;
-        let cluster = presets::kesch(nodes, gpn);
+        let cluster = presets::kesch(nodes, gpn).unwrap();
 
         for &model in &link_models {
             let sfx = row_suffix(model);
@@ -292,6 +292,51 @@ fn main() {
         }
     }
 
+    // ---- datacenter-scale fabrics: plan build + makespan at 1k–64k -----
+    // The structured-fabric acceptance rows: a chain broadcast planned
+    // and executed on multi-rail fat-trees of 1k/8k/64k GPUs. Every
+    // route comes from the algebraic resolver, so the route table only
+    // holds the n-1 chain pairs — asserted below, because a dense
+    // O(n^2) table at 64k would be ~4B entries and the resolver's whole
+    // point is never materializing one. Smoke mode runs the 1k shape
+    // only (CI gates `scale_perf/1kgpus/plan_build_ns` against the
+    // snapshot); the full run adds the 8k and 64k shapes.
+    let scale_shapes: &[(&str, usize, usize, usize)] = if smoke {
+        &[("1k", 4, 8, 32)]
+    } else {
+        &[("1k", 4, 8, 32), ("8k", 8, 16, 64), ("64k", 32, 64, 32)]
+    };
+    for &(tag, pods, leaves, gpl) in scale_shapes {
+        let cluster = presets::fat_tree(pods, leaves, gpl, 2, 2).unwrap();
+        let gpus = cluster.n_gpus();
+        let mut comm = Comm::new(&cluster);
+        let spec = BcastSpec::new(0, gpus, 1 << 20);
+        let t0 = Instant::now();
+        let bp = collectives::plan(&Algorithm::Chain, &mut comm, &spec);
+        let build_ns = t0.elapsed().as_nanos() as f64;
+        let n_routes = cluster.routes().n_routes();
+        assert!(
+            n_routes <= 4 * gpus,
+            "route table grew superlinearly at {gpus} GPUs: {n_routes} routes"
+        );
+        let mut engine = Engine::with_model(&cluster, LinkModel::Fifo);
+        let makespan = engine.makespan_ns(&bp.plan);
+        println!(
+            "scale fat-tree {tag} ({gpus} GPUs): plan build {:.2} ms, {} ops, makespan {:.3} ms, {n_routes} routes interned",
+            build_ns / 1e6,
+            bp.plan.len(),
+            makespan as f64 / 1e6
+        );
+        rows.push(wall_row(
+            &format!("scale_perf/{tag}gpus/plan_build_ns"),
+            build_ns,
+        ));
+        rows.push(wall_row(
+            &format!("scale_perf/{tag}gpus/makespan_ns"),
+            makespan as f64,
+        ));
+    }
+
     // ---- fault Monte Carlo smoke (FAULT_SMOKE=1) -----------------------
     // Not a throughput number: a seeded fault sweep on the acceptance
     // preset whose p50/p99/delivered rows land in the report so CI can
@@ -299,7 +344,7 @@ fn main() {
     // deterministic — two back-to-back sweeps must be byte-identical
     // (`fault_sweep/determinism` is 1.0 iff they are).
     if std::env::var("FAULT_SMOKE").is_ok() {
-        let cluster = presets::kesch(2, 8);
+        let cluster = presets::kesch(2, 8).unwrap();
         let profile =
             FaultProfile::parse("kill=1@500us,degrade=2:0.5@200us,straggle=1:3,jitter=0.05")
                 .expect("fault profile");

@@ -282,7 +282,7 @@ mod tests {
 
     #[test]
     fn every_algorithm_replays_clean() {
-        let c = kesch(1, 8);
+        let c = kesch(1, 8).unwrap();
         let mut comm = Comm::new(&c);
         for (algo, spec) in [
             (Algorithm::Direct, BcastSpec::new(0, 8, 1 << 20)),
@@ -325,7 +325,7 @@ mod tests {
 
     #[test]
     fn dropped_dep_breaks_static_causality() {
-        let c = flat(4);
+        let c = flat(4).unwrap();
         let mut comm = Comm::new(&c);
         let mut cp = collectives::chain::plan(&mut comm, &BcastSpec::new(0, 4, 1 << 20));
         cp.plan.deps[1] = Deps::none();
@@ -338,7 +338,7 @@ mod tests {
 
     #[test]
     fn dropped_reduce_edge_breaks_contract() {
-        let c = flat(4);
+        let c = flat(4).unwrap();
         let mut comm = Comm::new(&c);
         let mut cp = collectives::allreduce::ring(&mut comm, &CollectiveSpec::allreduce(4, 4096));
         cp.edges.remove(0);
@@ -351,7 +351,7 @@ mod tests {
 
     #[test]
     fn duplicated_reduce_edge_flagged() {
-        let c = flat(4);
+        let c = flat(4).unwrap();
         let mut comm = Comm::new(&c);
         let mut cp = collectives::allreduce::ring(&mut comm, &CollectiveSpec::allreduce(4, 4096));
         let dup = cp.edges[0];
@@ -365,7 +365,7 @@ mod tests {
 
     #[test]
     fn missing_and_duplicate_labels_flagged() {
-        let c = flat(4);
+        let c = flat(4).unwrap();
         let mut comm = Comm::new(&c);
         let mut cp = collectives::chain::plan(&mut comm, &BcastSpec::new(0, 4, 1 << 20));
         let last = cp.plan.len() - 1;
@@ -387,7 +387,7 @@ mod tests {
 
     #[test]
     fn wrong_chunk_count_flagged() {
-        let c = flat(4);
+        let c = flat(4).unwrap();
         let mut comm = Comm::new(&c);
         let mut cp = collectives::reduce_scatter::plan(
             &mut comm,

@@ -68,6 +68,10 @@ pub enum Code {
     /// PL016: a delay row carries transfer-only parameters (nonzero
     /// bytes/issue cost or a finite bandwidth cap).
     MalformedDelay,
+    /// PL017: a transfer's route hop chain is not a contiguous path from
+    /// its source to its destination (an algebraic resolver emitted a
+    /// broken hop sequence, or the route was assembled by hand).
+    BrokenPath,
     /// PL100 (warning): a zero-byte transfer still pays a nonzero
     /// protocol overhead.
     ZeroByteOverhead,
@@ -84,7 +88,7 @@ pub enum Code {
 impl Code {
     /// Every code, in numeric order (docs and coverage tests iterate
     /// this).
-    pub const ALL: [Code; 19] = [
+    pub const ALL: [Code; 20] = [
         Code::Cycle,
         Code::DanglingDep,
         Code::SelfDep,
@@ -101,6 +105,7 @@ impl Code {
         Code::Contribution,
         Code::ChunkCount,
         Code::MalformedDelay,
+        Code::BrokenPath,
         Code::ZeroByteOverhead,
         Code::UnlabeledTerminal,
         Code::UnreachableValue,
@@ -125,6 +130,7 @@ impl Code {
             Code::Contribution => "PL014",
             Code::ChunkCount => "PL015",
             Code::MalformedDelay => "PL016",
+            Code::BrokenPath => "PL017",
             Code::ZeroByteOverhead => "PL100",
             Code::UnlabeledTerminal => "PL101",
             Code::UnreachableValue => "PL102",

@@ -67,7 +67,7 @@ mod tests {
 
     #[test]
     fn clean_plan_has_no_lint_findings() {
-        let c = flat(4);
+        let c = flat(4).unwrap();
         let mut comm = Comm::new(&c);
         let bp = chain::plan(&mut comm, &BcastSpec::new(0, 4, 1 << 20));
         let mut diags = Vec::new();
@@ -77,7 +77,7 @@ mod tests {
 
     #[test]
     fn zero_byte_overhead_and_unlabeled_terminal_flagged() {
-        let c = flat(4);
+        let c = flat(4).unwrap();
         let mut comm = Comm::new(&c);
         let bp = chain::plan(&mut comm, &BcastSpec::new(0, 4, 1 << 20));
         let mut plan = bp.plan.clone();
@@ -93,7 +93,7 @@ mod tests {
 
     #[test]
     fn saturation_band_values_flagged() {
-        let c = flat(4);
+        let c = flat(4).unwrap();
         let mut comm = Comm::new(&c);
         let bp = chain::plan(&mut comm, &BcastSpec::new(0, 4, 1 << 20));
         let mut plan = bp.plan.clone();

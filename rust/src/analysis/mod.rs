@@ -157,7 +157,7 @@ mod tests {
 
     #[test]
     fn clean_collective_plan_verifies() {
-        let c = kesch(1, 8);
+        let c = kesch(1, 8).unwrap();
         let mut comm = Comm::new(&c);
         let cp = plan(
             &Algorithm::Knomial { k: 2 },
@@ -170,7 +170,7 @@ mod tests {
 
     #[test]
     fn report_is_deterministic_and_sorted() {
-        let c = flat(4);
+        let c = flat(4).unwrap();
         let mut comm = Comm::new(&c);
         let mut cp = chain::plan(&mut comm, &BcastSpec::new(0, 4, 1 << 20));
         cp.plan.deps[1] = Deps::none(); // break causality
@@ -187,7 +187,7 @@ mod tests {
 
     #[test]
     fn warnings_alone_do_not_fail_verification() {
-        let c = flat(4);
+        let c = flat(4).unwrap();
         let mut comm = Comm::new(&c);
         let cp = chain::plan(&mut comm, &BcastSpec::new(0, 4, 1 << 20));
         let mut plan = cp.plan.clone();

@@ -13,9 +13,9 @@ use super::{has_errors, render, verify_collective, Code};
 
 fn topologies() -> Vec<(&'static str, Cluster)> {
     vec![
-        ("flat(8)", flat(8)),
-        ("kesch(1,16)", kesch(1, 16)),
-        ("kesch(2,8)", kesch(2, 8)),
+        ("flat(8)", flat(8).unwrap()),
+        ("kesch(1,16)", kesch(1, 16).unwrap()),
+        ("kesch(2,8)", kesch(2, 8).unwrap()),
     ]
 }
 

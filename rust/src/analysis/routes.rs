@@ -10,6 +10,11 @@ use super::diag::{Code, Diag};
 
 pub(super) fn check(cluster: &Cluster, plan: &Plan, diags: &mut Vec<Diag>) {
     let scan_dead_links = cluster.n_dead_links() > 0;
+    // Hop-chain contiguity only needs proving when routes can come from
+    // an algebraic resolver — BFS routes are contiguous by construction
+    // (each hop extends the frontier), so the healthy BFS-only case
+    // skips the walk entirely.
+    let scan_contiguity = cluster.has_algebraic_resolver();
     // endpoint aliveness only matters once the rank set and the GPU set
     // can disagree (retain_ranks leaves dead GPUs in the device list) or
     // links have been killed; the common healthy case skips the scan
@@ -54,6 +59,36 @@ pub(super) fn check(cluster: &Cluster, plan: &Plan, diags: &mut Vec<Diag>) {
                 }
             }
         }
+        if scan_contiguity {
+            let meta = cluster.route_meta(route);
+            let mut at = meta.src;
+            let mut broken = None;
+            {
+                let hops = cluster.route_hops(route);
+                for (k, &h) in hops.iter().enumerate() {
+                    let link = cluster.link(h);
+                    if link.src != at {
+                        broken = Some(format!(
+                            "hop {k} (link {}) departs device {} but the \
+                             path is at device {}",
+                            h.0, link.src.0, at.0
+                        ));
+                        break;
+                    }
+                    at = link.dst;
+                }
+            }
+            if broken.is_none() && at != meta.dst {
+                broken = Some(format!(
+                    "path ends at device {} instead of the declared \
+                     destination {}",
+                    at.0, meta.dst.0
+                ));
+            }
+            if let Some(msg) = broken {
+                diags.push(Diag::at(Code::BrokenPath, id, msg));
+            }
+        }
         if scan_endpoints {
             let meta = cluster.route_meta(route);
             for (which, dev) in [("source", meta.src), ("destination", meta.dst)] {
@@ -81,7 +116,7 @@ mod tests {
 
     #[test]
     fn fresh_plan_is_clean() {
-        let c = kesch(2, 4);
+        let c = kesch(2, 4).unwrap();
         let mut comm = Comm::new(&c);
         let bp = chain::plan(&mut comm, &BcastSpec::new(0, 8, 1 << 20));
         let mut diags = Vec::new();
@@ -91,7 +126,7 @@ mod tests {
 
     #[test]
     fn stale_route_flagged_after_kill_link() {
-        let mut c = flat(4);
+        let mut c = flat(4).unwrap();
         let bp = {
             let mut comm = Comm::new(&c);
             chain::plan(&mut comm, &BcastSpec::new(0, 4, 1 << 20))
@@ -107,11 +142,57 @@ mod tests {
     }
 
     #[test]
+    fn algebraic_routes_pass_the_contiguity_scan() {
+        // fat-tree installs an algebraic resolver, so every route in the
+        // plan goes through the PL017 hop-chain walk — and must be a
+        // contiguous src→dst path
+        let c = crate::topology::presets::fat_tree(2, 2, 2, 2, 2).unwrap();
+        let mut comm = Comm::new(&c);
+        let bp = chain::plan(&mut comm, &BcastSpec::new(0, c.n_gpus(), 1 << 20));
+        let mut diags = Vec::new();
+        check(&c, &bp.plan, &mut diags);
+        assert!(diags.is_empty(), "{diags:?}");
+    }
+
+    #[test]
+    fn broken_hop_chain_flagged_as_pl017() {
+        use crate::netsim::{Deps, Plan, SimOp};
+        let c = crate::topology::presets::fat_tree(2, 2, 2, 2, 2).unwrap();
+        let (a, b) = (c.rank_device(0), c.rank_device(1));
+        let good = c.route(a, b).unwrap();
+        // drop the final hop: the chain now ends on the leaf switch
+        // instead of the declared destination GPU
+        let truncated: Vec<_> = {
+            let hops = c.route_hops(good);
+            hops[..hops.len() - 1].to_vec()
+        };
+        let broken = c.intern_raw_route_for_test(a, b, &truncated);
+        let mut plan = Plan::new();
+        plan.push(
+            SimOp::Transfer {
+                route: broken,
+                bytes: 1 << 20,
+                overhead_ns: 0,
+                issue_ns: 0,
+                bw_cap: None,
+            },
+            Deps::none(),
+            None,
+        );
+        let mut diags = Vec::new();
+        check(&c, &plan, &mut diags);
+        assert!(
+            diags.iter().any(|d| d.code == Code::BrokenPath),
+            "{diags:?}"
+        );
+    }
+
+    #[test]
     fn rebuilt_plan_after_kill_is_clean() {
         // kill one FDR rail of the dual-rail kesch node; the sibling
         // socket's rail keeps every rank reachable, so a plan rebuilt on
         // the mutated topology must verify clean
-        let mut c = kesch(2, 8);
+        let mut c = kesch(2, 8).unwrap();
         let cross = c.route(c.rank_device(7), c.rank_device(8)).unwrap();
         let rail = *c
             .route_view(cross)

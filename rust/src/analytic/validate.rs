@@ -70,7 +70,7 @@ pub fn run_grid(
     let cp = CommParams::default();
     let mut rows = Vec::new();
     for &n in ns {
-        let cluster = flat(n);
+        let cluster = flat(n).unwrap();
         let mut comm = Comm::with_params(&cluster, cp.clone());
         let mut engine = Engine::new(&cluster);
         for algo in algorithms {

@@ -71,7 +71,7 @@ mod tests {
 
     #[test]
     fn sweep_produces_monotone_latencies() {
-        let c = kesch(1, 4);
+        let c = kesch(1, 4).unwrap();
         let mut comm = Comm::new(&c);
         let mut engine = Engine::new(&c);
         let sizes = [4u64, 4 << 10, 4 << 20];

@@ -85,7 +85,7 @@ mod tests {
 
     #[test]
     fn every_rank_gathers_every_segment() {
-        let c = flat(6);
+        let c = flat(6).unwrap();
         let mut comm = Comm::new(&c);
         let mut engine = Engine::new(&c);
         let spec = CollectiveSpec::allgather(6, 6000);
@@ -107,7 +107,7 @@ mod tests {
 
     #[test]
     fn traffic_is_n_minus_one_over_n() {
-        let c = flat(8);
+        let c = flat(8).unwrap();
         let mut comm = Comm::new(&c);
         let m: u64 = 8 << 20;
         let spec = CollectiveSpec::allgather(8, m);
@@ -117,7 +117,7 @@ mod tests {
 
     #[test]
     fn single_rank_noop() {
-        let c = flat(1);
+        let c = flat(1).unwrap();
         let mut comm = Comm::new(&c);
         let spec = CollectiveSpec::allgather(1, 100);
         let cp = plan(&mut comm, &spec);
@@ -126,7 +126,7 @@ mod tests {
 
     #[test]
     fn cost_matches_ring_model_on_flat() {
-        let c = flat(8);
+        let c = flat(8).unwrap();
         let mut comm = Comm::new(&c);
         let mut engine = Engine::new(&c);
         let m: u64 = 8 << 20;

@@ -279,7 +279,7 @@ mod tests {
 
     #[test]
     fn ring_all_contributions_exactly_once() {
-        let c = flat(8);
+        let c = flat(8).unwrap();
         let mut comm = Comm::new(&c);
         let mut engine = Engine::new(&c);
         for bytes in [0u64, 4, 8192, 1 << 20] {
@@ -292,7 +292,7 @@ mod tests {
 
     #[test]
     fn tree_all_contributions_exactly_once() {
-        let c = kesch(2, 8);
+        let c = kesch(2, 8).unwrap();
         let mut comm = Comm::new(&c);
         let mut engine = Engine::new(&c);
         for k in [2, 3, 4, 8] {
@@ -308,7 +308,7 @@ mod tests {
 
     #[test]
     fn ring_traffic_is_bandwidth_optimal() {
-        let c = flat(8);
+        let c = flat(8).unwrap();
         let mut comm = Comm::new(&c);
         let m: u64 = 8 << 20;
         let spec = CollectiveSpec::allreduce(8, m);
@@ -319,7 +319,7 @@ mod tests {
 
     #[test]
     fn tree_edge_and_traffic_accounting() {
-        let c = flat(9);
+        let c = flat(9).unwrap();
         let mut comm = Comm::new(&c);
         let spec = CollectiveSpec::allreduce(9, 4096);
         let cp = tree(&mut comm, &spec, 3);
@@ -330,7 +330,7 @@ mod tests {
 
     #[test]
     fn ring_beats_tree_for_large_messages() {
-        let c = flat(8);
+        let c = flat(8).unwrap();
         let mut comm = Comm::new(&c);
         let mut engine = Engine::new(&c);
         let spec = CollectiveSpec::allreduce(8, 64 << 20);
@@ -341,7 +341,7 @@ mod tests {
 
     #[test]
     fn tree_beats_ring_for_small_messages_at_scale() {
-        let c = kesch(1, 16);
+        let c = kesch(1, 16).unwrap();
         let mut comm = Comm::new(&c);
         let mut engine = Engine::new(&c);
         let spec = CollectiveSpec::allreduce(16, 4);
@@ -353,7 +353,7 @@ mod tests {
     #[test]
     fn ring_cost_matches_model_on_flat() {
         // 2 × (n-1) pipelined segment hops
-        let c = flat(8);
+        let c = flat(8).unwrap();
         let mut comm = Comm::new(&c);
         let mut engine = Engine::new(&c);
         let m: u64 = 8 << 20;
@@ -366,7 +366,7 @@ mod tests {
 
     #[test]
     fn single_rank_noop() {
-        let c = flat(1);
+        let c = flat(1).unwrap();
         let mut comm = Comm::new(&c);
         let spec = CollectiveSpec::allreduce(1, 100);
         assert!(ring(&mut comm, &spec).plan.is_empty());

@@ -50,7 +50,7 @@ mod tests {
 
     #[test]
     fn cost_matches_eq2_on_flat() {
-        let c = flat(6);
+        let c = flat(6).unwrap();
         let mut comm = Comm::new(&c);
         let mut engine = Engine::new(&c);
         let spec = BcastSpec::new(0, 6, 4 << 20);
@@ -62,7 +62,7 @@ mod tests {
 
     #[test]
     fn chain_passes_through_neighbours() {
-        let c = flat(4);
+        let c = flat(4).unwrap();
         let mut comm = Comm::new(&c);
         let spec = BcastSpec::new(1, 4, 64);
         let bp = plan(&mut comm, &spec);

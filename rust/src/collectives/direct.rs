@@ -49,7 +49,7 @@ mod tests {
 
     #[test]
     fn cost_is_n_minus_one_serial_sends() {
-        let c = flat(5);
+        let c = flat(5).unwrap();
         let mut comm = Comm::new(&c);
         let mut engine = Engine::new(&c);
         let spec = BcastSpec::new(0, 5, 1 << 20);
@@ -61,7 +61,7 @@ mod tests {
 
     #[test]
     fn single_rank_empty_plan() {
-        let c = flat(1);
+        let c = flat(1).unwrap();
         let mut comm = Comm::new(&c);
         let spec = BcastSpec::new(0, 1, 1024);
         let bp = plan(&mut comm, &spec);
@@ -70,7 +70,7 @@ mod tests {
 
     #[test]
     fn nonzero_root_covers_all() {
-        let c = flat(4);
+        let c = flat(4).unwrap();
         let mut comm = Comm::new(&c);
         let spec = BcastSpec::new(2, 4, 64);
         let bp = plan(&mut comm, &spec);

@@ -206,7 +206,7 @@ mod tests {
 
     #[test]
     fn covers_all_ranks_intranode() {
-        let c = kesch(1, 16);
+        let c = kesch(1, 16).unwrap();
         let mut comm = Comm::new(&c);
         let mut engine = Engine::new(&c);
         let spec = BcastSpec::new(0, 16, 4);
@@ -221,7 +221,7 @@ mod tests {
     fn small_message_beats_ipc_binomial_at_16_gpus() {
         // the §IV-C claim: for small M the staged design's M/B_PCIe cost
         // vanishes and host-side fan-out wins over GPU-to-GPU trees
-        let c = kesch(1, 16);
+        let c = kesch(1, 16).unwrap();
         let mut comm = Comm::new(&c);
         let mut engine = Engine::new(&c);
         let spec = BcastSpec::new(0, 16, 4);
@@ -239,7 +239,7 @@ mod tests {
     fn large_message_pays_pcie_staging() {
         // for very large M the M/B_PCIe term dominates and direct designs
         // win — exactly why the tuner switches algorithms
-        let c = kesch(1, 4);
+        let c = kesch(1, 4).unwrap();
         let mut comm = Comm::new(&c);
         let mut engine = Engine::new(&c);
         let spec = BcastSpec::new(0, 4, 128 << 20);
@@ -254,7 +254,7 @@ mod tests {
 
     #[test]
     fn internode_hosts_participate() {
-        let c = kesch(2, 8);
+        let c = kesch(2, 8).unwrap();
         let mut comm = Comm::new(&c);
         let mut engine = Engine::new(&c);
         let spec = BcastSpec::new(0, 16, 8192);
@@ -267,7 +267,7 @@ mod tests {
 
     #[test]
     fn nonzero_root_works() {
-        let c = kesch(2, 4);
+        let c = kesch(2, 4).unwrap();
         let mut comm = Comm::new(&c);
         let mut engine = Engine::new(&c);
         let spec = BcastSpec::new(5, 8, 1024);

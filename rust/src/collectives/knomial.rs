@@ -107,7 +107,7 @@ mod tests {
     #[test]
     fn binomial_depth_on_flat() {
         // with k=2 and n=8 the critical path is 3 rounds
-        let c = flat(8);
+        let c = flat(8).unwrap();
         let mut comm = Comm::new(&c);
         let mut engine = Engine::new(&c);
         let spec = BcastSpec::new(0, 8, 1 << 20);
@@ -119,7 +119,7 @@ mod tests {
 
     #[test]
     fn edge_count_is_n_minus_one() {
-        let c = flat(13);
+        let c = flat(13).unwrap();
         let mut comm = Comm::new(&c);
         for k in [2, 3, 4, 8] {
             let spec = BcastSpec::new(0, 13, 4096);
@@ -130,7 +130,7 @@ mod tests {
 
     #[test]
     fn all_ranks_reached_any_root() {
-        let c = flat(9);
+        let c = flat(9).unwrap();
         let mut comm = Comm::new(&c);
         for root in [0, 4, 8] {
             let spec = BcastSpec::new(root, 9, 256);
@@ -147,7 +147,7 @@ mod tests {
     fn higher_k_shallower_but_wider() {
         // n=16: k=2 -> 4 rounds; k=4 -> 2 rounds of up to 3 serialized
         // sends each; both must complete correctly
-        let c = flat(16);
+        let c = flat(16).unwrap();
         let mut comm = Comm::new(&c);
         let mut engine = Engine::new(&c);
         let spec = BcastSpec::new(0, 16, 4096);
@@ -165,7 +165,7 @@ mod tests {
 
     #[test]
     fn two_ranks_single_send() {
-        let c = flat(2);
+        let c = flat(2).unwrap();
         let mut comm = Comm::new(&c);
         let spec = BcastSpec::new(0, 2, 64);
         let bp = plan(&mut comm, &spec, 2);

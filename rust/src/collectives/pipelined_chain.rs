@@ -76,7 +76,7 @@ mod tests {
     #[test]
     fn matches_eq5_on_flat() {
         // T = (M/C + n - 2) × (t_s + C/B) on the idealised fabric
-        let c = flat(8);
+        let c = flat(8).unwrap();
         let mut comm = Comm::new(&c);
         let mut engine = Engine::new(&c);
         let m: u64 = 32 << 20;
@@ -91,7 +91,7 @@ mod tests {
 
     #[test]
     fn beats_plain_chain_for_large_messages() {
-        let c = flat(8);
+        let c = flat(8).unwrap();
         let mut comm = Comm::new(&c);
         let mut engine = Engine::new(&c);
         let spec = BcastSpec::new(0, 8, 64 << 20);
@@ -107,7 +107,7 @@ mod tests {
 
     #[test]
     fn chunk_count_accounting() {
-        let c = flat(3);
+        let c = flat(3).unwrap();
         let mut comm = Comm::new(&c);
         let spec = BcastSpec::new(0, 3, 10 << 20);
         let bp = plan(&mut comm, &spec, 4 << 20);
@@ -117,7 +117,7 @@ mod tests {
 
     #[test]
     fn degenerate_chunk_equals_chain() {
-        let c = flat(5);
+        let c = flat(5).unwrap();
         let mut comm = Comm::new(&c);
         let mut engine = Engine::new(&c);
         let spec = BcastSpec::new(0, 5, 1 << 20);
@@ -132,7 +132,7 @@ mod tests {
     fn two_ranks_pipelines_root_link() {
         // with n=2 the chain is a single hop; pipelining only adds
         // overhead per chunk — time = (M/C) × (t_s + C/B)
-        let c = flat(2);
+        let c = flat(2).unwrap();
         let mut comm = Comm::new(&c);
         let mut engine = Engine::new(&c);
         let m = 8 << 20;

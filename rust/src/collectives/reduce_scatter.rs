@@ -92,7 +92,7 @@ mod tests {
 
     #[test]
     fn every_segment_fully_reduced_at_its_owner() {
-        let c = flat(6);
+        let c = flat(6).unwrap();
         let mut comm = Comm::new(&c);
         let mut engine = Engine::new(&c);
         let spec = CollectiveSpec::reduce_scatter(6, 6000);
@@ -110,7 +110,7 @@ mod tests {
 
     #[test]
     fn traffic_is_n_minus_one_over_n() {
-        let c = flat(8);
+        let c = flat(8).unwrap();
         let mut comm = Comm::new(&c);
         let m: u64 = 8 << 20;
         let spec = CollectiveSpec::reduce_scatter(8, m);
@@ -121,7 +121,7 @@ mod tests {
 
     #[test]
     fn single_rank_noop() {
-        let c = flat(1);
+        let c = flat(1).unwrap();
         let mut comm = Comm::new(&c);
         let spec = CollectiveSpec::reduce_scatter(1, 100);
         let cp = plan(&mut comm, &spec);
@@ -131,7 +131,7 @@ mod tests {
 
     #[test]
     fn odd_rank_count_and_indivisible_bytes() {
-        let c = flat(7);
+        let c = flat(7).unwrap();
         let mut comm = Comm::new(&c);
         let mut engine = Engine::new(&c);
         let spec = CollectiveSpec::reduce_scatter(7, 7013);
@@ -143,7 +143,7 @@ mod tests {
     #[test]
     fn cost_matches_ring_model_on_flat() {
         // (n-1) pipelined steps; each step costs one segment hop
-        let c = flat(8);
+        let c = flat(8).unwrap();
         let mut comm = Comm::new(&c);
         let mut engine = Engine::new(&c);
         let m: u64 = 8 << 20;

@@ -172,7 +172,7 @@ mod tests {
 
     #[test]
     fn bandwidth_optimal_for_large_messages() {
-        let c = flat(8);
+        let c = flat(8).unwrap();
         let mut comm = Comm::new(&c);
         let mut engine = Engine::new(&c);
         let m: u64 = 64 << 20;
@@ -187,7 +187,7 @@ mod tests {
 
     #[test]
     fn every_rank_gets_every_part() {
-        let c = flat(6);
+        let c = flat(6).unwrap();
         let mut comm = Comm::new(&c);
         let mut engine = Engine::new(&c);
         let spec = BcastSpec::new(2, 6, 6000);
@@ -208,7 +208,7 @@ mod tests {
 
     #[test]
     fn total_traffic_matches_binomial_scatter_plus_ring() {
-        let c = flat(8);
+        let c = flat(8).unwrap();
         let mut comm = Comm::new(&c);
         let m: u64 = 8 << 20;
         let spec = BcastSpec::new(0, 8, m);
@@ -224,7 +224,7 @@ mod tests {
 
     #[test]
     fn single_rank_noop() {
-        let c = flat(1);
+        let c = flat(1).unwrap();
         let mut comm = Comm::new(&c);
         let spec = BcastSpec::new(0, 1, 100);
         let bp = plan(&mut comm, &spec);
@@ -233,7 +233,7 @@ mod tests {
 
     #[test]
     fn odd_rank_count_works() {
-        let c = flat(7);
+        let c = flat(7).unwrap();
         let mut comm = Comm::new(&c);
         let mut engine = Engine::new(&c);
         let spec = BcastSpec::new(0, 7, 7013); // deliberately non-divisible

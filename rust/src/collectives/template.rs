@@ -113,6 +113,13 @@ pub struct TemplateKey {
     /// ([`crate::topology::Cluster::generation`]); a mutation bumps it
     /// and orphans the entry.
     pub generation: u32,
+    /// The fabric family the template was planned for
+    /// ([`crate::topology::TopologyKind`]): hierarchical planners map
+    /// rails/pods to stages differently per family, so a template built
+    /// on one fabric must never be rescaled onto another — even when
+    /// rank count, root and generation happen to coincide (e.g. across
+    /// two `Comm`s sharing a cache in a sweep harness).
+    pub topology: crate::topology::TopologyKind,
 }
 
 /// Number of slots `comm::chunk_sizes(total, chunk)` would produce,
@@ -270,6 +277,7 @@ pub fn cached_plan<'a, 'c>(
         n_ranks: spec.n_ranks,
         shape: mpi_shape(algo, spec),
         generation: comm.cluster().generation(),
+        topology: comm.cluster().topology_kind(),
     };
     let params = comm.params().clone();
     let hit = comm
@@ -316,7 +324,7 @@ mod tests {
 
     #[test]
     fn cache_hits_across_the_size_axis() {
-        let cluster = kesch(1, 8);
+        let cluster = kesch(1, 8).unwrap();
         let mut comm = Comm::new(&cluster);
         let mut engine = Engine::new(&cluster);
         let algo = Algorithm::Knomial { k: 2 };
@@ -341,7 +349,7 @@ mod tests {
 
     #[test]
     fn class_boundary_rebuilds() {
-        let cluster = kesch(1, 8);
+        let cluster = kesch(1, 8).unwrap();
         let mut comm = Comm::new(&cluster);
         let algo = Algorithm::Knomial { k: 2 };
         let small = CollectiveSpec::new(0, 8, 4);
@@ -354,7 +362,7 @@ mod tests {
 
     #[test]
     fn pipelined_chunk_count_keys_separately() {
-        let cluster = kesch(1, 8);
+        let cluster = kesch(1, 8).unwrap();
         let mut comm = Comm::new(&cluster);
         let algo = Algorithm::PipelinedChain { chunk: 1 << 20 };
         // 8 chunks vs 9 chunks: different DAG shapes, separate entries
@@ -379,7 +387,7 @@ mod tests {
         // same whole-message class — only the remainder chunk crosses
         // the eager threshold — so a whole-message check would wrongly
         // serve a rescaled plan built for the eager remainder.
-        let cluster = kesch(1, 8);
+        let cluster = kesch(1, 8).unwrap();
         let mut comm = Comm::new(&cluster);
         let mut engine = Engine::new(&cluster);
         let chunk: u64 = 64 << 10;
@@ -419,7 +427,7 @@ mod tests {
 
     #[test]
     fn roots_key_separately() {
-        let cluster = kesch(1, 8);
+        let cluster = kesch(1, 8).unwrap();
         let mut comm = Comm::new(&cluster);
         let algo = Algorithm::Chain;
         let _ = cached_plan(&algo, &mut comm, &CollectiveSpec::new(0, 8, 4096));
@@ -429,7 +437,7 @@ mod tests {
 
     #[test]
     fn op_budget_bounds_cache_memory() {
-        let cluster = kesch(1, 8);
+        let cluster = kesch(1, 8).unwrap();
         let mut comm = Comm::new(&cluster);
         // chain at 8 ranks = 7 ops per entry; budget of 10 fits one
         comm.template_cache_mut().set_op_budget(10);

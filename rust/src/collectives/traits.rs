@@ -420,7 +420,7 @@ mod tests {
     fn rank_entry_exit_ops_for_pipelined_chain() {
         use crate::comm::Comm;
         use crate::topology::presets::flat;
-        let c = flat(4);
+        let c = flat(4).unwrap();
         let mut comm = Comm::new(&c);
         let spec = BcastSpec::new(1, 4, 12 << 20);
         let bp = super::super::pipelined_chain::plan(&mut comm, &spec, 4 << 20);
@@ -454,7 +454,7 @@ mod tests {
     fn rank_entry_ops_for_ring_allgather() {
         use crate::comm::Comm;
         use crate::topology::presets::flat;
-        let c = flat(5);
+        let c = flat(5).unwrap();
         let mut comm = Comm::new(&c);
         let spec = CollectiveSpec::allgather(5, 5000);
         let cp = super::super::allgather::plan(&mut comm, &spec);

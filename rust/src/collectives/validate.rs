@@ -401,7 +401,7 @@ mod tests {
 
     #[test]
     fn all_algorithms_valid_on_flat() {
-        let c = flat(8);
+        let c = flat(8).unwrap();
         let mut comm = Comm::new(&c);
         let mut engine = Engine::new(&c);
         for algo in all_algorithms() {
@@ -417,7 +417,7 @@ mod tests {
 
     #[test]
     fn all_algorithms_valid_on_kesch_multinode() {
-        let c = kesch(2, 8);
+        let c = kesch(2, 8).unwrap();
         let mut comm = Comm::new(&c);
         let mut engine = Engine::new(&c);
         for algo in all_algorithms() {
@@ -429,7 +429,7 @@ mod tests {
 
     #[test]
     fn missing_delivery_detected() {
-        let c = flat(4);
+        let c = flat(4).unwrap();
         let mut comm = Comm::new(&c);
         let mut engine = Engine::new(&c);
         let spec = BcastSpec::new(0, 4, 1024);
@@ -445,7 +445,7 @@ mod tests {
 
     #[test]
     fn causality_violation_detected() {
-        let c = flat(4);
+        let c = flat(4).unwrap();
         let mut comm = Comm::new(&c);
         let mut engine = Engine::new(&c);
         let spec = BcastSpec::new(0, 4, 1 << 20);
@@ -461,7 +461,7 @@ mod tests {
 
     #[test]
     fn reduction_collectives_valid() {
-        let c = kesch(2, 8);
+        let c = kesch(2, 8).unwrap();
         let mut comm = Comm::new(&c);
         let mut engine = Engine::new(&c);
         for (algo, spec) in [
@@ -481,7 +481,7 @@ mod tests {
         // sabotage a ring allreduce: drop one reduce-scatter flow edge so
         // its contribution never folds in — every final buffer for that
         // segment must come up short
-        let c = flat(4);
+        let c = flat(4).unwrap();
         let mut comm = Comm::new(&c);
         let mut engine = Engine::new(&c);
         let spec = CollectiveSpec::allreduce(4, 4096);
@@ -496,7 +496,7 @@ mod tests {
     #[test]
     fn duplicated_reduce_edge_detected() {
         // shipping the same contribution twice must be rejected
-        let c = flat(4);
+        let c = flat(4).unwrap();
         let mut comm = Comm::new(&c);
         let mut engine = Engine::new(&c);
         let spec = CollectiveSpec::allreduce(4, 4096);
@@ -513,7 +513,7 @@ mod tests {
     fn duplicated_copy_edge_detected() {
         // copy replay is idempotent, so double deliveries must be caught
         // structurally — duplicate an allgather-phase edge
-        let c = flat(4);
+        let c = flat(4).unwrap();
         let mut comm = Comm::new(&c);
         let mut engine = Engine::new(&c);
         let spec = CollectiveSpec::allreduce(4, 4096);
@@ -531,7 +531,7 @@ mod tests {
 
     #[test]
     fn wrong_chunk_count_rejected() {
-        let c = flat(4);
+        let c = flat(4).unwrap();
         let mut comm = Comm::new(&c);
         let mut engine = Engine::new(&c);
         let spec = CollectiveSpec::reduce_scatter(4, 4096);

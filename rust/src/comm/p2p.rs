@@ -239,7 +239,7 @@ mod tests {
 
     #[test]
     fn send_emits_single_op_for_ipc() {
-        let c = kesch(1, 2);
+        let c = kesch(1, 2).unwrap();
         let mut comm = Comm::new(&c);
         let mut plan = Plan::new();
         let id = comm.send(&mut plan, 0, 1, 4096, vec![], Some((1, 0)));
@@ -249,7 +249,7 @@ mod tests {
 
     #[test]
     fn send_emits_two_ops_for_staged() {
-        let c = kesch(1, 16);
+        let c = kesch(1, 16).unwrap();
         let mut comm = Comm::new(&c);
         let mut plan = Plan::new();
         // rank 0 (socket 0) -> rank 8 (socket 1): staged
@@ -262,7 +262,7 @@ mod tests {
 
     #[test]
     fn estimate_matches_execution_uncontended() {
-        let c = flat(2);
+        let c = flat(2).unwrap();
         let mut comm = Comm::new(&c);
         let est = comm.estimate_ns(0, 1, 1 << 20);
         let mut plan = Plan::new();
@@ -274,7 +274,7 @@ mod tests {
 
     #[test]
     fn cache_hits_are_consistent() {
-        let c = kesch(2, 8);
+        let c = kesch(2, 8).unwrap();
         let mut comm = Comm::new(&c);
         let a = comm.estimate_ns(0, 9, 1024);
         let b = comm.estimate_ns(0, 9, 1024);
@@ -285,7 +285,7 @@ mod tests {
     fn path_plans_are_visit_order_independent() {
         // canonical per-class selection: estimates must not depend on
         // which byte value first warmed the (src, dst, class) entry
-        let c = kesch(2, 8);
+        let c = kesch(2, 8).unwrap();
         let sizes = [256u64 << 20, 4, 1 << 20, (16 << 10) + 1];
         let mut fwd = Comm::new(&c);
         for &b in &sizes {
@@ -306,7 +306,7 @@ mod tests {
 
     #[test]
     fn small_intranode_faster_than_internode() {
-        let c = kesch(2, 8);
+        let c = kesch(2, 8).unwrap();
         let mut comm = Comm::new(&c);
         let intra = comm.estimate_ns(0, 1, 4);
         let inter = comm.estimate_ns(0, 8, 4);

@@ -263,7 +263,7 @@ mod tests {
         // the assumption canonical path-plan resolution (and therefore
         // plan-template rescaling) rests on: any two byte values in one
         // size class resolve to the same mechanism for every pair
-        let c = kesch(2, 16);
+        let c = kesch(2, 16).unwrap();
         let p = CommParams::default();
         let pairs = [(0usize, 1usize), (0, 8), (0, 16)];
         let groups: [&[u64]; 3] = [
@@ -289,7 +289,7 @@ mod tests {
 
     #[test]
     fn intranode_peer_uses_ipc() {
-        let c = kesch(1, 4);
+        let c = kesch(1, 4).unwrap();
         let p = CommParams::default();
         let plan = select(&c, &p, c.rank_device(0), c.rank_device(1), 1024);
         assert_eq!(plan.mechanism(), Mechanism::CudaIpc);
@@ -297,7 +297,7 @@ mod tests {
 
     #[test]
     fn cross_socket_small_stages_through_host() {
-        let c = kesch(1, 16);
+        let c = kesch(1, 16).unwrap();
         let p = CommParams::default();
         let plan = select(&c, &p, c.rank_device(0), c.rank_device(8), 4096);
         assert_eq!(plan.mechanism(), Mechanism::HostStaged);
@@ -305,7 +305,7 @@ mod tests {
 
     #[test]
     fn cross_socket_huge_may_use_gdr_read_if_cheaper() {
-        let c = kesch(1, 16);
+        let c = kesch(1, 16).unwrap();
         let p = CommParams::default();
         let plan = select(&c, &p, c.rank_device(0), c.rank_device(8), 256 << 20);
         // whichever it picks must be the cheaper of the two estimates
@@ -322,7 +322,7 @@ mod tests {
 
     #[test]
     fn internode_eager_vs_rndv_threshold() {
-        let c = kesch(2, 4);
+        let c = kesch(2, 4).unwrap();
         let p = CommParams::default();
         let small = select(&c, &p, c.rank_device(0), c.rank_device(4), 8 << 10);
         assert_eq!(small.mechanism(), Mechanism::SglEagerGdr);
@@ -332,7 +332,7 @@ mod tests {
 
     #[test]
     fn estimates_monotone_in_bytes() {
-        let c = kesch(2, 8);
+        let c = kesch(2, 8).unwrap();
         let p = CommParams::default();
         let pairs = [(0usize, 1usize), (0, 4), (0, 8)];
         for (a, b) in pairs {
@@ -348,7 +348,7 @@ mod tests {
 
     #[test]
     fn small_eager_beats_rndv_latency() {
-        let c = kesch(2, 4);
+        let c = kesch(2, 4).unwrap();
         let p = CommParams::default();
         let eager = select(&c, &p, c.rank_device(0), c.rank_device(4), 4);
         assert!(eager.estimate_ns(&c, 4) < p.rndv_overhead_ns + 10_000);

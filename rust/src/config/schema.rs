@@ -104,6 +104,126 @@ impl ClusterConfig {
     }
 }
 
+/// A parsed `--topology` CLI spec for the datacenter-scale structured
+/// fabrics: `kind:key=value,...`. Distinct from [`ClusterPreset`]
+/// because these fabrics are parameterized by fabric shape (pods,
+/// rails, groups), not by a `nodes × gpus_per_node` grid.
+///
+/// Examples:
+/// `fat-tree:pods=4,leaves=8,gpus=32,rails=2,spines=2`,
+/// `rail:nodes=128,gpus=8`, `nvswitch:nodes=16,gpus=8`,
+/// `dragonfly:groups=8,routers=8,gpus=2`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FabricSpec {
+    FatTree {
+        pods: usize,
+        leaves_per_pod: usize,
+        gpus_per_leaf: usize,
+        rails: usize,
+        spines_per_pod: usize,
+    },
+    RailOptimized {
+        nodes: usize,
+        gpus_per_node: usize,
+    },
+    NvSwitch {
+        nodes: usize,
+        gpus_per_node: usize,
+    },
+    Dragonfly {
+        groups: usize,
+        routers_per_group: usize,
+        gpus_per_router: usize,
+    },
+}
+
+impl FabricSpec {
+    /// Parse `kind:key=value,...`. Unknown keys are rejected; omitted
+    /// keys take the documented defaults.
+    pub fn parse(s: &str) -> Result<FabricSpec> {
+        let (kind, rest) = match s.split_once(':') {
+            Some((k, r)) => (k, r),
+            None => (s, ""),
+        };
+        let mut kv: Vec<(&str, usize)> = Vec::new();
+        for part in rest.split(',').filter(|p| !p.is_empty()) {
+            let (key, value) = part.split_once('=').ok_or_else(|| {
+                Error::Usage(format!(
+                    "--topology: expected key=value, got '{part}' in '{s}'"
+                ))
+            })?;
+            let value: usize = value.trim().parse().map_err(|_| {
+                Error::Usage(format!("--topology: bad value '{value}' for key '{key}'"))
+            })?;
+            kv.push((key.trim(), value));
+        }
+        let lookup = |keys: &[&str], default: usize| -> usize {
+            kv.iter()
+                .find(|(k, _)| keys.contains(k))
+                .map(|&(_, v)| v)
+                .unwrap_or(default)
+        };
+        let check_keys = |allowed: &[&[&str]]| -> Result<()> {
+            for &(k, _) in &kv {
+                if !allowed.iter().any(|group| group.contains(&k)) {
+                    return Err(Error::Usage(format!(
+                        "--topology: unknown key '{k}' in '{s}'"
+                    )));
+                }
+            }
+            Ok(())
+        };
+        match kind.to_ascii_lowercase().as_str() {
+            "fat-tree" | "fattree" | "fat_tree" => {
+                check_keys(&[
+                    &["pods"],
+                    &["leaves", "leaves_per_pod"],
+                    &["gpus", "gpus_per_leaf"],
+                    &["rails"],
+                    &["spines", "spines_per_pod"],
+                ])?;
+                Ok(FabricSpec::FatTree {
+                    pods: lookup(&["pods"], 2),
+                    leaves_per_pod: lookup(&["leaves", "leaves_per_pod"], 4),
+                    gpus_per_leaf: lookup(&["gpus", "gpus_per_leaf"], 8),
+                    rails: lookup(&["rails"], 2),
+                    spines_per_pod: lookup(&["spines", "spines_per_pod"], 2),
+                })
+            }
+            "rail" | "rail-optimized" | "rail_optimized" => {
+                check_keys(&[&["nodes"], &["gpus", "gpus_per_node"]])?;
+                Ok(FabricSpec::RailOptimized {
+                    nodes: lookup(&["nodes"], 16),
+                    gpus_per_node: lookup(&["gpus", "gpus_per_node"], 8),
+                })
+            }
+            "nvswitch" | "nv-switch" => {
+                check_keys(&[&["nodes"], &["gpus", "gpus_per_node"]])?;
+                Ok(FabricSpec::NvSwitch {
+                    nodes: lookup(&["nodes"], 16),
+                    gpus_per_node: lookup(&["gpus", "gpus_per_node"], 8),
+                })
+            }
+            "dragonfly" => {
+                check_keys(&[
+                    &["groups"],
+                    &["routers", "routers_per_group"],
+                    &["gpus", "gpus_per_router"],
+                ])?;
+                Ok(FabricSpec::Dragonfly {
+                    groups: lookup(&["groups"], 4),
+                    routers_per_group: lookup(&["routers", "routers_per_group"], 4),
+                    gpus_per_router: lookup(&["gpus", "gpus_per_router"], 4),
+                })
+            }
+            other => Err(Error::Usage(format!(
+                "--topology: unknown fabric kind '{other}' \
+                 (expected fat-tree | rail | nvswitch | dragonfly)"
+            ))),
+        }
+    }
+}
+
 /// Micro-benchmark sweep parameters (osu_bcast methodology).
 #[derive(Debug, Clone)]
 pub struct BenchConfig {
@@ -219,6 +339,47 @@ mod tests {
         assert_eq!(ClusterPreset::parse("KESCH").unwrap(), ClusterPreset::Kesch);
         assert_eq!(ClusterPreset::parse("dgx-1v").unwrap(), ClusterPreset::Dgx1V);
         assert!(ClusterPreset::parse("hal9000").is_err());
+    }
+
+    #[test]
+    fn fabric_spec_parse() {
+        assert_eq!(
+            FabricSpec::parse("fat-tree:pods=4,leaves=8,gpus=32,rails=2,spines=2").unwrap(),
+            FabricSpec::FatTree {
+                pods: 4,
+                leaves_per_pod: 8,
+                gpus_per_leaf: 32,
+                rails: 2,
+                spines_per_pod: 2
+            }
+        );
+        // defaults fill omitted keys
+        assert_eq!(
+            FabricSpec::parse("rail:nodes=128").unwrap(),
+            FabricSpec::RailOptimized {
+                nodes: 128,
+                gpus_per_node: 8
+            }
+        );
+        assert_eq!(
+            FabricSpec::parse("nvswitch").unwrap(),
+            FabricSpec::NvSwitch {
+                nodes: 16,
+                gpus_per_node: 8
+            }
+        );
+        assert_eq!(
+            FabricSpec::parse("dragonfly:groups=8,routers=8,gpus=2").unwrap(),
+            FabricSpec::Dragonfly {
+                groups: 8,
+                routers_per_group: 8,
+                gpus_per_router: 2
+            }
+        );
+        assert!(FabricSpec::parse("torus:x=4").is_err());
+        assert!(FabricSpec::parse("fat-tree:bogus=1").is_err());
+        assert!(FabricSpec::parse("fat-tree:pods").is_err());
+        assert!(FabricSpec::parse("fat-tree:pods=many").is_err());
     }
 
     #[test]

@@ -581,7 +581,7 @@ mod tests {
 
     #[test]
     fn healthy_job_is_n_times_one_iteration() {
-        let cluster = kesch(1, 4);
+        let cluster = kesch(1, 4).unwrap();
         let empty = FaultSchedule::default();
         let one = run_collective_job(
             &cluster,
@@ -621,7 +621,7 @@ mod tests {
     fn none_policy_aborts_on_first_failure() {
         // kill every link out of rank 3's GPU so its payload is
         // undeliverable whatever the detour
-        let cluster = kesch(1, 4);
+        let cluster = kesch(1, 4).unwrap();
         let dst = cluster.rank_device(3);
         let mut sched = FaultSchedule::default().with_retry(0, 1000);
         for l in cluster.links() {
@@ -650,7 +650,7 @@ mod tests {
 
     #[test]
     fn replan_drops_cut_off_rank_and_finishes() {
-        let cluster = kesch(1, 4);
+        let cluster = kesch(1, 4).unwrap();
         let dst = cluster.rank_device(3);
         let mut sched = FaultSchedule::default().with_retry(0, 1000);
         for l in cluster.links() {
@@ -685,7 +685,7 @@ mod tests {
 
     #[test]
     fn shrink_matches_replan_world_on_isolating_failure() {
-        let cluster = kesch(1, 4);
+        let cluster = kesch(1, 4).unwrap();
         let dst = cluster.rank_device(2);
         let mut sched = FaultSchedule::default().with_retry(0, 1000);
         for l in cluster.links() {
@@ -717,7 +717,7 @@ mod tests {
         // a kill striking mid-job, late enough that iterations complete
         // before it: restart must rewind to the checkpoint and replay on
         // healed hardware (no further failures → full completion)
-        let cluster = kesch(1, 4);
+        let cluster = kesch(1, 4).unwrap();
         let empty = FaultSchedule::default();
         let one = run_collective_job(
             &cluster,

@@ -212,7 +212,7 @@ mod tests {
 
     #[test]
     fn both_backends_cost_vgg_schedule() {
-        let cluster = kesch(2, 8);
+        let cluster = kesch(2, 8).unwrap();
         let sel = Selector::tuned(&cluster);
         let nccl = NcclParams::default();
         let mut comm = Comm::new(&cluster);
@@ -233,7 +233,7 @@ mod tests {
 
     #[test]
     fn zero_byte_messages_skipped() {
-        let cluster = kesch(1, 2);
+        let cluster = kesch(1, 2).unwrap();
         let sel = Selector::tuned(&cluster);
         let mut comm = Comm::new(&cluster);
         let mut engine = Engine::new(&cluster);
@@ -248,7 +248,7 @@ mod tests {
 
     #[test]
     fn allreduce_schedule_costs_vgg_buckets() {
-        let cluster = kesch(1, 8);
+        let cluster = kesch(1, 8).unwrap();
         let sel = Selector::tuned(&cluster);
         let mut comm = Comm::new(&cluster);
         let mut engine = Engine::new(&cluster);
@@ -274,8 +274,8 @@ mod tests {
     #[test]
     fn aggregation_grows_with_scale() {
         // the all-to-all gather's incast hurts more at two nodes than one
-        let small = kesch(1, 8);
-        let large = kesch(2, 16);
+        let small = kesch(1, 8).unwrap();
+        let large = kesch(2, 16).unwrap();
         let mut t = [0u64; 2];
         for (i, cluster) in [&small, &large].into_iter().enumerate() {
             let n = cluster.n_gpus();

@@ -465,7 +465,7 @@ mod tests {
 
     #[test]
     fn backprop_delays_chain_in_reverse_per_rank() {
-        let cluster = kesch(1, 2);
+        let cluster = kesch(1, 2).unwrap();
         let mut plan = Plan::new();
         let layer_ns = [10u64, 20, 30];
         let ops = push_backprop_delays(&mut plan, &cluster, &layer_ns);
@@ -486,7 +486,7 @@ mod tests {
     fn timeline_reduces_to_comm_time_at_zero_compute() {
         // bit-identical to the barrier model's exchange when every delay
         // is zero — the golden anchor for both training modes
-        let cluster = kesch(1, 8);
+        let cluster = kesch(1, 8).unwrap();
         let sel = Selector::tuned(&cluster);
         let model = googlenet();
         let mut comm = Comm::new(&cluster);
@@ -503,7 +503,7 @@ mod tests {
 
     #[test]
     fn nonzero_compute_extends_and_overlaps() {
-        let cluster = kesch(1, 4);
+        let cluster = kesch(1, 4).unwrap();
         let sel = Selector::tuned(&cluster);
         let model = googlenet();
         let mut comm = Comm::new(&cluster);

@@ -251,7 +251,7 @@ mod tests {
     #[test]
     fn mv2_opt_beats_or_matches_nccl_for_vgg() {
         // the paper's 7%-at-32-GPUs claim, shape-checked at one scale
-        let cluster = kesch(2, 16); // 32 GPUs
+        let cluster = kesch(2, 16).unwrap(); // 32 GPUs
         let model = vgg16();
         let sel = Selector::tuned(&cluster);
         let nccl = NcclParams::default();
@@ -278,7 +278,7 @@ mod tests {
 
     #[test]
     fn compute_override_is_respected() {
-        let cluster = kesch(1, 4);
+        let cluster = kesch(1, 4).unwrap();
         let model = vgg16();
         let sel = Selector::tuned(&cluster);
         let est = estimate_iteration(
@@ -297,7 +297,7 @@ mod tests {
         // the motivating claim of the refactor: once the partitioned
         // scheme pays its aggregation leg, bucketed ring allreduce wins
         // the full gradient exchange at multi-node scale
-        let cluster = kesch(2, 16);
+        let cluster = kesch(2, 16).unwrap();
         let model = vgg16();
         let sel = Selector::tuned(&cluster);
         let batch = 16 * cluster.n_gpus();
@@ -328,7 +328,7 @@ mod tests {
 
     #[test]
     fn training_modes_share_compute_model() {
-        let cluster = kesch(1, 4);
+        let cluster = kesch(1, 4).unwrap();
         let model = vgg16();
         let sel = Selector::tuned(&cluster);
         let a = estimate_training_iteration(
@@ -349,7 +349,7 @@ mod tests {
         // acceptance: VGG16 on the 32-GPU kesch preset — overlapping
         // backprop with the exchange never loses to the barrier model,
         // in either training mode
-        let cluster = kesch(2, 16);
+        let cluster = kesch(2, 16).unwrap();
         let model = vgg16();
         let sel = Selector::tuned(&cluster);
         let batch = 16 * cluster.n_gpus();
@@ -393,7 +393,7 @@ mod tests {
         // acceptance: with zero per-layer compute the timeline's
         // exchange DAG replays the barrier model's exactly — iteration
         // times must agree to the bit, in both training modes
-        let cluster = kesch(2, 16);
+        let cluster = kesch(2, 16).unwrap();
         let model = vgg16().with_flops(0); // zero compute, real messages
         let sel = Selector::tuned(&cluster);
         let batch = 16 * cluster.n_gpus();
@@ -434,7 +434,7 @@ mod tests {
         // golden parity: the overlap-capable estimator with overlap OFF
         // must reproduce the pre-timeline composition of the schedule
         // primitives exactly
-        let cluster = kesch(1, 8);
+        let cluster = kesch(1, 8).unwrap();
         let model = vgg16();
         let sel = Selector::tuned(&cluster);
         let gpus = cluster.n_gpus();
@@ -487,7 +487,7 @@ mod tests {
         // contains all the compute, communication is positive, and the
         // model flows through ExchangeOptions (closed-form correctness
         // is pinned by the engine's fair-share unit tests)
-        let cluster = kesch(1, 4);
+        let cluster = kesch(1, 4).unwrap();
         let model = vgg16();
         let sel = Selector::tuned_with_model(&cluster, None, crate::netsim::LinkModel::FairShare);
         for overlap in [false, true] {
@@ -525,7 +525,7 @@ mod tests {
 
     #[test]
     fn bucket_bytes_knob_changes_allreduce_schedule() {
-        let cluster = kesch(1, 4);
+        let cluster = kesch(1, 4).unwrap();
         let model = vgg16();
         let sel = Selector::tuned(&cluster);
         let coarse = estimate_training_iteration_opts(
@@ -563,7 +563,7 @@ mod tests {
 
     #[test]
     fn throughput_consistent() {
-        let cluster = kesch(1, 2);
+        let cluster = kesch(1, 2).unwrap();
         let model = vgg16();
         let sel = Selector::tuned(&cluster);
         let est =

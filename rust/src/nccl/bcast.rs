@@ -162,6 +162,7 @@ pub fn cached_intranode<'a, 'c>(
         n_ranks: spec.n_ranks,
         shape: params.n_slices(spec.bytes) as u64,
         generation: comm.cluster().generation(),
+        topology: comm.cluster().topology_kind(),
     };
     let comm_params = comm.params().clone();
     let hit = comm.template_cache_mut().try_rescale(&key, spec.bytes, |b| {
@@ -247,7 +248,7 @@ mod tests {
 
     #[test]
     fn small_message_dominated_by_launch() {
-        let c = kesch(1, 2);
+        let c = kesch(1, 2).unwrap();
         let params = NcclParams::default();
         let spec = BcastSpec::new(0, 2, 4);
         let bp = plan_intranode(&c, &params, &spec);
@@ -259,7 +260,7 @@ mod tests {
 
     #[test]
     fn large_message_approaches_copy_bw() {
-        let c = kesch(1, 4);
+        let c = kesch(1, 4).unwrap();
         let params = NcclParams::default();
         let m = 128 << 20;
         let spec = BcastSpec::new(0, 4, m);
@@ -276,7 +277,7 @@ mod tests {
 
     #[test]
     fn validates_as_broadcast() {
-        let c = kesch(1, 8);
+        let c = kesch(1, 8).unwrap();
         let params = NcclParams::default();
         let spec = BcastSpec::new(0, 8, 3 << 20);
         let bp = plan_intranode(&c, &params, &spec);
@@ -287,7 +288,7 @@ mod tests {
 
     #[test]
     fn sixteen_gpu_ring_bounces_once() {
-        let c = kesch(1, 16);
+        let c = kesch(1, 16).unwrap();
         let params = NcclParams::default();
         let spec = BcastSpec::new(0, 16, 4);
         let bp = plan_intranode(&c, &params, &spec);
@@ -300,7 +301,7 @@ mod tests {
 
     #[test]
     fn cached_intranode_matches_fresh_build() {
-        let c = kesch(1, 8);
+        let c = kesch(1, 8).unwrap();
         let params = NcclParams::default();
         let mut comm = Comm::new(&c);
         let mut engine = Engine::new(&c);
@@ -323,7 +324,7 @@ mod tests {
     fn template_rescales_within_slice_count() {
         // same slice count (4): rescaling the template must reproduce a
         // fresh build bit-for-bit
-        let c = kesch(1, 8);
+        let c = kesch(1, 8).unwrap();
         let params = NcclParams::default();
         let m1: u64 = 1 << 20;
         let m2: u64 = (1 << 20) - 4096; // 3 full slices + remainder = 4
@@ -340,7 +341,7 @@ mod tests {
     #[test]
     #[should_panic(expected = "single-node")]
     fn multinode_rejected() {
-        let c = kesch(2, 8);
+        let c = kesch(2, 8).unwrap();
         let params = NcclParams::default();
         let spec = BcastSpec::new(0, 16, 4);
         let _ = plan_intranode(&c, &params, &spec);

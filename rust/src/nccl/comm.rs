@@ -68,7 +68,7 @@ mod tests {
 
     #[test]
     fn kesch_16_fragments_at_socket() {
-        let c = kesch(1, 16);
+        let c = kesch(1, 16).unwrap();
         let ranks: Vec<usize> = (0..16).collect();
         let plan = plan_comms(&c, &ranks);
         assert!(plan.fragmented);
@@ -78,7 +78,7 @@ mod tests {
 
     #[test]
     fn kesch_4_single_comm() {
-        let c = kesch(1, 4);
+        let c = kesch(1, 4).unwrap();
         let ranks: Vec<usize> = (0..4).collect();
         let plan = plan_comms(&c, &ranks);
         assert!(!plan.fragmented);
@@ -87,7 +87,7 @@ mod tests {
 
     #[test]
     fn dgx1_nvlink_keeps_one_comm() {
-        let c = dgx1(1, 8, true);
+        let c = dgx1(1, 8, true).unwrap();
         let ranks: Vec<usize> = (0..8).collect();
         let plan = plan_comms(&c, &ranks);
         assert!(!plan.fragmented, "NVLink mesh gives full peer access");
@@ -95,7 +95,7 @@ mod tests {
 
     #[test]
     fn setup_cost_scales_with_ranks() {
-        let c = kesch(1, 8);
+        let c = kesch(1, 8).unwrap();
         let ranks: Vec<usize> = (0..8).collect();
         let plan = plan_comms(&c, &ranks);
         let total: u64 = plan.comms.iter().map(|c| c.setup_ns).sum();

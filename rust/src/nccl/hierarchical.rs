@@ -70,6 +70,7 @@ pub fn cached<'a, 'c>(
         n_ranks: spec.n_ranks,
         shape: shape(params, spec.bytes, chunk),
         generation: comm.cluster().generation(),
+        topology: comm.cluster().topology_kind(),
     };
     let comm_params = comm.params().clone();
     let hit = comm.template_cache_mut().try_rescale(&key, spec.bytes, |b| {
@@ -99,19 +100,25 @@ pub fn template(
     let mut rec = RoleRecorder::new();
     let mut edges: Vec<FlowEdge> = Vec::new();
 
-    // node -> its ranks (rank order is node-major so these are contiguous)
-    let nodes = cluster.nodes();
-    let mut ranks_of_node: Vec<Vec<usize>> = Vec::with_capacity(nodes.len());
-    let mut next_rank = 0usize;
-    for n in nodes {
-        let k = n.gpus.len();
-        ranks_of_node.push((next_rank..next_rank + k).collect());
-        next_rank += k;
+    // rank blocks for the two stages, from the topology's natural
+    // hierarchy: leaf blocks on fat-tree, group blocks on dragonfly,
+    // node blocks everywhere else (identical to the historical
+    // node-major grouping on kesch/dgx1/flat). Blocks are contiguous in
+    // rank order.
+    let ranks_of_node = cluster.rank_groups();
+    let mut group_of = vec![0usize; spec.n_ranks];
+    for (g, ranks) in ranks_of_node.iter().enumerate() {
+        for &r in ranks {
+            group_of[r] = g;
+        }
     }
-    debug_assert_eq!(next_rank, spec.n_ranks);
+    debug_assert_eq!(
+        ranks_of_node.iter().map(|g| g.len()).sum::<usize>(),
+        spec.n_ranks
+    );
 
-    let root_node = cluster.device(cluster.rank_device(spec.root)).node.0;
-    // leaders: the root on its node, rank 0 of each other node
+    let root_node = group_of[spec.root];
+    // leaders: the root in its block, the first rank of each other block
     let leaders: Vec<usize> = ranks_of_node
         .iter()
         .enumerate()
@@ -121,7 +128,7 @@ pub fn template(
     // kernel launch per rank (NCCL phase requirement), in parallel
     let mut launch: Vec<Option<OpId>> = vec![None; spec.n_ranks];
     for r in 0..spec.n_ranks {
-        if ranks_of_node[cluster.device(cluster.rank_device(r)).node.0].len() > 1 {
+        if ranks_of_node[group_of[r]].len() > 1 {
             let mark = plan.len();
             launch[r] = Some(plan.push(
                 SimOp::Delay {
@@ -245,7 +252,7 @@ mod tests {
 
     #[test]
     fn covers_all_ranks() {
-        let c = kesch(2, 8);
+        let c = kesch(2, 8).unwrap();
         let mut comm = Comm::new(&c);
         let params = NcclParams::default();
         let spec = BcastSpec::new(0, 16, 1 << 20);
@@ -263,7 +270,7 @@ mod tests {
 
     #[test]
     fn small_message_pays_launch_and_sync() {
-        let c = kesch(2, 8);
+        let c = kesch(2, 8).unwrap();
         let mut comm = Comm::new(&c);
         let params = NcclParams::default();
         let spec = BcastSpec::new(0, 16, 4);
@@ -278,7 +285,7 @@ mod tests {
 
     #[test]
     fn large_message_pipeline_is_bandwidth_bound() {
-        let c = kesch(2, 8);
+        let c = kesch(2, 8).unwrap();
         let mut comm = Comm::new(&c);
         let params = NcclParams::default();
         let m: u64 = 128 << 20;
@@ -294,7 +301,7 @@ mod tests {
 
     #[test]
     fn cached_template_matches_fresh_build() {
-        let c = kesch(2, 8);
+        let c = kesch(2, 8).unwrap();
         let params = NcclParams::default();
         let mut comm = Comm::new(&c);
         let mut engine = Engine::new(&c);
@@ -318,8 +325,32 @@ mod tests {
     }
 
     #[test]
+    fn fat_tree_blocks_map_leaves_to_stages() {
+        // on a structured fabric the two stages follow rank_groups():
+        // the internode chain runs over leaf leaders and the NCCL ring
+        // runs inside each leaf block
+        let c = crate::topology::presets::fat_tree(2, 2, 2, 2, 2).unwrap();
+        assert!(
+            c.rank_groups().iter().all(|g| g.len() == 2),
+            "fat-tree blocks should be leaf-sized"
+        );
+        let mut comm = Comm::new(&c);
+        let params = NcclParams::default();
+        let spec = BcastSpec::new(0, 8, 1 << 20);
+        let bp = plan(&mut comm, &params, &spec, DEFAULT_CHUNK);
+        let mut e = Engine::new(&c);
+        let result = e.execute(&bp.plan);
+        for r in 1..8 {
+            assert!(
+                result.delivery_time(&bp.plan, r, 0).is_some(),
+                "rank {r} missing data"
+            );
+        }
+    }
+
+    #[test]
     fn single_gpu_nodes_skip_nccl_phase() {
-        let c = kesch(2, 1);
+        let c = kesch(2, 1).unwrap();
         let mut comm = Comm::new(&c);
         let params = NcclParams::default();
         let spec = BcastSpec::new(0, 2, 4096);

@@ -47,7 +47,7 @@ mod tests {
 
     #[test]
     fn kesch_ring_crosses_qpi_once_for_16() {
-        let c = kesch(1, 16);
+        let c = kesch(1, 16).unwrap();
         let ranks: Vec<usize> = (0..16).collect();
         let ring = ring_from(&ranks, 0);
         // rank 7 -> 8 crosses sockets; everything else stays on PCIe
@@ -56,7 +56,7 @@ mod tests {
 
     #[test]
     fn kesch_ring_4_has_no_bounce() {
-        let c = kesch(1, 4);
+        let c = kesch(1, 4).unwrap();
         let ranks: Vec<usize> = (0..4).collect();
         assert_eq!(bounce_count(&c, &ring_from(&ranks, 0)), 0);
     }

@@ -142,8 +142,21 @@ pub struct Engine<'c> {
     /// silently desync the scratch — `run` fails fast in debug builds
     /// instead (mirroring `RouteId`'s stale-generation check).
     generation: u32,
+    /// Per-link / per-device earliest-free times, epoch-stamped: an
+    /// entry is live only while its stamp in `link_epoch`/`dev_epoch`
+    /// equals `epoch`; stale entries read as 0. `run` clears the whole
+    /// scratch by bumping `epoch` — O(1) per run instead of O(n_links +
+    /// n_devices), which matters at datacenter scale where a 64k-GPU
+    /// fabric has hundreds of thousands of links and a plan may touch a
+    /// few dozen.
     link_free: Vec<SimTime>,
     dev_free: Vec<SimTime>,
+    link_epoch: Vec<u32>,
+    dev_epoch: Vec<u32>,
+    /// Current scratch epoch; stamps are valid when equal. The stamp
+    /// arrays start at 0 and `run` bumps before use, so epoch 0 means
+    /// "no run yet". On u32 wrap the stamps are re-zeroed once.
+    epoch: u32,
     // reusable scratch (per-plan O(n) state) — avoids reallocating on
     // every collective of a sweep. CSR layout for the dependents graph
     // instead of a Vec<Vec<_>> (§Perf: the per-op Vec allocations made
@@ -189,6 +202,16 @@ pub struct Engine<'c> {
     /// The previous run injected faults: reset `bw_factor`, the
     /// fair-share scales and the event lists before the next run.
     scales_stale: bool,
+    /// Link indices whose `bw_factor`/`link_fault_events` the current
+    /// fault schedule touched — the pre-run reset restores exactly these
+    /// instead of sweeping all `n_links` entries.
+    touched_links: Vec<usize>,
+    /// Device indices whose `dev_factor` the current schedule touched.
+    touched_devs: Vec<usize>,
+    /// Scratch entries written by `run`'s reset paths since
+    /// construction — the observable the epoch-clear regression test
+    /// pins to prove reset cost does not scale with topology size.
+    reset_writes: u64,
 }
 
 impl<'c> Engine<'c> {
@@ -205,6 +228,9 @@ impl<'c> Engine<'c> {
             generation: cluster.routes().generation(),
             link_free: vec![0; cluster.n_links()],
             dev_free: vec![0; cluster.n_devices()],
+            link_epoch: vec![0; cluster.n_links()],
+            dev_epoch: vec![0; cluster.n_devices()],
+            epoch: 0,
             indegree: Vec::new(),
             ready_time: Vec::new(),
             dep_offsets: Vec::new(),
@@ -226,7 +252,19 @@ impl<'c> Engine<'c> {
             retry_pending: Vec::new(),
             retry_timeout_ns: 0,
             scales_stale: false,
+            touched_links: Vec::new(),
+            touched_devs: Vec::new(),
+            reset_writes: 0,
         }
+    }
+
+    /// Scratch entries the engine's per-run reset paths have written
+    /// since construction. Healthy runs write none (the epoch-stamp
+    /// clear is O(1)); faulted runs write one entry per fault-touched
+    /// link/device — never O(n_links). The epoch-clear regression test
+    /// asserts this count is independent of topology size.
+    pub fn scratch_reset_writes(&self) -> u64 {
+        self.reset_writes
     }
 
     /// Install (or clear) a fault schedule for subsequent runs. An empty
@@ -326,18 +364,36 @@ impl<'c> Engine<'c> {
         // builds prove structure/route invariants on every plan entering
         // the engine (no-op in release; opt out with GDRBCAST_VERIFY=0)
         crate::analysis::debug_verify_plan(self.cluster, plan, "Engine::run");
-        self.link_free.iter_mut().for_each(|t| *t = 0);
-        self.dev_free.iter_mut().for_each(|t| *t = 0);
+        // O(1) scratch clear: bump the epoch so every link/device
+        // free-time stamp goes stale (`lf`/`df` read stale entries as
+        // 0). The stamp arrays are re-zeroed only when the u32 epoch
+        // wraps — once per ~4 billion runs.
+        self.epoch = self.epoch.wrapping_add(1);
+        if self.epoch == 0 {
+            self.link_epoch.iter_mut().for_each(|e| *e = 0);
+            self.dev_epoch.iter_mut().for_each(|e| *e = 0);
+            self.epoch = 1;
+        }
 
         // fault overlay: reset stale state from a previous faulted run
         // (the fair-share solver reads `bw_scale` unconditionally, so a
         // healthy run after a faulted one must see all-ones again), then
-        // install the current schedule's events/stragglers/retry budget
+        // install the current schedule's events/stragglers/retry budget.
+        // Only the entries the previous schedule actually touched are
+        // restored — O(touched), not O(n_links).
         if self.scales_stale {
-            self.fs.reset_scales();
-            self.bw_factor.iter_mut().for_each(|f| *f = 1.0);
-            self.dev_factor.iter_mut().for_each(|f| *f = 1.0);
-            self.link_fault_events.iter_mut().for_each(|v| v.clear());
+            self.reset_writes += self.fs.reset_scales() as u64;
+            for &l in &self.touched_links {
+                self.bw_factor[l] = 1.0;
+                self.link_fault_events[l].clear();
+                self.reset_writes += 1;
+            }
+            for &d in &self.touched_devs {
+                self.dev_factor[d] = 1.0;
+                self.reset_writes += 1;
+            }
+            self.touched_links.clear();
+            self.touched_devs.clear();
             self.scales_stale = false;
         }
         let n = plan.len();
@@ -352,11 +408,14 @@ impl<'c> Engine<'c> {
             for ev in &sched.link_events {
                 if ev.link.0 < self.link_fault_events.len() {
                     self.link_fault_events[ev.link.0].push((ev.at_ns, ev.bw_factor));
+                    self.touched_links.push(ev.link.0);
                 }
             }
             for &(rank, f) in &sched.stragglers {
                 if rank < self.cluster.n_gpus() {
-                    self.dev_factor[self.cluster.rank_device(rank).0] = f;
+                    let dev = self.cluster.rank_device(rank).0;
+                    self.dev_factor[dev] = f;
+                    self.touched_devs.push(dev);
                 }
             }
             self.retry_timeout_ns = sched.retry_timeout_ns;
@@ -855,6 +914,39 @@ impl<'c> Engine<'c> {
         }
     }
 
+    /// Link `i`'s earliest-free time this run: the stored value when its
+    /// stamp matches the current epoch, else 0 (untouched this run).
+    #[inline]
+    fn lf(&self, i: usize) -> SimTime {
+        if self.link_epoch[i] == self.epoch {
+            self.link_free[i]
+        } else {
+            0
+        }
+    }
+
+    #[inline]
+    fn set_lf(&mut self, i: usize, t: SimTime) {
+        self.link_epoch[i] = self.epoch;
+        self.link_free[i] = t;
+    }
+
+    /// Device `i`'s earliest-free time this run (see [`Engine::lf`]).
+    #[inline]
+    fn df(&self, i: usize) -> SimTime {
+        if self.dev_epoch[i] == self.epoch {
+            self.dev_free[i]
+        } else {
+            0
+        }
+    }
+
+    #[inline]
+    fn set_df(&mut self, i: usize, t: SimTime) {
+        self.dev_epoch[i] = self.epoch;
+        self.dev_free[i] = t;
+    }
+
     /// Run op `id` at its ready time, streaming the plan's columns;
     /// returns (actual start, completion).
     fn run_op(&mut self, plan: &Plan, id: OpId, ready: SimTime) -> (SimTime, SimTime) {
@@ -864,9 +956,9 @@ impl<'c> Engine<'c> {
         match plan.ends[id] {
             OpEnd::Dev(dev) => {
                 // a Delay: its duration lives in the overheads column
-                let s = ready.max(self.dev_free[dev.0]);
+                let s = ready.max(self.df(dev.0));
                 let d = s + plan.overheads[id];
-                self.dev_free[dev.0] = d;
+                self.set_df(dev.0, d);
                 (s, d)
             }
             OpEnd::Route(route) => {
@@ -887,9 +979,9 @@ impl<'c> Engine<'c> {
                     // zero-issue copies still occupy it for their
                     // duration.
                     let dev = meta.src;
-                    let s = ready.max(self.dev_free[dev.0]);
+                    let s = ready.max(self.df(dev.0));
                     let d = s.saturating_add(overhead_ns);
-                    self.dev_free[dev.0] = s.saturating_add(overhead_ns.max(issue_ns));
+                    self.set_df(dev.0, s.saturating_add(overhead_ns.max(issue_ns)));
                     return (s, d);
                 }
                 let hops = cluster.route_hops(route);
@@ -897,7 +989,7 @@ impl<'c> Engine<'c> {
                 // the message occupies the whole path simultaneously)
                 let mut s = ready;
                 for &h in hops.iter() {
-                    s = s.max(self.link_free[h.0]);
+                    s = s.max(self.lf(h.0));
                 }
                 let eff_bw = meta.bottleneck_bw.min(cap);
                 // saturating sums: `tx_ns` reports a dead link as the
@@ -910,8 +1002,8 @@ impl<'c> Engine<'c> {
                 // Eq. (5).
                 for &h in hops.iter() {
                     let link_bw = cluster.link(h).bandwidth.min(cap);
-                    self.link_free[h.0] =
-                        s.saturating_add(issue_ns).saturating_add(tx_ns(bytes, link_bw));
+                    let busy = s.saturating_add(issue_ns).saturating_add(tx_ns(bytes, link_bw));
+                    self.set_lf(h.0, busy);
                 }
                 let d = s
                     .saturating_add(overhead_ns)
@@ -930,9 +1022,9 @@ impl<'c> Engine<'c> {
     fn run_op_faulty(&mut self, plan: &Plan, id: OpId, ready: SimTime) -> (SimTime, SimTime) {
         match plan.ends[id] {
             OpEnd::Dev(dev) => {
-                let s = ready.max(self.dev_free[dev.0]);
+                let s = ready.max(self.df(dev.0));
                 let d = s.saturating_add(self.scale_dur(plan.overheads[id], dev.0));
-                self.dev_free[dev.0] = d;
+                self.set_df(dev.0, d);
                 (s, d)
             }
             OpEnd::Route(route) => {
@@ -941,9 +1033,9 @@ impl<'c> Engine<'c> {
                     let dev = meta.src;
                     let overhead_ns = self.scale_dur(plan.overheads[id], dev.0);
                     let issue_ns = self.scale_dur(plan.issues[id], dev.0);
-                    let s = ready.max(self.dev_free[dev.0]);
+                    let s = ready.max(self.df(dev.0));
                     let d = s.saturating_add(overhead_ns);
-                    self.dev_free[dev.0] = s.saturating_add(overhead_ns.max(issue_ns));
+                    self.set_df(dev.0, s.saturating_add(overhead_ns.max(issue_ns)));
                     return (s, d);
                 }
                 self.fifo_transfer_faulty(plan, id, route, ready)
@@ -976,7 +1068,7 @@ impl<'c> Engine<'c> {
         {
             let hops = cluster.route_hops(route);
             for &h in hops.iter() {
-                s = s.max(self.link_free[h.0]);
+                s = s.max(self.lf(h.0));
             }
             for &h in hops.iter() {
                 bottleneck =
@@ -1006,7 +1098,7 @@ impl<'c> Engine<'c> {
             for &h in hops.iter() {
                 let link_bw = (cluster.link(h).bandwidth * self.factor_at(h.0, s)).min(cap);
                 let busy = tx_ns(bytes, link_bw);
-                self.link_free[h.0] = s.saturating_add(issue_ns).saturating_add(busy);
+                self.set_lf(h.0, s.saturating_add(issue_ns).saturating_add(busy));
             }
         }
         let d = s
@@ -1107,7 +1199,7 @@ mod tests {
 
     #[test]
     fn single_transfer_cost() {
-        let c = flat(2);
+        let c = flat(2).unwrap();
         let mut e = Engine::new(&c);
         let plan = transfer_plan(&c, &[(0, 1, 10_000_000)]);
         let r = e.execute(&plan);
@@ -1117,7 +1209,7 @@ mod tests {
 
     #[test]
     fn independent_transfers_overlap() {
-        let c = flat(4);
+        let c = flat(4).unwrap();
         let mut e = Engine::new(&c);
         // 0->1 and 2->3 share no links
         let plan = transfer_plan(&c, &[(0, 1, 10_000_000), (2, 3, 10_000_000)]);
@@ -1127,7 +1219,7 @@ mod tests {
 
     #[test]
     fn shared_source_link_serialises() {
-        let c = flat(3);
+        let c = flat(3).unwrap();
         let mut e = Engine::new(&c);
         // 0->1 and 0->2 share the 0->xbar uplink
         let plan = transfer_plan(&c, &[(0, 1, 10_000_000), (0, 2, 10_000_000)]);
@@ -1139,7 +1231,7 @@ mod tests {
 
     #[test]
     fn deps_respected() {
-        let c = flat(3);
+        let c = flat(3).unwrap();
         let mut e = Engine::new(&c);
         let mut plan = Plan::new();
         let r01 = c.route(c.rank_device(0), c.rank_device(1)).unwrap();
@@ -1173,7 +1265,7 @@ mod tests {
 
     #[test]
     fn bw_cap_applies() {
-        let c = flat(2);
+        let c = flat(2).unwrap();
         let mut e = Engine::new(&c);
         let route = c.route(c.rank_device(0), c.rank_device(1)).unwrap();
         let mut plan = Plan::new();
@@ -1194,7 +1286,7 @@ mod tests {
 
     #[test]
     fn delay_serialises_on_device() {
-        let c = flat(1);
+        let c = flat(1).unwrap();
         let mut e = Engine::new(&c);
         let mut plan = Plan::new();
         let dev = c.rank_device(0);
@@ -1206,7 +1298,7 @@ mod tests {
 
     #[test]
     fn rank_completion_maps_labels() {
-        let c = flat(3);
+        let c = flat(3).unwrap();
         let mut e = Engine::new(&c);
         let plan = transfer_plan(&c, &[(0, 1, 1000), (0, 2, 1000)]);
         let r = e.execute(&plan);
@@ -1219,7 +1311,7 @@ mod tests {
     fn merged_schedules_keep_delivery_queries() {
         // regression: Plan::merge used to drop labels, so rank_completion
         // and delivery_time on a merged schedule returned empty/0
-        let c = flat(3);
+        let c = flat(3).unwrap();
         let mut e = Engine::new(&c);
         let a = transfer_plan(&c, &[(0, 1, 1000)]);
         let b = transfer_plan(&c, &[(0, 2, 1000)]);
@@ -1240,7 +1332,7 @@ mod tests {
     #[should_panic(expected = "cycle")]
     fn cycle_detected() {
         // construct a cyclic plan by hand (bypassing push's debug_assert)
-        let c = flat(2);
+        let c = flat(2).unwrap();
         let mut plan = Plan::new();
         plan.push(
             SimOp::Delay {
@@ -1257,7 +1349,7 @@ mod tests {
 
     #[test]
     fn engine_reuse_resets_state() {
-        let c = flat(2);
+        let c = flat(2).unwrap();
         let mut e = Engine::new(&c);
         let plan = transfer_plan(&c, &[(0, 1, 10_000_000)]);
         let first = e.execute(&plan).makespan;
@@ -1375,7 +1467,7 @@ mod tests {
         // regression: same-device copies used to ignore issue_ns and
         // dev_free — unlimited local copies completed concurrently for
         // free; they must serialize on the device like `Delay` does
-        let c = flat(2);
+        let c = flat(2).unwrap();
         let dev = c.rank_device(0);
         let route = c.route(dev, dev).unwrap();
         for model in LinkModel::ALL {
@@ -1422,7 +1514,7 @@ mod tests {
     fn fairshare_single_flow_matches_fifo() {
         // with no contention the two models agree: a lone flow's rate is
         // the route bottleneck, exactly what FIFO charges
-        let c = flat(4);
+        let c = flat(4).unwrap();
         let mut fifo = Engine::new(&c);
         let mut fair = Engine::with_model(&c, LinkModel::FairShare);
         for bytes in [1u64 << 10, 1 << 20, 10_000_000] {
@@ -1483,7 +1575,7 @@ mod tests {
         // share the 10 GB/s uplink. Progressive filling: both run at
         // 5 GB/s until the 5 MB flow drains at t = 1 ms; the survivor
         // then fills the link, draining its remaining 5 MB in 0.5 ms.
-        let c = flat(3);
+        let c = flat(3).unwrap();
         let mut fair = Engine::with_model(&c, LinkModel::FairShare);
         let plan = transfer_plan(&c, &[(0, 1, 10_000_000), (0, 2, 5_000_000)]);
         let r = fair.execute(&plan);
@@ -1506,7 +1598,7 @@ mod tests {
     fn fairshare_keeps_dag_semantics() {
         // deps, delays, labels and deliveries behave exactly as under
         // FIFO — only bandwidth sharing differs
-        let c = flat(3);
+        let c = flat(3).unwrap();
         let mut fair = Engine::with_model(&c, LinkModel::FairShare);
         // delays serialize on their device identically
         let mut delays = Plan::new();
@@ -1525,7 +1617,7 @@ mod tests {
 
     #[test]
     fn fairshare_engine_reuse_and_makespan_only_match() {
-        let c = flat(4);
+        let c = flat(4).unwrap();
         let mut e = Engine::with_model(&c, LinkModel::FairShare);
         assert_eq!(e.link_model(), LinkModel::FairShare);
         let plan = transfer_plan(
@@ -1540,7 +1632,7 @@ mod tests {
 
     #[test]
     fn makespan_only_path_matches_execute() {
-        let c = flat(4);
+        let c = flat(4).unwrap();
         let mut e = Engine::new(&c);
         let plan = transfer_plan(
             &c,
@@ -1559,7 +1651,7 @@ mod tests {
         // solver is bit-identical, not just approximately right), and
         // disjoint per-pair contention must actually take the
         // incremental path
-        let c = flat(8);
+        let c = flat(8).unwrap();
         let pairs: Vec<(usize, usize, u64)> = (0..4)
             .map(|p| (2 * p, 2 * p + 1, 4_000_000 + (p as u64) * 1_000_000))
             .collect();
@@ -1599,11 +1691,53 @@ mod tests {
 
     #[test]
     fn flow_trace_is_empty_under_fifo() {
-        let c = flat(3);
+        let c = flat(3).unwrap();
         let mut e = Engine::new(&c);
         let plan = transfer_plan(&c, &[(0, 1, 1000), (0, 2, 1000)]);
         let (r, events) = e.execute_with_flow_trace(&plan);
         assert!(events.is_empty());
         assert_eq!(r.makespan, e.execute(&plan).makespan);
+    }
+
+    /// The per-run scratch clear must not scale with topology size: the
+    /// epoch-stamp clear writes nothing on healthy runs, and the fault
+    /// overlay reset writes one entry per fault-touched link/device —
+    /// the same count on a 4-GPU and a 512-GPU fabric.
+    #[test]
+    fn scratch_clear_cost_independent_of_topology_size() {
+        // healthy runs: zero reset writes at any size
+        for n in [4usize, 512] {
+            let c = flat(n).unwrap();
+            let mut e = Engine::new(&c);
+            let plan = transfer_plan(&c, &[(0, 1, 1_000_000)]);
+            let m = e.execute(&plan).makespan;
+            for _ in 0..3 {
+                assert_eq!(e.execute(&plan).makespan, m, "engine reuse, n={n}");
+            }
+            assert_eq!(e.scratch_reset_writes(), 0, "healthy runs wrote scratch, n={n}");
+        }
+        // faulted runs: both resets (faulted→faulted and faulted→healthy)
+        // restore exactly the touched entries, independent of n_links
+        let mut writes = Vec::new();
+        for n in [4usize, 512] {
+            let c = flat(n).unwrap();
+            let r01 = c.route(c.rank_device(0), c.rank_device(1)).unwrap();
+            let hop = c.route_hops(r01)[0];
+            let plan = transfer_plan(&c, &[(0, 1, 1_000_000)]);
+            let mut e = Engine::new(&c);
+            e.set_faults(Some(
+                FaultSchedule::default()
+                    .with_link_event(0, hop, 0.5)
+                    .with_straggler(1, 2.0),
+            ));
+            let degraded = e.execute(&plan).makespan;
+            assert_eq!(e.execute(&plan).makespan, degraded, "faulted reuse, n={n}");
+            e.set_faults(None);
+            let healthy = e.execute(&plan).makespan;
+            assert!(healthy < degraded, "overlay not restored, n={n}");
+            writes.push(e.scratch_reset_writes());
+        }
+        assert!(writes[0] > 0, "fault overlay resets must be counted");
+        assert_eq!(writes[0], writes[1], "reset cost scaled with n_links: {writes:?}");
     }
 }

@@ -178,6 +178,11 @@ pub(crate) struct FairShareScratch {
     /// outside fault runs — `× 1.0` is an exact identity, so healthy
     /// runs stay bit-identical to the pre-fault solver.
     bw_scale: Vec<f64>,
+    /// Links whose `bw_scale` was set since the last
+    /// [`FairShareScratch::reset_scales`] — restoring the overlay walks
+    /// this list instead of all `n_links` entries (duplicates are
+    /// harmless; the list length is bounded by the fault event count).
+    scaled: Vec<LinkId>,
     /// Epoch-stamped membership marks (`== epoch` ⇒ in the current
     /// closure), so starting a solve clears nothing.
     link_mark: Vec<u64>,
@@ -205,6 +210,7 @@ impl FairShareScratch {
             members: Vec::new(),
             seeds: Vec::new(),
             bw_scale: vec![1.0; n_links],
+            scaled: Vec::new(),
             link_mark: vec![0; n_links],
             flow_mark: Vec::new(),
             epoch: 0,
@@ -229,13 +235,21 @@ impl FairShareScratch {
     /// exactly the component it touches.
     pub fn scale_link(&mut self, l: LinkId, factor: f64) {
         self.bw_scale[l.0] = factor.max(0.0);
+        self.scaled.push(l);
         self.seeds.push(l);
     }
 
-    /// Clear every fault-overlay scale back to 1.0 (the engine calls
-    /// this before a run when the previous run injected faults).
-    pub fn reset_scales(&mut self) {
-        self.bw_scale.iter_mut().for_each(|f| *f = 1.0);
+    /// Restore every fault-overlay scale set since the last reset back
+    /// to 1.0 (the engine calls this before a run when the previous run
+    /// injected faults). O(scales set), not O(n_links); returns the
+    /// number of entries written so the engine's reset-cost counter can
+    /// account for them.
+    pub fn reset_scales(&mut self) -> usize {
+        let n = self.scaled.len();
+        while let Some(l) = self.scaled.pop() {
+            self.bw_scale[l.0] = 1.0;
+        }
+        n
     }
 
     /// Force (or un-force) the full-recompute reference mode, overriding
@@ -521,7 +535,7 @@ mod tests {
 
     #[test]
     fn single_flow_gets_the_bottleneck() {
-        let c = flat(3);
+        let c = flat(3).unwrap();
         let r01 = c.route(c.rank_device(0), c.rank_device(1)).unwrap();
         let rates = maxmin_rates(&c, &[(r01, None)]);
         assert_eq!(rates, vec![10.0e9]); // the flat preset's Ideal links
@@ -534,7 +548,7 @@ mod tests {
     fn shared_uplink_splits_evenly() {
         // 0->1 and 0->2 share the 0->xbar uplink; downstream links are
         // private, so each flow gets half the shared 10 GB/s
-        let c = flat(3);
+        let c = flat(3).unwrap();
         let r01 = c.route(c.rank_device(0), c.rank_device(1)).unwrap();
         let r02 = c.route(c.rank_device(0), c.rank_device(2)).unwrap();
         let rates = maxmin_rates(&c, &[(r01, None), (r02, None)]);
@@ -545,7 +559,7 @@ mod tests {
     fn capped_flow_releases_share_to_the_other() {
         // max-min, not equal split: the capped flow takes its 1 GB/s and
         // the uncapped one fills the remaining 9 GB/s of the shared link
-        let c = flat(3);
+        let c = flat(3).unwrap();
         let r01 = c.route(c.rank_device(0), c.rank_device(1)).unwrap();
         let r02 = c.route(c.rank_device(0), c.rank_device(2)).unwrap();
         let rates = maxmin_rates(&c, &[(r01, Some(1.0e9)), (r02, None)]);
@@ -554,7 +568,7 @@ mod tests {
 
     #[test]
     fn disjoint_flows_do_not_share() {
-        let c = flat(4);
+        let c = flat(4).unwrap();
         let r01 = c.route(c.rank_device(0), c.rank_device(1)).unwrap();
         let r23 = c.route(c.rank_device(2), c.rank_device(3)).unwrap();
         let rates = maxmin_rates(&c, &[(r01, None), (r23, None)]);
@@ -565,7 +579,7 @@ mod tests {
     fn rates_conserve_every_link_capacity() {
         // all-to-all-ish flow set on a shared crossbar: on every link the
         // allocated rates must sum to at most its bandwidth
-        let c = flat(6);
+        let c = flat(6).unwrap();
         let mut flows = Vec::new();
         for src in 0..6usize {
             for dst in 0..6usize {
@@ -630,7 +644,7 @@ mod tests {
         // many disjoint pair-flows, then one more arrival: the solve
         // must take the incremental path (members ≪ flows) and still
         // produce the exact full-solve rates
-        let c = flat(12);
+        let c = flat(12).unwrap();
         let mut fs = FairShareScratch::new(c.n_links());
         fs.set_full_recompute(false);
         for p in 0..6usize {
@@ -685,7 +699,7 @@ mod tests {
     #[test]
     fn incremental_matches_full_on_random_traces() {
         use crate::util::rng::Rng;
-        let clusters = [flat(8), chain_cluster(9)];
+        let clusters = [flat(8).unwrap(), chain_cluster(9)];
         for (ci, c) in clusters.iter().enumerate() {
             // every src→dst route (chain routes are multi-hop)
             let n_dev = if ci == 0 { 8 } else { 9 };
@@ -748,7 +762,7 @@ mod tests {
     fn hopless_flow_forces_a_full_solve_and_gets_its_cap() {
         // a src == dst route has no links: it can't join a component, so
         // the next solve must be full and rate it by its own cap
-        let c = flat(4);
+        let c = flat(4).unwrap();
         let d0 = c.rank_device(0);
         let self_route = c.route(d0, d0).unwrap();
         let pair = c.route(c.rank_device(2), c.rank_device(3)).unwrap();
@@ -767,7 +781,7 @@ mod tests {
 
     #[test]
     fn reset_clears_flows_and_pending_seeds() {
-        let c = flat(3);
+        let c = flat(3).unwrap();
         let r01 = c.route(c.rank_device(0), c.rank_device(1)).unwrap();
         let mut fs = FairShareScratch::new(c.n_links());
         fs.add(&c, mk_flow(0, r01, None));

@@ -526,7 +526,7 @@ mod tests {
 
     #[test]
     fn realize_is_deterministic_and_seed_sensitive() {
-        let cluster = kesch(2, 8);
+        let cluster = kesch(2, 8).unwrap();
         let p = FaultProfile::parse("kill=2@500us,degrade=3:0.5@200us,straggle=2:3").unwrap();
         let a = p.realize(&cluster, 42).unwrap();
         let b = p.realize(&cluster, 42).unwrap();
@@ -556,7 +556,7 @@ mod tests {
         assert!(s.is_empty());
         assert_eq!(s.retry_budget, DEFAULT_RETRY_BUDGET);
         assert_eq!(s.retry_timeout_ns, DEFAULT_RETRY_TIMEOUT_NS);
-        let cluster = kesch(1, 4);
+        let cluster = kesch(1, 4).unwrap();
         let realized = FaultProfile::default().realize(&cluster, 7).unwrap();
         assert!(realized.is_empty());
         assert_eq!(realized, s);
@@ -564,7 +564,7 @@ mod tests {
 
     #[test]
     fn realize_rejects_out_of_range_link_and_rank() {
-        let cluster = kesch(1, 4);
+        let cluster = kesch(1, 4).unwrap();
         let n_links = cluster.n_links();
         let p = FaultProfile::parse(&format!("link={n_links}:0.5@0")).unwrap();
         let err = p.realize(&cluster, 1).unwrap_err();
@@ -634,7 +634,7 @@ mod tests {
 
     #[test]
     fn jitter_degrades_only() {
-        let cluster = kesch(1, 8);
+        let cluster = kesch(1, 8).unwrap();
         let p = FaultProfile::parse("jitter=0.1").unwrap();
         let s = p.realize(&cluster, 9).unwrap();
         assert!(!s.link_events.is_empty());

@@ -117,7 +117,7 @@ mod tests {
 
     #[test]
     fn trace_is_chronological() {
-        let c = flat(3);
+        let c = flat(3).unwrap();
         let mut plan = Plan::new();
         let r01 = c.route(c.rank_device(0), c.rank_device(1)).unwrap();
         let r02 = c.route(c.rank_device(0), c.rank_device(2)).unwrap();
@@ -159,7 +159,7 @@ mod tests {
         // 5 GB/s; when the 5 MB flow drains at t = 1 ms the survivor
         // expands to the full 10 GB/s — the trace must contain both the
         // shared-rate events and the recovery event.
-        let c = flat(3);
+        let c = flat(3).unwrap();
         let mut plan = Plan::new();
         for (dst, bytes) in [(1usize, 10_000_000u64), (2, 5_000_000)] {
             let route = c.route(c.rank_device(0), c.rank_device(dst)).unwrap();

@@ -691,7 +691,7 @@ mod tests {
 
     #[test]
     fn plan_builds_and_counts() {
-        let c = flat(2);
+        let c = flat(2).unwrap();
         let mut p = Plan::new();
         let a = p.push(
             SimOp::Delay {
@@ -740,7 +740,7 @@ mod tests {
     fn soa_round_trips_through_op_and_planned() {
         // the column decomposition must reconstruct exactly what was
         // pushed — for both op kinds, with and without a bandwidth cap
-        let c = flat(2);
+        let c = flat(2).unwrap();
         let mut p = Plan::new();
         let r = c.route(c.rank_device(0), c.rank_device(1)).unwrap();
         p.push(
@@ -893,7 +893,7 @@ mod tests {
 
     #[test]
     fn rescale_rewrites_bytes_and_respects_classes() {
-        let c = flat(3);
+        let c = flat(3).unwrap();
         let r01 = c.route(c.rank_device(0), c.rank_device(1)).unwrap();
         let r12 = c.route(c.rank_device(1), c.rank_device(2)).unwrap();
         let mut tpl = PlanTemplate::default();

@@ -5,6 +5,7 @@ use std::collections::HashMap;
 use super::device::{Device, DeviceId, DeviceKind, NodeId};
 use super::link::{Link, LinkId, LinkKind};
 use super::path::{self, Route, RouteId, RouteMeta, RouteTable};
+use super::resolve::{Resolver, TopologyKind};
 use crate::error::{Error, Result};
 
 /// Per-chassis metadata.
@@ -35,9 +36,14 @@ pub struct Cluster {
     /// distinct from zero-bandwidth links, which stay routable and cost
     /// the `UNREACHABLE_NS` sentinel at execution time.
     dead_links: Vec<bool>,
-    /// Interned routes: BFS runs at most once per (src, dst) pair; plans
-    /// and path caches carry cheap [`RouteId`]s (DESIGN.md §Perf).
+    /// Interned routes: route resolution runs at most once per (src, dst)
+    /// pair; plans and path caches carry cheap [`RouteId`]s
+    /// (DESIGN.md §Perf).
     routes: RouteTable,
+    /// How cold pairs are resolved before interning: coordinate
+    /// arithmetic on structured fabrics, BFS everywhere else
+    /// (DESIGN.md §Topologies & routing).
+    resolver: Resolver,
 }
 
 impl Cluster {
@@ -51,6 +57,7 @@ impl Cluster {
             gpu_ranks: Vec::new(),
             dead_links: Vec::new(),
             routes: RouteTable::new(),
+            resolver: Resolver::Bfs,
         }
     }
 
@@ -58,6 +65,9 @@ impl Cluster {
 
     pub fn add_device(&mut self, kind: DeviceKind, node: NodeId, socket: u8, name: String) -> DeviceId {
         self.routes.clear();
+        // an arbitrary structural mutation invalidates any algebraic
+        // geometry (generators install their resolver after wiring)
+        self.resolver = Resolver::Bfs;
         let id = DeviceId(self.devices.len());
         self.devices.push(Device {
             id,
@@ -99,6 +109,7 @@ impl Cluster {
         latency_ns: u64,
     ) -> LinkId {
         self.routes.clear();
+        self.resolver = Resolver::Bfs;
         let id = LinkId(self.links.len());
         self.links.push(Link {
             id,
@@ -292,8 +303,12 @@ impl Cluster {
 
     /// Shortest route (min hops, tie-broken by max bottleneck bandwidth)
     /// from `src` to `dst`, as an interned [`RouteId`]: a cached lookup
-    /// after the first call per pair — the BFS runs at most once per
-    /// (src, dst).
+    /// after the first call per pair — resolution runs at most once per
+    /// (src, dst). Structured fabrics resolve by coordinate arithmetic
+    /// ([`Resolver`]); BFS covers everything the resolver declines, and
+    /// any algebraic route that would cross a link removed by
+    /// [`Cluster::kill_link`] falls back to BFS so recovery re-routes
+    /// around the failure.
     pub fn route(&self, src: DeviceId, dst: DeviceId) -> Result<RouteId> {
         if src.0 >= self.devices.len() {
             return Err(Error::UnknownDevice(src.0));
@@ -307,7 +322,10 @@ impl Cluster {
         if src == dst {
             return Ok(self.routes.insert(src, dst, &[], f64::INFINITY, 0));
         }
-        let hops = self.bfs(src, dst)?;
+        let hops = match self.resolver.resolve(src, dst) {
+            Some(h) if h.iter().all(|&l| !self.dead_links[l.0]) => h,
+            _ => self.bfs(src, dst)?,
+        };
         let (bw, lat) = path::aggregates(&hops, self);
         Ok(self.routes.insert(src, dst, &hops, bw, lat))
     }
@@ -329,6 +347,91 @@ impl Cluster {
     /// The intern table itself (cache metrics, tests).
     pub fn routes(&self) -> &RouteTable {
         &self.routes
+    }
+
+    // ---- resolver seam ---------------------------------------------------
+
+    /// Install an algebraic resolver. Generators call this once, after
+    /// wiring the graph; the route cache is dropped so nothing interned
+    /// under BFS survives the switch.
+    pub(super) fn set_resolver(&mut self, resolver: Resolver) {
+        self.routes.clear();
+        self.resolver = resolver;
+    }
+
+    /// The active route resolution strategy.
+    pub fn resolver(&self) -> &Resolver {
+        &self.resolver
+    }
+
+    /// Which structured fabric family this cluster belongs to
+    /// (`Generic` when routes come from BFS). Template caches key on it.
+    pub fn topology_kind(&self) -> TopologyKind {
+        self.resolver.kind()
+    }
+
+    /// Whether routes come from coordinate arithmetic rather than BFS.
+    pub fn has_algebraic_resolver(&self) -> bool {
+        self.resolver.is_algebraic()
+    }
+
+    /// Drop the algebraic resolver and re-resolve everything by BFS —
+    /// the golden reference for parity tests. Bumps the generation.
+    pub fn force_bfs_resolver(&mut self) {
+        self.set_resolver(Resolver::Bfs);
+    }
+
+    /// Test-only: intern an arbitrary hop chain as the (src, dst) route,
+    /// bypassing resolver and BFS — lets the verifier's broken-path
+    /// check (PL017) be exercised without building a buggy resolver.
+    #[cfg(test)]
+    pub fn intern_raw_route_for_test(
+        &self,
+        src: DeviceId,
+        dst: DeviceId,
+        hops: &[LinkId],
+    ) -> RouteId {
+        let (bw, lat) = path::aggregates(hops, self);
+        self.routes.insert(src, dst, hops, bw, lat)
+    }
+
+    /// Rank blocks for hierarchical (intra-stage / inter-stage)
+    /// collectives: leaf blocks on fat-tree, group blocks on dragonfly,
+    /// node blocks everywhere else. Blocks are contiguous in rank order
+    /// by construction, and any partition remains functionally valid
+    /// after `retain_ranks` renumbering.
+    pub fn rank_groups(&self) -> Vec<Vec<usize>> {
+        let n = self.gpu_ranks.len();
+        let block = match &self.resolver {
+            Resolver::FatTree(g) => g.gpus_per_leaf,
+            Resolver::Dragonfly(g) => g.routers_per_group * g.gpus_per_router,
+            _ => 0,
+        };
+        if block > 1 {
+            let mut groups = Vec::with_capacity(n.div_ceil(block));
+            let mut start = 0;
+            while start < n {
+                let end = (start + block).min(n);
+                groups.push((start..end).collect());
+                start = end;
+            }
+            return groups;
+        }
+        // node-major default: exactly the NodeMeta grouping, in rank order
+        let mut rank_of: HashMap<DeviceId, usize> = HashMap::new();
+        for (i, &g) in self.gpu_ranks.iter().enumerate() {
+            rank_of.insert(g, i);
+        }
+        self.nodes
+            .iter()
+            .map(|m| {
+                m.gpus
+                    .iter()
+                    .filter_map(|g| rank_of.get(g).copied())
+                    .collect::<Vec<usize>>()
+            })
+            .filter(|v| !v.is_empty())
+            .collect()
     }
 
     /// Topology generation: bumped by `add_device`/`connect`. Anything

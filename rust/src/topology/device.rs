@@ -22,8 +22,12 @@ pub enum DeviceKind {
     PlxSwitch,
     /// An InfiniBand host channel adapter.
     IbHca,
-    /// The InfiniBand fabric switch (one per cluster; full bisection).
+    /// An InfiniBand fabric switch (leaf/spine/core tier or the single
+    /// crossbar of the small presets).
     IbSwitch,
+    /// An NVSwitch: the full-mesh NVLink crossbar inside an NVSwitch or
+    /// rail-optimized node (every GPU one NVLink hop from every other).
+    NvSwitch,
 }
 
 impl DeviceKind {
@@ -35,6 +39,7 @@ impl DeviceKind {
             DeviceKind::PlxSwitch => "plx",
             DeviceKind::IbHca => "hca",
             DeviceKind::IbSwitch => "ibsw",
+            DeviceKind::NvSwitch => "nvsw",
         }
     }
 }
@@ -67,6 +72,7 @@ mod tests {
             DeviceKind::PlxSwitch,
             DeviceKind::IbHca,
             DeviceKind::IbSwitch,
+            DeviceKind::NvSwitch,
         ];
         let mut names: Vec<&str> = kinds.iter().map(|k| k.short()).collect();
         names.sort_unstable();

@@ -10,30 +10,62 @@
 //! the topology layer exposes exactly those predicates.
 //!
 //! Presets: [`presets::kesch`] (the paper's Cray CS-Storm testbed),
-//! [`presets::dgx1`], [`presets::dgx1v`], and [`presets::flat`] (the
-//! idealised uniform fabric the paper's analytic models assume).
+//! [`presets::dgx1`], and [`presets::flat`] (the idealised uniform
+//! fabric the paper's analytic models assume) resolve routes by BFS;
+//! the datacenter-scale fabrics ([`presets::fat_tree`],
+//! [`presets::rail_optimized`], [`presets::nvswitch`],
+//! [`presets::dragonfly`]) install algebraic [`resolve::Resolver`]s
+//! that compute routes from coordinates in O(path length) per pair.
 
 pub mod cluster;
 pub mod device;
 pub mod link;
 pub mod path;
 pub mod presets;
+pub mod resolve;
 
 pub use cluster::{Cluster, NodeMeta};
 pub use device::{Device, DeviceId, DeviceKind, NodeId};
 pub use link::{Link, LinkId, LinkKind};
 pub use path::{Route, RouteId, RouteMeta, RouteTable};
+pub use resolve::{Resolver, TopologyKind};
 
-use crate::config::schema::{ClusterConfig, ClusterPreset};
+use crate::config::schema::{ClusterConfig, ClusterPreset, FabricSpec};
 use crate::error::Result;
 
 /// Instantiate a cluster from a config.
 pub fn build(config: &ClusterConfig) -> Result<Cluster> {
     config.validate()?;
-    Ok(match config.preset {
+    match config.preset {
         ClusterPreset::Kesch => presets::kesch(config.nodes, config.gpus_per_node),
         ClusterPreset::Dgx1 => presets::dgx1(config.nodes, config.gpus_per_node, false),
         ClusterPreset::Dgx1V => presets::dgx1(config.nodes, config.gpus_per_node, true),
         ClusterPreset::Flat => presets::flat(config.total_gpus()),
-    })
+    }
+}
+
+/// Instantiate a structured fabric from a parsed `--topology` spec.
+pub fn build_fabric(spec: &FabricSpec) -> Result<Cluster> {
+    match *spec {
+        FabricSpec::FatTree {
+            pods,
+            leaves_per_pod,
+            gpus_per_leaf,
+            rails,
+            spines_per_pod,
+        } => presets::fat_tree(pods, leaves_per_pod, gpus_per_leaf, rails, spines_per_pod),
+        FabricSpec::RailOptimized {
+            nodes,
+            gpus_per_node,
+        } => presets::rail_optimized(nodes, gpus_per_node),
+        FabricSpec::NvSwitch {
+            nodes,
+            gpus_per_node,
+        } => presets::nvswitch(nodes, gpus_per_node),
+        FabricSpec::Dragonfly {
+            groups,
+            routers_per_group,
+            gpus_per_router,
+        } => presets::dragonfly(groups, routers_per_group, gpus_per_router),
+    }
 }

@@ -1,15 +1,46 @@
 //! Cluster presets.
 //!
+//! Paper-scale machines (BFS-resolved):
+//!
 //! * [`kesch`] — the paper's testbed: Cray CS-Storm, 12 nodes, 8× K80
 //!   boards (16 CUDA devices) per node, dual-rail IB FDR.
 //! * [`dgx1`] — NVIDIA DGX-1(V): 8 GPUs, NVLink cube mesh, IB EDR.
 //! * [`flat`] — the idealised uniform fabric assumed by the paper's
 //!   analytic models (§III): every rank pair communicates at the same
 //!   (t_s, B); used to validate simulator vs closed forms.
+//!
+//! Datacenter-scale structured fabrics (algebraic resolvers, 1k–64k
+//! GPUs; see DESIGN.md §Topologies & routing):
+//!
+//! * [`fat_tree`] — multi-rail three-tier fat-tree (leaf / pod spine /
+//!   core), one pseudo-node per GPU.
+//! * [`rail_optimized`] — NVSwitch nodes whose GPU *i* HCAs all uplink
+//!   to rail switch *i* (NCCL-style rail alignment).
+//! * [`nvswitch`] — NVSwitch full-mesh nodes behind a single IB core.
+//! * [`dragonfly`] — router groups in a local full mesh with one
+//!   gateway-attached global link per group pair.
+//!
+//! All constructors validate their parameters and return a typed
+//! [`Error::Usage`] instead of building degenerate clusters.
 
 use super::cluster::{Cluster, NodeMeta};
 use super::device::{DeviceId, DeviceKind, NodeId};
-use super::link::LinkKind;
+use super::link::{LinkId, LinkKind};
+use super::resolve::{DragonflyGeo, FatTreeGeo, NvSwitchGeo, RailGeo, Resolver};
+use crate::error::{Error, Result};
+
+/// Largest GPU count any structured generator will build — a guard
+/// against typo'd parameters allocating the machine away, not a
+/// simulator limit.
+pub const MAX_FABRIC_GPUS: usize = 1 << 20;
+
+fn require(ok: bool, msg: impl FnOnce() -> String) -> Result<()> {
+    if ok {
+        Ok(())
+    } else {
+        Err(Error::Usage(msg()))
+    }
+}
 
 /// Build a KESCH-like cluster.
 ///
@@ -20,8 +51,11 @@ use super::link::LinkKind;
 ///
 /// `gpus_per_node` ≤ 16 selects a prefix of that enumeration (the paper's
 /// 2/4/8-GPU intranode configurations).
-pub fn kesch(nodes: usize, gpus_per_node: usize) -> Cluster {
-    assert!(gpus_per_node >= 1 && gpus_per_node <= 16);
+pub fn kesch(nodes: usize, gpus_per_node: usize) -> Result<Cluster> {
+    require(nodes >= 1, || "kesch: nodes must be >= 1".into())?;
+    require((1..=16).contains(&gpus_per_node), || {
+        format!("kesch: gpus_per_node must be in 1..=16 (got {gpus_per_node})")
+    })?;
     let mut c = Cluster::new(format!("kesch-{nodes}x{gpus_per_node}"));
     let ib_switch = c.add_device(
         DeviceKind::IbSwitch,
@@ -74,7 +108,7 @@ pub fn kesch(nodes: usize, gpus_per_node: usize) -> Cluster {
             hcas,
         });
     }
-    c
+    Ok(c)
 }
 
 /// Build a DGX-1 (`v100 = false`) or DGX-1V (`v100 = true`) cluster.
@@ -82,8 +116,11 @@ pub fn kesch(nodes: usize, gpus_per_node: usize) -> Cluster {
 /// 8 GPUs per node in an NVLink hybrid cube-mesh (each GPU has 4 NVLink
 /// bricks; the mesh connects GPU i to i^1, i^2, i^4 and the ring partner),
 /// plus the PCIe tree (2 sockets × 2 PLX × 2 GPUs) and 4 IB EDR rails.
-pub fn dgx1(nodes: usize, gpus_per_node: usize, v100: bool) -> Cluster {
-    assert!(gpus_per_node >= 1 && gpus_per_node <= 8);
+pub fn dgx1(nodes: usize, gpus_per_node: usize, v100: bool) -> Result<Cluster> {
+    require(nodes >= 1, || "dgx1: nodes must be >= 1".into())?;
+    require((1..=8).contains(&gpus_per_node), || {
+        format!("dgx1: gpus_per_node must be in 1..=8 (got {gpus_per_node})")
+    })?;
     let nv = if v100 {
         LinkKind::NvLink2
     } else {
@@ -167,7 +204,7 @@ pub fn dgx1(nodes: usize, gpus_per_node: usize, v100: bool) -> Cluster {
             hcas,
         });
     }
-    c
+    Ok(c)
 }
 
 /// Build the idealised flat fabric: `n` GPUs, each with a dedicated
@@ -175,8 +212,8 @@ pub fn dgx1(nodes: usize, gpus_per_node: usize, v100: bool) -> Cluster {
 /// latency. A transfer between any pair costs exactly `bytes / B` plus
 /// whatever protocol overhead the comm layer adds — i.e. the `t_s + M/B`
 /// of the paper's Eqs. (1)–(5).
-pub fn flat(n: usize) -> Cluster {
-    assert!(n >= 1);
+pub fn flat(n: usize) -> Result<Cluster> {
+    require(n >= 1, || "flat: gpu count must be >= 1".into())?;
     let mut c = Cluster::new(format!("flat-{n}"));
     let xbar = c.add_device(DeviceKind::IbSwitch, NodeId(usize::MAX), 0, "xbar".into());
     // one pseudo-node per GPU so every pair is "internode"
@@ -193,25 +230,335 @@ pub fn flat(n: usize) -> Cluster {
             hcas: vec![],
         });
     }
-    c
+    Ok(c)
+}
+
+/// Build a multi-rail three-tier fat-tree.
+///
+/// Per rail, each GPU attaches to the leaf switch of its (pod, leaf)
+/// slot; leaves uplink to every pod spine; pod spine `s` of rail `r`
+/// uplinks to core `(r, s)`. GPUs are one-per-pseudo-node (NIC-attached,
+/// like [`flat`]), enumerated pod-major then leaf-major — also the rank
+/// order. Total GPUs = `pods * leaves_per_pod * gpus_per_leaf`.
+///
+/// Routes are algebraic: 2 hops inside a leaf, 4 inside a pod, 6 across
+/// pods, with rail and spine chosen by (src + dst) arithmetic.
+pub fn fat_tree(
+    pods: usize,
+    leaves_per_pod: usize,
+    gpus_per_leaf: usize,
+    rails: usize,
+    spines_per_pod: usize,
+) -> Result<Cluster> {
+    require(pods >= 1, || "fat-tree: pods must be >= 1".into())?;
+    require(leaves_per_pod >= 1, || {
+        "fat-tree: leaves_per_pod must be >= 1".into()
+    })?;
+    require(gpus_per_leaf >= 1, || {
+        "fat-tree: gpus_per_leaf must be >= 1".into()
+    })?;
+    require(rails >= 1, || "fat-tree: rails must be >= 1".into())?;
+    require(spines_per_pod >= 1, || {
+        "fat-tree: spines_per_pod must be >= 1".into()
+    })?;
+    let n_gpus = pods * leaves_per_pod * gpus_per_leaf;
+    require(n_gpus <= MAX_FABRIC_GPUS, || {
+        format!("fat-tree: {n_gpus} GPUs exceeds the {MAX_FABRIC_GPUS} cap")
+    })?;
+    let mut c = Cluster::new(format!(
+        "fat-tree-{pods}x{leaves_per_pod}x{gpus_per_leaf}r{rails}"
+    ));
+    let mut geo = FatTreeGeo::sized(pods, leaves_per_pod, gpus_per_leaf, rails, spines_per_pod);
+    let fabric = NodeId(usize::MAX);
+
+    // core tier: one core switch per (rail, spine)
+    let mut cores = vec![DeviceId(usize::MAX); rails * spines_per_pod];
+    for r in 0..rails {
+        for s in 0..spines_per_pod {
+            cores[r * spines_per_pod + s] =
+                c.add_device(DeviceKind::IbSwitch, fabric, 0, format!("core.r{r}.s{s}"));
+        }
+    }
+    // pod spines and leaves
+    let mut leaves = vec![DeviceId(usize::MAX); pods * leaves_per_pod * rails];
+    let mut spines = vec![DeviceId(usize::MAX); pods * rails * spines_per_pod];
+    for p in 0..pods {
+        for r in 0..rails {
+            for s in 0..spines_per_pod {
+                let sp =
+                    c.add_device(DeviceKind::IbSwitch, fabric, 0, format!("pod{p}.spine.r{r}.{s}"));
+                let idx = geo.spine_idx(p, r, s);
+                spines[idx] = sp;
+                let (up, down) = c.connect(sp, cores[r * spines_per_pod + s], LinkKind::IbEdr);
+                geo.spine_up[idx] = up;
+                geo.spine_down[idx] = down;
+            }
+        }
+        for l in 0..leaves_per_pod {
+            for r in 0..rails {
+                let leaf =
+                    c.add_device(DeviceKind::IbSwitch, fabric, 0, format!("pod{p}.leaf{l}.r{r}"));
+                leaves[(p * leaves_per_pod + l) * rails + r] = leaf;
+                for s in 0..spines_per_pod {
+                    let (up, down) = c.connect(leaf, spines[geo.spine_idx(p, r, s)], LinkKind::IbEdr);
+                    let idx = geo.leaf_idx(p, l, r, s);
+                    geo.leaf_up[idx] = up;
+                    geo.leaf_down[idx] = down;
+                }
+            }
+        }
+    }
+    // GPUs, rank-major over (pod, leaf, slot); one pseudo-node per GPU
+    for rank in 0..n_gpus {
+        let p = rank / (leaves_per_pod * gpus_per_leaf);
+        let l = (rank / gpus_per_leaf) % leaves_per_pod;
+        let node = NodeId(rank);
+        let gpu = c.add_device(DeviceKind::Gpu, node, 0, format!("g{rank}"));
+        let host = c.add_device(DeviceKind::Host, node, 0, format!("h{rank}"));
+        c.connect(gpu, host, LinkKind::HostBus);
+        for r in 0..rails {
+            let leaf = leaves[(p * leaves_per_pod + l) * rails + r];
+            let (up, down) = c.connect(gpu, leaf, LinkKind::PcieG3x16);
+            geo.gpu_up[rank * rails + r] = up;
+            geo.gpu_down[rank * rails + r] = down;
+        }
+        c.push_node_meta(NodeMeta {
+            id: node,
+            gpus: vec![gpu],
+            hosts: vec![host],
+            hcas: vec![],
+        });
+    }
+    geo.coord_of = vec![u32::MAX; c.n_devices()];
+    for (i, &g) in c.gpu_ranks().iter().enumerate() {
+        geo.coord_of[g.0] = i as u32;
+    }
+    c.set_resolver(Resolver::FatTree(geo));
+    Ok(c)
+}
+
+/// Build a rail-optimized pod: `nodes` NVSwitch nodes of `gpus_per_node`
+/// GPUs; GPU `i` of every node uplinks (via its own HCA) to rail switch
+/// `i`, so same-index GPUs are 4 switch-direct hops apart and
+/// cross-index traffic first hops to the same-node peer over NVLink —
+/// the rail-aligned traffic pattern NCCL's ring/tree orderings assume.
+pub fn rail_optimized(nodes: usize, gpus_per_node: usize) -> Result<Cluster> {
+    require(nodes >= 1, || "rail-optimized: nodes must be >= 1".into())?;
+    require((1..=64).contains(&gpus_per_node), || {
+        format!("rail-optimized: gpus_per_node must be in 1..=64 (got {gpus_per_node})")
+    })?;
+    require(nodes * gpus_per_node <= MAX_FABRIC_GPUS, || {
+        format!(
+            "rail-optimized: {} GPUs exceeds the {MAX_FABRIC_GPUS} cap",
+            nodes * gpus_per_node
+        )
+    })?;
+    let mut c = Cluster::new(format!("rail-{nodes}x{gpus_per_node}"));
+    let mut geo = RailGeo::sized(nodes, gpus_per_node);
+    // one rail switch per local GPU index
+    let mut rails = vec![DeviceId(usize::MAX); gpus_per_node];
+    for (i, rail) in rails.iter_mut().enumerate() {
+        *rail = c.add_device(DeviceKind::IbSwitch, NodeId(usize::MAX), 0, format!("rail{i}"));
+    }
+    for n in 0..nodes {
+        let node = NodeId(n);
+        let nvsw = c.add_device(DeviceKind::NvSwitch, node, 0, format!("n{n}.nvsw"));
+        let host = c.add_device(DeviceKind::Host, node, 0, format!("n{n}.host"));
+        c.connect(host, nvsw, LinkKind::HostBus);
+        let mut gpus = Vec::with_capacity(gpus_per_node);
+        let mut hcas = Vec::with_capacity(gpus_per_node);
+        for i in 0..gpus_per_node {
+            let rank = n * gpus_per_node + i;
+            let gpu = c.add_device(DeviceKind::Gpu, node, 0, format!("n{n}.g{i}"));
+            let (nu, nd) = c.connect(gpu, nvsw, LinkKind::NvLink2);
+            geo.nv_up[rank] = nu;
+            geo.nv_down[rank] = nd;
+            let hca = c.add_device(DeviceKind::IbHca, node, 0, format!("n{n}.hca{i}"));
+            let (hu, hd) = c.connect(gpu, hca, LinkKind::PcieG3x16);
+            geo.hca_up[rank] = hu;
+            geo.hca_down[rank] = hd;
+            let (ru, rd) = c.connect(hca, rails[i], LinkKind::IbEdr);
+            geo.rail_up[rank] = ru;
+            geo.rail_down[rank] = rd;
+            gpus.push(gpu);
+            hcas.push(hca);
+        }
+        c.push_node_meta(NodeMeta {
+            id: node,
+            gpus,
+            hosts: vec![host],
+            hcas,
+        });
+    }
+    geo.coord_of = vec![u32::MAX; c.n_devices()];
+    for (i, &g) in c.gpu_ranks().iter().enumerate() {
+        geo.coord_of[g.0] = i as u32;
+    }
+    c.set_resolver(Resolver::RailOptimized(geo));
+    Ok(c)
+}
+
+/// Build NVSwitch full-mesh nodes behind a single IB core switch: every
+/// GPU reaches node siblings in 2 NVLink hops (through the NVSwitch) and
+/// remote GPUs in 4 hops (own HCA -> core -> remote HCA).
+pub fn nvswitch(nodes: usize, gpus_per_node: usize) -> Result<Cluster> {
+    require(nodes >= 1, || "nvswitch: nodes must be >= 1".into())?;
+    require((1..=64).contains(&gpus_per_node), || {
+        format!("nvswitch: gpus_per_node must be in 1..=64 (got {gpus_per_node})")
+    })?;
+    require(nodes * gpus_per_node <= MAX_FABRIC_GPUS, || {
+        format!(
+            "nvswitch: {} GPUs exceeds the {MAX_FABRIC_GPUS} cap",
+            nodes * gpus_per_node
+        )
+    })?;
+    let mut c = Cluster::new(format!("nvswitch-{nodes}x{gpus_per_node}"));
+    let mut geo = NvSwitchGeo::sized(nodes, gpus_per_node);
+    let core = c.add_device(DeviceKind::IbSwitch, NodeId(usize::MAX), 0, "core".into());
+    for n in 0..nodes {
+        let node = NodeId(n);
+        let nvsw = c.add_device(DeviceKind::NvSwitch, node, 0, format!("n{n}.nvsw"));
+        let host = c.add_device(DeviceKind::Host, node, 0, format!("n{n}.host"));
+        c.connect(host, nvsw, LinkKind::HostBus);
+        let mut gpus = Vec::with_capacity(gpus_per_node);
+        let mut hcas = Vec::with_capacity(gpus_per_node);
+        for i in 0..gpus_per_node {
+            let rank = n * gpus_per_node + i;
+            let gpu = c.add_device(DeviceKind::Gpu, node, 0, format!("n{n}.g{i}"));
+            let (nu, nd) = c.connect(gpu, nvsw, LinkKind::NvLink2);
+            geo.nv_up[rank] = nu;
+            geo.nv_down[rank] = nd;
+            let hca = c.add_device(DeviceKind::IbHca, node, 0, format!("n{n}.hca{i}"));
+            let (hu, hd) = c.connect(gpu, hca, LinkKind::PcieG3x16);
+            geo.hca_up[rank] = hu;
+            geo.hca_down[rank] = hd;
+            let (cu, cd) = c.connect(hca, core, LinkKind::IbEdr);
+            geo.core_up[rank] = cu;
+            geo.core_down[rank] = cd;
+            gpus.push(gpu);
+            hcas.push(hca);
+        }
+        c.push_node_meta(NodeMeta {
+            id: node,
+            gpus,
+            hosts: vec![host],
+            hcas,
+        });
+    }
+    geo.coord_of = vec![u32::MAX; c.n_devices()];
+    for (i, &g) in c.gpu_ranks().iter().enumerate() {
+        geo.coord_of[g.0] = i as u32;
+    }
+    c.set_resolver(Resolver::NvSwitch(geo));
+    Ok(c)
+}
+
+/// Build a dragonfly: `groups` groups of `routers_per_group` routers in
+/// a local full mesh (EDR), `gpus_per_router` NIC-attached GPUs per
+/// router, and one global FDR link per group pair attached at each
+/// group's gateway (router 0). Gateway aggregation keeps minimal
+/// routing provably min-hop, so BFS stays an exact golden reference for
+/// the algebraic resolver.
+pub fn dragonfly(
+    groups: usize,
+    routers_per_group: usize,
+    gpus_per_router: usize,
+) -> Result<Cluster> {
+    require(groups >= 1, || "dragonfly: groups must be >= 1".into())?;
+    require(routers_per_group >= 1, || {
+        "dragonfly: routers_per_group must be >= 1".into()
+    })?;
+    require(gpus_per_router >= 1, || {
+        "dragonfly: gpus_per_router must be >= 1".into()
+    })?;
+    let n_gpus = groups * routers_per_group * gpus_per_router;
+    require(n_gpus <= MAX_FABRIC_GPUS, || {
+        format!("dragonfly: {n_gpus} GPUs exceeds the {MAX_FABRIC_GPUS} cap")
+    })?;
+    let mut c = Cluster::new(format!(
+        "dragonfly-{groups}x{routers_per_group}x{gpus_per_router}"
+    ));
+    let mut geo = DragonflyGeo::sized(groups, routers_per_group, gpus_per_router);
+    let fabric = NodeId(usize::MAX);
+    let a = routers_per_group;
+    let mut routers = vec![DeviceId(usize::MAX); groups * a];
+    for g in 0..groups {
+        for r in 0..a {
+            routers[g * a + r] = c.add_device(DeviceKind::IbSwitch, fabric, 0, format!("d{g}.r{r}"));
+        }
+    }
+    // intra-group full mesh
+    for g in 0..groups {
+        for i in 0..a {
+            for j in (i + 1)..a {
+                let (f, b) = c.connect(routers[g * a + i], routers[g * a + j], LinkKind::IbEdr);
+                geo.local[geo.local_idx(g, i, j)] = f;
+                geo.local[geo.local_idx(g, j, i)] = b;
+            }
+        }
+    }
+    // one global link per group pair, gateway (router 0) to gateway
+    for x in 0..groups {
+        for y in (x + 1)..groups {
+            let (f, b) = c.connect(routers[x * a], routers[y * a], LinkKind::IbFdr);
+            geo.global[x * groups + y] = f;
+            geo.global[y * groups + x] = b;
+        }
+    }
+    // GPUs, rank-major over (group, router, slot); one pseudo-node each
+    for rank in 0..n_gpus {
+        let g = rank / (a * gpus_per_router);
+        let r = (rank / gpus_per_router) % a;
+        let node = NodeId(rank);
+        let gpu = c.add_device(DeviceKind::Gpu, node, 0, format!("g{rank}"));
+        let host = c.add_device(DeviceKind::Host, node, 0, format!("h{rank}"));
+        c.connect(gpu, host, LinkKind::HostBus);
+        let (up, down) = c.connect(gpu, routers[g * a + r], LinkKind::PcieG3x16);
+        geo.gpu_up[rank] = up;
+        geo.gpu_down[rank] = down;
+        c.push_node_meta(NodeMeta {
+            id: node,
+            gpus: vec![gpu],
+            hosts: vec![host],
+            hcas: vec![],
+        });
+    }
+    geo.coord_of = vec![u32::MAX; c.n_devices()];
+    for (i, &g) in c.gpu_ranks().iter().enumerate() {
+        geo.coord_of[g.0] = i as u32;
+    }
+    c.set_resolver(Resolver::Dragonfly(geo));
+    Ok(c)
+}
+
+/// Sanity probe used by generator tests: every recorded port table
+/// entry must have been filled in (no `LinkId(usize::MAX)` left).
+#[cfg(test)]
+fn assert_ports_filled(table: &[LinkId], what: &str) {
+    assert!(
+        table.iter().all(|l| l.0 != usize::MAX),
+        "{what}: unfilled port table entry"
+    );
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::topology::resolve::TopologyKind;
 
     #[test]
     fn kesch_shape() {
-        let c = kesch(12, 16);
+        let c = kesch(12, 16).unwrap();
         assert_eq!(c.n_nodes(), 12);
         assert_eq!(c.n_gpus(), 192);
         // per node: 2 hosts + 2 roots + 2 hcas + 4 plx + 16 gpus = 26
         assert_eq!(c.n_devices(), 12 * 26 + 1);
+        assert_eq!(c.topology_kind(), TopologyKind::Generic);
     }
 
     #[test]
     fn kesch_gpu_prefix() {
-        let c = kesch(1, 2);
+        let c = kesch(1, 2).unwrap();
         assert_eq!(c.n_gpus(), 2);
         // first two GPUs share a PLX -> peer access
         let (a, b) = (c.rank_device(0), c.rank_device(1));
@@ -220,7 +567,7 @@ mod tests {
 
     #[test]
     fn kesch_cross_socket_no_peer_access() {
-        let c = kesch(1, 16);
+        let c = kesch(1, 16).unwrap();
         let a = c.rank_device(0); // socket 0
         let b = c.rank_device(8); // socket 1
         assert!(!c.same_socket(a, b));
@@ -233,7 +580,7 @@ mod tests {
 
     #[test]
     fn kesch_internode_route_uses_ib() {
-        let c = kesch(2, 16);
+        let c = kesch(2, 16).unwrap();
         let a = c.rank_device(0);
         let b = c.rank_device(16);
         assert!(!c.same_node(a, b));
@@ -249,7 +596,7 @@ mod tests {
 
     #[test]
     fn kesch_multirail_hca_per_socket() {
-        let c = kesch(1, 16);
+        let c = kesch(1, 16).unwrap();
         let g0 = c.rank_device(0);
         let g8 = c.rank_device(8);
         let h0 = c.hca_for(g0).unwrap();
@@ -259,7 +606,7 @@ mod tests {
 
     #[test]
     fn dgx1_nvlink_peer() {
-        let c = dgx1(1, 8, false);
+        let c = dgx1(1, 8, false).unwrap();
         assert_eq!(c.n_gpus(), 8);
         let r = c.route_info(c.rank_device(0), c.rank_device(1)).unwrap();
         assert_eq!(r.n_hops(), 1, "NVLink direct");
@@ -268,14 +615,14 @@ mod tests {
 
     #[test]
     fn dgx1v_uses_nvlink2() {
-        let c = dgx1(1, 8, true);
+        let c = dgx1(1, 8, true).unwrap();
         let r = c.route_info(c.rank_device(0), c.rank_device(4)).unwrap();
         assert_eq!(r.bottleneck_bw, LinkKind::NvLink2.default_bandwidth());
     }
 
     #[test]
     fn flat_uniform() {
-        let c = flat(8);
+        let c = flat(8).unwrap();
         assert_eq!(c.n_gpus(), 8);
         for i in 1..8 {
             let r = c.route_info(c.rank_device(0), c.rank_device(i)).unwrap();
@@ -287,8 +634,136 @@ mod tests {
 
     #[test]
     fn rank_order_is_node_major() {
-        let c = kesch(2, 4);
+        let c = kesch(2, 4).unwrap();
         assert_eq!(c.device(c.rank_device(0)).node, NodeId(0));
         assert_eq!(c.device(c.rank_device(4)).node, NodeId(1));
+    }
+
+    #[test]
+    fn degenerate_params_rejected_with_usage_error() {
+        for err in [
+            kesch(0, 4).unwrap_err(),
+            kesch(1, 0).unwrap_err(),
+            kesch(1, 17).unwrap_err(),
+            dgx1(0, 8, false).unwrap_err(),
+            dgx1(1, 0, true).unwrap_err(),
+            dgx1(1, 9, false).unwrap_err(),
+            flat(0).unwrap_err(),
+            fat_tree(0, 1, 1, 1, 1).unwrap_err(),
+            fat_tree(1, 0, 1, 1, 1).unwrap_err(),
+            fat_tree(1, 1, 0, 1, 1).unwrap_err(),
+            fat_tree(1, 1, 1, 0, 1).unwrap_err(),
+            fat_tree(1, 1, 1, 1, 0).unwrap_err(),
+            rail_optimized(0, 4).unwrap_err(),
+            rail_optimized(2, 0).unwrap_err(),
+            rail_optimized(2, 65).unwrap_err(),
+            nvswitch(0, 4).unwrap_err(),
+            nvswitch(2, 0).unwrap_err(),
+            dragonfly(0, 2, 2).unwrap_err(),
+            dragonfly(2, 0, 2).unwrap_err(),
+            dragonfly(2, 2, 0).unwrap_err(),
+        ] {
+            assert!(
+                matches!(err, Error::Usage(_)),
+                "expected Error::Usage, got {err:?}"
+            );
+            assert!(err.to_string().starts_with("usage error:"), "{err}");
+        }
+    }
+
+    #[test]
+    fn fat_tree_shape_and_hop_counts() {
+        let c = fat_tree(2, 2, 2, 2, 2).unwrap();
+        assert_eq!(c.n_gpus(), 8);
+        assert_eq!(c.topology_kind(), TopologyKind::FatTree);
+        // ranks: pod = r/4, leaf = (r/2)%2
+        let same_leaf = c.route_info(c.rank_device(0), c.rank_device(1)).unwrap();
+        assert_eq!(same_leaf.n_hops(), 2);
+        let same_pod = c.route_info(c.rank_device(0), c.rank_device(2)).unwrap();
+        assert_eq!(same_pod.n_hops(), 4);
+        let cross_pod = c.route_info(c.rank_device(0), c.rank_device(7)).unwrap();
+        assert_eq!(cross_pod.n_hops(), 6);
+        // resolver is consulted, not BFS: route count tracks routed pairs
+        assert_eq!(c.routes().n_routes(), 3);
+    }
+
+    #[test]
+    fn fat_tree_port_tables_filled() {
+        let c = fat_tree(2, 3, 2, 2, 2).unwrap();
+        let Resolver::FatTree(geo) = c.resolver() else {
+            panic!("fat_tree must install the FatTree resolver");
+        };
+        assert_ports_filled(&geo.gpu_up, "gpu_up");
+        assert_ports_filled(&geo.gpu_down, "gpu_down");
+        assert_ports_filled(&geo.leaf_up, "leaf_up");
+        assert_ports_filled(&geo.leaf_down, "leaf_down");
+        assert_ports_filled(&geo.spine_up, "spine_up");
+        assert_ports_filled(&geo.spine_down, "spine_down");
+    }
+
+    #[test]
+    fn rail_optimized_routes() {
+        let c = rail_optimized(2, 4).unwrap();
+        assert_eq!(c.n_gpus(), 8);
+        assert_eq!(c.topology_kind(), TopologyKind::RailOptimized);
+        // same node: 2 NVLink hops through the NVSwitch -> peer access
+        let same = c.route_info(c.rank_device(0), c.rank_device(1)).unwrap();
+        assert_eq!(same.n_hops(), 2);
+        assert_eq!(same.bottleneck_bw, LinkKind::NvLink2.default_bandwidth());
+        assert!(c.peer_access(c.rank_device(0), c.rank_device(1)));
+        // rail-aligned cross-node: 4 hops, no NVLink
+        let aligned = c.route_info(c.rank_device(1), c.rank_device(5)).unwrap();
+        assert_eq!(aligned.n_hops(), 4);
+        // cross-rail cross-node: NVLink to the peer, then the rail
+        let cross = c.route_info(c.rank_device(0), c.rank_device(5)).unwrap();
+        assert_eq!(cross.n_hops(), 6);
+    }
+
+    #[test]
+    fn nvswitch_routes() {
+        let c = nvswitch(2, 4).unwrap();
+        assert_eq!(c.n_gpus(), 8);
+        assert_eq!(c.topology_kind(), TopologyKind::NvSwitch);
+        let same = c.route_info(c.rank_device(0), c.rank_device(3)).unwrap();
+        assert_eq!(same.n_hops(), 2);
+        assert_eq!(same.bottleneck_bw, LinkKind::NvLink2.default_bandwidth());
+        let cross = c.route_info(c.rank_device(0), c.rank_device(4)).unwrap();
+        assert_eq!(cross.n_hops(), 4);
+        assert_eq!(cross.bottleneck_bw, LinkKind::IbEdr.default_bandwidth());
+    }
+
+    #[test]
+    fn dragonfly_routes() {
+        let c = dragonfly(3, 2, 2).unwrap();
+        assert_eq!(c.n_gpus(), 12);
+        assert_eq!(c.topology_kind(), TopologyKind::Dragonfly);
+        // ranks: group = r/4, router = (r/2)%2
+        let same_router = c.route_info(c.rank_device(0), c.rank_device(1)).unwrap();
+        assert_eq!(same_router.n_hops(), 2);
+        let same_group = c.route_info(c.rank_device(0), c.rank_device(2)).unwrap();
+        assert_eq!(same_group.n_hops(), 3);
+        // gateway to gateway, no local detour
+        let gw = c.route_info(c.rank_device(0), c.rank_device(4)).unwrap();
+        assert_eq!(gw.n_hops(), 3);
+        assert_eq!(gw.bottleneck_bw, LinkKind::IbFdr.default_bandwidth());
+        // both endpoints off-gateway: two local detours
+        let far = c.route_info(c.rank_device(2), c.rank_device(6)).unwrap();
+        assert_eq!(far.n_hops(), 5);
+    }
+
+    #[test]
+    fn structured_fabrics_have_staging_hosts() {
+        for c in [
+            fat_tree(2, 2, 2, 2, 1).unwrap(),
+            rail_optimized(2, 2).unwrap(),
+            nvswitch(2, 2).unwrap(),
+            dragonfly(2, 2, 1).unwrap(),
+        ] {
+            let g = c.rank_device(0);
+            let h = c.staging_host(g).unwrap();
+            assert_eq!(c.device(h).kind, DeviceKind::Host);
+            // staging route exists (BFS fallback handles non-GPU pairs)
+            assert!(c.route(g, h).is_ok());
+        }
     }
 }

@@ -1,0 +1,422 @@
+//! Algebraic route resolvers for structured fabrics.
+//!
+//! The small presets (kesch/dgx1/flat) resolve routes by BFS, interned
+//! once per (src, dst) pair. That is O(V+E) per cold pair and O(pairs)
+//! table growth — fine at 128 GPUs, hopeless at 64k. Structured fabrics
+//! (fat-tree, rail-optimized, NVSwitch, dragonfly) are regular enough
+//! that the shortest route between two GPUs follows from coordinate
+//! arithmetic alone: pod/rail/switch indices select the exact uplink and
+//! downlink ports in O(path length), no graph search.
+//!
+//! Each generator in [`super::presets`] records, while it wires the
+//! graph, the [`LinkId`] port tables its resolver needs, and installs the
+//! resolver on the returned [`Cluster`](super::Cluster). `Cluster::route`
+//! consults the resolver first and falls back to BFS whenever the
+//! resolver declines (non-GPU endpoint, arbitrary mutated graph) or the
+//! algebraic route would cross a link removed by `kill_link` — so fault
+//! recovery keeps working on structured fabrics, just through the slower
+//! golden path. BFS also remains the *reference*: parity tests assert
+//! algebraic routes match BFS hop counts and aggregates on small
+//! instances of every fabric.
+
+use super::device::DeviceId;
+use super::link::LinkId;
+
+/// Which structured family a cluster belongs to. `Generic` covers the
+/// BFS-resolved presets and any hand-built graph. Plan-template caches
+/// key on this: two clusters of different families never share
+/// templates even if rank counts agree.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum TopologyKind {
+    #[default]
+    Generic,
+    FatTree,
+    RailOptimized,
+    NvSwitch,
+    Dragonfly,
+}
+
+impl TopologyKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TopologyKind::Generic => "generic",
+            TopologyKind::FatTree => "fat-tree",
+            TopologyKind::RailOptimized => "rail-optimized",
+            TopologyKind::NvSwitch => "nvswitch",
+            TopologyKind::Dragonfly => "dragonfly",
+        }
+    }
+}
+
+/// Route resolution strategy for a cluster. A plain enum (not a trait
+/// object) so `Cluster` stays `Clone` and the engine's hot path stays
+/// monomorphic.
+#[derive(Debug, Clone, Default)]
+pub enum Resolver {
+    /// Graph search through the interning table — the golden reference
+    /// and the only strategy valid for arbitrary graphs.
+    #[default]
+    Bfs,
+    FatTree(FatTreeGeo),
+    RailOptimized(RailGeo),
+    NvSwitch(NvSwitchGeo),
+    Dragonfly(DragonflyGeo),
+}
+
+impl Resolver {
+    pub fn kind(&self) -> TopologyKind {
+        match self {
+            Resolver::Bfs => TopologyKind::Generic,
+            Resolver::FatTree(_) => TopologyKind::FatTree,
+            Resolver::RailOptimized(_) => TopologyKind::RailOptimized,
+            Resolver::NvSwitch(_) => TopologyKind::NvSwitch,
+            Resolver::Dragonfly(_) => TopologyKind::Dragonfly,
+        }
+    }
+
+    pub fn is_algebraic(&self) -> bool {
+        !matches!(self, Resolver::Bfs)
+    }
+
+    /// Shortest route from `src` to `dst` by coordinate arithmetic.
+    /// `None` means the resolver does not cover this pair (either
+    /// endpoint is not a fabric GPU) and the caller must BFS.
+    pub fn resolve(&self, src: DeviceId, dst: DeviceId) -> Option<Vec<LinkId>> {
+        match self {
+            Resolver::Bfs => None,
+            Resolver::FatTree(g) => g.resolve(src, dst),
+            Resolver::RailOptimized(g) => g.resolve(src, dst),
+            Resolver::NvSwitch(g) => g.resolve(src, dst),
+            Resolver::Dragonfly(g) => g.resolve(src, dst),
+        }
+    }
+}
+
+/// Map device ids to fabric coordinates: `coord_of[dev] == u32::MAX`
+/// for every non-GPU device. Coordinates are generation-time GPU
+/// indices, stable across `retain_ranks` renumbering (they index port
+/// tables, not the live rank order).
+fn coord(coord_of: &[u32], dev: DeviceId) -> Option<usize> {
+    match coord_of.get(dev.0) {
+        Some(&c) if c != u32::MAX => Some(c as usize),
+        _ => None,
+    }
+}
+
+/// Multi-rail fat-tree: per rail, each GPU hangs off a leaf switch;
+/// leaves uplink to every pod spine of their pod; spine `s` of every pod
+/// uplinks to core `s` of its rail. Routes are 2 hops (same leaf),
+/// 4 hops (same pod) or 6 hops (cross pod); rail and spine are chosen
+/// by (src + dst) arithmetic so distinct pairs spread over the fabric
+/// deterministically.
+#[derive(Debug, Clone)]
+pub struct FatTreeGeo {
+    pub pods: usize,
+    pub leaves_per_pod: usize,
+    pub gpus_per_leaf: usize,
+    pub rails: usize,
+    pub spines_per_pod: usize,
+    pub(super) coord_of: Vec<u32>,
+    /// gpu -> leaf, per (gpu coord, rail).
+    pub(super) gpu_up: Vec<LinkId>,
+    /// leaf -> gpu, per (gpu coord, rail).
+    pub(super) gpu_down: Vec<LinkId>,
+    /// leaf -> spine, per (pod, leaf, rail, spine).
+    pub(super) leaf_up: Vec<LinkId>,
+    /// spine -> leaf, per (pod, leaf, rail, spine).
+    pub(super) leaf_down: Vec<LinkId>,
+    /// spine -> core, per (pod, rail, spine).
+    pub(super) spine_up: Vec<LinkId>,
+    /// core -> spine, per (pod, rail, spine).
+    pub(super) spine_down: Vec<LinkId>,
+}
+
+impl FatTreeGeo {
+    pub(super) fn sized(
+        pods: usize,
+        leaves_per_pod: usize,
+        gpus_per_leaf: usize,
+        rails: usize,
+        spines_per_pod: usize,
+    ) -> FatTreeGeo {
+        let n_gpus = pods * leaves_per_pod * gpus_per_leaf;
+        let none = LinkId(usize::MAX);
+        FatTreeGeo {
+            pods,
+            leaves_per_pod,
+            gpus_per_leaf,
+            rails,
+            spines_per_pod,
+            coord_of: Vec::new(),
+            gpu_up: vec![none; n_gpus * rails],
+            gpu_down: vec![none; n_gpus * rails],
+            leaf_up: vec![none; pods * leaves_per_pod * rails * spines_per_pod],
+            leaf_down: vec![none; pods * leaves_per_pod * rails * spines_per_pod],
+            spine_up: vec![none; pods * rails * spines_per_pod],
+            spine_down: vec![none; pods * rails * spines_per_pod],
+        }
+    }
+
+    pub(super) fn leaf_idx(&self, pod: usize, leaf: usize, rail: usize, spine: usize) -> usize {
+        ((pod * self.leaves_per_pod + leaf) * self.rails + rail) * self.spines_per_pod + spine
+    }
+
+    pub(super) fn spine_idx(&self, pod: usize, rail: usize, spine: usize) -> usize {
+        (pod * self.rails + rail) * self.spines_per_pod + spine
+    }
+
+    fn resolve(&self, src: DeviceId, dst: DeviceId) -> Option<Vec<LinkId>> {
+        let s = coord(&self.coord_of, src)?;
+        let d = coord(&self.coord_of, dst)?;
+        if s == d {
+            return None; // trivial routes are the cluster's business
+        }
+        let gpl = self.gpus_per_leaf;
+        let lpp = self.leaves_per_pod;
+        let (sl, dl) = (s / gpl, d / gpl); // global leaf index
+        let (sp, dp) = (sl / lpp, dl / lpp); // pod index
+        let rail = (s + d) % self.rails;
+        let mut hops = Vec::with_capacity(6);
+        hops.push(self.gpu_up[s * self.rails + rail]);
+        if sl != dl {
+            let spine = (sl + dl) % self.spines_per_pod;
+            hops.push(self.leaf_up[self.leaf_idx(sp, sl % lpp, rail, spine)]);
+            if sp != dp {
+                hops.push(self.spine_up[self.spine_idx(sp, rail, spine)]);
+                hops.push(self.spine_down[self.spine_idx(dp, rail, spine)]);
+            }
+            hops.push(self.leaf_down[self.leaf_idx(dp, dl % lpp, rail, spine)]);
+        }
+        hops.push(self.gpu_down[d * self.rails + rail]);
+        Some(hops)
+    }
+}
+
+/// Rail-optimized node pod: every node has an NVSwitch crossbar; each
+/// GPU's HCA uplinks to the rail switch of its *local index*, so
+/// same-index GPUs across nodes talk switch-direct and cross-index
+/// traffic first hops to the same-node peer over NVLink (the
+/// NCCL-style rail alignment).
+#[derive(Debug, Clone)]
+pub struct RailGeo {
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+    pub(super) coord_of: Vec<u32>,
+    /// gpu -> node NVSwitch, per gpu coord.
+    pub(super) nv_up: Vec<LinkId>,
+    /// node NVSwitch -> gpu.
+    pub(super) nv_down: Vec<LinkId>,
+    /// gpu -> its HCA.
+    pub(super) hca_up: Vec<LinkId>,
+    /// HCA -> gpu.
+    pub(super) hca_down: Vec<LinkId>,
+    /// HCA -> rail switch of the gpu's local index.
+    pub(super) rail_up: Vec<LinkId>,
+    /// rail switch -> HCA.
+    pub(super) rail_down: Vec<LinkId>,
+}
+
+impl RailGeo {
+    pub(super) fn sized(nodes: usize, gpus_per_node: usize) -> RailGeo {
+        let n = nodes * gpus_per_node;
+        let none = LinkId(usize::MAX);
+        RailGeo {
+            nodes,
+            gpus_per_node,
+            coord_of: Vec::new(),
+            nv_up: vec![none; n],
+            nv_down: vec![none; n],
+            hca_up: vec![none; n],
+            hca_down: vec![none; n],
+            rail_up: vec![none; n],
+            rail_down: vec![none; n],
+        }
+    }
+
+    fn resolve(&self, src: DeviceId, dst: DeviceId) -> Option<Vec<LinkId>> {
+        let s = coord(&self.coord_of, src)?;
+        let d = coord(&self.coord_of, dst)?;
+        if s == d {
+            return None;
+        }
+        let gpn = self.gpus_per_node;
+        let (sn, si) = (s / gpn, s % gpn);
+        let (dn, di) = (d / gpn, d % gpn);
+        if sn == dn {
+            return Some(vec![self.nv_up[s], self.nv_down[d]]);
+        }
+        if si == di {
+            // rail-aligned: HCA -> rail switch -> HCA
+            return Some(vec![
+                self.hca_up[s],
+                self.rail_up[s],
+                self.rail_down[d],
+                self.hca_down[d],
+            ]);
+        }
+        // cross-rail: hop to the same-node peer on the destination's rail
+        // over NVLink, then ride that rail across
+        let peer = sn * gpn + di;
+        Some(vec![
+            self.nv_up[s],
+            self.nv_down[peer],
+            self.hca_up[peer],
+            self.rail_up[peer],
+            self.rail_down[d],
+            self.hca_down[d],
+        ])
+    }
+}
+
+/// NVSwitch full-mesh nodes behind one IB core: every GPU is one
+/// NVLink hop from its node siblings (via the NVSwitch) and four hops
+/// from any remote GPU (HCA -> core -> HCA).
+#[derive(Debug, Clone)]
+pub struct NvSwitchGeo {
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+    pub(super) coord_of: Vec<u32>,
+    pub(super) nv_up: Vec<LinkId>,
+    pub(super) nv_down: Vec<LinkId>,
+    pub(super) hca_up: Vec<LinkId>,
+    pub(super) hca_down: Vec<LinkId>,
+    /// HCA -> the single IB core switch.
+    pub(super) core_up: Vec<LinkId>,
+    /// core switch -> HCA.
+    pub(super) core_down: Vec<LinkId>,
+}
+
+impl NvSwitchGeo {
+    pub(super) fn sized(nodes: usize, gpus_per_node: usize) -> NvSwitchGeo {
+        let n = nodes * gpus_per_node;
+        let none = LinkId(usize::MAX);
+        NvSwitchGeo {
+            nodes,
+            gpus_per_node,
+            coord_of: Vec::new(),
+            nv_up: vec![none; n],
+            nv_down: vec![none; n],
+            hca_up: vec![none; n],
+            hca_down: vec![none; n],
+            core_up: vec![none; n],
+            core_down: vec![none; n],
+        }
+    }
+
+    fn resolve(&self, src: DeviceId, dst: DeviceId) -> Option<Vec<LinkId>> {
+        let s = coord(&self.coord_of, src)?;
+        let d = coord(&self.coord_of, dst)?;
+        if s == d {
+            return None;
+        }
+        if s / self.gpus_per_node == d / self.gpus_per_node {
+            return Some(vec![self.nv_up[s], self.nv_down[d]]);
+        }
+        Some(vec![
+            self.hca_up[s],
+            self.core_up[s],
+            self.core_down[d],
+            self.hca_down[d],
+        ])
+    }
+}
+
+/// Dragonfly: groups of routers in a local full mesh; router 0 of each
+/// group is the gateway carrying one global link per peer group.
+/// Aggregating global ports on a gateway keeps minimal routing
+/// provably min-hop (any detour through a third group costs a second
+/// global hop), which is what lets BFS stay the exact golden reference.
+#[derive(Debug, Clone)]
+pub struct DragonflyGeo {
+    pub groups: usize,
+    pub routers_per_group: usize,
+    pub gpus_per_router: usize,
+    pub(super) coord_of: Vec<u32>,
+    /// gpu -> its router.
+    pub(super) gpu_up: Vec<LinkId>,
+    /// router -> gpu.
+    pub(super) gpu_down: Vec<LinkId>,
+    /// intra-group mesh, per (group, src router, dst router); the
+    /// diagonal holds `LinkId(usize::MAX)`.
+    pub(super) local: Vec<LinkId>,
+    /// gateway-to-gateway, per (src group, dst group); diagonal MAX.
+    pub(super) global: Vec<LinkId>,
+}
+
+impl DragonflyGeo {
+    pub(super) fn sized(groups: usize, routers_per_group: usize, gpus_per_router: usize) -> DragonflyGeo {
+        let n = groups * routers_per_group * gpus_per_router;
+        let none = LinkId(usize::MAX);
+        DragonflyGeo {
+            groups,
+            routers_per_group,
+            gpus_per_router,
+            coord_of: Vec::new(),
+            gpu_up: vec![none; n],
+            gpu_down: vec![none; n],
+            local: vec![none; groups * routers_per_group * routers_per_group],
+            global: vec![none; groups * groups],
+        }
+    }
+
+    pub(super) fn local_idx(&self, group: usize, from: usize, to: usize) -> usize {
+        (group * self.routers_per_group + from) * self.routers_per_group + to
+    }
+
+    fn resolve(&self, src: DeviceId, dst: DeviceId) -> Option<Vec<LinkId>> {
+        let s = coord(&self.coord_of, src)?;
+        let d = coord(&self.coord_of, dst)?;
+        if s == d {
+            return None;
+        }
+        let per_group = self.routers_per_group * self.gpus_per_router;
+        let (sg, dg) = (s / per_group, d / per_group);
+        let sr = (s / self.gpus_per_router) % self.routers_per_group;
+        let dr = (d / self.gpus_per_router) % self.routers_per_group;
+        let mut hops = Vec::with_capacity(5);
+        hops.push(self.gpu_up[s]);
+        if sg == dg {
+            if sr != dr {
+                hops.push(self.local[self.local_idx(sg, sr, dr)]);
+            }
+        } else {
+            if sr != 0 {
+                hops.push(self.local[self.local_idx(sg, sr, 0)]);
+            }
+            hops.push(self.global[sg * self.groups + dg]);
+            if dr != 0 {
+                hops.push(self.local[self.local_idx(dg, 0, dr)]);
+            }
+        }
+        hops.push(self.gpu_down[d]);
+        Some(hops)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bfs_resolver_declines_everything() {
+        let r = Resolver::Bfs;
+        assert_eq!(r.kind(), TopologyKind::Generic);
+        assert!(!r.is_algebraic());
+        assert!(r.resolve(DeviceId(0), DeviceId(1)).is_none());
+    }
+
+    #[test]
+    fn kind_names_unique() {
+        let kinds = [
+            TopologyKind::Generic,
+            TopologyKind::FatTree,
+            TopologyKind::RailOptimized,
+            TopologyKind::NvSwitch,
+            TopologyKind::Dragonfly,
+        ];
+        let mut names: Vec<&str> = kinds.iter().map(|k| k.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), kinds.len());
+    }
+}

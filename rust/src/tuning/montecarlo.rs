@@ -448,7 +448,7 @@ mod tests {
 
     #[test]
     fn rows_cover_grid_in_order() {
-        let cluster = kesch(1, 4);
+        let cluster = kesch(1, 4).unwrap();
         let algos = [Algorithm::Direct, Algorithm::Chain];
         let sizes = [4u64, 64 << 10];
         let cfg = McConfig {
@@ -470,7 +470,7 @@ mod tests {
 
     #[test]
     fn thread_fanout_and_reruns_are_identical() {
-        let cluster = kesch(1, 4);
+        let cluster = kesch(1, 4).unwrap();
         let algos = [Algorithm::Chain, Algorithm::Knomial { k: 2 }];
         let sizes = [64u64 << 10];
         let cfg = McConfig {
@@ -495,7 +495,7 @@ mod tests {
     #[test]
     fn degraded_only_profile_delivers_everything() {
         // no kill clause ⇒ every trial completes; stats must be present
-        let cluster = kesch(1, 4);
+        let cluster = kesch(1, 4).unwrap();
         let cfg = McConfig {
             trials: 3,
             threads: Some(1),
@@ -511,7 +511,7 @@ mod tests {
 
     #[test]
     fn out_of_range_profile_errors_up_front() {
-        let cluster = kesch(1, 4); // 4 ranks — rank 9 doesn't exist
+        let cluster = kesch(1, 4).unwrap(); // 4 ranks — rank 9 doesn't exist
         let bad = FaultProfile::parse("straggle=9:2").unwrap();
         let cfg = McConfig {
             trials: 2,
@@ -535,7 +535,7 @@ mod tests {
 
     #[test]
     fn recovery_rows_are_deterministic_and_zero_fault_policies_tie() {
-        let cluster = kesch(1, 4);
+        let cluster = kesch(1, 4).unwrap();
         let none = FaultProfile::parse("").unwrap();
         let cfg = McConfig {
             trials: 3,
@@ -571,7 +571,7 @@ mod tests {
 
     #[test]
     fn mtbf_crossover_rows_cover_grid_and_harsh_mtbf_aborts_more() {
-        let cluster = kesch(1, 4);
+        let cluster = kesch(1, 4).unwrap();
         let cfg = McConfig {
             trials: 3,
             threads: Some(1),
@@ -606,7 +606,7 @@ mod tests {
 
     #[test]
     fn exponential_kills_is_pure_and_scales_with_mtbf() {
-        let cluster = kesch(1, 4);
+        let cluster = kesch(1, 4).unwrap();
         let a = exponential_kills(&cluster, 10_000, 1_000_000, 42);
         let b = exponential_kills(&cluster, 10_000, 1_000_000, 42);
         assert_eq!(a.link_events, b.link_events);

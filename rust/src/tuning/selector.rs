@@ -155,7 +155,7 @@ mod tests {
 
     #[test]
     fn tuned_selector_is_consistent_with_table() {
-        let cluster = kesch(1, 4);
+        let cluster = kesch(1, 4).unwrap();
         let sel = Selector::tuned(&cluster);
         for bytes in [4u64, 8 << 10, 2 << 20, 128 << 20] {
             assert_eq!(sel.algorithm(bytes), sel.table().select(bytes));
@@ -166,7 +166,7 @@ mod tests {
     fn fairshare_tuned_selector_never_loses_on_a_fairshare_engine() {
         // the tuned pick must win (or tie) against any fixed candidate
         // *under the model it was tuned for*
-        let cluster = kesch(1, 8);
+        let cluster = kesch(1, 8).unwrap();
         let sel = Selector::tuned_with_model(&cluster, None, LinkModel::FairShare);
         assert_eq!(sel.link_model(), LinkModel::FairShare);
         let mut comm = Comm::new(&cluster);
@@ -189,7 +189,7 @@ mod tests {
 
     #[test]
     fn tuned_never_loses_to_binomial() {
-        let cluster = kesch(1, 8);
+        let cluster = kesch(1, 8).unwrap();
         let sel = Selector::tuned(&cluster);
         let mut comm = Comm::new(&cluster);
         let mut engine = Engine::new(&cluster);
@@ -211,7 +211,7 @@ mod tests {
 
     #[test]
     fn tuned_allreduce_never_loses_to_fixed_candidates() {
-        let cluster = kesch(1, 8);
+        let cluster = kesch(1, 8).unwrap();
         let sel = Selector::tuned(&cluster);
         let mut comm = Comm::new(&cluster);
         let mut engine = Engine::new(&cluster);

@@ -252,7 +252,7 @@ mod tests {
 
     #[test]
     fn tuner_picks_staged_small_and_pipelined_large() {
-        let cluster = kesch(1, 16);
+        let cluster = kesch(1, 16).unwrap();
         let table = tune(&cluster, &[4, 8 << 10, 1 << 20, 32 << 20, 128 << 20]);
         let small = table.select(4);
         assert!(
@@ -272,7 +272,7 @@ mod tests {
 
     #[test]
     fn tuned_beats_or_ties_every_fixed_algorithm() {
-        let cluster = kesch(1, 8);
+        let cluster = kesch(1, 8).unwrap();
         for bytes in [4u64, 64 << 10, 16 << 20] {
             let point = sweep_size(&cluster, bytes, 0);
             for &(_, t) in &point.all {
@@ -283,7 +283,7 @@ mod tests {
 
     #[test]
     fn adjacent_same_winner_buckets_merge() {
-        let cluster = kesch(1, 4);
+        let cluster = kesch(1, 4).unwrap();
         let table = tune(&cluster, &default_sizes());
         for w in table.entries.windows(2) {
             assert_ne!(
@@ -296,7 +296,7 @@ mod tests {
 
     #[test]
     fn allreduce_table_tree_small_ring_large() {
-        let cluster = kesch(1, 16);
+        let cluster = kesch(1, 16).unwrap();
         let table = tune(&cluster, &[4, 8 << 10, 1 << 20, 32 << 20, 128 << 20]);
         assert!(
             matches!(
@@ -326,7 +326,7 @@ mod tests {
     #[test]
     fn bounded_thread_fanout_is_byte_identical() {
         // --tune-threads N must not change the table, for any N
-        let cluster = kesch(1, 4);
+        let cluster = kesch(1, 4).unwrap();
         let sizes = [4u64, 8 << 10, 1 << 20, 32 << 20];
         let reference = persist::to_json(&tune_serial(&cluster, &sizes));
         for threads in [Some(1), Some(2), Some(3), None] {
@@ -344,7 +344,7 @@ mod tests {
         // the fair-share model is a pure function of the cluster too:
         // parallel and serial sweeps must produce byte-identical tables,
         // and the table must record which model produced it
-        let cluster = kesch(1, 4);
+        let cluster = kesch(1, 4).unwrap();
         let sizes = [4u64, 8 << 10, 1 << 20, 32 << 20];
         let ser = tune_serial_with_model(&cluster, &sizes, LinkModel::FairShare);
         assert_eq!(ser.link_model, LinkModel::FairShare);
@@ -362,7 +362,7 @@ mod tests {
 
     #[test]
     fn parallel_matches_serial_winners() {
-        let cluster = kesch(1, 8);
+        let cluster = kesch(1, 8).unwrap();
         let sizes = [4u64, 8 << 10, 1 << 20, 32 << 20];
         let par = tune(&cluster, &sizes);
         let ser = tune_serial(&cluster, &sizes);

@@ -28,10 +28,10 @@ struct Case {
 
 fn cluster_of(case: &Case) -> Cluster {
     match case.preset {
-        0 => presets::kesch(case.nodes, case.gpn.clamp(1, 16)),
-        1 => presets::dgx1(case.nodes, case.gpn.clamp(1, 8), false),
-        2 => presets::dgx1(case.nodes, case.gpn.clamp(1, 8), true),
-        _ => presets::flat(case.nodes * case.gpn),
+        0 => presets::kesch(case.nodes, case.gpn.clamp(1, 16)).unwrap(),
+        1 => presets::dgx1(case.nodes, case.gpn.clamp(1, 8), false).unwrap(),
+        2 => presets::dgx1(case.nodes, case.gpn.clamp(1, 8), true).unwrap(),
+        _ => presets::flat(case.nodes * case.gpn).unwrap(),
     }
 }
 

@@ -18,7 +18,7 @@ use gdrbcast::tuning::Selector;
 fn threaded_training_with_simulated_comm() {
     // 8 worker threads against the leader, with per-iteration comm cost
     // coming from the simulator — the full L3 composition minus PJRT
-    let cluster = presets::kesch(1, 8);
+    let cluster = presets::kesch(1, 8).unwrap();
     let sel = Selector::tuned(&cluster);
     let model = zoo::vgg_mini();
     let msgs = bcast_messages(&model, 8, MessageSchedule::Partitioned);
@@ -50,7 +50,7 @@ fn mv2_opt_never_slower_than_nccl_mv2_for_vgg() {
     let nccl = NcclParams::default();
     let model = zoo::vgg16();
     for (nodes, gpn) in [(1usize, 8usize), (2, 16)] {
-        let cluster = presets::kesch(nodes, gpn);
+        let cluster = presets::kesch(nodes, gpn).unwrap();
         let sel = Selector::tuned(&cluster);
         let batch = 16 * cluster.n_gpus();
         let a = estimate_iteration(&cluster, &model, &BcastBackend::Mv2Opt(&sel), batch, 0.0);
@@ -71,7 +71,7 @@ fn comm_shrinks_relative_to_compute_with_fewer_ranks() {
     // constant; compute per GPU grows with weak scaling — sanity-check
     // the estimator's proportions
     let model = zoo::vgg16();
-    let cluster = presets::kesch(1, 8);
+    let cluster = presets::kesch(1, 8).unwrap();
     let sel = Selector::tuned(&cluster);
     let est = estimate_iteration(&cluster, &model, &BcastBackend::Mv2Opt(&sel), 128, 0.0);
     assert!(est.compute_us > 0.0);
@@ -88,7 +88,7 @@ fn googlenet_benefits_at_scale() {
     // small/medium message band where the proposed designs win
     let nccl = NcclParams::default();
     let model = zoo::googlenet();
-    let cluster = presets::kesch(4, 16);
+    let cluster = presets::kesch(4, 16).unwrap();
     let sel = Selector::tuned(&cluster);
     let batch = 16 * cluster.n_gpus();
     let a = estimate_iteration(&cluster, &model, &BcastBackend::Mv2Opt(&sel), batch, 0.0);
@@ -98,7 +98,7 @@ fn googlenet_benefits_at_scale() {
 
 #[test]
 fn per_layer_schedule_also_supported() {
-    let cluster = presets::kesch(1, 4);
+    let cluster = presets::kesch(1, 4).unwrap();
     let sel = Selector::tuned(&cluster);
     let model = zoo::lenet5();
     let msgs = bcast_messages(&model, 4, MessageSchedule::PerLayer);

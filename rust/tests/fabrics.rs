@@ -1,0 +1,209 @@
+//! Structured-fabric integration tests: algebraic-vs-BFS route parity
+//! on small instances of every fabric family, route-table sparsity
+//! under planning, the kill_link recovery path (generation bump, PL005
+//! stale flags, BFS detour around the dead link), and an end-to-end
+//! plan/execute pass on each fabric under both link models.
+
+use gdrbcast::analysis::{self, Code};
+use gdrbcast::collectives::{self, Algorithm, BcastSpec};
+use gdrbcast::comm::Comm;
+use gdrbcast::netsim::{Engine, LinkModel};
+use gdrbcast::topology::presets::{dragonfly, fat_tree, nvswitch, rail_optimized};
+use gdrbcast::topology::Cluster;
+
+/// Small instances of every fabric family, labelled for failure
+/// messages. Shapes are chosen so each family exercises asymmetric
+/// parameters at least once (non-square pods, single rail, >2 nodes).
+fn small_fabrics() -> Vec<(&'static str, Cluster)> {
+    vec![
+        ("fat_tree(2,2,2,2,2)", fat_tree(2, 2, 2, 2, 2).unwrap()),
+        ("fat_tree(3,2,2,1,2)", fat_tree(3, 2, 2, 1, 2).unwrap()),
+        ("rail_optimized(3,4)", rail_optimized(3, 4).unwrap()),
+        ("nvswitch(3,4)", nvswitch(3, 4).unwrap()),
+        ("dragonfly(3,2,2)", dragonfly(3, 2, 2).unwrap()),
+    ]
+}
+
+/// The parity invariant: for every ordered GPU pair, the algebraic
+/// route must match the BFS golden reference in hop count, latency and
+/// bottleneck bandwidth. (The exact hop sequence may differ — rail and
+/// spine selection is a tie-break among equal-cost paths — so parity is
+/// on the route *metrics*, which is what the simulation consumes.)
+#[test]
+fn algebraic_routes_match_bfs_reference_on_every_fabric() {
+    for (name, c) in small_fabrics() {
+        assert!(
+            c.has_algebraic_resolver(),
+            "{name}: generator must install an algebraic resolver"
+        );
+        let mut golden = c.clone();
+        golden.force_bfs_resolver();
+        for i in 0..c.n_gpus() {
+            for j in 0..c.n_gpus() {
+                if i == j {
+                    continue;
+                }
+                let (a, b) = (c.rank_device(i), c.rank_device(j));
+                let alg = c.route_info(a, b).unwrap();
+                let bfs = golden.route_info(a, b).unwrap();
+                assert_eq!(
+                    alg.hops.len(),
+                    bfs.hops.len(),
+                    "{name}: hop count diverges from BFS on rank pair ({i}, {j})"
+                );
+                assert_eq!(
+                    alg.latency_ns, bfs.latency_ns,
+                    "{name}: latency diverges from BFS on rank pair ({i}, {j})"
+                );
+                assert_eq!(
+                    alg.bottleneck_bw, bfs.bottleneck_bw,
+                    "{name}: bottleneck bandwidth diverges from BFS on rank pair ({i}, {j})"
+                );
+            }
+        }
+    }
+}
+
+/// Every algebraic route must be a contiguous directed path from its
+/// source to its destination — the same invariant the PL017 verifier
+/// walk enforces, checked here directly against the resolver output.
+#[test]
+fn algebraic_routes_are_contiguous_paths() {
+    for (name, c) in small_fabrics() {
+        for i in 0..c.n_gpus() {
+            for j in 0..c.n_gpus() {
+                if i == j {
+                    continue;
+                }
+                let (a, b) = (c.rank_device(i), c.rank_device(j));
+                let r = c.route_info(a, b).unwrap();
+                let mut at = a;
+                for (k, &h) in r.hops.iter().enumerate() {
+                    let link = c.link(h);
+                    assert_eq!(
+                        link.src, at,
+                        "{name}: hop {k} of rank pair ({i}, {j}) departs the wrong device"
+                    );
+                    at = link.dst;
+                }
+                assert_eq!(at, b, "{name}: path of rank pair ({i}, {j}) ends off-target");
+            }
+        }
+    }
+}
+
+/// Planning a broadcast must intern O(n) routes, not the O(n^2) dense
+/// table — the property that lets the 64k-GPU bench row exist at all.
+#[test]
+fn planning_interns_a_sparse_route_table() {
+    let c = fat_tree(2, 4, 8, 2, 2).unwrap();
+    let n = c.n_gpus();
+    assert_eq!(n, 64);
+    let mut comm = Comm::new(&c);
+    let bp = collectives::plan(&Algorithm::Chain, &mut comm, &BcastSpec::new(0, n, 1 << 20));
+    assert!(!bp.plan.is_empty());
+    let n_routes = c.routes().n_routes();
+    assert!(
+        n_routes <= 4 * n,
+        "chain broadcast on {n} GPUs interned {n_routes} routes (expected O(n))"
+    );
+}
+
+/// The satellite recovery scenario: killing a link on an
+/// algebraic-resolver topology must (a) bump the topology generation so
+/// pre-kill plans verify stale (PL005), and (b) make re-resolution of
+/// the victim pair fall back to BFS around the dead link — while the
+/// algebraic resolver stays installed for unaffected pairs.
+#[test]
+fn kill_link_on_algebraic_fabric_flags_stale_plans_and_detours() {
+    let mut c = fat_tree(2, 2, 2, 2, 2).unwrap();
+    let n = c.n_gpus();
+    let stale_plan = {
+        let mut comm = Comm::new(&c);
+        collectives::plan(&Algorithm::Chain, &mut comm, &BcastSpec::new(0, n, 1 << 20))
+    };
+    let (a, b) = (c.rank_device(0), c.rank_device(1));
+    let pre = c.route_info(a, b).unwrap();
+    assert_eq!(pre.hops.len(), 2, "same-leaf pair is 2 hops pre-kill");
+    // kill rank 0's rail-0 uplink (the first hop of the algebraic route)
+    let victim = pre.hops[0];
+    let gen_before = c.generation();
+    c.kill_link(victim).unwrap();
+    assert_ne!(
+        c.generation(),
+        gen_before,
+        "kill_link must bump the topology generation"
+    );
+    assert!(
+        c.has_algebraic_resolver(),
+        "the resolver survives the kill; only the victim pair detours"
+    );
+
+    // (a) the pre-kill plan is stale: every transfer's RouteId was
+    // interned under the old generation
+    let diags = analysis::verify_collective(&c, &stale_plan);
+    assert!(
+        diags.iter().any(|d| d.code == Code::StaleRoute),
+        "pre-kill plan must be flagged PL005-stale, got: {diags:?}"
+    );
+    assert_eq!(Code::StaleRoute.as_str(), "PL005");
+
+    // (b) re-resolving the victim pair detours via BFS: same-leaf
+    // connectivity survives on rail 1, so the pair stays 2 hops but
+    // avoids the dead link
+    let post = c.route_info(a, b).unwrap();
+    assert!(
+        !post.hops.contains(&victim),
+        "re-resolved route must avoid the dead link"
+    );
+    assert_eq!(post.hops.len(), 2, "rail 1 keeps the pair at 2 hops");
+    let mut at = a;
+    for &h in &post.hops {
+        assert!(c.link_alive(h));
+        assert_eq!(c.link(h).src, at);
+        at = c.link(h).dst;
+    }
+    assert_eq!(at, b);
+
+    // a plan rebuilt on the mutated topology verifies clean
+    let rebuilt = {
+        let mut comm = Comm::new(&c);
+        collectives::plan(&Algorithm::Chain, &mut comm, &BcastSpec::new(0, n, 1 << 20))
+    };
+    let diags = analysis::verify_collective(&c, &rebuilt);
+    assert!(
+        !analysis::has_errors(&diags),
+        "rebuilt plan must verify clean: {}",
+        analysis::render(&diags)
+    );
+}
+
+/// End to end on every fabric: a chain broadcast plans, verifies clean,
+/// and executes to a positive, deterministic makespan under both link
+/// models.
+#[test]
+fn every_fabric_plans_and_executes_under_both_link_models() {
+    for (name, c) in small_fabrics() {
+        let n = c.n_gpus();
+        let mut comm = Comm::new(&c);
+        let bp = collectives::plan(&Algorithm::Chain, &mut comm, &BcastSpec::new(0, n, 1 << 20));
+        let diags = analysis::verify_collective(&c, &bp);
+        assert!(
+            !analysis::has_errors(&diags),
+            "{name}: {}",
+            analysis::render(&diags)
+        );
+        for model in [LinkModel::Fifo, LinkModel::FairShare] {
+            let mut engine = Engine::with_model(&c, model);
+            let first = engine.makespan_ns(&bp.plan);
+            assert!(first > 0, "{name}: zero makespan under {}", model.name());
+            let again = engine.makespan_ns(&bp.plan);
+            assert_eq!(
+                first,
+                again,
+                "{name}: makespan not reproducible under {}",
+                model.name()
+            );
+        }
+    }
+}

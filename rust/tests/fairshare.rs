@@ -41,9 +41,9 @@ fn grid_algorithms() -> Vec<Algorithm> {
 
 fn grid_topologies() -> Vec<(&'static str, gdrbcast::topology::Cluster)> {
     vec![
-        ("flat(8)", presets::flat(8)),
-        ("kesch(1,8)", presets::kesch(1, 8)),
-        ("kesch(2,8)", presets::kesch(2, 8)),
+        ("flat(8)", presets::flat(8).unwrap()),
+        ("kesch(1,8)", presets::kesch(1, 8).unwrap()),
+        ("kesch(2,8)", presets::kesch(2, 8).unwrap()),
     ]
 }
 
@@ -52,7 +52,7 @@ fn maxmin_rates_conserve_link_capacity_on_kesch() {
     // the acceptance property: for random concurrent flow sets on the
     // paper's testbed topology, the sum of allocated rates on any link
     // never exceeds that link's bandwidth
-    let cluster = presets::kesch(2, 16);
+    let cluster = presets::kesch(2, 16).unwrap();
     let n = cluster.n_gpus();
     let mut rng = Xs(0xfa15_eed1 | 1);
     for case in 0..50 {
@@ -107,7 +107,7 @@ fn single_mechanism_sends_match_fifo() {
     // one rank-to-rank send at a time — across the mechanism menu
     // (IPC, GDR, staged, eager) — costs exactly the same under both
     // models: a lone flow's max-min rate is the FIFO bottleneck
-    let cluster = presets::kesch(2, 8);
+    let cluster = presets::kesch(2, 8).unwrap();
     let pairs = [(0usize, 1usize), (0, 4), (0, 8), (3, 12), (8, 15)];
     for &(src, dst) in &pairs {
         for bytes in [4u64, 64 << 10, 1 << 20, 16 << 20] {
@@ -133,7 +133,7 @@ fn contended_fanout_diverges_and_fairshare_wins_the_star() {
     // send additionally pays the issue gap); fair share drains all
     // flows together — strictly faster, and the models must *disagree*
     // (the serialized-contention fidelity bug this subsystem fixes).
-    let cluster = presets::flat(8);
+    let cluster = presets::flat(8).unwrap();
     let n = cluster.n_gpus();
     let bytes: u64 = 16 << 20;
     let mut comm = Comm::new(&cluster);
@@ -233,7 +233,7 @@ fn fairshare_tuned_selector_round_trips_through_persist() {
     // a fair-share-tuned table keeps its model tag through the JSON
     // artifact, so a selector rebuilt from disk still knows which engine
     // it should dispatch for
-    let cluster = presets::kesch(1, 4);
+    let cluster = presets::kesch(1, 4).unwrap();
     let sel = Selector::tuned_with_model(&cluster, Some(2), LinkModel::FairShare);
     assert_eq!(sel.link_model(), LinkModel::FairShare);
     let json = gdrbcast::tuning::persist::to_json(sel.table());

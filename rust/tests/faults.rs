@@ -31,9 +31,9 @@ fn grid_algorithms() -> Vec<Algorithm> {
 
 fn grid_topologies() -> Vec<(&'static str, gdrbcast::topology::Cluster)> {
     vec![
-        ("flat(8)", presets::flat(8)),
-        ("kesch(1,8)", presets::kesch(1, 8)),
-        ("kesch(2,8)", presets::kesch(2, 8)),
+        ("flat(8)", presets::flat(8).unwrap()),
+        ("kesch(1,8)", presets::kesch(1, 8).unwrap()),
+        ("kesch(2,8)", presets::kesch(2, 8).unwrap()),
     ]
 }
 
@@ -75,7 +75,7 @@ fn clearing_faults_restores_healthy_execution() {
     // a run under a real (destructive) schedule must not leak state into
     // the next run: clearing the schedule restores bit-identical healthy
     // results (the bw-scale / event-list reset path)
-    let cluster = presets::kesch(1, 8);
+    let cluster = presets::kesch(1, 8).unwrap();
     let n = cluster.n_gpus();
     let profile =
         FaultProfile::parse("kill=2@100us,degrade=2:0.3@50us,straggle=2:4,jitter=0.2").unwrap();
@@ -147,7 +147,7 @@ fn fairshare_conserves_capacity_through_midflight_kill_and_reroute() {
     // detour after the retry timeout, (b) keep every link's allocated
     // rate sum within its (possibly zeroed) capacity at every event
     // instant, and (c) still deliver every rank
-    let cluster = presets::kesch(2, 16);
+    let cluster = presets::kesch(2, 16).unwrap();
     let (plan, plan_routes) = conservation_plan(&cluster);
     let kill_ns: u64 = 2_000_000; // 2 ms — the 64 MB FDR flow needs ~9 ms
     let victim_route = cluster
@@ -260,7 +260,7 @@ fn lone_surviving_flow_matches_fifo_under_faults() {
     // a zero retry budget. Both models must agree exactly: the survivor
     // is a lone flow (max-min rate == FIFO bottleneck) and the victim
     // completes through the shared sentinel formula
-    let cluster = presets::flat(4);
+    let cluster = presets::flat(4).unwrap();
     let bytes: u64 = 8 << 20;
     let mut plan = Plan::new();
     for &(src, dst) in &[(0usize, 1usize), (2, 3)] {
@@ -317,7 +317,7 @@ fn dead_rail_detours_or_degrades_with_budget() {
     // default retry budget both models deliver over a detour (slower
     // than healthy); with a zero budget the destination rank is
     // reported undelivered instead of the run panicking
-    let cluster = presets::kesch(2, 8);
+    let cluster = presets::kesch(2, 8).unwrap();
     let route = cluster
         .route(cluster.rank_device(0), cluster.rank_device(8))
         .unwrap();
@@ -374,7 +374,7 @@ fn dead_rail_detours_or_degrades_with_budget() {
 fn stragglers_and_degradation_slow_both_models_deterministically() {
     // a non-destructive profile (no kills) must slow execution without
     // losing ranks, identically across engine instances
-    let cluster = presets::kesch(1, 8);
+    let cluster = presets::kesch(1, 8).unwrap();
     let n = cluster.n_gpus();
     let profile = FaultProfile::parse("degrade=2:0.4@100us,straggle=1:3,jitter=0.05").unwrap();
     let schedule = profile.realize(&cluster, 17).unwrap();
@@ -409,7 +409,7 @@ fn montecarlo_rows_are_identical_across_runs_and_threads() {
     // the CLI-facing determinism gate: same (profile, seed, cluster) ⇒
     // byte-identical p50/p99 rows on every re-run and for every
     // --tune-threads setting, under both link models
-    let cluster = presets::kesch(2, 8);
+    let cluster = presets::kesch(2, 8).unwrap();
     let algos = [Algorithm::Chain, Algorithm::Knomial { k: 2 }];
     let sizes = [64u64 << 10, 4 << 20];
     let profile = FaultProfile::parse("kill=1@500us,straggle=1:3,jitter=0.05").unwrap();

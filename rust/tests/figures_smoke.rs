@@ -12,7 +12,7 @@ use gdrbcast::topology::presets;
 use gdrbcast::tuning::Selector;
 
 fn fig1(gpus: usize, sizes: &[u64]) -> Figure {
-    let cluster = presets::kesch(1, gpus);
+    let cluster = presets::kesch(1, gpus).unwrap();
     let selector = Selector::tuned(&cluster);
     let nccl = NcclParams::default();
     let mut comm = Comm::new(&cluster);
@@ -54,7 +54,7 @@ fn fig1_shape_small_messages_win_big_large_comparable() {
 fn fig2_shape_internode() {
     let sizes = [4u64, 8 << 10, 1 << 20, 64 << 20];
     for nodes in [2usize, 4] {
-        let cluster = presets::kesch(nodes, 16);
+        let cluster = presets::kesch(nodes, 16).unwrap();
         let gpus = cluster.n_gpus();
         let selector = Selector::tuned(&cluster);
         let nccl = NcclParams::default();
@@ -91,7 +91,7 @@ fn fig2_shape_internode() {
 fn nccl_latency_flat_in_size_for_small_messages() {
     // the §II-B observation that motivates everything: NCCL's
     // small-message latency is launch-dominated — flat from 4B to 8KB
-    let cluster = presets::kesch(1, 8);
+    let cluster = presets::kesch(1, 8).unwrap();
     let nccl = NcclParams::default();
     let mut engine = Engine::new(&cluster);
     let t4 = engine

@@ -35,7 +35,7 @@ fn healthy_collective_job_is_policy_invariant_under_both_models() {
     // faults, an N-iteration job under ANY recovery policy is
     // bit-identical to N× the single-iteration simulation — the policy
     // machinery must cost nothing when nothing fails
-    let cluster = presets::kesch(2, 8);
+    let cluster = presets::kesch(2, 8).unwrap();
     let n = cluster.n_gpus();
     let bytes: u64 = 1 << 20;
     let algo = Algorithm::Chain;
@@ -80,7 +80,7 @@ fn healthy_collective_job_is_policy_invariant_under_both_models() {
 fn healthy_training_job_is_policy_invariant_under_both_models() {
     // same gate, training flavour: compute + full exchange per
     // iteration, barrier and overlap composition both pinned
-    let cluster = presets::kesch(1, 4);
+    let cluster = presets::kesch(1, 4).unwrap();
     let model_net = models::alexnet();
     for link_model in LinkModel::ALL {
         let sel = Selector::tuned_with_model(&cluster, Some(1), link_model);
@@ -141,7 +141,7 @@ fn installed_empty_schedule_matches_absent_faults_in_job_mode() {
     // an ExchangeOptions with `faults: Some(&empty)` must drive the job
     // identically to `faults: None` — the engine golden-parity contract
     // lifted to the multi-iteration runner
-    let cluster = presets::kesch(1, 4);
+    let cluster = presets::kesch(1, 4).unwrap();
     let model_net = models::alexnet();
     let sel = Selector::tuned_with_threads(&cluster, Some(1));
     let empty = FaultSchedule::default();
@@ -185,7 +185,7 @@ fn replan_survives_midjob_rail_kill_and_rebuilt_ring_avoids_dead_links() {
     // iteration with the full world intact — verified by replaying the
     // rebuilt plan with a flow trace and checking no flow touches a
     // dead link.
-    let cluster = presets::kesch(2, 8);
+    let cluster = presets::kesch(2, 8).unwrap();
     let n = cluster.n_gpus();
     let bytes: u64 = 1 << 20;
     let algo = Algorithm::Chain;
@@ -286,7 +286,7 @@ fn exhausted_detour_candidates_hit_sentinel_without_burning_budget() {
     // the unreachable sentinel — at the *same instant* whatever the
     // retry budget (the engine must not charge timeouts looping over a
     // detour set with no survivors)
-    let cluster = presets::kesch(1, 4);
+    let cluster = presets::kesch(1, 4).unwrap();
     let victim_dev = cluster.rank_device(3);
     let mut base = FaultSchedule::default();
     for l in cluster.links() {
@@ -347,7 +347,7 @@ fn shrink_job_rescales_and_restart_heals_on_the_integration_preset() {
     // at t = 0 (undetourable), run the same job under shrink and
     // restart. Shrink continues at n-1; restart heals (the t = 0 kill is
     // in the past after the restore) and keeps the full world.
-    let cluster = presets::kesch(2, 8);
+    let cluster = presets::kesch(2, 8).unwrap();
     let n = cluster.n_gpus();
     let victim_dev = cluster.rank_device(n - 1);
     let mut sched = FaultSchedule::default().with_retry(0, 1000);

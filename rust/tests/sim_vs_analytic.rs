@@ -47,7 +47,7 @@ fn eq5_optimal_chunk_is_optimal_in_sim() {
     let cp = CommParams::default();
     let p = ModelParams::flat_rndv(&cp);
     let c_star = analytic::bcast::optimal_chunk(&p, n, m);
-    let cluster = presets::flat(n);
+    let cluster = presets::flat(n).unwrap();
     let mut comm = Comm::new(&cluster);
     let mut engine = Engine::new(&cluster);
     let t = |chunk: u64, comm: &mut Comm, engine: &mut Engine| {
@@ -70,7 +70,7 @@ fn eq5_optimal_chunk_is_optimal_in_sim() {
 #[test]
 fn paper_qualitative_claims_hold_on_kesch() {
     // §III/§IV qualitative structure on the real testbed model:
-    let cluster = presets::kesch(2, 16);
+    let cluster = presets::kesch(2, 16).unwrap();
     let n = cluster.n_gpus();
     let mut comm = Comm::new(&cluster);
     let mut engine = Engine::new(&cluster);
@@ -141,9 +141,9 @@ fn route_interning_golden_parity() {
         Algorithm::HostStagedKnomial { k: 2 },
     ];
     let topologies: Vec<(&str, gdrbcast::topology::Cluster)> = vec![
-        ("flat(8)", presets::flat(8)),
-        ("kesch(1,8)", presets::kesch(1, 8)),
-        ("kesch(2,8)", presets::kesch(2, 8)),
+        ("flat(8)", presets::flat(8).unwrap()),
+        ("kesch(1,8)", presets::kesch(1, 8).unwrap()),
+        ("kesch(2,8)", presets::kesch(2, 8).unwrap()),
     ];
     for (name, cluster) in &topologies {
         let n = cluster.n_gpus();
@@ -218,9 +218,9 @@ fn plan_template_golden_parity() {
         Algorithm::TreeAllreduce { k: 2 },
     ];
     let topologies: Vec<(&str, gdrbcast::topology::Cluster)> = vec![
-        ("flat(8)", presets::flat(8)),
-        ("kesch(1,8)", presets::kesch(1, 8)),
-        ("kesch(2,8)", presets::kesch(2, 8)),
+        ("flat(8)", presets::flat(8).unwrap()),
+        ("kesch(1,8)", presets::kesch(1, 8).unwrap()),
+        ("kesch(2,8)", presets::kesch(2, 8).unwrap()),
     ];
     let axis = [4u64, 4 << 10, 64 << 10, 1 << 20, 16 << 20];
     for (name, cluster) in &topologies {
@@ -263,7 +263,7 @@ fn plan_template_cache_invalidated_by_topology_mutation() {
     use gdrbcast::collectives::CollectiveSpec;
     use gdrbcast::topology::LinkKind;
 
-    let mut cluster = presets::kesch(1, 8);
+    let mut cluster = presets::kesch(1, 8).unwrap();
     let spec = CollectiveSpec::new(0, 8, 1 << 20);
     let algo = Algorithm::Knomial { k: 2 };
     let cache = {
@@ -305,7 +305,7 @@ fn eq1_eq2_exact_on_flat() {
     // closed-form identities, exact (integer ns) on the flat fabric
     let cp = CommParams::default();
     let n = 8;
-    let cluster = presets::flat(n);
+    let cluster = presets::flat(n).unwrap();
     let mut comm = Comm::with_params(&cluster, cp.clone());
     let mut engine = Engine::new(&cluster);
     for bytes in [4u64, 1 << 20] {

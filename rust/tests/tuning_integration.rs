@@ -12,7 +12,7 @@ use gdrbcast::tuning::{persist, space, sweep, Selector};
 fn selector_answers_per_collective_queries() {
     // the refactor's acceptance bar: one Selector serves tuned picks for
     // both the broadcast family and the reduction families
-    let cluster = presets::kesch(1, 16);
+    let cluster = presets::kesch(1, 16).unwrap();
     let sel = Selector::tuned(&cluster);
     for kind in CollectiveKind::ALL {
         for bytes in [4u64, 8 << 10, 1 << 20, 64 << 20] {
@@ -37,7 +37,7 @@ fn selector_answers_per_collective_queries() {
 
 #[test]
 fn reduction_tables_persist_with_the_broadcast_table() {
-    let cluster = presets::kesch(1, 8);
+    let cluster = presets::kesch(1, 8).unwrap();
     let sel = Selector::tuned(&cluster);
     let dir = std::env::temp_dir().join("gdrbcast-tuning-reductions");
     let path = dir.join("table.json");
@@ -57,7 +57,7 @@ fn reduction_tables_persist_with_the_broadcast_table() {
 
 #[test]
 fn tuned_allreduce_beats_both_fixed_designs_across_the_grid() {
-    let cluster = presets::kesch(1, 8);
+    let cluster = presets::kesch(1, 8).unwrap();
     let sel = Selector::tuned(&cluster);
     let mut comm = Comm::new(&cluster);
     let mut engine = Engine::new(&cluster);
@@ -80,7 +80,7 @@ fn tuned_allreduce_beats_both_fixed_designs_across_the_grid() {
 fn tuned_beats_every_fixed_algorithm_on_the_grid() {
     // the defining property of the tuned runtime: at every swept size it
     // matches the best fixed candidate
-    let cluster = presets::kesch(1, 16);
+    let cluster = presets::kesch(1, 16).unwrap();
     let sel = Selector::tuned(&cluster);
     let mut comm = Comm::new(&cluster);
     let mut engine = Engine::new(&cluster);
@@ -103,7 +103,7 @@ fn tuned_beats_every_fixed_algorithm_on_the_grid() {
 fn table_structure_small_to_large() {
     // §IV: staged/tree designs own the small end, pipelined designs the
     // large end
-    let cluster = presets::kesch(2, 16);
+    let cluster = presets::kesch(2, 16).unwrap();
     let sel = Selector::tuned(&cluster);
     let small = sel.algorithm(4);
     assert!(
@@ -127,7 +127,7 @@ fn table_structure_small_to_large() {
 
 #[test]
 fn persistence_roundtrip_preserves_selection() {
-    let cluster = presets::kesch(1, 8);
+    let cluster = presets::kesch(1, 8).unwrap();
     let sel = Selector::tuned(&cluster);
     let dir = std::env::temp_dir().join("gdrbcast-tuning-it");
     let path = dir.join("table.json");
@@ -148,7 +148,7 @@ fn parallel_tune_persists_byte_identical_table() {
     // the parallel sweep fans (kind, size) points across threads but
     // merges in grid order; the persisted artifact must be byte-for-byte
     // the serial reference's
-    let cluster = presets::kesch(2, 4);
+    let cluster = presets::kesch(2, 4).unwrap();
     let sizes = [4u64, 8 << 10, 1 << 20, 16 << 20, 128 << 20];
     let par = sweep::tune(&cluster, &sizes);
     let ser = sweep::tune_serial(&cluster, &sizes);
@@ -170,8 +170,8 @@ fn parallel_tune_persists_byte_identical_table() {
 fn tables_differ_across_topologies() {
     // the whole point of a tuning *framework*: different machines tune
     // differently
-    let kesch = Selector::tuned(&presets::kesch(1, 16));
-    let dgx = Selector::tuned(&presets::dgx1(1, 8, true));
+    let kesch = Selector::tuned(&presets::kesch(1, 16).unwrap());
+    let dgx = Selector::tuned(&presets::dgx1(1, 8, true).unwrap());
     let mut any_diff = false;
     for bytes in sweep::default_sizes() {
         if kesch.algorithm(bytes).family() != dgx.algorithm(bytes).family() {
@@ -189,8 +189,8 @@ fn tables_differ_across_topologies() {
 fn dgx1v_nvlink_improves_large_broadcasts() {
     // NVLink2 (22 GB/s bricks) must beat the PCIe-only KESCH node for
     // bandwidth-bound broadcasts at equal GPU count
-    let kesch = presets::kesch(1, 8);
-    let dgx = presets::dgx1(1, 8, true);
+    let kesch = presets::kesch(1, 8).unwrap();
+    let dgx = presets::dgx1(1, 8, true).unwrap();
     let sk = Selector::tuned(&kesch);
     let sd = Selector::tuned(&dgx);
     let mut ck = Comm::new(&kesch);

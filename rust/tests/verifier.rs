@@ -37,9 +37,9 @@ fn spec_for(algo: &Algorithm, n: usize, bytes: u64) -> CollectiveSpec {
 
 fn topologies() -> Vec<(&'static str, Cluster)> {
     vec![
-        ("flat(8)", flat(8)),
-        ("kesch(1,16)", kesch(1, 16)),
-        ("kesch(2,8)", kesch(2, 8)),
+        ("flat(8)", flat(8).unwrap()),
+        ("kesch(1,16)", kesch(1, 16).unwrap()),
+        ("kesch(2,8)", kesch(2, 8).unwrap()),
     ]
 }
 
@@ -66,7 +66,7 @@ fn full_grid_verifies_clean() {
 
 #[test]
 fn merged_overlap_timeline_verifies_clean() {
-    let cluster = kesch(2, 8);
+    let cluster = kesch(2, 8).unwrap();
     let n = cluster.n_gpus();
     let mut comm = Comm::new(&cluster);
     let mut timeline = Plan::new();
@@ -93,7 +93,7 @@ fn merged_overlap_timeline_verifies_clean() {
 
 #[test]
 fn post_kill_stale_plan_flagged_and_replan_clean() {
-    let mut cluster = kesch(2, 8);
+    let mut cluster = kesch(2, 8).unwrap();
     let n = cluster.n_gpus();
     let spec = CollectiveSpec::new(0, n, 1 << 20);
     let stale = {
@@ -137,7 +137,7 @@ fn label_mutation_caught_through_public_api() {
     // the one mutation expressible without crate-private column access:
     // hijack a delivery label and expect PL009 (duplicate) + PL010
     // (the hijacked slot goes undelivered)
-    let cluster = flat(8);
+    let cluster = flat(8).unwrap();
     let mut comm = Comm::new(&cluster);
     let mut cp = collectives::plan(
         &Algorithm::Chain,
@@ -157,7 +157,7 @@ fn label_mutation_caught_through_public_api() {
 
 #[test]
 fn diagnostics_render_deterministically() {
-    let cluster = flat(8);
+    let cluster = flat(8).unwrap();
     let mut comm = Comm::new(&cluster);
     let mut cp = collectives::plan(
         &Algorithm::Chain,
